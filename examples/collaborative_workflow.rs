@@ -1,0 +1,156 @@
+//! End-to-end driver: the full collaborative workflow of the paper on a
+//! real (simulated-cloud) workload — the repository's E2E validation run,
+//! recorded in EXPERIMENTS.md.
+//!
+//! Phases:
+//!   1. **Corpus** — execute the full 930-experiment grid of Table I
+//!      (5 repetitions each → 4650 simulated Spark runs), attributed to
+//!      nine emulated organizations.
+//!   2. **Sharing** — merge every organization's data into per-job shared
+//!      repositories through the threaded coordinator session.
+//!   3. **Serving** — a *new* organization (zero own history) submits 25
+//!      jobs across all five algorithms with runtime targets; every
+//!      decision is model-served from collaborative data (no profiling).
+//!   4. **Report** — headline metrics: runtime-prediction MAPE, target
+//!      hit rate, and cost vs the naive-overprovisioning strategy the
+//!      paper says users fall back to.
+//!
+//! Run with: `make artifacts && cargo run --release --example collaborative_workflow`
+
+use c3o::baselines::{ConfigSearch, NaiveMax};
+use c3o::coordinator::session::Session;
+use c3o::models::oracle::SimOracle;
+use c3o::prelude::*;
+use c3o::util::stats;
+
+fn main() -> anyhow::Result<()> {
+    let artifacts = c3o::runtime::Runtime::default_dir();
+    if !c3o::runtime::Runtime::artifacts_available(&artifacts) {
+        eprintln!("artifacts missing — run `make artifacts` first");
+        std::process::exit(1);
+    }
+    let cloud = Cloud::aws_like();
+    let t0 = std::time::Instant::now();
+
+    // ---- phase 1: the shared corpus (Table I) --------------------------
+    println!("[1/4] executing the 930-experiment grid (5 reps each)...");
+    let grid = ExperimentGrid::paper_table1();
+    let corpus = grid.execute(&cloud, 42);
+    let mut orgs: std::collections::BTreeSet<String> = Default::default();
+    for r in &corpus.records {
+        orgs.insert(r.org.clone());
+    }
+    println!(
+        "      {} unique experiments from {} organizations ({:.1}s)",
+        corpus.len(),
+        orgs.len(),
+        t0.elapsed().as_secs_f64()
+    );
+    assert_eq!(corpus.len(), 930, "Table I count");
+
+    // ---- phase 2: share through the coordinator session ----------------
+    println!("[2/4] sharing runtime data into the coordinator...");
+    let session = Session::spawn(cloud.clone(), artifacts, 7);
+    for kind in JobKind::all() {
+        let added = session.share(corpus.repo_for(kind))?;
+        println!("      {:>9}: {added} records shared", kind.name());
+    }
+
+    // ---- phase 3: a new organization submits real work ------------------
+    println!("[3/4] new organization submits 25 jobs (targets attached)...");
+    let org = Organization::new("fresh-org");
+    let battery: Vec<JobRequest> = vec![
+        JobRequest::sort(11.0).with_target_seconds(500.0),
+        JobRequest::sort(14.0).with_target_seconds(350.0),
+        JobRequest::sort(17.5).with_target_seconds(300.0),
+        JobRequest::sort(19.0).with_target_seconds(800.0),
+        JobRequest::sort(12.5).with_target_seconds(250.0),
+        JobRequest::grep(11.0, 0.05).with_target_seconds(200.0),
+        JobRequest::grep(14.0, 0.15).with_target_seconds(240.0),
+        JobRequest::grep(18.0, 0.25).with_target_seconds(400.0),
+        JobRequest::grep(19.5, 0.02).with_target_seconds(300.0),
+        JobRequest::grep(13.0, 0.30).with_target_seconds(350.0),
+        JobRequest::sgd(12.0, 40).with_target_seconds(400.0),
+        JobRequest::sgd(22.0, 60).with_target_seconds(700.0),
+        JobRequest::sgd(28.0, 90).with_target_seconds(1200.0),
+        JobRequest::sgd(15.0, 100).with_target_seconds(800.0),
+        JobRequest::sgd(25.0, 20).with_target_seconds(500.0),
+        JobRequest::kmeans(11.0, 4, 0.001).with_target_seconds(400.0),
+        JobRequest::kmeans(16.0, 6, 0.001).with_target_seconds(900.0),
+        JobRequest::kmeans(19.0, 8, 0.001).with_target_seconds(2000.0),
+        JobRequest::kmeans(13.0, 9, 0.001).with_target_seconds(1500.0),
+        JobRequest::kmeans(18.0, 3, 0.001).with_target_seconds(400.0),
+        JobRequest::pagerank(150.0, 0.001).with_target_seconds(300.0),
+        JobRequest::pagerank(250.0, 0.01).with_target_seconds(200.0),
+        JobRequest::pagerank(350.0, 0.0001).with_target_seconds(700.0),
+        JobRequest::pagerank(420.0, 0.0005).with_target_seconds(600.0),
+        JobRequest::pagerank(200.0, 0.0001).with_target_seconds(500.0),
+    ];
+
+    println!(
+        "      {:<9} {:>11} {:>3} {:>9} {:>9} {:>7} {:>5}",
+        "job", "machine", "n", "pred_s", "actual_s", "err%", "met"
+    );
+    let mut errors = Vec::new();
+    let mut c3o_cost = 0.0;
+    let mut outcomes = Vec::new();
+    for req in &battery {
+        let o = session.submit(&org, req.clone())?;
+        println!(
+            "      {:<9} {:>11} {:>3} {:>9.1} {:>9.1} {:>7.1} {:>5}",
+            o.job.name(),
+            o.machine,
+            o.scaleout,
+            o.predicted_runtime_s,
+            o.actual_runtime_s,
+            o.prediction_error_pct(),
+            o.met_target
+        );
+        assert!(o.model_used.is_some(), "every job must be model-served");
+        errors.push(o.prediction_error_pct());
+        c3o_cost += o.actual_cost_usd;
+        outcomes.push(o);
+    }
+
+    // ---- phase 4: headline metrics --------------------------------------
+    println!("[4/4] headline report");
+    let metrics = session.metrics()?;
+    let hit_rate = 100.0 * metrics.target_hit_rate();
+    let mape = stats::mean(&errors);
+
+    // naive-overprovisioning comparison on the same battery
+    let mut naive_cost = 0.0;
+    let mut naive = NaiveMax::default();
+    for req in &battery {
+        let mut oracle = SimOracle::new(req.kind(), 99);
+        let out = naive.search(&cloud, &mut oracle, req)?;
+        let q = ConfigQuery {
+            machine: out.machine.clone(),
+            scaleout: out.scaleout,
+            job_features: req.spec.job_features(),
+        };
+        let mut runner = SimOracle::new(req.kind(), 123);
+        let t = runner.run_once(&cloud, &q)?;
+        naive_cost += cloud.cost_usd(&out.machine, out.scaleout, t + 7.0 * 60.0);
+    }
+
+    println!("      jobs served:            {}", metrics.submissions);
+    println!("      model retrains:         {}", metrics.retrains);
+    println!("      prediction MAPE:        {mape:.1}%");
+    println!("      target hit rate:        {hit_rate:.0}%");
+    println!("      total cost (C3O):       ${c3o_cost:.2}");
+    println!("      total cost (naive-max): ${naive_cost:.2}");
+    println!(
+        "      cost saving:            {:.0}%",
+        100.0 * (1.0 - c3o_cost / naive_cost)
+    );
+    println!("      wall clock:             {:.1}s", t0.elapsed().as_secs_f64());
+
+    // E2E validation gates (EXPERIMENTS.md cites these)
+    assert!(mape < 40.0, "MAPE {mape}% too high");
+    assert!(hit_rate >= 70.0, "hit rate {hit_rate}% too low");
+    assert!(c3o_cost < naive_cost, "C3O must beat overprovisioning");
+    session.shutdown();
+    println!("\nE2E validation PASSED");
+    Ok(())
+}

@@ -1,0 +1,75 @@
+//! Quickstart: the C3O loop in ~40 lines of user code.
+//!
+//! 1. Build a simulated cloud and share a (small) corpus of historical
+//!    runtime data for a Grep job.
+//! 2. Train the runtime prediction models on the shared data (dynamic
+//!    cross-validation selection between the pessimistic and optimistic
+//!    families — everything executes as AOT-compiled XLA via PJRT).
+//! 3. Ask the configurator for the cheapest cluster that greps 15 GB in
+//!    under five minutes; run it; contribute the new measurement back.
+//!
+//! Run with: `make artifacts && cargo run --release --example quickstart`
+
+use c3o::prelude::*;
+
+fn main() -> anyhow::Result<()> {
+    let artifacts = c3o::runtime::Runtime::default_dir();
+    if !c3o::runtime::Runtime::artifacts_available(&artifacts) {
+        eprintln!("artifacts missing — run `make artifacts` first");
+        std::process::exit(1);
+    }
+
+    // A simulated public cloud (m5/c5/r5-like catalog, EMR-like delays).
+    let cloud = Cloud::aws_like();
+
+    // Historical executions shared by other organizations: here, the
+    // Grep slice of the paper's 930-experiment grid.
+    println!("generating shared corpus (Grep slice of Table I)...");
+    let grid = ExperimentGrid::paper_table1();
+    let grep_only = ExperimentGrid {
+        experiments: grid
+            .experiments
+            .into_iter()
+            .filter(|e| e.spec.kind() == JobKind::Grep)
+            .collect(),
+        repetitions: 5,
+    };
+    let corpus = grep_only.execute(&cloud, 42);
+    let shared = corpus.repo_for(JobKind::Grep);
+    println!(
+        "  {} records from {} organizations",
+        shared.len(),
+        shared.organizations().len()
+    );
+
+    // The coordinator owns models + repositories + the cloud loop.
+    let mut coordinator = Coordinator::new(cloud, &artifacts, 7)?;
+    coordinator.share(&shared)?;
+
+    // A brand-new organization configures its very first Grep run.
+    let org = Organization::new("quickstart-org");
+    let request = JobRequest::grep(15.0, 0.1).with_target_seconds(300.0);
+    let outcome = coordinator.submit(&org, &request)?;
+
+    let report = coordinator
+        .selection_report(JobKind::Grep)
+        .expect("model trained");
+    println!("\nmodel selection (4-fold CV):");
+    println!(
+        "  pessimistic {:.1}%  optimistic {:.1}%  -> chose {}",
+        report.mape_of(ModelKind::Pessimistic),
+        report.mape_of(ModelKind::Optimistic),
+        report.chosen.name()
+    );
+    println!("\nconfiguration decision:");
+    println!("  cluster:   {} x{}", outcome.machine, outcome.scaleout);
+    println!("  predicted: {:.1} s", outcome.predicted_runtime_s);
+    println!("  actual:    {:.1} s", outcome.actual_runtime_s);
+    println!(
+        "  error:     {:.1}%  |  met 300 s target: {}",
+        outcome.prediction_error_pct(),
+        outcome.met_target
+    );
+    println!("  cost:      ${:.3}", outcome.actual_cost_usd);
+    Ok(())
+}

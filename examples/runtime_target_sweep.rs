@@ -1,0 +1,74 @@
+//! Runtime-target sweep: how the configurator trades cost against the
+//! user's deadline (paper Fig. 1's "runtime target" input).
+//!
+//! For one Sort job, sweep the target from very tight to very loose and
+//! print the chosen configuration, predicted runtime, and expected cost
+//! at each point — the cost/deadline frontier a C3O user navigates.
+//!
+//! Run with: `make artifacts && cargo run --release --example runtime_target_sweep`
+
+use c3o::models::BoundModel;
+use c3o::prelude::*;
+
+fn main() -> anyhow::Result<()> {
+    let artifacts = c3o::runtime::Runtime::default_dir();
+    if !c3o::runtime::Runtime::artifacts_available(&artifacts) {
+        eprintln!("artifacts missing — run `make artifacts` first");
+        std::process::exit(1);
+    }
+    let cloud = Cloud::aws_like();
+
+    println!("building the Sort shared corpus...");
+    let grid = ExperimentGrid {
+        experiments: ExperimentGrid::paper_table1()
+            .experiments
+            .into_iter()
+            .filter(|e| e.spec.kind() == JobKind::Sort)
+            .collect(),
+        repetitions: 5,
+    };
+    let repo = grid.execute(&cloud, 42).repo_for(JobKind::Sort);
+
+    let mut predictor = Predictor::new(&artifacts)?;
+    let (model, report) =
+        c3o::models::selection::select_and_train(&mut predictor, &cloud, &repo, 4, 1)?;
+    println!(
+        "model: {} (CV MAPE pessimistic {:.1}% / optimistic {:.1}%)\n",
+        report.chosen.name(),
+        report.mape_of(ModelKind::Pessimistic),
+        report.mape_of(ModelKind::Optimistic)
+    );
+
+    let configurator = Configurator::new(&cloud);
+    println!(
+        "{:>9} {:>12} {:>4} {:>11} {:>10} {:>6}",
+        "target_s", "machine", "n", "predicted_s", "cost_usd", "met"
+    );
+    let spec_gb = 17.0;
+    for target in [60.0, 120.0, 180.0, 240.0, 300.0, 420.0, 600.0, 900.0, 1800.0] {
+        let request = JobRequest::sort(spec_gb).with_target_seconds(target);
+        let mut bound = BoundModel {
+            predictor: &mut predictor,
+            model: model.clone(),
+        };
+        let choice = configurator
+            .configure(&mut bound, &request)?
+            .expect("catalog nonempty");
+        println!(
+            "{:>9.0} {:>12} {:>4} {:>11.1} {:>10.3} {:>6}",
+            target,
+            choice.machine_type,
+            choice.node_count,
+            choice.predicted_runtime_s,
+            choice.expected_cost_usd,
+            choice.meets_target
+        );
+    }
+
+    println!(
+        "\nNote how looser targets let the configurator drop to smaller/cheaper\n\
+         clusters, while very tight targets force the fastest configuration even\n\
+         when the deadline is unattainable (met = false)."
+    );
+    Ok(())
+}

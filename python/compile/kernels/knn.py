@@ -1,0 +1,108 @@
+"""L1 Pallas kernel: tiled weighted squared-distance matrix.
+
+The hot spot of the "pessimistic" (similarity-based) runtime predictor is
+computing the weighted distance between every query configuration and
+every shared historical execution. This kernel expresses it as MXU-shaped
+tiles (see DESIGN.md §Hardware-Adaptation):
+
+    D = ||Q·sqrt(w)||²  −  2 (Q·w) Tᵀ  +  ||T·sqrt(w)||²
+
+so the inner loop of each (TILE_Q × TILE_T) output tile is a
+(TILE_Q × F) @ (F × TILE_T) matmul — systolic-array food — instead of a
+broadcast-subtract-square reduction, which would be VPU-bound and
+materialize a [Q, T, F] intermediate in VMEM.
+
+BlockSpec schedule: the grid is (Q/TILE_Q, T/TILE_T); each instance holds
+one query tile (row-resident across the inner T loop), streams train
+tiles, and keeps the full feature dimension resident (F ≤ 64 after
+padding, so a fp32 tile pair is ≤ 2·128·64·4 B = 64 KiB — far under VMEM).
+
+`interpret=True` everywhere: the CPU PJRT backend cannot execute Mosaic
+custom-calls; interpret mode lowers to plain HLO with identical numerics,
+which is what `aot.py` exports and the Rust runtime executes.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Tile sizes. 64×64 output tiles: MXU-aligned on real hardware, and small
+# enough that interpret-mode tests stay fast.
+TILE_Q = 64
+TILE_T = 64
+
+
+def _sqdist_kernel(q_ref, t_ref, w_ref, o_ref):
+    """One (TILE_Q, TILE_T) tile of the weighted distance matrix.
+
+    q_ref: [TILE_Q, F] queries           (VMEM-resident)
+    t_ref: [TILE_T, F] training rows     (streamed per grid step)
+    w_ref: [F]         feature weights
+    o_ref: [TILE_Q, TILE_T] output tile
+    """
+    q = q_ref[...]
+    t = t_ref[...]
+    w = w_ref[...]
+    # Scale by sqrt(w) once; the cross term then needs no extra weighting.
+    sw = jnp.sqrt(w)[None, :]
+    qs = q * sw  # [TILE_Q, F]
+    ts = t * sw  # [TILE_T, F]
+    qn = jnp.sum(qs * qs, axis=1, keepdims=True)  # [TILE_Q, 1]
+    tn = jnp.sum(ts * ts, axis=1, keepdims=True).T  # [1, TILE_T]
+    # MXU tile: [TILE_Q, F] @ [F, TILE_T]
+    cross = jax.lax.dot_general(
+        qs,
+        ts.T,
+        (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+    # Clamp tiny negatives from cancellation so downstream 1/d is safe.
+    o_ref[...] = jnp.maximum(qn - 2.0 * cross + tn, 0.0)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("interpret", "tile_q", "tile_t")
+)
+def weighted_sqdist(queries, train, weights, *, interpret=True,
+                    tile_q=TILE_Q, tile_t=TILE_T):
+    """Tiled weighted squared-distance matrix via `pallas_call`.
+
+    Args:
+      queries: [Q, F] float32, Q divisible by tile_q
+      train:   [T, F] float32, T divisible by tile_t
+      weights: [F]    float32 non-negative
+      tile_q/tile_t: output tile shape. The AOT export passes the full
+        problem shape (grid collapses to a single kernel instance): in
+        interpret mode each grid step costs a dynamic-slice trip, and at
+        the production shape (64×512, F=16) even the single-instance
+        tile pair is only ~36 KiB — far below VMEM, so one instance is
+        also the right TPU schedule. The defaults keep multi-tile
+        scheduling exercised by the pytest shape sweeps.
+
+    Returns:
+      [Q, T] float32 distance matrix.
+    """
+    q_n, f = queries.shape
+    t_n, f2 = train.shape
+    assert f == f2 == weights.shape[0], "feature dims must agree"
+    assert q_n % tile_q == 0, f"Q={q_n} must be a multiple of {tile_q}"
+    assert t_n % tile_t == 0, f"T={t_n} must be a multiple of {tile_t}"
+
+    grid = (q_n // tile_q, t_n // tile_t)
+    return pl.pallas_call(
+        _sqdist_kernel,
+        grid=grid,
+        in_specs=[
+            # query tile: advances with grid axis 0, full F
+            pl.BlockSpec((tile_q, f), lambda i, j: (i, 0)),
+            # train tile: advances with grid axis 1, full F
+            pl.BlockSpec((tile_t, f), lambda i, j: (j, 0)),
+            # weights: shared by every instance
+            pl.BlockSpec((f,), lambda i, j: (0,)),
+        ],
+        out_specs=pl.BlockSpec((tile_q, tile_t), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((q_n, t_n), jnp.float32),
+        interpret=interpret,
+    )(queries, train, weights)

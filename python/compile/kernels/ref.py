@@ -1,0 +1,100 @@
+"""Pure-jnp reference oracles for the L1 Pallas kernels.
+
+These are the *specification*: slow, obviously-correct implementations that
+the Pallas kernels (and the Rust-side PJRT executions) are validated
+against in pytest. Nothing here is ever AOT-exported.
+"""
+
+import jax
+import jax.numpy as jnp
+
+#: Distance assigned to padded (invalid) training rows.
+PAD_DISTANCE = 1e30
+
+
+def weighted_sqdist_ref(queries, train, weights):
+    """Weighted squared Euclidean distance matrix.
+
+    D[q, t] = sum_f weights[f] * (queries[q, f] - train[t, f])**2
+
+    Args:
+      queries: [Q, F] float32
+      train:   [T, F] float32
+      weights: [F]    float32, non-negative feature weights
+
+    Returns:
+      [Q, T] float32
+    """
+    diff = queries[:, None, :] - train[None, :, :]  # [Q, T, F]
+    return jnp.sum(weights[None, None, :] * diff * diff, axis=-1)
+
+
+def knn_predict_ref(train_x, train_y, valid, weights, queries, k, eps=1e-6):
+    """Similarity-weighted k-nearest-neighbour prediction (the paper's
+    "pessimistic" model): inverse-distance-weighted mean of the k most
+    similar historical executions.
+
+    Args:
+      train_x: [T, F] standardized training features
+      train_y: [T]    standardized log-runtimes
+      valid:   [T]    1.0 for real rows, 0.0 for padding
+      weights: [F]    per-feature relevance weights (|corr with runtime|)
+      queries: [Q, F] standardized query features
+      k:       neighbours to use
+
+    Returns:
+      [Q] predictions in the same (standardized log) space as train_y.
+    """
+    d = weighted_sqdist_ref(queries, train_x, weights)  # [Q, T]
+    d = jnp.where(valid[None, :] > 0.5, d, PAD_DISTANCE)
+    neg_top, idx = jax.lax.top_k(-d, k)  # [Q, k]
+    nd = -neg_top  # k smallest distances
+    ny = train_y[idx]  # [Q, k]
+    w = 1.0 / (nd + eps)
+    # if fewer than k valid rows exist, padded picks get zero weight
+    w = jnp.where(nd >= PAD_DISTANCE * 0.5, 0.0, w)
+    return jnp.sum(w * ny, axis=-1) / jnp.maximum(jnp.sum(w, axis=-1), eps)
+
+
+def optimistic_basis_ref(x01):
+    """Per-feature basis expansion for the factorized "optimistic" model.
+
+    Each feature (min-max scaled to roughly [0, 1]) contributes three
+    basis functions: identity, log1p, and a reciprocal term (which lets
+    the model express Ernest-style 1/n scale-out laws). The factorization
+    assumes pairwise-independent features (paper §V-B), so there are no
+    cross terms — parameter count stays linear in F and the model trains
+    on sparse collaborative data.
+
+    Args:
+      x01: [N, F] features scaled to [0, 1]
+    Returns:
+      [N, 3F] basis matrix
+    """
+    lin = x01
+    log = jnp.log1p(x01)
+    inv = 1.0 / (x01 + 0.1)
+    return jnp.concatenate([lin, log, inv], axis=-1)
+
+
+def optimistic_predict_ref(params, x01):
+    """Factorized model forward pass: log-runtime = bias + basis @ theta.
+
+    Args:
+      params: [1 + 3F] — bias followed by basis coefficients
+      x01:    [N, F]
+    Returns:
+      [N] standardized log-runtime predictions
+    """
+    b = params[0]
+    theta = params[1:]
+    return b + optimistic_basis_ref(x01) @ theta
+
+
+def adam_step_ref(params, m, v, step, grad, lr, b1=0.9, b2=0.999, eps=1e-8):
+    """Reference Adam update (bias-corrected); `step` counts from 1."""
+    m2 = b1 * m + (1.0 - b1) * grad
+    v2 = b2 * v + (1.0 - b2) * grad * grad
+    mhat = m2 / (1.0 - b1**step)
+    vhat = v2 / (1.0 - b2**step)
+    return params - lr * mhat / (jnp.sqrt(vhat) + eps), m2, v2

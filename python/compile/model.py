@@ -1,0 +1,182 @@
+"""L2: the JAX compute graphs of the two runtime prediction models.
+
+Everything here is build-time only. `aot.py` lowers the three public
+functions to HLO text artifacts; the Rust coordinator loads and executes
+them via PJRT and never imports Python.
+
+Fixed artifact shapes (PJRT executables are shape-specialized; the Rust
+side pads to these and masks):
+
+  * ``F = 16``       feature columns (job features + cluster descriptors,
+                     zero-padded; padded columns get zero kNN weight and
+                     zero basis coefficients, so they are inert)
+  * ``KNN_T = 512``  training rows for the pessimistic model (≥ the
+                     largest per-job corpus slice, PageRank's 282)
+  * ``KNN_Q = 64``   queries per batch (a configurator sweep chunk)
+  * ``KNN_K = 5``    neighbours
+  * ``OPT_BATCH = 256`` rows per optimistic training/prediction batch
+  * ``OPT_PARAMS = 1 + 3·F`` factorized-model parameters
+"""
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels import ref
+from compile.kernels.knn import weighted_sqdist
+
+F = 16
+KNN_T = 512
+KNN_Q = 64
+KNN_K = 5
+OPT_BATCH = 256
+OPT_PARAMS = 1 + 3 * F
+
+ADAM_B1 = 0.9
+ADAM_B2 = 0.999
+ADAM_EPS = 1e-8
+
+
+# --------------------------------------------------------------------------
+# Pessimistic model: similarity-weighted kNN over shared runtime data.
+# --------------------------------------------------------------------------
+def _smallest_k(d, k):
+    """Iterative masked-argmin top-k (ascending).
+
+    `jax.lax.top_k` lowers to the modern `topk(..., largest=true)` HLO op,
+    which the xla_extension 0.5.1 text parser (the version the `xla` crate
+    binds) rejects. With k static and tiny (5), k rounds of
+    argmin + mask-out lower to plain reduce/select/iota ops that parse
+    everywhere, at negligible cost next to the distance matrix.
+
+    Args:
+      d: [Q, T] distances.
+    Returns:
+      (vals [Q, k], idx [Q, k]) — the k smallest entries per row.
+    """
+    q_n, t_n = d.shape
+    col = jax.lax.broadcasted_iota(jnp.int32, (q_n, t_n), 1)
+    vals, idxs = [], []
+    cur = d
+    for _ in range(k):
+        i = jnp.argmin(cur, axis=1)  # [Q]
+        v = jnp.min(cur, axis=1)  # [Q]
+        vals.append(v)
+        idxs.append(i)
+        cur = jnp.where(col == i[:, None], jnp.float32(3.0 * ref.PAD_DISTANCE), cur)
+    return jnp.stack(vals, axis=1), jnp.stack(idxs, axis=1)
+
+
+def knn_predict(train_x, train_y, valid, weights, queries):
+    """Inverse-distance-weighted kNN prediction.
+
+    The distance matrix comes from the L1 Pallas kernel; neighbour
+    selection and weighting are plain XLA ops that fuse around it.
+
+    Args:
+      train_x: [KNN_T, F] standardized features of shared executions
+      train_y: [KNN_T]    standardized log-runtimes
+      valid:   [KNN_T]    1.0 = real row, 0.0 = padding
+      weights: [F]        per-feature relevance (|corr with runtime|)
+      queries: [KNN_Q, F] standardized query configurations
+
+    Returns:
+      [KNN_Q] predictions (standardized log-runtime space).
+    """
+    # L1 Pallas kernel; full-shape tiles so the grid is a single instance
+    # (see the kernel's docstring — §Perf iteration 2)
+    d = weighted_sqdist(queries, train_x, weights, tile_q=KNN_Q, tile_t=KNN_T)
+    d = jnp.where(valid[None, :] > 0.5, d, ref.PAD_DISTANCE)
+    nd, idx = _smallest_k(d, KNN_K)
+    ny = train_y[idx]
+    w = 1.0 / (nd + 1e-6)
+    w = jnp.where(nd >= ref.PAD_DISTANCE * 0.5, 0.0, w)
+    return jnp.sum(w * ny, axis=-1) / jnp.maximum(jnp.sum(w, axis=-1), 1e-6)
+
+
+# --------------------------------------------------------------------------
+# Optimistic model: factorized per-feature basis GLM (paper §V-B).
+# --------------------------------------------------------------------------
+def optimistic_predict(params, x01):
+    """Forward pass; see `ref.optimistic_predict_ref` (identical math —
+    the ref version IS the production graph for this model; it is
+    exported AOT so the request path stays in Rust).
+
+    Args:
+      params: [OPT_PARAMS]
+      x01:    [OPT_BATCH, F] min-max-scaled features
+    Returns:
+      [OPT_BATCH] standardized log-runtime predictions
+    """
+    return ref.optimistic_predict_ref(params, x01)
+
+
+def _masked_mse(params, x01, y, mask, l2):
+    pred = optimistic_predict(params, x01)
+    se = (pred - y) ** 2 * mask
+    mse = jnp.sum(se) / jnp.maximum(jnp.sum(mask), 1.0)
+    return mse + l2 * jnp.sum(params[1:] ** 2)
+
+
+def optimistic_train_step(params, m, v, step, x01, y, mask, lr):
+    """One Adam step on masked MSE (+ small L2). Exported AOT; the Rust
+    coordinator drives the epoch loop and owns convergence/early-stop.
+
+    Args:
+      params, m, v: [OPT_PARAMS] parameters and Adam moments
+      step:  scalar f32, 1-based step count (for bias correction)
+      x01:   [OPT_BATCH, F]
+      y:     [OPT_BATCH] standardized log-runtimes
+      mask:  [OPT_BATCH] 1.0 = real row, 0.0 = padding
+      lr:    scalar f32
+
+    Returns:
+      (params', m', v', loss)
+    """
+    loss, grad = jax.value_and_grad(_masked_mse)(params, x01, y, mask, 1e-4)
+    p2, m2, v2 = ref.adam_step_ref(
+        params, m, v, step, grad, lr, ADAM_B1, ADAM_B2, ADAM_EPS
+    )
+    return p2, m2, v2, loss
+
+
+def optimistic_init():
+    """Zero-initialized parameters and Adam moments."""
+    z = jnp.zeros((OPT_PARAMS,), jnp.float32)
+    return z, z, z
+
+
+# --------------------------------------------------------------------------
+# Example-argument factories for AOT lowering (shapes only, not values).
+# --------------------------------------------------------------------------
+def knn_example_args():
+    f32 = jnp.float32
+    return (
+        jax.ShapeDtypeStruct((KNN_T, F), f32),  # train_x
+        jax.ShapeDtypeStruct((KNN_T,), f32),  # train_y
+        jax.ShapeDtypeStruct((KNN_T,), f32),  # valid
+        jax.ShapeDtypeStruct((F,), f32),  # weights
+        jax.ShapeDtypeStruct((KNN_Q, F), f32),  # queries
+    )
+
+
+def optimistic_predict_example_args():
+    f32 = jnp.float32
+    return (
+        jax.ShapeDtypeStruct((OPT_PARAMS,), f32),
+        jax.ShapeDtypeStruct((OPT_BATCH, F), f32),
+    )
+
+
+def optimistic_train_example_args():
+    f32 = jnp.float32
+    p = jax.ShapeDtypeStruct((OPT_PARAMS,), f32)
+    return (
+        p,  # params
+        p,  # m
+        p,  # v
+        jax.ShapeDtypeStruct((), f32),  # step
+        jax.ShapeDtypeStruct((OPT_BATCH, F), f32),  # x01
+        jax.ShapeDtypeStruct((OPT_BATCH,), f32),  # y
+        jax.ShapeDtypeStruct((OPT_BATCH,), f32),  # mask
+        jax.ShapeDtypeStruct((), f32),  # lr
+    )

@@ -1,0 +1,104 @@
+"""L1 correctness: the Pallas weighted-distance kernel vs the pure-jnp
+oracle, including hypothesis sweeps over shapes and value ranges.
+
+This is the core correctness signal for everything the Rust coordinator
+executes: if the kernel matches ref.py here, and aot.py lowers the same
+graph, then the PJRT artifacts are correct by construction.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from compile.kernels.knn import TILE_Q, TILE_T, weighted_sqdist
+from compile.kernels import ref
+
+
+def _rand(rng, *shape, lo=-3.0, hi=3.0):
+    return rng.uniform(lo, hi, size=shape).astype(np.float32)
+
+
+def test_matches_ref_basic():
+    rng = np.random.default_rng(0)
+    q = _rand(rng, TILE_Q, 16)
+    t = _rand(rng, TILE_T * 2, 16)
+    w = rng.uniform(0.0, 2.0, size=16).astype(np.float32)
+    got = weighted_sqdist(q, t, w)
+    want = ref.weighted_sqdist_ref(jnp.asarray(q), jnp.asarray(t), jnp.asarray(w))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-4, atol=1e-4)
+
+
+def test_zero_weights_give_zero_distance():
+    rng = np.random.default_rng(1)
+    q = _rand(rng, TILE_Q, 8)
+    t = _rand(rng, TILE_T, 8)
+    w = np.zeros(8, np.float32)
+    got = np.asarray(weighted_sqdist(q, t, w))
+    np.testing.assert_allclose(got, np.zeros_like(got), atol=1e-6)
+
+
+def test_identical_points_zero_diagonal():
+    rng = np.random.default_rng(2)
+    x = _rand(rng, TILE_Q, 16)
+    w = rng.uniform(0.1, 1.0, size=16).astype(np.float32)
+    d = np.asarray(weighted_sqdist(x, x, w))
+    np.testing.assert_allclose(np.diag(d), np.zeros(TILE_Q), atol=1e-3)
+    # and never negative (the kernel clamps cancellation error)
+    assert (d >= 0.0).all()
+
+
+def test_weight_scaling_linearity():
+    rng = np.random.default_rng(3)
+    q = _rand(rng, TILE_Q, 4)
+    t = _rand(rng, TILE_T, 4)
+    w = rng.uniform(0.1, 1.0, size=4).astype(np.float32)
+    d1 = np.asarray(weighted_sqdist(q, t, w))
+    d3 = np.asarray(weighted_sqdist(q, t, 3.0 * w))
+    np.testing.assert_allclose(d3, 3.0 * d1, rtol=1e-4, atol=1e-4)
+
+
+def test_padded_feature_columns_are_inert():
+    # zero-weighted padding columns must not change distances — the
+    # contract the Rust featurizer relies on when padding F to 16.
+    rng = np.random.default_rng(4)
+    q8 = _rand(rng, TILE_Q, 8)
+    t8 = _rand(rng, TILE_T, 8)
+    w8 = rng.uniform(0.1, 1.0, size=8).astype(np.float32)
+    pad_q = np.concatenate([q8, _rand(rng, TILE_Q, 8)], axis=1)
+    pad_t = np.concatenate([t8, _rand(rng, TILE_T, 8)], axis=1)
+    pad_w = np.concatenate([w8, np.zeros(8, np.float32)])
+    d8 = np.asarray(weighted_sqdist(q8, t8, w8))
+    d16 = np.asarray(weighted_sqdist(pad_q, pad_t, pad_w))
+    np.testing.assert_allclose(d16, d8, rtol=1e-4, atol=1e-4)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    qt=st.integers(1, 3),
+    tt=st.integers(1, 3),
+    f=st.integers(1, 24),
+    seed=st.integers(0, 2**31 - 1),
+    scale=st.sampled_from([0.01, 1.0, 100.0]),
+)
+def test_hypothesis_shapes_and_scales(qt, tt, f, seed, scale):
+    """Sweep tile-multiple shapes, feature dims, and value magnitudes."""
+    rng = np.random.default_rng(seed)
+    q = _rand(rng, qt * TILE_Q, f, lo=-scale, hi=scale)
+    t = _rand(rng, tt * TILE_T, f, lo=-scale, hi=scale)
+    w = rng.uniform(0.0, 2.0, size=f).astype(np.float32)
+    got = np.asarray(weighted_sqdist(q, t, w))
+    want = np.asarray(
+        ref.weighted_sqdist_ref(jnp.asarray(q), jnp.asarray(t), jnp.asarray(w))
+    )
+    np.testing.assert_allclose(got, want, rtol=2e-3, atol=2e-3 * scale**2)
+
+
+def test_non_tile_multiple_rejected():
+    rng = np.random.default_rng(5)
+    q = _rand(rng, TILE_Q + 1, 4)
+    t = _rand(rng, TILE_T, 4)
+    w = np.ones(4, np.float32)
+    with pytest.raises(AssertionError):
+        weighted_sqdist(q, t, w)

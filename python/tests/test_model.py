@@ -1,0 +1,199 @@
+"""L2 correctness: the prediction-model graphs that get AOT-exported.
+
+Validates the kNN prediction graph against a NumPy re-implementation,
+the optimistic model's training dynamics (loss decreases, recovers known
+coefficients), and the masking/padding contracts the Rust runtime relies
+on.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from compile import model
+from compile.kernels import ref
+
+
+def _numpy_knn(train_x, train_y, valid, weights, queries, k, eps=1e-6):
+    """Independent NumPy re-implementation (no jax) of the kNN predictor."""
+    preds = []
+    for q in queries:
+        d = ((q[None, :] - train_x) ** 2 * weights[None, :]).sum(axis=1)
+        d = np.where(valid > 0.5, d, ref.PAD_DISTANCE)
+        idx = np.argsort(d)[:k]
+        nd, ny = d[idx], train_y[idx]
+        w = 1.0 / (nd + eps)
+        w = np.where(nd >= ref.PAD_DISTANCE * 0.5, 0.0, w)
+        preds.append((w * ny).sum() / max(w.sum(), eps))
+    return np.array(preds, np.float32)
+
+
+def _knn_inputs(rng, n_valid=100):
+    tx = rng.normal(size=(model.KNN_T, model.F)).astype(np.float32)
+    ty = rng.normal(size=model.KNN_T).astype(np.float32)
+    valid = np.zeros(model.KNN_T, np.float32)
+    valid[:n_valid] = 1.0
+    w = rng.uniform(0.0, 1.0, size=model.F).astype(np.float32)
+    q = rng.normal(size=(model.KNN_Q, model.F)).astype(np.float32)
+    return tx, ty, valid, w, q
+
+
+class TestKnnPredict:
+    def test_matches_numpy(self):
+        rng = np.random.default_rng(0)
+        tx, ty, valid, w, q = _knn_inputs(rng)
+        got = np.asarray(model.knn_predict(tx, ty, valid, w, q))
+        want = _numpy_knn(tx, ty, valid, w, q, model.KNN_K)
+        np.testing.assert_allclose(got, want, rtol=1e-3, atol=1e-3)
+
+    def test_matches_ref(self):
+        rng = np.random.default_rng(1)
+        tx, ty, valid, w, q = _knn_inputs(rng, n_valid=300)
+        got = np.asarray(model.knn_predict(tx, ty, valid, w, q))
+        want = np.asarray(
+            ref.knn_predict_ref(
+                jnp.asarray(tx), jnp.asarray(ty), jnp.asarray(valid),
+                jnp.asarray(w), jnp.asarray(q), model.KNN_K,
+            )
+        )
+        np.testing.assert_allclose(got, want, rtol=1e-3, atol=1e-3)
+
+    def test_exact_match_query_returns_its_runtime(self):
+        rng = np.random.default_rng(2)
+        tx, ty, valid, w, _ = _knn_inputs(rng)
+        w = np.maximum(w, 0.1)
+        q = np.tile(tx[3], (model.KNN_Q, 1))
+        got = np.asarray(model.knn_predict(tx, ty, valid, w, q))
+        # inverse-distance weighting: an exact neighbour dominates
+        np.testing.assert_allclose(got, np.full(model.KNN_Q, ty[3]), atol=1e-2)
+
+    def test_padding_rows_never_selected(self):
+        rng = np.random.default_rng(3)
+        tx, ty, valid, w, q = _knn_inputs(rng, n_valid=10)
+        # poison the padded runtimes — must not leak into predictions
+        ty2 = ty.copy()
+        ty2[10:] = 1e6
+        a = np.asarray(model.knn_predict(tx, ty, valid, w, q))
+        b = np.asarray(model.knn_predict(tx, ty2, valid, w, q))
+        np.testing.assert_allclose(a, b, rtol=1e-5, atol=1e-5)
+
+    def test_fewer_valid_than_k(self):
+        rng = np.random.default_rng(4)
+        tx, ty, valid, w, q = _knn_inputs(rng, n_valid=2)
+        got = np.asarray(model.knn_predict(tx, ty, valid, w, q))
+        want = _numpy_knn(tx, ty, valid, w, q, model.KNN_K)
+        assert np.isfinite(got).all()
+        np.testing.assert_allclose(got, want, rtol=1e-3, atol=1e-3)
+
+    @settings(max_examples=10, deadline=None)
+    @given(seed=st.integers(0, 2**31 - 1), n_valid=st.integers(6, model.KNN_T))
+    def test_hypothesis_sweep(self, seed, n_valid):
+        rng = np.random.default_rng(seed)
+        tx, ty, valid, w, q = _knn_inputs(rng, n_valid=n_valid)
+        got = np.asarray(model.knn_predict(tx, ty, valid, w, q))
+        want = _numpy_knn(tx, ty, valid, w, q, model.KNN_K)
+        np.testing.assert_allclose(got, want, rtol=5e-3, atol=5e-3)
+
+
+class TestOptimistic:
+    def _batch_from(self, rng, coef, n=model.OPT_BATCH):
+        x = rng.uniform(0.0, 1.0, size=(n, model.F)).astype(np.float32)
+        basis = np.asarray(ref.optimistic_basis_ref(jnp.asarray(x)))
+        y = (basis @ coef[1:] + coef[0]).astype(np.float32)
+        return x, y
+
+    def test_predict_matches_manual(self):
+        rng = np.random.default_rng(0)
+        params = rng.normal(size=model.OPT_PARAMS).astype(np.float32)
+        x = rng.uniform(0.0, 1.0, size=(model.OPT_BATCH, model.F)).astype(np.float32)
+        got = np.asarray(model.optimistic_predict(params, x))
+        lin, log, inv = x, np.log1p(x), 1.0 / (x + 0.1)
+        basis = np.concatenate([lin, log, inv], axis=1)
+        want = params[0] + basis @ params[1:]
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+    def test_train_reduces_loss_and_recovers_function(self):
+        rng = np.random.default_rng(1)
+        coef = np.zeros(model.OPT_PARAMS, np.float32)
+        coef[0] = 0.5
+        coef[1] = 2.0  # feature 0, linear term
+        coef[1 + model.F] = -1.0  # feature 0, log term
+        x, y = self._batch_from(rng, coef)
+        mask = np.ones(model.OPT_BATCH, np.float32)
+        p, m, v = (np.asarray(a) for a in model.optimistic_init())
+        losses = []
+        for step in range(1, 401):
+            p, m, v, loss = model.optimistic_train_step(
+                p, m, v, np.float32(step), x, y, mask, np.float32(0.05)
+            )
+            losses.append(float(loss))
+        assert losses[-1] < 0.01 * losses[0], f"{losses[0]} -> {losses[-1]}"
+        pred = np.asarray(model.optimistic_predict(p, x))
+        mape = np.mean(np.abs(pred - y) / np.maximum(np.abs(y), 1e-3))
+        assert mape < 0.1, f"MAPE {mape}"
+
+    def test_mask_excludes_padding(self):
+        rng = np.random.default_rng(2)
+        coef = rng.normal(size=model.OPT_PARAMS).astype(np.float32) * 0.1
+        x, y = self._batch_from(rng, coef)
+        mask = np.ones(model.OPT_BATCH, np.float32)
+        mask[100:] = 0.0
+        y_poison = y.copy()
+        y_poison[100:] = 1e6  # must be ignored
+        p, m, v = (np.asarray(a) for a in model.optimistic_init())
+        p1 = p.copy()
+        for step in range(1, 21):
+            p1, m, v, _ = model.optimistic_train_step(
+                p1, m, v, np.float32(step), x, y_poison, mask, np.float32(0.05)
+            )
+        p2, m2, v2 = (np.asarray(a) for a in model.optimistic_init())
+        for step in range(1, 21):
+            p2, m2, v2, _ = model.optimistic_train_step(
+                p2, m2, v2, np.float32(step), x, y, mask, np.float32(0.05)
+            )
+        np.testing.assert_allclose(np.asarray(p1), np.asarray(p2), rtol=1e-5, atol=1e-5)
+
+    def test_adam_matches_reference_formulas(self):
+        rng = np.random.default_rng(3)
+        g = rng.normal(size=8).astype(np.float32)
+        p = rng.normal(size=8).astype(np.float32)
+        m = rng.normal(size=8).astype(np.float32) * 0.1
+        v = np.abs(rng.normal(size=8)).astype(np.float32) * 0.1
+        p2, m2, v2 = (
+            np.asarray(a)
+            for a in ref.adam_step_ref(p, m, v, np.float32(3.0), g, 0.01)
+        )
+        m_want = 0.9 * m + 0.1 * g
+        v_want = 0.999 * v + 0.001 * g * g
+        mhat = m_want / (1 - 0.9**3)
+        vhat = v_want / (1 - 0.999**3)
+        p_want = p - 0.01 * mhat / (np.sqrt(vhat) + 1e-8)
+        np.testing.assert_allclose(m2, m_want, rtol=1e-5)
+        np.testing.assert_allclose(v2, v_want, rtol=1e-5)
+        np.testing.assert_allclose(p2, p_want, rtol=1e-5)
+
+
+class TestShapes:
+    def test_example_args_match_functions(self):
+        import jax
+
+        # lowering with the example args must succeed — this is exactly
+        # what aot.py does, so a failure here catches artifact drift early
+        jax.jit(model.knn_predict).lower(*model.knn_example_args())
+        jax.jit(model.optimistic_predict).lower(
+            *model.optimistic_predict_example_args()
+        )
+        jax.jit(model.optimistic_train_step).lower(
+            *model.optimistic_train_example_args()
+        )
+
+    def test_manifest_constants(self):
+        from compile import aot
+
+        rows = dict(aot.manifest_rows())
+        assert rows["feature_dim"] == model.F
+        assert rows["opt_params"] == 1 + 3 * model.F
+        assert rows["knn_train_rows"] % 64 == 0  # tile-aligned
+        assert rows["knn_query_rows"] % 64 == 0

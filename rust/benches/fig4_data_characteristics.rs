@@ -1,0 +1,20 @@
+//! Bench: regenerate Fig. 4 (influence of key data characteristics on the
+//! runtime — linear) and measure the per-sweep simulation cost.
+
+use c3o::cloud::Cloud;
+use c3o::figures;
+use c3o::util::bench::{black_box, Bench};
+
+fn main() {
+    let cloud = Cloud::aws_like();
+
+    let fig = figures::fig4(&cloud, 42);
+    println!("{}", fig.render());
+    assert!(fig.all_claims_hold(), "Fig. 4 reproduction failed");
+
+    let mut b = Bench::new("fig4_data_characteristics");
+    b.run("full_fig4_sweep", || {
+        black_box(figures::fig4(&cloud, 42).table.rows.len())
+    });
+    b.finish();
+}

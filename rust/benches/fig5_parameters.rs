@@ -1,0 +1,20 @@
+//! Bench: regenerate Fig. 5 (influence of algorithm parameters on the
+//! runtime — non-linear) and measure the sweep cost.
+
+use c3o::cloud::Cloud;
+use c3o::figures;
+use c3o::util::bench::{black_box, Bench};
+
+fn main() {
+    let cloud = Cloud::aws_like();
+
+    let fig = figures::fig5(&cloud, 42);
+    println!("{}", fig.render());
+    assert!(fig.all_claims_hold(), "Fig. 5 reproduction failed");
+
+    let mut b = Bench::new("fig5_parameters");
+    b.run("full_fig5_sweep", || {
+        black_box(figures::fig5(&cloud, 42).table.rows.len())
+    });
+    b.finish();
+}

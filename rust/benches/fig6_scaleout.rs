@@ -1,0 +1,32 @@
+//! Bench: regenerate Fig. 6 (scale-out behavior, incl. the SGD/K-Means
+//! memory-bottleneck super-linear speedup and PageRank's poor scaling).
+
+use c3o::cloud::Cloud;
+use c3o::figures;
+use c3o::sim::{SimConfig, Simulator};
+use c3o::util::bench::{black_box, Bench};
+use c3o::util::rng::Pcg32;
+use c3o::workloads::JobSpec;
+
+fn main() {
+    let cloud = Cloud::aws_like();
+
+    let fig = figures::fig6(&cloud, 42);
+    println!("{}", fig.render());
+    assert!(fig.all_claims_hold(), "Fig. 6 reproduction failed");
+
+    // perf: the iterative jobs dominate simulation cost; measure one each
+    let mut b = Bench::new("fig6_scaleout");
+    let sim = Simulator::new(SimConfig::default());
+    let m = cloud.machine("m5.xlarge").unwrap().clone();
+    for (label, spec) in [
+        ("simulate_sort_15gb_n4", JobSpec::sort(15.0)),
+        ("simulate_sgd_30gb_n4", JobSpec::sgd(30.0, 100)),
+        ("simulate_pagerank_330mb_n4", JobSpec::pagerank(330.0, 0.001)),
+    ] {
+        let stages = spec.stages();
+        let mut rng = Pcg32::new(7);
+        b.run(label, || black_box(sim.run(&m, 4, &stages, &mut rng).runtime_s));
+    }
+    b.finish();
+}

@@ -1,0 +1,20 @@
+//! Bench: regenerate Fig. 7 (Grep scale-out behavior vs dataset size and
+//! keyword ratio — shape invariance/variance).
+
+use c3o::cloud::Cloud;
+use c3o::figures;
+use c3o::util::bench::{black_box, Bench};
+
+fn main() {
+    let cloud = Cloud::aws_like();
+
+    let fig = figures::fig7(&cloud, 42);
+    println!("{}", fig.render());
+    assert!(fig.all_claims_hold(), "Fig. 7 reproduction failed");
+
+    let mut b = Bench::new("fig7_scaleout_factors");
+    b.run("full_fig7_sweep", || {
+        black_box(figures::fig7(&cloud, 42).table.rows.len())
+    });
+    b.finish();
+}

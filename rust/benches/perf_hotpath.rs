@@ -1,0 +1,118 @@
+//! Bench: §Perf hot paths across all three layers.
+//!
+//! * L1/L2 via PJRT: kNN batch prediction (the Pallas distance kernel),
+//!   optimistic prediction and training step.
+//! * L3 native: the same kNN math in pure Rust (what PJRT batching buys),
+//!   simulator throughput, configurator sweep, coordinator submit.
+//!
+//! Results land in target/bench_results.csv; EXPERIMENTS.md §Perf quotes
+//! them before/after optimization.
+
+use c3o::cloud::Cloud;
+use c3o::models::native::NativeKnn;
+use c3o::models::{ConfigQuery, ModelKind, Predictor, RuntimeModel};
+use c3o::runtime::Runtime;
+use c3o::sim::{SimConfig, Simulator};
+use c3o::util::bench::{black_box, Bench};
+use c3o::util::matrix::MatF32;
+use c3o::util::rng::Pcg32;
+use c3o::workloads::{ExperimentGrid, JobKind, JobSpec};
+
+fn main() {
+    let cloud = Cloud::aws_like();
+    let mut b = Bench::new("perf_hotpath");
+
+    // ---- L3: simulator ----------------------------------------------------
+    let sim = Simulator::new(SimConfig::default());
+    let m5 = cloud.machine("m5.xlarge").unwrap().clone();
+    let sort_stages = JobSpec::sort(15.0).stages();
+    let mut rng = Pcg32::new(1);
+    b.run("l3_simulate_sort_run", || {
+        black_box(sim.run(&m5, 6, &sort_stages, &mut rng).runtime_s)
+    });
+    let sgd_stages = JobSpec::sgd(30.0, 100).stages();
+    b.run("l3_simulate_sgd_run", || {
+        black_box(sim.run(&m5, 6, &sgd_stages, &mut rng).runtime_s)
+    });
+
+    // ---- L3: matrix kernel (native fallback workhorse) ---------------------
+    let a = MatF32::from_vec(128, 128, (0..128 * 128).map(|i| (i % 7) as f32).collect());
+    let c = MatF32::from_vec(128, 128, (0..128 * 128).map(|i| (i % 5) as f32).collect());
+    b.run("l3_matmul_128x128", || black_box(a.matmul(&c).data[0]));
+
+    // ---- PJRT layers --------------------------------------------------------
+    let dir = Runtime::default_dir();
+    if !Runtime::artifacts_available(&dir) {
+        eprintln!("SKIP PJRT cases: artifacts not built");
+        b.finish();
+        return;
+    }
+    let mut predictor = Predictor::new(&dir).unwrap();
+
+    // corpus + trained models
+    let grid = ExperimentGrid {
+        experiments: ExperimentGrid::paper_table1()
+            .experiments
+            .into_iter()
+            .filter(|e| e.spec.kind() == JobKind::Grep)
+            .collect(),
+        repetitions: 3,
+    };
+    let repo = grid.execute(&cloud, 42).repo_for(JobKind::Grep);
+    let knn_model = predictor.train(&cloud, &repo, ModelKind::Pessimistic).unwrap();
+    let opt_model = predictor.train(&cloud, &repo, ModelKind::Optimistic).unwrap();
+
+    let queries: Vec<ConfigQuery> = (0..64)
+        .map(|i| ConfigQuery {
+            machine: ["c5.xlarge", "m5.xlarge", "r5.xlarge"][i % 3].to_string(),
+            scaleout: 2 + (i as u32 % 11),
+            job_features: vec![10.0 + (i as f64) * 0.15, 0.05 + 0.004 * i as f64],
+        })
+        .collect();
+
+    b.run("l1_knn_predict_64q_pjrt", || {
+        black_box(predictor.predict(&knn_model, &cloud, &queries).unwrap()[0])
+    });
+    b.run("l2_opt_predict_64q_pjrt", || {
+        black_box(predictor.predict(&opt_model, &cloud, &queries).unwrap()[0])
+    });
+
+    // native comparison (same k, same data)
+    let mut native = NativeKnn::fit(&cloud, &repo, 5).unwrap();
+    b.run("l3_knn_predict_64q_native", || {
+        black_box(native.predict(&cloud, &queries).unwrap()[0])
+    });
+
+    // training-step throughput
+    b.run("l2_opt_train_full_fit", || {
+        black_box(
+            predictor
+                .train(&cloud, &repo, ModelKind::Optimistic)
+                .unwrap()
+                .kind,
+        )
+    });
+
+    // configurator decision (model inference over the whole grid)
+    let configurator = c3o::configurator::Configurator::new(&cloud).with_machines(vec![
+        "c5.xlarge".into(),
+        "m5.xlarge".into(),
+        "r5.xlarge".into(),
+    ]);
+    let req = c3o::configurator::JobRequest::grep(15.0, 0.1).with_target_seconds(300.0);
+    let mut bound = c3o::models::BoundModel {
+        predictor: &mut predictor,
+        model: knn_model.clone(),
+    };
+    b.run("l3_configure_33_candidates", || {
+        black_box(
+            configurator
+                .configure(&mut bound, &req)
+                .unwrap()
+                .unwrap()
+                .node_count,
+        )
+    });
+
+    b.finish();
+}

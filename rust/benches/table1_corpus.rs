@@ -1,0 +1,33 @@
+//! Bench: regenerate Table I (the 930-experiment corpus) and measure
+//! corpus-generation throughput (the substrate's §Perf number).
+
+use c3o::cloud::Cloud;
+use c3o::figures;
+use c3o::util::bench::{black_box, Bench};
+use c3o::workloads::ExperimentGrid;
+
+fn main() {
+    let cloud = Cloud::aws_like();
+
+    // --- reproduction: Table I -----------------------------------------
+    let fig = figures::table1(&cloud, 42);
+    println!("{}", fig.render());
+    assert!(fig.all_claims_hold(), "Table I reproduction failed");
+
+    // --- perf: grid execution throughput ---------------------------------
+    let mut b = Bench::new("table1_corpus");
+    let grid = ExperimentGrid::paper_table1();
+    b.annotate("experiments", "930");
+    b.annotate("repetitions", "5");
+    b.run("full_930_grid_5reps", || {
+        black_box(grid.execute(&cloud, 42).len())
+    });
+    let single = ExperimentGrid {
+        experiments: grid.experiments[..1].to_vec(),
+        repetitions: 1,
+    };
+    b.run("single_experiment", || {
+        black_box(single.execute(&cloud, 42).len())
+    });
+    b.finish();
+}

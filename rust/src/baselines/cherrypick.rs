@@ -1,0 +1,318 @@
+//! CherryPick-style Bayesian optimization (Alipourfard et al., NSDI'17).
+//!
+//! Probes real configurations (through the metered oracle), models the
+//! objective with a Gaussian process, and picks the next probe by
+//! expected improvement, stopping when EI falls below a confidence
+//! threshold or the probe budget is spent. The objective is log total
+//! cost, with a multiplicative penalty for configurations that miss the
+//! runtime target — matching CherryPick's constrained formulation.
+//!
+//! Every probe pays cluster time *plus the EMR-like provisioning delay*,
+//! which is exactly the overhead the paper argues collaborative data
+//! sharing avoids.
+
+use crate::baselines::{metered_probe, ConfigSearch, SearchOutcome};
+use crate::cloud::Cloud;
+use crate::configurator::JobRequest;
+use crate::models::oracle::SimOracle;
+use crate::util::rng::Pcg32;
+use crate::util::stats::solve_dense;
+use anyhow::{anyhow, Result};
+
+/// Standard normal CDF via the Abramowitz–Stegun erf approximation.
+fn phi(z: f64) -> f64 {
+    0.5 * (1.0 + erf(z / std::f64::consts::SQRT_2))
+}
+
+fn erf(x: f64) -> f64 {
+    let sign = if x < 0.0 { -1.0 } else { 1.0 };
+    let x = x.abs();
+    let t = 1.0 / (1.0 + 0.3275911 * x);
+    let y = 1.0
+        - (((((1.061405429 * t - 1.453152027) * t) + 1.421413741) * t - 0.284496736) * t
+            + 0.254829592)
+            * t
+            * (-x * x).exp();
+    sign * y
+}
+
+/// Standard normal PDF.
+fn pdf(z: f64) -> f64 {
+    (-0.5 * z * z).exp() / (2.0 * std::f64::consts::PI).sqrt()
+}
+
+/// A tiny RBF-kernel Gaussian process for the BO loop.
+struct Gp {
+    xs: Vec<Vec<f64>>,
+    ys: Vec<f64>,
+    lengthscale: f64,
+    noise: f64,
+}
+
+impl Gp {
+    fn new(lengthscale: f64, noise: f64) -> Self {
+        Gp {
+            xs: Vec::new(),
+            ys: Vec::new(),
+            lengthscale,
+            noise,
+        }
+    }
+
+    fn kernel(&self, a: &[f64], b: &[f64]) -> f64 {
+        let d2: f64 = a.iter().zip(b).map(|(x, y)| (x - y).powi(2)).sum();
+        (-d2 / (2.0 * self.lengthscale * self.lengthscale)).exp()
+    }
+
+    fn observe(&mut self, x: Vec<f64>, y: f64) {
+        self.xs.push(x);
+        self.ys.push(y);
+    }
+
+    /// Posterior (mean, sd) at a point. O(n³) per call is fine: n ≤ 10.
+    fn posterior(&self, x: &[f64]) -> (f64, f64) {
+        let n = self.xs.len();
+        if n == 0 {
+            return (0.0, 1.0);
+        }
+        let ybar = self.ys.iter().sum::<f64>() / n as f64;
+        // K + σ²I
+        let mut k = vec![0.0; n * n];
+        for i in 0..n {
+            for j in 0..n {
+                k[i * n + j] = self.kernel(&self.xs[i], &self.xs[j]);
+            }
+            k[i * n + i] += self.noise;
+        }
+        // α = K⁻¹ (y - ȳ)
+        let mut alpha: Vec<f64> = self.ys.iter().map(|y| y - ybar).collect();
+        solve_dense(&mut k, &mut alpha, n);
+        let kstar: Vec<f64> = self.xs.iter().map(|xi| self.kernel(xi, x)).collect();
+        let mean = ybar + kstar.iter().zip(&alpha).map(|(a, b)| a * b).sum::<f64>();
+        // var = k(x,x) - k*ᵀ K⁻¹ k*  (fresh solve for the variance term)
+        let mut k2 = vec![0.0; n * n];
+        for i in 0..n {
+            for j in 0..n {
+                k2[i * n + j] = self.kernel(&self.xs[i], &self.xs[j]);
+            }
+            k2[i * n + i] += self.noise;
+        }
+        let mut v = kstar.clone();
+        solve_dense(&mut k2, &mut v, n);
+        let var = 1.0 - kstar.iter().zip(&v).map(|(a, b)| a * b).sum::<f64>();
+        (mean, var.max(1e-9).sqrt())
+    }
+}
+
+/// CherryPick configuration search.
+#[derive(Debug, Clone)]
+pub struct CherryPick {
+    /// Total probe budget (seed + BO probes).
+    pub max_probes: usize,
+    /// Seed probes before the BO loop.
+    pub seed_probes: usize,
+    /// Stop when max EI drops below this.
+    pub ei_threshold: f64,
+    /// Average provisioning delay charged per probe, seconds.
+    pub provisioning_s: f64,
+    pub seed: u64,
+}
+
+impl Default for CherryPick {
+    fn default() -> Self {
+        CherryPick {
+            max_probes: 9,
+            seed_probes: 3,
+            ei_threshold: 0.02,
+            provisioning_s: 7.0 * 60.0,
+            seed: 0xBEE5,
+        }
+    }
+}
+
+impl CherryPick {
+    /// Normalized GP input for a configuration.
+    fn encode(cloud: &Cloud, machine: &str, scaleout: u32) -> Vec<f64> {
+        let m = cloud.machine(machine).expect("known machine");
+        vec![
+            m.vcpus as f64 / 8.0,
+            m.memory_gib / 64.0,
+            m.cpu_perf,
+            scaleout as f64 / 12.0,
+        ]
+    }
+
+    /// Objective: log total cost, penalized ×4 when the target is missed
+    /// (CherryPick's constrained-objective trick).
+    fn objective(cloud: &Cloud, request: &JobRequest, machine: &str, n: u32, runtime: f64) -> f64 {
+        let cost = cloud.cost_usd(machine, n, runtime);
+        let penalty = match request.target_s {
+            Some(t) if runtime > t => 4.0,
+            _ => 1.0,
+        };
+        (cost * penalty).ln()
+    }
+}
+
+impl ConfigSearch for CherryPick {
+    fn name(&self) -> &'static str {
+        "cherrypick"
+    }
+
+    fn search(
+        &mut self,
+        cloud: &Cloud,
+        oracle: &mut SimOracle,
+        request: &JobRequest,
+    ) -> Result<SearchOutcome> {
+        let features = request.spec.job_features();
+        let mut candidates: Vec<(String, u32)> = Vec::new();
+        for m in cloud.machine_types() {
+            for n in (2..=12).step_by(2) {
+                candidates.push((m.name.clone(), n));
+            }
+        }
+        if candidates.is_empty() {
+            return Err(anyhow!("empty candidate grid"));
+        }
+
+        let mut rng = Pcg32::new(self.seed);
+        let mut gp = Gp::new(0.5, 1e-4);
+        let mut tried: Vec<usize> = Vec::new();
+        let mut best: Option<(usize, f64, f64)> = None; // (cand idx, objective, runtime)
+        let mut profiling_runs = 0u64;
+        let mut profiling_cost = 0.0;
+        let mut profiling_secs = 0.0;
+
+        // seed probes: random distinct candidates, then the BO loop
+        let seeds = rng.choose_indices(candidates.len(), self.seed_probes);
+        let mut queue: Vec<usize> = seeds;
+        loop {
+            for i in queue.drain(..) {
+                let (machine, n) = &candidates[i];
+                let (runtime, cost, held) =
+                    metered_probe(cloud, oracle, machine, *n, &features, self.provisioning_s)?;
+                profiling_runs += 1;
+                profiling_cost += cost;
+                profiling_secs += held;
+                let y = Self::objective(cloud, request, machine, *n, runtime);
+                gp.observe(Self::encode(cloud, machine, *n), y);
+                if best.map_or(true, |(_, by, _)| y < by) {
+                    best = Some((i, y, runtime));
+                }
+                tried.push(i);
+            }
+            if tried.len() >= self.max_probes {
+                break;
+            }
+            let (_, best_y, _) = best.expect("seeded");
+            let mut next: Option<(usize, f64)> = None;
+            for (i, (m, n)) in candidates.iter().enumerate() {
+                if tried.contains(&i) {
+                    continue;
+                }
+                let (mu, sd) = gp.posterior(&Self::encode(cloud, m, *n));
+                let z = (best_y - mu) / sd;
+                let ei = (best_y - mu) * phi(z) + sd * pdf(z);
+                if next.map_or(true, |(_, be)| ei > be) {
+                    next = Some((i, ei));
+                }
+            }
+            let Some((i, ei)) = next else { break };
+            if ei < self.ei_threshold {
+                break; // confident enough
+            }
+            queue.push(i);
+        }
+
+        let (idx, _, runtime) = best.expect("at least one probe");
+        let (machine, scaleout) = candidates[idx].clone();
+        Ok(SearchOutcome {
+            machine,
+            scaleout,
+            predicted_runtime_s: runtime,
+            profiling_runs,
+            profiling_cost_usd: profiling_cost,
+            profiling_seconds: profiling_secs,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workloads::JobKind;
+
+    #[test]
+    fn erf_and_phi_sane() {
+        assert!((erf(0.0)).abs() < 1e-9);
+        assert!((erf(2.0) - 0.9953).abs() < 1e-3);
+        assert!((phi(0.0) - 0.5).abs() < 1e-9);
+        assert!(phi(3.0) > 0.99);
+        assert!(phi(-3.0) < 0.01);
+    }
+
+    #[test]
+    fn gp_interpolates_observations() {
+        let mut gp = Gp::new(0.5, 1e-6);
+        gp.observe(vec![0.0], 1.0);
+        gp.observe(vec![1.0], 3.0);
+        let (m0, s0) = gp.posterior(&[0.0]);
+        assert!((m0 - 1.0).abs() < 1e-2, "{m0}");
+        assert!(s0 < 0.1);
+        // far away: reverts to prior mean with high sd
+        let (mf, sf) = gp.posterior(&[10.0]);
+        assert!((mf - 2.0).abs() < 0.2, "{mf}"); // prior mean = ȳ
+        assert!(sf > 0.9);
+    }
+
+    #[test]
+    fn cherrypick_stays_in_budget_and_meters_probes() {
+        let cloud = Cloud::aws_like();
+        let mut oracle = SimOracle::deterministic(JobKind::Sort, 3);
+        let mut cp = CherryPick::default();
+        let req = JobRequest::sort(15.0).with_target_seconds(600.0);
+        let out = cp.search(&cloud, &mut oracle, &req).unwrap();
+        assert!(out.profiling_runs <= cp.max_probes as u64);
+        assert!(out.profiling_runs >= cp.seed_probes as u64);
+        assert!(out.profiling_cost_usd > 0.0, "probes must cost money");
+        assert!(out.profiling_seconds > out.profiling_runs as f64 * 7.0 * 60.0 * 0.9);
+        assert!(cloud.machine(&out.machine).is_some());
+        assert!((2..=12).contains(&out.scaleout));
+    }
+
+    #[test]
+    fn cherrypick_finds_good_config_for_cpu_bound_job() {
+        // With a deterministic oracle and 9 probes on a 54-point grid,
+        // the chosen config's true cost should be within 2x of optimal.
+        let cloud = Cloud::aws_like();
+        let mut oracle = SimOracle::deterministic(JobKind::Sort, 3);
+        let req = JobRequest::sort(15.0);
+        let out = CherryPick::default().search(&cloud, &mut oracle, &req).unwrap();
+        let mut check = SimOracle::deterministic(JobKind::Sort, 3);
+        let q = crate::models::ConfigQuery {
+            machine: out.machine.clone(),
+            scaleout: out.scaleout,
+            job_features: req.spec.job_features(),
+        };
+        let t = check.run_once(&cloud, &q).unwrap();
+        let chosen_cost = cloud.cost_usd(&out.machine, out.scaleout, t);
+        // true optimum over the same grid
+        let mut best = f64::INFINITY;
+        for m in cloud.machine_types() {
+            for n in (2..=12).step_by(2) {
+                let q = crate::models::ConfigQuery {
+                    machine: m.name.clone(),
+                    scaleout: n,
+                    job_features: req.spec.job_features(),
+                };
+                let t = check.run_once(&cloud, &q).unwrap();
+                best = best.min(cloud.cost_usd(&m.name, n, t));
+            }
+        }
+        assert!(
+            chosen_cost <= 2.0 * best,
+            "chosen {chosen_cost} vs optimal {best}"
+        );
+    }
+}

@@ -1,0 +1,235 @@
+//! Ernest-style parametric performance modeling (Venkataraman et al.,
+//! NSDI'16).
+//!
+//! Ernest profiles the job on **subsampled input data** at a handful of
+//! scale-outs, fits the parametric scale-out law
+//!
+//! ```text
+//! t(s, n) = θ₀ + θ₁·(s/n) + θ₂·log(n) + θ₃·n
+//! ```
+//!
+//! (s = data scale, n = nodes) with non-negative least squares, then
+//! extrapolates to the full dataset to choose a configuration. We fit one
+//! model per machine type (Ernest is scale-out-only; machine choice comes
+//! from comparing the fitted models), using ridge-seeded projected
+//! gradient for the NNLS constraint.
+//!
+//! Profiling cost is metered exactly like CherryPick's: subsample runs
+//! are cheaper, but they still pay provisioning.
+
+use crate::baselines::{metered_probe, ConfigSearch, SearchOutcome};
+use crate::cloud::Cloud;
+use crate::configurator::JobRequest;
+use crate::models::oracle::SimOracle;
+use crate::util::stats::ridge_fit;
+use anyhow::{anyhow, Result};
+
+/// The Ernest basis for (data scale `s` in [0,1], nodes `n`).
+pub fn ernest_basis(s: f64, n: f64) -> [f64; 4] {
+    [1.0, s / n, n.ln(), n]
+}
+
+/// Non-negative least squares: ridge seed + projected gradient descent.
+pub fn nnls(x: &[f64], rows: usize, cols: usize, y: &[f64]) -> Vec<f64> {
+    let mut w = ridge_fit(x, rows, cols, y, 1e-6);
+    for v in &mut w {
+        *v = v.max(0.0);
+    }
+    // projected gradient refinement
+    let mut lr = 1.0;
+    // scale lr by the largest diagonal of XᵀX for stability
+    let mut diag_max = 1e-12f64;
+    for j in 0..cols {
+        let d: f64 = (0..rows).map(|i| x[i * cols + j] * x[i * cols + j]).sum();
+        diag_max = diag_max.max(d);
+    }
+    lr /= diag_max;
+    for _ in 0..2000 {
+        // grad = Xᵀ(Xw - y)
+        let mut grad = vec![0.0; cols];
+        for i in 0..rows {
+            let row = &x[i * cols..(i + 1) * cols];
+            let pred: f64 = row.iter().zip(&w).map(|(a, b)| a * b).sum();
+            let err = pred - y[i];
+            for j in 0..cols {
+                grad[j] += err * row[j];
+            }
+        }
+        let mut moved = 0.0;
+        for j in 0..cols {
+            let nw = (w[j] - lr * grad[j]).max(0.0);
+            moved += (nw - w[j]).abs();
+            w[j] = nw;
+        }
+        if moved < 1e-12 {
+            break;
+        }
+    }
+    w
+}
+
+/// Ernest configuration search.
+#[derive(Debug, Clone)]
+pub struct Ernest {
+    /// Profiling plan: (data fraction, scale-out) pairs, per machine type.
+    pub probe_plan: Vec<(f64, u32)>,
+    /// Provisioning delay charged per distinct probe cluster, seconds.
+    pub provisioning_s: f64,
+}
+
+impl Default for Ernest {
+    fn default() -> Self {
+        Ernest {
+            // Ernest's optimal-experiment-design plans concentrate on
+            // small fractions at varied scale-outs.
+            probe_plan: vec![(0.06, 2), (0.06, 6), (0.06, 12), (0.12, 4), (0.12, 8)],
+            provisioning_s: 7.0 * 60.0,
+        }
+    }
+}
+
+impl ConfigSearch for Ernest {
+    fn name(&self) -> &'static str {
+        "ernest"
+    }
+
+    fn search(
+        &mut self,
+        cloud: &Cloud,
+        oracle: &mut SimOracle,
+        request: &JobRequest,
+    ) -> Result<SearchOutcome> {
+        let full_features = request.spec.job_features();
+        if full_features.is_empty() {
+            return Err(anyhow!("job without features"));
+        }
+        let mut profiling_runs = 0u64;
+        let mut profiling_cost = 0.0;
+        let mut profiling_secs = 0.0;
+
+        // fit one model per machine type
+        let mut best: Option<(String, u32, f64, f64)> = None; // machine, n, runtime, cost
+        for m in cloud.machine_types() {
+            let mut xs = Vec::new();
+            let mut ys = Vec::new();
+            for &(frac, n) in &self.probe_plan {
+                // feature 0 is always the data scale (GB or MB)
+                let mut f = full_features.clone();
+                f[0] *= frac;
+                let (t, cost, held) =
+                    metered_probe(cloud, oracle, &m.name, n, &f, self.provisioning_s)?;
+                profiling_runs += 1;
+                profiling_cost += cost;
+                profiling_secs += held;
+                xs.extend_from_slice(&ernest_basis(frac, n as f64));
+                ys.push(t);
+            }
+            let theta = nnls(&xs, ys.len(), 4, &ys);
+            // predict full data (s = 1.0) across scale-outs
+            for n in 2..=12u32 {
+                let b = ernest_basis(1.0, n as f64);
+                let t: f64 = b.iter().zip(&theta).map(|(a, w)| a * w).sum();
+                let t = t.max(1.0);
+                let meets = request.target_s.map_or(true, |tt| t <= tt);
+                let cost = cloud.cost_usd(&m.name, n, t);
+                let better = match &best {
+                    None => true,
+                    Some((_, _, bt, bc)) => {
+                        let best_meets = request.target_s.map_or(true, |tt| *bt <= tt);
+                        match (meets, best_meets) {
+                            (true, false) => true,
+                            (false, true) => false,
+                            _ => cost < *bc,
+                        }
+                    }
+                };
+                if better {
+                    best = Some((m.name.clone(), n, t, cost));
+                }
+            }
+        }
+
+        let (machine, scaleout, runtime, _) = best.ok_or_else(|| anyhow!("empty catalog"))?;
+        Ok(SearchOutcome {
+            machine,
+            scaleout,
+            predicted_runtime_s: runtime,
+            profiling_runs,
+            profiling_cost_usd: profiling_cost,
+            profiling_seconds: profiling_secs,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workloads::JobKind;
+
+    #[test]
+    fn nnls_recovers_nonnegative_coefficients() {
+        // y = 2 + 0*b1 + 3*log(n) on a grid
+        let mut xs = Vec::new();
+        let mut ys = Vec::new();
+        for n in 1..=20 {
+            let b = ernest_basis(1.0, n as f64);
+            xs.extend_from_slice(&b);
+            ys.push(2.0 + 3.0 * (n as f64).ln());
+        }
+        let w = nnls(&xs, 20, 4, &ys);
+        assert!(w.iter().all(|&v| v >= 0.0), "{w:?}");
+        assert!((w[0] - 2.0).abs() < 0.3, "{w:?}");
+        assert!((w[2] - 3.0).abs() < 0.3, "{w:?}");
+    }
+
+    #[test]
+    fn nnls_clamps_negative_truth() {
+        // y = -5 + n : θ0 would want to be negative; NNLS forces 0
+        let mut xs = Vec::new();
+        let mut ys = Vec::new();
+        for n in 1..=10 {
+            xs.extend_from_slice(&ernest_basis(1.0, n as f64));
+            ys.push(-5.0 + n as f64);
+        }
+        let w = nnls(&xs, 10, 4, &ys);
+        assert!(w.iter().all(|&v| v >= 0.0), "{w:?}");
+    }
+
+    #[test]
+    fn ernest_profiles_and_decides() {
+        let cloud = Cloud::aws_like();
+        let mut oracle = SimOracle::deterministic(JobKind::Sort, 5);
+        let mut e = Ernest::default();
+        let req = JobRequest::sort(15.0).with_target_seconds(600.0);
+        let out = e.search(&cloud, &mut oracle, &req).unwrap();
+        // 5 probes per machine type × 9 types
+        assert_eq!(out.profiling_runs, 45);
+        assert!(out.profiling_cost_usd > 0.0);
+        assert!(cloud.machine(&out.machine).is_some());
+        assert!((2..=12).contains(&out.scaleout));
+        assert!(out.predicted_runtime_s > 0.0);
+    }
+
+    #[test]
+    fn ernest_prediction_is_roughly_calibrated_for_scalable_job() {
+        // For Sort (clean scale-out behaviour) the extrapolated runtime
+        // should be within 2x of the truth at the chosen config.
+        let cloud = Cloud::aws_like();
+        let mut oracle = SimOracle::deterministic(JobKind::Sort, 5);
+        let req = JobRequest::sort(15.0);
+        let out = Ernest::default().search(&cloud, &mut oracle, &req).unwrap();
+        let mut check = SimOracle::deterministic(JobKind::Sort, 5);
+        let q = crate::models::ConfigQuery {
+            machine: out.machine.clone(),
+            scaleout: out.scaleout,
+            job_features: req.spec.job_features(),
+        };
+        let truth = check.run_once(&cloud, &q).unwrap();
+        let ratio = out.predicted_runtime_s / truth;
+        assert!(
+            (0.4..2.5).contains(&ratio),
+            "predicted {} vs truth {truth}",
+            out.predicted_runtime_s
+        );
+    }
+}

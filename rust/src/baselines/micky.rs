@@ -1,0 +1,276 @@
+//! Micky-style combined profiling (Hsu et al., IEEE CLOUD'18) — §II-A.
+//!
+//! Micky reduces per-workload profiling overhead by profiling **several
+//! workloads simultaneously**: candidate configurations are arms of a
+//! multi-armed bandit, each pull runs *one* of the workloads on the arm
+//! (round-robin), and the reward is the arm's cost-efficiency for that
+//! workload. After the pull budget is spent, the best arm becomes the
+//! *one* configuration recommended for the whole workload set — trading
+//! per-workload optimality for a much smaller shared profiling bill.
+//!
+//! We implement UCB1 over a coarse (machine type × scale-out) grid with
+//! per-workload reward normalization (log-cost z-scores against a
+//! running mean), the trade-off reformulation the paper cites.
+
+use crate::baselines::metered_probe;
+use crate::cloud::Cloud;
+use crate::configurator::JobRequest;
+use crate::models::oracle::SimOracle;
+use crate::util::rng::Pcg32;
+use anyhow::{anyhow, Result};
+
+/// Outcome of a combined-profiling run.
+#[derive(Debug, Clone)]
+pub struct CombinedOutcome {
+    /// The single configuration recommended for every workload.
+    pub machine: String,
+    pub scaleout: u32,
+    /// Total pulls (profiling executions) across all workloads.
+    pub profiling_runs: u64,
+    /// Total profiling spend (cluster time + provisioning), USD.
+    pub profiling_cost_usd: f64,
+    /// Mean pulls per arm (coverage diagnostics).
+    pub mean_pulls_per_arm: f64,
+}
+
+/// Micky: combined profiling for a *set* of workloads.
+#[derive(Debug, Clone)]
+pub struct Micky {
+    /// Total pull budget across all workloads and arms.
+    pub budget: u32,
+    /// UCB exploration constant.
+    pub exploration: f64,
+    /// Scale-outs included in the arm grid (coarse by design).
+    pub scaleouts: Vec<u32>,
+    /// Provisioning delay charged per pull, seconds.
+    pub provisioning_s: f64,
+    pub seed: u64,
+}
+
+impl Default for Micky {
+    fn default() -> Self {
+        Micky {
+            budget: 24,
+            exploration: 1.2,
+            scaleouts: vec![4, 10],
+            provisioning_s: 7.0 * 60.0,
+            seed: 0x111C,
+        }
+    }
+}
+
+impl Micky {
+    /// Run combined profiling over `requests` (one or more workloads;
+    /// Micky's value shows with several). Lower cost per workload than
+    /// profiling each separately, at the price of a single shared
+    /// configuration.
+    pub fn search_combined(
+        &mut self,
+        cloud: &Cloud,
+        requests: &[JobRequest],
+    ) -> Result<CombinedOutcome> {
+        if requests.is_empty() {
+            return Err(anyhow!("need at least one workload"));
+        }
+        let mut arms: Vec<(String, u32)> = Vec::new();
+        for m in cloud.machine_types() {
+            for &n in &self.scaleouts {
+                arms.push((m.name.clone(), n));
+            }
+        }
+        if arms.is_empty() {
+            return Err(anyhow!("empty arm grid"));
+        }
+        let mut rng = Pcg32::new(self.seed);
+        let mut oracles: Vec<SimOracle> = requests
+            .iter()
+            .map(|r| SimOracle::new(r.kind(), rng.next_u64()))
+            .collect();
+
+        // per-arm statistics
+        let mut pulls = vec![0u32; arms.len()];
+        let mut reward_sum = vec![0.0f64; arms.len()];
+        // running per-workload normalization of log-costs
+        let mut wl_mean = vec![0.0f64; requests.len()];
+        let mut wl_count = vec![0u32; requests.len()];
+
+        let mut profiling_runs = 0u64;
+        let mut profiling_cost = 0.0f64;
+
+        for t in 0..self.budget {
+            // pick the arm: each arm once first, then UCB1
+            let arm = if let Some(unpulled) = pulls.iter().position(|&p| p == 0) {
+                // cheap initial sweep only while budget allows breadth
+                if (t as usize) < arms.len().min(self.budget as usize) {
+                    unpulled
+                } else {
+                    0
+                }
+            } else {
+                let total: f64 = pulls.iter().map(|&p| p as f64).sum();
+                (0..arms.len())
+                    .max_by(|&a, &b| {
+                        let ucb = |i: usize| {
+                            reward_sum[i] / pulls[i] as f64
+                                + self.exploration * (total.ln() / pulls[i] as f64).sqrt()
+                        };
+                        ucb(a).partial_cmp(&ucb(b)).unwrap()
+                    })
+                    .unwrap()
+            };
+
+            // round-robin workload for this pull
+            let w = (t as usize) % requests.len();
+            let (machine, n) = &arms[arm];
+            let features = requests[w].spec.job_features();
+            let (runtime, cost, _held) = metered_probe(
+                cloud,
+                &mut oracles[w],
+                machine,
+                *n,
+                &features,
+                self.provisioning_s,
+            )?;
+            profiling_runs += 1;
+            profiling_cost += cost;
+
+            // reward: negative log run-cost, z-centred per workload so
+            // cheap workloads don't drown expensive ones
+            let run_cost = cloud.cost_usd(machine, *n, runtime);
+            let target_penalty = match requests[w].target_s {
+                Some(tt) if runtime > tt => (4.0f64).ln(),
+                _ => 0.0,
+            };
+            let log_cost = run_cost.ln() + target_penalty;
+            wl_count[w] += 1;
+            wl_mean[w] += (log_cost - wl_mean[w]) / wl_count[w] as f64;
+            let reward = -(log_cost - wl_mean[w]);
+            pulls[arm] += 1;
+            reward_sum[arm] += reward;
+        }
+
+        let best = (0..arms.len())
+            .filter(|&i| pulls[i] > 0)
+            .max_by(|&a, &b| {
+                let avg = |i: usize| reward_sum[i] / pulls[i] as f64;
+                avg(a).partial_cmp(&avg(b)).unwrap()
+            })
+            .ok_or_else(|| anyhow!("no arm pulled"))?;
+
+        let (machine, scaleout) = arms[best].clone();
+        Ok(CombinedOutcome {
+            machine,
+            scaleout,
+            profiling_runs,
+            profiling_cost_usd: profiling_cost,
+            mean_pulls_per_arm: profiling_runs as f64 / arms.len() as f64,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::baselines::{CherryPick, ConfigSearch};
+
+    fn battery() -> Vec<JobRequest> {
+        vec![
+            JobRequest::sort(15.0).with_target_seconds(600.0),
+            JobRequest::grep(12.0, 0.1).with_target_seconds(400.0),
+            JobRequest::pagerank(300.0, 0.001).with_target_seconds(500.0),
+            JobRequest::sort(18.0).with_target_seconds(700.0),
+            JobRequest::grep(16.0, 0.2).with_target_seconds(500.0),
+        ]
+    }
+
+    #[test]
+    fn respects_budget_and_returns_valid_arm() {
+        let cloud = Cloud::aws_like();
+        let mut micky = Micky::default();
+        let out = micky.search_combined(&cloud, &battery()).unwrap();
+        assert_eq!(out.profiling_runs, micky.budget as u64);
+        assert!(cloud.machine(&out.machine).is_some());
+        assert!(micky.scaleouts.contains(&out.scaleout));
+        assert!(out.profiling_cost_usd > 0.0);
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let cloud = Cloud::aws_like();
+        let a = Micky::default().search_combined(&cloud, &battery()).unwrap();
+        let b = Micky::default().search_combined(&cloud, &battery()).unwrap();
+        assert_eq!(a.machine, b.machine);
+        assert_eq!(a.scaleout, b.scaleout);
+        assert_eq!(a.profiling_cost_usd, b.profiling_cost_usd);
+    }
+
+    #[test]
+    fn combined_profiling_is_cheaper_than_per_workload_search() {
+        // the paper's §II-A point: Micky cuts profiling overhead vs
+        // running an independent search per workload
+        let cloud = Cloud::aws_like();
+        let reqs = battery();
+        let micky_cost = Micky::default()
+            .search_combined(&cloud, &reqs)
+            .unwrap()
+            .profiling_cost_usd;
+        let mut separate_cost = 0.0;
+        for r in &reqs {
+            let mut oracle = SimOracle::deterministic(r.kind(), 9);
+            let out = CherryPick::default().search(&cloud, &mut oracle, r).unwrap();
+            separate_cost += out.profiling_cost_usd;
+        }
+        assert!(
+            micky_cost < separate_cost,
+            "combined ${micky_cost:.2} should beat separate ${separate_cost:.2}"
+        );
+    }
+
+    #[test]
+    fn recommended_arm_is_reasonable() {
+        // the shared configuration should not be a regret disaster for
+        // the CPU-bound members of the workload set
+        let cloud = Cloud::aws_like();
+        let reqs = battery();
+        let out = Micky {
+            budget: 60,
+            ..Micky::default()
+        }
+        .search_combined(&cloud, &reqs)
+        .unwrap();
+        // measure true cost of the shared choice vs per-workload optimum
+        let mut ratio_sum = 0.0;
+        let scaleouts = [4u32, 10];
+        for r in &reqs {
+            let mut oracle = SimOracle::deterministic(r.kind(), 55);
+            let q = crate::models::ConfigQuery {
+                machine: out.machine.clone(),
+                scaleout: out.scaleout,
+                job_features: r.spec.job_features(),
+            };
+            let t = oracle.run_once(&cloud, &q).unwrap();
+            let chosen = cloud.cost_usd(&out.machine, out.scaleout, t);
+            let mut best = f64::INFINITY;
+            for m in cloud.machine_types() {
+                for n in scaleouts {
+                    let q = crate::models::ConfigQuery {
+                        machine: m.name.clone(),
+                        scaleout: n,
+                        job_features: r.spec.job_features(),
+                    };
+                    let t = oracle.run_once(&cloud, &q).unwrap();
+                    best = best.min(cloud.cost_usd(&m.name, n, t));
+                }
+            }
+            ratio_sum += chosen / best;
+        }
+        let mean_regret = ratio_sum / reqs.len() as f64;
+        assert!(mean_regret < 4.0, "mean regret {mean_regret}");
+    }
+
+    #[test]
+    fn empty_workload_set_rejected() {
+        let cloud = Cloud::aws_like();
+        assert!(Micky::default().search_combined(&cloud, &[]).is_err());
+    }
+}

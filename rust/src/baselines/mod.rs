@@ -1,0 +1,87 @@
+//! Baseline cluster-configuration approaches (paper §II related work).
+//!
+//! The paper positions C3O against two families:
+//!
+//! * **Iterative search** — profile candidate configurations until
+//!   confident: [`cherrypick`] (Bayesian optimization, NSDI'17). Pays
+//!   real cluster time per probe (including the ~7 min EMR provisioning
+//!   delay the paper highlights).
+//! * **Combined profiling** — [`micky`] (IEEE CLOUD'18): profile several
+//!   workloads simultaneously, reformulated as a multi-armed bandit, and
+//!   recommend one shared configuration.
+//! * **Performance models from dedicated profiling** — [`ernest`]
+//!   (NSDI'16): run the job on *subsampled* data at a few scale-outs,
+//!   fit a parametric scale-out law, predict the full run.
+//! * **Folk strategies** — [`naive`]: overprovision-to-the-max, cheapest
+//!   hourly rate, or random choice; what users without tooling do.
+//!
+//! Every baseline implements [`ConfigSearch`] and is charged for its
+//! profiling through the [`SimOracle`]'s run accounting, so the benches
+//! can report *total cost to decision* — the axis on which C3O's
+//! zero-profiling approach wins.
+
+pub mod cherrypick;
+pub mod ernest;
+pub mod micky;
+pub mod naive;
+
+pub use cherrypick::CherryPick;
+pub use ernest::Ernest;
+pub use micky::{CombinedOutcome, Micky};
+pub use naive::{NaiveCheapest, NaiveMax, NaiveRandom};
+
+use crate::cloud::Cloud;
+use crate::configurator::JobRequest;
+use crate::models::oracle::SimOracle;
+use anyhow::Result;
+
+/// The decision any approach ultimately produces.
+#[derive(Debug, Clone)]
+pub struct SearchOutcome {
+    pub machine: String,
+    pub scaleout: u32,
+    /// The approach's own runtime estimate for its choice (NaN if it
+    /// doesn't estimate).
+    pub predicted_runtime_s: f64,
+    /// Number of profiling executions performed to decide.
+    pub profiling_runs: u64,
+    /// Dollars burned on profiling (cluster time + provisioning).
+    pub profiling_cost_usd: f64,
+    /// Wall-clock seconds of profiling (incl. provisioning delays).
+    pub profiling_seconds: f64,
+}
+
+/// A cluster-configuration approach.
+pub trait ConfigSearch {
+    fn name(&self) -> &'static str;
+
+    /// Decide a configuration for the request. Profiling (if any) goes
+    /// through the oracle, which meters it.
+    fn search(
+        &mut self,
+        cloud: &Cloud,
+        oracle: &mut SimOracle,
+        request: &JobRequest,
+    ) -> Result<SearchOutcome>;
+}
+
+/// Helper shared by profiling-based baselines: meter one probe run,
+/// charging cluster time + provisioning at the cloud's billing policy.
+pub(crate) fn metered_probe(
+    cloud: &Cloud,
+    oracle: &mut SimOracle,
+    machine: &str,
+    scaleout: u32,
+    job_features: &[f64],
+    provisioning_s: f64,
+) -> Result<(f64, f64, f64)> {
+    let q = crate::models::ConfigQuery {
+        machine: machine.to_string(),
+        scaleout,
+        job_features: job_features.to_vec(),
+    };
+    let runtime = oracle.run_once(cloud, &q)?;
+    let held = runtime + provisioning_s;
+    let cost = cloud.cost_usd(machine, scaleout, held);
+    Ok((runtime, cost, held))
+}

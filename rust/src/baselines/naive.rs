@@ -1,0 +1,171 @@
+//! Folk-strategy baselines: what users do without tooling.
+
+use crate::baselines::{ConfigSearch, SearchOutcome};
+use crate::cloud::Cloud;
+use crate::configurator::JobRequest;
+use crate::models::oracle::SimOracle;
+use crate::util::rng::Pcg32;
+use anyhow::{anyhow, Result};
+
+/// Overprovisioning: the biggest general-purpose cluster on offer —
+/// the paper's "users often overprovision resources to meet their
+/// performance target, yet often at the cost of overheads".
+#[derive(Debug, Clone)]
+pub struct NaiveMax {
+    pub max_scaleout: u32,
+}
+
+impl Default for NaiveMax {
+    fn default() -> Self {
+        NaiveMax { max_scaleout: 12 }
+    }
+}
+
+impl ConfigSearch for NaiveMax {
+    fn name(&self) -> &'static str {
+        "naive-max"
+    }
+
+    fn search(
+        &mut self,
+        cloud: &Cloud,
+        _oracle: &mut SimOracle,
+        _request: &JobRequest,
+    ) -> Result<SearchOutcome> {
+        // biggest machine of the general-purpose family, max scale-out
+        let machine = cloud
+            .machine_types()
+            .iter()
+            .filter(|m| m.family == crate::cloud::MachineFamily::General)
+            .max_by(|a, b| a.vcpus.cmp(&b.vcpus))
+            .ok_or_else(|| anyhow!("no general-purpose machines in catalog"))?;
+        Ok(SearchOutcome {
+            machine: machine.name.clone(),
+            scaleout: self.max_scaleout,
+            predicted_runtime_s: f64::NAN,
+            profiling_runs: 0,
+            profiling_cost_usd: 0.0,
+            profiling_seconds: 0.0,
+        })
+    }
+}
+
+/// Penny-pinching: the configuration with the lowest hourly rate
+/// (ignores that slow clusters can cost *more* in total).
+#[derive(Debug, Clone, Default)]
+pub struct NaiveCheapest;
+
+impl ConfigSearch for NaiveCheapest {
+    fn name(&self) -> &'static str {
+        "naive-cheapest"
+    }
+
+    fn search(
+        &mut self,
+        cloud: &Cloud,
+        _oracle: &mut SimOracle,
+        _request: &JobRequest,
+    ) -> Result<SearchOutcome> {
+        let machine = cloud
+            .machine_types()
+            .iter()
+            .min_by(|a, b| a.price_usd_hour.partial_cmp(&b.price_usd_hour).unwrap())
+            .ok_or_else(|| anyhow!("empty catalog"))?;
+        Ok(SearchOutcome {
+            machine: machine.name.clone(),
+            scaleout: 2,
+            predicted_runtime_s: f64::NAN,
+            profiling_runs: 0,
+            profiling_cost_usd: 0.0,
+            profiling_seconds: 0.0,
+        })
+    }
+}
+
+/// Uniform random choice over the candidate grid (the regret floor any
+/// informed approach must beat).
+#[derive(Debug, Clone)]
+pub struct NaiveRandom {
+    pub rng: Pcg32,
+    pub scaleouts: Vec<u32>,
+}
+
+impl NaiveRandom {
+    pub fn new(seed: u64) -> Self {
+        NaiveRandom {
+            rng: Pcg32::new(seed),
+            scaleouts: (2..=12).collect(),
+        }
+    }
+}
+
+impl ConfigSearch for NaiveRandom {
+    fn name(&self) -> &'static str {
+        "naive-random"
+    }
+
+    fn search(
+        &mut self,
+        cloud: &Cloud,
+        _oracle: &mut SimOracle,
+        _request: &JobRequest,
+    ) -> Result<SearchOutcome> {
+        let machines = cloud.machine_types();
+        if machines.is_empty() {
+            return Err(anyhow!("empty catalog"));
+        }
+        let m = &machines[self.rng.index(machines.len())];
+        let n = self.scaleouts[self.rng.index(self.scaleouts.len())];
+        Ok(SearchOutcome {
+            machine: m.name.clone(),
+            scaleout: n,
+            predicted_runtime_s: f64::NAN,
+            profiling_runs: 0,
+            profiling_cost_usd: 0.0,
+            profiling_seconds: 0.0,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workloads::JobKind;
+
+    #[test]
+    fn max_picks_biggest_general_purpose() {
+        let cloud = Cloud::aws_like();
+        let mut oracle = SimOracle::deterministic(JobKind::Sort, 1);
+        let out = NaiveMax::default()
+            .search(&cloud, &mut oracle, &JobRequest::sort(15.0))
+            .unwrap();
+        assert_eq!(out.machine, "m5.2xlarge");
+        assert_eq!(out.scaleout, 12);
+        assert_eq!(out.profiling_runs, 0);
+    }
+
+    #[test]
+    fn cheapest_picks_lowest_rate() {
+        let cloud = Cloud::aws_like();
+        let mut oracle = SimOracle::deterministic(JobKind::Sort, 1);
+        let out = NaiveCheapest
+            .search(&cloud, &mut oracle, &JobRequest::sort(15.0))
+            .unwrap();
+        assert_eq!(out.machine, "c5.large"); // $0.085/h
+    }
+
+    #[test]
+    fn random_is_seeded_and_in_range() {
+        let cloud = Cloud::aws_like();
+        let mut oracle = SimOracle::deterministic(JobKind::Sort, 1);
+        let mut a = NaiveRandom::new(7);
+        let mut b = NaiveRandom::new(7);
+        for _ in 0..10 {
+            let oa = a.search(&cloud, &mut oracle, &JobRequest::sort(15.0)).unwrap();
+            let ob = b.search(&cloud, &mut oracle, &JobRequest::sort(15.0)).unwrap();
+            assert_eq!(oa.machine, ob.machine);
+            assert_eq!(oa.scaleout, ob.scaleout);
+            assert!((2..=12).contains(&oa.scaleout));
+        }
+    }
+}

@@ -1,0 +1,185 @@
+//! Machine-type catalog.
+//!
+//! Calibrated to the AWS on-demand price book (us-east-1, Linux) as of the
+//! paper's experiments (late 2020), covering the three instance families
+//! whose trade-offs drive Fig. 3:
+//!
+//! * **c5** — compute-optimized: highest clock, 2 GiB RAM per vCPU.
+//! * **m5** — general-purpose: 4 GiB RAM per vCPU.
+//! * **r5** — memory-optimized: 8 GiB RAM per vCPU.
+//!
+//! The RAM-per-vCPU ratio is what produces the paper's memory-bottleneck
+//! phenomenon (SGD/K-Means spilling at low scale-outs on RAM-lean types),
+//! while the price-per-vCPU ordering (c5 < m5 < r5) produces the static
+//! cost-efficiency ranking for CPU-bound jobs.
+
+/// Instance family, mirroring the AWS naming the paper's clusters used.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum MachineFamily {
+    /// Compute optimized (c5-like).
+    Compute,
+    /// General purpose (m5-like).
+    General,
+    /// Memory optimized (r5-like).
+    Memory,
+}
+
+impl MachineFamily {
+    /// Short label used in machine names ("c5", "m5", "r5").
+    pub fn label(self) -> &'static str {
+        match self {
+            MachineFamily::Compute => "c5",
+            MachineFamily::General => "m5",
+            MachineFamily::Memory => "r5",
+        }
+    }
+}
+
+impl std::fmt::Display for MachineFamily {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.label())
+    }
+}
+
+/// One machine type in the catalog.
+#[derive(Debug, Clone, PartialEq)]
+pub struct MachineType {
+    /// Catalog name, e.g. `"m5.xlarge"`.
+    pub name: String,
+    pub family: MachineFamily,
+    /// Virtual CPUs (hyperthreads).
+    pub vcpus: u32,
+    /// Memory in GiB.
+    pub memory_gib: f64,
+    /// Single-core relative compute speed (m5 == 1.0; c5 clocks higher).
+    pub cpu_perf: f64,
+    /// Sequential disk bandwidth per node, MB/s (EBS gp2-like).
+    pub disk_mb_s: f64,
+    /// Network bandwidth per node, MB/s.
+    pub net_mb_s: f64,
+    /// On-demand price, USD per hour.
+    pub price_usd_hour: f64,
+}
+
+impl MachineType {
+    /// Memory per vCPU in GiB — the catalog axis behind Fig. 3's
+    /// memory-bottleneck exceptions.
+    pub fn mem_per_vcpu(&self) -> f64 {
+        self.memory_gib / self.vcpus as f64
+    }
+
+    /// Price per vCPU-hour, the first-order cost-efficiency axis.
+    pub fn price_per_vcpu(&self) -> f64 {
+        self.price_usd_hour / self.vcpus as f64
+    }
+}
+
+impl std::fmt::Display for MachineType {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(&self.name)
+    }
+}
+
+fn mt(
+    name: &str,
+    family: MachineFamily,
+    vcpus: u32,
+    memory_gib: f64,
+    cpu_perf: f64,
+    disk_mb_s: f64,
+    net_mb_s: f64,
+    price_usd_hour: f64,
+) -> MachineType {
+    MachineType {
+        name: name.to_string(),
+        family,
+        vcpus,
+        memory_gib,
+        cpu_perf,
+        disk_mb_s,
+        net_mb_s,
+        price_usd_hour,
+    }
+}
+
+/// The nine-type catalog used by the experiment grid: three families ×
+/// three sizes (`large`, `xlarge`, `2xlarge`), prices from the 2020
+/// us-east-1 on-demand price book.
+pub fn aws_like_catalog() -> Vec<MachineType> {
+    use MachineFamily::*;
+    vec![
+        // name             family   vcpu  mem    perf  disk   net    $/h
+        mt("c5.large", Compute, 2, 4.0, 1.15, 160.0, 90.0, 0.085),
+        mt("c5.xlarge", Compute, 4, 8.0, 1.15, 160.0, 160.0, 0.170),
+        mt("c5.2xlarge", Compute, 8, 16.0, 1.15, 220.0, 320.0, 0.340),
+        mt("m5.large", General, 2, 8.0, 1.0, 160.0, 90.0, 0.096),
+        mt("m5.xlarge", General, 4, 16.0, 1.0, 160.0, 160.0, 0.192),
+        mt("m5.2xlarge", General, 8, 32.0, 1.0, 220.0, 320.0, 0.384),
+        mt("r5.large", Memory, 2, 16.0, 1.0, 160.0, 90.0, 0.126),
+        mt("r5.xlarge", Memory, 4, 32.0, 1.0, 160.0, 160.0, 0.252),
+        mt("r5.2xlarge", Memory, 8, 64.0, 1.0, 220.0, 320.0, 0.504),
+    ]
+}
+
+/// The subset of the catalog used for the Table-I experiment grid's
+/// machine-type axis (one size per family keeps the grid at the paper's
+/// scale; the full catalog is exercised by the configurator benches).
+pub fn grid_machine_types() -> Vec<String> {
+    vec![
+        "c5.xlarge".to_string(),
+        "m5.xlarge".to_string(),
+        "r5.xlarge".to_string(),
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn family_ram_ratios() {
+        for m in aws_like_catalog() {
+            let want = match m.family {
+                MachineFamily::Compute => 2.0,
+                MachineFamily::General => 4.0,
+                MachineFamily::Memory => 8.0,
+            };
+            assert!(
+                (m.mem_per_vcpu() - want).abs() < 1e-9,
+                "{}: mem/vcpu {}",
+                m.name,
+                m.mem_per_vcpu()
+            );
+        }
+    }
+
+    #[test]
+    fn price_per_vcpu_ordering() {
+        // c5 cheapest per vCPU, r5 most expensive — the Fig. 3 driver.
+        let cat = aws_like_catalog();
+        let get = |n: &str| cat.iter().find(|m| m.name == n).unwrap().price_per_vcpu();
+        assert!(get("c5.xlarge") < get("m5.xlarge"));
+        assert!(get("m5.xlarge") < get("r5.xlarge"));
+    }
+
+    #[test]
+    fn doubling_size_doubles_price() {
+        let cat = aws_like_catalog();
+        let get = |n: &str| cat.iter().find(|m| m.name == n).unwrap();
+        for fam in ["c5", "m5", "r5"] {
+            let x = get(&format!("{fam}.xlarge"));
+            let xx = get(&format!("{fam}.2xlarge"));
+            assert!((xx.price_usd_hour - 2.0 * x.price_usd_hour).abs() < 1e-9);
+            assert_eq!(xx.vcpus, 2 * x.vcpus);
+            assert!((xx.memory_gib - 2.0 * x.memory_gib).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn grid_types_exist_in_catalog() {
+        let cat = aws_like_catalog();
+        for name in grid_machine_types() {
+            assert!(cat.iter().any(|m| m.name == name), "{name} missing");
+        }
+    }
+}

@@ -1,0 +1,212 @@
+//! Cluster lifecycle and the EMR-like provisioning model.
+//!
+//! The paper motivates avoiding profiling runs partly by EMR's provisioning
+//! delay of "seven or more minutes" per cluster. The provisioning model
+//! here samples from a right-skewed distribution centered near that figure
+//! (larger clusters take slightly longer), so iterative-search baselines
+//! (CherryPick) pay a realistic wall-clock and dollar cost per probe.
+
+use super::catalog::MachineType;
+use crate::util::rng::Pcg32;
+
+/// Lifecycle state of a simulated cluster.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ClusterState {
+    /// Requested but not yet usable (inside the provisioning delay).
+    Provisioning,
+    /// Bootstrapped and accepting jobs.
+    Running,
+    /// Terminated; retains billing totals.
+    Terminated,
+}
+
+/// Provisioning-delay model.
+#[derive(Debug, Clone)]
+pub struct ProvisioningModel {
+    /// Base delay in seconds (cluster-size independent part).
+    pub base_s: f64,
+    /// Additional seconds per node.
+    pub per_node_s: f64,
+    /// Log-normal sigma of the multiplicative noise.
+    pub sigma: f64,
+}
+
+impl ProvisioningModel {
+    /// EMR-like: ~7 min base + 6 s/node, ±15% log-normal noise.
+    pub fn emr_like() -> Self {
+        ProvisioningModel {
+            base_s: 7.0 * 60.0,
+            per_node_s: 6.0,
+            sigma: 0.15,
+        }
+    }
+
+    /// Zero-delay model for unit tests.
+    pub fn instant() -> Self {
+        ProvisioningModel {
+            base_s: 0.0,
+            per_node_s: 0.0,
+            sigma: 0.0,
+        }
+    }
+
+    /// Sample a provisioning delay for a cluster of `count` nodes.
+    pub fn sample_delay_s(&self, count: u32, rng: &mut Pcg32) -> f64 {
+        let det = self.base_s + self.per_node_s * count as f64;
+        if self.sigma == 0.0 {
+            det
+        } else {
+            det * rng.lognormal_noise(self.sigma)
+        }
+    }
+}
+
+/// A provisioned (simulated) cluster.
+#[derive(Debug, Clone)]
+pub struct Cluster {
+    machine: MachineType,
+    count: u32,
+    provisioning_delay_s: f64,
+    state: ClusterState,
+    busy_seconds: f64,
+}
+
+impl Cluster {
+    pub(crate) fn new(machine: MachineType, count: u32, provisioning_delay_s: f64) -> Self {
+        Cluster {
+            machine,
+            count,
+            provisioning_delay_s,
+            state: ClusterState::Provisioning,
+            busy_seconds: 0.0,
+        }
+    }
+
+    /// The machine type of every node (EMR uniform instance groups).
+    pub fn machine(&self) -> &MachineType {
+        &self.machine
+    }
+
+    /// Number of worker nodes.
+    pub fn count(&self) -> u32 {
+        self.count
+    }
+
+    /// Aggregate vCPUs across the cluster.
+    pub fn total_vcpus(&self) -> u32 {
+        self.count * self.machine.vcpus
+    }
+
+    /// Aggregate memory in GiB across the cluster.
+    pub fn total_memory_gib(&self) -> f64 {
+        self.count as f64 * self.machine.memory_gib
+    }
+
+    /// Sampled provisioning delay for this cluster.
+    pub fn provisioning_delay_s(&self) -> f64 {
+        self.provisioning_delay_s
+    }
+
+    /// Current lifecycle state.
+    pub fn state(&self) -> ClusterState {
+        self.state
+    }
+
+    /// Finish bootstrapping (advance Provisioning → Running).
+    pub fn mark_running(&mut self) {
+        assert_eq!(self.state, ClusterState::Provisioning, "already started");
+        self.state = ClusterState::Running;
+    }
+
+    /// Record `seconds` of busy time (job execution) on this cluster.
+    pub fn record_busy(&mut self, seconds: f64) {
+        assert_eq!(self.state, ClusterState::Running, "cluster not running");
+        assert!(seconds >= 0.0);
+        self.busy_seconds += seconds;
+    }
+
+    /// Terminate; returns total held wall-clock seconds (provisioning +
+    /// busy time), the quantity billing applies to.
+    pub fn terminate(&mut self) -> f64 {
+        assert_ne!(self.state, ClusterState::Terminated, "double terminate");
+        self.state = ClusterState::Terminated;
+        self.provisioning_delay_s + self.busy_seconds
+    }
+
+    /// Busy seconds so far.
+    pub fn busy_seconds(&self) -> f64 {
+        self.busy_seconds
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cloud::catalog::aws_like_catalog;
+
+    fn some_machine() -> MachineType {
+        aws_like_catalog().remove(0)
+    }
+
+    #[test]
+    fn lifecycle_happy_path() {
+        let mut c = Cluster::new(some_machine(), 4, 420.0);
+        assert_eq!(c.state(), ClusterState::Provisioning);
+        c.mark_running();
+        c.record_busy(100.0);
+        c.record_busy(50.0);
+        let held = c.terminate();
+        assert!((held - 570.0).abs() < 1e-9);
+        assert_eq!(c.state(), ClusterState::Terminated);
+    }
+
+    #[test]
+    #[should_panic(expected = "not running")]
+    fn busy_before_running_panics() {
+        let mut c = Cluster::new(some_machine(), 4, 420.0);
+        c.record_busy(1.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "double terminate")]
+    fn double_terminate_panics() {
+        let mut c = Cluster::new(some_machine(), 4, 420.0);
+        c.mark_running();
+        c.terminate();
+        c.terminate();
+    }
+
+    #[test]
+    fn emr_delay_mean_near_seven_minutes() {
+        let model = ProvisioningModel::emr_like();
+        let mut rng = Pcg32::new(2);
+        let n = 2000;
+        let mean: f64 = (0..n).map(|_| model.sample_delay_s(8, &mut rng)).sum::<f64>() / n as f64;
+        // 420 + 48 base, log-normal mean slightly above median
+        assert!((440.0..520.0).contains(&mean), "mean {mean}");
+    }
+
+    #[test]
+    fn bigger_clusters_take_longer_on_average() {
+        let model = ProvisioningModel::emr_like();
+        let mut rng = Pcg32::new(3);
+        let n = 2000;
+        let small: f64 = (0..n).map(|_| model.sample_delay_s(2, &mut rng)).sum::<f64>() / n as f64;
+        let big: f64 = (0..n).map(|_| model.sample_delay_s(32, &mut rng)).sum::<f64>() / n as f64;
+        assert!(big > small + 60.0, "small {small} big {big}");
+    }
+
+    #[test]
+    fn instant_model_is_deterministic_zero() {
+        let model = ProvisioningModel::instant();
+        let mut rng = Pcg32::new(4);
+        assert_eq!(model.sample_delay_s(10, &mut rng), 0.0);
+    }
+
+    #[test]
+    fn aggregates() {
+        let c = Cluster::new(some_machine(), 3, 0.0); // c5.large: 2 vcpu, 4 GiB
+        assert_eq!(c.total_vcpus(), 6);
+        assert!((c.total_memory_gib() - 12.0).abs() < 1e-9);
+    }
+}

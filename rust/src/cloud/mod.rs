@@ -1,0 +1,166 @@
+//! Simulated public cloud — the Amazon EMR stand-in.
+//!
+//! The paper runs its 930 experiments on Amazon EMR 6.0.0 clusters built
+//! from general-purpose (m5), compute-optimized (c5), and memory-optimized
+//! (r5) instances. This module provides the equivalent substrate:
+//!
+//! * a **machine-type catalog** ([`MachineType`]) with vCPUs, memory, disk
+//!   and network bandwidth, and on-demand hourly prices calibrated to the
+//!   us-east-1 price book circa 2020;
+//! * a **provisioning model** ([`ProvisioningModel`]) reproducing the
+//!   seven-plus-minute EMR cluster start-up delay the paper cites as the
+//!   reason profiling-based approaches are expensive;
+//! * a **cluster lifecycle** ([`Cluster`], [`Cloud::provision`]) with
+//!   billing (per-second with a one-minute minimum, like EC2 Linux).
+//!
+//! Everything downstream (the dataflow simulator, the configurator, the
+//! baselines) sees the cloud only through this module, which is exactly
+//! the visibility a real C3O deployment would have through its
+//! *cloud access manager*.
+
+pub mod catalog;
+pub mod cluster;
+pub mod pricing;
+
+pub use catalog::{MachineFamily, MachineType};
+pub use cluster::{Cluster, ClusterState, ProvisioningModel};
+pub use pricing::BillingPolicy;
+
+use crate::util::rng::Pcg32;
+
+/// A simulated public cloud: catalog + provisioning + billing.
+#[derive(Debug, Clone)]
+pub struct Cloud {
+    machine_types: Vec<MachineType>,
+    provisioning: ProvisioningModel,
+    billing: BillingPolicy,
+}
+
+impl Cloud {
+    /// A cloud with the AWS-like catalog the paper's experiments span
+    /// (m5/c5/r5 families, `.large` … `.2xlarge` sizes).
+    pub fn aws_like() -> Self {
+        Cloud {
+            machine_types: catalog::aws_like_catalog(),
+            provisioning: ProvisioningModel::emr_like(),
+            billing: BillingPolicy::per_second_with_minimum(60),
+        }
+    }
+
+    /// A cloud with a custom catalog (used in tests and ablations).
+    pub fn with_catalog(machine_types: Vec<MachineType>) -> Self {
+        Cloud {
+            machine_types,
+            provisioning: ProvisioningModel::emr_like(),
+            billing: BillingPolicy::per_second_with_minimum(60),
+        }
+    }
+
+    /// Replace the provisioning model (e.g. zero-delay for unit tests).
+    pub fn with_provisioning(mut self, p: ProvisioningModel) -> Self {
+        self.provisioning = p;
+        self
+    }
+
+    /// All machine types offered by this cloud.
+    pub fn machine_types(&self) -> &[MachineType] {
+        &self.machine_types
+    }
+
+    /// Look up a machine type by name.
+    pub fn machine(&self, name: &str) -> Option<&MachineType> {
+        self.machine_types.iter().find(|m| m.name == name)
+    }
+
+    /// The billing policy in force.
+    pub fn billing(&self) -> &BillingPolicy {
+        &self.billing
+    }
+
+    /// Provision a cluster of `count` × `machine`. Returns the cluster with
+    /// its (stochastic but seeded) provisioning delay already determined.
+    ///
+    /// # Panics
+    /// Panics if the machine type is not in this cloud's catalog or if
+    /// `count == 0`.
+    pub fn provision(&self, machine: &str, count: u32, rng: &mut Pcg32) -> Cluster {
+        assert!(count > 0, "cannot provision an empty cluster");
+        let mt = self
+            .machine(machine)
+            .unwrap_or_else(|| panic!("unknown machine type {machine:?}"))
+            .clone();
+        let delay = self.provisioning.sample_delay_s(count, rng);
+        Cluster::new(mt, count, delay)
+    }
+
+    /// Cost in USD of holding `count` × `machine` for `seconds`.
+    pub fn cost_usd(&self, machine: &str, count: u32, seconds: f64) -> f64 {
+        let mt = self
+            .machine(machine)
+            .unwrap_or_else(|| panic!("unknown machine type {machine:?}"));
+        self.billing.cost_usd(mt.price_usd_hour, count, seconds)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn aws_like_catalog_nonempty_and_unique() {
+        let cloud = Cloud::aws_like();
+        let names: Vec<_> = cloud.machine_types().iter().map(|m| &m.name).collect();
+        assert!(names.len() >= 6, "need several machine types for Fig. 3");
+        let mut dedup = names.clone();
+        dedup.sort();
+        dedup.dedup();
+        assert_eq!(dedup.len(), names.len(), "duplicate machine names");
+    }
+
+    #[test]
+    fn machine_lookup() {
+        let cloud = Cloud::aws_like();
+        assert!(cloud.machine("m5.xlarge").is_some());
+        assert!(cloud.machine("quantum.42xlarge").is_none());
+    }
+
+    #[test]
+    fn provision_returns_delay_in_emr_band() {
+        let cloud = Cloud::aws_like();
+        let mut rng = Pcg32::new(1);
+        for _ in 0..50 {
+            let c = cloud.provision("m5.xlarge", 4, &mut rng);
+            assert!(
+                (3.5 * 60.0..20.0 * 60.0).contains(&c.provisioning_delay_s()),
+                "delay {}",
+                c.provisioning_delay_s()
+            );
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "unknown machine type")]
+    fn provision_unknown_type_panics() {
+        let cloud = Cloud::aws_like();
+        let mut rng = Pcg32::new(1);
+        cloud.provision("nope.large", 2, &mut rng);
+    }
+
+    #[test]
+    #[should_panic(expected = "empty cluster")]
+    fn provision_zero_panics() {
+        let cloud = Cloud::aws_like();
+        let mut rng = Pcg32::new(1);
+        cloud.provision("m5.xlarge", 0, &mut rng);
+    }
+
+    #[test]
+    fn cost_scales_linearly_in_nodes_and_time() {
+        let cloud = Cloud::aws_like();
+        let c1 = cloud.cost_usd("m5.xlarge", 1, 3600.0);
+        let c2 = cloud.cost_usd("m5.xlarge", 2, 3600.0);
+        let c4 = cloud.cost_usd("m5.xlarge", 1, 2.0 * 3600.0);
+        assert!((c2 - 2.0 * c1).abs() < 1e-9);
+        assert!((c4 - 2.0 * c1).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,82 @@
+//! Billing policies.
+//!
+//! EC2 Linux on-demand billing is per-second with a 60-second minimum per
+//! instance; EMR adds a small per-instance surcharge which we fold into the
+//! hourly price. The policy matters for the configurator: short jobs on
+//! huge clusters pay the minimum, which shifts the cheapest-configuration
+//! frontier exactly as Fig. 3's left-most points (largest scale-outs) show.
+
+/// How cluster time is turned into dollars.
+#[derive(Debug, Clone, PartialEq)]
+pub struct BillingPolicy {
+    /// Billing granularity in seconds (1 = per-second).
+    pub granularity_s: u64,
+    /// Minimum billed seconds per instance.
+    pub minimum_s: u64,
+}
+
+impl BillingPolicy {
+    /// Per-second billing with a minimum charge (EC2 Linux: 60 s minimum).
+    pub fn per_second_with_minimum(minimum_s: u64) -> Self {
+        BillingPolicy {
+            granularity_s: 1,
+            minimum_s,
+        }
+    }
+
+    /// Whole-hour billing (pre-2017 EC2; used in billing ablations).
+    pub fn hourly() -> Self {
+        BillingPolicy {
+            granularity_s: 3600,
+            minimum_s: 3600,
+        }
+    }
+
+    /// Billed seconds for a wall-clock duration.
+    pub fn billed_seconds(&self, seconds: f64) -> f64 {
+        let s = seconds.max(self.minimum_s as f64);
+        let g = self.granularity_s as f64;
+        (s / g).ceil() * g
+    }
+
+    /// Cost in USD for `count` instances at `price_usd_hour` held for
+    /// `seconds` of wall-clock time.
+    pub fn cost_usd(&self, price_usd_hour: f64, count: u32, seconds: f64) -> f64 {
+        self.billed_seconds(seconds) / 3600.0 * price_usd_hour * count as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn minimum_applies() {
+        let p = BillingPolicy::per_second_with_minimum(60);
+        assert_eq!(p.billed_seconds(10.0), 60.0);
+        assert_eq!(p.billed_seconds(61.5), 62.0);
+    }
+
+    #[test]
+    fn hourly_rounds_up() {
+        let p = BillingPolicy::hourly();
+        assert_eq!(p.billed_seconds(1.0), 3600.0);
+        assert_eq!(p.billed_seconds(3601.0), 7200.0);
+    }
+
+    #[test]
+    fn cost_formula() {
+        let p = BillingPolicy::per_second_with_minimum(60);
+        // 10 nodes × $0.36/h × 1800 s = $1.80
+        let c = p.cost_usd(0.36, 10, 1800.0);
+        assert!((c - 1.8).abs() < 1e-9);
+    }
+
+    #[test]
+    fn short_jobs_pay_minimum() {
+        let p = BillingPolicy::per_second_with_minimum(60);
+        let short = p.cost_usd(1.0, 100, 5.0);
+        let full = p.cost_usd(1.0, 100, 60.0);
+        assert_eq!(short, full);
+    }
+}

@@ -1,0 +1,358 @@
+//! The cluster configurator — the decision core of C3O (paper Fig. 2).
+//!
+//! Given a job (with dataset characteristics and parameters), a runtime
+//! target, and a trained prediction model, the configurator enumerates
+//! every candidate (machine type × scale-out) configuration the cloud
+//! offers, predicts each one's runtime, prices it under the cloud's
+//! billing policy, and returns the **cheapest configuration whose
+//! predicted runtime meets the target** (falling back to the fastest
+//! configuration when no candidate meets it). With no target it simply
+//! minimizes cost.
+//!
+//! It also implements the Fig. 3 analysis: per-algorithm cost-efficiency
+//! **ranking of machine types**, which the paper observes to be largely
+//! scale-out-invariant — enabling the two-stage heuristic of fixing the
+//! machine type first and then choosing the scale-out.
+
+use crate::cloud::Cloud;
+use crate::models::{ConfigQuery, RuntimeModel};
+use crate::workloads::{JobKind, JobSpec};
+use anyhow::Result;
+
+/// A user's request: the job plus constraints (paper Fig. 1 "job inputs:
+/// dataset, parameters, runtime target").
+#[derive(Debug, Clone)]
+pub struct JobRequest {
+    pub spec: JobSpec,
+    /// Runtime target in seconds (None = just minimize cost).
+    pub target_s: Option<f64>,
+}
+
+impl JobRequest {
+    pub fn new(spec: JobSpec) -> Self {
+        JobRequest {
+            spec,
+            target_s: None,
+        }
+    }
+
+    pub fn sort(data_gb: f64) -> Self {
+        Self::new(JobSpec::sort(data_gb))
+    }
+    pub fn grep(data_gb: f64, ratio: f64) -> Self {
+        Self::new(JobSpec::grep(data_gb, ratio))
+    }
+    pub fn sgd(data_gb: f64, iters: u32) -> Self {
+        Self::new(JobSpec::sgd(data_gb, iters))
+    }
+    pub fn kmeans(data_gb: f64, k: u32, conv: f64) -> Self {
+        Self::new(JobSpec::kmeans(data_gb, k, conv))
+    }
+    pub fn pagerank(graph_mb: f64, conv: f64) -> Self {
+        Self::new(JobSpec::pagerank(graph_mb, conv))
+    }
+
+    pub fn with_target_seconds(mut self, target: f64) -> Self {
+        assert!(target > 0.0);
+        self.target_s = Some(target);
+        self
+    }
+
+    pub fn kind(&self) -> JobKind {
+        self.spec.kind()
+    }
+}
+
+/// One evaluated candidate configuration.
+#[derive(Debug, Clone)]
+pub struct Candidate {
+    pub machine: String,
+    pub scaleout: u32,
+    pub predicted_runtime_s: f64,
+    pub predicted_cost_usd: f64,
+    pub meets_target: bool,
+}
+
+/// The configurator's decision.
+#[derive(Debug, Clone)]
+pub struct ClusterChoice {
+    pub machine_type: String,
+    pub node_count: u32,
+    pub predicted_runtime_s: f64,
+    pub expected_cost_usd: f64,
+    pub meets_target: bool,
+    /// Every candidate evaluated (sorted by cost), for reports/figures.
+    pub candidates: Vec<Candidate>,
+}
+
+/// Enumerates and scores candidate configurations.
+#[derive(Debug, Clone)]
+pub struct Configurator<'c> {
+    cloud: &'c Cloud,
+    scaleouts: Vec<u32>,
+    /// When set, only these machine types are candidates. The coordinator
+    /// restricts to machines *observed in the shared data*: black-box
+    /// models cannot be trusted to extrapolate across the memory-cliff to
+    /// machine types nobody has measured (the spill behaviour is sharply
+    /// non-linear in RAM-per-node).
+    machines: Option<Vec<String>>,
+}
+
+impl<'c> Configurator<'c> {
+    /// Candidates over the full catalog and scale-outs 2..=12.
+    pub fn new(cloud: &'c Cloud) -> Self {
+        Configurator {
+            cloud,
+            scaleouts: (2..=12).collect(),
+            machines: None,
+        }
+    }
+
+    /// Restrict the scale-out axis (ablations, tests).
+    pub fn with_scaleouts(mut self, scaleouts: Vec<u32>) -> Self {
+        assert!(!scaleouts.is_empty());
+        self.scaleouts = scaleouts;
+        self
+    }
+
+    /// Restrict the machine-type axis (e.g. to types with training data).
+    pub fn with_machines(mut self, machines: Vec<String>) -> Self {
+        assert!(!machines.is_empty());
+        self.machines = Some(machines);
+        self
+    }
+
+    /// All candidate (machine, scale-out) pairs.
+    pub fn enumerate(&self) -> Vec<(String, u32)> {
+        let mut out = Vec::new();
+        for m in self.cloud.machine_types() {
+            if let Some(allow) = &self.machines {
+                if !allow.contains(&m.name) {
+                    continue;
+                }
+            }
+            for &n in &self.scaleouts {
+                out.push((m.name.clone(), n));
+            }
+        }
+        out
+    }
+
+    /// Score every candidate with the model and pick per the policy.
+    /// Returns `None` only if the catalog is empty.
+    pub fn configure(
+        &self,
+        model: &mut dyn RuntimeModel,
+        request: &JobRequest,
+    ) -> Result<Option<ClusterChoice>> {
+        let pairs = self.enumerate();
+        if pairs.is_empty() {
+            return Ok(None);
+        }
+        let features = request.spec.job_features();
+        let queries: Vec<ConfigQuery> = pairs
+            .iter()
+            .map(|(m, n)| ConfigQuery {
+                machine: m.clone(),
+                scaleout: *n,
+                job_features: features.clone(),
+            })
+            .collect();
+        let runtimes = model.predict(self.cloud, &queries)?;
+
+        let mut candidates: Vec<Candidate> = pairs
+            .iter()
+            .zip(&runtimes)
+            .map(|((m, n), &t)| {
+                let cost = self.cloud.cost_usd(m, *n, t);
+                Candidate {
+                    machine: m.clone(),
+                    scaleout: *n,
+                    predicted_runtime_s: t,
+                    predicted_cost_usd: cost,
+                    meets_target: request.target_s.map_or(true, |tt| t <= tt),
+                }
+            })
+            .collect();
+        candidates.sort_by(|a, b| {
+            a.predicted_cost_usd
+                .partial_cmp(&b.predicted_cost_usd)
+                .unwrap()
+        });
+
+        // Policy: cheapest meeting the target; else fastest overall.
+        let best = candidates
+            .iter()
+            .find(|c| c.meets_target)
+            .or_else(|| {
+                candidates.iter().min_by(|a, b| {
+                    a.predicted_runtime_s
+                        .partial_cmp(&b.predicted_runtime_s)
+                        .unwrap()
+                })
+            })
+            .cloned()
+            .expect("candidates nonempty");
+
+        Ok(Some(ClusterChoice {
+            machine_type: best.machine.clone(),
+            node_count: best.scaleout,
+            predicted_runtime_s: best.predicted_runtime_s,
+            expected_cost_usd: best.predicted_cost_usd,
+            meets_target: best.meets_target,
+            candidates,
+        }))
+    }
+
+    /// Fig. 3 analysis: rank machine types by total predicted cost for a
+    /// job at a given scale-out (lower = more cost-efficient).
+    pub fn rank_machine_types(
+        &self,
+        model: &mut dyn RuntimeModel,
+        spec: &JobSpec,
+        scaleout: u32,
+    ) -> Result<Vec<(String, f64)>> {
+        let features = spec.job_features();
+        let queries: Vec<ConfigQuery> = self
+            .cloud
+            .machine_types()
+            .iter()
+            .map(|m| ConfigQuery {
+                machine: m.name.clone(),
+                scaleout,
+                job_features: features.clone(),
+            })
+            .collect();
+        let runtimes = model.predict(self.cloud, &queries)?;
+        let mut ranked: Vec<(String, f64)> = queries
+            .iter()
+            .zip(&runtimes)
+            .map(|(q, &t)| (q.machine.clone(), self.cloud.cost_usd(&q.machine, scaleout, t)))
+            .collect();
+        ranked.sort_by(|a, b| a.1.partial_cmp(&b.1).unwrap());
+        Ok(ranked)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::oracle::SimOracle;
+    use crate::workloads::JobKind;
+
+    #[test]
+    fn enumerate_covers_catalog_times_scaleouts() {
+        let cloud = Cloud::aws_like();
+        let cfg = Configurator::new(&cloud);
+        let pairs = cfg.enumerate();
+        assert_eq!(pairs.len(), cloud.machine_types().len() * 11);
+    }
+
+    #[test]
+    fn configure_with_oracle_meets_target() {
+        let cloud = Cloud::aws_like();
+        let cfg = Configurator::new(&cloud);
+        let mut oracle = SimOracle::deterministic(JobKind::Sort, 1);
+        let req = JobRequest::sort(15.0).with_target_seconds(400.0);
+        let choice = cfg.configure(&mut oracle, &req).unwrap().unwrap();
+        assert!(choice.meets_target);
+        assert!(choice.predicted_runtime_s <= 400.0);
+        // verify it is the cheapest among target-meeting candidates
+        for c in choice.candidates.iter().filter(|c| c.meets_target) {
+            assert!(choice.expected_cost_usd <= c.predicted_cost_usd + 1e-9);
+        }
+    }
+
+    #[test]
+    fn tighter_target_costs_more() {
+        let cloud = Cloud::aws_like();
+        let cfg = Configurator::new(&cloud);
+        let mut oracle = SimOracle::deterministic(JobKind::Sort, 1);
+        let loose = cfg
+            .configure(&mut oracle, &JobRequest::sort(15.0).with_target_seconds(2000.0))
+            .unwrap()
+            .unwrap();
+        let tight = cfg
+            .configure(&mut oracle, &JobRequest::sort(15.0).with_target_seconds(150.0))
+            .unwrap()
+            .unwrap();
+        assert!(
+            tight.expected_cost_usd >= loose.expected_cost_usd,
+            "tight {} loose {}",
+            tight.expected_cost_usd,
+            loose.expected_cost_usd
+        );
+    }
+
+    #[test]
+    fn impossible_target_falls_back_to_fastest() {
+        let cloud = Cloud::aws_like();
+        let cfg = Configurator::new(&cloud);
+        let mut oracle = SimOracle::deterministic(JobKind::Sort, 1);
+        let choice = cfg
+            .configure(&mut oracle, &JobRequest::sort(20.0).with_target_seconds(1.0))
+            .unwrap()
+            .unwrap();
+        assert!(!choice.meets_target);
+        // fastest candidate was chosen
+        let fastest = choice
+            .candidates
+            .iter()
+            .map(|c| c.predicted_runtime_s)
+            .fold(f64::INFINITY, f64::min);
+        assert!((choice.predicted_runtime_s - fastest).abs() < 1e-9);
+    }
+
+    #[test]
+    fn no_target_minimizes_cost() {
+        let cloud = Cloud::aws_like();
+        let cfg = Configurator::new(&cloud);
+        let mut oracle = SimOracle::deterministic(JobKind::Sort, 1);
+        let choice = cfg
+            .configure(&mut oracle, &JobRequest::sort(15.0))
+            .unwrap()
+            .unwrap();
+        let min_cost = choice
+            .candidates
+            .iter()
+            .map(|c| c.predicted_cost_usd)
+            .fold(f64::INFINITY, f64::min);
+        assert!((choice.expected_cost_usd - min_cost).abs() < 1e-9);
+    }
+
+    #[test]
+    fn ranking_is_scaleout_stable_for_cpu_bound_job() {
+        // Fig. 3's main conclusion: the machine-type cost-efficiency
+        // ranking stays static across scale-outs for a given algorithm.
+        let cloud = Cloud::aws_like();
+        let cfg = Configurator::new(&cloud);
+        let mut oracle = SimOracle::deterministic(JobKind::Sort, 1);
+        let spec = JobSpec::sort(15.0);
+        let names = |v: &[(String, f64)]| -> Vec<String> {
+            v.iter().map(|(m, _)| m.clone()).collect()
+        };
+        let r4 = names(&cfg.rank_machine_types(&mut oracle, &spec, 4).unwrap());
+        let r8 = names(&cfg.rank_machine_types(&mut oracle, &spec, 8).unwrap());
+        let r12 = names(&cfg.rank_machine_types(&mut oracle, &spec, 12).unwrap());
+        assert_eq!(r4, r8);
+        assert_eq!(r8, r12);
+    }
+
+    #[test]
+    fn memory_hungry_job_prefers_more_ram_at_low_scaleout() {
+        // Fig. 3's exception: SGD at scale-out 2 bottlenecks on RAM-lean
+        // types, so r5 beats c5 there.
+        let cloud = Cloud::aws_like();
+        let cfg = Configurator::new(&cloud);
+        let mut oracle = SimOracle::deterministic(JobKind::Sgd, 1);
+        let spec = JobSpec::sgd(30.0, 100);
+        let r2 = cfg.rank_machine_types(&mut oracle, &spec, 2).unwrap();
+        let pos = |v: &[(String, f64)], name: &str| {
+            v.iter().position(|(m, _)| m == name).unwrap()
+        };
+        assert!(
+            pos(&r2, "r5.xlarge") < pos(&r2, "c5.xlarge"),
+            "at n=2 r5.xlarge should rank above c5.xlarge: {r2:?}"
+        );
+    }
+}

@@ -1,0 +1,446 @@
+//! The collaboration coordinator — the C3O system runtime (paper Fig. 1/2).
+//!
+//! Owns the full loop for every participating organization:
+//!
+//! 1. a user submits a job (dataset characteristics, parameters, runtime
+//!    target);
+//! 2. the coordinator ensures a fresh prediction model for that job —
+//!    **dynamic model selection** (§V-C) retrains and re-selects between
+//!    the pessimistic and optimistic families whenever enough new shared
+//!    data arrived since the last training;
+//! 3. the **cluster configurator** picks the cheapest configuration
+//!    predicted to meet the target;
+//! 4. the **cloud access manager** provisions the cluster (paying the
+//!    EMR-like delay) and runs the job on the dataflow simulator;
+//! 5. the measured runtime is contributed back to the shared
+//!    **runtime data repository**, closing the collaborative loop.
+//!
+//! When a job's repository is too small to train on, the coordinator
+//! falls back to conservative overprovisioning (and the run it contributes
+//! shrinks that cold-start window for everyone). When a repository
+//! outgrows the kNN artifact capacity, it trains on a coverage-preserving
+//! sample (§III-C).
+//!
+//! [`session`] wraps the coordinator in a dedicated worker thread behind
+//! std channels — the event-loop deployment shape (tokio is not in the
+//! offline vendor set; a thread + channel loop is the same architecture).
+
+pub mod session;
+
+use crate::baselines::{ConfigSearch, NaiveMax};
+use crate::cloud::Cloud;
+use crate::configurator::{ClusterChoice, Configurator, JobRequest};
+use crate::models::oracle::SimOracle;
+use crate::models::selection::{select_and_train, SelectionReport};
+use crate::models::{BoundModel, ModelKind, Predictor};
+use crate::repo::sampling::sampled_repo;
+use crate::repo::{RuntimeDataRepo, RuntimeRecord};
+use crate::util::rng::Pcg32;
+use crate::workloads::JobKind;
+use anyhow::{Context, Result};
+use std::collections::HashMap;
+use std::path::Path;
+
+/// A participating organization (provenance + its usual submission niche).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Organization {
+    pub name: String,
+}
+
+impl Organization {
+    pub fn new(name: &str) -> Self {
+        Organization {
+            name: name.to_string(),
+        }
+    }
+}
+
+/// The outcome of one submitted job, end to end.
+#[derive(Debug, Clone)]
+pub struct JobOutcome {
+    pub org: String,
+    pub job: JobKind,
+    /// The configuration decision (None when the cold-start fallback ran).
+    pub choice: Option<ClusterChoice>,
+    pub machine: String,
+    pub scaleout: u32,
+    pub model_used: Option<ModelKind>,
+    pub predicted_runtime_s: f64,
+    pub actual_runtime_s: f64,
+    /// Cluster cost of the actual run (incl. provisioning).
+    pub actual_cost_usd: f64,
+    pub provisioning_s: f64,
+    pub target_s: Option<f64>,
+    pub met_target: bool,
+}
+
+impl JobOutcome {
+    /// Absolute percentage error of the runtime prediction (NaN for
+    /// fallback runs without a prediction).
+    pub fn prediction_error_pct(&self) -> f64 {
+        if self.predicted_runtime_s.is_nan() {
+            f64::NAN
+        } else {
+            100.0 * ((self.predicted_runtime_s - self.actual_runtime_s) / self.actual_runtime_s).abs()
+        }
+    }
+}
+
+/// Aggregate coordinator metrics.
+#[derive(Debug, Clone, Default)]
+pub struct Metrics {
+    pub submissions: u64,
+    pub fallbacks: u64,
+    pub retrains: u64,
+    pub targets_given: u64,
+    pub targets_met: u64,
+    pub total_cost_usd: f64,
+    /// Sum + count of absolute percentage errors (model-served runs).
+    pub ape_sum: f64,
+    pub ape_count: u64,
+}
+
+impl Metrics {
+    pub fn mean_prediction_error_pct(&self) -> f64 {
+        if self.ape_count == 0 {
+            f64::NAN
+        } else {
+            self.ape_sum / self.ape_count as f64
+        }
+    }
+
+    pub fn target_hit_rate(&self) -> f64 {
+        if self.targets_given == 0 {
+            f64::NAN
+        } else {
+            self.targets_met as f64 / self.targets_given as f64
+        }
+    }
+}
+
+struct JobModel {
+    trained_at_version: u64,
+    model: crate::models::TrainedModel,
+    report: SelectionReport,
+}
+
+/// The C3O coordinator.
+pub struct Coordinator {
+    cloud: Cloud,
+    predictor: Predictor,
+    repos: HashMap<JobKind, RuntimeDataRepo>,
+    models: HashMap<JobKind, JobModel>,
+    /// Retrain when this many records arrived since the last training.
+    pub retrain_every: u64,
+    /// Minimum records before the model path activates (cold-start
+    /// threshold).
+    pub min_records: usize,
+    /// CV folds for dynamic selection.
+    pub cv_folds: usize,
+    metrics: Metrics,
+    rng: Pcg32,
+}
+
+impl Coordinator {
+    /// Build a coordinator over a cloud and an artifacts directory.
+    pub fn new(cloud: Cloud, artifacts_dir: &Path, seed: u64) -> Result<Coordinator> {
+        let predictor = Predictor::new(artifacts_dir).context("loading PJRT predictor")?;
+        Ok(Coordinator {
+            cloud,
+            predictor,
+            repos: HashMap::new(),
+            models: HashMap::new(),
+            retrain_every: 12,
+            min_records: 12,
+            cv_folds: 4,
+            metrics: Metrics::default(),
+            rng: Pcg32::new(seed),
+        })
+    }
+
+    pub fn cloud(&self) -> &Cloud {
+        &self.cloud
+    }
+
+    pub fn metrics(&self) -> &Metrics {
+        &self.metrics
+    }
+
+    /// The shared repository for a job (empty if nothing shared yet).
+    pub fn repo(&self, job: JobKind) -> Option<&RuntimeDataRepo> {
+        self.repos.get(&job)
+    }
+
+    /// Latest selection report for a job's model, if trained.
+    pub fn selection_report(&self, job: JobKind) -> Option<&SelectionReport> {
+        self.models.get(&job).map(|m| &m.report)
+    }
+
+    /// Merge externally shared data (e.g. the public corpus) into the
+    /// job's repository — "users can contribute their generated runtime
+    /// data" (§III-A). Returns records actually added.
+    pub fn share(&mut self, repo: &RuntimeDataRepo) -> Result<usize> {
+        let entry = self
+            .repos
+            .entry(repo.job())
+            .or_insert_with(|| RuntimeDataRepo::new(repo.job()));
+        entry.merge(repo).map_err(anyhow::Error::msg)
+    }
+
+    /// Ensure the job's model is fresh; retrain via dynamic selection if
+    /// the repo advanced by `retrain_every` since the last training.
+    fn ensure_model(&mut self, job: JobKind) -> Result<Option<ModelKind>> {
+        let Some(repo) = self.repos.get(&job) else {
+            return Ok(None);
+        };
+        if repo.len() < self.min_records {
+            return Ok(None);
+        }
+        let version = repo.version();
+        let stale = match self.models.get(&job) {
+            None => true,
+            Some(m) => version.saturating_sub(m.trained_at_version) >= self.retrain_every,
+        };
+        if stale {
+            // cap training set at the kNN artifact capacity via coverage
+            // sampling (§III-C)
+            let cap = self.predictor.runtime().manifest().knn_train_rows;
+            let train_repo = if repo.len() > cap {
+                sampled_repo(repo, &self.cloud, cap)
+            } else {
+                repo.clone()
+            };
+            let (model, report) = select_and_train(
+                &mut self.predictor,
+                &self.cloud,
+                &train_repo,
+                self.cv_folds,
+                version,
+            )?;
+            self.models.insert(
+                job,
+                JobModel {
+                    trained_at_version: version,
+                    model,
+                    report,
+                },
+            );
+            self.metrics.retrains += 1;
+        }
+        Ok(self.models.get(&job).map(|m| m.model.kind))
+    }
+
+    /// Full submission loop for one job request.
+    pub fn submit(&mut self, org: &Organization, request: &JobRequest) -> Result<JobOutcome> {
+        let job = request.kind();
+        let model_used = self.ensure_model(job)?;
+
+        // 1) decide a configuration
+        let (machine, scaleout, predicted, choice) = match model_used {
+            Some(_) => {
+                let jm = self.models.get(&job).expect("ensured");
+                // candidates only over machine types present in the
+                // shared data: the models interpolate, they don't leap
+                // across unmeasured memory configurations
+                let observed: std::collections::BTreeSet<String> = self.repos[&job]
+                    .records()
+                    .iter()
+                    .map(|r| r.machine.clone())
+                    .collect();
+                let mut bound = BoundModel {
+                    predictor: &mut self.predictor,
+                    model: jm.model.clone(),
+                };
+                let configurator = Configurator::new(&self.cloud)
+                    .with_machines(observed.into_iter().collect());
+                let choice = configurator
+                    .configure(&mut bound, request)?
+                    .context("empty catalog")?;
+                (
+                    choice.machine_type.clone(),
+                    choice.node_count,
+                    choice.predicted_runtime_s,
+                    Some(choice),
+                )
+            }
+            None => {
+                // cold start: conservative overprovisioning
+                let mut oracle = SimOracle::new(job, self.rng.next_u64());
+                let out = NaiveMax::default().search(&self.cloud, &mut oracle, request)?;
+                self.metrics.fallbacks += 1;
+                (out.machine, out.scaleout, f64::NAN, None)
+            }
+        };
+
+        // 2) provision + run (the cloud access manager step)
+        let mut cluster = self
+            .cloud
+            .provision(&machine, scaleout, &mut self.rng);
+        cluster.mark_running();
+        let spec_stages = request.spec.stages();
+        let mt = self.cloud.machine(&machine).expect("catalog");
+        let sim = crate::sim::Simulator::default();
+        let mut run_rng = self.rng.fork(0xEC);
+        let actual = sim.run(mt, scaleout, &spec_stages, &mut run_rng).runtime_s;
+        cluster.record_busy(actual);
+        let held = cluster.terminate();
+        let cost = self.cloud.cost_usd(&machine, scaleout, held);
+
+        // 3) contribute the new record to the shared repository
+        let record = RuntimeRecord {
+            job,
+            org: org.name.clone(),
+            machine: machine.clone(),
+            scaleout,
+            job_features: request.spec.job_features(),
+            runtime_s: actual,
+        };
+        let entry = self
+            .repos
+            .entry(job)
+            .or_insert_with(|| RuntimeDataRepo::new(job));
+        // duplicate configs are fine at contribution time; merge-level
+        // dedup happens when repos are exchanged between parties
+        entry.contribute(record).map_err(anyhow::Error::msg)?;
+
+        // 4) metrics
+        let met_target = request.target_s.map_or(true, |t| actual <= t);
+        self.metrics.submissions += 1;
+        self.metrics.total_cost_usd += cost;
+        if request.target_s.is_some() {
+            self.metrics.targets_given += 1;
+            if met_target {
+                self.metrics.targets_met += 1;
+            }
+        }
+        let outcome = JobOutcome {
+            org: org.name.clone(),
+            job,
+            choice,
+            machine,
+            scaleout,
+            model_used,
+            predicted_runtime_s: predicted,
+            actual_runtime_s: actual,
+            actual_cost_usd: cost,
+            provisioning_s: cluster.provisioning_delay_s(),
+            target_s: request.target_s,
+            met_target,
+        };
+        if !outcome.prediction_error_pct().is_nan() {
+            self.metrics.ape_sum += outcome.prediction_error_pct();
+            self.metrics.ape_count += 1;
+        }
+        Ok(outcome)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::Runtime;
+    use crate::workloads::ExperimentGrid;
+
+    fn corpus_repo(cloud: &Cloud, kind: JobKind) -> RuntimeDataRepo {
+        let grid = ExperimentGrid {
+            experiments: ExperimentGrid::paper_table1()
+                .experiments
+                .into_iter()
+                .filter(|e| e.spec.kind() == kind)
+                .collect(),
+            repetitions: 3,
+        };
+        grid.execute(cloud, 21).repo_for(kind)
+    }
+
+    macro_rules! require_artifacts {
+        () => {{
+            let dir = Runtime::default_dir();
+            if !Runtime::artifacts_available(&dir) {
+                eprintln!("SKIP: artifacts not built");
+                return;
+            }
+            dir
+        }};
+    }
+
+    #[test]
+    fn cold_start_falls_back_then_model_takes_over() {
+        let dir = require_artifacts!();
+        let cloud = Cloud::aws_like();
+        let mut coord = Coordinator::new(cloud, &dir, 1).unwrap();
+        coord.min_records = 5;
+        coord.retrain_every = 5;
+        let org = Organization::new("lab-a");
+        // no shared data yet: fallback
+        let o1 = coord.submit(&org, &JobRequest::sort(12.0)).unwrap();
+        assert!(o1.model_used.is_none());
+        assert_eq!(coord.metrics().fallbacks, 1);
+        // a few more submissions build up the repo
+        for gb in [10.0, 14.0, 16.0, 18.0] {
+            coord.submit(&org, &JobRequest::sort(gb)).unwrap();
+        }
+        // now the model path must engage
+        let o = coord.submit(&org, &JobRequest::sort(15.0)).unwrap();
+        assert!(o.model_used.is_some(), "model should be trained now");
+        assert!(coord.metrics().retrains >= 1);
+        assert!(o.predicted_runtime_s > 0.0);
+    }
+
+    #[test]
+    fn shared_corpus_enables_first_submission_model() {
+        let dir = require_artifacts!();
+        let cloud = Cloud::aws_like();
+        let repo = corpus_repo(&cloud, JobKind::Grep);
+        let mut coord = Coordinator::new(cloud, &dir, 2).unwrap();
+        let added = coord.share(&repo).unwrap();
+        assert_eq!(added, 162);
+        let org = Organization::new("new-org");
+        let req = JobRequest::grep(15.0, 0.1).with_target_seconds(500.0);
+        let o = coord.submit(&org, &req).unwrap();
+        // the very first submission is model-served — the paper's pitch
+        assert!(o.model_used.is_some());
+        assert!(o.prediction_error_pct() < 60.0, "err {}", o.prediction_error_pct());
+        // and the new org's run landed in the shared repo
+        let repo_after = coord.repo(JobKind::Grep).unwrap();
+        assert_eq!(repo_after.len(), 163);
+        assert!(repo_after.organizations().contains("new-org"));
+    }
+
+    #[test]
+    fn retrain_cadence_respected() {
+        let dir = require_artifacts!();
+        let cloud = Cloud::aws_like();
+        let repo = corpus_repo(&cloud, JobKind::Sort);
+        let mut coord = Coordinator::new(cloud, &dir, 3).unwrap();
+        coord.retrain_every = 4;
+        coord.share(&repo).unwrap();
+        let org = Organization::new("o");
+        for i in 0..9 {
+            coord
+                .submit(&org, &JobRequest::sort(10.0 + i as f64))
+                .unwrap();
+        }
+        // initial train + retrains every 4 contributions: 1 + 2
+        assert_eq!(coord.metrics().retrains, 3, "{:?}", coord.metrics());
+    }
+
+    #[test]
+    fn metrics_accumulate() {
+        let dir = require_artifacts!();
+        let cloud = Cloud::aws_like();
+        let repo = corpus_repo(&cloud, JobKind::Sort);
+        let mut coord = Coordinator::new(cloud, &dir, 4).unwrap();
+        coord.share(&repo).unwrap();
+        let org = Organization::new("o");
+        let req = JobRequest::sort(15.0).with_target_seconds(2000.0);
+        let o = coord.submit(&org, &req).unwrap();
+        assert!(o.met_target, "loose target should be met");
+        let m = coord.metrics();
+        assert_eq!(m.submissions, 1);
+        assert_eq!(m.targets_given, 1);
+        assert_eq!(m.targets_met, 1);
+        assert!(m.total_cost_usd > 0.0);
+        assert!(m.mean_prediction_error_pct().is_finite());
+    }
+}

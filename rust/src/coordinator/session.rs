@@ -1,0 +1,207 @@
+//! Threaded coordinator session: the event-loop deployment shape.
+//!
+//! The PJRT client is not `Send`, so the coordinator lives on a dedicated
+//! worker thread that owns it outright; clients talk to it through std
+//! channels. This mirrors an async-runtime deployment (a single-threaded
+//! executor owning the device handles) without tokio, which the offline
+//! vendor set lacks.
+
+use crate::cloud::Cloud;
+use crate::configurator::JobRequest;
+use crate::coordinator::{Coordinator, JobOutcome, Metrics, Organization};
+use crate::repo::RuntimeDataRepo;
+use anyhow::{anyhow, Result};
+use std::path::PathBuf;
+use std::sync::mpsc;
+use std::thread::JoinHandle;
+
+/// Requests accepted by the session worker.
+pub enum Event {
+    /// Merge shared runtime data into the coordinator's repositories.
+    Share(RuntimeDataRepo),
+    /// Submit a job for an organization.
+    Submit(Organization, JobRequest),
+    /// Snapshot the metrics.
+    GetMetrics,
+    /// Stop the worker.
+    Shutdown,
+}
+
+/// Replies from the worker (one per event, in order).
+pub enum Reply {
+    Shared(Result<usize>),
+    Submitted(Box<Result<JobOutcome>>),
+    Metrics(Metrics),
+    ShuttingDown,
+}
+
+/// Handle to a running session.
+pub struct Session {
+    tx: mpsc::Sender<Event>,
+    rx: mpsc::Receiver<Reply>,
+    handle: Option<JoinHandle<()>>,
+}
+
+impl Session {
+    /// Spawn the worker thread. It constructs the coordinator (and the
+    /// PJRT client) on its own thread; construction errors surface on the
+    /// first request.
+    pub fn spawn(cloud: Cloud, artifacts_dir: PathBuf, seed: u64) -> Session {
+        let (tx, worker_rx) = mpsc::channel::<Event>();
+        let (worker_tx, rx) = mpsc::channel::<Reply>();
+        let handle = std::thread::spawn(move || {
+            let mut coord = match Coordinator::new(cloud, &artifacts_dir, seed) {
+                Ok(c) => c,
+                Err(e) => {
+                    // serve errors for every request until shutdown
+                    while let Ok(event) = worker_rx.recv() {
+                        let msg = format!("coordinator failed to start: {e:#}");
+                        let _ = match event {
+                            Event::Share(_) => worker_tx.send(Reply::Shared(Err(anyhow!(msg)))),
+                            Event::Submit(..) => worker_tx
+                                .send(Reply::Submitted(Box::new(Err(anyhow!(msg))))),
+                            Event::GetMetrics => {
+                                worker_tx.send(Reply::Metrics(Metrics::default()))
+                            }
+                            Event::Shutdown => {
+                                let _ = worker_tx.send(Reply::ShuttingDown);
+                                break;
+                            }
+                        };
+                    }
+                    return;
+                }
+            };
+            while let Ok(event) = worker_rx.recv() {
+                match event {
+                    Event::Share(repo) => {
+                        let _ = worker_tx.send(Reply::Shared(coord.share(&repo)));
+                    }
+                    Event::Submit(org, request) => {
+                        let _ = worker_tx
+                            .send(Reply::Submitted(Box::new(coord.submit(&org, &request))));
+                    }
+                    Event::GetMetrics => {
+                        let _ = worker_tx.send(Reply::Metrics(coord.metrics().clone()));
+                    }
+                    Event::Shutdown => {
+                        let _ = worker_tx.send(Reply::ShuttingDown);
+                        break;
+                    }
+                }
+            }
+        });
+        Session {
+            tx,
+            rx,
+            handle: Some(handle),
+        }
+    }
+
+    /// Share runtime data; blocks for the worker's reply.
+    pub fn share(&self, repo: RuntimeDataRepo) -> Result<usize> {
+        self.tx
+            .send(Event::Share(repo))
+            .map_err(|_| anyhow!("session worker gone"))?;
+        match self.rx.recv() {
+            Ok(Reply::Shared(r)) => r,
+            _ => Err(anyhow!("unexpected session reply")),
+        }
+    }
+
+    /// Submit a job; blocks for the outcome.
+    pub fn submit(&self, org: &Organization, request: JobRequest) -> Result<JobOutcome> {
+        self.tx
+            .send(Event::Submit(org.clone(), request))
+            .map_err(|_| anyhow!("session worker gone"))?;
+        match self.rx.recv() {
+            Ok(Reply::Submitted(r)) => *r,
+            _ => Err(anyhow!("unexpected session reply")),
+        }
+    }
+
+    /// Fetch a metrics snapshot.
+    pub fn metrics(&self) -> Result<Metrics> {
+        self.tx
+            .send(Event::GetMetrics)
+            .map_err(|_| anyhow!("session worker gone"))?;
+        match self.rx.recv() {
+            Ok(Reply::Metrics(m)) => Ok(m),
+            _ => Err(anyhow!("unexpected session reply")),
+        }
+    }
+
+    /// Graceful shutdown (also runs on drop).
+    pub fn shutdown(mut self) {
+        self.shutdown_inner();
+    }
+
+    fn shutdown_inner(&mut self) {
+        if let Some(handle) = self.handle.take() {
+            let _ = self.tx.send(Event::Shutdown);
+            // drain until the worker acknowledges or hangs up
+            loop {
+                match self.rx.recv() {
+                    Ok(Reply::ShuttingDown) | Err(_) => break,
+                    Ok(_) => continue,
+                }
+            }
+            let _ = handle.join();
+        }
+    }
+}
+
+impl Drop for Session {
+    fn drop(&mut self) {
+        self.shutdown_inner();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::Runtime;
+    use crate::workloads::{ExperimentGrid, JobKind};
+
+    #[test]
+    fn session_round_trip() {
+        let dir = Runtime::default_dir();
+        if !Runtime::artifacts_available(&dir) {
+            eprintln!("SKIP: artifacts not built");
+            return;
+        }
+        let cloud = Cloud::aws_like();
+        // share a corpus slice, then submit through the thread boundary
+        let grid = ExperimentGrid {
+            experiments: ExperimentGrid::paper_table1()
+                .experiments
+                .into_iter()
+                .filter(|e| e.spec.kind() == JobKind::Sort)
+                .collect(),
+            repetitions: 1,
+        };
+        let repo = grid.execute(&cloud, 5).repo_for(JobKind::Sort);
+
+        let session = Session::spawn(cloud, dir, 9);
+        let added = session.share(repo).unwrap();
+        assert_eq!(added, 126);
+        let org = Organization::new("threaded-org");
+        let outcome = session
+            .submit(&org, JobRequest::sort(15.0).with_target_seconds(1000.0))
+            .unwrap();
+        assert!(outcome.model_used.is_some());
+        let metrics = session.metrics().unwrap();
+        assert_eq!(metrics.submissions, 1);
+        session.shutdown();
+    }
+
+    #[test]
+    fn session_survives_bad_artifacts_dir() {
+        let cloud = Cloud::aws_like();
+        let session = Session::spawn(cloud, PathBuf::from("/nonexistent/artifacts"), 1);
+        let org = Organization::new("o");
+        let err = session.submit(&org, JobRequest::sort(10.0));
+        assert!(err.is_err());
+        session.shutdown();
+    }
+}

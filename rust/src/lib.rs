@@ -1,0 +1,55 @@
+//! # C3O — Collaborative Cluster Configuration Optimization
+//!
+//! A reproduction of *"Towards Collaborative Optimization of Cluster
+//! Configurations for Distributed Dataflow Jobs"* (Will, Bader, Thamsen —
+//! IEEE BigData 2020) as a three-layer Rust + JAX + Pallas system.
+//!
+//! The library lets many *organizations* share historical runtime data of
+//! distributed dataflow jobs (Sort, Grep, SGD, K-Means, PageRank on a
+//! simulated Spark/EMR substrate), trains black-box runtime prediction
+//! models on the shared corpus (a similarity-weighted kNN "pessimistic"
+//! model and a factorized "optimistic" model, both executed as AOT-compiled
+//! XLA artifacts via PJRT), and uses them to pick the cheapest cluster
+//! configuration (machine type × scale-out) that meets a runtime target —
+//! without any profiling runs.
+//!
+//! ## Layer map
+//!
+//! * **L3 (this crate)** — the coordination system: simulated cloud
+//!   ([`cloud`]), dataflow simulator ([`sim`]), workloads ([`workloads`]),
+//!   runtime-data repository ([`repo`]), prediction models ([`models`]),
+//!   cluster configurator ([`configurator`]), search/model baselines
+//!   ([`baselines`]), and the multi-org collaboration runtime
+//!   ([`coordinator`]).
+//! * **L2 (python/compile/model.py)** — JAX graphs for the prediction
+//!   models, AOT-lowered to HLO text in `artifacts/`.
+//! * **L1 (python/compile/kernels/knn.py)** — Pallas kernel for the
+//!   weighted distance matrix at the core of the pessimistic model.
+//!
+//! The [`runtime`] module loads the HLO artifacts via the PJRT C API and is
+//! the only bridge between L3 and L2/L1; Python never runs on the request
+//! path.
+
+pub mod baselines;
+pub mod cloud;
+pub mod configurator;
+pub mod coordinator;
+pub mod figures;
+pub mod models;
+pub mod repo;
+pub mod runtime;
+pub mod sim;
+pub mod util;
+pub mod workloads;
+
+/// Convenience re-exports of the most commonly used types.
+pub mod prelude {
+    pub use crate::cloud::{Cloud, MachineType};
+    pub use crate::configurator::{ClusterChoice, Configurator, JobRequest};
+    pub use crate::coordinator::{Coordinator, JobOutcome, Organization};
+    pub use crate::models::{ConfigQuery, ModelKind, Predictor, RuntimeModel, TrainedModel};
+    pub use crate::repo::{RuntimeDataRepo, RuntimeRecord};
+    pub use crate::sim::SimulationResult;
+    pub use crate::util::rng::Pcg32;
+    pub use crate::workloads::{ExperimentGrid, JobKind, JobSpec};
+}

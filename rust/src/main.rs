@@ -1,0 +1,284 @@
+//! c3o — command-line interface to the C3O system.
+//!
+//! ```text
+//! c3o corpus     [--seed N] [--out DIR]        generate the 930-run corpus CSVs
+//! c3o figures    [--seed N]                    regenerate Table I + Figs 3–7
+//! c3o table1 | fig3 | fig4 | fig5 | fig6 | fig7
+//! c3o configure  --job J [job args] [--target S] [--seed N]
+//! c3o e2e        [--jobs N] [--seed N]         collaborative end-to-end demo
+//! ```
+//!
+//! Argument parsing is hand-rolled (clap is not in the offline vendor
+//! set): `--key value` pairs after the subcommand.
+
+use c3o::cloud::Cloud;
+use c3o::configurator::JobRequest;
+use c3o::coordinator::{Coordinator, Organization};
+use c3o::figures;
+use c3o::runtime::Runtime;
+use c3o::workloads::{ExperimentGrid, JobKind, JobSpec};
+use std::collections::HashMap;
+use std::path::PathBuf;
+use std::process::ExitCode;
+
+/// Parsed `--key value` arguments.
+struct Args {
+    flags: HashMap<String, String>,
+}
+
+impl Args {
+    fn parse(argv: &[String]) -> Result<Args, String> {
+        let mut flags = HashMap::new();
+        let mut i = 0;
+        while i < argv.len() {
+            let a = &argv[i];
+            if let Some(key) = a.strip_prefix("--") {
+                let val = argv
+                    .get(i + 1)
+                    .ok_or_else(|| format!("--{key} needs a value"))?;
+                flags.insert(key.to_string(), val.clone());
+                i += 2;
+            } else {
+                return Err(format!("unexpected argument {a:?}"));
+            }
+        }
+        Ok(Args { flags })
+    }
+
+    fn get<T: std::str::FromStr>(&self, key: &str) -> Result<Option<T>, String> {
+        match self.flags.get(key) {
+            None => Ok(None),
+            Some(v) => v
+                .parse()
+                .map(Some)
+                .map_err(|_| format!("--{key}: cannot parse {v:?}")),
+        }
+    }
+
+    fn get_or<T: std::str::FromStr>(&self, key: &str, default: T) -> Result<T, String> {
+        Ok(self.get(key)?.unwrap_or(default))
+    }
+}
+
+const USAGE: &str = "c3o — collaborative cluster configuration (C3O reproduction)
+
+USAGE:
+  c3o corpus     [--seed N] [--out DIR]       generate the 930-run corpus CSVs
+  c3o figures    [--seed N]                   regenerate Table I + Figs 3-7
+  c3o table1|fig3|fig4|fig5|fig6|fig7 [--seed N]
+  c3o configure  --job sort     --data-gb X
+                 --job grep     --data-gb X --ratio R
+                 --job sgd      --data-gb X --iters I
+                 --job kmeans   --data-gb X --k K [--conv C]
+                 --job pagerank --graph-mb X [--conv C]
+                 [--target SECONDS] [--seed N]
+  c3o e2e        [--jobs N] [--seed N]        collaborative end-to-end demo
+";
+
+fn main() -> ExitCode {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let Some(cmd) = argv.first() else {
+        eprint!("{USAGE}");
+        return ExitCode::FAILURE;
+    };
+    match run(cmd, &argv[1..]) {
+        Ok(()) => ExitCode::SUCCESS,
+        Err(e) => {
+            eprintln!("error: {e}");
+            ExitCode::FAILURE
+        }
+    }
+}
+
+fn run(cmd: &str, rest: &[String]) -> Result<(), String> {
+    let args = Args::parse(rest)?;
+    let seed: u64 = args.get_or("seed", 42)?;
+    let cloud = Cloud::aws_like();
+    match cmd {
+        "corpus" => cmd_corpus(&cloud, &args, seed),
+        "figures" => {
+            for fig in figures::all(&cloud, seed) {
+                println!("{}", fig.render());
+            }
+            Ok(())
+        }
+        "table1" => {
+            println!("{}", figures::table1(&cloud, seed).render());
+            Ok(())
+        }
+        "fig3" => {
+            println!("{}", figures::fig3(&cloud, seed).render());
+            Ok(())
+        }
+        "fig4" => {
+            println!("{}", figures::fig4(&cloud, seed).render());
+            Ok(())
+        }
+        "fig5" => {
+            println!("{}", figures::fig5(&cloud, seed).render());
+            Ok(())
+        }
+        "fig6" => {
+            println!("{}", figures::fig6(&cloud, seed).render());
+            Ok(())
+        }
+        "fig7" => {
+            println!("{}", figures::fig7(&cloud, seed).render());
+            Ok(())
+        }
+        "configure" => cmd_configure(&cloud, &args, seed),
+        "e2e" => cmd_e2e(&cloud, &args, seed),
+        "help" | "--help" | "-h" => {
+            print!("{USAGE}");
+            Ok(())
+        }
+        other => Err(format!("unknown command {other:?}\n{USAGE}")),
+    }
+}
+
+fn cmd_corpus(cloud: &Cloud, args: &Args, seed: u64) -> Result<(), String> {
+    let out: PathBuf = PathBuf::from(args.get_or("out", "data".to_string())?);
+    eprintln!("executing the 930-experiment grid (5 repetitions each)...");
+    let grid = ExperimentGrid::paper_table1();
+    let corpus = grid.execute(cloud, seed);
+    for kind in JobKind::all() {
+        let repo = corpus.repo_for(kind);
+        let path = out.join(format!("{}.csv", kind.name()));
+        repo.save(&path).map_err(|e| e.to_string())?;
+        println!("wrote {:>4} records  {}", repo.len(), path.display());
+    }
+    Ok(())
+}
+
+fn spec_from_args(args: &Args) -> Result<JobSpec, String> {
+    let job: String = args
+        .get::<String>("job")?
+        .ok_or("--job is required".to_string())?;
+    let kind = JobKind::parse(&job).ok_or(format!("unknown job {job:?}"))?;
+    Ok(match kind {
+        JobKind::Sort => JobSpec::sort(args.get_or("data-gb", 15.0)?),
+        JobKind::Grep => JobSpec::grep(
+            args.get_or("data-gb", 15.0)?,
+            args.get_or("ratio", 0.1)?,
+        ),
+        JobKind::Sgd => JobSpec::sgd(
+            args.get_or("data-gb", 20.0)?,
+            args.get_or("iters", 100)?,
+        ),
+        JobKind::KMeans => JobSpec::kmeans(
+            args.get_or("data-gb", 15.0)?,
+            args.get_or("k", 5)?,
+            args.get_or("conv", 0.001)?,
+        ),
+        JobKind::PageRank => JobSpec::pagerank(
+            args.get_or("graph-mb", 330.0)?,
+            args.get_or("conv", 0.001)?,
+        ),
+    })
+}
+
+fn cmd_configure(cloud: &Cloud, args: &Args, seed: u64) -> Result<(), String> {
+    let spec = spec_from_args(args)?;
+    let mut request = JobRequest::new(spec.clone());
+    if let Some(t) = args.get::<f64>("target")? {
+        request = request.with_target_seconds(t);
+    }
+    let dir = Runtime::default_dir();
+    if !Runtime::artifacts_available(&dir) {
+        return Err("artifacts not built — run `make artifacts` first".into());
+    }
+
+    eprintln!("building shared corpus for {}...", spec.kind().name());
+    let grid = ExperimentGrid {
+        experiments: ExperimentGrid::paper_table1()
+            .experiments
+            .into_iter()
+            .filter(|e| e.spec.kind() == spec.kind())
+            .collect(),
+        repetitions: 5,
+    };
+    let repo = grid.execute(cloud, seed).repo_for(spec.kind());
+
+    let mut coord = Coordinator::new(cloud.clone(), &dir, seed).map_err(|e| format!("{e:#}"))?;
+    coord.share(&repo).map_err(|e| format!("{e:#}"))?;
+    let org = Organization::new("cli-user");
+    let outcome = coord.submit(&org, &request).map_err(|e| format!("{e:#}"))?;
+
+    println!("job:        {} {:?}", spec.kind().name(), spec.job_features());
+    if let Some(t) = request.target_s {
+        println!("target:     {t:.0} s");
+    }
+    if let Some(report) = coord.selection_report(spec.kind()) {
+        println!(
+            "model:      {} (CV MAPE: pessimistic {:.1}%, optimistic {:.1}%)",
+            report.chosen.name(),
+            report.mape_of(c3o::models::ModelKind::Pessimistic),
+            report.mape_of(c3o::models::ModelKind::Optimistic),
+        );
+    }
+    println!("choice:     {} x{}", outcome.machine, outcome.scaleout);
+    println!("predicted:  {:.1} s", outcome.predicted_runtime_s);
+    println!(
+        "actual:     {:.1} s  (error {:.1}%)",
+        outcome.actual_runtime_s,
+        outcome.prediction_error_pct()
+    );
+    println!(
+        "cost:       ${:.3} (incl. {:.0}s provisioning)",
+        outcome.actual_cost_usd, outcome.provisioning_s
+    );
+    println!("met target: {}", outcome.met_target);
+    Ok(())
+}
+
+fn cmd_e2e(cloud: &Cloud, args: &Args, seed: u64) -> Result<(), String> {
+    let jobs: usize = args.get_or("jobs", 10)?;
+    let dir = Runtime::default_dir();
+    if !Runtime::artifacts_available(&dir) {
+        return Err("artifacts not built — run `make artifacts` first".into());
+    }
+    eprintln!("seeding shared repositories from the 930-run corpus...");
+    let corpus = ExperimentGrid::paper_table1().execute(cloud, seed);
+    let mut coord = Coordinator::new(cloud.clone(), &dir, seed).map_err(|e| format!("{e:#}"))?;
+    for kind in JobKind::all() {
+        coord
+            .share(&corpus.repo_for(kind))
+            .map_err(|e| format!("{e:#}"))?;
+    }
+    let org = Organization::new("new-org");
+    let requests = [
+        JobRequest::sort(17.0).with_target_seconds(400.0),
+        JobRequest::grep(12.0, 0.2).with_target_seconds(300.0),
+        JobRequest::sgd(25.0, 80).with_target_seconds(900.0),
+        JobRequest::kmeans(18.0, 7, 0.001).with_target_seconds(1200.0),
+        JobRequest::pagerank(400.0, 0.0005).with_target_seconds(600.0),
+    ];
+    println!(
+        "{:<10} {:>12} {:>5} {:>10} {:>10} {:>7} {:>7}",
+        "job", "machine", "n", "pred_s", "actual_s", "err%", "met"
+    );
+    for i in 0..jobs {
+        let req = requests[i % requests.len()].clone();
+        let o = coord.submit(&org, &req).map_err(|e| format!("{e:#}"))?;
+        println!(
+            "{:<10} {:>12} {:>5} {:>10.1} {:>10.1} {:>7.1} {:>7}",
+            o.job.name(),
+            o.machine,
+            o.scaleout,
+            o.predicted_runtime_s,
+            o.actual_runtime_s,
+            o.prediction_error_pct(),
+            o.met_target
+        );
+    }
+    let m = coord.metrics();
+    println!(
+        "\nsubmissions {}  retrains {}  target hit rate {:.0}%  mean prediction error {:.1}%  total cost ${:.2}",
+        m.submissions,
+        m.retrains,
+        100.0 * m.target_hit_rate(),
+        m.mean_prediction_error_pct(),
+        m.total_cost_usd
+    );
+    Ok(())
+}

@@ -1,0 +1,711 @@
+//! Runtime prediction models (paper §V).
+//!
+//! Two model families over collaboratively shared runtime data:
+//!
+//! * **Pessimistic** ([`ModelKind::Pessimistic`]) — similarity-based:
+//!   predictions are inverse-distance-weighted means of the most similar
+//!   historical executions, with each feature's distance scaled by its
+//!   correlation with the runtime (§V-A). Strong interpolation; robust to
+//!   feature interdependence; needs nearby training points.
+//! * **Optimistic** ([`ModelKind::Optimistic`]) — factorized: assumes
+//!   features influence runtime independently (§V-B), learning one small
+//!   basis (linear/log/reciprocal) per feature in log-runtime space.
+//!   Parameter count linear in feature count, so it trains on sparse data
+//!   and extrapolates (e.g. to unseen scale-outs).
+//!
+//! Both models execute as AOT-compiled XLA artifacts through
+//! [`crate::runtime::Runtime`]: the pessimistic hot path is the Pallas
+//! distance kernel (L1); the optimistic training step is a fused
+//! Adam-on-MSE graph (L2). [`native`] holds bit-compatible pure-Rust
+//! re-implementations used for differential testing and as a fallback,
+//! and [`selection`] implements the paper's dynamic cross-validation
+//! model choice (§V-C).
+
+pub mod native;
+pub mod oracle;
+pub mod selection;
+
+use crate::cloud::Cloud;
+use crate::repo::featurize::{FeatureSpace, Featurizer};
+use crate::repo::RuntimeDataRepo;
+use crate::runtime::Runtime;
+use crate::util::matrix::MatF32;
+use crate::util::rng::Pcg32;
+use crate::util::stats;
+use anyhow::{bail, Context, Result};
+use std::path::Path;
+
+/// Which model family (paper §V-A vs §V-B).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum ModelKind {
+    Pessimistic,
+    Optimistic,
+}
+
+impl ModelKind {
+    pub fn all() -> [ModelKind; 2] {
+        [ModelKind::Pessimistic, ModelKind::Optimistic]
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            ModelKind::Pessimistic => "pessimistic",
+            ModelKind::Optimistic => "optimistic",
+        }
+    }
+}
+
+/// A prediction query: one candidate cluster configuration for a job.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ConfigQuery {
+    pub machine: String,
+    pub scaleout: u32,
+    /// Job features aligned with `JobKind::feature_names()`.
+    pub job_features: Vec<f64>,
+}
+
+/// Anything that can predict runtimes for configuration queries.
+/// Implemented by [`Predictor`]+[`TrainedModel`] (the PJRT path), the
+/// [`native`] fallbacks, and the simulator-backed [`oracle::SimOracle`]
+/// used to measure regret in benches.
+pub trait RuntimeModel {
+    /// Predicted runtime in seconds for each query.
+    fn predict(&mut self, cloud: &Cloud, queries: &[ConfigQuery]) -> Result<Vec<f64>>;
+}
+
+/// Trained state for either model family.
+#[derive(Debug, Clone)]
+pub enum ModelState {
+    Knn {
+        space: FeatureSpace,
+        /// [KNN_T × F] padded standardized training features.
+        train_x: MatF32,
+        train_y: Vec<f32>,
+        valid: Vec<f32>,
+        /// [F] per-feature |correlation with log-runtime| (padded cols 0).
+        weights: Vec<f32>,
+    },
+    Opt {
+        /// Per-column min and span for the [0,1] scaling the basis expects.
+        mins: Vec<f32>,
+        spans: Vec<f32>,
+        y_mean: f32,
+        y_sd: f32,
+        /// [OPT_PARAMS] trained coefficients.
+        params: Vec<f32>,
+        /// Final training loss (observability).
+        final_loss: f32,
+        /// Column names (diagnostics).
+        names: Vec<String>,
+    },
+}
+
+/// A trained model, ready to answer [`ConfigQuery`]s through a
+/// [`Predictor`].
+#[derive(Debug, Clone)]
+pub struct TrainedModel {
+    pub kind: ModelKind,
+    pub state: ModelState,
+    /// Globally unique id, used to key the predictor's device-resident
+    /// buffer cache (§Perf).
+    pub id: u64,
+}
+
+fn next_model_id() -> u64 {
+    use std::sync::atomic::{AtomicU64, Ordering};
+    static NEXT: AtomicU64 = AtomicU64::new(1);
+    NEXT.fetch_add(1, Ordering::Relaxed)
+}
+
+/// Training hyper-parameters for the optimistic model.
+#[derive(Debug, Clone)]
+pub struct OptTrainConfig {
+    pub max_steps: u32,
+    pub lr: f32,
+    /// Stop when the best loss hasn't improved by `tol` for `patience`
+    /// steps.
+    pub patience: u32,
+    pub tol: f32,
+    pub shuffle_seed: u64,
+}
+
+impl Default for OptTrainConfig {
+    fn default() -> Self {
+        OptTrainConfig {
+            max_steps: 600,
+            lr: 0.05,
+            patience: 80,
+            tol: 1e-5,
+            shuffle_seed: 0xC30,
+        }
+    }
+}
+
+/// Device-resident kNN training set (constant across predict calls for
+/// a given trained model — uploading it once is the single biggest
+/// §Perf win on the predict path).
+struct KnnDeviceCache {
+    model_id: u64,
+    train_x: xla::PjRtBuffer,
+    train_y: xla::PjRtBuffer,
+    valid: xla::PjRtBuffer,
+    weights: xla::PjRtBuffer,
+}
+
+/// Device-resident optimistic parameters.
+struct OptDeviceCache {
+    model_id: u64,
+    params: xla::PjRtBuffer,
+}
+
+/// The PJRT-backed predictor: owns the runtime, trains and serves both
+/// model families.
+pub struct Predictor {
+    runtime: Runtime,
+    knn_cache: Option<KnnDeviceCache>,
+    opt_cache: Option<OptDeviceCache>,
+}
+
+impl Predictor {
+    /// Load from an artifacts directory and pre-compile all executables.
+    pub fn new(artifacts_dir: &Path) -> Result<Predictor> {
+        let mut runtime = Runtime::load(artifacts_dir)?;
+        runtime.warmup()?;
+        Ok(Predictor {
+            runtime,
+            knn_cache: None,
+            opt_cache: None,
+        })
+    }
+
+    /// Load from the default artifacts directory.
+    pub fn from_default_artifacts() -> Result<Predictor> {
+        Predictor::new(&Runtime::default_dir())
+    }
+
+    pub fn runtime(&self) -> &Runtime {
+        &self.runtime
+    }
+
+    /// Train a model of the requested kind on a shared repository.
+    pub fn train(
+        &mut self,
+        cloud: &Cloud,
+        repo: &RuntimeDataRepo,
+        kind: ModelKind,
+    ) -> Result<TrainedModel> {
+        match kind {
+            ModelKind::Pessimistic => self.train_pessimistic(cloud, repo),
+            ModelKind::Optimistic => {
+                self.train_optimistic(cloud, repo, &OptTrainConfig::default())
+            }
+        }
+    }
+
+    // --- pessimistic -------------------------------------------------------
+
+    /// "Training" the pessimistic model = standardizing the shared data
+    /// and learning per-feature relevance weights (|Pearson correlation|
+    /// of each feature with log-runtime — the paper's "scaling each
+    /// feature's relative distance by that feature's correlation with the
+    /// runtime").
+    pub fn train_pessimistic(
+        &mut self,
+        cloud: &Cloud,
+        repo: &RuntimeDataRepo,
+    ) -> Result<TrainedModel> {
+        let man = self.runtime.manifest().clone();
+        if repo.is_empty() {
+            bail!("cannot train on an empty repository");
+        }
+        if repo.len() > man.knn_train_rows {
+            bail!(
+                "repo has {} records, artifact supports {} (use repo::sampling)",
+                repo.len(),
+                man.knn_train_rows
+            );
+        }
+        let featurizer = Featurizer::new(cloud);
+        let (space, x, y) = featurizer.fit(repo);
+        let d = space.dim();
+        if d > man.feature_dim {
+            bail!("feature dim {d} exceeds artifact feature dim {}", man.feature_dim);
+        }
+
+        // weights: |corr(feature, y)| over the standardized data
+        let mut weights = vec![0.0f32; man.feature_dim];
+        let yf: Vec<f64> = y.iter().map(|&v| v as f64).collect();
+        for c in 0..d {
+            let col: Vec<f64> = (0..x.rows).map(|r| x.at(r, c) as f64).collect();
+            let corr = stats::pearson(&col, &yf);
+            weights[c] = if corr.is_finite() { corr.abs() as f32 } else { 0.0 };
+        }
+        // Floor so no observed feature is fully ignored (a zero-corr
+        // feature can still matter jointly).
+        for w in weights.iter_mut().take(d) {
+            *w = w.max(0.05);
+        }
+
+        // pad rows to KNN_T and cols to F
+        let mut train_x = MatF32::zeros(man.knn_train_rows, man.feature_dim);
+        let mut train_y = vec![0.0f32; man.knn_train_rows];
+        let mut valid = vec![0.0f32; man.knn_train_rows];
+        for r in 0..x.rows {
+            train_x.row_mut(r)[..d].copy_from_slice(x.row(r));
+            train_y[r] = y[r];
+            valid[r] = 1.0;
+        }
+
+        Ok(TrainedModel {
+            kind: ModelKind::Pessimistic,
+            id: next_model_id(),
+            state: ModelState::Knn {
+                space,
+                train_x,
+                train_y,
+                valid,
+                weights,
+            },
+        })
+    }
+
+    // --- optimistic --------------------------------------------------------
+
+    /// Train the factorized model with mini-batch Adam, the epoch loop in
+    /// Rust, each step one PJRT execution of the fused train graph.
+    pub fn train_optimistic(
+        &mut self,
+        cloud: &Cloud,
+        repo: &RuntimeDataRepo,
+        cfg: &OptTrainConfig,
+    ) -> Result<TrainedModel> {
+        let man = self.runtime.manifest().clone();
+        if repo.is_empty() {
+            bail!("cannot train on an empty repository");
+        }
+        let featurizer = Featurizer::new(cloud);
+        let raw: Vec<Vec<f32>> = repo
+            .records()
+            .iter()
+            .map(|r| featurizer.raw_row(&r.machine, r.scaleout, &r.job_features))
+            .collect();
+        let d = raw[0].len();
+        if d > man.feature_dim {
+            bail!("feature dim {d} exceeds artifact feature dim {}", man.feature_dim);
+        }
+        let n = raw.len();
+
+        // min-max scaling to [0, 1] (the basis domain)
+        let mut mins = vec![f32::INFINITY; man.feature_dim];
+        let mut maxs = vec![f32::NEG_INFINITY; man.feature_dim];
+        for row in &raw {
+            for c in 0..d {
+                mins[c] = mins[c].min(row[c]);
+                maxs[c] = maxs[c].max(row[c]);
+            }
+        }
+        let mut spans = vec![1.0f32; man.feature_dim];
+        for c in 0..d {
+            spans[c] = (maxs[c] - mins[c]).max(1e-6);
+        }
+        for c in d..man.feature_dim {
+            mins[c] = 0.0;
+            spans[c] = 1.0;
+        }
+
+        // standardized log target
+        let log_y: Vec<f32> = repo.records().iter().map(|r| r.runtime_s.ln() as f32).collect();
+        let y_mean = log_y.iter().sum::<f32>() / n as f32;
+        let y_sd = (log_y.iter().map(|v| (v - y_mean).powi(2)).sum::<f32>() / n as f32)
+            .sqrt()
+            .max(1e-6);
+
+        // scaled full dataset
+        let mut x01 = MatF32::zeros(n, man.feature_dim);
+        let mut y = vec![0.0f32; n];
+        for (r, row) in raw.iter().enumerate() {
+            for c in 0..d {
+                x01.set(r, c, (row[c] - mins[c]) / spans[c]);
+            }
+            y[r] = (log_y[r] - y_mean) / y_sd;
+        }
+
+        // mini-batch loop
+        let b = man.opt_batch;
+        let mut params = vec![0.0f32; man.opt_params];
+        let mut m = vec![0.0f32; man.opt_params];
+        let mut v = vec![0.0f32; man.opt_params];
+        let mut rng = Pcg32::new(cfg.shuffle_seed);
+        let mut order: Vec<usize> = (0..n).collect();
+        let mut best = f32::INFINITY;
+        let mut since_best = 0u32;
+        let mut final_loss = f32::INFINITY;
+        let mut step = 0u32;
+        'train: loop {
+            rng.shuffle(&mut order);
+            for chunk in order.chunks(b) {
+                step += 1;
+                if step > cfg.max_steps {
+                    break 'train;
+                }
+                let mut bx = MatF32::zeros(b, man.feature_dim);
+                let mut by = vec![0.0f32; b];
+                let mut mask = vec![0.0f32; b];
+                for (i, &r) in chunk.iter().enumerate() {
+                    bx.row_mut(i).copy_from_slice(x01.row(r));
+                    by[i] = y[r];
+                    mask[i] = 1.0;
+                }
+                let out = self.runtime.execute(
+                    "optimistic_train",
+                    &[
+                        Runtime::lit_vec(&params),
+                        Runtime::lit_vec(&m),
+                        Runtime::lit_vec(&v),
+                        Runtime::lit_scalar(step as f32),
+                        Runtime::lit_mat(&bx)?,
+                        Runtime::lit_vec(&by),
+                        Runtime::lit_vec(&mask),
+                        Runtime::lit_scalar(cfg.lr),
+                    ],
+                )?;
+                params = Runtime::vec_from(&out[0])?;
+                m = Runtime::vec_from(&out[1])?;
+                v = Runtime::vec_from(&out[2])?;
+                final_loss = Runtime::vec_from(&out[3])?[0];
+                if final_loss < best - cfg.tol {
+                    best = final_loss;
+                    since_best = 0;
+                } else {
+                    since_best += 1;
+                    if since_best >= cfg.patience {
+                        break 'train;
+                    }
+                }
+            }
+        }
+
+        let names = {
+            let mut names: Vec<String> = repo
+                .job()
+                .feature_names()
+                .iter()
+                .map(|s| s.to_string())
+                .collect();
+            names.extend(
+                crate::repo::featurize::CLUSTER_FEATURES
+                    .iter()
+                    .map(|s| s.to_string()),
+            );
+            names
+        };
+
+        Ok(TrainedModel {
+            kind: ModelKind::Optimistic,
+            id: next_model_id(),
+            state: ModelState::Opt {
+                mins,
+                spans,
+                y_mean,
+                y_sd,
+                params,
+                final_loss,
+                names,
+            },
+        })
+    }
+
+    // --- prediction --------------------------------------------------------
+
+    /// Predict runtimes (seconds) for a batch of queries with a trained
+    /// model. Queries are chunked to the artifact batch sizes. The
+    /// model's constant inputs (kNN training set / optimistic parameters)
+    /// are uploaded to the device once and cached by model id (§Perf).
+    pub fn predict(
+        &mut self,
+        model: &TrainedModel,
+        cloud: &Cloud,
+        queries: &[ConfigQuery],
+    ) -> Result<Vec<f64>> {
+        match &model.state {
+            ModelState::Knn {
+                space,
+                train_x,
+                train_y,
+                valid,
+                weights,
+            } => {
+                // refresh the device cache if a different model is bound
+                if self.knn_cache.as_ref().map(|c| c.model_id) != Some(model.id) {
+                    self.knn_cache = Some(KnnDeviceCache {
+                        model_id: model.id,
+                        train_x: self.runtime.buffer_mat(train_x)?,
+                        train_y: self.runtime.buffer_vec(train_y)?,
+                        valid: self.runtime.buffer_vec(valid)?,
+                        weights: self.runtime.buffer_vec(weights)?,
+                    });
+                }
+                self.predict_knn(cloud, space, queries)
+            }
+            ModelState::Opt {
+                mins,
+                spans,
+                y_mean,
+                y_sd,
+                params,
+                ..
+            } => {
+                if self.opt_cache.as_ref().map(|c| c.model_id) != Some(model.id) {
+                    self.opt_cache = Some(OptDeviceCache {
+                        model_id: model.id,
+                        params: self.runtime.buffer_vec(params)?,
+                    });
+                }
+                self.predict_opt(cloud, mins, spans, *y_mean, *y_sd, queries)
+            }
+        }
+    }
+
+    fn predict_knn(
+        &mut self,
+        cloud: &Cloud,
+        space: &FeatureSpace,
+        queries: &[ConfigQuery],
+    ) -> Result<Vec<f64>> {
+        let man = self.runtime.manifest().clone();
+        let featurizer = Featurizer::new(cloud);
+        let d = space.dim();
+        let mut out = Vec::with_capacity(queries.len());
+        // reuse one query-staging matrix across chunks
+        let mut q = MatF32::zeros(man.knn_query_rows, man.feature_dim);
+        for chunk in queries.chunks(man.knn_query_rows) {
+            q.data.fill(0.0);
+            for (i, query) in chunk.iter().enumerate() {
+                let row =
+                    featurizer.transform(space, &query.machine, query.scaleout, &query.job_features);
+                q.row_mut(i)[..d].copy_from_slice(&row);
+            }
+            let qbuf = self.runtime.buffer_mat(&q)?;
+            let cache = self.knn_cache.as_ref().expect("cache ensured by predict");
+            let inputs = [
+                &cache.train_x,
+                &cache.train_y,
+                &cache.valid,
+                &cache.weights,
+                &qbuf,
+            ];
+            let result = self
+                .runtime
+                .execute_buffers("knn_predict", &inputs)
+                .context("knn_predict execution")?;
+            let preds = Runtime::vec_from(&result[0])?;
+            for (i, _) in chunk.iter().enumerate() {
+                out.push(space.unscale_runtime(preds[i]));
+            }
+        }
+        Ok(out)
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn predict_opt(
+        &mut self,
+        cloud: &Cloud,
+        mins: &[f32],
+        spans: &[f32],
+        y_mean: f32,
+        y_sd: f32,
+        queries: &[ConfigQuery],
+    ) -> Result<Vec<f64>> {
+        let man = self.runtime.manifest().clone();
+        let featurizer = Featurizer::new(cloud);
+        let mut out = Vec::with_capacity(queries.len());
+        let mut x = MatF32::zeros(man.opt_batch, man.feature_dim);
+        for chunk in queries.chunks(man.opt_batch) {
+            x.data.fill(0.0);
+            for (i, query) in chunk.iter().enumerate() {
+                let raw = featurizer.raw_row(&query.machine, query.scaleout, &query.job_features);
+                for (c, &rv) in raw.iter().enumerate() {
+                    // clamp below 0 so the reciprocal basis stays finite;
+                    // above 1 extrapolation is intentional
+                    x.set(i, c, (((rv - mins[c]) / spans[c]).max(-0.05)).min(5.0));
+                }
+            }
+            let xbuf = self.runtime.buffer_mat(&x)?;
+            let cache = self.opt_cache.as_ref().expect("cache ensured by predict");
+            let inputs = [&cache.params, &xbuf];
+            let result = self
+                .runtime
+                .execute_buffers("optimistic_predict", &inputs)
+                .context("optimistic_predict execution")?;
+            let preds = Runtime::vec_from(&result[0])?;
+            for (i, _) in chunk.iter().enumerate() {
+                out.push(((preds[i] * y_sd + y_mean) as f64).exp());
+            }
+        }
+        Ok(out)
+    }
+}
+
+/// A `(Predictor, TrainedModel)` pair as a [`RuntimeModel`].
+pub struct BoundModel<'p> {
+    pub predictor: &'p mut Predictor,
+    pub model: TrainedModel,
+}
+
+impl RuntimeModel for BoundModel<'_> {
+    fn predict(&mut self, cloud: &Cloud, queries: &[ConfigQuery]) -> Result<Vec<f64>> {
+        self.predictor.predict(&self.model, cloud, queries)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workloads::{ExperimentGrid, JobKind};
+
+    macro_rules! require_artifacts {
+        () => {{
+            let dir = Runtime::default_dir();
+            if !Runtime::artifacts_available(&dir) {
+                eprintln!("SKIP: artifacts not built (run `make artifacts`)");
+                return;
+            }
+            dir
+        }};
+    }
+
+    fn grep_repo(cloud: &Cloud) -> RuntimeDataRepo {
+        let grid = ExperimentGrid::paper_table1();
+        let grep = ExperimentGrid {
+            experiments: grid
+                .experiments
+                .into_iter()
+                .filter(|e| e.spec.kind() == JobKind::Grep)
+                .collect(),
+            repetitions: 3,
+        };
+        grep.execute(cloud, 11).repo_for(JobKind::Grep)
+    }
+
+    fn holdout_queries(repo: &RuntimeDataRepo, every: usize) -> (Vec<ConfigQuery>, Vec<f64>) {
+        let mut qs = Vec::new();
+        let mut truth = Vec::new();
+        for (i, r) in repo.records().iter().enumerate() {
+            if i % every == 0 {
+                qs.push(ConfigQuery {
+                    machine: r.machine.clone(),
+                    scaleout: r.scaleout,
+                    job_features: r.job_features.clone(),
+                });
+                truth.push(r.runtime_s);
+            }
+        }
+        (qs, truth)
+    }
+
+    #[test]
+    fn pessimistic_interpolates_training_points() {
+        let dir = require_artifacts!();
+        let cloud = Cloud::aws_like();
+        let repo = grep_repo(&cloud);
+        let mut p = Predictor::new(&dir).unwrap();
+        let model = p.train(&cloud, &repo, ModelKind::Pessimistic).unwrap();
+        // querying exact training configurations must be near-exact
+        let (qs, truth) = holdout_queries(&repo, 7);
+        let preds = p.predict(&model, &cloud, &qs).unwrap();
+        let mape = stats::mape(&preds, &truth);
+        assert!(mape < 3.0, "training-point MAPE {mape}%");
+    }
+
+    #[test]
+    fn pessimistic_generalizes_leave_out() {
+        let dir = require_artifacts!();
+        let cloud = Cloud::aws_like();
+        let repo = grep_repo(&cloud);
+        // leave out every 5th record, train on the rest
+        let mut train = RuntimeDataRepo::new(JobKind::Grep);
+        let mut test = Vec::new();
+        for (i, r) in repo.records().iter().enumerate() {
+            if i % 5 == 0 {
+                test.push(r.clone());
+            } else {
+                train.contribute(r.clone()).unwrap();
+            }
+        }
+        let mut p = Predictor::new(&dir).unwrap();
+        let model = p.train(&cloud, &train, ModelKind::Pessimistic).unwrap();
+        let qs: Vec<ConfigQuery> = test
+            .iter()
+            .map(|r| ConfigQuery {
+                machine: r.machine.clone(),
+                scaleout: r.scaleout,
+                job_features: r.job_features.clone(),
+            })
+            .collect();
+        let truth: Vec<f64> = test.iter().map(|r| r.runtime_s).collect();
+        let preds = p.predict(&model, &cloud, &qs).unwrap();
+        let mape = stats::mape(&preds, &truth);
+        assert!(mape < 25.0, "held-out MAPE {mape}%");
+    }
+
+    #[test]
+    fn optimistic_trains_and_predicts() {
+        let dir = require_artifacts!();
+        let cloud = Cloud::aws_like();
+        let repo = grep_repo(&cloud);
+        let mut p = Predictor::new(&dir).unwrap();
+        let model = p.train(&cloud, &repo, ModelKind::Optimistic).unwrap();
+        if let ModelState::Opt { final_loss, .. } = &model.state {
+            assert!(*final_loss < 0.5, "loss {final_loss}");
+        } else {
+            panic!("wrong state");
+        }
+        let (qs, truth) = holdout_queries(&repo, 7);
+        let preds = p.predict(&model, &cloud, &qs).unwrap();
+        let mape = stats::mape(&preds, &truth);
+        assert!(mape < 35.0, "optimistic MAPE {mape}%");
+    }
+
+    #[test]
+    fn optimistic_extrapolates_scaleout() {
+        // train only on scale-outs 2..8; predict 10 and 12.
+        let dir = require_artifacts!();
+        let cloud = Cloud::aws_like();
+        let repo = grep_repo(&cloud);
+        let mut train = RuntimeDataRepo::new(JobKind::Grep);
+        let mut test = Vec::new();
+        for r in repo.records() {
+            if r.scaleout <= 8 {
+                train.contribute(r.clone()).unwrap();
+            } else {
+                test.push(r.clone());
+            }
+        }
+        let mut p = Predictor::new(&dir).unwrap();
+        let model = p.train(&cloud, &train, ModelKind::Optimistic).unwrap();
+        let qs: Vec<ConfigQuery> = test
+            .iter()
+            .map(|r| ConfigQuery {
+                machine: r.machine.clone(),
+                scaleout: r.scaleout,
+                job_features: r.job_features.clone(),
+            })
+            .collect();
+        let truth: Vec<f64> = test.iter().map(|r| r.runtime_s).collect();
+        let preds = p.predict(&model, &cloud, &qs).unwrap();
+        let mape = stats::mape(&preds, &truth);
+        assert!(mape < 40.0, "extrapolation MAPE {mape}%");
+        // extrapolated runtimes must stay positive and finite
+        assert!(preds.iter().all(|&t| t.is_finite() && t > 0.0));
+    }
+
+    #[test]
+    fn empty_repo_rejected() {
+        let dir = require_artifacts!();
+        let cloud = Cloud::aws_like();
+        let mut p = Predictor::new(&dir).unwrap();
+        let empty = RuntimeDataRepo::new(JobKind::Sort);
+        assert!(p.train(&cloud, &empty, ModelKind::Pessimistic).is_err());
+        assert!(p.train(&cloud, &empty, ModelKind::Optimistic).is_err());
+    }
+}

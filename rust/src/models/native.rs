@@ -1,0 +1,260 @@
+//! Pure-Rust re-implementations of both model families.
+//!
+//! These exist for three reasons:
+//!
+//! 1. **Differential testing** — the PJRT-executed artifacts must agree
+//!    with these to within f32 tolerance (see `rust/tests/`), which
+//!    validates the entire AOT bridge end-to-end.
+//! 2. **Fallback** — environments without built artifacts (e.g. a bare
+//!    `cargo test`) still exercise all coordinator logic.
+//! 3. **Perf baseline** — the §Perf benches compare PJRT vs native
+//!    latency to quantify what the XLA path buys (batch fusion).
+
+use crate::cloud::Cloud;
+use crate::models::{ConfigQuery, RuntimeModel};
+use crate::repo::featurize::{FeatureSpace, Featurizer};
+use crate::repo::RuntimeDataRepo;
+use crate::util::matrix::MatF32;
+use crate::util::stats;
+use anyhow::{bail, Result};
+
+/// Distance assigned to padded rows (must match `ref.PAD_DISTANCE`).
+pub const PAD_DISTANCE: f32 = 1e30;
+
+/// Native similarity-weighted kNN (pessimistic model).
+#[derive(Debug, Clone)]
+pub struct NativeKnn {
+    pub space: FeatureSpace,
+    pub train_x: MatF32,
+    pub train_y: Vec<f32>,
+    pub weights: Vec<f32>,
+    pub k: usize,
+}
+
+impl NativeKnn {
+    /// Fit on a repository: standardize, learn correlation weights.
+    /// Mirrors `Predictor::train_pessimistic` exactly (same weight floor).
+    pub fn fit(cloud: &Cloud, repo: &RuntimeDataRepo, k: usize) -> Result<NativeKnn> {
+        if repo.is_empty() {
+            bail!("cannot fit on an empty repository");
+        }
+        let featurizer = Featurizer::new(cloud);
+        let (space, x, y) = featurizer.fit(repo);
+        let d = space.dim();
+        let yf: Vec<f64> = y.iter().map(|&v| v as f64).collect();
+        let mut weights = vec![0.0f32; d];
+        for c in 0..d {
+            let col: Vec<f64> = (0..x.rows).map(|r| x.at(r, c) as f64).collect();
+            let corr = stats::pearson(&col, &yf);
+            weights[c] = if corr.is_finite() {
+                (corr.abs() as f32).max(0.05)
+            } else {
+                0.05
+            };
+        }
+        Ok(NativeKnn {
+            space,
+            train_x: x,
+            train_y: y,
+            weights,
+            k,
+        })
+    }
+
+    /// Predict one standardized query row (in the fitted space).
+    pub fn predict_row(&self, row: &[f32]) -> f64 {
+        let t = self.train_x.rows;
+        let mut dists: Vec<(f32, usize)> = Vec::with_capacity(t);
+        for i in 0..t {
+            let tr = self.train_x.row(i);
+            let mut d = 0.0f32;
+            for c in 0..row.len() {
+                let diff = row[c] - tr[c];
+                d += self.weights[c] * diff * diff;
+            }
+            dists.push((d, i));
+        }
+        dists.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+        let k = self.k.min(t);
+        let mut num = 0.0f64;
+        let mut den = 0.0f64;
+        for &(d, i) in dists.iter().take(k) {
+            let w = 1.0 / (d as f64 + 1e-6);
+            num += w * self.train_y[i] as f64;
+            den += w;
+        }
+        self.space.unscale_runtime((num / den.max(1e-6)) as f32)
+    }
+}
+
+impl RuntimeModel for NativeKnn {
+    fn predict(&mut self, cloud: &Cloud, queries: &[ConfigQuery]) -> Result<Vec<f64>> {
+        let featurizer = Featurizer::new(cloud);
+        Ok(queries
+            .iter()
+            .map(|q| {
+                let row =
+                    featurizer.transform(&self.space, &q.machine, q.scaleout, &q.job_features);
+                self.predict_row(&row)
+            })
+            .collect())
+    }
+}
+
+/// Native forward pass of the optimistic model (given trained params).
+/// Mirrors `optimistic_predict_ref` in Python: bias + [x, log1p(x),
+/// 1/(x+0.1)] basis.
+#[derive(Debug, Clone)]
+pub struct NativeOptimistic {
+    pub mins: Vec<f32>,
+    pub spans: Vec<f32>,
+    pub y_mean: f32,
+    pub y_sd: f32,
+    pub params: Vec<f32>,
+    /// Number of real (unpadded) feature columns.
+    pub dim: usize,
+}
+
+impl NativeOptimistic {
+    /// Build from the trained PJRT model state.
+    pub fn from_state(
+        mins: &[f32],
+        spans: &[f32],
+        y_mean: f32,
+        y_sd: f32,
+        params: &[f32],
+        dim: usize,
+    ) -> Self {
+        NativeOptimistic {
+            mins: mins.to_vec(),
+            spans: spans.to_vec(),
+            y_mean,
+            y_sd,
+            params: params.to_vec(),
+            dim,
+        }
+    }
+
+    /// Forward pass over scaled features x01 (full padded width).
+    pub fn predict_x01(&self, x01: &[f32]) -> f64 {
+        let f = self.mins.len();
+        debug_assert_eq!(self.params.len(), 1 + 3 * f);
+        let mut acc = self.params[0];
+        for c in 0..f {
+            let x = x01[c];
+            acc += self.params[1 + c] * x;
+            acc += self.params[1 + f + c] * (1.0 + x).ln();
+            acc += self.params[1 + 2 * f + c] / (x + 0.1);
+        }
+        ((acc * self.y_sd + self.y_mean) as f64).exp()
+    }
+}
+
+impl RuntimeModel for NativeOptimistic {
+    fn predict(&mut self, cloud: &Cloud, queries: &[ConfigQuery]) -> Result<Vec<f64>> {
+        let featurizer = Featurizer::new(cloud);
+        let f = self.mins.len();
+        Ok(queries
+            .iter()
+            .map(|q| {
+                let raw = featurizer.raw_row(&q.machine, q.scaleout, &q.job_features);
+                let mut x01 = vec![0.0f32; f];
+                for (c, &rv) in raw.iter().enumerate() {
+                    x01[c] = (((rv - self.mins[c]) / self.spans[c]).max(-0.05)).min(5.0);
+                }
+                self.predict_x01(&x01)
+            })
+            .collect())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::repo::RuntimeRecord;
+    use crate::workloads::JobKind;
+
+    fn toy_repo() -> RuntimeDataRepo {
+        // runtime = 1000 / scaleout (pure scale-out law)
+        let mut recs = Vec::new();
+        for &n in &[2u32, 4, 6, 8, 10, 12] {
+            for m in ["c5.xlarge", "m5.xlarge", "r5.xlarge"] {
+                recs.push(RuntimeRecord {
+                    job: JobKind::Sort,
+                    org: "t".into(),
+                    machine: m.into(),
+                    scaleout: n,
+                    job_features: vec![15.0],
+                    runtime_s: 1000.0 / n as f64,
+                });
+            }
+        }
+        RuntimeDataRepo::from_records(JobKind::Sort, recs)
+    }
+
+    #[test]
+    fn knn_exact_training_point() {
+        let cloud = Cloud::aws_like();
+        let repo = toy_repo();
+        let mut knn = NativeKnn::fit(&cloud, &repo, 5).unwrap();
+        let qs = vec![ConfigQuery {
+            machine: "m5.xlarge".into(),
+            scaleout: 4,
+            job_features: vec![15.0],
+        }];
+        let pred = knn.predict(&cloud, &qs).unwrap()[0];
+        assert!((pred - 250.0).abs() / 250.0 < 0.02, "pred {pred}");
+    }
+
+    #[test]
+    fn knn_interpolates_between_scaleouts() {
+        let cloud = Cloud::aws_like();
+        let repo = toy_repo();
+        let mut knn = NativeKnn::fit(&cloud, &repo, 3).unwrap();
+        let qs = vec![ConfigQuery {
+            machine: "m5.xlarge".into(),
+            scaleout: 5,
+            job_features: vec![15.0],
+        }];
+        let pred = knn.predict(&cloud, &qs).unwrap()[0];
+        // truth 200; neighbours 250 and 166.7 — prediction in between
+        assert!((150.0..280.0).contains(&pred), "pred {pred}");
+    }
+
+    #[test]
+    fn knn_weights_floor_applied() {
+        let cloud = Cloud::aws_like();
+        let repo = toy_repo();
+        let knn = NativeKnn::fit(&cloud, &repo, 5).unwrap();
+        assert!(knn.weights.iter().all(|&w| w >= 0.05));
+    }
+
+    #[test]
+    fn optimistic_forward_matches_manual() {
+        let f = 3;
+        let mut params = vec![0.0f32; 1 + 3 * f];
+        params[0] = 1.0; // bias
+        params[1] = 2.0; // x0 linear
+        params[1 + f + 1] = -1.0; // x1 log
+        params[1 + 2 * f + 2] = 0.5; // x2 reciprocal
+        let m = NativeOptimistic {
+            mins: vec![0.0; f],
+            spans: vec![1.0; f],
+            y_mean: 0.0,
+            y_sd: 1.0,
+            params,
+            dim: f,
+        };
+        let x01 = vec![0.5f32, 0.3, 0.2];
+        let want =
+            (1.0 + 2.0 * 0.5 - (1.0f32 + 0.3).ln() + 0.5 / (0.2 + 0.1)) as f64;
+        let got = m.predict_x01(&x01).ln();
+        assert!((got - want as f64).abs() < 1e-5, "{got} vs {want}");
+    }
+
+    #[test]
+    fn empty_repo_rejected() {
+        let cloud = Cloud::aws_like();
+        assert!(NativeKnn::fit(&cloud, &RuntimeDataRepo::new(JobKind::Sort), 5).is_err());
+    }
+}

@@ -1,0 +1,172 @@
+//! Simulator-backed ground-truth "model".
+//!
+//! [`SimOracle`] answers [`ConfigQuery`]s by actually running the dataflow
+//! simulator (median of repetitions). It is *not* available to the
+//! configurator in any honest experiment — it exists to
+//!
+//! * compute **regret** in the benches (how far is the chosen
+//!   configuration from the true optimum), and
+//! * serve profiling runs for the iterative-search baselines
+//!   (CherryPick/Ernest *do* get to execute candidate configurations;
+//!   that's exactly their cost).
+
+use crate::cloud::Cloud;
+use crate::models::{ConfigQuery, RuntimeModel};
+use crate::sim::{SimConfig, Simulator};
+use crate::util::rng::Pcg32;
+use crate::util::stats::median;
+use crate::workloads::{JobKind, JobSpec};
+use anyhow::{anyhow, Result};
+
+/// Ground truth via simulation.
+#[derive(Debug, Clone)]
+pub struct SimOracle {
+    pub job: JobKind,
+    pub sim: Simulator,
+    pub repetitions: u32,
+    pub seed: u64,
+    /// Count of simulated runs served (profiling-cost accounting for the
+    /// search baselines).
+    pub runs_served: u64,
+    /// Total simulated seconds served (the wall-clock a profiling-based
+    /// approach would have burned).
+    pub seconds_served: f64,
+}
+
+impl SimOracle {
+    pub fn new(job: JobKind, seed: u64) -> Self {
+        SimOracle {
+            job,
+            sim: Simulator::new(SimConfig::default()),
+            repetitions: 5,
+            seed,
+            runs_served: 0,
+            seconds_served: 0.0,
+        }
+    }
+
+    /// Noise-free oracle (for exact-optimum computation in benches).
+    pub fn deterministic(job: JobKind, seed: u64) -> Self {
+        SimOracle {
+            sim: Simulator::new(SimConfig::deterministic()),
+            repetitions: 1,
+            ..SimOracle::new(job, seed)
+        }
+    }
+
+    /// Reconstruct the [`JobSpec`] from a feature vector (the inverse of
+    /// `JobSpec::job_features`).
+    pub fn spec_from_features(job: JobKind, f: &[f64]) -> Result<JobSpec> {
+        let need = job.feature_names().len();
+        if f.len() != need {
+            return Err(anyhow!(
+                "{}: {} features given, {need} expected",
+                job.name(),
+                f.len()
+            ));
+        }
+        Ok(match job {
+            JobKind::Sort => JobSpec::sort(f[0]),
+            JobKind::Grep => JobSpec::grep(f[0], f[1]),
+            JobKind::Sgd => JobSpec::sgd(f[0], f[1].round() as u32),
+            // convergence features are stored as -log10(conv)
+            JobKind::KMeans => {
+                JobSpec::kmeans(f[0], f[1].round() as u32, 10f64.powf(-f[2]))
+            }
+            JobKind::PageRank => JobSpec::pagerank(f[0], 10f64.powf(-f[1])),
+        })
+    }
+
+    /// True (median) runtime of one configuration.
+    pub fn run_once(&mut self, cloud: &Cloud, q: &ConfigQuery) -> Result<f64> {
+        let spec = Self::spec_from_features(self.job, &q.job_features)?;
+        let machine = cloud
+            .machine(&q.machine)
+            .ok_or_else(|| anyhow!("unknown machine {}", q.machine))?;
+        let stages = spec.stages();
+        let mut runs = Vec::with_capacity(self.repetitions as usize);
+        for rep in 0..self.repetitions {
+            let mut rng = Pcg32::new_stream(
+                self.seed ^ (self.runs_served.wrapping_mul(0x9E3779B97F4A7C15)),
+                ((q.scaleout as u64) << 32) | rep as u64 | 1,
+            );
+            runs.push(self.sim.run_runtime_only(machine, q.scaleout, &stages, &mut rng));
+        }
+        let t = median(&runs);
+        self.runs_served += self.repetitions as u64;
+        self.seconds_served += runs.iter().sum::<f64>();
+        Ok(t)
+    }
+}
+
+impl RuntimeModel for SimOracle {
+    fn predict(&mut self, cloud: &Cloud, queries: &[ConfigQuery]) -> Result<Vec<f64>> {
+        queries.iter().map(|q| self.run_once(cloud, q)).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn spec_round_trip_all_jobs() {
+        let specs = [
+            JobSpec::sort(12.0),
+            JobSpec::grep(15.0, 0.1),
+            JobSpec::sgd(30.0, 75),
+            JobSpec::kmeans(15.0, 7, 0.001),
+            JobSpec::pagerank(330.0, 0.0001),
+        ];
+        for spec in specs {
+            let f = spec.job_features();
+            let back = SimOracle::spec_from_features(spec.kind(), &f).unwrap();
+            // round-trip through features must preserve the spec (floats
+            // may wobble at 1e-12 for the convergence log transform)
+            match (&spec, &back) {
+                (
+                    JobSpec::KMeans { convergence: a, .. },
+                    JobSpec::KMeans { convergence: b, .. },
+                ) => assert!((a - b).abs() / a < 1e-9),
+                (
+                    JobSpec::PageRank { convergence: a, .. },
+                    JobSpec::PageRank { convergence: b, .. },
+                ) => assert!((a - b).abs() / a < 1e-9),
+                _ => assert_eq!(spec, back),
+            }
+        }
+    }
+
+    #[test]
+    fn wrong_arity_rejected() {
+        assert!(SimOracle::spec_from_features(JobKind::Grep, &[1.0]).is_err());
+    }
+
+    #[test]
+    fn oracle_counts_profiling_cost() {
+        let cloud = Cloud::aws_like();
+        let mut o = SimOracle::new(JobKind::Sort, 1);
+        let q = ConfigQuery {
+            machine: "m5.xlarge".into(),
+            scaleout: 4,
+            job_features: vec![15.0],
+        };
+        let t = o.run_once(&cloud, &q).unwrap();
+        assert!(t > 0.0);
+        assert_eq!(o.runs_served, 5);
+        assert!(o.seconds_served > t);
+    }
+
+    #[test]
+    fn deterministic_oracle_is_stable() {
+        let cloud = Cloud::aws_like();
+        let q = ConfigQuery {
+            machine: "m5.xlarge".into(),
+            scaleout: 6,
+            job_features: vec![15.0],
+        };
+        let mut a = SimOracle::deterministic(JobKind::Sort, 7);
+        let mut b = SimOracle::deterministic(JobKind::Sort, 7);
+        assert_eq!(a.run_once(&cloud, &q).unwrap(), b.run_once(&cloud, &q).unwrap());
+    }
+}

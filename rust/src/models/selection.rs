@@ -1,0 +1,191 @@
+//! Dynamic model selection (paper §V-C).
+//!
+//! "Based on cross-validation, the most accurate model averaged over the
+//! test datasets is chosen to predict new data points." — k-fold CV over
+//! the shared repository for each model family, pick the lower mean MAPE,
+//! retrain the winner on the full data. Retraining happens on the arrival
+//! of new runtime data (driven by the coordinator).
+
+use crate::cloud::Cloud;
+use crate::models::{ConfigQuery, ModelKind, Predictor, TrainedModel};
+use crate::repo::RuntimeDataRepo;
+use crate::util::rng::Pcg32;
+use crate::util::stats;
+use anyhow::{bail, Result};
+
+/// Outcome of one dynamic selection round.
+#[derive(Debug, Clone)]
+pub struct SelectionReport {
+    /// Mean CV MAPE (%) per model kind.
+    pub cv_mape: Vec<(ModelKind, f64)>,
+    pub chosen: ModelKind,
+    pub folds: usize,
+    pub records: usize,
+}
+
+impl SelectionReport {
+    pub fn mape_of(&self, kind: ModelKind) -> f64 {
+        self.cv_mape
+            .iter()
+            .find(|(k, _)| *k == kind)
+            .map(|(_, m)| *m)
+            .unwrap_or(f64::NAN)
+    }
+}
+
+/// Deterministic shuffled k-fold split of record indices.
+pub fn kfold_indices(n: usize, folds: usize, seed: u64) -> Vec<Vec<usize>> {
+    assert!(folds >= 2, "need at least 2 folds");
+    let mut idx: Vec<usize> = (0..n).collect();
+    let mut rng = Pcg32::new(seed);
+    rng.shuffle(&mut idx);
+    let mut out = vec![Vec::new(); folds];
+    for (i, r) in idx.into_iter().enumerate() {
+        out[i % folds].push(r);
+    }
+    out
+}
+
+/// Cross-validated MAPE of one model kind on a repository.
+pub fn cv_mape(
+    predictor: &mut Predictor,
+    cloud: &Cloud,
+    repo: &RuntimeDataRepo,
+    kind: ModelKind,
+    folds: usize,
+    seed: u64,
+) -> Result<f64> {
+    let n = repo.len();
+    if n < folds {
+        bail!("repo has {n} records, need at least {folds} for {folds}-fold CV");
+    }
+    let splits = kfold_indices(n, folds, seed);
+    let records = repo.records();
+    let mut fold_mapes = Vec::with_capacity(folds);
+    for test_idx in &splits {
+        let test_set: std::collections::BTreeSet<usize> = test_idx.iter().copied().collect();
+        let train = RuntimeDataRepo::from_records(
+            repo.job(),
+            records
+                .iter()
+                .enumerate()
+                .filter(|(i, _)| !test_set.contains(i))
+                .map(|(_, r)| r.clone()),
+        );
+        let model = predictor.train(cloud, &train, kind)?;
+        let queries: Vec<ConfigQuery> = test_idx
+            .iter()
+            .map(|&i| ConfigQuery {
+                machine: records[i].machine.clone(),
+                scaleout: records[i].scaleout,
+                job_features: records[i].job_features.clone(),
+            })
+            .collect();
+        let truth: Vec<f64> = test_idx.iter().map(|&i| records[i].runtime_s).collect();
+        let preds = predictor.predict(&model, cloud, &queries)?;
+        fold_mapes.push(stats::mape(&preds, &truth));
+    }
+    Ok(stats::mean(&fold_mapes))
+}
+
+/// Run dynamic selection: CV both families, retrain the winner on the
+/// full repository.
+pub fn select_and_train(
+    predictor: &mut Predictor,
+    cloud: &Cloud,
+    repo: &RuntimeDataRepo,
+    folds: usize,
+    seed: u64,
+) -> Result<(TrainedModel, SelectionReport)> {
+    let mut cv = Vec::new();
+    for kind in ModelKind::all() {
+        let mape = cv_mape(predictor, cloud, repo, kind, folds, seed)?;
+        cv.push((kind, mape));
+    }
+    let chosen = cv
+        .iter()
+        .min_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
+        .map(|(k, _)| *k)
+        .unwrap();
+    let model = predictor.train(cloud, repo, chosen)?;
+    Ok((
+        model,
+        SelectionReport {
+            cv_mape: cv,
+            chosen,
+            folds,
+            records: repo.len(),
+        },
+    ))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::Runtime;
+    use crate::workloads::{ExperimentGrid, JobKind};
+
+    #[test]
+    fn kfold_partitions_everything_once() {
+        let folds = kfold_indices(103, 5, 7);
+        assert_eq!(folds.len(), 5);
+        let mut all: Vec<usize> = folds.concat();
+        all.sort_unstable();
+        assert_eq!(all, (0..103).collect::<Vec<_>>());
+        // balanced within 1
+        let sizes: Vec<usize> = folds.iter().map(|f| f.len()).collect();
+        assert!(sizes.iter().max().unwrap() - sizes.iter().min().unwrap() <= 1);
+    }
+
+    #[test]
+    fn kfold_is_seeded() {
+        assert_eq!(kfold_indices(50, 5, 1), kfold_indices(50, 5, 1));
+        assert_ne!(kfold_indices(50, 5, 1), kfold_indices(50, 5, 2));
+    }
+
+    #[test]
+    fn selection_runs_and_reports() {
+        let dir = Runtime::default_dir();
+        if !Runtime::artifacts_available(&dir) {
+            eprintln!("SKIP: artifacts not built");
+            return;
+        }
+        let cloud = Cloud::aws_like();
+        // small sort corpus: dense grid → pessimistic should win or tie
+        let grid = ExperimentGrid {
+            experiments: ExperimentGrid::paper_table1()
+                .experiments
+                .into_iter()
+                .filter(|e| e.spec.kind() == JobKind::Sort)
+                .collect(),
+            repetitions: 3,
+        };
+        let repo = grid.execute(&cloud, 3).repo_for(JobKind::Sort);
+        let mut p = Predictor::new(&dir).unwrap();
+        let (model, report) = select_and_train(&mut p, &cloud, &repo, 4, 9).unwrap();
+        assert_eq!(model.kind, report.chosen);
+        for (_, mape) in &report.cv_mape {
+            assert!(mape.is_finite() && *mape > 0.0, "{report:?}");
+        }
+        // the winner's CV MAPE is the minimum
+        let winner = report.mape_of(report.chosen);
+        for (_, m) in &report.cv_mape {
+            assert!(winner <= *m + 1e-12);
+        }
+        // on this dense, low-noise grid both models should be usable
+        assert!(winner < 30.0, "winner MAPE {winner}");
+    }
+
+    #[test]
+    fn cv_rejects_tiny_repo() {
+        let dir = Runtime::default_dir();
+        if !Runtime::artifacts_available(&dir) {
+            eprintln!("SKIP: artifacts not built");
+            return;
+        }
+        let cloud = Cloud::aws_like();
+        let mut p = Predictor::new(&dir).unwrap();
+        let repo = RuntimeDataRepo::new(JobKind::Sort);
+        assert!(cv_mape(&mut p, &cloud, &repo, ModelKind::Pessimistic, 5, 1).is_err());
+    }
+}

@@ -1,0 +1,261 @@
+//! Featurization: turn shared [`RuntimeRecord`]s into model-ready
+//! matrices.
+//!
+//! The paper (§IV) lists the runtime-influencing factors a black-box model
+//! must see: the machine type and scale-out of the cluster, key dataset
+//! characteristics, and algorithm parameters. Machine types are encoded
+//! by their *descriptors* (vCPUs, memory, relative core speed, disk and
+//! network bandwidth) rather than one-hot names, so a model trained on
+//! collaboratively shared data can generalize to machine types that no
+//! contributor has measured — the heterogeneous-context requirement of §V.
+//!
+//! All features and the target are standardized; runtimes are modeled in
+//! log space (multiplicative errors, matching MAPE evaluation).
+
+use crate::cloud::Cloud;
+use crate::repo::{RuntimeDataRepo, RuntimeRecord};
+use crate::util::matrix::MatF32;
+
+/// Fitted feature-space metadata: column names and z-scoring parameters,
+/// learned from a training repo and applied to queries.
+#[derive(Debug, Clone)]
+pub struct FeatureSpace {
+    pub names: Vec<String>,
+    pub mean: Vec<f32>,
+    pub sd: Vec<f32>,
+    /// Mean/sd of log-runtime (target scaling).
+    pub y_mean: f32,
+    pub y_sd: f32,
+}
+
+impl FeatureSpace {
+    /// Number of feature columns.
+    pub fn dim(&self) -> usize {
+        self.names.len()
+    }
+
+    /// Map a standardized log-runtime prediction back to seconds.
+    pub fn unscale_runtime(&self, y_std: f32) -> f64 {
+        ((y_std * self.y_sd + self.y_mean) as f64).exp()
+    }
+
+    /// Map a runtime in seconds to the standardized log target.
+    pub fn scale_runtime(&self, runtime_s: f64) -> f32 {
+        ((runtime_s.ln() as f32) - self.y_mean) / self.y_sd
+    }
+}
+
+/// Builds feature matrices from records, resolving machine descriptors
+/// against a cloud catalog.
+#[derive(Debug, Clone)]
+pub struct Featurizer<'a> {
+    cloud: &'a Cloud,
+}
+
+/// Machine-descriptor column names appended after the job features.
+pub const CLUSTER_FEATURES: [&str; 6] = [
+    "scaleout",
+    "m_vcpus",
+    "m_memory_gib",
+    "m_cpu_perf",
+    "m_disk_mb_s",
+    "m_net_mb_s",
+];
+
+impl<'a> Featurizer<'a> {
+    pub fn new(cloud: &'a Cloud) -> Self {
+        Featurizer { cloud }
+    }
+
+    /// Raw (unscaled) feature row for a record-shaped query.
+    ///
+    /// # Panics
+    /// Panics if the machine type is not in the catalog.
+    pub fn raw_row(&self, machine: &str, scaleout: u32, job_features: &[f64]) -> Vec<f32> {
+        let m = self
+            .cloud
+            .machine(machine)
+            .unwrap_or_else(|| panic!("unknown machine type {machine:?}"));
+        let mut row: Vec<f32> = job_features.iter().map(|&f| f as f32).collect();
+        row.extend_from_slice(&[
+            scaleout as f32,
+            m.vcpus as f32,
+            m.memory_gib as f32,
+            m.cpu_perf as f32,
+            m.disk_mb_s as f32,
+            m.net_mb_s as f32,
+        ]);
+        row
+    }
+
+    /// Fit a [`FeatureSpace`] on a repo and return the standardized
+    /// feature matrix + standardized log-runtime targets.
+    ///
+    /// # Panics
+    /// Panics on an empty repo.
+    pub fn fit(&self, repo: &RuntimeDataRepo) -> (FeatureSpace, MatF32, Vec<f32>) {
+        assert!(!repo.is_empty(), "cannot featurize an empty repo");
+        let rows: Vec<Vec<f32>> = repo
+            .records()
+            .iter()
+            .map(|r| self.raw_row(&r.machine, r.scaleout, &r.job_features))
+            .collect();
+        let mut x = MatF32::from_rows(&rows);
+        let (mean, sd) = x.col_stats();
+        x.standardize(&mean, &sd);
+
+        let log_y: Vec<f32> = repo
+            .records()
+            .iter()
+            .map(|r| r.runtime_s.ln() as f32)
+            .collect();
+        let y_mean = log_y.iter().sum::<f32>() / log_y.len() as f32;
+        let y_var = log_y.iter().map(|y| (y - y_mean).powi(2)).sum::<f32>() / log_y.len() as f32;
+        let y_sd = y_var.sqrt().max(1e-6);
+        let y: Vec<f32> = log_y.iter().map(|v| (v - y_mean) / y_sd).collect();
+
+        let mut names: Vec<String> = repo
+            .job()
+            .feature_names()
+            .iter()
+            .map(|s| s.to_string())
+            .collect();
+        names.extend(CLUSTER_FEATURES.iter().map(|s| s.to_string()));
+
+        (
+            FeatureSpace {
+                names,
+                mean,
+                sd,
+                y_mean,
+                y_sd,
+            },
+            x,
+            y,
+        )
+    }
+
+    /// Standardize a query row with an existing feature space.
+    pub fn transform(
+        &self,
+        space: &FeatureSpace,
+        machine: &str,
+        scaleout: u32,
+        job_features: &[f64],
+    ) -> Vec<f32> {
+        let mut row = self.raw_row(machine, scaleout, job_features);
+        assert_eq!(row.len(), space.dim(), "feature arity mismatch");
+        for (i, v) in row.iter_mut().enumerate() {
+            *v = (*v - space.mean[i]) / space.sd[i];
+        }
+        row
+    }
+
+    /// Transform a batch of record-shaped queries.
+    pub fn transform_records(&self, space: &FeatureSpace, records: &[RuntimeRecord]) -> MatF32 {
+        let rows: Vec<Vec<f32>> = records
+            .iter()
+            .map(|r| self.transform(space, &r.machine, r.scaleout, &r.job_features))
+            .collect();
+        MatF32::from_rows(&rows)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::repo::RuntimeRecord;
+    use crate::workloads::JobKind;
+
+    fn small_repo() -> RuntimeDataRepo {
+        let recs = vec![
+            RuntimeRecord {
+                job: JobKind::Grep,
+                org: "a".into(),
+                machine: "m5.xlarge".into(),
+                scaleout: 4,
+                job_features: vec![10.0, 0.1],
+                runtime_s: 100.0,
+            },
+            RuntimeRecord {
+                job: JobKind::Grep,
+                org: "a".into(),
+                machine: "c5.xlarge".into(),
+                scaleout: 8,
+                job_features: vec![20.0, 0.3],
+                runtime_s: 80.0,
+            },
+            RuntimeRecord {
+                job: JobKind::Grep,
+                org: "b".into(),
+                machine: "r5.xlarge".into(),
+                scaleout: 2,
+                job_features: vec![15.0, 0.01],
+                runtime_s: 300.0,
+            },
+        ];
+        RuntimeDataRepo::from_records(JobKind::Grep, recs)
+    }
+
+    #[test]
+    fn dimensions_and_names() {
+        let cloud = Cloud::aws_like();
+        let f = Featurizer::new(&cloud);
+        let (space, x, y) = f.fit(&small_repo());
+        assert_eq!(space.dim(), 2 + 6); // grep features + cluster features
+        assert_eq!(x.rows, 3);
+        assert_eq!(x.cols, 8);
+        assert_eq!(y.len(), 3);
+        assert_eq!(space.names[0], "data_gb");
+        assert_eq!(space.names[2], "scaleout");
+    }
+
+    #[test]
+    fn standardization_round_trip() {
+        let cloud = Cloud::aws_like();
+        let f = Featurizer::new(&cloud);
+        let repo = small_repo();
+        let (space, _, y) = f.fit(&repo);
+        // unscale(scale(t)) == t
+        for (i, r) in repo.records().iter().enumerate() {
+            let back = space.unscale_runtime(y[i]);
+            assert!(
+                (back - r.runtime_s).abs() / r.runtime_s < 1e-3,
+                "{} vs {}",
+                back,
+                r.runtime_s
+            );
+            let fwd = space.scale_runtime(r.runtime_s);
+            assert!((fwd - y[i]).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn transform_matches_fit_columns() {
+        let cloud = Cloud::aws_like();
+        let f = Featurizer::new(&cloud);
+        let repo = small_repo();
+        let (space, x, _) = f.fit(&repo);
+        let r0 = &repo.records()[0];
+        let q = f.transform(&space, &r0.machine, r0.scaleout, &r0.job_features);
+        for c in 0..x.cols {
+            assert!((q[c] - x.at(0, c)).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "unknown machine type")]
+    fn unknown_machine_panics() {
+        let cloud = Cloud::aws_like();
+        let f = Featurizer::new(&cloud);
+        f.raw_row("tpu.9000", 2, &[1.0]);
+    }
+
+    #[test]
+    #[should_panic(expected = "empty repo")]
+    fn empty_repo_panics() {
+        let cloud = Cloud::aws_like();
+        let f = Featurizer::new(&cloud);
+        f.fit(&RuntimeDataRepo::new(JobKind::Sort));
+    }
+}

@@ -1,0 +1,367 @@
+//! The runtime-data repository — the collaborative core of C3O.
+//!
+//! The paper's idea (§III): runtime data is shared *alongside the code* of
+//! a job, so a new user benefits from every execution anyone ever
+//! contributed. This module implements that repository:
+//!
+//! * [`RuntimeRecord`] — one shared observation: which job, on what
+//!   cluster (machine type + scale-out), with which dataset
+//!   characteristics and parameters, and the resulting runtime (median of
+//!   repetitions, matching the paper's protocol). Records carry the
+//!   contributing organization for provenance.
+//! * [`RuntimeDataRepo`] — a per-job collection with CSV persistence
+//!   (the "runtime data repository" of Fig. 2), deduplication, and
+//!   **fork/merge** versioning in the style of DataHub/DVC (§III-C).
+//! * [`sampling`] — the paper's proposed mitigation when the shared
+//!   dataset grows too large: download only a *coverage-preserving
+//!   sample* of bounded size (farthest-point sampling in feature space).
+//! * [`featurize`] — turns records into model-ready matrices: job
+//!   features + scale-out + machine descriptors, z-scored.
+
+pub mod featurize;
+pub mod sampling;
+
+pub use featurize::{FeatureSpace, Featurizer};
+
+use crate::util::csv::Table;
+use crate::workloads::JobKind;
+use std::collections::BTreeSet;
+use std::path::Path;
+
+/// One shared runtime observation.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RuntimeRecord {
+    pub job: JobKind,
+    /// Contributing organization (provenance; "emulated collaborator").
+    pub org: String,
+    /// Machine type name, resolvable in the cloud catalog.
+    pub machine: String,
+    /// Horizontal scale-out (worker count).
+    pub scaleout: u32,
+    /// Job-specific features, aligned with `JobKind::feature_names()`.
+    pub job_features: Vec<f64>,
+    /// Median runtime over the repetitions, seconds.
+    pub runtime_s: f64,
+}
+
+impl RuntimeRecord {
+    /// Stable identity key for deduplication: everything except runtime
+    /// and org (two orgs measuring the same configuration are duplicates
+    /// of the same grid point; merge keeps the first).
+    pub fn config_key(&self) -> String {
+        let feats: Vec<String> = self
+            .job_features
+            .iter()
+            .map(|f| format!("{f:.6e}"))
+            .collect();
+        format!(
+            "{}|{}|{}|{}",
+            self.job.name(),
+            self.machine,
+            self.scaleout,
+            feats.join(",")
+        )
+    }
+
+    fn validate(&self) -> Result<(), String> {
+        if self.scaleout == 0 {
+            return Err("scaleout must be >= 1".into());
+        }
+        if !(self.runtime_s.is_finite() && self.runtime_s > 0.0) {
+            return Err(format!("bad runtime {}", self.runtime_s));
+        }
+        if self.job_features.len() != self.job.feature_names().len() {
+            return Err(format!(
+                "{}: {} features, expected {}",
+                self.job.name(),
+                self.job_features.len(),
+                self.job.feature_names().len()
+            ));
+        }
+        if self.job_features.iter().any(|f| !f.is_finite()) {
+            return Err("non-finite feature".into());
+        }
+        Ok(())
+    }
+}
+
+/// A per-job shared repository of runtime records.
+#[derive(Debug, Clone)]
+pub struct RuntimeDataRepo {
+    job: JobKind,
+    records: Vec<RuntimeRecord>,
+    /// Monotone version counter, bumped on every mutation (commit id).
+    version: u64,
+}
+
+impl RuntimeDataRepo {
+    /// Empty repository for a job.
+    pub fn new(job: JobKind) -> Self {
+        RuntimeDataRepo {
+            job,
+            records: Vec::new(),
+            version: 0,
+        }
+    }
+
+    /// Build from records (e.g. a corpus slice); invalid or foreign-job
+    /// records are rejected.
+    pub fn from_records<I: IntoIterator<Item = RuntimeRecord>>(job: JobKind, records: I) -> Self {
+        let mut repo = RuntimeDataRepo::new(job);
+        for r in records {
+            repo.contribute(r).expect("invalid record");
+        }
+        repo
+    }
+
+    pub fn job(&self) -> JobKind {
+        self.job
+    }
+
+    pub fn records(&self) -> &[RuntimeRecord] {
+        &self.records
+    }
+
+    pub fn len(&self) -> usize {
+        self.records.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.records.is_empty()
+    }
+
+    /// Current commit version (bumps on each mutation).
+    pub fn version(&self) -> u64 {
+        self.version
+    }
+
+    /// Contribute one record (the "capture and save" step of Fig. 1).
+    pub fn contribute(&mut self, r: RuntimeRecord) -> Result<(), String> {
+        if r.job != self.job {
+            return Err(format!(
+                "record for {} contributed to {} repo",
+                r.job.name(),
+                self.job.name()
+            ));
+        }
+        r.validate()?;
+        self.records.push(r);
+        self.version += 1;
+        Ok(())
+    }
+
+    /// Distinct contributing organizations.
+    pub fn organizations(&self) -> BTreeSet<String> {
+        self.records.iter().map(|r| r.org.clone()).collect()
+    }
+
+    /// Fork: an independent copy (DataHub/DVC-style).
+    pub fn fork(&self) -> RuntimeDataRepo {
+        self.clone()
+    }
+
+    /// Merge another repository of the same job into this one.
+    /// Duplicate configurations (same [`RuntimeRecord::config_key`]) keep
+    /// the existing record — idempotent re-merges don't grow the repo.
+    /// Returns the number of records actually added.
+    pub fn merge(&mut self, other: &RuntimeDataRepo) -> Result<usize, String> {
+        if other.job != self.job {
+            return Err("cannot merge repos of different jobs".into());
+        }
+        let existing: BTreeSet<String> =
+            self.records.iter().map(|r| r.config_key()).collect();
+        let mut added = 0;
+        for r in &other.records {
+            if !existing.contains(&r.config_key()) {
+                self.records.push(r.clone());
+                added += 1;
+            }
+        }
+        if added > 0 {
+            self.version += 1;
+        }
+        Ok(added)
+    }
+
+    /// CSV header for this job's schema.
+    fn header(&self) -> Vec<String> {
+        let mut h = vec![
+            "job".to_string(),
+            "org".to_string(),
+            "machine".to_string(),
+            "scaleout".to_string(),
+        ];
+        h.extend(self.job.feature_names().iter().map(|s| s.to_string()));
+        h.push("runtime_s".to_string());
+        h
+    }
+
+    /// Serialize to a CSV [`Table`] (the on-disk sharing format).
+    pub fn to_table(&self) -> Table {
+        let header = self.header();
+        let mut t = Table {
+            header,
+            rows: Vec::new(),
+        };
+        for r in &self.records {
+            let mut row = vec![
+                r.job.name().to_string(),
+                r.org.clone(),
+                r.machine.clone(),
+                r.scaleout.to_string(),
+            ];
+            row.extend(r.job_features.iter().map(|f| format!("{f}")));
+            row.push(format!("{}", r.runtime_s));
+            t.push(row);
+        }
+        t
+    }
+
+    /// Persist to CSV.
+    pub fn save(&self, path: &Path) -> std::io::Result<()> {
+        self.to_table().save(path)
+    }
+
+    /// Load from CSV; rejects schema mismatches.
+    pub fn load(job: JobKind, path: &Path) -> Result<RuntimeDataRepo, String> {
+        let t = Table::load(path).map_err(|e| e.to_string())?;
+        Self::from_table(job, &t)
+    }
+
+    /// Parse from a CSV table.
+    pub fn from_table(job: JobKind, t: &Table) -> Result<RuntimeDataRepo, String> {
+        let mut repo = RuntimeDataRepo::new(job);
+        let expect = repo.header();
+        if t.header != expect {
+            return Err(format!(
+                "schema mismatch: got {:?}, want {:?}",
+                t.header, expect
+            ));
+        }
+        let nf = job.feature_names().len();
+        for row in &t.rows {
+            let parse_f = |s: &str| -> Result<f64, String> {
+                s.parse().map_err(|_| format!("bad number {s:?}"))
+            };
+            let rec = RuntimeRecord {
+                job: JobKind::parse(&row[0]).ok_or_else(|| format!("bad job {:?}", row[0]))?,
+                org: row[1].clone(),
+                machine: row[2].clone(),
+                scaleout: row[3].parse().map_err(|_| "bad scaleout".to_string())?,
+                job_features: row[4..4 + nf]
+                    .iter()
+                    .map(|s| parse_f(s))
+                    .collect::<Result<_, _>>()?,
+                runtime_s: parse_f(&row[4 + nf])?,
+            };
+            repo.contribute(rec)?;
+        }
+        Ok(repo)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rec(org: &str, machine: &str, scaleout: u32, gb: f64, runtime: f64) -> RuntimeRecord {
+        RuntimeRecord {
+            job: JobKind::Sort,
+            org: org.into(),
+            machine: machine.into(),
+            scaleout,
+            job_features: vec![gb],
+            runtime_s: runtime,
+        }
+    }
+
+    #[test]
+    fn contribute_and_len() {
+        let mut repo = RuntimeDataRepo::new(JobKind::Sort);
+        assert!(repo.is_empty());
+        repo.contribute(rec("a", "m5.xlarge", 4, 10.0, 100.0)).unwrap();
+        assert_eq!(repo.len(), 1);
+        assert_eq!(repo.version(), 1);
+    }
+
+    #[test]
+    fn rejects_wrong_job() {
+        let mut repo = RuntimeDataRepo::new(JobKind::Grep);
+        let err = repo.contribute(rec("a", "m5.xlarge", 4, 10.0, 100.0));
+        assert!(err.is_err());
+    }
+
+    #[test]
+    fn rejects_invalid_records() {
+        let mut repo = RuntimeDataRepo::new(JobKind::Sort);
+        assert!(repo.contribute(rec("a", "m", 0, 10.0, 100.0)).is_err());
+        assert!(repo.contribute(rec("a", "m", 4, 10.0, -5.0)).is_err());
+        assert!(repo.contribute(rec("a", "m", 4, f64::NAN, 5.0)).is_err());
+        let wrong_arity = RuntimeRecord {
+            job_features: vec![1.0, 2.0],
+            ..rec("a", "m", 4, 10.0, 100.0)
+        };
+        assert!(repo.contribute(wrong_arity).is_err());
+    }
+
+    #[test]
+    fn merge_dedups_by_config() {
+        let mut a = RuntimeDataRepo::new(JobKind::Sort);
+        a.contribute(rec("orgA", "m5.xlarge", 4, 10.0, 100.0)).unwrap();
+        let mut b = a.fork();
+        b.contribute(rec("orgB", "m5.xlarge", 8, 10.0, 60.0)).unwrap();
+        // orgB also re-measured orgA's config — duplicate by key
+        b.contribute(rec("orgB", "m5.xlarge", 4, 10.0, 102.0)).unwrap();
+        let added = a.merge(&b).unwrap();
+        assert_eq!(added, 1, "only the new configuration is merged");
+        assert_eq!(a.len(), 2);
+        // merging again adds nothing
+        assert_eq!(a.merge(&b).unwrap(), 0);
+    }
+
+    #[test]
+    fn merge_rejects_cross_job() {
+        let mut a = RuntimeDataRepo::new(JobKind::Sort);
+        let b = RuntimeDataRepo::new(JobKind::Grep);
+        assert!(a.merge(&b).is_err());
+    }
+
+    #[test]
+    fn csv_round_trip() {
+        let mut repo = RuntimeDataRepo::new(JobKind::Sort);
+        repo.contribute(rec("orgA", "m5.xlarge", 4, 12.5, 123.456)).unwrap();
+        repo.contribute(rec("orgB", "c5.xlarge", 8, 20.0, 77.7)).unwrap();
+        let t = repo.to_table();
+        let back = RuntimeDataRepo::from_table(JobKind::Sort, &t).unwrap();
+        assert_eq!(back.records(), repo.records());
+    }
+
+    #[test]
+    fn csv_schema_mismatch_rejected() {
+        let repo = RuntimeDataRepo::new(JobKind::Grep);
+        let t = repo.to_table();
+        assert!(RuntimeDataRepo::from_table(JobKind::Sort, &t).is_err());
+    }
+
+    #[test]
+    fn organizations_collected() {
+        let mut repo = RuntimeDataRepo::new(JobKind::Sort);
+        repo.contribute(rec("b", "m5.xlarge", 4, 10.0, 1.0)).unwrap();
+        repo.contribute(rec("a", "m5.xlarge", 8, 10.0, 1.0)).unwrap();
+        repo.contribute(rec("a", "m5.xlarge", 2, 10.0, 1.0)).unwrap();
+        let orgs: Vec<String> = repo.organizations().into_iter().collect();
+        assert_eq!(orgs, vec!["a".to_string(), "b".to_string()]);
+    }
+
+    #[test]
+    fn file_round_trip() {
+        let mut repo = RuntimeDataRepo::new(JobKind::Sort);
+        repo.contribute(rec("orgA", "m5.xlarge", 4, 12.5, 123.0)).unwrap();
+        let dir = std::env::temp_dir().join("c3o_repo_test");
+        let path = dir.join("sort.csv");
+        repo.save(&path).unwrap();
+        let back = RuntimeDataRepo::load(JobKind::Sort, &path).unwrap();
+        assert_eq!(back.records(), repo.records());
+        let _ = std::fs::remove_dir_all(dir);
+    }
+}

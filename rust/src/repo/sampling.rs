@@ -1,0 +1,188 @@
+//! Coverage-preserving sampling of shared runtime data.
+//!
+//! §III-C of the paper: if the shared dataset grows too large for a quick
+//! download or fast training, "have the user only download a preselected
+//! sample of the historical runtime data of a specified maximal size,
+//! which covers the whole feature space most effectively."
+//!
+//! We implement that preselection as **farthest-point (k-center greedy)
+//! sampling** in the standardized feature space: starting from the point
+//! closest to the centroid, repeatedly add the record whose minimum
+//! distance to the selected set is largest. The result is a subset whose
+//! covering radius is within 2× of optimal (classic k-center guarantee),
+//! i.e. no region of the observed feature space is left unrepresented.
+
+use crate::cloud::Cloud;
+use crate::repo::featurize::Featurizer;
+use crate::repo::RuntimeDataRepo;
+
+/// Select up to `max_records` indices covering the repo's feature space.
+///
+/// Returns indices into `repo.records()`, in selection order (so prefixes
+/// of the result are themselves good smaller samples).
+pub fn coverage_sample(repo: &RuntimeDataRepo, cloud: &Cloud, max_records: usize) -> Vec<usize> {
+    let n = repo.len();
+    if n == 0 || max_records == 0 {
+        return Vec::new();
+    }
+    if max_records >= n {
+        return (0..n).collect();
+    }
+    let featurizer = Featurizer::new(cloud);
+    let (_, x, _) = featurizer.fit(repo);
+    let d = x.cols;
+
+    // Seed: the record nearest the centroid (standardized space ⇒ origin).
+    let norm2 = |row: &[f32]| -> f64 { row.iter().map(|&v| (v as f64).powi(2)).sum() };
+    let seed = (0..n)
+        .min_by(|&a, &b| {
+            norm2(x.row(a))
+                .partial_cmp(&norm2(x.row(b)))
+                .unwrap()
+        })
+        .unwrap();
+
+    let dist2 = |a: usize, b: usize| -> f64 {
+        let (ra, rb) = (x.row(a), x.row(b));
+        (0..d)
+            .map(|c| ((ra[c] - rb[c]) as f64).powi(2))
+            .sum()
+    };
+
+    let mut selected = vec![seed];
+    let mut min_d2: Vec<f64> = (0..n).map(|i| dist2(i, seed)).collect();
+    while selected.len() < max_records {
+        // farthest point from the selected set
+        let (far, &far_d2) = min_d2
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .unwrap();
+        if far_d2 == 0.0 {
+            break; // everything is a duplicate of a selected point
+        }
+        selected.push(far);
+        for i in 0..n {
+            let d2 = dist2(i, far);
+            if d2 < min_d2[i] {
+                min_d2[i] = d2;
+            }
+        }
+    }
+    selected
+}
+
+/// Materialize a sampled repository of at most `max_records` records.
+pub fn sampled_repo(repo: &RuntimeDataRepo, cloud: &Cloud, max_records: usize) -> RuntimeDataRepo {
+    let idx = coverage_sample(repo, cloud, max_records);
+    let records = idx.iter().map(|&i| repo.records()[i].clone());
+    RuntimeDataRepo::from_records(repo.job(), records)
+}
+
+/// The covering radius achieved by a sample: the maximum over all records
+/// of the distance to the nearest selected record (standardized space).
+/// Used by tests and the sampling ablation bench.
+pub fn covering_radius(repo: &RuntimeDataRepo, cloud: &Cloud, sample_idx: &[usize]) -> f64 {
+    assert!(!sample_idx.is_empty());
+    let featurizer = Featurizer::new(cloud);
+    let (_, x, _) = featurizer.fit(repo);
+    let d = x.cols;
+    let mut worst: f64 = 0.0;
+    for i in 0..x.rows {
+        let mut best = f64::INFINITY;
+        for &s in sample_idx {
+            let d2: f64 = (0..d)
+                .map(|c| ((x.at(i, c) - x.at(s, c)) as f64).powi(2))
+                .sum();
+            best = best.min(d2);
+        }
+        worst = worst.max(best);
+    }
+    worst.sqrt()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::repo::RuntimeRecord;
+    use crate::util::rng::Pcg32;
+    use crate::workloads::JobKind;
+
+    fn synthetic_repo(n: usize, seed: u64) -> RuntimeDataRepo {
+        let mut rng = Pcg32::new(seed);
+        let machines = ["c5.xlarge", "m5.xlarge", "r5.xlarge"];
+        let recs = (0..n).map(|_| RuntimeRecord {
+            job: JobKind::Sort,
+            org: "o".into(),
+            machine: machines[rng.index(3)].into(),
+            scaleout: 2 * rng.range_u64(1, 6) as u32,
+            job_features: vec![rng.range_f64(10.0, 20.0)],
+            runtime_s: rng.range_f64(50.0, 500.0),
+        });
+        RuntimeDataRepo::from_records(JobKind::Sort, recs)
+    }
+
+    #[test]
+    fn sample_size_respected() {
+        let cloud = Cloud::aws_like();
+        let repo = synthetic_repo(100, 1);
+        let idx = coverage_sample(&repo, &cloud, 20);
+        assert_eq!(idx.len(), 20);
+        // distinct indices
+        let mut sorted = idx.clone();
+        sorted.sort_unstable();
+        sorted.dedup();
+        assert_eq!(sorted.len(), 20);
+    }
+
+    #[test]
+    fn small_repo_returned_whole() {
+        let cloud = Cloud::aws_like();
+        let repo = synthetic_repo(10, 2);
+        let idx = coverage_sample(&repo, &cloud, 50);
+        assert_eq!(idx.len(), 10);
+    }
+
+    #[test]
+    fn coverage_beats_prefix_sampling() {
+        // The greedy sample's covering radius must beat "first k records".
+        let cloud = Cloud::aws_like();
+        let repo = synthetic_repo(200, 3);
+        let greedy = coverage_sample(&repo, &cloud, 15);
+        let prefix: Vec<usize> = (0..15).collect();
+        let r_greedy = covering_radius(&repo, &cloud, &greedy);
+        let r_prefix = covering_radius(&repo, &cloud, &prefix);
+        assert!(
+            r_greedy < r_prefix,
+            "greedy {r_greedy} should beat prefix {r_prefix}"
+        );
+    }
+
+    #[test]
+    fn radius_shrinks_with_sample_size() {
+        let cloud = Cloud::aws_like();
+        let repo = synthetic_repo(150, 4);
+        let r5 = covering_radius(&repo, &cloud, &coverage_sample(&repo, &cloud, 5));
+        let r40 = covering_radius(&repo, &cloud, &coverage_sample(&repo, &cloud, 40));
+        assert!(r40 < r5, "r40 {r40} < r5 {r5}");
+    }
+
+    #[test]
+    fn prefix_property_holds() {
+        // selection order means a prefix is itself a coverage sample
+        let cloud = Cloud::aws_like();
+        let repo = synthetic_repo(80, 5);
+        let idx20 = coverage_sample(&repo, &cloud, 20);
+        let idx10 = coverage_sample(&repo, &cloud, 10);
+        assert_eq!(&idx20[..10], &idx10[..]);
+    }
+
+    #[test]
+    fn sampled_repo_is_valid() {
+        let cloud = Cloud::aws_like();
+        let repo = synthetic_repo(60, 6);
+        let s = sampled_repo(&repo, &cloud, 12);
+        assert_eq!(s.len(), 12);
+        assert_eq!(s.job(), JobKind::Sort);
+    }
+}

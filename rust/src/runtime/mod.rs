@@ -1,0 +1,378 @@
+//! PJRT runtime: the only bridge between the Rust coordinator (L3) and
+//! the AOT-compiled model graphs (L2/L1).
+//!
+//! `make artifacts` lowers the JAX graphs to HLO *text* (see
+//! `python/compile/aot.py` for why text, not serialized protos). This
+//! module loads those artifacts with the `xla` crate
+//! (`PjRtClient::cpu() → HloModuleProto::from_text_file →
+//! client.compile → execute`), caches the compiled executables, and
+//! exposes typed helpers for the model layer.
+//!
+//! Python never runs on this path: once `artifacts/` exists, the binary
+//! is self-contained.
+
+use crate::util::csv::Table;
+use crate::util::matrix::MatF32;
+use anyhow::{anyhow, bail, Context, Result};
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+/// Shape constants shared with the Python export (artifacts/manifest.csv).
+/// The Rust side pads inputs to these shapes and masks the padding.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Manifest {
+    pub feature_dim: usize,
+    pub knn_train_rows: usize,
+    pub knn_query_rows: usize,
+    pub knn_k: usize,
+    pub opt_batch: usize,
+    pub opt_params: usize,
+}
+
+impl Manifest {
+    /// Parse from the `key,value` CSV written by `aot.py`.
+    pub fn load(path: &Path) -> Result<Manifest> {
+        let t = Table::load(path).map_err(|e| anyhow!("manifest: {e}"))?;
+        if t.header != vec!["key".to_string(), "value".to_string()] {
+            bail!("manifest schema mismatch: {:?}", t.header);
+        }
+        let mut map = HashMap::new();
+        for row in &t.rows {
+            map.insert(row[0].clone(), row[1].clone());
+        }
+        let get = |k: &str| -> Result<usize> {
+            map.get(k)
+                .with_context(|| format!("manifest missing key {k}"))?
+                .parse()
+                .with_context(|| format!("manifest key {k} not an integer"))
+        };
+        Ok(Manifest {
+            feature_dim: get("feature_dim")?,
+            knn_train_rows: get("knn_train_rows")?,
+            knn_query_rows: get("knn_query_rows")?,
+            knn_k: get("knn_k")?,
+            opt_batch: get("opt_batch")?,
+            opt_params: get("opt_params")?,
+        })
+    }
+}
+
+/// Names of the three model artifacts.
+pub const ARTIFACT_NAMES: [&str; 3] = ["knn_predict", "optimistic_predict", "optimistic_train"];
+
+/// The PJRT runtime: CPU client + compiled-executable cache.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    manifest: Manifest,
+    executables: HashMap<String, xla::PjRtLoadedExecutable>,
+}
+
+impl Runtime {
+    /// Create a runtime over an artifacts directory. Compilation is lazy:
+    /// each artifact compiles on first use and is cached for the process
+    /// lifetime.
+    pub fn load(artifacts_dir: &Path) -> Result<Runtime> {
+        let manifest = Manifest::load(&artifacts_dir.join("manifest.csv")).with_context(|| {
+            format!("loading manifest from {artifacts_dir:?} (run `make artifacts`)")
+        })?;
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT cpu client: {e:?}"))?;
+        Ok(Runtime {
+            client,
+            dir: artifacts_dir.to_path_buf(),
+            manifest,
+            executables: HashMap::new(),
+        })
+    }
+
+    /// Locate the default artifacts directory: `$C3O_ARTIFACTS`, else
+    /// `./artifacts` relative to the workspace root.
+    pub fn default_dir() -> PathBuf {
+        std::env::var_os("C3O_ARTIFACTS")
+            .map(PathBuf::from)
+            .unwrap_or_else(|| PathBuf::from("artifacts"))
+    }
+
+    /// True if the artifacts directory looks complete (all artifacts +
+    /// manifest present). Tests use this to skip gracefully when
+    /// `make artifacts` has not run.
+    pub fn artifacts_available(dir: &Path) -> bool {
+        dir.join("manifest.csv").exists()
+            && ARTIFACT_NAMES
+                .iter()
+                .all(|n| dir.join(format!("{n}.hlo.txt")).exists())
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    /// Compile (or fetch from cache) an artifact by name.
+    fn executable(&mut self, name: &str) -> Result<&xla::PjRtLoadedExecutable> {
+        if !self.executables.contains_key(name) {
+            let path = self.dir.join(format!("{name}.hlo.txt"));
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().context("non-utf8 artifact path")?,
+            )
+            .map_err(|e| anyhow!("parse {path:?}: {e:?}"))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&comp)
+                .map_err(|e| anyhow!("compile {name}: {e:?}"))?;
+            self.executables.insert(name.to_string(), exe);
+        }
+        Ok(&self.executables[name])
+    }
+
+    /// Force-compile every artifact (used at coordinator startup so the
+    /// request path never pays compile latency).
+    pub fn warmup(&mut self) -> Result<()> {
+        for name in ARTIFACT_NAMES {
+            self.executable(name)?;
+        }
+        Ok(())
+    }
+
+    /// Number of executables compiled so far (observability).
+    pub fn compiled_count(&self) -> usize {
+        self.executables.len()
+    }
+
+    /// Execute an artifact. Inputs are f32 literals; the result tuple is
+    /// decomposed into its elements.
+    pub fn execute(&mut self, name: &str, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let exe = self.executable(name)?;
+        let result = exe
+            .execute::<xla::Literal>(inputs)
+            .map_err(|e| anyhow!("execute {name}: {e:?}"))?;
+        let literal = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetch result of {name}: {e:?}"))?;
+        literal
+            .to_tuple()
+            .map_err(|e| anyhow!("untuple result of {name}: {e:?}"))
+    }
+
+    /// Execute an artifact with device-resident input buffers (§Perf:
+    /// skips the per-call host→device transfer for inputs that don't
+    /// change between calls, e.g. the kNN training set).
+    pub fn execute_buffers(
+        &mut self,
+        name: &str,
+        inputs: &[&xla::PjRtBuffer],
+    ) -> Result<Vec<xla::Literal>> {
+        let exe = self.executable(name)?;
+        let result = exe
+            .execute_b::<&xla::PjRtBuffer>(inputs)
+            .map_err(|e| anyhow!("execute_b {name}: {e:?}"))?;
+        let literal = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetch result of {name}: {e:?}"))?;
+        literal
+            .to_tuple()
+            .map_err(|e| anyhow!("untuple result of {name}: {e:?}"))
+    }
+
+    /// Upload a 1-D f32 buffer to the device.
+    pub fn buffer_vec(&self, xs: &[f32]) -> Result<xla::PjRtBuffer> {
+        self.client
+            .buffer_from_host_buffer(xs, &[xs.len()], None)
+            .map_err(|e| anyhow!("host->device vec: {e:?}"))
+    }
+
+    /// Upload a row-major f32 matrix to the device.
+    pub fn buffer_mat(&self, m: &MatF32) -> Result<xla::PjRtBuffer> {
+        self.client
+            .buffer_from_host_buffer(&m.data, &[m.rows, m.cols], None)
+            .map_err(|e| anyhow!("host->device mat: {e:?}"))
+    }
+
+    // --- literal helpers ---------------------------------------------------
+
+    /// 1-D f32 literal.
+    pub fn lit_vec(xs: &[f32]) -> xla::Literal {
+        xla::Literal::vec1(xs)
+    }
+
+    /// 2-D f32 literal from a row-major matrix.
+    pub fn lit_mat(m: &MatF32) -> Result<xla::Literal> {
+        xla::Literal::vec1(&m.data)
+            .reshape(&[m.rows as i64, m.cols as i64])
+            .map_err(|e| anyhow!("reshape literal: {e:?}"))
+    }
+
+    /// Scalar f32 literal.
+    pub fn lit_scalar(x: f32) -> xla::Literal {
+        xla::Literal::scalar(x)
+    }
+
+    /// Extract an f32 vector from a literal.
+    pub fn vec_from(lit: &xla::Literal) -> Result<Vec<f32>> {
+        lit.to_vec::<f32>()
+            .map_err(|e| anyhow!("literal to_vec: {e:?}"))
+    }
+}
+
+impl std::fmt::Debug for Runtime {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Runtime")
+            .field("dir", &self.dir)
+            .field("manifest", &self.manifest)
+            .field("compiled", &self.executables.keys().collect::<Vec<_>>())
+            .finish()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Skip (with a loud note) when artifacts haven't been built; CI runs
+    /// `make artifacts` first, so these exercise the real PJRT path.
+    macro_rules! require_artifacts {
+        () => {{
+            let dir = Runtime::default_dir();
+            if !Runtime::artifacts_available(&dir) {
+                eprintln!("SKIP: artifacts not built (run `make artifacts`)");
+                return;
+            }
+            dir
+        }};
+    }
+
+    #[test]
+    fn manifest_loads_and_matches_python() {
+        let dir = require_artifacts!();
+        let m = Manifest::load(&dir.join("manifest.csv")).unwrap();
+        assert_eq!(m.feature_dim, 16);
+        assert_eq!(m.opt_params, 1 + 3 * m.feature_dim);
+        assert_eq!(m.knn_train_rows % 64, 0);
+        assert_eq!(m.knn_query_rows % 64, 0);
+        assert!(m.knn_k >= 1);
+    }
+
+    #[test]
+    fn optimistic_predict_executes_and_matches_formula() {
+        let dir = require_artifacts!();
+        let mut rt = Runtime::load(&dir).unwrap();
+        let man = rt.manifest().clone();
+        // params: bias 0.5, all coefficients zero except feature0 linear = 2
+        let mut params = vec![0.0f32; man.opt_params];
+        params[0] = 0.5;
+        params[1] = 2.0;
+        let mut x = MatF32::zeros(man.opt_batch, man.feature_dim);
+        x.set(0, 0, 0.25);
+        x.set(1, 0, 1.0);
+        let out = rt
+            .execute(
+                "optimistic_predict",
+                &[Runtime::lit_vec(&params), Runtime::lit_mat(&x).unwrap()],
+            )
+            .unwrap();
+        let pred = Runtime::vec_from(&out[0]).unwrap();
+        assert_eq!(pred.len(), man.opt_batch);
+        // log1p(0) = 0, inv term has coefficient 0 — only the linear term
+        // contributes: 0.5 + 2*x
+        assert!((pred[0] - 1.0).abs() < 1e-5, "{}", pred[0]);
+        assert!((pred[1] - 2.5).abs() < 1e-5, "{}", pred[1]);
+    }
+
+    #[test]
+    fn knn_predict_executes_exact_neighbour() {
+        let dir = require_artifacts!();
+        let mut rt = Runtime::load(&dir).unwrap();
+        let man = rt.manifest().clone();
+        let mut train_x = MatF32::zeros(man.knn_train_rows, man.feature_dim);
+        let mut train_y = vec![0.0f32; man.knn_train_rows];
+        let mut valid = vec![0.0f32; man.knn_train_rows];
+        // 10 valid rows at distinct positions, runtime = row index
+        for i in 0..10 {
+            train_x.set(i, 0, i as f32);
+            train_y[i] = i as f32;
+            valid[i] = 1.0;
+        }
+        let weights = {
+            let mut w = vec![0.0f32; man.feature_dim];
+            w[0] = 1.0;
+            w
+        };
+        // all queries sit exactly on training row 3
+        let mut queries = MatF32::zeros(man.knn_query_rows, man.feature_dim);
+        for q in 0..man.knn_query_rows {
+            queries.set(q, 0, 3.0);
+        }
+        let out = rt
+            .execute(
+                "knn_predict",
+                &[
+                    Runtime::lit_mat(&train_x).unwrap(),
+                    Runtime::lit_vec(&train_y),
+                    Runtime::lit_vec(&valid),
+                    Runtime::lit_vec(&weights),
+                    Runtime::lit_mat(&queries).unwrap(),
+                ],
+            )
+            .unwrap();
+        let pred = Runtime::vec_from(&out[0]).unwrap();
+        for &p in &pred {
+            assert!((p - 3.0).abs() < 1e-2, "{p}");
+        }
+    }
+
+    #[test]
+    fn optimistic_train_step_reduces_loss() {
+        let dir = require_artifacts!();
+        let mut rt = Runtime::load(&dir).unwrap();
+        let man = rt.manifest().clone();
+        let n = man.opt_batch;
+        // target: y = 1 + 3*x0 over x0 in [0,1]
+        let mut x = MatF32::zeros(n, man.feature_dim);
+        let mut y = vec![0.0f32; n];
+        for i in 0..n {
+            let v = i as f32 / n as f32;
+            x.set(i, 0, v);
+            y[i] = 1.0 + 3.0 * v;
+        }
+        let mask = vec![1.0f32; n];
+        let mut params = vec![0.0f32; man.opt_params];
+        let mut m = vec![0.0f32; man.opt_params];
+        let mut v = vec![0.0f32; man.opt_params];
+        let mut losses = Vec::new();
+        for step in 1..=200 {
+            let out = rt
+                .execute(
+                    "optimistic_train",
+                    &[
+                        Runtime::lit_vec(&params),
+                        Runtime::lit_vec(&m),
+                        Runtime::lit_vec(&v),
+                        Runtime::lit_scalar(step as f32),
+                        Runtime::lit_mat(&x).unwrap(),
+                        Runtime::lit_vec(&y),
+                        Runtime::lit_vec(&mask),
+                        Runtime::lit_scalar(0.05),
+                    ],
+                )
+                .unwrap();
+            params = Runtime::vec_from(&out[0]).unwrap();
+            m = Runtime::vec_from(&out[1]).unwrap();
+            v = Runtime::vec_from(&out[2]).unwrap();
+            losses.push(Runtime::vec_from(&out[3]).unwrap()[0]);
+        }
+        let first = losses[0];
+        let last = *losses.last().unwrap();
+        assert!(last < 0.05 * first, "loss should collapse: {first} -> {last}");
+    }
+
+    #[test]
+    fn executable_cache_hits() {
+        let dir = require_artifacts!();
+        let mut rt = Runtime::load(&dir).unwrap();
+        rt.warmup().unwrap();
+        assert_eq!(rt.compiled_count(), 3);
+        // second warmup is a no-op
+        rt.warmup().unwrap();
+        assert_eq!(rt.compiled_count(), 3);
+    }
+}

@@ -1,0 +1,499 @@
+//! The execution engine: turns (machine type, scale-out, stages) into a
+//! simulated runtime with a per-stage breakdown.
+//!
+//! ## Timing model
+//!
+//! For each stage on a cluster of `n` nodes × `c` vCPUs (relative speed
+//! `p`):
+//!
+//! * **CPU**: per-task CPU work is `cpu_core_s / tasks`; tasks run in
+//!   `ceil(tasks / (n·c))` waves, so
+//!   `t_cpu = waves · cpu_core_s / (tasks · p)`.
+//! * **Disk**: aggregate bandwidth is `n · disk_mb_s` (serial stages: one
+//!   node), so `t_disk = (reads + writes + spill traffic) / (n · disk_mb_s)`.
+//! * **Network**: an all-to-all shuffle moves `(n-1)/n` of the shuffle
+//!   volume across the wire with aggregate bandwidth `n · net_mb_s`:
+//!   `t_net = shuffle · (n-1)/n / (n · net_mb_s)`.
+//! * **Overlap**: `t = ov · max(t_cpu, t_disk, t_net) + (1-ov) · Σ t_i` —
+//!   Spark pipelines I/O with compute imperfectly.
+//! * **Memory**: executor memory per node is
+//!   `spark_exec_fraction · memory`. If the stage's working set per node
+//!   exceeds it, the overflow spills: `2×` the overflow in extra disk
+//!   traffic (write + re-read) plus a CPU serialization penalty
+//!   proportional to the spilled fraction. Because *each iteration stage
+//!   carries the working set*, iterative jobs pay this penalty per
+//!   iteration — the paper's SGD/K-Means memory-bottleneck mechanism.
+//! * **Overheads**: fixed job startup (driver/JVM/context) plus a
+//!   per-stage scheduling barrier that grows mildly with `n`; small jobs
+//!   with many stages (PageRank on MB-scale graphs) are dominated by
+//!   these terms and thus scale poorly (Fig. 6).
+//! * **Variance**: seeded log-normal noise per stage plus occasional
+//!   straggler waves; medians over repetitions are stable.
+
+use crate::cloud::MachineType;
+use crate::sim::stage::{Stage, StageKind};
+use crate::util::rng::Pcg32;
+
+/// Engine tuning constants. Defaults are calibrated so the five workloads
+/// reproduce the paper's qualitative results (see `figures::` benches).
+#[derive(Debug, Clone)]
+pub struct SimConfig {
+    /// Fraction of node RAM available to executor storage+execution
+    /// (Spark's unified memory region ≈ 0.6).
+    pub exec_mem_fraction: f64,
+    /// Fixed job startup in seconds (driver, JVM, YARN negotiation).
+    pub job_startup_s: f64,
+    /// Per-stage scheduling barrier: `a + b·n` seconds.
+    pub stage_overhead_base_s: f64,
+    pub stage_overhead_per_node_s: f64,
+    /// Log-normal sigma of per-stage multiplicative noise.
+    pub noise_sigma: f64,
+    /// Probability that a stage hits a straggler wave, and the
+    /// multiplicative tail it adds.
+    pub straggler_prob: f64,
+    pub straggler_penalty: f64,
+    /// CPU penalty per unit spilled fraction (serialization overhead).
+    pub spill_cpu_penalty: f64,
+}
+
+impl Default for SimConfig {
+    fn default() -> Self {
+        SimConfig {
+            exec_mem_fraction: 0.60,
+            job_startup_s: 12.0,
+            stage_overhead_base_s: 0.9,
+            stage_overhead_per_node_s: 0.05,
+            noise_sigma: 0.04,
+            straggler_prob: 0.06,
+            straggler_penalty: 0.35,
+            spill_cpu_penalty: 0.6,
+        }
+    }
+}
+
+impl SimConfig {
+    /// Noise-free configuration (unit tests / model-form analysis).
+    pub fn deterministic() -> Self {
+        SimConfig {
+            noise_sigma: 0.0,
+            straggler_prob: 0.0,
+            ..SimConfig::default()
+        }
+    }
+}
+
+/// Per-stage execution report.
+#[derive(Debug, Clone)]
+pub struct StageReport {
+    pub name: String,
+    pub kind: StageKind,
+    pub seconds: f64,
+    pub cpu_s: f64,
+    pub disk_s: f64,
+    pub net_s: f64,
+    pub spilled_mb: f64,
+    pub waves: u32,
+}
+
+/// Result of one simulated job execution.
+#[derive(Debug, Clone)]
+pub struct SimulationResult {
+    /// End-to-end job runtime in seconds (excluding cluster provisioning).
+    pub runtime_s: f64,
+    pub stages: Vec<StageReport>,
+    /// Total MB spilled across all stages (0 when memory sufficed).
+    pub total_spilled_mb: f64,
+}
+
+impl SimulationResult {
+    /// True if any stage hit the spill path.
+    pub fn memory_bottlenecked(&self) -> bool {
+        self.total_spilled_mb > 0.0
+    }
+
+    /// Sum of a stage-level field, for reports.
+    pub fn total_cpu_s(&self) -> f64 {
+        self.stages.iter().map(|s| s.cpu_s).sum()
+    }
+}
+
+/// The simulator: executes stage lists against the machine catalog.
+#[derive(Debug, Clone, Default)]
+pub struct Simulator {
+    pub config: SimConfig,
+}
+
+impl Simulator {
+    pub fn new(config: SimConfig) -> Self {
+        Simulator { config }
+    }
+
+    /// Execute `stages` on `n` × `machine`, seeded for reproducible noise.
+    ///
+    /// # Panics
+    /// Panics if a stage fails validation or `n == 0`.
+    pub fn run(
+        &self,
+        machine: &MachineType,
+        n: u32,
+        stages: &[Stage],
+        rng: &mut Pcg32,
+    ) -> SimulationResult {
+        assert!(n > 0, "cluster must have at least one node");
+        let cfg = &self.config;
+        let mut reports = Vec::with_capacity(stages.len());
+        let mut total = cfg.job_startup_s;
+        let mut total_spill = 0.0;
+
+        for stage in stages {
+            stage
+                .validate()
+                .unwrap_or_else(|e| panic!("invalid stage: {e}"));
+            let r = self.run_stage(machine, n, stage, rng);
+            total += r.seconds + cfg.stage_overhead_base_s + cfg.stage_overhead_per_node_s * n as f64;
+            total_spill += r.spilled_mb;
+            reports.push(r);
+        }
+
+        SimulationResult {
+            runtime_s: total,
+            stages: reports,
+            total_spilled_mb: total_spill,
+        }
+    }
+
+    /// Allocation-free fast path: identical timing math to [`Self::run`]
+    /// but returns only the end-to-end runtime (no per-stage reports).
+    /// Used by the corpus generator and the profiling oracle, whose inner
+    /// loops run millions of simulations (§Perf iteration 3).
+    pub fn run_runtime_only(
+        &self,
+        machine: &MachineType,
+        n: u32,
+        stages: &[Stage],
+        rng: &mut Pcg32,
+    ) -> f64 {
+        assert!(n > 0, "cluster must have at least one node");
+        let cfg = &self.config;
+        let mut total = cfg.job_startup_s;
+        for stage in stages {
+            debug_assert!(stage.validate().is_ok());
+            let (seconds, _spilled) = self.stage_time(machine, n, stage, rng);
+            total += seconds + cfg.stage_overhead_base_s + cfg.stage_overhead_per_node_s * n as f64;
+        }
+        total
+    }
+
+    fn run_stage(
+        &self,
+        machine: &MachineType,
+        n: u32,
+        stage: &Stage,
+        rng: &mut Pcg32,
+    ) -> StageReport {
+        let (cpu_s, disk_s, net_s, spilled_mb, waves) = self.stage_phases(machine, n, stage);
+        let seconds = self.combine_and_perturb(stage, cpu_s, disk_s, net_s, waves, rng);
+        StageReport {
+            name: stage.name.clone(),
+            kind: stage.kind,
+            seconds,
+            cpu_s,
+            disk_s,
+            net_s,
+            spilled_mb,
+            waves,
+        }
+    }
+
+    /// Timing math shared by [`Self::run`] and [`Self::run_runtime_only`]:
+    /// (seconds, spilled_mb) for one stage.
+    #[inline]
+    fn stage_time(
+        &self,
+        machine: &MachineType,
+        n: u32,
+        stage: &Stage,
+        rng: &mut Pcg32,
+    ) -> (f64, f64) {
+        let (cpu_s, disk_s, net_s, spilled_mb, waves) = self.stage_phases(machine, n, stage);
+        (
+            self.combine_and_perturb(stage, cpu_s, disk_s, net_s, waves, rng),
+            spilled_mb,
+        )
+    }
+
+    #[inline]
+    fn combine_and_perturb(
+        &self,
+        stage: &Stage,
+        cpu_s: f64,
+        disk_s: f64,
+        net_s: f64,
+        waves: u32,
+        rng: &mut Pcg32,
+    ) -> f64 {
+        let cfg = &self.config;
+        let bound = cpu_s.max(disk_s).max(net_s);
+        let sum = cpu_s + disk_s + net_s;
+        let mut seconds = stage.overlap * bound + (1.0 - stage.overlap) * sum;
+        if cfg.noise_sigma > 0.0 {
+            seconds *= rng.lognormal_noise(cfg.noise_sigma);
+        }
+        if cfg.straggler_prob > 0.0 && rng.chance(cfg.straggler_prob) {
+            // A straggler delays the last wave; impact shrinks with waves.
+            seconds *= 1.0 + cfg.straggler_penalty / waves as f64;
+        }
+        seconds
+    }
+
+    /// Pure phase-time computation: (cpu_s, disk_s, net_s, spilled_mb,
+    /// waves).
+    #[inline]
+    fn stage_phases(
+        &self,
+        machine: &MachineType,
+        n: u32,
+        stage: &Stage,
+    ) -> (f64, f64, f64, f64, u32) {
+        let cfg = &self.config;
+        let serial = stage.kind == StageKind::Serial;
+        let active_nodes = if serial { 1 } else { n } as f64;
+        let slots = if serial {
+            1
+        } else {
+            (n * machine.vcpus).max(1)
+        };
+        let waves = stage.tasks.div_ceil(slots).max(1);
+
+        // --- memory / spill -------------------------------------------------
+        let exec_mem_mb = machine.memory_gib * 1024.0 * cfg.exec_mem_fraction;
+        let ws_per_node = stage.mem_working_set_mb / active_nodes;
+        let overflow_per_node = (ws_per_node - exec_mem_mb).max(0.0);
+        let spilled_mb = overflow_per_node * active_nodes;
+        // Spilled data is written once and re-read once.
+        let spill_disk_mb = 2.0 * spilled_mb;
+        let spill_fraction = if ws_per_node > 0.0 {
+            overflow_per_node / ws_per_node
+        } else {
+            0.0
+        };
+
+        // --- phase times ----------------------------------------------------
+        let per_task_cpu = stage.cpu_core_s / stage.tasks as f64;
+        let cpu_penalty = 1.0 + cfg.spill_cpu_penalty * spill_fraction;
+        let cpu_s = waves as f64 * per_task_cpu * cpu_penalty / machine.cpu_perf;
+
+        let disk_mb = stage.disk_read_mb + stage.disk_write_mb + spill_disk_mb;
+        let disk_s = disk_mb / (active_nodes * machine.disk_mb_s);
+
+        let net_s = if n > 1 && stage.shuffle_mb > 0.0 && !serial {
+            let cross = stage.shuffle_mb * (n as f64 - 1.0) / n as f64;
+            cross / (n as f64 * machine.net_mb_s)
+        } else {
+            0.0
+        };
+
+        (cpu_s, disk_s, net_s, spilled_mb, waves)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cloud::catalog::aws_like_catalog;
+
+    fn machine(name: &str) -> MachineType {
+        aws_like_catalog()
+            .into_iter()
+            .find(|m| m.name == name)
+            .unwrap()
+    }
+
+    fn det_sim() -> Simulator {
+        Simulator::new(SimConfig::deterministic())
+    }
+
+    #[test]
+    fn cpu_bound_stage_scales_with_nodes() {
+        let sim = det_sim();
+        let m = machine("m5.xlarge"); // 4 vcpus
+        let stage = Stage::parallel("compute", 512).with_cpu(4096.0);
+        let mut rng = Pcg32::new(1);
+        let t2 = sim.run(&m, 2, std::slice::from_ref(&stage), &mut rng).runtime_s;
+        let t8 = sim.run(&m, 8, std::slice::from_ref(&stage), &mut rng).runtime_s;
+        // overheads aside, 4x nodes => ~4x faster compute
+        let compute2 = t2 - 12.0 - 0.9 - 0.05 * 2.0;
+        let compute8 = t8 - 12.0 - 0.9 - 0.05 * 8.0;
+        assert!((compute2 / compute8 - 4.0).abs() < 0.05, "{compute2} / {compute8}");
+    }
+
+    #[test]
+    fn serial_stage_ignores_cluster_size() {
+        let sim = det_sim();
+        let m = machine("m5.xlarge");
+        let stage = Stage::serial("write").with_disk(0.0, 1600.0);
+        let mut rng = Pcg32::new(1);
+        let t1 = sim.run(&m, 1, std::slice::from_ref(&stage), &mut rng).runtime_s;
+        let t12 = sim.run(&m, 12, std::slice::from_ref(&stage), &mut rng).runtime_s;
+        // only the per-node stage overhead differs
+        assert!((t12 - t1 - 0.05 * 11.0).abs() < 1e-9, "t1={t1} t12={t12}");
+    }
+
+    #[test]
+    fn spill_occurs_exactly_when_working_set_exceeds_memory() {
+        let sim = det_sim();
+        let m = machine("m5.xlarge"); // 16 GiB, exec 0.6 => 9830.4 MB/node
+        let mut rng = Pcg32::new(1);
+        // 2 nodes: 19660.8 MB capacity
+        let fits = Stage::iteration("it", 64)
+            .with_cpu(100.0)
+            .with_working_set(19_000.0);
+        let r = sim.run(&m, 2, std::slice::from_ref(&fits), &mut rng);
+        assert!(!r.memory_bottlenecked());
+        let spills = Stage::iteration("it", 64)
+            .with_cpu(100.0)
+            .with_working_set(25_000.0);
+        let r = sim.run(&m, 2, std::slice::from_ref(&spills), &mut rng);
+        assert!(r.memory_bottlenecked());
+        assert!((r.total_spilled_mb - (25_000.0 - 19_660.8)).abs() < 1.0);
+        // 4 nodes: fits again
+        let r = sim.run(&m, 4, std::slice::from_ref(&spills), &mut rng);
+        assert!(!r.memory_bottlenecked());
+    }
+
+    #[test]
+    fn spill_makes_doubling_superlinear() {
+        // The Fig. 6 mechanism: speedup(2 -> 4) > 2 when 2 nodes spill.
+        let sim = det_sim();
+        let m = machine("m5.xlarge");
+        let mut rng = Pcg32::new(1);
+        let stages: Vec<Stage> = (0..20)
+            .map(|i| {
+                Stage::iteration(&format!("iter{i}"), 128)
+                    .with_cpu(800.0)
+                    .with_working_set(25_000.0)
+            })
+            .collect();
+        let t2 = sim.run(&m, 2, &stages, &mut rng).runtime_s;
+        let t4 = sim.run(&m, 4, &stages, &mut rng).runtime_s;
+        assert!(t2 / t4 > 2.0, "speedup {}", t2 / t4);
+    }
+
+    #[test]
+    fn shuffle_time_decreases_with_nodes_but_sublinearly() {
+        let sim = det_sim();
+        let m = machine("m5.xlarge");
+        let mut rng = Pcg32::new(1);
+        let stage = Stage::shuffle("x", 256).with_shuffle(32_000.0).with_overlap(0.0);
+        let net = |n: u32| {
+            let mut rng2 = rng.clone();
+            sim.run(&m, n, std::slice::from_ref(&stage), &mut rng2).stages[0].net_s
+        };
+        let t2 = net(2);
+        let t4 = net(4);
+        let t8 = net(8);
+        assert!(t2 > t4 && t4 > t8);
+        // (n-1)/n² scaling: 2 nodes => 0.5/2, 4 nodes => 0.75/4 per MB/s unit
+        let expect_ratio = (0.5 / 2.0) / (0.75 / 4.0);
+        assert!((t2 / t4 - expect_ratio).abs() < 0.05, "{}", t2 / t4);
+    }
+
+    #[test]
+    fn single_node_has_no_network_time() {
+        let sim = det_sim();
+        let m = machine("m5.xlarge");
+        let mut rng = Pcg32::new(1);
+        let stage = Stage::shuffle("x", 16).with_shuffle(10_000.0);
+        let r = sim.run(&m, 1, std::slice::from_ref(&stage), &mut rng);
+        assert_eq!(r.stages[0].net_s, 0.0);
+    }
+
+    #[test]
+    fn faster_cpu_family_wins_cpu_bound() {
+        let sim = det_sim();
+        let c5 = machine("c5.xlarge");
+        let m5 = machine("m5.xlarge");
+        let mut rng = Pcg32::new(1);
+        let stage = Stage::parallel("compute", 256).with_cpu(2000.0).with_overlap(1.0);
+        let tc = sim.run(&c5, 4, std::slice::from_ref(&stage), &mut rng).runtime_s;
+        let tm = sim.run(&m5, 4, std::slice::from_ref(&stage), &mut rng).runtime_s;
+        assert!(tc < tm, "c5 {tc} should beat m5 {tm}");
+    }
+
+    #[test]
+    fn wave_quantization() {
+        let sim = det_sim();
+        let m = machine("m5.xlarge"); // 4 vcpus
+        let mut rng = Pcg32::new(1);
+        // 4 nodes * 4 vcpus = 16 slots; 17 tasks => 2 waves
+        let stage = Stage::parallel("q", 17).with_cpu(17.0).with_overlap(1.0);
+        let r = sim.run(&m, 4, std::slice::from_ref(&stage), &mut rng);
+        assert_eq!(r.stages[0].waves, 2);
+        assert!((r.stages[0].cpu_s - 2.0).abs() < 1e-9); // 2 waves * 1s/task
+    }
+
+    #[test]
+    fn noise_is_seeded_and_median_stable() {
+        let sim = Simulator::new(SimConfig::default());
+        let m = machine("m5.xlarge");
+        let stage = Stage::parallel("n", 64).with_cpu(640.0);
+        let runs: Vec<f64> = (0..5)
+            .map(|rep| {
+                let mut rng = Pcg32::new(100 + rep);
+                sim.run(&m, 4, std::slice::from_ref(&stage), &mut rng).runtime_s
+            })
+            .collect();
+        // same seeds reproduce exactly
+        let runs2: Vec<f64> = (0..5)
+            .map(|rep| {
+                let mut rng = Pcg32::new(100 + rep);
+                sim.run(&m, 4, std::slice::from_ref(&stage), &mut rng).runtime_s
+            })
+            .collect();
+        assert_eq!(runs, runs2);
+        // and vary across seeds
+        assert!(runs.windows(2).any(|w| w[0] != w[1]));
+    }
+
+    #[test]
+    #[should_panic(expected = "invalid stage")]
+    fn invalid_stage_panics() {
+        let sim = det_sim();
+        let m = machine("m5.xlarge");
+        let mut rng = Pcg32::new(1);
+        let bad = Stage::parallel("bad", 0);
+        sim.run(&m, 1, &[bad], &mut rng);
+    }
+}
+
+#[cfg(test)]
+mod fast_path_tests {
+    use super::*;
+    use crate::cloud::catalog::aws_like_catalog;
+    use crate::workloads::JobSpec;
+
+    #[test]
+    fn run_runtime_only_matches_run_exactly() {
+        // same RNG draw sequence => bit-identical runtimes
+        let sim = Simulator::new(SimConfig::default());
+        let machines = aws_like_catalog();
+        for spec in [
+            JobSpec::sort(15.0),
+            JobSpec::grep(12.0, 0.2),
+            JobSpec::sgd(30.0, 100),
+            JobSpec::kmeans(20.0, 7, 0.001),
+            JobSpec::pagerank(330.0, 0.001),
+        ] {
+            let stages = spec.stages();
+            for m in machines.iter().take(3) {
+                for n in [2u32, 6, 12] {
+                    let mut r1 = Pcg32::new(99);
+                    let mut r2 = Pcg32::new(99);
+                    let full = sim.run(m, n, &stages, &mut r1).runtime_s;
+                    let fast = sim.run_runtime_only(m, n, &stages, &mut r2);
+                    assert_eq!(full, fast, "{spec:?} on {} x{n}", m.name);
+                }
+            }
+        }
+    }
+}

@@ -1,0 +1,198 @@
+//! Stage model: the unit of simulated execution.
+//!
+//! A [`Stage`] describes the aggregate resource demands of one Spark-like
+//! stage (a set of tasks between shuffle boundaries). Workloads
+//! (`crate::workloads`) compile a job specification into a `Vec<Stage>`;
+//! the engine executes them in order with a barrier between stages, as
+//! Spark's scheduler does.
+
+/// What kind of stage this is, for reporting and for the engine's
+/// parallelism rules.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum StageKind {
+    /// Embarrassingly parallel over input partitions (map/scan).
+    Parallel,
+    /// All-to-all shuffle boundary (sort exchange, groupBy, join).
+    Shuffle,
+    /// Iterative superstep (one iteration of SGD/K-Means/PageRank);
+    /// scheduled like `Parallel` but annotated for reports.
+    Iteration,
+    /// Serial section — runs on a single node regardless of cluster size
+    /// (e.g. Grep writing matched lines back in original order, driver
+    /// aggregation). The Amdahl term behind Fig. 7.
+    Serial,
+}
+
+/// Aggregate resource demands of one stage.
+///
+/// All quantities are *totals across the stage*, not per task: the engine
+/// divides by cluster parallelism. CPU work is in "normalized core
+/// seconds" (time on one `cpu_perf = 1.0` vCPU).
+#[derive(Debug, Clone)]
+pub struct Stage {
+    /// Human-readable stage label, e.g. `"sort:exchange"`.
+    pub name: String,
+    pub kind: StageKind,
+    /// Number of tasks (partitions). The engine schedules these in waves.
+    pub tasks: u32,
+    /// Total CPU work, normalized core-seconds.
+    pub cpu_core_s: f64,
+    /// Total bytes read from local disk / object store, MB.
+    pub disk_read_mb: f64,
+    /// Total bytes written to local disk / object store, MB.
+    pub disk_write_mb: f64,
+    /// Total bytes exchanged over the network in an all-to-all shuffle, MB.
+    /// The engine scales effective traffic by `(n-1)/n` (local fraction
+    /// stays on-node).
+    pub shuffle_mb: f64,
+    /// Working set that must be memory-resident *across the whole cluster*
+    /// during this stage, MB (e.g. the cached training set for SGD).
+    /// Exceeding per-node executor memory triggers the spill model.
+    pub mem_working_set_mb: f64,
+    /// Fraction of this stage's task time that is pipelined with I/O
+    /// (0 = strictly sequential phases, 1 = perfectly overlapped).
+    pub overlap: f64,
+}
+
+impl Stage {
+    /// A parallel scan stage with sensible defaults (no shuffle, no
+    /// working set, moderate overlap).
+    pub fn parallel(name: &str, tasks: u32) -> Self {
+        Stage {
+            name: name.to_string(),
+            kind: StageKind::Parallel,
+            tasks,
+            cpu_core_s: 0.0,
+            disk_read_mb: 0.0,
+            disk_write_mb: 0.0,
+            shuffle_mb: 0.0,
+            mem_working_set_mb: 0.0,
+            overlap: 0.7,
+        }
+    }
+
+    /// A shuffle stage.
+    pub fn shuffle(name: &str, tasks: u32) -> Self {
+        Stage {
+            kind: StageKind::Shuffle,
+            ..Stage::parallel(name, tasks)
+        }
+    }
+
+    /// An iteration superstep.
+    pub fn iteration(name: &str, tasks: u32) -> Self {
+        Stage {
+            kind: StageKind::Iteration,
+            ..Stage::parallel(name, tasks)
+        }
+    }
+
+    /// A serial (single-node) stage.
+    pub fn serial(name: &str) -> Self {
+        Stage {
+            kind: StageKind::Serial,
+            overlap: 0.0,
+            ..Stage::parallel(name, 1)
+        }
+    }
+
+    pub fn with_cpu(mut self, core_s: f64) -> Self {
+        self.cpu_core_s = core_s;
+        self
+    }
+
+    pub fn with_disk(mut self, read_mb: f64, write_mb: f64) -> Self {
+        self.disk_read_mb = read_mb;
+        self.disk_write_mb = write_mb;
+        self
+    }
+
+    pub fn with_shuffle(mut self, mb: f64) -> Self {
+        self.shuffle_mb = mb;
+        self
+    }
+
+    pub fn with_working_set(mut self, mb: f64) -> Self {
+        self.mem_working_set_mb = mb;
+        self
+    }
+
+    pub fn with_overlap(mut self, overlap: f64) -> Self {
+        assert!((0.0..=1.0).contains(&overlap));
+        self.overlap = overlap;
+        self
+    }
+
+    /// Sanity: all demands non-negative and tasks > 0.
+    pub fn validate(&self) -> Result<(), String> {
+        if self.tasks == 0 {
+            return Err(format!("stage {}: zero tasks", self.name));
+        }
+        for (label, v) in [
+            ("cpu", self.cpu_core_s),
+            ("disk_read", self.disk_read_mb),
+            ("disk_write", self.disk_write_mb),
+            ("shuffle", self.shuffle_mb),
+            ("working_set", self.mem_working_set_mb),
+        ] {
+            if !v.is_finite() || v < 0.0 {
+                return Err(format!("stage {}: bad {label} = {v}", self.name));
+            }
+        }
+        if self.kind == StageKind::Serial && self.tasks != 1 {
+            return Err(format!("stage {}: serial stage must have 1 task", self.name));
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builders_compose() {
+        let s = Stage::parallel("scan", 64)
+            .with_cpu(100.0)
+            .with_disk(1000.0, 0.0)
+            .with_shuffle(500.0)
+            .with_working_set(2000.0)
+            .with_overlap(0.5);
+        assert_eq!(s.tasks, 64);
+        assert_eq!(s.cpu_core_s, 100.0);
+        assert_eq!(s.disk_read_mb, 1000.0);
+        assert_eq!(s.shuffle_mb, 500.0);
+        assert_eq!(s.mem_working_set_mb, 2000.0);
+        assert_eq!(s.overlap, 0.5);
+        assert!(s.validate().is_ok());
+    }
+
+    #[test]
+    fn serial_stage_single_task() {
+        let s = Stage::serial("write_matches");
+        assert_eq!(s.tasks, 1);
+        assert!(s.validate().is_ok());
+        let bad = Stage {
+            tasks: 4,
+            ..Stage::serial("oops")
+        };
+        assert!(bad.validate().is_err());
+    }
+
+    #[test]
+    fn validate_rejects_negative() {
+        let s = Stage::parallel("x", 1).with_cpu(-1.0);
+        assert!(s.validate().is_err());
+        let s = Stage {
+            shuffle_mb: f64::NAN,
+            ..Stage::parallel("y", 1)
+        };
+        assert!(s.validate().is_err());
+    }
+
+    #[test]
+    #[should_panic]
+    fn overlap_out_of_range_panics() {
+        Stage::parallel("x", 1).with_overlap(1.5);
+    }
+}

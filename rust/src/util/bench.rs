@@ -1,0 +1,195 @@
+//! Criterion-style micro/meso benchmark harness for the `harness = false`
+//! bench binaries (criterion itself is not in the offline vendor set).
+//!
+//! Usage in a bench target:
+//!
+//! ```no_run
+//! use c3o::util::bench::Bench;
+//! let mut b = Bench::new("fig6_scaleout");
+//! b.run("simulate_sort_n4", || { /* workload */ });
+//! b.finish();
+//! ```
+//!
+//! Each case is warmed up, then timed for a fixed wall-clock budget; the
+//! report prints iteration counts, mean, and p50/p90/p99 latencies, and is
+//! also appended to `target/bench_results.csv` for the EXPERIMENTS.md
+//! tables.
+
+use std::fs::OpenOptions;
+use std::io::Write as _;
+use std::time::{Duration, Instant};
+
+/// One measured case.
+#[derive(Debug, Clone)]
+pub struct CaseResult {
+    pub name: String,
+    pub iters: u64,
+    pub mean_ns: f64,
+    pub p50_ns: f64,
+    pub p90_ns: f64,
+    pub p99_ns: f64,
+}
+
+impl CaseResult {
+    fn human(ns: f64) -> String {
+        if ns < 1e3 {
+            format!("{ns:.0} ns")
+        } else if ns < 1e6 {
+            format!("{:.2} µs", ns / 1e3)
+        } else if ns < 1e9 {
+            format!("{:.2} ms", ns / 1e6)
+        } else {
+            format!("{:.3} s", ns / 1e9)
+        }
+    }
+}
+
+/// Benchmark group: collects cases, prints a table, persists CSV rows.
+pub struct Bench {
+    group: String,
+    warmup: Duration,
+    budget: Duration,
+    results: Vec<CaseResult>,
+    extra_cols: Vec<(String, String)>,
+}
+
+impl Bench {
+    /// New group with default 0.2 s warmup and 1 s measurement budget.
+    pub fn new(group: &str) -> Self {
+        // Quick mode for smoke runs: C3O_BENCH_QUICK=1 shrinks budgets.
+        let quick = std::env::var("C3O_BENCH_QUICK").is_ok();
+        Bench {
+            group: group.to_string(),
+            warmup: if quick { Duration::from_millis(20) } else { Duration::from_millis(200) },
+            budget: if quick { Duration::from_millis(100) } else { Duration::from_secs(1) },
+            results: Vec::new(),
+            extra_cols: Vec::new(),
+        }
+    }
+
+    /// Override the measurement budget.
+    pub fn with_budget(mut self, warmup: Duration, budget: Duration) -> Self {
+        self.warmup = warmup;
+        self.budget = budget;
+        self
+    }
+
+    /// Attach a key=value annotation emitted with every CSV row
+    /// (e.g. workload parameters).
+    pub fn annotate(&mut self, key: &str, value: &str) {
+        self.extra_cols.push((key.to_string(), value.to_string()));
+    }
+
+    /// Measure a closure. The closure's return value is black-boxed.
+    pub fn run<T, F: FnMut() -> T>(&mut self, name: &str, mut f: F) -> &CaseResult {
+        // Warmup.
+        let start = Instant::now();
+        let mut warm_iters = 0u64;
+        while start.elapsed() < self.warmup || warm_iters < 1 {
+            black_box(f());
+            warm_iters += 1;
+        }
+        // Estimate per-iter cost to pick a batch size that keeps timer
+        // overhead below ~1%.
+        let est_ns = (self.warmup.as_nanos() as f64 / warm_iters.max(1) as f64).max(1.0);
+        let batch = (100.0 / est_ns * 1000.0).clamp(1.0, 10_000.0) as u64;
+
+        let mut samples: Vec<f64> = Vec::new();
+        let mut iters = 0u64;
+        let t0 = Instant::now();
+        while t0.elapsed() < self.budget {
+            let bt = Instant::now();
+            for _ in 0..batch {
+                black_box(f());
+            }
+            let per_iter = bt.elapsed().as_nanos() as f64 / batch as f64;
+            samples.push(per_iter);
+            iters += batch;
+        }
+        samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let mean = samples.iter().sum::<f64>() / samples.len() as f64;
+        let q = |p: f64| samples[((samples.len() - 1) as f64 * p) as usize];
+        let result = CaseResult {
+            name: name.to_string(),
+            iters,
+            mean_ns: mean,
+            p50_ns: q(0.50),
+            p90_ns: q(0.90),
+            p99_ns: q(0.99),
+        };
+        println!(
+            "{:<48} {:>10} iters  mean {:>12}  p50 {:>12}  p99 {:>12}",
+            format!("{}/{}", self.group, name),
+            result.iters,
+            CaseResult::human(result.mean_ns),
+            CaseResult::human(result.p50_ns),
+            CaseResult::human(result.p99_ns),
+        );
+        self.results.push(result);
+        self.results.last().unwrap()
+    }
+
+    /// Print the summary and append rows to `target/bench_results.csv`.
+    pub fn finish(&self) {
+        let path = std::path::Path::new("target/bench_results.csv");
+        if let Some(parent) = path.parent() {
+            let _ = std::fs::create_dir_all(parent);
+        }
+        let add_header = !path.exists();
+        if let Ok(mut f) = OpenOptions::new().create(true).append(true).open(path) {
+            if add_header {
+                let _ = writeln!(f, "group,case,iters,mean_ns,p50_ns,p90_ns,p99_ns,annotations");
+            }
+            let ann = self
+                .extra_cols
+                .iter()
+                .map(|(k, v)| format!("{k}={v}"))
+                .collect::<Vec<_>>()
+                .join(";");
+            for r in &self.results {
+                let _ = writeln!(
+                    f,
+                    "{},{},{},{:.1},{:.1},{:.1},{:.1},{}",
+                    self.group, r.name, r.iters, r.mean_ns, r.p50_ns, r.p90_ns, r.p99_ns, ann
+                );
+            }
+        }
+    }
+
+    /// Access collected results (used by bench binaries that also assert
+    /// reproduction claims).
+    pub fn results(&self) -> &[CaseResult] {
+        &self.results
+    }
+}
+
+/// Opaque value sink that defeats dead-code elimination without `unsafe`.
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something() {
+        let mut b = Bench::new("test").with_budget(
+            Duration::from_millis(5),
+            Duration::from_millis(20),
+        );
+        let r = b.run("noop_sum", || (0..100u64).sum::<u64>()).clone();
+        assert!(r.iters > 0);
+        assert!(r.mean_ns > 0.0);
+        assert!(r.p50_ns <= r.p99_ns);
+    }
+
+    #[test]
+    fn human_units() {
+        assert_eq!(CaseResult::human(500.0), "500 ns");
+        assert_eq!(CaseResult::human(1500.0), "1.50 µs");
+        assert_eq!(CaseResult::human(2.5e6), "2.50 ms");
+        assert_eq!(CaseResult::human(3.2e9), "3.200 s");
+    }
+}

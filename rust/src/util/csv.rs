@@ -1,0 +1,267 @@
+//! Minimal CSV reading and writing (RFC-4180 quoting subset) for the
+//! runtime-data repository and the figure exports.
+//!
+//! Supports quoted fields containing commas/newlines/escaped quotes, which
+//! is all the repository schema needs; no serde in the vendor set.
+
+use std::fmt::Write as _;
+use std::fs;
+use std::io;
+use std::path::Path;
+
+/// A parsed CSV table: a header row plus data rows.
+#[derive(Debug, Clone, Default)]
+pub struct Table {
+    pub header: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    /// Create an empty table with the given header.
+    pub fn new(header: &[&str]) -> Self {
+        Table {
+            header: header.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    /// Index of a column by name.
+    pub fn col(&self, name: &str) -> Option<usize> {
+        self.header.iter().position(|h| h == name)
+    }
+
+    /// Push a row of stringified fields; panics if the width mismatches.
+    pub fn push(&mut self, row: Vec<String>) {
+        assert_eq!(
+            row.len(),
+            self.header.len(),
+            "row width {} != header width {}",
+            row.len(),
+            self.header.len()
+        );
+        self.rows.push(row);
+    }
+
+    /// Serialize to CSV text.
+    pub fn to_csv(&self) -> String {
+        let mut out = String::new();
+        write_row(&mut out, &self.header);
+        for row in &self.rows {
+            write_row(&mut out, row);
+        }
+        out
+    }
+
+    /// Write to a file, creating parent directories.
+    pub fn save(&self, path: &Path) -> io::Result<()> {
+        if let Some(parent) = path.parent() {
+            fs::create_dir_all(parent)?;
+        }
+        fs::write(path, self.to_csv())
+    }
+
+    /// Parse CSV text (first row is the header).
+    pub fn parse(text: &str) -> Result<Table, CsvError> {
+        let mut rows = parse_rows(text)?;
+        if rows.is_empty() {
+            return Ok(Table::default());
+        }
+        let header = rows.remove(0);
+        for (i, row) in rows.iter().enumerate() {
+            if row.len() != header.len() {
+                return Err(CsvError::RaggedRow {
+                    row: i + 2,
+                    got: row.len(),
+                    want: header.len(),
+                });
+            }
+        }
+        Ok(Table { header, rows })
+    }
+
+    /// Load a table from a file.
+    pub fn load(path: &Path) -> Result<Table, CsvError> {
+        let text = fs::read_to_string(path).map_err(|e| CsvError::Io(e.to_string()))?;
+        Table::parse(&text)
+    }
+}
+
+/// CSV parse errors.
+#[derive(Debug, thiserror::Error, PartialEq)]
+pub enum CsvError {
+    #[error("row {row}: has {got} fields, header has {want}")]
+    RaggedRow { row: usize, got: usize, want: usize },
+    #[error("unterminated quoted field starting near byte {at}")]
+    UnterminatedQuote { at: usize },
+    #[error("io error: {0}")]
+    Io(String),
+}
+
+fn needs_quoting(field: &str) -> bool {
+    field.contains(',') || field.contains('"') || field.contains('\n') || field.contains('\r')
+}
+
+fn write_row(out: &mut String, fields: &[String]) {
+    for (i, field) in fields.iter().enumerate() {
+        if i > 0 {
+            out.push(',');
+        }
+        if needs_quoting(field) {
+            out.push('"');
+            for ch in field.chars() {
+                if ch == '"' {
+                    out.push('"');
+                }
+                out.push(ch);
+            }
+            out.push('"');
+        } else {
+            let _ = write!(out, "{field}");
+        }
+    }
+    out.push('\n');
+}
+
+fn parse_rows(text: &str) -> Result<Vec<Vec<String>>, CsvError> {
+    let bytes = text.as_bytes();
+    let mut rows = Vec::new();
+    let mut row: Vec<String> = Vec::new();
+    let mut field = String::new();
+    let mut i = 0usize;
+    let mut in_field = false; // have we consumed any content for the current row?
+
+    while i < bytes.len() {
+        let c = bytes[i];
+        match c {
+            b'"' => {
+                // quoted field
+                let start = i;
+                i += 1;
+                loop {
+                    if i >= bytes.len() {
+                        return Err(CsvError::UnterminatedQuote { at: start });
+                    }
+                    if bytes[i] == b'"' {
+                        if i + 1 < bytes.len() && bytes[i + 1] == b'"' {
+                            field.push('"');
+                            i += 2;
+                        } else {
+                            i += 1;
+                            break;
+                        }
+                    } else {
+                        // multi-byte safe: push raw char
+                        let ch_start = i;
+                        let ch_len = utf8_len(bytes[i]);
+                        field.push_str(std::str::from_utf8(&bytes[ch_start..ch_start + ch_len]).unwrap());
+                        i += ch_len;
+                    }
+                }
+                in_field = true;
+            }
+            b',' => {
+                row.push(std::mem::take(&mut field));
+                in_field = true;
+                i += 1;
+            }
+            b'\r' => {
+                i += 1; // swallow; \n handles row end
+            }
+            b'\n' => {
+                if in_field || !field.is_empty() {
+                    row.push(std::mem::take(&mut field));
+                    rows.push(std::mem::take(&mut row));
+                }
+                in_field = false;
+                i += 1;
+            }
+            _ => {
+                let ch_len = utf8_len(c);
+                field.push_str(std::str::from_utf8(&bytes[i..i + ch_len]).unwrap());
+                i += ch_len;
+                in_field = true;
+            }
+        }
+    }
+    if in_field || !field.is_empty() {
+        row.push(field);
+        rows.push(row);
+    }
+    Ok(rows)
+}
+
+#[inline]
+fn utf8_len(b: u8) -> usize {
+    if b < 0x80 {
+        1
+    } else if b >> 5 == 0b110 {
+        2
+    } else if b >> 4 == 0b1110 {
+        3
+    } else {
+        4
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn round_trip_simple() {
+        let mut t = Table::new(&["a", "b"]);
+        t.push(vec!["1".into(), "2".into()]);
+        t.push(vec!["x".into(), "y".into()]);
+        let parsed = Table::parse(&t.to_csv()).unwrap();
+        assert_eq!(parsed.header, t.header);
+        assert_eq!(parsed.rows, t.rows);
+    }
+
+    #[test]
+    fn round_trip_quoting() {
+        let mut t = Table::new(&["name", "note"]);
+        t.push(vec!["a,b".into(), "say \"hi\"".into()]);
+        t.push(vec!["multi\nline".into(), "".into()]);
+        let parsed = Table::parse(&t.to_csv()).unwrap();
+        assert_eq!(parsed.rows, t.rows);
+    }
+
+    #[test]
+    fn ragged_row_rejected() {
+        let err = Table::parse("a,b\n1,2,3\n").unwrap_err();
+        assert!(matches!(err, CsvError::RaggedRow { .. }));
+    }
+
+    #[test]
+    fn unterminated_quote_rejected() {
+        let err = Table::parse("a\n\"oops\n").unwrap_err();
+        assert!(matches!(err, CsvError::UnterminatedQuote { .. }));
+    }
+
+    #[test]
+    fn crlf_handled() {
+        let t = Table::parse("a,b\r\n1,2\r\n").unwrap();
+        assert_eq!(t.rows, vec![vec!["1".to_string(), "2".to_string()]]);
+    }
+
+    #[test]
+    fn empty_trailing_field() {
+        let t = Table::parse("a,b\n1,\n").unwrap();
+        assert_eq!(t.rows[0], vec!["1".to_string(), "".to_string()]);
+    }
+
+    #[test]
+    fn unicode_fields() {
+        let mut t = Table::new(&["x"]);
+        t.push(vec!["héllo → wörld".into()]);
+        let parsed = Table::parse(&t.to_csv()).unwrap();
+        assert_eq!(parsed.rows, t.rows);
+    }
+
+    #[test]
+    fn col_lookup() {
+        let t = Table::new(&["job", "runtime"]);
+        assert_eq!(t.col("runtime"), Some(1));
+        assert_eq!(t.col("nope"), None);
+    }
+}

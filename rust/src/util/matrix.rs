@@ -1,0 +1,212 @@
+//! Dense row-major matrices over `f32` — the interchange type between the
+//! L3 coordinator and the PJRT runtime (XLA literals are built from these
+//! buffers) and the workhorse of the native model fallbacks.
+
+/// Dense row-major `f32` matrix.
+#[derive(Debug, Clone, PartialEq)]
+pub struct MatF32 {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<f32>,
+}
+
+impl MatF32 {
+    /// Zero-filled matrix.
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        MatF32 {
+            rows,
+            cols,
+            data: vec![0.0; rows * cols],
+        }
+    }
+
+    /// From a row-major buffer; panics if sizes mismatch.
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f32>) -> Self {
+        assert_eq!(data.len(), rows * cols, "buffer size mismatch");
+        MatF32 { rows, cols, data }
+    }
+
+    /// From nested rows; panics on ragged input.
+    pub fn from_rows(rows: &[Vec<f32>]) -> Self {
+        let r = rows.len();
+        let c = rows.first().map_or(0, |x| x.len());
+        let mut data = Vec::with_capacity(r * c);
+        for row in rows {
+            assert_eq!(row.len(), c, "ragged rows");
+            data.extend_from_slice(row);
+        }
+        MatF32 { rows: r, cols: c, data }
+    }
+
+    #[inline]
+    pub fn at(&self, r: usize, c: usize) -> f32 {
+        debug_assert!(r < self.rows && c < self.cols);
+        self.data[r * self.cols + c]
+    }
+
+    #[inline]
+    pub fn set(&mut self, r: usize, c: usize, v: f32) {
+        debug_assert!(r < self.rows && c < self.cols);
+        self.data[r * self.cols + c] = v;
+    }
+
+    /// Borrow row `r` as a slice.
+    #[inline]
+    pub fn row(&self, r: usize) -> &[f32] {
+        &self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    /// Mutable row access.
+    #[inline]
+    pub fn row_mut(&mut self, r: usize) -> &mut [f32] {
+        &mut self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    /// Matrix product `self · other`.
+    pub fn matmul(&self, other: &MatF32) -> MatF32 {
+        assert_eq!(self.cols, other.rows, "inner dimensions must agree");
+        let mut out = MatF32::zeros(self.rows, other.cols);
+        // ikj loop order: streams `other` rows, keeps the accumulator row hot.
+        for i in 0..self.rows {
+            for k in 0..self.cols {
+                let a = self.at(i, k);
+                if a == 0.0 {
+                    continue;
+                }
+                let orow = other.row(k);
+                let out_row = out.row_mut(i);
+                for (o, &b) in out_row.iter_mut().zip(orow) {
+                    *o += a * b;
+                }
+            }
+        }
+        out
+    }
+
+    /// Transpose.
+    pub fn transpose(&self) -> MatF32 {
+        let mut out = MatF32::zeros(self.cols, self.rows);
+        for r in 0..self.rows {
+            for c in 0..self.cols {
+                out.set(c, r, self.at(r, c));
+            }
+        }
+        out
+    }
+
+    /// Column-wise mean and standard deviation (for feature scaling).
+    pub fn col_stats(&self) -> (Vec<f32>, Vec<f32>) {
+        let mut mean = vec![0.0f32; self.cols];
+        let mut sd = vec![0.0f32; self.cols];
+        if self.rows == 0 {
+            return (mean, vec![1.0; self.cols]);
+        }
+        for r in 0..self.rows {
+            for c in 0..self.cols {
+                mean[c] += self.at(r, c);
+            }
+        }
+        for m in &mut mean {
+            *m /= self.rows as f32;
+        }
+        for r in 0..self.rows {
+            for c in 0..self.cols {
+                let d = self.at(r, c) - mean[c];
+                sd[c] += d * d;
+            }
+        }
+        for s in &mut sd {
+            *s = (*s / self.rows as f32).sqrt();
+            if *s < 1e-9 {
+                *s = 1.0; // constant column: don't blow up scaling
+            }
+        }
+        (mean, sd)
+    }
+
+    /// Standardize columns in place given mean/sd (z-scoring).
+    pub fn standardize(&mut self, mean: &[f32], sd: &[f32]) {
+        assert_eq!(mean.len(), self.cols);
+        assert_eq!(sd.len(), self.cols);
+        for r in 0..self.rows {
+            for c in 0..self.cols {
+                let v = (self.at(r, c) - mean[c]) / sd[c];
+                self.set(r, c, v);
+            }
+        }
+    }
+
+    /// Vertically stack two matrices with equal column counts.
+    pub fn vstack(&self, other: &MatF32) -> MatF32 {
+        assert_eq!(self.cols, other.cols);
+        let mut data = self.data.clone();
+        data.extend_from_slice(&other.data);
+        MatF32 {
+            rows: self.rows + other.rows,
+            cols: self.cols,
+            data,
+        }
+    }
+
+    /// Select a subset of rows by index.
+    pub fn select_rows(&self, idx: &[usize]) -> MatF32 {
+        let mut out = MatF32::zeros(idx.len(), self.cols);
+        for (i, &r) in idx.iter().enumerate() {
+            out.row_mut(i).copy_from_slice(self.row(r));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matmul_identity() {
+        let a = MatF32::from_rows(&[vec![1.0, 2.0], vec![3.0, 4.0]]);
+        let i = MatF32::from_rows(&[vec![1.0, 0.0], vec![0.0, 1.0]]);
+        assert_eq!(a.matmul(&i), a);
+    }
+
+    #[test]
+    fn matmul_known() {
+        let a = MatF32::from_rows(&[vec![1.0, 2.0], vec![3.0, 4.0]]);
+        let b = MatF32::from_rows(&[vec![1.0, 1.0], vec![1.0, 1.0]]);
+        let c = a.matmul(&b);
+        assert_eq!(c.data, vec![3.0, 3.0, 7.0, 7.0]);
+    }
+
+    #[test]
+    fn transpose_round_trip() {
+        let a = MatF32::from_rows(&[vec![1.0, 2.0, 3.0], vec![4.0, 5.0, 6.0]]);
+        assert_eq!(a.transpose().transpose(), a);
+        assert_eq!(a.transpose().at(2, 1), 6.0);
+    }
+
+    #[test]
+    fn standardize_zero_mean_unit_var() {
+        let mut a = MatF32::from_rows(&[vec![1.0], vec![3.0], vec![5.0]]);
+        let (m, s) = a.col_stats();
+        a.standardize(&m, &s);
+        let mean: f32 = a.data.iter().sum::<f32>() / 3.0;
+        assert!(mean.abs() < 1e-6);
+    }
+
+    #[test]
+    fn constant_column_sd_is_one() {
+        let a = MatF32::from_rows(&[vec![7.0], vec![7.0]]);
+        let (_, s) = a.col_stats();
+        assert_eq!(s[0], 1.0);
+    }
+
+    #[test]
+    fn vstack_and_select() {
+        let a = MatF32::from_rows(&[vec![1.0, 2.0]]);
+        let b = MatF32::from_rows(&[vec![3.0, 4.0], vec![5.0, 6.0]]);
+        let c = a.vstack(&b);
+        assert_eq!(c.rows, 3);
+        let sel = c.select_rows(&[2, 0]);
+        assert_eq!(sel.data, vec![5.0, 6.0, 1.0, 2.0]);
+    }
+}

@@ -1,0 +1,26 @@
+//! Self-contained utility layer.
+//!
+//! The offline build environment ships only the `xla` crate and its
+//! transitive dependencies, so everything that would normally come from
+//! `rand`, `serde`, `criterion`, or `proptest` is implemented here:
+//!
+//! * [`rng`] — a deterministic PCG32 generator (the corpus, the simulator's
+//!   variance model, and all property tests are seeded and reproducible).
+//! * [`stats`] — medians, quantiles, means, linear regression, MAPE/SMAPE.
+//! * [`csv`] — minimal CSV reading/writing for the runtime-data repository.
+//! * [`json`] — minimal JSON writer for metrics/figure exports.
+//! * [`bench`] — a tiny criterion-style harness used by the
+//!   `harness = false` bench binaries (warmup, timed iterations,
+//!   percentile reporting).
+//! * [`prop`] — a miniature property-testing driver (seeded case
+//!   generation + first-failure minimization by case index).
+//! * [`matrix`] — dense row-major f32/f64 matrices used by the native
+//!   model fallbacks and the PJRT bridge.
+
+pub mod bench;
+pub mod csv;
+pub mod json;
+pub mod matrix;
+pub mod prop;
+pub mod rng;
+pub mod stats;

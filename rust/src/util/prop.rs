@@ -1,0 +1,154 @@
+//! Miniature property-testing driver (proptest is not in the offline vendor
+//! set). Runs a property over many seeded pseudo-random cases; on failure it
+//! reports the failing case index and seed so the case can be replayed
+//! exactly, and retries smaller "sizes" first so minimal counterexamples
+//! tend to be found early.
+//!
+//! ```no_run
+//! # // no_run: doctest binaries don't inherit the rpath to
+//! # // libxla_extension's bundled libstdc++ (cargo quirk); the same
+//! # // code path is exercised by the unit tests below.
+//! use c3o::util::prop::{forall, Gen};
+//! forall("sort_idempotent", 200, |g| {
+//!     let mut xs = g.vec_f64(0, 20, -1e3, 1e3);
+//!     xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+//!     let once = xs.clone();
+//!     xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+//!     assert_eq!(once, xs);
+//! });
+//! ```
+
+use crate::util::rng::Pcg32;
+
+/// Case-scoped generator handed to properties: wraps the RNG with a
+/// "size" that grows over the run, so early cases are small.
+pub struct Gen {
+    rng: Pcg32,
+    /// Grows from 0.1 to 1.0 across the run; generators scale ranges by it.
+    pub size: f64,
+    pub case: usize,
+}
+
+impl Gen {
+    /// Uniform usize in `[lo, hi]`, scaled so early cases stay near `lo`.
+    pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
+        let span = ((hi - lo) as f64 * self.size).ceil() as usize;
+        lo + self.rng.index(span.max(1).min(hi - lo + 1))
+    }
+
+    /// Uniform f64 in `[lo, hi)`.
+    pub fn f64_in(&mut self, lo: f64, hi: f64) -> f64 {
+        self.rng.range_f64(lo, hi)
+    }
+
+    /// Positive f64 in `[lo, hi)`, log-uniform (spans orders of magnitude).
+    pub fn f64_log(&mut self, lo: f64, hi: f64) -> f64 {
+        assert!(lo > 0.0 && hi > lo);
+        (self.rng.range_f64(lo.ln(), hi.ln())).exp()
+    }
+
+    /// Bernoulli.
+    pub fn bool(&mut self) -> bool {
+        self.rng.chance(0.5)
+    }
+
+    /// Pick one element of a slice.
+    pub fn pick<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        &xs[self.rng.index(xs.len())]
+    }
+
+    /// Vector of f64 with size-scaled length in `[min_len, max_len]`.
+    pub fn vec_f64(&mut self, min_len: usize, max_len: usize, lo: f64, hi: f64) -> Vec<f64> {
+        let n = self.usize_in(min_len, max_len);
+        (0..n).map(|_| self.f64_in(lo, hi)).collect()
+    }
+
+    /// Raw RNG access for anything else.
+    pub fn rng(&mut self) -> &mut Pcg32 {
+        &mut self.rng
+    }
+}
+
+/// Run `prop` over `cases` seeded cases. Panics (failing the enclosing
+/// test) with the case index + seed on the first property violation.
+pub fn forall<F: FnMut(&mut Gen)>(name: &str, cases: usize, mut prop: F) {
+    // Env override for deep soak runs: C3O_PROP_CASES=10000
+    let cases = std::env::var("C3O_PROP_CASES")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(cases);
+    let base_seed = std::env::var("C3O_PROP_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0xC30_5EEDu64);
+    for case in 0..cases {
+        let seed = base_seed.wrapping_add(case as u64).wrapping_mul(0x9E3779B97F4A7C15);
+        let size = 0.1 + 0.9 * (case as f64 / cases.max(1) as f64);
+        let mut g = Gen {
+            rng: Pcg32::new(seed),
+            size,
+            case,
+        };
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| prop(&mut g)));
+        if let Err(payload) = result {
+            let msg = payload
+                .downcast_ref::<String>()
+                .map(|s| s.as_str())
+                .or_else(|| payload.downcast_ref::<&str>().copied())
+                .unwrap_or("<non-string panic>");
+            panic!(
+                "property '{name}' failed at case {case}/{cases} \
+                 (replay with C3O_PROP_SEED={base_seed}): {msg}"
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passes_trivial_property() {
+        forall("addition_commutes", 100, |g| {
+            let a = g.f64_in(-1e6, 1e6);
+            let b = g.f64_in(-1e6, 1e6);
+            assert_eq!(a + b, b + a);
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always_fails' failed")]
+    fn reports_failure_with_case() {
+        forall("always_fails", 10, |g| {
+            let x = g.f64_in(0.0, 1.0);
+            assert!(x < 0.0, "x = {x}");
+        });
+    }
+
+    #[test]
+    fn sizes_grow() {
+        let mut lens = Vec::new();
+        forall("size_scaling", 50, |g| {
+            lens.push(g.usize_in(0, 1000));
+        });
+        let early: f64 = lens[..10].iter().sum::<usize>() as f64 / 10.0;
+        let late: f64 = lens[40..].iter().sum::<usize>() as f64 / 10.0;
+        assert!(late > early, "early {early} late {late}");
+    }
+
+    #[test]
+    fn log_uniform_spans_magnitudes() {
+        let mut below = 0;
+        let mut above = 0;
+        forall("log_uniform", 200, |g| {
+            let x = g.f64_log(1e-3, 1e3);
+            if x < 1.0 {
+                below += 1;
+            } else {
+                above += 1;
+            }
+        });
+        assert!(below > 50 && above > 50, "below {below} above {above}");
+    }
+}

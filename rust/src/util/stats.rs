@@ -1,0 +1,348 @@
+//! Statistics helpers used across the simulator, the models, and the
+//! figure/bench harnesses: robust location estimates (the paper reports the
+//! *median of five repetitions* per experiment), error metrics for the
+//! prediction models (MAPE/SMAPE), and small least-squares fits used by the
+//! figure regenerators (linearity checks, Fig. 4) and the Ernest baseline.
+
+/// Median of a slice (averaging the two middle elements for even length).
+/// Returns `NaN` for an empty slice.
+pub fn median(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return f64::NAN;
+    }
+    let mut v = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let n = v.len();
+    if n % 2 == 1 {
+        v[n / 2]
+    } else {
+        0.5 * (v[n / 2 - 1] + v[n / 2])
+    }
+}
+
+/// Arithmetic mean; `NaN` for an empty slice.
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return f64::NAN;
+    }
+    xs.iter().sum::<f64>() / xs.len() as f64
+}
+
+/// Population standard deviation; `NaN` for an empty slice.
+pub fn std_dev(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return f64::NAN;
+    }
+    let m = mean(xs);
+    (xs.iter().map(|x| (x - m).powi(2)).sum::<f64>() / xs.len() as f64).sqrt()
+}
+
+/// Linear-interpolated quantile, `q` in `[0, 1]`.
+pub fn quantile(xs: &[f64], q: f64) -> f64 {
+    if xs.is_empty() {
+        return f64::NAN;
+    }
+    let mut v = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let pos = q.clamp(0.0, 1.0) * (v.len() - 1) as f64;
+    let lo = pos.floor() as usize;
+    let hi = pos.ceil() as usize;
+    if lo == hi {
+        v[lo]
+    } else {
+        v[lo] + (pos - lo as f64) * (v[hi] - v[lo])
+    }
+}
+
+/// Mean absolute percentage error of predictions vs. true values.
+/// Entries with `truth == 0` are skipped.
+pub fn mape(pred: &[f64], truth: &[f64]) -> f64 {
+    assert_eq!(pred.len(), truth.len());
+    let mut total = 0.0;
+    let mut n = 0usize;
+    for (&p, &t) in pred.iter().zip(truth) {
+        if t != 0.0 {
+            total += ((p - t) / t).abs();
+            n += 1;
+        }
+    }
+    if n == 0 {
+        f64::NAN
+    } else {
+        100.0 * total / n as f64
+    }
+}
+
+/// Symmetric MAPE in `[0, 200]`.
+pub fn smape(pred: &[f64], truth: &[f64]) -> f64 {
+    assert_eq!(pred.len(), truth.len());
+    let mut total = 0.0;
+    let mut n = 0usize;
+    for (&p, &t) in pred.iter().zip(truth) {
+        let denom = (p.abs() + t.abs()) / 2.0;
+        if denom > 0.0 {
+            total += (p - t).abs() / denom;
+            n += 1;
+        }
+    }
+    if n == 0 {
+        f64::NAN
+    } else {
+        100.0 * total / n as f64
+    }
+}
+
+/// Pearson correlation coefficient of two equal-length series.
+pub fn pearson(xs: &[f64], ys: &[f64]) -> f64 {
+    assert_eq!(xs.len(), ys.len());
+    let n = xs.len();
+    if n < 2 {
+        return f64::NAN;
+    }
+    let mx = mean(xs);
+    let my = mean(ys);
+    let mut sxy = 0.0;
+    let mut sxx = 0.0;
+    let mut syy = 0.0;
+    for i in 0..n {
+        let dx = xs[i] - mx;
+        let dy = ys[i] - my;
+        sxy += dx * dy;
+        sxx += dx * dx;
+        syy += dy * dy;
+    }
+    if sxx == 0.0 || syy == 0.0 {
+        return 0.0;
+    }
+    sxy / (sxx * syy).sqrt()
+}
+
+/// Ordinary least squares fit `y = a + b x`; returns `(a, b, r2)`.
+pub fn linfit(xs: &[f64], ys: &[f64]) -> (f64, f64, f64) {
+    assert_eq!(xs.len(), ys.len());
+    let n = xs.len() as f64;
+    assert!(n >= 2.0, "need at least two points");
+    let mx = mean(xs);
+    let my = mean(ys);
+    let mut sxy = 0.0;
+    let mut sxx = 0.0;
+    for (&x, &y) in xs.iter().zip(ys) {
+        sxy += (x - mx) * (y - my);
+        sxx += (x - mx) * (x - mx);
+    }
+    let b = if sxx == 0.0 { 0.0 } else { sxy / sxx };
+    let a = my - b * mx;
+    // R² against the mean model.
+    let ss_tot: f64 = ys.iter().map(|y| (y - my).powi(2)).sum();
+    let ss_res: f64 = xs
+        .iter()
+        .zip(ys)
+        .map(|(&x, &y)| (y - (a + b * x)).powi(2))
+        .sum();
+    let r2 = if ss_tot == 0.0 { 1.0 } else { 1.0 - ss_res / ss_tot };
+    (a, b, r2)
+}
+
+/// Multi-feature ordinary least squares via normal equations with ridge
+/// damping (`lambda`). `x` is row-major `n × d`; returns `d` coefficients.
+/// Used by the Ernest baseline's parametric fit (with non-negativity
+/// enforced by projected gradient refinement in the caller).
+pub fn ridge_fit(x: &[f64], n: usize, d: usize, y: &[f64], lambda: f64) -> Vec<f64> {
+    assert_eq!(x.len(), n * d);
+    assert_eq!(y.len(), n);
+    // A = XᵀX + λI  (d×d), b = Xᵀy
+    let mut a = vec![0.0f64; d * d];
+    let mut b = vec![0.0f64; d];
+    for i in 0..n {
+        let row = &x[i * d..(i + 1) * d];
+        for j in 0..d {
+            b[j] += row[j] * y[i];
+            for k in 0..d {
+                a[j * d + k] += row[j] * row[k];
+            }
+        }
+    }
+    for j in 0..d {
+        a[j * d + j] += lambda;
+    }
+    solve_dense(&mut a, &mut b, d);
+    b
+}
+
+/// In-place Gaussian elimination with partial pivoting: solves `A x = b`,
+/// leaving the solution in `b`. `a` is row-major `d × d` and is destroyed.
+pub fn solve_dense(a: &mut [f64], b: &mut [f64], d: usize) {
+    for col in 0..d {
+        // pivot
+        let mut piv = col;
+        let mut best = a[col * d + col].abs();
+        for r in (col + 1)..d {
+            let v = a[r * d + col].abs();
+            if v > best {
+                best = v;
+                piv = r;
+            }
+        }
+        if best < 1e-12 {
+            continue; // singular direction; leave as-is (ridge prevents this)
+        }
+        if piv != col {
+            for c in 0..d {
+                a.swap(col * d + c, piv * d + c);
+            }
+            b.swap(col, piv);
+        }
+        let diag = a[col * d + col];
+        for r in (col + 1)..d {
+            let f = a[r * d + col] / diag;
+            if f == 0.0 {
+                continue;
+            }
+            for c in col..d {
+                a[r * d + c] -= f * a[col * d + c];
+            }
+            b[r] -= f * b[col];
+        }
+    }
+    // back substitution
+    for col in (0..d).rev() {
+        let diag = a[col * d + col];
+        if diag.abs() < 1e-12 {
+            b[col] = 0.0;
+            continue;
+        }
+        let mut acc = b[col];
+        for c in (col + 1)..d {
+            acc -= a[col * d + c] * b[c];
+        }
+        b[col] = acc / diag;
+    }
+}
+
+/// Normalized root-mean-square deviation between two curves, used by the
+/// Fig. 7 harness to quantify whether a factor changes the *shape* of a
+/// scale-out curve (curves are first normalized by their own mean).
+pub fn curve_shape_divergence(a: &[f64], b: &[f64]) -> f64 {
+    assert_eq!(a.len(), b.len());
+    assert!(!a.is_empty());
+    let ma = mean(a);
+    let mb = mean(b);
+    let mut acc = 0.0;
+    for i in 0..a.len() {
+        let na = a[i] / ma;
+        let nb = b[i] / mb;
+        acc += (na - nb).powi(2);
+    }
+    (acc / a.len() as f64).sqrt()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn median_odd_even_empty() {
+        assert_eq!(median(&[3.0, 1.0, 2.0]), 2.0);
+        assert_eq!(median(&[4.0, 1.0, 2.0, 3.0]), 2.5);
+        assert!(median(&[]).is_nan());
+    }
+
+    #[test]
+    fn quantiles() {
+        let xs = [1.0, 2.0, 3.0, 4.0, 5.0];
+        assert_eq!(quantile(&xs, 0.0), 1.0);
+        assert_eq!(quantile(&xs, 0.5), 3.0);
+        assert_eq!(quantile(&xs, 1.0), 5.0);
+        assert_eq!(quantile(&xs, 0.25), 2.0);
+    }
+
+    #[test]
+    fn mape_basic() {
+        let e = mape(&[110.0, 90.0], &[100.0, 100.0]);
+        assert!((e - 10.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn mape_skips_zero_truth() {
+        let e = mape(&[110.0, 50.0], &[100.0, 0.0]);
+        assert!((e - 10.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn smape_symmetric() {
+        let a = smape(&[110.0], &[100.0]);
+        let b = smape(&[100.0], &[110.0]);
+        assert!((a - b).abs() < 1e-9);
+    }
+
+    #[test]
+    fn pearson_perfect() {
+        let xs = [1.0, 2.0, 3.0, 4.0];
+        let ys = [2.0, 4.0, 6.0, 8.0];
+        assert!((pearson(&xs, &ys) - 1.0).abs() < 1e-12);
+        let neg = [8.0, 6.0, 4.0, 2.0];
+        assert!((pearson(&xs, &neg) + 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn linfit_exact_line() {
+        let xs = [0.0, 1.0, 2.0, 3.0];
+        let ys = [1.0, 3.0, 5.0, 7.0];
+        let (a, b, r2) = linfit(&xs, &ys);
+        assert!((a - 1.0).abs() < 1e-9);
+        assert!((b - 2.0).abs() < 1e-9);
+        assert!((r2 - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn linfit_r2_drops_for_nonlinear() {
+        let xs: Vec<f64> = (1..=10).map(|i| i as f64).collect();
+        let ys: Vec<f64> = xs.iter().map(|x| x * x).collect();
+        let (_, _, r2) = linfit(&xs, &ys);
+        assert!(r2 < 0.99, "quadratic should not fit perfectly: {r2}");
+    }
+
+    #[test]
+    fn ridge_recovers_coefficients() {
+        // y = 2 x0 + 3 x1 on a small grid
+        let mut x = Vec::new();
+        let mut y = Vec::new();
+        for i in 0..10 {
+            for j in 0..10 {
+                x.push(i as f64);
+                x.push(j as f64);
+                y.push(2.0 * i as f64 + 3.0 * j as f64);
+            }
+        }
+        let w = ridge_fit(&x, 100, 2, &y, 1e-9);
+        assert!((w[0] - 2.0).abs() < 1e-6, "{w:?}");
+        assert!((w[1] - 3.0).abs() < 1e-6, "{w:?}");
+    }
+
+    #[test]
+    fn solve_dense_identity() {
+        let mut a = vec![1.0, 0.0, 0.0, 1.0];
+        let mut b = vec![5.0, -3.0];
+        solve_dense(&mut a, &mut b, 2);
+        assert_eq!(b, vec![5.0, -3.0]);
+    }
+
+    #[test]
+    fn solve_dense_pivoting() {
+        // requires row swap: first pivot is 0
+        let mut a = vec![0.0, 1.0, 1.0, 0.0];
+        let mut b = vec![2.0, 3.0];
+        solve_dense(&mut a, &mut b, 2);
+        assert!((b[0] - 3.0).abs() < 1e-12);
+        assert!((b[1] - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn shape_divergence_zero_for_scaled_curves() {
+        let a = [1.0, 2.0, 4.0];
+        let b = [10.0, 20.0, 40.0];
+        assert!(curve_shape_divergence(&a, &b) < 1e-12);
+        let c = [4.0, 2.0, 1.0];
+        assert!(curve_shape_divergence(&a, &c) > 0.1);
+    }
+}

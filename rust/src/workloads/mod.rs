@@ -1,0 +1,561 @@
+//! The five benchmark jobs of Table I, compiled to simulator stages.
+//!
+//! Each job is described by a [`JobSpec`] (its dataset characteristics and
+//! algorithm parameters — exactly the features the paper's models consume)
+//! and compiled by [`JobSpec::stages`] into the stage list the engine
+//! executes. The cost model constants in [`WorkloadCosts`] are calibrated
+//! so the five jobs reproduce the paper's phenomena *mechanistically*:
+//!
+//! * **Sort** — disk/network bound two-stage exchange; runtime linear in
+//!   dataset size (Fig. 4).
+//! * **Grep** — a parallel scan plus a **serial** stage that writes
+//!   matched lines back in their original order (the paper's §IV-B4
+//!   explanation). The serial fraction grows with the keyword-occurrence
+//!   ratio, which is why the ratio changes the scale-out *shape* while
+//!   dataset size does not (Fig. 7).
+//! * **SGD** — caches the training set (working set = dataset), then runs
+//!   gradient iterations; saturating effective-iteration count makes
+//!   runtime nonlinear in `max_iterations` (Fig. 5); the per-iteration
+//!   working set triggers the memory-bottleneck of Figs. 3/6.
+//! * **K-Means** — likewise cached + iterative; iterations grow
+//!   super-linearly with `k`, per-iteration cost is `∝ points · k`
+//!   (Fig. 5's nonlinear cluster-count curve).
+//! * **PageRank** — MB-scale graph, tens of shuffle-heavy supersteps whose
+//!   per-iteration fixed overheads dominate: scales poorly (Fig. 6);
+//!   iteration count is logarithmic in the convergence criterion
+//!   (Fig. 5's nonlinear convergence curve).
+
+pub mod grid;
+
+pub use grid::{Corpus, Experiment, ExperimentGrid};
+
+use crate::sim::stage::Stage;
+
+/// The five distributed dataflow jobs of Table I.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum JobKind {
+    Sort,
+    Grep,
+    Sgd,
+    KMeans,
+    PageRank,
+}
+
+impl JobKind {
+    /// All kinds, in Table-I order.
+    pub fn all() -> [JobKind; 5] {
+        [
+            JobKind::Sort,
+            JobKind::Grep,
+            JobKind::Sgd,
+            JobKind::KMeans,
+            JobKind::PageRank,
+        ]
+    }
+
+    /// Stable lowercase name used in repositories and CSV files.
+    pub fn name(self) -> &'static str {
+        match self {
+            JobKind::Sort => "sort",
+            JobKind::Grep => "grep",
+            JobKind::Sgd => "sgd",
+            JobKind::KMeans => "kmeans",
+            JobKind::PageRank => "pagerank",
+        }
+    }
+
+    /// Parse from the stable name.
+    pub fn parse(s: &str) -> Option<JobKind> {
+        JobKind::all().into_iter().find(|k| k.name() == s)
+    }
+
+    /// Names of the job-specific feature columns (dataset characteristics
+    /// + algorithm parameters), in the order [`JobSpec::job_features`]
+    /// emits them. Cluster features (scale-out, machine descriptors) are
+    /// appended by the repository layer.
+    pub fn feature_names(self) -> &'static [&'static str] {
+        match self {
+            JobKind::Sort => &["data_gb"],
+            JobKind::Grep => &["data_gb", "keyword_ratio"],
+            JobKind::Sgd => &["data_gb", "max_iterations"],
+            JobKind::KMeans => &["data_gb", "num_clusters", "convergence"],
+            JobKind::PageRank => &["graph_mb", "convergence"],
+        }
+    }
+}
+
+impl std::fmt::Display for JobKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// A fully parameterized job: kind + dataset characteristics + parameters.
+#[derive(Debug, Clone, PartialEq)]
+pub enum JobSpec {
+    /// Sort `data_gb` GB of lines of random characters.
+    Sort { data_gb: f64 },
+    /// Grep for a fixed keyword in `data_gb` GB of lines; `keyword_ratio`
+    /// is the fraction of lines containing it (the characteristic the
+    /// paper says matters more than the keyword itself).
+    Grep { data_gb: f64, keyword_ratio: f64 },
+    /// Logistic-regression SGD over `data_gb` GB of labeled points.
+    Sgd { data_gb: f64, max_iterations: u32 },
+    /// K-Means over `data_gb` GB of points.
+    KMeans {
+        data_gb: f64,
+        num_clusters: u32,
+        convergence: f64,
+    },
+    /// PageRank over a `graph_mb` MB edge list.
+    PageRank { graph_mb: f64, convergence: f64 },
+}
+
+impl JobSpec {
+    pub fn sort(data_gb: f64) -> Self {
+        JobSpec::Sort { data_gb }
+    }
+    pub fn grep(data_gb: f64, keyword_ratio: f64) -> Self {
+        JobSpec::Grep {
+            data_gb,
+            keyword_ratio,
+        }
+    }
+    pub fn sgd(data_gb: f64, max_iterations: u32) -> Self {
+        JobSpec::Sgd {
+            data_gb,
+            max_iterations,
+        }
+    }
+    pub fn kmeans(data_gb: f64, num_clusters: u32, convergence: f64) -> Self {
+        JobSpec::KMeans {
+            data_gb,
+            num_clusters,
+            convergence,
+        }
+    }
+    pub fn pagerank(graph_mb: f64, convergence: f64) -> Self {
+        JobSpec::PageRank {
+            graph_mb,
+            convergence,
+        }
+    }
+
+    /// Which of the five jobs this is.
+    pub fn kind(&self) -> JobKind {
+        match self {
+            JobSpec::Sort { .. } => JobKind::Sort,
+            JobSpec::Grep { .. } => JobKind::Grep,
+            JobSpec::Sgd { .. } => JobKind::Sgd,
+            JobSpec::KMeans { .. } => JobKind::KMeans,
+            JobSpec::PageRank { .. } => JobKind::PageRank,
+        }
+    }
+
+    /// Job-specific feature values, aligned with
+    /// [`JobKind::feature_names`]. Convergence criteria are emitted as
+    /// `-log10` so the feature scales comparably to the others.
+    pub fn job_features(&self) -> Vec<f64> {
+        match *self {
+            JobSpec::Sort { data_gb } => vec![data_gb],
+            JobSpec::Grep {
+                data_gb,
+                keyword_ratio,
+            } => vec![data_gb, keyword_ratio],
+            JobSpec::Sgd {
+                data_gb,
+                max_iterations,
+            } => vec![data_gb, max_iterations as f64],
+            JobSpec::KMeans {
+                data_gb,
+                num_clusters,
+                convergence,
+            } => vec![data_gb, num_clusters as f64, -convergence.log10()],
+            JobSpec::PageRank {
+                graph_mb,
+                convergence,
+            } => vec![graph_mb, -convergence.log10()],
+        }
+    }
+
+    /// Compile the job into simulator stages using the default cost model.
+    pub fn stages(&self) -> Vec<Stage> {
+        self.stages_with(&WorkloadCosts::default())
+    }
+
+    /// Compile with explicit cost constants (calibration ablations).
+    pub fn stages_with(&self, c: &WorkloadCosts) -> Vec<Stage> {
+        match *self {
+            JobSpec::Sort { data_gb } => sort_stages(data_gb, c),
+            JobSpec::Grep {
+                data_gb,
+                keyword_ratio,
+            } => grep_stages(data_gb, keyword_ratio, c),
+            JobSpec::Sgd {
+                data_gb,
+                max_iterations,
+            } => sgd_stages(data_gb, max_iterations, c),
+            JobSpec::KMeans {
+                data_gb,
+                num_clusters,
+                convergence,
+            } => kmeans_stages(data_gb, num_clusters, convergence, c),
+            JobSpec::PageRank {
+                graph_mb,
+                convergence,
+            } => pagerank_stages(graph_mb, convergence, c),
+        }
+    }
+}
+
+/// Cost-model constants (normalized core-seconds per MB, etc.).
+///
+/// These play the role of the real systems' instruction mix: they were
+/// hand-calibrated once so that absolute runtimes land in the same band
+/// as the paper's EMR runs (minutes for 10–30 GB inputs on 2–12 nodes)
+/// and all qualitative figure shapes reproduce. They are *not* fitted per
+/// experiment.
+#[derive(Debug, Clone)]
+pub struct WorkloadCosts {
+    /// HDFS-like input partition size, MB (tasks = size / partition).
+    pub partition_mb: f64,
+    pub sort_map_cpu_per_mb: f64,
+    pub sort_sort_cpu_per_mb: f64,
+    pub grep_scan_cpu_per_mb: f64,
+    pub grep_write_cpu_per_mb: f64,
+    pub sgd_parse_cpu_per_mb: f64,
+    pub sgd_iter_cpu_per_mb: f64,
+    /// Iterations at which SGD converges (saturates `max_iterations`):
+    /// `eff = min(max_iter, base + slope · data_gb)`.
+    pub sgd_converge_base: f64,
+    pub sgd_converge_per_gb: f64,
+    pub kmeans_parse_cpu_per_mb: f64,
+    /// Per-iteration CPU is `kmeans_iter_cpu_per_mb_k · mb · k`.
+    pub kmeans_iter_cpu_per_mb_k: f64,
+    /// K-Means iterations: `round(kmeans_iter_scale · k^1.5 · log10(1/conv)/3)`.
+    pub kmeans_iter_scale: f64,
+    pub pagerank_build_cpu_per_mb: f64,
+    pub pagerank_iter_cpu_per_mb: f64,
+    /// PageRank damping factor: iterations = `ln(conv)/ln(damping)`.
+    pub pagerank_damping: f64,
+    /// PageRank in-memory working set multiplier over the edge list.
+    pub pagerank_ws_factor: f64,
+}
+
+impl Default for WorkloadCosts {
+    fn default() -> Self {
+        WorkloadCosts {
+            partition_mb: 128.0,
+            sort_map_cpu_per_mb: 0.003,
+            sort_sort_cpu_per_mb: 0.008,
+            grep_scan_cpu_per_mb: 0.002,
+            grep_write_cpu_per_mb: 0.0005,
+            sgd_parse_cpu_per_mb: 0.004,
+            sgd_iter_cpu_per_mb: 0.0025,
+            sgd_converge_base: 48.0,
+            sgd_converge_per_gb: 0.3,
+            kmeans_parse_cpu_per_mb: 0.004,
+            kmeans_iter_cpu_per_mb_k: 0.0004,
+            kmeans_iter_scale: 1.8,
+            pagerank_build_cpu_per_mb: 0.02,
+            pagerank_iter_cpu_per_mb: 0.012,
+            pagerank_damping: 0.85,
+            pagerank_ws_factor: 3.0,
+        }
+    }
+}
+
+fn tasks_for(mb: f64, c: &WorkloadCosts) -> u32 {
+    ((mb / c.partition_mb).ceil() as u32).max(1)
+}
+
+fn sort_stages(data_gb: f64, c: &WorkloadCosts) -> Vec<Stage> {
+    let mb = data_gb * 1024.0;
+    let tasks = tasks_for(mb, c);
+    vec![
+        // Read input, range-partition, write shuffle files.
+        Stage::parallel("sort:map", tasks)
+            .with_cpu(c.sort_map_cpu_per_mb * mb)
+            .with_disk(mb, mb),
+        // Fetch (all-to-all), sort partitions, write output.
+        Stage::shuffle("sort:reduce", tasks)
+            .with_cpu(c.sort_sort_cpu_per_mb * mb)
+            .with_disk(mb, mb)
+            .with_shuffle(mb),
+    ]
+}
+
+fn grep_stages(data_gb: f64, keyword_ratio: f64, c: &WorkloadCosts) -> Vec<Stage> {
+    assert!((0.0..=1.0).contains(&keyword_ratio), "ratio out of range");
+    let mb = data_gb * 1024.0;
+    let matched_mb = keyword_ratio * mb;
+    let tasks = tasks_for(mb, c);
+    vec![
+        // Parallel keyword scan.
+        Stage::parallel("grep:scan", tasks)
+            .with_cpu(c.grep_scan_cpu_per_mb * mb)
+            .with_disk(mb, 0.0),
+        // Write matched lines back *in original order* — sequential
+        // (paper §IV-B4): the Amdahl term whose size tracks the ratio.
+        Stage::serial("grep:write_matches")
+            .with_cpu(c.grep_write_cpu_per_mb * matched_mb)
+            .with_disk(0.0, matched_mb),
+    ]
+}
+
+/// Effective SGD iterations: converges at `base + slope·GB` even if
+/// `max_iterations` allows more — the saturation behind Fig. 5.
+pub fn sgd_effective_iterations(data_gb: f64, max_iterations: u32, c: &WorkloadCosts) -> u32 {
+    let converge = c.sgd_converge_base + c.sgd_converge_per_gb * data_gb;
+    (max_iterations as f64).min(converge).round().max(1.0) as u32
+}
+
+fn sgd_stages(data_gb: f64, max_iterations: u32, c: &WorkloadCosts) -> Vec<Stage> {
+    let mb = data_gb * 1024.0;
+    let tasks = tasks_for(mb, c);
+    let iters = sgd_effective_iterations(data_gb, max_iterations, c);
+    let mut stages = vec![Stage::parallel("sgd:load_cache", tasks)
+        .with_cpu(c.sgd_parse_cpu_per_mb * mb)
+        .with_disk(mb, 0.0)
+        .with_working_set(mb)];
+    for i in 0..iters {
+        stages.push(
+            Stage::iteration(&format!("sgd:iter{i}"), tasks)
+                .with_cpu(c.sgd_iter_cpu_per_mb * mb)
+                // gradient all-reduce: tiny but nonzero traffic
+                .with_shuffle(2.0)
+                .with_working_set(mb),
+        );
+    }
+    stages
+}
+
+/// K-Means iterations to convergence: grows super-linearly with `k` and
+/// logarithmically with the convergence criterion.
+pub fn kmeans_iterations(num_clusters: u32, convergence: f64, c: &WorkloadCosts) -> u32 {
+    let conv_factor = (-convergence.log10()) / 3.0; // 1.0 at the paper's 0.001
+    (c.kmeans_iter_scale * (num_clusters as f64).powf(1.5) * conv_factor)
+        .round()
+        .max(1.0) as u32
+}
+
+fn kmeans_stages(data_gb: f64, num_clusters: u32, convergence: f64, c: &WorkloadCosts) -> Vec<Stage> {
+    assert!(num_clusters >= 1);
+    assert!(convergence > 0.0 && convergence < 1.0);
+    let mb = data_gb * 1024.0;
+    let tasks = tasks_for(mb, c);
+    let iters = kmeans_iterations(num_clusters, convergence, c);
+    let mut stages = vec![Stage::parallel("kmeans:load_cache", tasks)
+        .with_cpu(c.kmeans_parse_cpu_per_mb * mb)
+        .with_disk(mb, 0.0)
+        .with_working_set(mb)];
+    for i in 0..iters {
+        stages.push(
+            Stage::iteration(&format!("kmeans:iter{i}"), tasks)
+                .with_cpu(c.kmeans_iter_cpu_per_mb_k * mb * num_clusters as f64)
+                // centroid broadcast + partial-sum aggregation
+                .with_shuffle(1.0 + 0.05 * num_clusters as f64)
+                .with_working_set(mb),
+        );
+    }
+    stages
+}
+
+/// PageRank iterations from the power-method contraction rate.
+pub fn pagerank_iterations(convergence: f64, c: &WorkloadCosts) -> u32 {
+    assert!(convergence > 0.0 && convergence < 1.0);
+    (convergence.ln() / c.pagerank_damping.ln()).ceil().max(1.0) as u32
+}
+
+fn pagerank_stages(graph_mb: f64, convergence: f64, c: &WorkloadCosts) -> Vec<Stage> {
+    // Small graphs: finer partitions, floor of 16 tasks.
+    let tasks = ((graph_mb / 32.0).ceil() as u32).max(16);
+    let iters = pagerank_iterations(convergence, c);
+    let ws = c.pagerank_ws_factor * graph_mb;
+    let mut stages = vec![Stage::parallel("pagerank:load", tasks)
+        .with_cpu(c.pagerank_build_cpu_per_mb * graph_mb)
+        .with_disk(graph_mb, 0.0)
+        .with_working_set(ws)];
+    for i in 0..iters {
+        stages.push(
+            Stage::iteration(&format!("pagerank:iter{i}"), tasks)
+                .with_cpu(c.pagerank_iter_cpu_per_mb * graph_mb)
+                // rank contributions along every edge, both directions
+                .with_shuffle(2.0 * graph_mb)
+                .with_working_set(ws),
+        );
+    }
+    stages
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cloud::catalog::aws_like_catalog;
+    use crate::cloud::MachineType;
+    use crate::sim::{SimConfig, Simulator};
+    use crate::util::rng::Pcg32;
+
+    fn machine(name: &str) -> MachineType {
+        aws_like_catalog()
+            .into_iter()
+            .find(|m| m.name == name)
+            .unwrap()
+    }
+
+    fn run(spec: &JobSpec, machine_name: &str, n: u32) -> f64 {
+        let sim = Simulator::new(SimConfig::deterministic());
+        let mut rng = Pcg32::new(7);
+        sim.run(&machine(machine_name), n, &spec.stages(), &mut rng)
+            .runtime_s
+    }
+
+    #[test]
+    fn kind_round_trip() {
+        for k in JobKind::all() {
+            assert_eq!(JobKind::parse(k.name()), Some(k));
+        }
+        assert_eq!(JobKind::parse("wordcount"), None);
+    }
+
+    #[test]
+    fn feature_names_align_with_values() {
+        let specs = [
+            JobSpec::sort(15.0),
+            JobSpec::grep(15.0, 0.1),
+            JobSpec::sgd(20.0, 50),
+            JobSpec::kmeans(15.0, 5, 0.001),
+            JobSpec::pagerank(300.0, 0.001),
+        ];
+        for s in &specs {
+            assert_eq!(
+                s.job_features().len(),
+                s.kind().feature_names().len(),
+                "{:?}",
+                s.kind()
+            );
+        }
+    }
+
+    #[test]
+    fn sort_runtime_linear_in_size() {
+        // Fig. 4: double the data, double the (overhead-corrected) runtime.
+        let t10 = run(&JobSpec::sort(10.0), "m5.xlarge", 4);
+        let t20 = run(&JobSpec::sort(20.0), "m5.xlarge", 4);
+        let overhead = 12.0 + 2.0 * (0.9 + 0.2);
+        let ratio = (t20 - overhead) / (t10 - overhead);
+        assert!((ratio - 2.0).abs() < 0.1, "ratio {ratio}");
+    }
+
+    #[test]
+    fn sort_runtime_band_is_plausible() {
+        // 20 GB on 4× m5.xlarge: minutes, not seconds or hours.
+        let t = run(&JobSpec::sort(20.0), "m5.xlarge", 4);
+        assert!((60.0..900.0).contains(&t), "t = {t}");
+    }
+
+    #[test]
+    fn grep_serial_fraction_tracks_ratio() {
+        // Fig. 7: scale-out shape changes with ratio, not size.
+        let curve = |spec: &JobSpec| -> Vec<f64> {
+            [2u32, 4, 8, 12].iter().map(|&n| run(spec, "m5.xlarge", n)).collect()
+        };
+        let lo = curve(&JobSpec::grep(15.0, 0.01));
+        let hi = curve(&JobSpec::grep(15.0, 0.3));
+        // high ratio flattens the curve: relative speedup 2->12 is smaller
+        let sp_lo = lo[0] / lo[3];
+        let sp_hi = hi[0] / hi[3];
+        assert!(sp_lo > sp_hi + 0.3, "lo {sp_lo} hi {sp_hi}");
+        // size invariance: normalized 10 vs 20 GB curves diverge much less
+        // than the ratio-varied curves do (the Fig. 7 claim is relative)
+        let a = curve(&JobSpec::grep(10.0, 0.1));
+        let b = curve(&JobSpec::grep(20.0, 0.1));
+        let div_size = crate::util::stats::curve_shape_divergence(&a, &b);
+        let div_ratio = crate::util::stats::curve_shape_divergence(&lo, &hi);
+        assert!(
+            div_size < 0.5 * div_ratio,
+            "size divergence {div_size} vs ratio divergence {div_ratio}"
+        );
+    }
+
+    #[test]
+    fn sgd_iterations_saturate() {
+        let c = WorkloadCosts::default();
+        assert_eq!(sgd_effective_iterations(10.0, 1, &c), 1);
+        assert_eq!(sgd_effective_iterations(10.0, 25, &c), 25);
+        let sat = sgd_effective_iterations(10.0, 100, &c);
+        assert_eq!(sat, 51); // 48 + 0.3*10
+        assert_eq!(sgd_effective_iterations(10.0, 80, &c), 51);
+    }
+
+    #[test]
+    fn sgd_memory_bottleneck_at_two_nodes() {
+        // Fig. 6: speedup(2 -> 4) > 2 for the big dataset on m5.xlarge.
+        let spec = JobSpec::sgd(30.0, 100);
+        let t2 = run(&spec, "m5.xlarge", 2);
+        let t4 = run(&spec, "m5.xlarge", 4);
+        assert!(t2 / t4 > 2.0, "speedup {}", t2 / t4);
+        // and the r5 family does NOT bottleneck at 2 nodes
+        let r2 = run(&spec, "r5.xlarge", 2);
+        let r4 = run(&spec, "r5.xlarge", 4);
+        assert!(r2 / r4 < 2.2, "r5 speedup {}", r2 / r4);
+    }
+
+    #[test]
+    fn kmeans_nonlinear_in_k() {
+        // Fig. 5: runtime grows faster than linearly in k.
+        let t3 = run(&JobSpec::kmeans(15.0, 3, 0.001), "m5.xlarge", 4);
+        let t9 = run(&JobSpec::kmeans(15.0, 9, 0.001), "m5.xlarge", 4);
+        // linear-in-k would give < 3 once fixed overheads are counted;
+        // iterations growing as k^1.35 push it well past that.
+        let tripled = t9 / t3;
+        assert!(tripled > 3.2, "k 3->9 runtime ratio {tripled} (want superlinear)");
+    }
+
+    #[test]
+    fn pagerank_iterations_log_in_convergence() {
+        let c = WorkloadCosts::default();
+        let i1 = pagerank_iterations(0.01, &c);
+        let i2 = pagerank_iterations(0.0001, &c);
+        assert_eq!(i1, 29);
+        assert_eq!(i2, 57);
+        // halving log-convergence doubles iterations — nonlinear in conv.
+        assert!((i2 as f64 / i1 as f64 - 2.0).abs() < 0.1);
+    }
+
+    #[test]
+    fn pagerank_scales_poorly() {
+        // Fig. 6: speedup from 2 to 12 nodes stays small.
+        let spec = JobSpec::pagerank(300.0, 0.001);
+        let t2 = run(&spec, "m5.xlarge", 2);
+        let t12 = run(&spec, "m5.xlarge", 12);
+        let speedup = t2 / t12;
+        assert!(speedup < 2.0, "pagerank speedup {speedup} (want < 2 over 6x nodes)");
+        // while sort over the same node range speeds up much more
+        let s2 = run(&JobSpec::sort(15.0), "m5.xlarge", 2);
+        let s12 = run(&JobSpec::sort(15.0), "m5.xlarge", 12);
+        assert!(s2 / s12 > speedup + 1.0, "sort {} vs pagerank {}", s2 / s12, speedup);
+    }
+
+    #[test]
+    fn all_stage_lists_validate() {
+        let specs = [
+            JobSpec::sort(10.0),
+            JobSpec::grep(20.0, 0.3),
+            JobSpec::sgd(30.0, 100),
+            JobSpec::kmeans(20.0, 9, 0.001),
+            JobSpec::pagerank(440.0, 0.0001),
+        ];
+        for s in &specs {
+            for st in s.stages() {
+                st.validate().unwrap();
+            }
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "ratio out of range")]
+    fn grep_bad_ratio_panics() {
+        JobSpec::grep(10.0, 1.5).stages();
+    }
+}

@@ -1,0 +1,176 @@
+//! Differential tests: the PJRT-executed artifacts (L1 Pallas kernel +
+//! L2 graphs) must agree with the pure-Rust native re-implementations.
+//! This validates the entire AOT bridge — Python lowering, HLO text
+//! round-trip, PJRT execution, Rust-side padding/masking — end to end.
+
+use c3o::cloud::Cloud;
+use c3o::models::native::{NativeKnn, NativeOptimistic};
+use c3o::models::{ConfigQuery, ModelKind, ModelState, Predictor, RuntimeModel};
+use c3o::repo::{RuntimeDataRepo, RuntimeRecord};
+use c3o::runtime::Runtime;
+use c3o::util::rng::Pcg32;
+use c3o::workloads::JobKind;
+
+macro_rules! require_artifacts {
+    () => {{
+        let dir = Runtime::default_dir();
+        if !Runtime::artifacts_available(&dir) {
+            eprintln!("SKIP: artifacts not built (run `make artifacts`)");
+            return;
+        }
+        dir
+    }};
+}
+
+fn random_repo(kind: JobKind, n: usize, seed: u64) -> RuntimeDataRepo {
+    let mut rng = Pcg32::new(seed);
+    let machines = ["c5.xlarge", "m5.xlarge", "r5.xlarge", "m5.2xlarge"];
+    let nf = kind.feature_names().len();
+    let recs = (0..n).map(|_| {
+        let features: Vec<f64> = (0..nf)
+            .map(|i| {
+                if i == 0 {
+                    rng.range_f64(10.0, 30.0)
+                } else {
+                    rng.range_f64(0.5, 5.0)
+                }
+            })
+            .collect();
+        RuntimeRecord {
+            job: kind,
+            org: format!("org{}", rng.index(5)),
+            machine: machines[rng.index(machines.len())].to_string(),
+            scaleout: rng.range_u64(2, 12) as u32,
+            job_features: features,
+            runtime_s: rng.range_f64(30.0, 3000.0),
+        }
+    });
+    RuntimeDataRepo::from_records(kind, recs)
+}
+
+fn random_queries(kind: JobKind, n: usize, seed: u64) -> Vec<ConfigQuery> {
+    let mut rng = Pcg32::new(seed);
+    let machines = ["c5.xlarge", "m5.xlarge", "r5.xlarge", "m5.2xlarge"];
+    let nf = kind.feature_names().len();
+    (0..n)
+        .map(|_| ConfigQuery {
+            machine: machines[rng.index(machines.len())].to_string(),
+            scaleout: rng.range_u64(2, 12) as u32,
+            job_features: (0..nf)
+                .map(|i| {
+                    if i == 0 {
+                        rng.range_f64(10.0, 30.0)
+                    } else {
+                        rng.range_f64(0.5, 5.0)
+                    }
+                })
+                .collect(),
+        })
+        .collect()
+}
+
+#[test]
+fn pjrt_knn_matches_native_knn() {
+    let dir = require_artifacts!();
+    let cloud = Cloud::aws_like();
+    let mut predictor = Predictor::new(&dir).unwrap();
+    // several random repos across job kinds and sizes
+    for (kind, n, seed) in [
+        (JobKind::Sort, 30, 1u64),
+        (JobKind::Grep, 120, 2),
+        (JobKind::KMeans, 250, 3),
+        (JobKind::PageRank, 500, 4),
+    ] {
+        let repo = random_repo(kind, n, seed);
+        let model = predictor.train(&cloud, &repo, ModelKind::Pessimistic).unwrap();
+        let mut native = NativeKnn::fit(&cloud, &repo, 5).unwrap();
+        let queries = random_queries(kind, 100, seed + 100);
+        let pjrt = predictor.predict(&model, &cloud, &queries).unwrap();
+        let nat = native.predict(&cloud, &queries).unwrap();
+        for (i, (a, b)) in pjrt.iter().zip(&nat).enumerate() {
+            let rel = (a - b).abs() / b.abs().max(1e-9);
+            assert!(
+                rel < 5e-3,
+                "{kind:?} query {i}: pjrt {a} native {b} (rel {rel})"
+            );
+        }
+    }
+}
+
+#[test]
+fn pjrt_optimistic_matches_native_forward() {
+    let dir = require_artifacts!();
+    let cloud = Cloud::aws_like();
+    let mut predictor = Predictor::new(&dir).unwrap();
+    let repo = random_repo(JobKind::Grep, 150, 9);
+    let model = predictor.train(&cloud, &repo, ModelKind::Optimistic).unwrap();
+    let ModelState::Opt {
+        mins,
+        spans,
+        y_mean,
+        y_sd,
+        params,
+        ..
+    } = &model.state
+    else {
+        panic!("wrong state")
+    };
+    let mut native = NativeOptimistic::from_state(
+        mins,
+        spans,
+        *y_mean,
+        *y_sd,
+        params,
+        2 + 6, // grep features + cluster features
+    );
+    let queries = random_queries(JobKind::Grep, 200, 10);
+    let pjrt = predictor.predict(&model, &cloud, &queries).unwrap();
+    let nat = native.predict(&cloud, &queries).unwrap();
+    for (i, (a, b)) in pjrt.iter().zip(&nat).enumerate() {
+        let rel = (a - b).abs() / b.abs().max(1e-9);
+        assert!(rel < 1e-3, "query {i}: pjrt {a} native {b} (rel {rel})");
+    }
+}
+
+#[test]
+fn pjrt_batch_boundaries_are_seamless() {
+    // predictions must not depend on where the batch boundary falls
+    let dir = require_artifacts!();
+    let cloud = Cloud::aws_like();
+    let mut predictor = Predictor::new(&dir).unwrap();
+    let repo = random_repo(JobKind::Sort, 80, 21);
+    let model = predictor.train(&cloud, &repo, ModelKind::Pessimistic).unwrap();
+    // 150 queries: spans multiple 64-query batches
+    let queries = random_queries(JobKind::Sort, 150, 22);
+    let all = predictor.predict(&model, &cloud, &queries).unwrap();
+    // predict them one at a time
+    for (i, q) in queries.iter().enumerate().step_by(17) {
+        let single = predictor
+            .predict(&model, &cloud, std::slice::from_ref(q))
+            .unwrap();
+        let rel = (single[0] - all[i]).abs() / all[i].abs().max(1e-9);
+        assert!(rel < 1e-5, "query {i}: batched {} single {}", all[i], single[0]);
+    }
+}
+
+#[test]
+fn knn_prediction_in_training_runtime_range() {
+    // kNN predictions are convex-ish combinations of training runtimes:
+    // they must stay within the observed range
+    let dir = require_artifacts!();
+    let cloud = Cloud::aws_like();
+    let mut predictor = Predictor::new(&dir).unwrap();
+    let repo = random_repo(JobKind::Sgd, 200, 31);
+    let (lo, hi) = repo.records().iter().fold((f64::MAX, 0.0f64), |(l, h), r| {
+        (l.min(r.runtime_s), h.max(r.runtime_s))
+    });
+    let model = predictor.train(&cloud, &repo, ModelKind::Pessimistic).unwrap();
+    let queries = random_queries(JobKind::Sgd, 200, 32);
+    let preds = predictor.predict(&model, &cloud, &queries).unwrap();
+    for p in preds {
+        assert!(
+            p >= lo * 0.95 && p <= hi * 1.05,
+            "prediction {p} outside training range [{lo}, {hi}]"
+        );
+    }
+}

@@ -1,0 +1,295 @@
+//! Property-based tests over coordinator-layer invariants (the in-house
+//! `util::prop` driver stands in for proptest, which the offline vendor
+//! set lacks). Each property runs over hundreds of seeded random cases;
+//! failures report the case index + replay seed.
+
+use c3o::cloud::{BillingPolicy, Cloud};
+use c3o::configurator::{Configurator, JobRequest};
+use c3o::models::oracle::SimOracle;
+use c3o::models::{ConfigQuery, RuntimeModel};
+use c3o::repo::{RuntimeDataRepo, RuntimeRecord};
+use c3o::sim::{SimConfig, Simulator};
+use c3o::util::prop::{forall, Gen};
+use c3o::util::stats;
+use c3o::workloads::{JobKind, JobSpec};
+use std::collections::BTreeSet;
+
+fn random_record(g: &mut Gen, kind: JobKind) -> RuntimeRecord {
+    let machines = ["c5.xlarge", "m5.xlarge", "r5.xlarge"];
+    let nf = kind.feature_names().len();
+    RuntimeRecord {
+        job: kind,
+        org: format!("org{}", g.usize_in(0, 8)),
+        machine: machines[g.usize_in(0, 2)].to_string(),
+        scaleout: g.usize_in(2, 12) as u32,
+        job_features: (0..nf).map(|_| g.f64_in(0.5, 30.0)).collect(),
+        runtime_s: g.f64_log(10.0, 5000.0),
+    }
+}
+
+// --------------------------------------------------------------------------
+// Repository invariants
+// --------------------------------------------------------------------------
+
+#[test]
+fn merge_is_idempotent() {
+    forall("merge_idempotent", 150, |g| {
+        let kind = *g.pick(&JobKind::all());
+        let mut a = RuntimeDataRepo::new(kind);
+        let mut b = RuntimeDataRepo::new(kind);
+        for _ in 0..g.usize_in(0, 25) {
+            let _ = a.contribute(random_record(g, kind));
+        }
+        for _ in 0..g.usize_in(0, 25) {
+            let _ = b.contribute(random_record(g, kind));
+        }
+        let mut once = a.fork();
+        once.merge(&b).unwrap();
+        let n1 = once.len();
+        once.merge(&b).unwrap();
+        assert_eq!(once.len(), n1, "second merge must add nothing");
+    });
+}
+
+#[test]
+fn merge_result_is_order_independent_as_set() {
+    forall("merge_commutative_as_set", 150, |g| {
+        let kind = JobKind::Grep;
+        let mut a = RuntimeDataRepo::new(kind);
+        let mut b = RuntimeDataRepo::new(kind);
+        for _ in 0..g.usize_in(0, 20) {
+            let _ = a.contribute(random_record(g, kind));
+        }
+        for _ in 0..g.usize_in(0, 20) {
+            let _ = b.contribute(random_record(g, kind));
+        }
+        let mut ab = a.fork();
+        ab.merge(&b).unwrap();
+        let mut ba = b.fork();
+        ba.merge(&a).unwrap();
+        let keys = |r: &RuntimeDataRepo| -> BTreeSet<String> {
+            r.records().iter().map(|x| x.config_key()).collect()
+        };
+        assert_eq!(keys(&ab), keys(&ba));
+    });
+}
+
+#[test]
+fn csv_round_trip_is_lossless() {
+    forall("csv_round_trip", 100, |g| {
+        let kind = *g.pick(&JobKind::all());
+        let mut repo = RuntimeDataRepo::new(kind);
+        for _ in 0..g.usize_in(1, 30) {
+            let _ = repo.contribute(random_record(g, kind));
+        }
+        let table = repo.to_table();
+        let back = RuntimeDataRepo::from_table(kind, &table).unwrap();
+        assert_eq!(back.len(), repo.len());
+        for (x, y) in repo.records().iter().zip(back.records()) {
+            assert_eq!(x.org, y.org);
+            assert_eq!(x.machine, y.machine);
+            assert_eq!(x.scaleout, y.scaleout);
+            assert!((x.runtime_s - y.runtime_s).abs() < 1e-9 * x.runtime_s.max(1.0));
+            for (fa, fb) in x.job_features.iter().zip(&y.job_features) {
+                assert!((fa - fb).abs() < 1e-9 * fa.abs().max(1.0));
+            }
+        }
+    });
+}
+
+// --------------------------------------------------------------------------
+// Billing invariants
+// --------------------------------------------------------------------------
+
+#[test]
+fn billing_is_monotone_and_respects_minimum() {
+    forall("billing_monotone", 300, |g| {
+        let policy = BillingPolicy::per_second_with_minimum(g.usize_in(0, 120) as u64);
+        let t1 = g.f64_in(0.0, 5000.0);
+        let t2 = t1 + g.f64_in(0.0, 5000.0);
+        let price = g.f64_in(0.01, 10.0);
+        let n = g.usize_in(1, 64) as u32;
+        let c1 = policy.cost_usd(price, n, t1);
+        let c2 = policy.cost_usd(price, n, t2);
+        assert!(c2 >= c1 - 1e-12, "cost must be monotone in time");
+        let floor = policy.cost_usd(price, n, 0.0);
+        assert!(c1 >= floor - 1e-12, "minimum charge applies");
+    });
+}
+
+// --------------------------------------------------------------------------
+// Simulator invariants
+// --------------------------------------------------------------------------
+
+#[test]
+fn simulator_runtime_monotone_in_data_size() {
+    let cloud = Cloud::aws_like();
+    let sim = Simulator::new(SimConfig::deterministic());
+    forall("sim_monotone_data", 100, |g| {
+        let m = cloud.machine("m5.xlarge").unwrap();
+        let n = g.usize_in(2, 12) as u32;
+        let gb1 = g.f64_in(10.0, 19.0);
+        let gb2 = gb1 + g.f64_in(0.5, 10.0);
+        let mut rng1 = c3o::util::rng::Pcg32::new(1);
+        let mut rng2 = c3o::util::rng::Pcg32::new(1);
+        let t1 = sim.run(m, n, &JobSpec::sort(gb1).stages(), &mut rng1).runtime_s;
+        let t2 = sim.run(m, n, &JobSpec::sort(gb2).stages(), &mut rng2).runtime_s;
+        assert!(t2 > t1, "more data must take longer: {gb1}GB {t1}s vs {gb2}GB {t2}s");
+    });
+}
+
+#[test]
+fn simulator_never_negative_or_nan() {
+    let cloud = Cloud::aws_like();
+    let sim = Simulator::new(SimConfig::default());
+    forall("sim_finite", 150, |g| {
+        let machines = ["c5.large", "m5.xlarge", "r5.2xlarge"];
+        let m = cloud.machine(machines[g.usize_in(0, 2)]).unwrap();
+        let n = g.usize_in(1, 16) as u32;
+        let spec = match g.usize_in(0, 4) {
+            0 => JobSpec::sort(g.f64_in(1.0, 40.0)),
+            1 => JobSpec::grep(g.f64_in(1.0, 40.0), g.f64_in(0.0, 1.0)),
+            2 => JobSpec::sgd(g.f64_in(1.0, 40.0), g.usize_in(1, 100) as u32),
+            3 => JobSpec::kmeans(g.f64_in(1.0, 40.0), g.usize_in(2, 12) as u32, 0.001),
+            _ => JobSpec::pagerank(g.f64_in(50.0, 500.0), 10f64.powf(-g.f64_in(1.0, 4.0))),
+        };
+        let mut rng = c3o::util::rng::Pcg32::new(g.case as u64);
+        let r = sim.run(m, n, &spec.stages(), &mut rng);
+        assert!(r.runtime_s.is_finite() && r.runtime_s > 0.0);
+        for s in &r.stages {
+            assert!(s.seconds.is_finite() && s.seconds >= 0.0);
+            assert!(s.spilled_mb >= 0.0);
+        }
+    });
+}
+
+// --------------------------------------------------------------------------
+// Configurator invariants
+// --------------------------------------------------------------------------
+
+#[test]
+fn configurator_choice_is_optimal_under_policy() {
+    let cloud = Cloud::aws_like();
+    forall("configurator_policy", 40, |g| {
+        let configurator = Configurator::new(&cloud);
+        let mut oracle = SimOracle::deterministic(JobKind::Sort, g.case as u64);
+        let target = g.f64_log(30.0, 3000.0);
+        let req = JobRequest::sort(g.f64_in(10.0, 20.0)).with_target_seconds(target);
+        let choice = configurator.configure(&mut oracle, &req).unwrap().unwrap();
+        if choice.meets_target {
+            // no feasible candidate may be cheaper
+            for c in choice.candidates.iter().filter(|c| c.meets_target) {
+                assert!(
+                    choice.expected_cost_usd <= c.predicted_cost_usd + 1e-9,
+                    "cheaper feasible candidate exists"
+                );
+            }
+        } else {
+            // infeasible target → fastest candidate chosen
+            let fastest = choice
+                .candidates
+                .iter()
+                .map(|c| c.predicted_runtime_s)
+                .fold(f64::INFINITY, f64::min);
+            assert!((choice.predicted_runtime_s - fastest).abs() < 1e-9);
+        }
+    });
+}
+
+#[test]
+fn loosening_target_never_increases_cost() {
+    let cloud = Cloud::aws_like();
+    forall("target_monotone", 25, |g| {
+        let configurator = Configurator::new(&cloud);
+        let mut oracle = SimOracle::deterministic(JobKind::Grep, 7);
+        let gb = g.f64_in(10.0, 20.0);
+        let t1 = g.f64_log(60.0, 1000.0);
+        let t2 = t1 * g.f64_in(1.1, 4.0);
+        let c1 = configurator
+            .configure(&mut oracle, &JobRequest::grep(gb, 0.1).with_target_seconds(t1))
+            .unwrap()
+            .unwrap();
+        let c2 = configurator
+            .configure(&mut oracle, &JobRequest::grep(gb, 0.1).with_target_seconds(t2))
+            .unwrap()
+            .unwrap();
+        if c1.meets_target && c2.meets_target {
+            assert!(
+                c2.expected_cost_usd <= c1.expected_cost_usd + 1e-9,
+                "looser target {t2:.0}s costs {} > tighter {t1:.0}s {}",
+                c2.expected_cost_usd,
+                c1.expected_cost_usd
+            );
+        }
+    });
+}
+
+// --------------------------------------------------------------------------
+// Feature round-trip & oracle invariants
+// --------------------------------------------------------------------------
+
+#[test]
+fn job_features_round_trip_through_oracle() {
+    forall("feature_round_trip", 200, |g| {
+        let spec = match g.usize_in(0, 4) {
+            0 => JobSpec::sort(g.f64_in(1.0, 50.0)),
+            1 => JobSpec::grep(g.f64_in(1.0, 50.0), g.f64_in(0.0, 1.0)),
+            2 => JobSpec::sgd(g.f64_in(1.0, 50.0), g.usize_in(1, 100) as u32),
+            3 => JobSpec::kmeans(g.f64_in(1.0, 50.0), g.usize_in(2, 15) as u32, 0.001),
+            _ => JobSpec::pagerank(g.f64_in(50.0, 500.0), 10f64.powf(-g.f64_in(1.0, 4.0))),
+        };
+        let back = SimOracle::spec_from_features(spec.kind(), &spec.job_features()).unwrap();
+        // compare feature vectors (covers the -log10 convergence encode)
+        let fa = spec.job_features();
+        let fb = back.job_features();
+        for (a, b) in fa.iter().zip(&fb) {
+            assert!((a - b).abs() < 1e-9 * a.abs().max(1.0), "{spec:?} vs {back:?}");
+        }
+    });
+}
+
+#[test]
+fn oracle_predictions_consistent_with_direct_simulation() {
+    let cloud = Cloud::aws_like();
+    forall("oracle_consistency", 50, |g| {
+        let mut oracle = SimOracle::deterministic(JobKind::Sort, 5);
+        let q = ConfigQuery {
+            machine: "m5.xlarge".into(),
+            scaleout: g.usize_in(2, 12) as u32,
+            job_features: vec![g.f64_in(10.0, 20.0)],
+        };
+        let a = oracle.predict(&cloud, std::slice::from_ref(&q)).unwrap()[0];
+        let b = oracle.predict(&cloud, std::slice::from_ref(&q)).unwrap()[0];
+        assert_eq!(a, b, "deterministic oracle must be reproducible");
+    });
+}
+
+// --------------------------------------------------------------------------
+// Stats invariants
+// --------------------------------------------------------------------------
+
+#[test]
+fn mape_is_zero_iff_exact() {
+    forall("mape_zero", 200, |g| {
+        let xs = g.vec_f64(1, 40, 1.0, 1e4);
+        assert!(stats::mape(&xs, &xs).abs() < 1e-12);
+        let mut ys = xs.clone();
+        let i = g.usize_in(0, ys.len() - 1);
+        ys[i] *= 1.5;
+        assert!(stats::mape(&ys, &xs) > 0.0);
+    });
+}
+
+#[test]
+fn median_is_order_invariant_and_bounded() {
+    forall("median_props", 200, |g| {
+        let xs = g.vec_f64(1, 50, -1e6, 1e6);
+        let m = stats::median(&xs);
+        let lo = xs.iter().cloned().fold(f64::INFINITY, f64::min);
+        let hi = xs.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+        assert!(m >= lo && m <= hi);
+        let mut shuffled = xs.clone();
+        g.rng().shuffle(&mut shuffled);
+        assert_eq!(stats::median(&shuffled), m);
+    });
+}
