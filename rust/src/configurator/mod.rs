@@ -15,7 +15,7 @@
 //! machine type first and then choosing the scale-out.
 
 use crate::cloud::Cloud;
-use crate::models::{ConfigQuery, RuntimeModel};
+use crate::models::{QueryBatch, RuntimeModel};
 use crate::workloads::{JobKind, JobSpec};
 use anyhow::Result;
 
@@ -139,7 +139,10 @@ impl<'c> Configurator<'c> {
     }
 
     /// Score every candidate with the model and pick per the policy.
-    /// Returns `None` only if the catalog is empty.
+    /// All candidates are featurized **once** into a single matrix and
+    /// scored in one batched `predict` call (no per-candidate row
+    /// building on the hot path). Returns `None` only if the catalog is
+    /// empty.
     pub fn configure(
         &self,
         model: &mut dyn RuntimeModel,
@@ -150,15 +153,8 @@ impl<'c> Configurator<'c> {
             return Ok(None);
         }
         let features = request.spec.job_features();
-        let queries: Vec<ConfigQuery> = pairs
-            .iter()
-            .map(|(m, n)| ConfigQuery {
-                machine: m.clone(),
-                scaleout: *n,
-                job_features: features.clone(),
-            })
-            .collect();
-        let runtimes = model.predict(self.cloud, &queries)?;
+        let batch = QueryBatch::from_candidates(self.cloud, &pairs, &features);
+        let runtimes = model.predict_batch(self.cloud, &batch)?;
 
         let mut candidates: Vec<Candidate> = pairs
             .iter()
@@ -205,7 +201,8 @@ impl<'c> Configurator<'c> {
     }
 
     /// Fig. 3 analysis: rank machine types by total predicted cost for a
-    /// job at a given scale-out (lower = more cost-efficient).
+    /// job at a given scale-out (lower = more cost-efficient). Scored as
+    /// one featurized batch like [`Configurator::configure`].
     pub fn rank_machine_types(
         &self,
         model: &mut dyn RuntimeModel,
@@ -213,21 +210,18 @@ impl<'c> Configurator<'c> {
         scaleout: u32,
     ) -> Result<Vec<(String, f64)>> {
         let features = spec.job_features();
-        let queries: Vec<ConfigQuery> = self
+        let pairs: Vec<(String, u32)> = self
             .cloud
             .machine_types()
             .iter()
-            .map(|m| ConfigQuery {
-                machine: m.name.clone(),
-                scaleout,
-                job_features: features.clone(),
-            })
+            .map(|m| (m.name.clone(), scaleout))
             .collect();
-        let runtimes = model.predict(self.cloud, &queries)?;
-        let mut ranked: Vec<(String, f64)> = queries
+        let batch = QueryBatch::from_candidates(self.cloud, &pairs, &features);
+        let runtimes = model.predict_batch(self.cloud, &batch)?;
+        let mut ranked: Vec<(String, f64)> = pairs
             .iter()
             .zip(&runtimes)
-            .map(|(q, &t)| (q.machine.clone(), self.cloud.cost_usd(&q.machine, scaleout, t)))
+            .map(|((m, _), &t)| (m.clone(), self.cloud.cost_usd(m, scaleout, t)))
             .collect();
         ranked.sort_by(|a, b| a.1.partial_cmp(&b.1).unwrap());
         Ok(ranked)

@@ -1,43 +1,55 @@
 //! The collaboration coordinator — the C3O system runtime (paper Fig. 1/2).
 //!
-//! Owns the full loop for every participating organization:
+//! The coordination stack is **sharded by job kind** and layered so one
+//! submission pipeline serves every deployment shape:
 //!
-//! 1. a user submits a job (dataset characteristics, parameters, runtime
-//!    target);
-//! 2. the coordinator ensures a fresh prediction model for that job —
-//!    **dynamic model selection** (§V-C) retrains and re-selects between
-//!    the pessimistic and optimistic families whenever enough new shared
-//!    data arrived since the last training;
-//! 3. the **cluster configurator** picks the cheapest configuration
-//!    predicted to meet the target;
-//! 4. the **cloud access manager** provisions the cluster (paying the
-//!    EMR-like delay) and runs the job on the dataflow simulator;
-//! 5. the measured runtime is contributed back to the shared
-//!    **runtime data repository**, closing the collaborative loop.
+//! * [`shard`] — a [`JobShard`](shard::JobShard) per [`JobKind`] owns that
+//!   kind's shared runtime-data repository, its RNG stream, and its
+//!   **generation-cached model**: trained models are keyed by the repo's
+//!   monotone generation counter and retrained only when the shared
+//!   corpus actually advanced past the retrain threshold. Model training
+//!   uses **dynamic model selection** (§V-C) between the pessimistic and
+//!   optimistic families; repositories beyond the kNN capacity train on a
+//!   coverage-preserving sample (§III-C).
+//! * [`Coordinator`] (this module) — the sequential facade: one engine,
+//!   plain shards, the ergonomic API for examples, benches, and the CLI.
+//! * [`session`] — the legacy single-worker deployment: one thread owns a
+//!   whole coordinator behind an **ordered** request/reply channel pair.
+//!   Kept as the throughput baseline the service is benchmarked against.
+//! * [`service`] — the concurrent deployment: shards behind mutexes, `N`
+//!   worker threads (PJRT-owning workers pinned to their runtime,
+//!   native-fallback workers free-floating), and **per-request reply
+//!   channels** so concurrent clients never block on each other's
+//!   submissions.
 //!
-//! When a job's repository is too small to train on, the coordinator
-//! falls back to conservative overprovisioning (and the run it contributes
-//! shrinks that cold-start window for everyone). When a repository
-//! outgrows the kNN artifact capacity, it trains on a coverage-preserving
-//! sample (§III-C).
+//! One submission flows: route to the kind's shard → ensure a
+//! generation-fresh model → score **all** `machine × scaleout` candidates
+//! in one featurized batch and pick the cheapest configuration meeting
+//! the target → provision (paying the EMR-like delay) and run on the
+//! dataflow simulator → contribute the measurement back to the shared
+//! repository, closing the collaborative loop. Cold-start submissions
+//! (too little shared data) fall back to conservative overprovisioning —
+//! and the run they contribute shrinks that window for everyone.
 //!
-//! [`session`] wraps the coordinator in a dedicated worker thread behind
-//! std channels — the event-loop deployment shape (tokio is not in the
-//! offline vendor set; a thread + channel loop is the same architecture).
+//! Model execution is backend-agnostic ([`crate::models::ModelTrainer`]):
+//! PJRT-compiled artifacts when available, bit-compatible pure-Rust
+//! engines otherwise, so the whole stack works on a bare `cargo test`.
 
+pub mod service;
 pub mod session;
+pub mod shard;
 
-use crate::baselines::{ConfigSearch, NaiveMax};
+pub use service::{CoordinatorService, ServiceClient, ServiceConfig};
+pub use shard::{JobShard, ShardPolicy};
+
 use crate::cloud::Cloud;
-use crate::configurator::{ClusterChoice, Configurator, JobRequest};
-use crate::models::oracle::SimOracle;
-use crate::models::selection::{select_and_train, SelectionReport};
-use crate::models::{BoundModel, ModelKind, Predictor};
-use crate::repo::sampling::sampled_repo;
-use crate::repo::{RuntimeDataRepo, RuntimeRecord};
+use crate::configurator::{ClusterChoice, JobRequest};
+use crate::models::selection::SelectionReport;
+use crate::models::{Engine, ModelKind, ModelTrainer};
+use crate::repo::RuntimeDataRepo;
 use crate::util::rng::Pcg32;
 use crate::workloads::JobKind;
-use anyhow::{Context, Result};
+use anyhow::Result;
 use std::collections::HashMap;
 use std::path::Path;
 
@@ -91,7 +103,12 @@ impl JobOutcome {
 pub struct Metrics {
     pub submissions: u64,
     pub fallbacks: u64,
+    /// Model (re)trainings actually performed.
     pub retrains: u64,
+    /// Submissions served from a generation-fresh cached model (the
+    /// observable complement of `retrains`: no new shared data ⇒ only
+    /// this counter moves).
+    pub cache_hits: u64,
     pub targets_given: u64,
     pub targets_met: u64,
     pub total_cost_usd: f64,
@@ -116,21 +133,31 @@ impl Metrics {
             self.targets_met as f64 / self.targets_given as f64
         }
     }
+
+    /// Fold another metrics block into this one (the service workers
+    /// stage per-request metrics locally and fold them in afterwards).
+    pub fn fold(&mut self, other: &Metrics) {
+        self.submissions += other.submissions;
+        self.fallbacks += other.fallbacks;
+        self.retrains += other.retrains;
+        self.cache_hits += other.cache_hits;
+        self.targets_given += other.targets_given;
+        self.targets_met += other.targets_met;
+        self.total_cost_usd += other.total_cost_usd;
+        self.ape_sum += other.ape_sum;
+        self.ape_count += other.ape_count;
+    }
 }
 
-struct JobModel {
-    trained_at_version: u64,
-    model: crate::models::TrainedModel,
-    report: SelectionReport,
-}
-
-/// The C3O coordinator.
+/// The sequential C3O coordinator: one model engine over per-job-kind
+/// shards. The concurrent deployment of the same pipeline is
+/// [`service::CoordinatorService`].
 pub struct Coordinator {
     cloud: Cloud,
-    predictor: Predictor,
-    repos: HashMap<JobKind, RuntimeDataRepo>,
-    models: HashMap<JobKind, JobModel>,
-    /// Retrain when this many records arrived since the last training.
+    engine: Engine,
+    shards: HashMap<JobKind, JobShard>,
+    /// Retrain when the repo generation advanced this far since the last
+    /// training.
     pub retrain_every: u64,
     /// Minimum records before the model path activates (cold-start
     /// threshold).
@@ -138,24 +165,34 @@ pub struct Coordinator {
     /// CV folds for dynamic selection.
     pub cv_folds: usize,
     metrics: Metrics,
-    rng: Pcg32,
+    seed_rng: Pcg32,
 }
 
 impl Coordinator {
-    /// Build a coordinator over a cloud and an artifacts directory.
+    /// Build a coordinator over a cloud and an artifacts directory. Uses
+    /// the PJRT backend when the artifacts load, the native engines
+    /// otherwise — construction itself cannot fail on a missing runtime.
     pub fn new(cloud: Cloud, artifacts_dir: &Path, seed: u64) -> Result<Coordinator> {
-        let predictor = Predictor::new(artifacts_dir).context("loading PJRT predictor")?;
-        Ok(Coordinator {
+        Ok(Coordinator::with_engine(
             cloud,
-            predictor,
-            repos: HashMap::new(),
-            models: HashMap::new(),
-            retrain_every: 12,
-            min_records: 12,
-            cv_folds: 4,
+            Engine::auto(artifacts_dir),
+            seed,
+        ))
+    }
+
+    /// Build over an explicit model engine.
+    pub fn with_engine(cloud: Cloud, engine: Engine, seed: u64) -> Coordinator {
+        let policy = ShardPolicy::default();
+        Coordinator {
+            cloud,
+            engine,
+            shards: HashMap::new(),
+            retrain_every: policy.retrain_every,
+            min_records: policy.min_records,
+            cv_folds: policy.cv_folds,
             metrics: Metrics::default(),
-            rng: Pcg32::new(seed),
-        })
+            seed_rng: Pcg32::new(seed),
+        }
     }
 
     pub fn cloud(&self) -> &Cloud {
@@ -166,172 +203,63 @@ impl Coordinator {
         &self.metrics
     }
 
+    /// Which model backend serves this coordinator (`"pjrt"`/`"native"`).
+    pub fn backend(&self) -> &'static str {
+        self.engine.backend()
+    }
+
     /// The shared repository for a job (empty if nothing shared yet).
     pub fn repo(&self, job: JobKind) -> Option<&RuntimeDataRepo> {
-        self.repos.get(&job)
+        self.shards.get(&job).map(|s| s.repo())
+    }
+
+    /// Current repo generation for a job (0 if nothing shared yet).
+    pub fn generation(&self, job: JobKind) -> u64 {
+        self.shards.get(&job).map_or(0, |s| s.generation())
     }
 
     /// Latest selection report for a job's model, if trained.
     pub fn selection_report(&self, job: JobKind) -> Option<&SelectionReport> {
-        self.models.get(&job).map(|m| &m.report)
+        self.shards.get(&job).and_then(|s| s.selection_report())
+    }
+
+    fn policy(&self) -> ShardPolicy {
+        ShardPolicy {
+            retrain_every: self.retrain_every,
+            min_records: self.min_records,
+            cv_folds: self.cv_folds,
+        }
+    }
+
+    fn shard_mut(&mut self, job: JobKind) -> &mut JobShard {
+        if !self.shards.contains_key(&job) {
+            let seed = self.seed_rng.next_u64();
+            self.shards.insert(job, JobShard::new(job, seed));
+        }
+        self.shards.get_mut(&job).expect("just inserted")
     }
 
     /// Merge externally shared data (e.g. the public corpus) into the
     /// job's repository — "users can contribute their generated runtime
     /// data" (§III-A). Returns records actually added.
     pub fn share(&mut self, repo: &RuntimeDataRepo) -> Result<usize> {
-        let entry = self
-            .repos
-            .entry(repo.job())
-            .or_insert_with(|| RuntimeDataRepo::new(repo.job()));
-        entry.merge(repo).map_err(anyhow::Error::msg)
-    }
-
-    /// Ensure the job's model is fresh; retrain via dynamic selection if
-    /// the repo advanced by `retrain_every` since the last training.
-    fn ensure_model(&mut self, job: JobKind) -> Result<Option<ModelKind>> {
-        let Some(repo) = self.repos.get(&job) else {
-            return Ok(None);
-        };
-        if repo.len() < self.min_records {
-            return Ok(None);
-        }
-        let version = repo.version();
-        let stale = match self.models.get(&job) {
-            None => true,
-            Some(m) => version.saturating_sub(m.trained_at_version) >= self.retrain_every,
-        };
-        if stale {
-            // cap training set at the kNN artifact capacity via coverage
-            // sampling (§III-C)
-            let cap = self.predictor.runtime().manifest().knn_train_rows;
-            let train_repo = if repo.len() > cap {
-                sampled_repo(repo, &self.cloud, cap)
-            } else {
-                repo.clone()
-            };
-            let (model, report) = select_and_train(
-                &mut self.predictor,
-                &self.cloud,
-                &train_repo,
-                self.cv_folds,
-                version,
-            )?;
-            self.models.insert(
-                job,
-                JobModel {
-                    trained_at_version: version,
-                    model,
-                    report,
-                },
-            );
-            self.metrics.retrains += 1;
-        }
-        Ok(self.models.get(&job).map(|m| m.model.kind))
+        self.shard_mut(repo.job()).share(repo)
     }
 
     /// Full submission loop for one job request.
     pub fn submit(&mut self, org: &Organization, request: &JobRequest) -> Result<JobOutcome> {
+        let policy = self.policy();
         let job = request.kind();
-        let model_used = self.ensure_model(job)?;
-
-        // 1) decide a configuration
-        let (machine, scaleout, predicted, choice) = match model_used {
-            Some(_) => {
-                let jm = self.models.get(&job).expect("ensured");
-                // candidates only over machine types present in the
-                // shared data: the models interpolate, they don't leap
-                // across unmeasured memory configurations
-                let observed: std::collections::BTreeSet<String> = self.repos[&job]
-                    .records()
-                    .iter()
-                    .map(|r| r.machine.clone())
-                    .collect();
-                let mut bound = BoundModel {
-                    predictor: &mut self.predictor,
-                    model: jm.model.clone(),
-                };
-                let configurator = Configurator::new(&self.cloud)
-                    .with_machines(observed.into_iter().collect());
-                let choice = configurator
-                    .configure(&mut bound, request)?
-                    .context("empty catalog")?;
-                (
-                    choice.machine_type.clone(),
-                    choice.node_count,
-                    choice.predicted_runtime_s,
-                    Some(choice),
-                )
-            }
-            None => {
-                // cold start: conservative overprovisioning
-                let mut oracle = SimOracle::new(job, self.rng.next_u64());
-                let out = NaiveMax::default().search(&self.cloud, &mut oracle, request)?;
-                self.metrics.fallbacks += 1;
-                (out.machine, out.scaleout, f64::NAN, None)
-            }
-        };
-
-        // 2) provision + run (the cloud access manager step)
-        let mut cluster = self
-            .cloud
-            .provision(&machine, scaleout, &mut self.rng);
-        cluster.mark_running();
-        let spec_stages = request.spec.stages();
-        let mt = self.cloud.machine(&machine).expect("catalog");
-        let sim = crate::sim::Simulator::default();
-        let mut run_rng = self.rng.fork(0xEC);
-        let actual = sim.run(mt, scaleout, &spec_stages, &mut run_rng).runtime_s;
-        cluster.record_busy(actual);
-        let held = cluster.terminate();
-        let cost = self.cloud.cost_usd(&machine, scaleout, held);
-
-        // 3) contribute the new record to the shared repository
-        let record = RuntimeRecord {
-            job,
-            org: org.name.clone(),
-            machine: machine.clone(),
-            scaleout,
-            job_features: request.spec.job_features(),
-            runtime_s: actual,
-        };
-        let entry = self
-            .repos
-            .entry(job)
-            .or_insert_with(|| RuntimeDataRepo::new(job));
-        // duplicate configs are fine at contribution time; merge-level
-        // dedup happens when repos are exchanged between parties
-        entry.contribute(record).map_err(anyhow::Error::msg)?;
-
-        // 4) metrics
-        let met_target = request.target_s.map_or(true, |t| actual <= t);
-        self.metrics.submissions += 1;
-        self.metrics.total_cost_usd += cost;
-        if request.target_s.is_some() {
-            self.metrics.targets_given += 1;
-            if met_target {
-                self.metrics.targets_met += 1;
-            }
-        }
-        let outcome = JobOutcome {
-            org: org.name.clone(),
-            job,
-            choice,
-            machine,
-            scaleout,
-            model_used,
-            predicted_runtime_s: predicted,
-            actual_runtime_s: actual,
-            actual_cost_usd: cost,
-            provisioning_s: cluster.provisioning_delay_s(),
-            target_s: request.target_s,
-            met_target,
-        };
-        if !outcome.prediction_error_pct().is_nan() {
-            self.metrics.ape_sum += outcome.prediction_error_pct();
-            self.metrics.ape_count += 1;
-        }
-        Ok(outcome)
+        self.shard_mut(job); // ensure the shard exists
+        let shard = self.shards.get_mut(&job).expect("just ensured");
+        shard.submit(
+            &mut self.engine,
+            &self.cloud,
+            &policy,
+            &mut self.metrics,
+            org,
+            request,
+        )
     }
 }
 
@@ -353,22 +281,16 @@ mod tests {
         grid.execute(cloud, 21).repo_for(kind)
     }
 
-    macro_rules! require_artifacts {
-        () => {{
-            let dir = Runtime::default_dir();
-            if !Runtime::artifacts_available(&dir) {
-                eprintln!("SKIP: artifacts not built");
-                return;
-            }
-            dir
-        }};
+    // No artifacts gate: Engine::auto falls back to the native models, so
+    // the full coordinator loop runs on a bare `cargo test`.
+    fn coordinator(cloud: Cloud, seed: u64) -> Coordinator {
+        Coordinator::new(cloud, &Runtime::default_dir(), seed).unwrap()
     }
 
     #[test]
     fn cold_start_falls_back_then_model_takes_over() {
-        let dir = require_artifacts!();
         let cloud = Cloud::aws_like();
-        let mut coord = Coordinator::new(cloud, &dir, 1).unwrap();
+        let mut coord = coordinator(cloud, 1);
         coord.min_records = 5;
         coord.retrain_every = 5;
         let org = Organization::new("lab-a");
@@ -389,10 +311,9 @@ mod tests {
 
     #[test]
     fn shared_corpus_enables_first_submission_model() {
-        let dir = require_artifacts!();
         let cloud = Cloud::aws_like();
         let repo = corpus_repo(&cloud, JobKind::Grep);
-        let mut coord = Coordinator::new(cloud, &dir, 2).unwrap();
+        let mut coord = coordinator(cloud, 2);
         let added = coord.share(&repo).unwrap();
         assert_eq!(added, 162);
         let org = Organization::new("new-org");
@@ -409,10 +330,9 @@ mod tests {
 
     #[test]
     fn retrain_cadence_respected() {
-        let dir = require_artifacts!();
         let cloud = Cloud::aws_like();
         let repo = corpus_repo(&cloud, JobKind::Sort);
-        let mut coord = Coordinator::new(cloud, &dir, 3).unwrap();
+        let mut coord = coordinator(cloud, 3);
         coord.retrain_every = 4;
         coord.share(&repo).unwrap();
         let org = Organization::new("o");
@@ -426,11 +346,41 @@ mod tests {
     }
 
     #[test]
-    fn metrics_accumulate() {
-        let dir = require_artifacts!();
+    fn retraining_is_gated_by_repo_generation() {
+        // The model cache is keyed by the repo generation: with no new
+        // shared data past the threshold, repeated submissions must
+        // trigger zero retrains — only cache hits.
         let cloud = Cloud::aws_like();
         let repo = corpus_repo(&cloud, JobKind::Sort);
-        let mut coord = Coordinator::new(cloud, &dir, 4).unwrap();
+        let mut coord = coordinator(cloud, 5);
+        coord.retrain_every = 1000; // far beyond this test's contributions
+        coord.share(&repo).unwrap();
+        let org = Organization::new("steady");
+        coord.submit(&org, &JobRequest::sort(12.0)).unwrap();
+        assert_eq!(coord.metrics().retrains, 1, "initial training only");
+
+        // re-sharing the identical corpus adds nothing and must not move
+        // the generation
+        let gen = coord.generation(JobKind::Sort);
+        assert_eq!(coord.share(&repo).unwrap(), 0);
+        assert_eq!(coord.generation(JobKind::Sort), gen);
+
+        for i in 0..6 {
+            let o = coord
+                .submit(&org, &JobRequest::sort(11.0 + i as f64))
+                .unwrap();
+            assert!(o.model_used.is_some());
+        }
+        let m = coord.metrics();
+        assert_eq!(m.retrains, 1, "no retrain without new shared data: {m:?}");
+        assert_eq!(m.cache_hits, 6, "every further submission is a cache hit");
+    }
+
+    #[test]
+    fn metrics_accumulate() {
+        let cloud = Cloud::aws_like();
+        let repo = corpus_repo(&cloud, JobKind::Sort);
+        let mut coord = coordinator(cloud, 4);
         coord.share(&repo).unwrap();
         let org = Organization::new("o");
         let req = JobRequest::sort(15.0).with_target_seconds(2000.0);

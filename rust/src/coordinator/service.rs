@@ -1,0 +1,384 @@
+//! The sharded, concurrent coordinator service — the "many organizations,
+//! heavy traffic" deployment shape.
+//!
+//! Architecture (contrast with the strictly-ordered single-worker
+//! [`super::session`]):
+//!
+//! * **Shards** — one [`JobShard`] per [`JobKind`], each behind its own
+//!   mutex. A submission only locks its own kind's shard, so concurrent
+//!   clients working on different kinds never serialize against each
+//!   other; same-kind submissions serialize exactly as much as the shared
+//!   repository requires.
+//! * **Workers** — `N` threads pull requests from one shared queue. Every
+//!   worker owns its **own model engine**, constructed on the worker's
+//!   thread: the first `pjrt_workers` try to own a PJRT runtime (the PJRT
+//!   client is thread-pinned, hence "pinned workers"); the rest always use
+//!   the pure-Rust native engine ("free-floating"). Trained models are
+//!   plain data stored in the shard, padded to one fixed layout, so a
+//!   model trained by any worker is served by every other.
+//! * **Per-request replies** — each request carries its own reply
+//!   channel. There is no ordered reply stream to hold up: a client
+//!   blocked on a slow submission never delays another client's reply
+//!   (the session's single ordered `Receiver` could not offer this).
+//! * **Generation-cached models** — shards retrain only when the repo
+//!   generation moved past the retrain threshold (see [`JobShard`]), so
+//!   request throughput is decoupled from training frequency.
+//!
+//! ```no_run
+//! use c3o::cloud::Cloud;
+//! use c3o::configurator::JobRequest;
+//! use c3o::coordinator::service::{CoordinatorService, ServiceConfig};
+//! use c3o::coordinator::Organization;
+//!
+//! let service = CoordinatorService::spawn(Cloud::aws_like(), ServiceConfig::default());
+//! let client = service.client(); // Clone one per client thread
+//! let org = Organization::new("acme");
+//! let outcome = client.submit(&org, JobRequest::sort(15.0)).unwrap();
+//! println!("ran on {} x{}", outcome.machine, outcome.scaleout);
+//! service.shutdown();
+//! ```
+
+use crate::cloud::Cloud;
+use crate::configurator::JobRequest;
+use crate::coordinator::shard::{JobShard, ShardPolicy};
+use crate::coordinator::{JobOutcome, Metrics, Organization};
+use crate::models::Engine;
+use crate::repo::RuntimeDataRepo;
+use crate::runtime::Runtime;
+use crate::util::rng::Pcg32;
+use crate::workloads::JobKind;
+use anyhow::{anyhow, Result};
+use std::collections::HashMap;
+use std::path::PathBuf;
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+
+/// Deployment knobs for a [`CoordinatorService`].
+#[derive(Debug, Clone)]
+pub struct ServiceConfig {
+    /// Worker threads serving the request queue.
+    pub workers: usize,
+    /// How many of the workers attempt to own a PJRT runtime (pinned);
+    /// the remainder always run the native engine. Ignored when the
+    /// artifacts are absent — every worker then falls back to native.
+    pub pjrt_workers: usize,
+    /// Artifacts directory for the PJRT-capable workers.
+    pub artifacts_dir: PathBuf,
+    /// Retrain/cold-start policy applied by every shard.
+    pub policy: ShardPolicy,
+    /// Master seed; each shard derives its own RNG stream from it.
+    pub seed: u64,
+}
+
+impl Default for ServiceConfig {
+    fn default() -> Self {
+        ServiceConfig {
+            workers: std::thread::available_parallelism()
+                .map(|n| n.get().min(8))
+                .unwrap_or(4),
+            pjrt_workers: 1,
+            artifacts_dir: Runtime::default_dir(),
+            policy: ShardPolicy::default(),
+            seed: 0xC30,
+        }
+    }
+}
+
+impl ServiceConfig {
+    pub fn with_workers(mut self, workers: usize) -> Self {
+        self.workers = workers.max(1);
+        self
+    }
+
+    pub fn with_seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+
+    pub fn with_policy(mut self, policy: ShardPolicy) -> Self {
+        self.policy = policy;
+        self
+    }
+
+    pub fn with_artifacts_dir(mut self, dir: PathBuf) -> Self {
+        self.artifacts_dir = dir;
+        self
+    }
+
+    /// How many workers attempt to own a PJRT runtime. `0` forces every
+    /// worker onto the native engine (e.g. for backend-controlled
+    /// benchmarks).
+    pub fn with_pjrt_workers(mut self, pjrt_workers: usize) -> Self {
+        self.pjrt_workers = pjrt_workers;
+        self
+    }
+}
+
+/// A request paired with its own reply channel (no cross-client ordering).
+enum Request {
+    Share(RuntimeDataRepo, mpsc::Sender<Result<usize>>),
+    Submit(Organization, JobRequest, mpsc::Sender<Result<JobOutcome>>),
+    Metrics(mpsc::Sender<Metrics>),
+    Shutdown,
+}
+
+/// Shared state every worker sees.
+struct Shared {
+    shards: HashMap<JobKind, Mutex<JobShard>>,
+    metrics: Mutex<Metrics>,
+    cloud: Cloud,
+    policy: ShardPolicy,
+}
+
+/// The running service: owns the worker threads and the request queue.
+pub struct CoordinatorService {
+    tx: mpsc::Sender<Request>,
+    shared: Arc<Shared>,
+    workers: Vec<JoinHandle<()>>,
+}
+
+/// A cloneable client handle; one per client thread. Each call blocks on
+/// its own reply channel only.
+#[derive(Clone)]
+pub struct ServiceClient {
+    tx: mpsc::Sender<Request>,
+}
+
+fn share_on(tx: &mpsc::Sender<Request>, repo: RuntimeDataRepo) -> Result<usize> {
+    let (rtx, rrx) = mpsc::channel();
+    tx.send(Request::Share(repo, rtx))
+        .map_err(|_| anyhow!("service stopped"))?;
+    rrx.recv().map_err(|_| anyhow!("service dropped the reply"))?
+}
+
+fn submit_on(
+    tx: &mpsc::Sender<Request>,
+    org: &Organization,
+    request: JobRequest,
+) -> Result<JobOutcome> {
+    let (rtx, rrx) = mpsc::channel();
+    tx.send(Request::Submit(org.clone(), request, rtx))
+        .map_err(|_| anyhow!("service stopped"))?;
+    rrx.recv().map_err(|_| anyhow!("service dropped the reply"))?
+}
+
+fn metrics_on(tx: &mpsc::Sender<Request>) -> Result<Metrics> {
+    let (rtx, rrx) = mpsc::channel();
+    tx.send(Request::Metrics(rtx))
+        .map_err(|_| anyhow!("service stopped"))?;
+    rrx.recv().map_err(|_| anyhow!("service dropped the reply"))
+}
+
+impl ServiceClient {
+    /// Merge shared runtime data into the owning shard's repository.
+    pub fn share(&self, repo: RuntimeDataRepo) -> Result<usize> {
+        share_on(&self.tx, repo)
+    }
+
+    /// Submit a job; blocks on this request's own reply only.
+    pub fn submit(&self, org: &Organization, request: JobRequest) -> Result<JobOutcome> {
+        submit_on(&self.tx, org, request)
+    }
+
+    /// Snapshot the service-wide metrics.
+    pub fn metrics(&self) -> Result<Metrics> {
+        metrics_on(&self.tx)
+    }
+}
+
+impl CoordinatorService {
+    /// Spawn the service: shards for every job kind plus `workers`
+    /// threads, each constructing its engine on its own thread.
+    pub fn spawn(cloud: Cloud, config: ServiceConfig) -> CoordinatorService {
+        let (tx, rx) = mpsc::channel::<Request>();
+        let queue = Arc::new(Mutex::new(rx));
+        let mut seed_rng = Pcg32::new(config.seed);
+        let mut shards = HashMap::new();
+        for kind in JobKind::all() {
+            shards.insert(kind, Mutex::new(JobShard::new(kind, seed_rng.next_u64())));
+        }
+        let shared = Arc::new(Shared {
+            shards,
+            metrics: Mutex::new(Metrics::default()),
+            cloud,
+            policy: config.policy.clone(),
+        });
+        let n = config.workers.max(1);
+        let mut workers = Vec::with_capacity(n);
+        for i in 0..n {
+            let queue = Arc::clone(&queue);
+            let shared = Arc::clone(&shared);
+            let artifacts_dir = config.artifacts_dir.clone();
+            let try_pjrt = i < config.pjrt_workers;
+            workers.push(std::thread::spawn(move || {
+                worker_loop(queue, shared, try_pjrt, artifacts_dir);
+            }));
+        }
+        CoordinatorService {
+            tx,
+            shared,
+            workers,
+        }
+    }
+
+    /// A new client handle (clone freely across threads).
+    pub fn client(&self) -> ServiceClient {
+        ServiceClient {
+            tx: self.tx.clone(),
+        }
+    }
+
+    /// Merge shared runtime data (convenience over [`Self::client`]).
+    pub fn share(&self, repo: RuntimeDataRepo) -> Result<usize> {
+        share_on(&self.tx, repo)
+    }
+
+    /// Submit a job (convenience over [`Self::client`]).
+    pub fn submit(&self, org: &Organization, request: JobRequest) -> Result<JobOutcome> {
+        submit_on(&self.tx, org, request)
+    }
+
+    /// Snapshot the service-wide metrics.
+    pub fn metrics(&self) -> Result<Metrics> {
+        metrics_on(&self.tx)
+    }
+
+    /// Current repo generation of a shard (observability / tests).
+    pub fn generation(&self, kind: JobKind) -> u64 {
+        self.shared.shards[&kind].lock().unwrap().generation()
+    }
+
+    /// The generation the shard's cached model was trained at.
+    pub fn trained_at_generation(&self, kind: JobKind) -> Option<u64> {
+        self.shared.shards[&kind]
+            .lock()
+            .unwrap()
+            .trained_at_generation()
+    }
+
+    /// Graceful shutdown: every worker drains one `Shutdown` and exits.
+    pub fn shutdown(mut self) {
+        self.shutdown_inner();
+    }
+
+    fn shutdown_inner(&mut self) {
+        for _ in 0..self.workers.len() {
+            let _ = self.tx.send(Request::Shutdown);
+        }
+        for handle in self.workers.drain(..) {
+            let _ = handle.join();
+        }
+    }
+}
+
+impl Drop for CoordinatorService {
+    fn drop(&mut self) {
+        self.shutdown_inner();
+    }
+}
+
+fn worker_loop(
+    queue: Arc<Mutex<mpsc::Receiver<Request>>>,
+    shared: Arc<Shared>,
+    try_pjrt: bool,
+    artifacts_dir: PathBuf,
+) {
+    // Engines are per-worker and constructed on the worker's own thread:
+    // the PJRT client is not `Send`, so a PJRT-owning worker is pinned to
+    // its runtime for its whole life; native workers are pure data.
+    let mut engine = if try_pjrt {
+        Engine::auto(&artifacts_dir)
+    } else {
+        Engine::native()
+    };
+    loop {
+        // Hold the queue lock only for the dequeue, never while serving.
+        let request = {
+            let rx = queue.lock().unwrap();
+            rx.recv()
+        };
+        let Ok(request) = request else {
+            break; // all senders gone
+        };
+        match request {
+            Request::Shutdown => break,
+            Request::Share(repo, reply) => {
+                let result = match shared.shards.get(&repo.job()) {
+                    Some(shard) => shard.lock().unwrap().share(&repo),
+                    None => Err(anyhow!("no shard for job {}", repo.job().name())),
+                };
+                let _ = reply.send(result);
+            }
+            Request::Submit(org, request, reply) => {
+                let kind = request.kind();
+                let result = match shared.shards.get(&kind) {
+                    Some(shard) => {
+                        // Stage metrics locally and fold after the shard
+                        // lock drops, so the global metrics mutex never
+                        // nests inside a busy shard.
+                        let mut local = Metrics::default();
+                        let outcome = {
+                            let mut shard = shard.lock().unwrap();
+                            shard.submit(
+                                &mut engine,
+                                &shared.cloud,
+                                &shared.policy,
+                                &mut local,
+                                &org,
+                                &request,
+                            )
+                        };
+                        shared.metrics.lock().unwrap().fold(&local);
+                        outcome
+                    }
+                    None => Err(anyhow!("no shard for job {}", kind.name())),
+                };
+                let _ = reply.send(result);
+            }
+            Request::Metrics(reply) => {
+                let _ = reply.send(shared.metrics.lock().unwrap().clone());
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn service_starts_and_shuts_down() {
+        let service =
+            CoordinatorService::spawn(Cloud::aws_like(), ServiceConfig::default().with_workers(2));
+        let metrics = service.metrics().unwrap();
+        assert_eq!(metrics.submissions, 0);
+        service.shutdown();
+    }
+
+    #[test]
+    fn client_outlives_service_with_clean_errors() {
+        let service =
+            CoordinatorService::spawn(Cloud::aws_like(), ServiceConfig::default().with_workers(1));
+        let client = service.client();
+        service.shutdown();
+        let err = client.metrics();
+        assert!(err.is_err(), "stopped service must error, not hang");
+    }
+
+    #[test]
+    fn submit_without_data_takes_cold_start_path() {
+        let service = CoordinatorService::spawn(
+            Cloud::aws_like(),
+            ServiceConfig::default().with_workers(2).with_seed(7),
+        );
+        let org = Organization::new("cold");
+        let outcome = service.submit(&org, JobRequest::sort(12.0)).unwrap();
+        assert!(outcome.model_used.is_none());
+        let metrics = service.metrics().unwrap();
+        assert_eq!(metrics.submissions, 1);
+        assert_eq!(metrics.fallbacks, 1);
+        assert_eq!(service.generation(JobKind::Sort), 1, "run was contributed");
+        service.shutdown();
+    }
+}

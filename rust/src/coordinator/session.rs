@@ -1,10 +1,13 @@
-//! Threaded coordinator session: the event-loop deployment shape.
+//! Threaded coordinator session: the **legacy single-worker** deployment
+//! shape, kept as the baseline the sharded [`super::service`] is
+//! benchmarked against (`benches/serve_throughput.rs`).
 //!
-//! The PJRT client is not `Send`, so the coordinator lives on a dedicated
-//! worker thread that owns it outright; clients talk to it through std
-//! channels. This mirrors an async-runtime deployment (a single-threaded
-//! executor owning the device handles) without tokio, which the offline
-//! vendor set lacks.
+//! One dedicated worker thread owns a whole [`Coordinator`] (and its
+//! model engine — the PJRT client is not `Send`); clients talk to it
+//! through a strictly-ordered request/reply channel pair. That ordering
+//! is the shape's scalability ceiling: every client's reply waits behind
+//! every earlier request, across *all* job kinds. The service replaces
+//! this with per-kind shards and per-request reply channels.
 
 use crate::cloud::Cloud;
 use crate::configurator::JobRequest;
@@ -50,28 +53,11 @@ impl Session {
         let (tx, worker_rx) = mpsc::channel::<Event>();
         let (worker_tx, rx) = mpsc::channel::<Reply>();
         let handle = std::thread::spawn(move || {
-            let mut coord = match Coordinator::new(cloud, &artifacts_dir, seed) {
-                Ok(c) => c,
-                Err(e) => {
-                    // serve errors for every request until shutdown
-                    while let Ok(event) = worker_rx.recv() {
-                        let msg = format!("coordinator failed to start: {e:#}");
-                        let _ = match event {
-                            Event::Share(_) => worker_tx.send(Reply::Shared(Err(anyhow!(msg)))),
-                            Event::Submit(..) => worker_tx
-                                .send(Reply::Submitted(Box::new(Err(anyhow!(msg))))),
-                            Event::GetMetrics => {
-                                worker_tx.send(Reply::Metrics(Metrics::default()))
-                            }
-                            Event::Shutdown => {
-                                let _ = worker_tx.send(Reply::ShuttingDown);
-                                break;
-                            }
-                        };
-                    }
-                    return;
-                }
-            };
+            // Construction is infallible: `Engine::auto` falls back to the
+            // native model engines when PJRT artifacts are absent or
+            // unloadable, so there is no error path to serve here.
+            let mut coord = Coordinator::new(cloud, &artifacts_dir, seed)
+                .expect("coordinator construction is infallible (native fallback)");
             while let Ok(event) = worker_rx.recv() {
                 match event {
                     Event::Share(repo) => {
@@ -165,11 +151,9 @@ mod tests {
 
     #[test]
     fn session_round_trip() {
+        // Runs with or without PJRT artifacts: the coordinator falls
+        // back to the native model engines when they are absent.
         let dir = Runtime::default_dir();
-        if !Runtime::artifacts_available(&dir) {
-            eprintln!("SKIP: artifacts not built");
-            return;
-        }
         let cloud = Cloud::aws_like();
         // share a corpus slice, then submit through the thread boundary
         let grid = ExperimentGrid {
@@ -196,12 +180,18 @@ mod tests {
     }
 
     #[test]
-    fn session_survives_bad_artifacts_dir() {
+    fn session_falls_back_to_native_without_artifacts() {
+        // A missing artifacts directory is not fatal: the coordinator
+        // serves the full loop on the native model engines.
         let cloud = Cloud::aws_like();
         let session = Session::spawn(cloud, PathBuf::from("/nonexistent/artifacts"), 1);
         let org = Organization::new("o");
-        let err = session.submit(&org, JobRequest::sort(10.0));
-        assert!(err.is_err());
+        let outcome = session.submit(&org, JobRequest::sort(10.0)).unwrap();
+        assert!(outcome.model_used.is_none(), "cold start overprovisions");
+        assert!(outcome.actual_runtime_s > 0.0);
+        let metrics = session.metrics().unwrap();
+        assert_eq!(metrics.submissions, 1);
+        assert_eq!(metrics.fallbacks, 1);
         session.shutdown();
     }
 }

@@ -1,0 +1,293 @@
+//! Per-[`JobKind`] shard: the unit of state ownership in the
+//! coordination stack.
+//!
+//! A shard owns everything one job kind needs — its shared runtime-data
+//! repository, its generation-cached trained model, and its RNG stream —
+//! and nothing else, so distinct kinds never contend. Both deployment
+//! shapes drive the same shard code: the sequential [`super::Coordinator`]
+//! holds plain shards, the multi-worker [`super::service`] wraps each in
+//! a mutex and lets any worker thread serve any shard with its own model
+//! engine.
+//!
+//! **Generation-cached models:** a trained model is tagged with the repo
+//! [`generation`](crate::repo::RuntimeDataRepo::generation) it was
+//! trained at. The shard retrains only when the generation advanced past
+//! the retrain threshold — merging already-known data does not move the
+//! generation, so redundant sharing can never trigger redundant training
+//! (observable through [`Metrics::retrains`] / [`Metrics::cache_hits`]).
+
+use crate::baselines::{ConfigSearch, NaiveMax};
+use crate::cloud::Cloud;
+use crate::configurator::{Configurator, JobRequest};
+use crate::coordinator::{JobOutcome, Metrics, Organization};
+use crate::models::oracle::SimOracle;
+use crate::models::selection::{select_and_train, SelectionReport};
+use crate::models::{EngineBound, ModelKind, ModelTrainer, TrainedModel};
+use crate::repo::sampling::sampled_repo;
+use crate::repo::{RuntimeDataRepo, RuntimeRecord};
+use crate::util::rng::Pcg32;
+use crate::workloads::JobKind;
+use anyhow::{Context, Result};
+use std::collections::BTreeSet;
+
+/// Retrain/cold-start policy knobs shared by every shard of a deployment.
+#[derive(Debug, Clone)]
+pub struct ShardPolicy {
+    /// Retrain when the repo generation advanced this far since the last
+    /// training.
+    pub retrain_every: u64,
+    /// Minimum records before the model path activates (cold-start
+    /// threshold).
+    pub min_records: usize,
+    /// CV folds for dynamic selection.
+    pub cv_folds: usize,
+}
+
+impl Default for ShardPolicy {
+    fn default() -> Self {
+        ShardPolicy {
+            retrain_every: 12,
+            min_records: 12,
+            cv_folds: 4,
+        }
+    }
+}
+
+/// A trained model tagged with the repo generation it was trained at.
+#[derive(Debug)]
+pub struct CachedModel {
+    pub trained_at_gen: u64,
+    pub model: TrainedModel,
+    pub report: SelectionReport,
+}
+
+/// Per-job-kind state: repository + generation-cached model + RNG stream.
+pub struct JobShard {
+    job: JobKind,
+    repo: RuntimeDataRepo,
+    model: Option<CachedModel>,
+    rng: Pcg32,
+}
+
+impl JobShard {
+    /// Fresh shard for one job kind.
+    pub fn new(job: JobKind, seed: u64) -> JobShard {
+        JobShard {
+            job,
+            repo: RuntimeDataRepo::new(job),
+            model: None,
+            rng: Pcg32::new(seed),
+        }
+    }
+
+    pub fn job(&self) -> JobKind {
+        self.job
+    }
+
+    /// The shard's shared repository.
+    pub fn repo(&self) -> &RuntimeDataRepo {
+        &self.repo
+    }
+
+    /// Current repo generation (the model-cache key).
+    pub fn generation(&self) -> u64 {
+        self.repo.generation()
+    }
+
+    /// The generation the cached model was trained at, if any.
+    pub fn trained_at_generation(&self) -> Option<u64> {
+        self.model.as_ref().map(|m| m.trained_at_gen)
+    }
+
+    /// Latest selection report, if a model is cached.
+    pub fn selection_report(&self) -> Option<&SelectionReport> {
+        self.model.as_ref().map(|m| &m.report)
+    }
+
+    /// Merge shared runtime data into the shard's repository. Returns
+    /// records actually added (== generation advance).
+    pub fn share(&mut self, other: &RuntimeDataRepo) -> Result<usize> {
+        self.repo.merge(other).map_err(anyhow::Error::msg)
+    }
+
+    /// Ensure a generation-fresh model: retrain via dynamic selection
+    /// only when the repo generation advanced by `retrain_every` since
+    /// the cached model was trained. Returns the active model kind, or
+    /// `None` below the cold-start threshold.
+    pub fn ensure_model(
+        &mut self,
+        engine: &mut dyn ModelTrainer,
+        cloud: &Cloud,
+        policy: &ShardPolicy,
+        metrics: &mut Metrics,
+    ) -> Result<Option<ModelKind>> {
+        if self.repo.len() < policy.min_records {
+            return Ok(None);
+        }
+        let gen = self.repo.generation();
+        let stale = match &self.model {
+            None => true,
+            Some(m) => gen.saturating_sub(m.trained_at_gen) >= policy.retrain_every,
+        };
+        if stale {
+            // cap training set at the backend's kNN capacity via
+            // coverage sampling (§III-C)
+            let cap = engine.knn_capacity();
+            let train_repo = if self.repo.len() > cap {
+                sampled_repo(&self.repo, cloud, cap)
+            } else {
+                self.repo.clone()
+            };
+            let (model, report) =
+                select_and_train(engine, cloud, &train_repo, policy.cv_folds, gen)?;
+            self.model = Some(CachedModel {
+                trained_at_gen: gen,
+                model,
+                report,
+            });
+            metrics.retrains += 1;
+        } else {
+            metrics.cache_hits += 1;
+        }
+        Ok(self.model.as_ref().map(|m| m.model.kind))
+    }
+
+    /// Full submission loop for one job request: ensure model → decide
+    /// configuration (all candidates scored as one featurized batch) →
+    /// provision + run → contribute the measurement → account metrics.
+    pub fn submit(
+        &mut self,
+        engine: &mut dyn ModelTrainer,
+        cloud: &Cloud,
+        policy: &ShardPolicy,
+        metrics: &mut Metrics,
+        org: &Organization,
+        request: &JobRequest,
+    ) -> Result<JobOutcome> {
+        debug_assert_eq!(request.kind(), self.job, "request routed to wrong shard");
+        let model_used = self.ensure_model(engine, cloud, policy, metrics)?;
+
+        // 1) decide a configuration
+        let (machine, scaleout, predicted, choice) = match model_used {
+            Some(_) => {
+                let jm = self.model.as_ref().expect("ensured");
+                // candidates only over machine types present in the
+                // shared data: the models interpolate, they don't leap
+                // across unmeasured memory configurations
+                let observed: BTreeSet<String> = self
+                    .repo
+                    .records()
+                    .iter()
+                    .map(|r| r.machine.clone())
+                    .collect();
+                let mut bound = EngineBound {
+                    engine: &mut *engine,
+                    model: jm.model.clone(),
+                };
+                let configurator =
+                    Configurator::new(cloud).with_machines(observed.into_iter().collect());
+                let choice = configurator
+                    .configure(&mut bound, request)?
+                    .context("empty catalog")?;
+                (
+                    choice.machine_type.clone(),
+                    choice.node_count,
+                    choice.predicted_runtime_s,
+                    Some(choice),
+                )
+            }
+            None => {
+                // cold start: conservative overprovisioning
+                let mut oracle = SimOracle::new(self.job, self.rng.next_u64());
+                let out = NaiveMax::default().search(cloud, &mut oracle, request)?;
+                metrics.fallbacks += 1;
+                (out.machine, out.scaleout, f64::NAN, None)
+            }
+        };
+
+        // 2) provision + run (the cloud access manager step)
+        let mut cluster = cloud.provision(&machine, scaleout, &mut self.rng);
+        cluster.mark_running();
+        let spec_stages = request.spec.stages();
+        let mt = cloud.machine(&machine).expect("catalog");
+        let sim = crate::sim::Simulator::default();
+        let mut run_rng = self.rng.fork(0xEC);
+        let actual = sim.run(mt, scaleout, &spec_stages, &mut run_rng).runtime_s;
+        cluster.record_busy(actual);
+        let held = cluster.terminate();
+        let cost = cloud.cost_usd(&machine, scaleout, held);
+
+        // 3) contribute the new record to the shared repository
+        let record = RuntimeRecord {
+            job: self.job,
+            org: org.name.clone(),
+            machine: machine.clone(),
+            scaleout,
+            job_features: request.spec.job_features(),
+            runtime_s: actual,
+        };
+        // duplicate configs are fine at contribution time; merge-level
+        // dedup happens when repos are exchanged between parties
+        self.repo.contribute(record).map_err(anyhow::Error::msg)?;
+
+        // 4) metrics
+        let met_target = request.target_s.map_or(true, |t| actual <= t);
+        metrics.submissions += 1;
+        metrics.total_cost_usd += cost;
+        if request.target_s.is_some() {
+            metrics.targets_given += 1;
+            if met_target {
+                metrics.targets_met += 1;
+            }
+        }
+        let outcome = JobOutcome {
+            org: org.name.clone(),
+            job: self.job,
+            choice,
+            machine,
+            scaleout,
+            model_used,
+            predicted_runtime_s: predicted,
+            actual_runtime_s: actual,
+            actual_cost_usd: cost,
+            provisioning_s: cluster.provisioning_delay_s(),
+            target_s: request.target_s,
+            met_target,
+        };
+        if !outcome.prediction_error_pct().is_nan() {
+            metrics.ape_sum += outcome.prediction_error_pct();
+            metrics.ape_count += 1;
+        }
+        Ok(outcome)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::Engine;
+
+    #[test]
+    fn cold_shard_has_no_model_and_no_report() {
+        let shard = JobShard::new(JobKind::Sort, 1);
+        assert_eq!(shard.generation(), 0);
+        assert!(shard.trained_at_generation().is_none());
+        assert!(shard.selection_report().is_none());
+        assert!(shard.repo().is_empty());
+    }
+
+    #[test]
+    fn ensure_model_respects_cold_start_threshold() {
+        let cloud = Cloud::aws_like();
+        let mut shard = JobShard::new(JobKind::Sort, 2);
+        let mut engine = Engine::native();
+        let mut metrics = Metrics::default();
+        let policy = ShardPolicy::default();
+        let kind = shard
+            .ensure_model(&mut engine, &cloud, &policy, &mut metrics)
+            .unwrap();
+        assert!(kind.is_none(), "empty shard must not train");
+        assert_eq!(metrics.retrains, 0);
+        assert_eq!(metrics.cache_hits, 0);
+    }
+}

@@ -17,10 +17,17 @@
 //!
 //! * **L3 (this crate)** — the coordination system: simulated cloud
 //!   ([`cloud`]), dataflow simulator ([`sim`]), workloads ([`workloads`]),
-//!   runtime-data repository ([`repo`]), prediction models ([`models`]),
-//!   cluster configurator ([`configurator`]), search/model baselines
-//!   ([`baselines`]), and the multi-org collaboration runtime
-//!   ([`coordinator`]).
+//!   runtime-data repository ([`repo`], with a monotone **generation
+//!   counter** that keys all model caching), prediction models
+//!   ([`models`]), cluster configurator ([`configurator`], which scores
+//!   every `machine × scaleout` candidate of a request as **one
+//!   featurized batch**), search/model baselines ([`baselines`]), and the
+//!   sharded multi-org collaboration runtime ([`coordinator`]):
+//!   per-job-kind shards with generation-cached models, served either
+//!   sequentially ([`coordinator::Coordinator`]), by a single-owner
+//!   worker thread ([`coordinator::session`]), or by the concurrent
+//!   multi-worker service with per-request reply channels
+//!   ([`coordinator::service`]).
 //! * **L2 (python/compile/model.py)** — JAX graphs for the prediction
 //!   models, AOT-lowered to HLO text in `artifacts/`.
 //! * **L1 (python/compile/kernels/knn.py)** — Pallas kernel for the
@@ -28,7 +35,17 @@
 //!
 //! The [`runtime`] module loads the HLO artifacts via the PJRT C API and is
 //! the only bridge between L3 and L2/L1; Python never runs on the request
-//! path.
+//! path. Model execution is backend-agnostic behind
+//! [`models::ModelTrainer`]: workers that own a PJRT runtime serve the
+//! compiled artifacts, and every other context (including a bare
+//! `cargo test` without artifacts) runs the bit-compatible pure-Rust
+//! engines in [`models::native`] — trained model state is padded to one
+//! fixed layout, so models interchange freely between backends.
+
+// Index-based loops throughout mirror the reference kernels' math and
+// keep the padded-layout arithmetic explicit; iterator-chain rewrites
+// would obscure the column/row correspondence with the XLA graphs.
+#![allow(clippy::needless_range_loop)]
 
 pub mod baselines;
 pub mod cloud;
@@ -46,8 +63,14 @@ pub mod workloads;
 pub mod prelude {
     pub use crate::cloud::{Cloud, MachineType};
     pub use crate::configurator::{ClusterChoice, Configurator, JobRequest};
-    pub use crate::coordinator::{Coordinator, JobOutcome, Organization};
-    pub use crate::models::{ConfigQuery, ModelKind, Predictor, RuntimeModel, TrainedModel};
+    pub use crate::coordinator::{
+        Coordinator, CoordinatorService, JobOutcome, Organization, ServiceClient, ServiceConfig,
+        ShardPolicy,
+    };
+    pub use crate::models::{
+        ConfigQuery, Engine, ModelKind, ModelTrainer, Predictor, QueryBatch, RuntimeModel,
+        TrainedModel,
+    };
     pub use crate::repo::{RuntimeDataRepo, RuntimeRecord};
     pub use crate::sim::SimulationResult;
     pub use crate::util::rng::Pcg32;

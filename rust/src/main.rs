@@ -6,6 +6,8 @@
 //! c3o table1 | fig3 | fig4 | fig5 | fig6 | fig7
 //! c3o configure  --job J [job args] [--target S] [--seed N]
 //! c3o e2e        [--jobs N] [--seed N]         collaborative end-to-end demo
+//! c3o serve      [--workers N] [--clients N] [--jobs N] [--seed N]
+//!                                              sharded multi-org service demo
 //! ```
 //!
 //! Argument parsing is hand-rolled (clap is not in the offline vendor
@@ -13,13 +15,14 @@
 
 use c3o::cloud::Cloud;
 use c3o::configurator::JobRequest;
-use c3o::coordinator::{Coordinator, Organization};
+use c3o::coordinator::{Coordinator, CoordinatorService, Organization, ServiceConfig};
 use c3o::figures;
 use c3o::runtime::Runtime;
 use c3o::workloads::{ExperimentGrid, JobKind, JobSpec};
 use std::collections::HashMap;
 use std::path::PathBuf;
 use std::process::ExitCode;
+use std::time::Instant;
 
 /// Parsed `--key value` arguments.
 struct Args {
@@ -73,6 +76,8 @@ USAGE:
                  --job pagerank --graph-mb X [--conv C]
                  [--target SECONDS] [--seed N]
   c3o e2e        [--jobs N] [--seed N]        collaborative end-to-end demo
+  c3o serve      [--workers N] [--clients N] [--jobs N] [--seed N]
+                                              sharded multi-org service demo
 ";
 
 fn main() -> ExitCode {
@@ -128,6 +133,7 @@ fn run(cmd: &str, rest: &[String]) -> Result<(), String> {
         }
         "configure" => cmd_configure(&cloud, &args, seed),
         "e2e" => cmd_e2e(&cloud, &args, seed),
+        "serve" => cmd_serve(&cloud, &args, seed),
         "help" | "--help" | "-h" => {
             print!("{USAGE}");
             Ok(())
@@ -185,7 +191,7 @@ fn cmd_configure(cloud: &Cloud, args: &Args, seed: u64) -> Result<(), String> {
     }
     let dir = Runtime::default_dir();
     if !Runtime::artifacts_available(&dir) {
-        return Err("artifacts not built — run `make artifacts` first".into());
+        eprintln!("note: PJRT artifacts not built — serving with native models");
     }
 
     eprintln!("building shared corpus for {}...", spec.kind().name());
@@ -235,7 +241,7 @@ fn cmd_e2e(cloud: &Cloud, args: &Args, seed: u64) -> Result<(), String> {
     let jobs: usize = args.get_or("jobs", 10)?;
     let dir = Runtime::default_dir();
     if !Runtime::artifacts_available(&dir) {
-        return Err("artifacts not built — run `make artifacts` first".into());
+        eprintln!("note: PJRT artifacts not built — serving with native models");
     }
     eprintln!("seeding shared repositories from the 930-run corpus...");
     let corpus = ExperimentGrid::paper_table1().execute(cloud, seed);
@@ -280,5 +286,91 @@ fn cmd_e2e(cloud: &Cloud, args: &Args, seed: u64) -> Result<(), String> {
         m.mean_prediction_error_pct(),
         m.total_cost_usd
     );
+    Ok(())
+}
+
+/// The multi-org service driver: N worker threads serve interleaved
+/// submissions from concurrent client threads across all five job-kind
+/// shards, with per-request replies. Works with or without PJRT
+/// artifacts (native model fallback).
+fn cmd_serve(cloud: &Cloud, args: &Args, seed: u64) -> Result<(), String> {
+    let workers: usize = args.get_or("workers", 4)?;
+    let clients: usize = args.get_or("clients", 8)?;
+    let jobs: usize = args.get_or("jobs", 40)?;
+    if clients == 0 || jobs == 0 {
+        return Err("--clients and --jobs must be >= 1".into());
+    }
+
+    eprintln!("seeding shared repositories from the corpus grid (1 repetition)...");
+    let corpus = ExperimentGrid {
+        experiments: ExperimentGrid::paper_table1().experiments,
+        repetitions: 1,
+    }
+    .execute(cloud, seed);
+
+    let service = CoordinatorService::spawn(
+        cloud.clone(),
+        ServiceConfig::default()
+            .with_workers(workers)
+            .with_seed(seed)
+            .with_artifacts_dir(Runtime::default_dir()),
+    );
+    for kind in JobKind::all() {
+        let added = service
+            .share(corpus.repo_for(kind))
+            .map_err(|e| format!("{e:#}"))?;
+        eprintln!("  {:>9}: {added} records shared", kind.name());
+    }
+
+    let request_for = |i: usize| -> JobRequest {
+        let gb = 10.0 + (i % 10) as f64;
+        match i % 5 {
+            0 => JobRequest::sort(gb).with_target_seconds(800.0),
+            1 => JobRequest::grep(gb, 0.1).with_target_seconds(600.0),
+            2 => JobRequest::sgd(gb, 60).with_target_seconds(1500.0),
+            3 => JobRequest::kmeans(gb, 5, 0.001).with_target_seconds(2500.0),
+            _ => JobRequest::pagerank(25.0 * gb, 0.001).with_target_seconds(1200.0),
+        }
+    };
+
+    eprintln!("{clients} client threads submitting {jobs} jobs through {workers} workers...");
+    let t0 = Instant::now();
+    let errors: Vec<String> = std::thread::scope(|scope| {
+        let mut handles = Vec::new();
+        for c in 0..clients {
+            let client = service.client();
+            handles.push(scope.spawn(move || {
+                let org = Organization::new(&format!("org-{c}"));
+                let mut failures = Vec::new();
+                let mut i = c;
+                while i < jobs {
+                    if let Err(e) = client.submit(&org, request_for(i)) {
+                        failures.push(format!("job {i}: {e:#}"));
+                    }
+                    i += clients;
+                }
+                failures
+            }));
+        }
+        handles
+            .into_iter()
+            .flat_map(|h| h.join().expect("client thread panicked"))
+            .collect()
+    });
+    let wall = t0.elapsed().as_secs_f64();
+    if let Some(first) = errors.first() {
+        return Err(format!("{} submissions failed; first: {first}", errors.len()));
+    }
+
+    let m = service.metrics().map_err(|e| format!("{e:#}"))?;
+    println!("jobs served:        {}", m.submissions);
+    println!("wall clock:         {wall:.2} s");
+    println!("throughput:         {:.1} submissions/s", jobs as f64 / wall);
+    println!("model retrains:     {}", m.retrains);
+    println!("model cache hits:   {}", m.cache_hits);
+    println!("target hit rate:    {:.0}%", 100.0 * m.target_hit_rate());
+    println!("mean pred. error:   {:.1}%", m.mean_prediction_error_pct());
+    println!("total cost:         ${:.2}", m.total_cost_usd);
+    service.shutdown();
     Ok(())
 }

@@ -64,6 +64,79 @@ pub struct ConfigQuery {
     pub job_features: Vec<f64>,
 }
 
+/// A set of candidate configurations for **one** job, featurized once
+/// into a single raw-feature matrix.
+///
+/// The configurator's hot path scores every `machine × scaleout`
+/// candidate of a request. Building a [`ConfigQuery`] per candidate and
+/// re-deriving its feature row inside every model was the dominant
+/// per-request cost; a `QueryBatch` resolves machine descriptors and job
+/// features exactly once, and models score straight off `raw` (each
+/// model applies its own scaling vectorized). The exact `f64` job
+/// features are retained so consumers that need full precision (e.g. the
+/// simulator-backed oracle) can reconstruct per-candidate queries.
+#[derive(Debug, Clone)]
+pub struct QueryBatch {
+    /// Job features shared by every candidate row (full `f64` precision).
+    pub job_features: Vec<f64>,
+    /// Per-row machine type name.
+    pub machines: Vec<String>,
+    /// Per-row scale-out.
+    pub scaleouts: Vec<u32>,
+    /// `[n × (job features + cluster descriptors)]` raw feature rows, in
+    /// the layout [`crate::repo::featurize::Featurizer::raw_row`] emits.
+    pub raw: MatF32,
+}
+
+impl QueryBatch {
+    /// Featurize `(machine, scaleout)` candidates for one job in a single
+    /// pass over the catalog.
+    ///
+    /// # Panics
+    /// Panics if a machine type is not in the catalog (same contract as
+    /// [`crate::repo::featurize::Featurizer::raw_row`]).
+    pub fn from_candidates(
+        cloud: &Cloud,
+        candidates: &[(String, u32)],
+        job_features: &[f64],
+    ) -> QueryBatch {
+        let featurizer = Featurizer::new(cloud);
+        let rows: Vec<Vec<f32>> = candidates
+            .iter()
+            .map(|(m, n)| featurizer.raw_row(m, *n, job_features))
+            .collect();
+        QueryBatch {
+            job_features: job_features.to_vec(),
+            machines: candidates.iter().map(|(m, _)| m.clone()).collect(),
+            scaleouts: candidates.iter().map(|(_, n)| *n).collect(),
+            raw: MatF32::from_rows(&rows),
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.machines.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.machines.is_empty()
+    }
+
+    /// Reconstruct per-candidate queries (full-precision job features) —
+    /// the compatibility path for models without a native batch
+    /// implementation.
+    pub fn queries(&self) -> Vec<ConfigQuery> {
+        self.machines
+            .iter()
+            .zip(&self.scaleouts)
+            .map(|(m, &n)| ConfigQuery {
+                machine: m.clone(),
+                scaleout: n,
+                job_features: self.job_features.clone(),
+            })
+            .collect()
+    }
+}
+
 /// Anything that can predict runtimes for configuration queries.
 /// Implemented by [`Predictor`]+[`TrainedModel`] (the PJRT path), the
 /// [`native`] fallbacks, and the simulator-backed [`oracle::SimOracle`]
@@ -71,6 +144,53 @@ pub struct ConfigQuery {
 pub trait RuntimeModel {
     /// Predicted runtime in seconds for each query.
     fn predict(&mut self, cloud: &Cloud, queries: &[ConfigQuery]) -> Result<Vec<f64>>;
+
+    /// Predicted runtime for each row of a pre-featurized candidate
+    /// batch. Models that can score the raw matrix directly override
+    /// this; the default reconstructs per-candidate queries so every
+    /// implementation stays correct.
+    fn predict_batch(&mut self, cloud: &Cloud, batch: &QueryBatch) -> Result<Vec<f64>> {
+        self.predict(cloud, &batch.queries())
+    }
+}
+
+/// A training/serving backend for both model families: the PJRT-backed
+/// [`Predictor`], the pure-Rust [`native::NativeEngine`], or the
+/// [`Engine`] that picks between them. The coordinator layer talks to
+/// models exclusively through this trait, so every deployment shape
+/// (single-owner session, sharded multi-worker service) works with or
+/// without compiled PJRT artifacts.
+pub trait ModelTrainer {
+    /// Human-readable backend name (`"pjrt"` / `"native"`).
+    fn backend(&self) -> &'static str;
+
+    /// Maximum kNN training rows this backend supports; repositories
+    /// beyond it must be coverage-sampled (§III-C).
+    fn knn_capacity(&self) -> usize;
+
+    /// Train a model of the requested kind on a shared repository.
+    fn train(
+        &mut self,
+        cloud: &Cloud,
+        repo: &RuntimeDataRepo,
+        kind: ModelKind,
+    ) -> Result<TrainedModel>;
+
+    /// Predict runtimes (seconds) for a batch of queries.
+    fn predict(
+        &mut self,
+        model: &TrainedModel,
+        cloud: &Cloud,
+        queries: &[ConfigQuery],
+    ) -> Result<Vec<f64>>;
+
+    /// Predict runtimes for a pre-featurized candidate batch in one call.
+    fn predict_batch(
+        &mut self,
+        model: &TrainedModel,
+        cloud: &Cloud,
+        batch: &QueryBatch,
+    ) -> Result<Vec<f64>>;
 }
 
 /// Trained state for either model family.
@@ -111,10 +231,73 @@ pub struct TrainedModel {
     pub id: u64,
 }
 
-fn next_model_id() -> u64 {
+pub(crate) fn next_model_id() -> u64 {
     use std::sync::atomic::{AtomicU64, Ordering};
     static NEXT: AtomicU64 = AtomicU64::new(1);
     NEXT.fetch_add(1, Ordering::Relaxed)
+}
+
+/// Fit the pessimistic model's state on a repository: standardize, learn
+/// per-feature |correlation| relevance weights, and pad to the fixed
+/// `(rows_cap × dim_cap)` layout both the PJRT artifacts and the native
+/// scorer consume. Shared by [`Predictor::train_pessimistic`] and
+/// [`native::NativeEngine`] so the two backends produce interchangeable
+/// [`ModelState::Knn`] values (a model trained on one backend's worker
+/// can be served by another's).
+pub(crate) fn fit_knn_state(
+    cloud: &Cloud,
+    repo: &RuntimeDataRepo,
+    rows_cap: usize,
+    dim_cap: usize,
+) -> Result<ModelState> {
+    if repo.is_empty() {
+        bail!("cannot train on an empty repository");
+    }
+    if repo.len() > rows_cap {
+        bail!(
+            "repo has {} records, backend supports {} (use repo::sampling)",
+            repo.len(),
+            rows_cap
+        );
+    }
+    let featurizer = Featurizer::new(cloud);
+    let (space, x, y) = featurizer.fit(repo);
+    let d = space.dim();
+    if d > dim_cap {
+        bail!("feature dim {d} exceeds backend feature dim {dim_cap}");
+    }
+
+    // weights: |corr(feature, y)| over the standardized data
+    let mut weights = vec![0.0f32; dim_cap];
+    let yf: Vec<f64> = y.iter().map(|&v| v as f64).collect();
+    for c in 0..d {
+        let col: Vec<f64> = (0..x.rows).map(|r| x.at(r, c) as f64).collect();
+        let corr = stats::pearson(&col, &yf);
+        weights[c] = if corr.is_finite() { corr.abs() as f32 } else { 0.0 };
+    }
+    // Floor so no observed feature is fully ignored (a zero-corr
+    // feature can still matter jointly).
+    for w in weights.iter_mut().take(d) {
+        *w = w.max(0.05);
+    }
+
+    // pad rows to rows_cap and cols to dim_cap
+    let mut train_x = MatF32::zeros(rows_cap, dim_cap);
+    let mut train_y = vec![0.0f32; rows_cap];
+    let mut valid = vec![0.0f32; rows_cap];
+    for r in 0..x.rows {
+        train_x.row_mut(r)[..d].copy_from_slice(x.row(r));
+        train_y[r] = y[r];
+        valid[r] = 1.0;
+    }
+
+    Ok(ModelState::Knn {
+        space,
+        train_x,
+        train_y,
+        valid,
+        weights,
+    })
 }
 
 /// Training hyper-parameters for the optimistic model.
@@ -215,57 +398,11 @@ impl Predictor {
         repo: &RuntimeDataRepo,
     ) -> Result<TrainedModel> {
         let man = self.runtime.manifest().clone();
-        if repo.is_empty() {
-            bail!("cannot train on an empty repository");
-        }
-        if repo.len() > man.knn_train_rows {
-            bail!(
-                "repo has {} records, artifact supports {} (use repo::sampling)",
-                repo.len(),
-                man.knn_train_rows
-            );
-        }
-        let featurizer = Featurizer::new(cloud);
-        let (space, x, y) = featurizer.fit(repo);
-        let d = space.dim();
-        if d > man.feature_dim {
-            bail!("feature dim {d} exceeds artifact feature dim {}", man.feature_dim);
-        }
-
-        // weights: |corr(feature, y)| over the standardized data
-        let mut weights = vec![0.0f32; man.feature_dim];
-        let yf: Vec<f64> = y.iter().map(|&v| v as f64).collect();
-        for c in 0..d {
-            let col: Vec<f64> = (0..x.rows).map(|r| x.at(r, c) as f64).collect();
-            let corr = stats::pearson(&col, &yf);
-            weights[c] = if corr.is_finite() { corr.abs() as f32 } else { 0.0 };
-        }
-        // Floor so no observed feature is fully ignored (a zero-corr
-        // feature can still matter jointly).
-        for w in weights.iter_mut().take(d) {
-            *w = w.max(0.05);
-        }
-
-        // pad rows to KNN_T and cols to F
-        let mut train_x = MatF32::zeros(man.knn_train_rows, man.feature_dim);
-        let mut train_y = vec![0.0f32; man.knn_train_rows];
-        let mut valid = vec![0.0f32; man.knn_train_rows];
-        for r in 0..x.rows {
-            train_x.row_mut(r)[..d].copy_from_slice(x.row(r));
-            train_y[r] = y[r];
-            valid[r] = 1.0;
-        }
-
+        let state = fit_knn_state(cloud, repo, man.knn_train_rows, man.feature_dim)?;
         Ok(TrainedModel {
             kind: ModelKind::Pessimistic,
             id: next_model_id(),
-            state: ModelState::Knn {
-                space,
-                train_x,
-                train_y,
-                valid,
-                weights,
-            },
+            state,
         })
     }
 
@@ -544,6 +681,281 @@ impl Predictor {
         }
         Ok(out)
     }
+
+    // --- batched prediction over pre-featurized candidates ------------------
+
+    /// Predict runtimes for a [`QueryBatch`] whose raw feature matrix was
+    /// built once by the configurator. Skips all per-candidate row
+    /// building: each chunk is scaled straight from `batch.raw` into the
+    /// staging matrix and executed. Bitwise-identical to calling
+    /// [`Predictor::predict`] on the equivalent query list (same scaling
+    /// ops, same chunk boundaries).
+    pub fn predict_batch(
+        &mut self,
+        model: &TrainedModel,
+        _cloud: &Cloud,
+        batch: &QueryBatch,
+    ) -> Result<Vec<f64>> {
+        match &model.state {
+            ModelState::Knn {
+                space,
+                train_x,
+                train_y,
+                valid,
+                weights,
+            } => {
+                if self.knn_cache.as_ref().map(|c| c.model_id) != Some(model.id) {
+                    self.knn_cache = Some(KnnDeviceCache {
+                        model_id: model.id,
+                        train_x: self.runtime.buffer_mat(train_x)?,
+                        train_y: self.runtime.buffer_vec(train_y)?,
+                        valid: self.runtime.buffer_vec(valid)?,
+                        weights: self.runtime.buffer_vec(weights)?,
+                    });
+                }
+                self.predict_knn_raw(space, &batch.raw)
+            }
+            ModelState::Opt {
+                mins,
+                spans,
+                y_mean,
+                y_sd,
+                params,
+                ..
+            } => {
+                if self.opt_cache.as_ref().map(|c| c.model_id) != Some(model.id) {
+                    self.opt_cache = Some(OptDeviceCache {
+                        model_id: model.id,
+                        params: self.runtime.buffer_vec(params)?,
+                    });
+                }
+                self.predict_opt_raw(mins, spans, *y_mean, *y_sd, &batch.raw)
+            }
+        }
+    }
+
+    fn predict_knn_raw(&mut self, space: &FeatureSpace, raw: &MatF32) -> Result<Vec<f64>> {
+        let man = self.runtime.manifest().clone();
+        let d = space.dim();
+        debug_assert_eq!(raw.cols, d, "raw row layout must match feature space");
+        let mut out = Vec::with_capacity(raw.rows);
+        let mut q = MatF32::zeros(man.knn_query_rows, man.feature_dim);
+        let mut r0 = 0;
+        while r0 < raw.rows {
+            let chunk = (raw.rows - r0).min(man.knn_query_rows);
+            q.data.fill(0.0);
+            for i in 0..chunk {
+                let src = raw.row(r0 + i);
+                let dst = q.row_mut(i);
+                for c in 0..d {
+                    dst[c] = (src[c] - space.mean[c]) / space.sd[c];
+                }
+            }
+            let qbuf = self.runtime.buffer_mat(&q)?;
+            let cache = self.knn_cache.as_ref().expect("cache ensured by predict_batch");
+            let inputs = [
+                &cache.train_x,
+                &cache.train_y,
+                &cache.valid,
+                &cache.weights,
+                &qbuf,
+            ];
+            let result = self
+                .runtime
+                .execute_buffers("knn_predict", &inputs)
+                .context("knn_predict execution")?;
+            let preds = Runtime::vec_from(&result[0])?;
+            for p in preds.iter().take(chunk) {
+                out.push(space.unscale_runtime(*p));
+            }
+            r0 += chunk;
+        }
+        Ok(out)
+    }
+
+    fn predict_opt_raw(
+        &mut self,
+        mins: &[f32],
+        spans: &[f32],
+        y_mean: f32,
+        y_sd: f32,
+        raw: &MatF32,
+    ) -> Result<Vec<f64>> {
+        let man = self.runtime.manifest().clone();
+        let mut out = Vec::with_capacity(raw.rows);
+        let mut x = MatF32::zeros(man.opt_batch, man.feature_dim);
+        let mut r0 = 0;
+        while r0 < raw.rows {
+            let chunk = (raw.rows - r0).min(man.opt_batch);
+            x.data.fill(0.0);
+            for i in 0..chunk {
+                let src = raw.row(r0 + i);
+                for (c, &rv) in src.iter().enumerate() {
+                    // clamp below 0 so the reciprocal basis stays finite;
+                    // above 1 extrapolation is intentional
+                    x.set(i, c, (((rv - mins[c]) / spans[c]).max(-0.05)).min(5.0));
+                }
+            }
+            let xbuf = self.runtime.buffer_mat(&x)?;
+            let cache = self.opt_cache.as_ref().expect("cache ensured by predict_batch");
+            let inputs = [&cache.params, &xbuf];
+            let result = self
+                .runtime
+                .execute_buffers("optimistic_predict", &inputs)
+                .context("optimistic_predict execution")?;
+            let preds = Runtime::vec_from(&result[0])?;
+            for p in preds.iter().take(chunk) {
+                out.push(((*p * y_sd + y_mean) as f64).exp());
+            }
+            r0 += chunk;
+        }
+        Ok(out)
+    }
+}
+
+impl ModelTrainer for Predictor {
+    fn backend(&self) -> &'static str {
+        "pjrt"
+    }
+
+    fn knn_capacity(&self) -> usize {
+        self.runtime.manifest().knn_train_rows
+    }
+
+    fn train(
+        &mut self,
+        cloud: &Cloud,
+        repo: &RuntimeDataRepo,
+        kind: ModelKind,
+    ) -> Result<TrainedModel> {
+        Predictor::train(self, cloud, repo, kind)
+    }
+
+    fn predict(
+        &mut self,
+        model: &TrainedModel,
+        cloud: &Cloud,
+        queries: &[ConfigQuery],
+    ) -> Result<Vec<f64>> {
+        Predictor::predict(self, model, cloud, queries)
+    }
+
+    fn predict_batch(
+        &mut self,
+        model: &TrainedModel,
+        cloud: &Cloud,
+        batch: &QueryBatch,
+    ) -> Result<Vec<f64>> {
+        Predictor::predict_batch(self, model, cloud, batch)
+    }
+}
+
+/// The backend selector: the PJRT-backed [`Predictor`] when compiled
+/// artifacts (and the PJRT runtime) are available, the pure-Rust
+/// [`native::NativeEngine`] otherwise. Worker threads of the coordinator
+/// service each own one `Engine`; the PJRT variant is not `Send` (the
+/// PJRT client is thread-pinned), so engines are always constructed on
+/// the thread that uses them.
+pub enum Engine {
+    Pjrt(Predictor),
+    Native(native::NativeEngine),
+}
+
+impl Engine {
+    /// PJRT if the artifacts directory is complete and the runtime
+    /// loads; native fallback otherwise.
+    pub fn auto(artifacts_dir: &Path) -> Engine {
+        if Runtime::artifacts_available(artifacts_dir) {
+            match Predictor::new(artifacts_dir) {
+                Ok(p) => return Engine::Pjrt(p),
+                Err(e) => {
+                    eprintln!(
+                        "warning: PJRT artifacts present but unloadable ({e:#}); \
+                         falling back to native models"
+                    );
+                }
+            }
+        }
+        Engine::Native(native::NativeEngine::default())
+    }
+
+    /// Always the pure-Rust backend.
+    pub fn native() -> Engine {
+        Engine::Native(native::NativeEngine::default())
+    }
+
+    pub fn is_pjrt(&self) -> bool {
+        matches!(self, Engine::Pjrt(_))
+    }
+}
+
+impl ModelTrainer for Engine {
+    fn backend(&self) -> &'static str {
+        match self {
+            Engine::Pjrt(p) => p.backend(),
+            Engine::Native(n) => ModelTrainer::backend(n),
+        }
+    }
+
+    fn knn_capacity(&self) -> usize {
+        match self {
+            Engine::Pjrt(p) => ModelTrainer::knn_capacity(p),
+            Engine::Native(n) => ModelTrainer::knn_capacity(n),
+        }
+    }
+
+    fn train(
+        &mut self,
+        cloud: &Cloud,
+        repo: &RuntimeDataRepo,
+        kind: ModelKind,
+    ) -> Result<TrainedModel> {
+        match self {
+            Engine::Pjrt(p) => ModelTrainer::train(p, cloud, repo, kind),
+            Engine::Native(n) => ModelTrainer::train(n, cloud, repo, kind),
+        }
+    }
+
+    fn predict(
+        &mut self,
+        model: &TrainedModel,
+        cloud: &Cloud,
+        queries: &[ConfigQuery],
+    ) -> Result<Vec<f64>> {
+        match self {
+            Engine::Pjrt(p) => ModelTrainer::predict(p, model, cloud, queries),
+            Engine::Native(n) => ModelTrainer::predict(n, model, cloud, queries),
+        }
+    }
+
+    fn predict_batch(
+        &mut self,
+        model: &TrainedModel,
+        cloud: &Cloud,
+        batch: &QueryBatch,
+    ) -> Result<Vec<f64>> {
+        match self {
+            Engine::Pjrt(p) => ModelTrainer::predict_batch(p, model, cloud, batch),
+            Engine::Native(n) => ModelTrainer::predict_batch(n, model, cloud, batch),
+        }
+    }
+}
+
+/// An `(engine, TrainedModel)` pair as a [`RuntimeModel`] — what the
+/// coordinator hands the configurator.
+pub struct EngineBound<'e> {
+    pub engine: &'e mut dyn ModelTrainer,
+    pub model: TrainedModel,
+}
+
+impl RuntimeModel for EngineBound<'_> {
+    fn predict(&mut self, cloud: &Cloud, queries: &[ConfigQuery]) -> Result<Vec<f64>> {
+        self.engine.predict(&self.model, cloud, queries)
+    }
+
+    fn predict_batch(&mut self, cloud: &Cloud, batch: &QueryBatch) -> Result<Vec<f64>> {
+        self.engine.predict_batch(&self.model, cloud, batch)
+    }
 }
 
 /// A `(Predictor, TrainedModel)` pair as a [`RuntimeModel`].
@@ -555,6 +967,10 @@ pub struct BoundModel<'p> {
 impl RuntimeModel for BoundModel<'_> {
     fn predict(&mut self, cloud: &Cloud, queries: &[ConfigQuery]) -> Result<Vec<f64>> {
         self.predictor.predict(&self.model, cloud, queries)
+    }
+
+    fn predict_batch(&mut self, cloud: &Cloud, batch: &QueryBatch) -> Result<Vec<f64>> {
+        self.predictor.predict_batch(&self.model, cloud, batch)
     }
 }
 

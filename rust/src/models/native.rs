@@ -1,25 +1,427 @@
-//! Pure-Rust re-implementations of both model families.
+//! Pure-Rust implementations of both model families.
 //!
 //! These exist for three reasons:
 //!
 //! 1. **Differential testing** — the PJRT-executed artifacts must agree
 //!    with these to within f32 tolerance (see `rust/tests/`), which
 //!    validates the entire AOT bridge end-to-end.
-//! 2. **Fallback** — environments without built artifacts (e.g. a bare
-//!    `cargo test`) still exercise all coordinator logic.
+//! 2. **Fallback serving** — [`NativeEngine`] is a full
+//!    [`ModelTrainer`] backend: it trains and serves both families
+//!    without any compiled artifacts, producing [`ModelState`] values
+//!    layout-compatible with the PJRT path (padded to the same fixed
+//!    shapes), so models are interchangeable between backends and every
+//!    coordinator deployment works on a bare `cargo test`.
 //! 3. **Perf baseline** — the §Perf benches compare PJRT vs native
 //!    latency to quantify what the XLA path buys (batch fusion).
 
 use crate::cloud::Cloud;
-use crate::models::{ConfigQuery, RuntimeModel};
+use crate::models::{
+    fit_knn_state, next_model_id, ConfigQuery, ModelKind, ModelState, ModelTrainer,
+    OptTrainConfig, QueryBatch, RuntimeModel, TrainedModel,
+};
 use crate::repo::featurize::{FeatureSpace, Featurizer};
 use crate::repo::RuntimeDataRepo;
 use crate::util::matrix::MatF32;
+use crate::util::rng::Pcg32;
 use crate::util::stats;
 use anyhow::{bail, Result};
 
 /// Distance assigned to padded rows (must match `ref.PAD_DISTANCE`).
 pub const PAD_DISTANCE: f32 = 1e30;
+
+/// Fixed native model shapes, mirroring the PJRT artifact manifest
+/// (`python/compile/model.py`): padding native-trained states to the
+/// same layout keeps them servable by PJRT workers and vice versa.
+pub const NATIVE_FEATURE_DIM: usize = 16;
+pub const NATIVE_KNN_ROWS: usize = 512;
+pub const NATIVE_KNN_K: usize = 5;
+pub const NATIVE_OPT_BATCH: usize = 256;
+
+/// Adam hyper-parameters (must match `python/compile/model.py`).
+const ADAM_B1: f32 = 0.9;
+const ADAM_B2: f32 = 0.999;
+const ADAM_EPS: f32 = 1e-8;
+/// L2 coefficient of the optimistic training loss (matches `_masked_mse`).
+const OPT_L2: f32 = 1e-4;
+
+/// Factorized-model forward pass in standardized log-runtime space:
+/// `bias + Σ_c θ_lin·x + θ_log·ln(1+x) + θ_inv/(x+0.1)`.
+pub(crate) fn opt_forward_std(params: &[f32], x01: &[f32]) -> f32 {
+    let f = (params.len() - 1) / 3;
+    let mut acc = params[0];
+    for c in 0..f {
+        let x = x01[c];
+        acc += params[1 + c] * x;
+        acc += params[1 + f + c] * (1.0 + x).ln();
+        acc += params[1 + 2 * f + c] / (x + 0.1);
+    }
+    acc
+}
+
+/// Min-max scale a raw feature row into the optimistic basis domain,
+/// zero-filling padded columns; clamps exactly like the PJRT query path.
+pub(crate) fn opt_x01_from_raw(raw: &[f32], mins: &[f32], spans: &[f32]) -> Vec<f32> {
+    let f = mins.len();
+    let mut x01 = vec![0.0f32; f];
+    for (c, &rv) in raw.iter().enumerate() {
+        // clamp below 0 so the reciprocal basis stays finite; above 1
+        // extrapolation is intentional
+        x01[c] = (((rv - mins[c]) / spans[c]).max(-0.05)).min(5.0);
+    }
+    x01
+}
+
+/// Score one raw feature row with a (possibly padded) optimistic state.
+pub(crate) fn opt_score_raw(
+    mins: &[f32],
+    spans: &[f32],
+    y_mean: f32,
+    y_sd: f32,
+    params: &[f32],
+    raw: &[f32],
+) -> f64 {
+    let x01 = opt_x01_from_raw(raw, mins, spans);
+    let acc = opt_forward_std(params, &x01);
+    ((acc * y_sd + y_mean) as f64).exp()
+}
+
+/// Score one raw feature row with a (possibly padded) pessimistic state:
+/// standardize into the fitted space, inverse-distance-weight the `k`
+/// nearest valid training rows. Mirrors `knn_predict_ref` including the
+/// padding mask semantics.
+pub(crate) fn knn_score_raw(
+    space: &FeatureSpace,
+    train_x: &MatF32,
+    train_y: &[f32],
+    valid: &[f32],
+    weights: &[f32],
+    k: usize,
+    raw: &[f32],
+) -> f64 {
+    let d = space.dim();
+    debug_assert_eq!(raw.len(), d, "raw row layout must match feature space");
+    let mut row = vec![0.0f32; d];
+    for c in 0..d {
+        row[c] = (raw[c] - space.mean[c]) / space.sd[c];
+    }
+    let mut dists: Vec<(f32, usize)> = Vec::with_capacity(train_x.rows);
+    for i in 0..train_x.rows {
+        if valid[i] < 0.5 {
+            continue; // padded row — PAD_DISTANCE would zero its weight
+        }
+        let tr = train_x.row(i);
+        let mut dacc = 0.0f32;
+        for c in 0..d {
+            let diff = row[c] - tr[c];
+            dacc += weights[c] * diff * diff;
+        }
+        dists.push((dacc, i));
+    }
+    dists.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+    let k = k.min(dists.len());
+    let mut num = 0.0f64;
+    let mut den = 0.0f64;
+    for &(dist, i) in dists.iter().take(k) {
+        let w = 1.0 / (dist as f64 + 1e-6);
+        num += w * train_y[i] as f64;
+        den += w;
+    }
+    space.unscale_runtime((num / den.max(1e-6)) as f32)
+}
+
+/// One Adam step on the masked-MSE (+ L2) loss of the optimistic model —
+/// the pure-Rust mirror of the AOT `optimistic_train` graph (analytic
+/// gradient of `_masked_mse`, bias-corrected Adam from `adam_step_ref`).
+/// Returns the step's loss.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn native_opt_train_step(
+    params: &mut [f32],
+    m: &mut [f32],
+    v: &mut [f32],
+    step: u32,
+    bx: &MatF32,
+    by: &[f32],
+    mask: &[f32],
+    lr: f32,
+) -> f32 {
+    let p = params.len();
+    let f = (p - 1) / 3;
+    let n_eff = mask.iter().sum::<f32>().max(1.0);
+    let mut grad = vec![0.0f32; p];
+    let mut loss = 0.0f32;
+    for i in 0..bx.rows {
+        if mask[i] == 0.0 {
+            continue;
+        }
+        let x = bx.row(i);
+        let pred = opt_forward_std(params, x);
+        let err = pred - by[i];
+        loss += err * err * mask[i];
+        let dp = 2.0 * err * mask[i] / n_eff;
+        grad[0] += dp;
+        for c in 0..f {
+            let xv = x[c];
+            grad[1 + c] += dp * xv;
+            grad[1 + f + c] += dp * (1.0 + xv).ln();
+            grad[1 + 2 * f + c] += dp / (xv + 0.1);
+        }
+    }
+    loss /= n_eff;
+    for c in 1..p {
+        loss += OPT_L2 * params[c] * params[c];
+        grad[c] += 2.0 * OPT_L2 * params[c];
+    }
+    let b1t = 1.0 - ADAM_B1.powi(step as i32);
+    let b2t = 1.0 - ADAM_B2.powi(step as i32);
+    for j in 0..p {
+        m[j] = ADAM_B1 * m[j] + (1.0 - ADAM_B1) * grad[j];
+        v[j] = ADAM_B2 * v[j] + (1.0 - ADAM_B2) * grad[j] * grad[j];
+        let mhat = m[j] / b1t;
+        let vhat = v[j] / b2t;
+        params[j] -= lr * mhat / (vhat.sqrt() + ADAM_EPS);
+    }
+    loss
+}
+
+/// The pure-Rust [`ModelTrainer`] backend: trains and serves both model
+/// families with no PJRT dependency. States are padded to the same fixed
+/// shapes as the artifacts so they interchange with PJRT-trained models.
+#[derive(Debug, Clone)]
+pub struct NativeEngine {
+    pub feature_dim: usize,
+    pub knn_rows: usize,
+    pub knn_k: usize,
+    pub opt_batch: usize,
+    pub opt_cfg: OptTrainConfig,
+}
+
+impl Default for NativeEngine {
+    fn default() -> Self {
+        NativeEngine {
+            feature_dim: NATIVE_FEATURE_DIM,
+            knn_rows: NATIVE_KNN_ROWS,
+            knn_k: NATIVE_KNN_K,
+            opt_batch: NATIVE_OPT_BATCH,
+            opt_cfg: OptTrainConfig::default(),
+        }
+    }
+}
+
+impl NativeEngine {
+    /// Fit the pessimistic model (standardize + correlation weights),
+    /// padded to the engine's fixed shapes.
+    pub fn train_pessimistic(&self, cloud: &Cloud, repo: &RuntimeDataRepo) -> Result<TrainedModel> {
+        let state = fit_knn_state(cloud, repo, self.knn_rows, self.feature_dim)?;
+        Ok(TrainedModel {
+            kind: ModelKind::Pessimistic,
+            id: next_model_id(),
+            state,
+        })
+    }
+
+    /// Train the factorized model with mini-batch Adam — the same epoch
+    /// loop as the PJRT path, with the train step executed natively.
+    pub fn train_optimistic(
+        &self,
+        cloud: &Cloud,
+        repo: &RuntimeDataRepo,
+        cfg: &OptTrainConfig,
+    ) -> Result<TrainedModel> {
+        if repo.is_empty() {
+            bail!("cannot train on an empty repository");
+        }
+        let fd = self.feature_dim;
+        let featurizer = Featurizer::new(cloud);
+        let raw: Vec<Vec<f32>> = repo
+            .records()
+            .iter()
+            .map(|r| featurizer.raw_row(&r.machine, r.scaleout, &r.job_features))
+            .collect();
+        let d = raw[0].len();
+        if d > fd {
+            bail!("feature dim {d} exceeds native feature dim {fd}");
+        }
+        let n = raw.len();
+
+        // min-max scaling to [0, 1] (the basis domain)
+        let mut mins = vec![f32::INFINITY; fd];
+        let mut maxs = vec![f32::NEG_INFINITY; fd];
+        for row in &raw {
+            for c in 0..d {
+                mins[c] = mins[c].min(row[c]);
+                maxs[c] = maxs[c].max(row[c]);
+            }
+        }
+        let mut spans = vec![1.0f32; fd];
+        for c in 0..d {
+            spans[c] = (maxs[c] - mins[c]).max(1e-6);
+        }
+        for c in d..fd {
+            mins[c] = 0.0;
+            spans[c] = 1.0;
+        }
+
+        // standardized log target
+        let log_y: Vec<f32> = repo.records().iter().map(|r| r.runtime_s.ln() as f32).collect();
+        let y_mean = log_y.iter().sum::<f32>() / n as f32;
+        let y_sd = (log_y.iter().map(|v| (v - y_mean).powi(2)).sum::<f32>() / n as f32)
+            .sqrt()
+            .max(1e-6);
+
+        // scaled full dataset
+        let mut x01 = MatF32::zeros(n, fd);
+        let mut y = vec![0.0f32; n];
+        for (r, row) in raw.iter().enumerate() {
+            for c in 0..d {
+                x01.set(r, c, (row[c] - mins[c]) / spans[c]);
+            }
+            y[r] = (log_y[r] - y_mean) / y_sd;
+        }
+
+        // mini-batch loop (identical control flow to the PJRT path)
+        let b = self.opt_batch;
+        let np = 1 + 3 * fd;
+        let mut params = vec![0.0f32; np];
+        let mut m = vec![0.0f32; np];
+        let mut v = vec![0.0f32; np];
+        let mut rng = Pcg32::new(cfg.shuffle_seed);
+        let mut order: Vec<usize> = (0..n).collect();
+        let mut best = f32::INFINITY;
+        let mut since_best = 0u32;
+        let mut final_loss = f32::INFINITY;
+        let mut step = 0u32;
+        'train: loop {
+            rng.shuffle(&mut order);
+            for chunk in order.chunks(b) {
+                step += 1;
+                if step > cfg.max_steps {
+                    break 'train;
+                }
+                let mut bx = MatF32::zeros(b, fd);
+                let mut by = vec![0.0f32; b];
+                let mut mask = vec![0.0f32; b];
+                for (i, &r) in chunk.iter().enumerate() {
+                    bx.row_mut(i).copy_from_slice(x01.row(r));
+                    by[i] = y[r];
+                    mask[i] = 1.0;
+                }
+                final_loss =
+                    native_opt_train_step(&mut params, &mut m, &mut v, step, &bx, &by, &mask, cfg.lr);
+                if final_loss < best - cfg.tol {
+                    best = final_loss;
+                    since_best = 0;
+                } else {
+                    since_best += 1;
+                    if since_best >= cfg.patience {
+                        break 'train;
+                    }
+                }
+            }
+        }
+
+        let names = {
+            let mut names: Vec<String> = repo
+                .job()
+                .feature_names()
+                .iter()
+                .map(|s| s.to_string())
+                .collect();
+            names.extend(
+                crate::repo::featurize::CLUSTER_FEATURES
+                    .iter()
+                    .map(|s| s.to_string()),
+            );
+            names
+        };
+
+        Ok(TrainedModel {
+            kind: ModelKind::Optimistic,
+            id: next_model_id(),
+            state: ModelState::Opt {
+                mins,
+                spans,
+                y_mean,
+                y_sd,
+                params,
+                final_loss,
+                names,
+            },
+        })
+    }
+
+    /// Score one raw feature row against a trained state.
+    fn score_raw(&self, model: &TrainedModel, raw: &[f32]) -> f64 {
+        match &model.state {
+            ModelState::Knn {
+                space,
+                train_x,
+                train_y,
+                valid,
+                weights,
+            } => knn_score_raw(space, train_x, train_y, valid, weights, self.knn_k, raw),
+            ModelState::Opt {
+                mins,
+                spans,
+                y_mean,
+                y_sd,
+                params,
+                ..
+            } => opt_score_raw(mins, spans, *y_mean, *y_sd, params, raw),
+        }
+    }
+}
+
+impl ModelTrainer for NativeEngine {
+    fn backend(&self) -> &'static str {
+        "native"
+    }
+
+    fn knn_capacity(&self) -> usize {
+        self.knn_rows
+    }
+
+    fn train(
+        &mut self,
+        cloud: &Cloud,
+        repo: &RuntimeDataRepo,
+        kind: ModelKind,
+    ) -> Result<TrainedModel> {
+        match kind {
+            ModelKind::Pessimistic => self.train_pessimistic(cloud, repo),
+            ModelKind::Optimistic => {
+                let cfg = self.opt_cfg.clone();
+                self.train_optimistic(cloud, repo, &cfg)
+            }
+        }
+    }
+
+    fn predict(
+        &mut self,
+        model: &TrainedModel,
+        cloud: &Cloud,
+        queries: &[ConfigQuery],
+    ) -> Result<Vec<f64>> {
+        let featurizer = Featurizer::new(cloud);
+        Ok(queries
+            .iter()
+            .map(|q| {
+                let raw = featurizer.raw_row(&q.machine, q.scaleout, &q.job_features);
+                self.score_raw(model, &raw)
+            })
+            .collect())
+    }
+
+    fn predict_batch(
+        &mut self,
+        model: &TrainedModel,
+        _cloud: &Cloud,
+        batch: &QueryBatch,
+    ) -> Result<Vec<f64>> {
+        Ok((0..batch.raw.rows)
+            .map(|r| self.score_raw(model, batch.raw.row(r)))
+            .collect())
+    }
+}
 
 /// Native similarity-weighted kNN (pessimistic model).
 #[derive(Debug, Clone)]
@@ -137,15 +539,8 @@ impl NativeOptimistic {
 
     /// Forward pass over scaled features x01 (full padded width).
     pub fn predict_x01(&self, x01: &[f32]) -> f64 {
-        let f = self.mins.len();
-        debug_assert_eq!(self.params.len(), 1 + 3 * f);
-        let mut acc = self.params[0];
-        for c in 0..f {
-            let x = x01[c];
-            acc += self.params[1 + c] * x;
-            acc += self.params[1 + f + c] * (1.0 + x).ln();
-            acc += self.params[1 + 2 * f + c] / (x + 0.1);
-        }
+        debug_assert_eq!(self.params.len(), 1 + 3 * self.mins.len());
+        let acc = opt_forward_std(&self.params, x01);
         ((acc * self.y_sd + self.y_mean) as f64).exp()
     }
 }
@@ -256,5 +651,103 @@ mod tests {
     fn empty_repo_rejected() {
         let cloud = Cloud::aws_like();
         assert!(NativeKnn::fit(&cloud, &RuntimeDataRepo::new(JobKind::Sort), 5).is_err());
+    }
+
+    #[test]
+    fn engine_trains_and_interpolates_pessimistic() {
+        let cloud = Cloud::aws_like();
+        let repo = toy_repo();
+        let mut engine = NativeEngine::default();
+        let model = engine.train(&cloud, &repo, ModelKind::Pessimistic).unwrap();
+        // exact training point must be near-exact
+        let qs = vec![ConfigQuery {
+            machine: "m5.xlarge".into(),
+            scaleout: 4,
+            job_features: vec![15.0],
+        }];
+        let pred = engine.predict(&model, &cloud, &qs).unwrap()[0];
+        assert!((pred - 250.0).abs() / 250.0 < 0.02, "pred {pred}");
+    }
+
+    #[test]
+    fn engine_trains_optimistic_and_learns_scaleout_law() {
+        // runtime = 1000/n is exactly expressible by the reciprocal basis;
+        // training must drive loss down and predictions near truth.
+        let cloud = Cloud::aws_like();
+        let repo = toy_repo();
+        let mut engine = NativeEngine::default();
+        let model = engine.train(&cloud, &repo, ModelKind::Optimistic).unwrap();
+        if let ModelState::Opt { final_loss, .. } = &model.state {
+            assert!(*final_loss < 0.5, "loss {final_loss}");
+        } else {
+            panic!("wrong state");
+        }
+        let qs = vec![ConfigQuery {
+            machine: "m5.xlarge".into(),
+            scaleout: 8,
+            job_features: vec![15.0],
+        }];
+        let pred = engine.predict(&model, &cloud, &qs).unwrap()[0];
+        assert!((pred - 125.0).abs() / 125.0 < 0.35, "pred {pred}");
+    }
+
+    #[test]
+    fn engine_batched_predict_is_bitwise_equal_to_sequential() {
+        let cloud = Cloud::aws_like();
+        let repo = toy_repo();
+        let mut engine = NativeEngine::default();
+        let features = vec![15.0];
+        let candidates: Vec<(String, u32)> = ["c5.xlarge", "m5.xlarge", "r5.xlarge"]
+            .iter()
+            .flat_map(|m| (2..=12).map(move |n| (m.to_string(), n)))
+            .collect();
+        let batch = QueryBatch::from_candidates(&cloud, &candidates, &features);
+        for kind in ModelKind::all() {
+            let model = engine.train(&cloud, &repo, kind).unwrap();
+            let batched = engine.predict_batch(&model, &cloud, &batch).unwrap();
+            let sequential = engine.predict(&model, &cloud, &batch.queries()).unwrap();
+            assert_eq!(batched.len(), sequential.len());
+            for (i, (a, b)) in batched.iter().zip(&sequential).enumerate() {
+                assert_eq!(
+                    a.to_bits(),
+                    b.to_bits(),
+                    "{kind:?} candidate {i}: batched {a} vs sequential {b}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn engine_states_are_padded_to_artifact_layout() {
+        let cloud = Cloud::aws_like();
+        let repo = toy_repo();
+        let mut engine = NativeEngine::default();
+        let knn = engine.train(&cloud, &repo, ModelKind::Pessimistic).unwrap();
+        if let ModelState::Knn { train_x, valid, weights, .. } = &knn.state {
+            assert_eq!(train_x.rows, NATIVE_KNN_ROWS);
+            assert_eq!(train_x.cols, NATIVE_FEATURE_DIM);
+            assert_eq!(valid.iter().filter(|&&v| v > 0.5).count(), repo.len());
+            assert_eq!(weights.len(), NATIVE_FEATURE_DIM);
+        } else {
+            panic!("wrong state");
+        }
+        let opt = engine.train(&cloud, &repo, ModelKind::Optimistic).unwrap();
+        if let ModelState::Opt { mins, params, .. } = &opt.state {
+            assert_eq!(mins.len(), NATIVE_FEATURE_DIM);
+            assert_eq!(params.len(), 1 + 3 * NATIVE_FEATURE_DIM);
+        } else {
+            panic!("wrong state");
+        }
+    }
+
+    #[test]
+    fn engine_rejects_oversized_repo() {
+        let cloud = Cloud::aws_like();
+        let engine = NativeEngine {
+            knn_rows: 4, // tiny cap to trigger the guard
+            ..NativeEngine::default()
+        };
+        let repo = toy_repo(); // 18 records
+        assert!(engine.train_pessimistic(&cloud, &repo).is_err());
     }
 }

@@ -7,7 +7,7 @@
 //! of new runtime data (driven by the coordinator).
 
 use crate::cloud::Cloud;
-use crate::models::{ConfigQuery, ModelKind, Predictor, TrainedModel};
+use crate::models::{ConfigQuery, ModelKind, ModelTrainer, TrainedModel};
 use crate::repo::RuntimeDataRepo;
 use crate::util::rng::Pcg32;
 use crate::util::stats;
@@ -46,9 +46,10 @@ pub fn kfold_indices(n: usize, folds: usize, seed: u64) -> Vec<Vec<usize>> {
     out
 }
 
-/// Cross-validated MAPE of one model kind on a repository.
+/// Cross-validated MAPE of one model kind on a repository. Works with
+/// any [`ModelTrainer`] backend (PJRT predictor or native engine).
 pub fn cv_mape(
-    predictor: &mut Predictor,
+    predictor: &mut dyn ModelTrainer,
     cloud: &Cloud,
     repo: &RuntimeDataRepo,
     kind: ModelKind,
@@ -89,9 +90,9 @@ pub fn cv_mape(
 }
 
 /// Run dynamic selection: CV both families, retrain the winner on the
-/// full repository.
+/// full repository. Works with any [`ModelTrainer`] backend.
 pub fn select_and_train(
-    predictor: &mut Predictor,
+    predictor: &mut dyn ModelTrainer,
     cloud: &Cloud,
     repo: &RuntimeDataRepo,
     folds: usize,
@@ -122,6 +123,7 @@ pub fn select_and_train(
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::models::Predictor;
     use crate::runtime::Runtime;
     use crate::workloads::{ExperimentGrid, JobKind};
 
@@ -187,5 +189,38 @@ mod tests {
         let mut p = Predictor::new(&dir).unwrap();
         let repo = RuntimeDataRepo::new(JobKind::Sort);
         assert!(cv_mape(&mut p, &cloud, &repo, ModelKind::Pessimistic, 5, 1).is_err());
+    }
+
+    #[test]
+    fn selection_runs_on_native_backend() {
+        // No artifacts required: the native engine serves dynamic
+        // selection end to end.
+        let cloud = Cloud::aws_like();
+        let grid = ExperimentGrid {
+            experiments: ExperimentGrid::paper_table1()
+                .experiments
+                .into_iter()
+                .filter(|e| e.spec.kind() == JobKind::Sort)
+                .collect(),
+            repetitions: 1,
+        };
+        let repo = grid.execute(&cloud, 3).repo_for(JobKind::Sort);
+        let mut engine = crate::models::native::NativeEngine::default();
+        let (model, report) = select_and_train(&mut engine, &cloud, &repo, 4, 9).unwrap();
+        assert_eq!(model.kind, report.chosen);
+        let winner = report.mape_of(report.chosen);
+        for (_, m) in &report.cv_mape {
+            assert!(m.is_finite() && *m > 0.0, "{report:?}");
+            assert!(winner <= *m + 1e-12);
+        }
+        assert!(winner < 30.0, "native winner MAPE {winner}");
+    }
+
+    #[test]
+    fn cv_rejects_tiny_repo_native() {
+        let cloud = Cloud::aws_like();
+        let mut engine = crate::models::native::NativeEngine::default();
+        let repo = RuntimeDataRepo::new(JobKind::Sort);
+        assert!(cv_mape(&mut engine, &cloud, &repo, ModelKind::Pessimistic, 5, 1).is_err());
     }
 }

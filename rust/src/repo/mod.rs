@@ -44,15 +44,30 @@ pub struct RuntimeRecord {
     pub runtime_s: f64,
 }
 
+/// Canonical text form of one feature value for [`RuntimeRecord::config_key`].
+///
+/// Float formatting alone is not a stable identity: `-0.0` and `0.0` are
+/// equal grid points but format differently under `{:.6e}`, and the 2^52
+/// NaN payloads all denote the same (invalid) point. Normalize before
+/// formatting so equal configurations can never produce distinct keys.
+fn canonical_feature(f: f64) -> String {
+    if f.is_nan() {
+        return "nan".to_string();
+    }
+    let f = if f == 0.0 { 0.0 } else { f }; // collapse -0.0 into 0.0
+    format!("{f:.6e}")
+}
+
 impl RuntimeRecord {
     /// Stable identity key for deduplication: everything except runtime
     /// and org (two orgs measuring the same configuration are duplicates
-    /// of the same grid point; merge keeps the first).
+    /// of the same grid point; merge keeps the first). Feature values are
+    /// canonicalized (`-0.0` ≡ `0.0`, all NaNs ≡ `nan`) before formatting.
     pub fn config_key(&self) -> String {
         let feats: Vec<String> = self
             .job_features
             .iter()
-            .map(|f| format!("{f:.6e}"))
+            .map(|f| canonical_feature(*f))
             .collect();
         format!(
             "{}|{}|{}|{}",
@@ -90,8 +105,13 @@ impl RuntimeRecord {
 pub struct RuntimeDataRepo {
     job: JobKind,
     records: Vec<RuntimeRecord>,
-    /// Monotone version counter, bumped on every mutation (commit id).
-    version: u64,
+    /// Monotone generation counter: advances by the number of records a
+    /// mutation actually added, and never moves otherwise. Consumers
+    /// (the coordinator shards' model caches) key trained models on this
+    /// value, so "the corpus did not change" is observable as "the
+    /// generation did not change" — re-merging already-known data is a
+    /// guaranteed no-op for retraining.
+    generation: u64,
 }
 
 impl RuntimeDataRepo {
@@ -100,7 +120,7 @@ impl RuntimeDataRepo {
         RuntimeDataRepo {
             job,
             records: Vec::new(),
-            version: 0,
+            generation: 0,
         }
     }
 
@@ -130,9 +150,17 @@ impl RuntimeDataRepo {
         self.records.is_empty()
     }
 
-    /// Current commit version (bumps on each mutation).
+    /// Current generation: advances by the number of records added. A
+    /// repository whose generation is unchanged is guaranteed to hold
+    /// exactly the same data, which is what the coordinator's model
+    /// cache keys on.
+    pub fn generation(&self) -> u64 {
+        self.generation
+    }
+
+    /// Legacy alias for [`RuntimeDataRepo::generation`].
     pub fn version(&self) -> u64 {
-        self.version
+        self.generation
     }
 
     /// Contribute one record (the "capture and save" step of Fig. 1).
@@ -146,7 +174,7 @@ impl RuntimeDataRepo {
         }
         r.validate()?;
         self.records.push(r);
-        self.version += 1;
+        self.generation += 1;
         Ok(())
     }
 
@@ -162,24 +190,23 @@ impl RuntimeDataRepo {
 
     /// Merge another repository of the same job into this one.
     /// Duplicate configurations (same [`RuntimeRecord::config_key`]) keep
-    /// the existing record — idempotent re-merges don't grow the repo.
-    /// Returns the number of records actually added.
+    /// the existing record — idempotent re-merges don't grow the repo and
+    /// don't advance the generation. Returns the number of records
+    /// actually added (which is also how far the generation advanced).
     pub fn merge(&mut self, other: &RuntimeDataRepo) -> Result<usize, String> {
         if other.job != self.job {
             return Err("cannot merge repos of different jobs".into());
         }
-        let existing: BTreeSet<String> =
+        let mut existing: BTreeSet<String> =
             self.records.iter().map(|r| r.config_key()).collect();
-        let mut added = 0;
+        let mut added: usize = 0;
         for r in &other.records {
-            if !existing.contains(&r.config_key()) {
+            if existing.insert(r.config_key()) {
                 self.records.push(r.clone());
                 added += 1;
             }
         }
-        if added > 0 {
-            self.version += 1;
-        }
+        self.generation += added as u64;
         Ok(added)
     }
 
@@ -317,6 +344,47 @@ mod tests {
         assert_eq!(a.len(), 2);
         // merging again adds nothing
         assert_eq!(a.merge(&b).unwrap(), 0);
+    }
+
+    #[test]
+    fn config_key_normalizes_signed_zero_and_nan() {
+        // -0.0 and 0.0 are the same grid point; they must share one key.
+        let pos = rec("a", "m5.xlarge", 4, 0.0, 100.0);
+        let neg = rec("b", "m5.xlarge", 4, -0.0, 102.0);
+        assert_eq!(pos.config_key(), neg.config_key());
+        // every NaN payload canonicalizes to the same token (config_key
+        // must stay total even on records that validation would reject)
+        let nan_a = rec("a", "m5.xlarge", 4, f64::NAN, 100.0);
+        let nan_b = rec("a", "m5.xlarge", 4, -f64::NAN, 100.0);
+        assert_eq!(nan_a.config_key(), nan_b.config_key());
+        assert!(nan_a.config_key().contains("nan"));
+    }
+
+    #[test]
+    fn merge_dedups_signed_zero_grid_points() {
+        let mut a = RuntimeDataRepo::new(JobKind::Sort);
+        a.contribute(rec("orgA", "m5.xlarge", 4, 0.0, 100.0)).unwrap();
+        let mut b = RuntimeDataRepo::new(JobKind::Sort);
+        b.contribute(rec("orgB", "m5.xlarge", 4, -0.0, 101.0)).unwrap();
+        assert_eq!(a.merge(&b).unwrap(), 0, "-0.0 must dedup against 0.0");
+        assert_eq!(a.len(), 1);
+    }
+
+    #[test]
+    fn generation_tracks_records_added() {
+        let mut a = RuntimeDataRepo::new(JobKind::Sort);
+        assert_eq!(a.generation(), 0);
+        a.contribute(rec("a", "m5.xlarge", 4, 10.0, 100.0)).unwrap();
+        assert_eq!(a.generation(), 1);
+        let mut b = RuntimeDataRepo::new(JobKind::Sort);
+        b.contribute(rec("b", "m5.xlarge", 6, 10.0, 90.0)).unwrap();
+        b.contribute(rec("b", "m5.xlarge", 8, 10.0, 80.0)).unwrap();
+        a.merge(&b).unwrap();
+        assert_eq!(a.generation(), 3, "merge advances by records added");
+        // idempotent re-merge: no data change, no generation change
+        let before = a.generation();
+        assert_eq!(a.merge(&b).unwrap(), 0);
+        assert_eq!(a.generation(), before);
     }
 
     #[test]

@@ -4,6 +4,7 @@
 //! Supports quoted fields containing commas/newlines/escaped quotes, which
 //! is all the repository schema needs; no serde in the vendor set.
 
+use std::fmt;
 use std::fmt::Write as _;
 use std::fs;
 use std::io;
@@ -86,16 +87,30 @@ impl Table {
     }
 }
 
-/// CSV parse errors.
-#[derive(Debug, thiserror::Error, PartialEq)]
+/// CSV parse errors. (Display/Error are hand-implemented — `thiserror`
+/// is not in the offline vendor set.)
+#[derive(Debug, PartialEq)]
 pub enum CsvError {
-    #[error("row {row}: has {got} fields, header has {want}")]
     RaggedRow { row: usize, got: usize, want: usize },
-    #[error("unterminated quoted field starting near byte {at}")]
     UnterminatedQuote { at: usize },
-    #[error("io error: {0}")]
     Io(String),
 }
+
+impl fmt::Display for CsvError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            CsvError::RaggedRow { row, got, want } => {
+                write!(f, "row {row}: has {got} fields, header has {want}")
+            }
+            CsvError::UnterminatedQuote { at } => {
+                write!(f, "unterminated quoted field starting near byte {at}")
+            }
+            CsvError::Io(e) => write!(f, "io error: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for CsvError {}
 
 fn needs_quoting(field: &str) -> bool {
     field.contains(',') || field.contains('"') || field.contains('\n') || field.contains('\r')

@@ -5,8 +5,9 @@
 
 use c3o::cloud::{BillingPolicy, Cloud};
 use c3o::configurator::{Configurator, JobRequest};
+use c3o::models::native::NativeEngine;
 use c3o::models::oracle::SimOracle;
-use c3o::models::{ConfigQuery, RuntimeModel};
+use c3o::models::{ConfigQuery, ModelKind, ModelTrainer, QueryBatch, RuntimeModel};
 use c3o::repo::{RuntimeDataRepo, RuntimeRecord};
 use c3o::sim::{SimConfig, Simulator};
 use c3o::util::prop::{forall, Gen};
@@ -159,6 +160,62 @@ fn simulator_never_negative_or_nan() {
         for s in &r.stages {
             assert!(s.seconds.is_finite() && s.seconds >= 0.0);
             assert!(s.spilled_mb >= 0.0);
+        }
+    });
+}
+
+// --------------------------------------------------------------------------
+// Model invariants
+// --------------------------------------------------------------------------
+
+#[test]
+fn batched_predict_is_bitwise_equal_to_sequential() {
+    // The configurator's batched scoring (one featurized matrix, one
+    // predict call) must be a pure optimization: for every trained model,
+    // predictions over a candidate batch are BITWISE equal to predicting
+    // each candidate sequentially.
+    let cloud = Cloud::aws_like();
+    forall("batched_equals_sequential", 20, |g| {
+        let kind = *g.pick(&JobKind::all());
+        let mut repo = RuntimeDataRepo::new(kind);
+        for _ in 0..g.usize_in(12, 40) {
+            let _ = repo.contribute(random_record(g, kind));
+        }
+        if repo.is_empty() {
+            return;
+        }
+        // few training steps: the property holds at any parameter values
+        let mut engine = NativeEngine {
+            opt_cfg: c3o::models::OptTrainConfig {
+                max_steps: 50,
+                ..Default::default()
+            },
+            ..NativeEngine::default()
+        };
+        let model_kind = if g.bool() {
+            ModelKind::Pessimistic
+        } else {
+            ModelKind::Optimistic
+        };
+        let model = engine.train(&cloud, &repo, model_kind).unwrap();
+
+        let nf = kind.feature_names().len();
+        let features: Vec<f64> = (0..nf).map(|_| g.f64_in(0.5, 30.0)).collect();
+        let machines = ["c5.xlarge", "m5.xlarge", "r5.xlarge"];
+        let candidates: Vec<(String, u32)> = machines
+            .iter()
+            .flat_map(|m| (2u32..=12).map(move |n| (m.to_string(), n)))
+            .collect();
+        let batch = QueryBatch::from_candidates(&cloud, &candidates, &features);
+        let batched = engine.predict_batch(&model, &cloud, &batch).unwrap();
+        let sequential = engine.predict(&model, &cloud, &batch.queries()).unwrap();
+        assert_eq!(batched.len(), sequential.len());
+        for (i, (a, b)) in batched.iter().zip(&sequential).enumerate() {
+            assert_eq!(
+                a.to_bits(),
+                b.to_bits(),
+                "{model_kind:?} candidate {i}: batched {a} != sequential {b}"
+            );
         }
     });
 }

@@ -1,0 +1,196 @@
+//! Offline stub of the `xla` (xla-rs) PJRT bindings.
+//!
+//! The real crate links `libxla_extension` and executes AOT-compiled HLO
+//! through the PJRT C API. That shared library is not present in the
+//! offline build environment, so this stub keeps the exact API surface
+//! the workspace uses while reporting the runtime as unavailable:
+//!
+//! * [`PjRtClient::cpu`] returns an error, which `c3o::runtime::Runtime`
+//!   surfaces at load time; the coordinator then falls back to the
+//!   pure-Rust `models::native` engines.
+//! * Every other method is reachable only behind a successfully
+//!   constructed client, so they all return the same "unavailable" error
+//!   (they exist purely so the call sites type-check).
+//!
+//! Replacing this path dependency with the real xla-rs crate re-enables
+//! the PJRT path with no changes to the workspace code.
+
+/// Error type mirroring xla-rs (call sites format it with `{:?}`).
+#[derive(Debug, Clone)]
+pub enum Error {
+    /// The PJRT runtime is not available in this build.
+    Unavailable(String),
+}
+
+fn unavailable<T>(what: &str) -> Result<T, Error> {
+    Err(Error::Unavailable(format!(
+        "{what}: PJRT runtime not available (offline xla stub; link the real xla-rs crate to enable)"
+    )))
+}
+
+/// A PJRT client handle (CPU platform in the real crate).
+#[derive(Debug)]
+pub struct PjRtClient(());
+
+impl PjRtClient {
+    /// Construct the CPU PJRT client. Always fails in the stub.
+    pub fn cpu() -> Result<PjRtClient, Error> {
+        unavailable("PjRtClient::cpu")
+    }
+
+    /// Compile a computation to a loaded executable.
+    pub fn compile(&self, _computation: &XlaComputation) -> Result<PjRtLoadedExecutable, Error> {
+        unavailable("PjRtClient::compile")
+    }
+
+    /// Upload a host buffer to the device.
+    pub fn buffer_from_host_buffer<T>(
+        &self,
+        _data: &[T],
+        _dims: &[usize],
+        _device: Option<usize>,
+    ) -> Result<PjRtBuffer, Error> {
+        unavailable("PjRtClient::buffer_from_host_buffer")
+    }
+}
+
+/// A device-resident buffer.
+#[derive(Debug)]
+pub struct PjRtBuffer(());
+
+impl PjRtBuffer {
+    /// Fetch the buffer back to the host as a literal.
+    pub fn to_literal_sync(&self) -> Result<Literal, Error> {
+        unavailable("PjRtBuffer::to_literal_sync")
+    }
+}
+
+/// A compiled, loaded executable.
+#[derive(Debug)]
+pub struct PjRtLoadedExecutable(());
+
+impl PjRtLoadedExecutable {
+    /// Execute with host literals; returns per-device, per-output buffers.
+    pub fn execute<L>(&self, _args: &[L]) -> Result<Vec<Vec<PjRtBuffer>>, Error> {
+        unavailable("PjRtLoadedExecutable::execute")
+    }
+
+    /// Execute with device-resident input buffers.
+    pub fn execute_b<L>(&self, _args: &[L]) -> Result<Vec<Vec<PjRtBuffer>>, Error> {
+        unavailable("PjRtLoadedExecutable::execute_b")
+    }
+}
+
+/// A host-side typed array (only f32 shapes are used by this workspace).
+#[derive(Debug, Clone)]
+pub struct Literal {
+    data: Vec<f32>,
+    dims: Vec<i64>,
+}
+
+impl Literal {
+    /// 1-D literal from a slice.
+    pub fn vec1(xs: &[f32]) -> Literal {
+        Literal {
+            data: xs.to_vec(),
+            dims: vec![xs.len() as i64],
+        }
+    }
+
+    /// Scalar literal.
+    pub fn scalar(x: f32) -> Literal {
+        Literal {
+            data: vec![x],
+            dims: Vec::new(),
+        }
+    }
+
+    /// Reshape to new dimensions (element count must match).
+    pub fn reshape(&self, dims: &[i64]) -> Result<Literal, Error> {
+        let n: i64 = dims.iter().product();
+        if n as usize != self.data.len() {
+            return Err(Error::Unavailable(format!(
+                "reshape: {} elements into dims {dims:?}",
+                self.data.len()
+            )));
+        }
+        Ok(Literal {
+            data: self.data.clone(),
+            dims: dims.to_vec(),
+        })
+    }
+
+    /// Copy out as a typed vector (stub supports f32).
+    pub fn to_vec<T: FromF32>(&self) -> Result<Vec<T>, Error> {
+        Ok(self.data.iter().map(|&x| T::from_f32(x)).collect())
+    }
+
+    /// Decompose a tuple literal into its elements (unreachable in the
+    /// stub: tuples only come back from executions, which always fail).
+    pub fn to_tuple(&self) -> Result<Vec<Literal>, Error> {
+        unavailable("Literal::to_tuple")
+    }
+
+    /// The literal's dimensions.
+    pub fn dims(&self) -> &[i64] {
+        &self.dims
+    }
+}
+
+/// Conversion used by [`Literal::to_vec`].
+pub trait FromF32 {
+    fn from_f32(x: f32) -> Self;
+}
+
+impl FromF32 for f32 {
+    fn from_f32(x: f32) -> Self {
+        x
+    }
+}
+
+impl FromF32 for f64 {
+    fn from_f32(x: f32) -> Self {
+        x as f64
+    }
+}
+
+/// Parsed HLO module (text form in the real crate).
+#[derive(Debug)]
+pub struct HloModuleProto(());
+
+impl HloModuleProto {
+    /// Parse an HLO text file. Always fails in the stub.
+    pub fn from_text_file(_path: &str) -> Result<HloModuleProto, Error> {
+        unavailable("HloModuleProto::from_text_file")
+    }
+}
+
+/// An XLA computation wrapping a parsed module.
+#[derive(Debug)]
+pub struct XlaComputation(());
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn client_reports_unavailable() {
+        assert!(PjRtClient::cpu().is_err());
+    }
+
+    #[test]
+    fn literals_are_host_side_and_work() {
+        let l = Literal::vec1(&[1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(l.dims(), &[4]);
+        let m = l.reshape(&[2, 2]).unwrap();
+        assert_eq!(m.dims(), &[2, 2]);
+        assert!(l.reshape(&[3, 3]).is_err());
+        assert_eq!(l.to_vec::<f32>().unwrap(), vec![1.0, 2.0, 3.0, 4.0]);
+    }
+}
