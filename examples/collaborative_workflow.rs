@@ -52,8 +52,8 @@ fn main() -> anyhow::Result<()> {
     println!("[2/4] sharing runtime data into the coordinator...");
     let session = Session::spawn(cloud.clone(), artifacts, 7);
     for kind in JobKind::all() {
-        let added = session.share(corpus.repo_for(kind))?;
-        println!("      {:>9}: {added} records shared", kind.name());
+        let shared = session.share(corpus.repo_for(kind))?;
+        println!("      {:>9}: {} records shared", kind.name(), shared.added);
     }
 
     // ---- phase 3: a new organization submits real work ------------------

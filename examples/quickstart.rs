@@ -1,12 +1,20 @@
-//! Quickstart: the C3O loop in ~40 lines of user code.
+//! Quickstart: the C3O loop in ~40 lines of user code, written against
+//! the deployment-agnostic [`Client`] protocol.
 //!
 //! 1. Build a simulated cloud and share a (small) corpus of historical
-//!    runtime data for a Grep job.
-//! 2. Train the runtime prediction models on the shared data (dynamic
-//!    cross-validation selection between the pessimistic and optimistic
-//!    families — everything executes as AOT-compiled XLA via PJRT).
-//! 3. Ask the configurator for the cheapest cluster that greps 15 GB in
-//!    under five minutes; run it; contribute the new measurement back.
+//!    runtime data for a Grep job — a **write**, which also trains the
+//!    runtime prediction models (dynamic cross-validation selection
+//!    between the pessimistic and optimistic families).
+//! 2. Ask for a **read-only recommendation**: the cheapest cluster that
+//!    greps 15 GB in under five minutes, scored from the shared data
+//!    without running anything.
+//! 3. Submit the job for real (decide → provision → run → contribute),
+//!    and check the submission decided exactly what the recommendation
+//!    promised.
+//!
+//! The `client` variable is `&mut dyn Client`: swap the sequential
+//! coordinator for a `Session` or a `ServiceClient` and every line below
+//! keeps working.
 //!
 //! Run with: `make artifacts && cargo run --release --example quickstart`
 
@@ -42,26 +50,41 @@ fn main() -> anyhow::Result<()> {
         shared.organizations().len()
     );
 
-    // The coordinator owns models + repositories + the cloud loop.
+    // The coordinator owns models + repositories + the cloud loop; the
+    // code below only speaks the protocol.
     let mut coordinator = Coordinator::new(cloud, &artifacts, 7)?;
-    coordinator.share(&shared)?;
+    let client: &mut dyn Client = &mut coordinator;
 
-    // A brand-new organization configures its very first Grep run.
-    let org = Organization::new("quickstart-org");
-    let request = JobRequest::grep(15.0, 0.1).with_target_seconds(300.0);
-    let outcome = coordinator.submit(&org, &request)?;
-
-    let report = coordinator
-        .selection_report(JobKind::Grep)
-        .expect("model trained");
-    println!("\nmodel selection (4-fold CV):");
+    // WRITE: merge the shared data (this also trains the model that
+    // serves every read below).
+    client.share(shared)?;
+    let info = client.snapshot_info(JobKind::Grep)?;
     println!(
-        "  pessimistic {:.1}%  optimistic {:.1}%  -> chose {}",
-        report.mape_of(ModelKind::Pessimistic),
-        report.mape_of(ModelKind::Optimistic),
-        report.chosen.name()
+        "\nsnapshot: {} records at generation {}, model {:?}",
+        info.records, info.generation, info.model
     );
-    println!("\nconfiguration decision:");
+
+    // READ: a brand-new organization asks what to buy — no cluster is
+    // provisioned, nothing runs.
+    let request = JobRequest::grep(15.0, 0.1).with_target_seconds(300.0);
+    let rec = client.recommend(request.clone())?;
+    println!("\nrecommendation (read-only):");
+    println!(
+        "  cluster:   {} x{}  (~{:.1} s predicted, ~${:.3})",
+        rec.choice.machine_type,
+        rec.choice.node_count,
+        rec.choice.predicted_runtime_s,
+        rec.choice.expected_cost_usd
+    );
+
+    // WRITE: submit for real. The submission decides through the same
+    // model snapshot, so it picks exactly the recommended cluster.
+    let org = Organization::new("quickstart-org");
+    let outcome = client.submit(&org, request)?;
+    assert_eq!(outcome.machine, rec.choice.machine_type);
+    assert_eq!(outcome.scaleout, rec.choice.node_count);
+
+    println!("\nsubmission (full loop):");
     println!("  cluster:   {} x{}", outcome.machine, outcome.scaleout);
     println!("  predicted: {:.1} s", outcome.predicted_runtime_s);
     println!("  actual:    {:.1} s", outcome.actual_runtime_s);
@@ -71,5 +94,13 @@ fn main() -> anyhow::Result<()> {
         outcome.met_target
     );
     println!("  cost:      ${:.3}", outcome.actual_cost_usd);
+
+    // The run was contributed back automatically; an externally-observed
+    // run would be recorded with `client.contribute(record)`.
+    let after = client.snapshot_info(JobKind::Grep)?;
+    println!(
+        "\nshared repository grew: generation {} -> {}",
+        info.generation, after.generation
+    );
     Ok(())
 }

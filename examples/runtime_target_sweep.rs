@@ -5,9 +5,13 @@
 //! print the chosen configuration, predicted runtime, and expected cost
 //! at each point — the cost/deadline frontier a C3O user navigates.
 //!
+//! The sweep is pure **read traffic**: one `Share` write trains the
+//! model, then every point is a `Recommend` query through the
+//! deployment-agnostic [`Client`] protocol — nothing is provisioned or
+//! run, and the shared repository's generation never moves.
+//!
 //! Run with: `make artifacts && cargo run --release --example runtime_target_sweep`
 
-use c3o::models::BoundModel;
 use c3o::prelude::*;
 
 fn main() -> anyhow::Result<()> {
@@ -29,17 +33,16 @@ fn main() -> anyhow::Result<()> {
     };
     let repo = grid.execute(&cloud, 42).repo_for(JobKind::Sort);
 
-    let mut predictor = Predictor::new(&artifacts)?;
-    let (model, report) =
-        c3o::models::selection::select_and_train(&mut predictor, &cloud, &repo, 4, 1)?;
+    let mut coordinator = Coordinator::new(cloud, &artifacts, 1)?;
+    let client: &mut dyn Client = &mut coordinator;
+    client.share(repo)?; // the write that trains the model
+
+    let info = client.snapshot_info(JobKind::Sort)?;
     println!(
-        "model: {} (CV MAPE pessimistic {:.1}% / optimistic {:.1}%)\n",
-        report.chosen.name(),
-        report.mape_of(ModelKind::Pessimistic),
-        report.mape_of(ModelKind::Optimistic)
+        "model: {:?} trained on {} shared records (generation {})\n",
+        info.model, info.records, info.generation
     );
 
-    let configurator = Configurator::new(&cloud);
     println!(
         "{:>9} {:>12} {:>4} {:>11} {:>10} {:>6}",
         "target_s", "machine", "n", "predicted_s", "cost_usd", "met"
@@ -47,28 +50,29 @@ fn main() -> anyhow::Result<()> {
     let spec_gb = 17.0;
     for target in [60.0, 120.0, 180.0, 240.0, 300.0, 420.0, 600.0, 900.0, 1800.0] {
         let request = JobRequest::sort(spec_gb).with_target_seconds(target);
-        let mut bound = BoundModel {
-            predictor: &mut predictor,
-            model: model.clone(),
-        };
-        let choice = configurator
-            .configure(&mut bound, &request)?
-            .expect("catalog nonempty");
+        let rec = client.recommend(request)?;
         println!(
             "{:>9.0} {:>12} {:>4} {:>11.1} {:>10.3} {:>6}",
             target,
-            choice.machine_type,
-            choice.node_count,
-            choice.predicted_runtime_s,
-            choice.expected_cost_usd,
-            choice.meets_target
+            rec.choice.machine_type,
+            rec.choice.node_count,
+            rec.choice.predicted_runtime_s,
+            rec.choice.expected_cost_usd,
+            rec.choice.meets_target
         );
     }
+
+    let after = client.snapshot_info(JobKind::Sort)?;
+    assert_eq!(
+        info.generation, after.generation,
+        "recommendations are reads: the repository never moved"
+    );
 
     println!(
         "\nNote how looser targets let the configurator drop to smaller/cheaper\n\
          clusters, while very tight targets force the fastest configuration even\n\
-         when the deadline is unattainable (met = false)."
+         when the deadline is unattainable (met = false). The whole sweep was\n\
+         served read-only from one immutable model snapshot."
     );
     Ok(())
 }

@@ -1,12 +1,22 @@
-//! Bench: submissions/second of the sharded multi-worker service vs the
+//! Bench: requests/second of the sharded multi-worker service vs the
 //! single-thread ordered session, at 1, 4, and 8 client threads.
 //!
-//! The workload interleaves four job kinds so the service's per-kind
-//! shards can actually run concurrently; the session baseline serves the
-//! identical battery through its strictly-ordered single worker. Both
-//! paths are warmed with one submission per kind first so initial model
-//! training is paid outside the timed window (retrains inside the window
-//! are governed by the same generation-gating policy on both sides).
+//! Two scenarios:
+//!
+//! * **write-heavy** (the original): pure `Submit` traffic. The workload
+//!   interleaves four job kinds so the service's per-kind shards can
+//!   actually run concurrently; the session baseline serves the
+//!   identical battery through its strictly-ordered single worker.
+//! * **read-heavy**: `Recommend:Submit ≈ 9:1` — the paper's real shape
+//!   (many cheap configurator queries, few contributed runs). The
+//!   service serves reads lock-free from published model snapshots and
+//!   coalesces same-kind reads into one predict batch, so this is where
+//!   the read/write split pays.
+//!
+//! Both paths are warmed by the corpus share (writes train the model),
+//! so initial training is paid outside the timed window; retrains inside
+//! the window are governed by the same generation-gating policy on both
+//! sides.
 //!
 //! Emits `BENCH_serve_throughput.json` with the measured throughputs and
 //! the speedup of the 8-client service over the session baseline.
@@ -22,6 +32,9 @@ use std::time::Instant;
 
 const KINDS: [JobKind; 4] = [JobKind::Sort, JobKind::Grep, JobKind::Sgd, JobKind::KMeans];
 
+/// In the read-heavy mix, this many of every 10 requests are reads.
+const READS_PER_10: usize = 9;
+
 fn request_for(i: usize) -> JobRequest {
     let gb = 10.0 + (i % 10) as f64;
     match i % KINDS.len() {
@@ -30,6 +43,10 @@ fn request_for(i: usize) -> JobRequest {
         2 => JobRequest::sgd(gb, 60),
         _ => JobRequest::kmeans(gb, 5, 0.001),
     }
+}
+
+fn is_read(i: usize) -> bool {
+    i % 10 < READS_PER_10
 }
 
 fn corpus(cloud: &Cloud, seed: u64) -> c3o::workloads::Corpus {
@@ -59,13 +76,12 @@ fn main() {
     // backend difference.
     let no_artifacts = std::path::PathBuf::from("bench-no-artifacts");
 
-    // ---- baseline: the ordered single-worker session --------------------
+    // ---- scenario 1: write-heavy (pure submissions) ---------------------
+
+    // baseline: the ordered single-worker session
     let session = Session::spawn(cloud.clone(), no_artifacts.clone(), 7);
     for kind in KINDS {
-        session.share(corpus.repo_for(kind)).unwrap();
-    }
-    for i in 0..KINDS.len() {
-        session.submit(&org, request_for(i)).unwrap(); // warm: initial trains
+        session.share(corpus.repo_for(kind)).unwrap(); // warm: trains
     }
     let t0 = Instant::now();
     for i in 0..total_jobs {
@@ -73,9 +89,9 @@ fn main() {
     }
     let baseline = total_jobs as f64 / t0.elapsed().as_secs_f64();
     session.shutdown();
-    println!("session   1 client : {baseline:>8.1} submissions/s  (ordered single worker)");
+    println!("write-heavy  session   1 client : {baseline:>8.1} submissions/s  (ordered single worker)");
 
-    // ---- the sharded service at 1, 4, 8 client threads ------------------
+    // the sharded service at 1, 4, 8 client threads
     let mut points: Vec<(usize, f64)> = Vec::new();
     for &clients in &[1usize, 4, 8] {
         let service = CoordinatorService::spawn(
@@ -86,10 +102,7 @@ fn main() {
                 .with_seed(7),
         );
         for kind in KINDS {
-            service.share(corpus.repo_for(kind)).unwrap();
-        }
-        for i in 0..KINDS.len() {
-            service.submit(&org, request_for(i)).unwrap(); // warm: initial trains
+            service.share(corpus.repo_for(kind)).unwrap(); // warm: trains
         }
         let t0 = Instant::now();
         std::thread::scope(|scope| {
@@ -106,20 +119,84 @@ fn main() {
             }
         });
         let jobs_per_s = total_jobs as f64 / t0.elapsed().as_secs_f64();
-        println!("service  {clients:>2} clients: {jobs_per_s:>8.1} submissions/s");
+        println!("write-heavy  service  {clients:>2} clients: {jobs_per_s:>8.1} submissions/s");
         points.push((clients, jobs_per_s));
         service.shutdown();
     }
 
     let best = points.iter().map(|&(_, j)| j).fold(0.0f64, f64::max);
     let speedup = best / baseline;
-    println!("speedup (best service vs session): {speedup:.2}x");
+    println!("write-heavy speedup (best service vs session): {speedup:.2}x");
     if speedup < 2.0 {
         eprintln!(
             "WARN: speedup {speedup:.2}x below the 2x goal — expected on \
              single-core machines; the sharded path needs real parallelism"
         );
     }
+
+    // ---- scenario 2: read-heavy (recommend:submit ≈ 9:1) ----------------
+
+    // baseline: the same mix through the ordered session (reads queue
+    // behind writes — the shape's ceiling)
+    let session = Session::spawn(cloud.clone(), no_artifacts, 7);
+    for kind in KINDS {
+        session.share(corpus.repo_for(kind)).unwrap();
+    }
+    let t0 = Instant::now();
+    for i in 0..total_jobs {
+        if is_read(i) {
+            session.recommend(request_for(i)).unwrap();
+        } else {
+            session.submit(&org, request_for(i)).unwrap();
+        }
+    }
+    let read_baseline = total_jobs as f64 / t0.elapsed().as_secs_f64();
+    session.shutdown();
+    println!("read-heavy   session   1 client : {read_baseline:>8.1} requests/s");
+
+    let mut read_points: Vec<(usize, f64, u64)> = Vec::new();
+    for &clients in &[1usize, 4, 8] {
+        let service = CoordinatorService::spawn(
+            cloud.clone(),
+            ServiceConfig::default()
+                .with_workers(8)
+                .with_pjrt_workers(0)
+                .with_seed(7),
+        );
+        for kind in KINDS {
+            service.share(corpus.repo_for(kind)).unwrap();
+        }
+        let t0 = Instant::now();
+        std::thread::scope(|scope| {
+            for c in 0..clients {
+                let client = service.client();
+                scope.spawn(move || {
+                    let org = Organization::new(&format!("client-{c}"));
+                    let mut i = c;
+                    while i < total_jobs {
+                        if is_read(i) {
+                            client.recommend(request_for(i)).unwrap();
+                        } else {
+                            client.submit(&org, request_for(i)).unwrap();
+                        }
+                        i += clients;
+                    }
+                });
+            }
+        });
+        let req_per_s = total_jobs as f64 / t0.elapsed().as_secs_f64();
+        let coalesced = service.metrics().unwrap().coalesced_batches;
+        println!(
+            "read-heavy   service  {clients:>2} clients: {req_per_s:>8.1} requests/s  \
+             ({coalesced} coalesced read batches)"
+        );
+        read_points.push((clients, req_per_s, coalesced));
+        service.shutdown();
+    }
+
+    let read_best = read_points.iter().map(|&(_, j, _)| j).fold(0.0f64, f64::max);
+    let read_speedup = read_best / read_baseline;
+    println!("read-heavy speedup (best service vs session): {read_speedup:.2}x");
 
     let json = Json::obj(vec![
         ("bench", Json::Str("serve_throughput".to_string())),
@@ -140,6 +217,32 @@ fn main() {
             ),
         ),
         ("speedup_vs_session", Json::Num(speedup)),
+        (
+            "read_heavy",
+            Json::obj(vec![
+                (
+                    "mix",
+                    Json::Str(format!("{READS_PER_10}:{} recommend:submit", 10 - READS_PER_10)),
+                ),
+                ("baseline_session_req_per_s", Json::Num(read_baseline)),
+                (
+                    "service",
+                    Json::Arr(
+                        read_points
+                            .iter()
+                            .map(|&(clients, req_per_s, coalesced)| {
+                                Json::obj(vec![
+                                    ("clients", Json::Num(clients as f64)),
+                                    ("req_per_s", Json::Num(req_per_s)),
+                                    ("coalesced_batches", Json::Num(coalesced as f64)),
+                                ])
+                            })
+                            .collect(),
+                    ),
+                ),
+                ("speedup_vs_session", Json::Num(read_speedup)),
+            ]),
+        ),
     ]);
     std::fs::write("BENCH_serve_throughput.json", json.render() + "\n").unwrap();
     println!("wrote BENCH_serve_throughput.json");

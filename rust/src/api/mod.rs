@@ -1,0 +1,473 @@
+//! The public request/response protocol of the C3O coordination stack.
+//!
+//! Every deployment shape — the sequential [`Coordinator`], the ordered
+//! single-worker [`session`](crate::coordinator::session), and the
+//! concurrent multi-worker [`service`](crate::coordinator::service) —
+//! speaks the same versioned, typed protocol:
+//!
+//! * [`Request`] — the closed set of operations a client can ask for.
+//!   The paper's collaborative loop has two asymmetric halves, and the
+//!   protocol keeps them distinct: **reads** ([`Request::Recommend`],
+//!   [`Request::SnapshotInfo`], [`Request::Metrics`]) never mutate the
+//!   shared repositories, while **writes** ([`Request::Submit`],
+//!   [`Request::Contribute`], [`Request::Share`]) both mutate them and
+//!   refresh the generation-stamped model the reads are served from.
+//! * [`Response`] — one typed variant per request, so a protocol-level
+//!   mismatch is a bug surfaced as [`ApiError::Protocol`], never a
+//!   silently misinterpreted reply.
+//! * [`ApiError`] — the structured error taxonomy of the public
+//!   boundary. Internal layers (models, simulator, cloud) keep using
+//!   `anyhow` context chains; they are folded into
+//!   [`ApiError::Internal`] exactly once, at this boundary.
+//! * [`Client`] — the deployment-agnostic trait: anything that can
+//!   [`Client::call`] the protocol. Examples, benches, the CLI, and the
+//!   shared integration suite are written against `dyn Client`, so the
+//!   same code drives all three deployments.
+//!
+//! The split matters operationally: `Recommend` ("which cluster should I
+//! buy?") is the hot, read-mostly half — C3O's configurator step — and
+//! in the concurrent service it is served from an immutable
+//! [`ModelSnapshot`](crate::coordinator::shard::ModelSnapshot) without
+//! ever taking a shard lock. `Contribute` ("here is the runtime I
+//! observed") is the rare write that closes the collaborative loop, as
+//! in the paper's capture-and-share step.
+
+use crate::cloud::Cloud;
+use crate::configurator::{ClusterChoice, JobRequest};
+use crate::coordinator::{JobOutcome, Metrics, Organization};
+use crate::models::ModelKind;
+use crate::repo::{RuntimeDataRepo, RuntimeRecord};
+use crate::util::json::Json;
+use crate::workloads::JobKind;
+use std::fmt;
+
+/// Protocol version. Bump on any breaking change to [`Request`],
+/// [`Response`], or [`ApiError`]; servers answer
+/// [`Request::SnapshotInfo`] with the version they speak so mixed-version
+/// tooling can detect skew.
+pub const API_VERSION: u32 = 1;
+
+// ---------------------------------------------------------------------------
+// errors
+// ---------------------------------------------------------------------------
+
+/// Structured error taxonomy of the public API boundary.
+///
+/// Replaces `anyhow` in every public coordinator signature: callers can
+/// match on the failure class instead of parsing message strings, and
+/// only [`ApiError::Internal`] carries a rendered context chain.
+#[derive(Debug, Clone, PartialEq)]
+pub enum ApiError {
+    /// The request failed validation before touching any shared state
+    /// (non-positive runtime target, non-finite job feature, record that
+    /// fails repository validation, unknown machine type, ...).
+    InvalidRequest(String),
+    /// A read-only recommendation is impossible: the job's shared
+    /// repository has too little data to train a model, and `Recommend`
+    /// — unlike `Submit` — has no overprovisioning fallback to run.
+    ColdStart {
+        job: JobKind,
+        records: usize,
+        min_records: usize,
+    },
+    /// Request/response pairing violated (a deployment answered a
+    /// request with the wrong response variant). Always a bug.
+    Protocol(String),
+    /// The serving deployment has shut down (worker gone, channel
+    /// closed). Retryable against a fresh deployment.
+    Stopped,
+    /// Internal failure below the API boundary (model training, the
+    /// dataflow simulator, catalog lookups). Carries the full `anyhow`
+    /// context chain, rendered.
+    Internal(String),
+}
+
+impl fmt::Display for ApiError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ApiError::InvalidRequest(msg) => write!(f, "invalid request: {msg}"),
+            ApiError::ColdStart {
+                job,
+                records,
+                min_records,
+            } => write!(
+                f,
+                "cold start: {} repository has {records} records, {min_records} needed \
+                 before recommendations can be served",
+                job.name()
+            ),
+            ApiError::Protocol(msg) => write!(f, "protocol violation: {msg}"),
+            ApiError::Stopped => write!(f, "service stopped"),
+            ApiError::Internal(msg) => write!(f, "internal error: {msg}"),
+        }
+    }
+}
+
+impl std::error::Error for ApiError {}
+
+impl From<anyhow::Error> for ApiError {
+    fn from(e: anyhow::Error) -> ApiError {
+        ApiError::Internal(format!("{e:#}"))
+    }
+}
+
+impl ApiError {
+    /// Fold an internal `anyhow` error into the taxonomy.
+    pub fn internal(e: anyhow::Error) -> ApiError {
+        ApiError::from(e)
+    }
+}
+
+/// Shared write-path validation: reject records whose machine type is
+/// absent from the catalog. Such records can never be featurized, so
+/// letting one into a shared repository would poison every later
+/// training run. Used identically by all deployments so they reject
+/// identically.
+pub fn validate_machines(cloud: &Cloud, records: &[RuntimeRecord]) -> Result<(), ApiError> {
+    if let Some(bad) = records.iter().find(|r| cloud.machine(&r.machine).is_none()) {
+        return Err(ApiError::InvalidRequest(format!(
+            "unknown machine type {:?}",
+            bad.machine
+        )));
+    }
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// requests
+// ---------------------------------------------------------------------------
+
+/// One operation against a C3O deployment (protocol [`API_VERSION`]).
+#[derive(Debug, Clone)]
+pub enum Request {
+    /// **Write.** Full submission loop: decide a configuration, provision
+    /// and run it on the simulated cloud, contribute the measurement
+    /// back. Answered by [`Response::Submitted`].
+    Submit {
+        org: Organization,
+        request: JobRequest,
+    },
+    /// **Read.** Score every candidate configuration and return the
+    /// decision *without* provisioning, running, or contributing —
+    /// C3O's configurator step as a standalone query. Answered by
+    /// [`Response::Recommendation`].
+    Recommend { request: JobRequest },
+    /// **Write.** Record one externally-observed run (a job executed
+    /// outside this deployment — e.g. a `Recommend`-ed cluster the user
+    /// actually ran) into the job's shared repository. Answered by
+    /// [`Response::Contributed`].
+    Contribute { record: RuntimeRecord },
+    /// **Write.** Bulk form of `Contribute`: merge a whole runtime-data
+    /// repository (e.g. the public corpus). Answered by
+    /// [`Response::Shared`].
+    Share { repo: RuntimeDataRepo },
+    /// **Read.** Service-wide metrics snapshot. Answered by
+    /// [`Response::Metrics`].
+    Metrics,
+    /// **Read.** Describe the model snapshot currently serving a job's
+    /// reads. Answered by [`Response::SnapshotInfo`].
+    SnapshotInfo { job: JobKind },
+}
+
+impl Request {
+    /// The job kind this request routes to, if it routes at all.
+    pub fn job(&self) -> Option<JobKind> {
+        match self {
+            Request::Submit { request, .. } | Request::Recommend { request } => {
+                Some(request.kind())
+            }
+            Request::Contribute { record } => Some(record.job),
+            Request::Share { repo } => Some(repo.job()),
+            Request::Metrics => None,
+            Request::SnapshotInfo { job } => Some(*job),
+        }
+    }
+
+    /// True for requests that can mutate shared state.
+    pub fn is_write(&self) -> bool {
+        matches!(
+            self,
+            Request::Submit { .. } | Request::Contribute { .. } | Request::Share { .. }
+        )
+    }
+}
+
+// ---------------------------------------------------------------------------
+// responses
+// ---------------------------------------------------------------------------
+
+/// A configuration recommendation: the decision `Submit` would make,
+/// served read-only.
+#[derive(Debug, Clone)]
+pub struct Recommendation {
+    pub job: JobKind,
+    /// The full decision, including every scored candidate.
+    pub choice: ClusterChoice,
+    /// Which model family served the decision.
+    pub model_used: ModelKind,
+    /// Repository generation of the snapshot the decision was served
+    /// from.
+    pub generation: u64,
+    /// Generation the serving model was trained at (`<= generation`:
+    /// retraining is threshold-gated).
+    pub trained_at_generation: u64,
+}
+
+/// Acknowledgement of a contribution/merge into a shared repository.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Contribution {
+    pub job: JobKind,
+    /// Records actually added (merges dedup by configuration).
+    pub added: usize,
+    /// Repository generation after the write.
+    pub generation: u64,
+}
+
+/// Description of the model snapshot currently serving a job's reads.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SnapshotInfo {
+    /// Protocol version the server speaks.
+    pub api_version: u32,
+    pub job: JobKind,
+    /// Records in the shared repository.
+    pub records: usize,
+    /// Current repository generation.
+    pub generation: u64,
+    /// Generation the cached model was trained at, if one is trained.
+    pub trained_at_generation: Option<u64>,
+    /// Model family of the cached model, if one is trained.
+    pub model: Option<ModelKind>,
+    /// Machine types observed in the shared data (the candidate axis
+    /// recommendations are restricted to), sorted.
+    pub observed_machines: Vec<String>,
+}
+
+/// One typed reply per [`Request`] variant.
+// Variant sizes are dominated by `Submitted(JobOutcome)`; boxing it
+// would push an allocation + indirection into every submission reply
+// for no measurable win (responses move through channels, not arrays).
+#[allow(clippy::large_enum_variant)]
+#[derive(Debug, Clone)]
+pub enum Response {
+    Submitted(JobOutcome),
+    Recommendation(Recommendation),
+    Contributed(Contribution),
+    Shared(Contribution),
+    Metrics(Metrics),
+    SnapshotInfo(SnapshotInfo),
+}
+
+impl Response {
+    fn kind_name(&self) -> &'static str {
+        match self {
+            Response::Submitted(_) => "Submitted",
+            Response::Recommendation(_) => "Recommendation",
+            Response::Contributed(_) => "Contributed",
+            Response::Shared(_) => "Shared",
+            Response::Metrics(_) => "Metrics",
+            Response::SnapshotInfo(_) => "SnapshotInfo",
+        }
+    }
+
+    fn unexpected(self, wanted: &str) -> ApiError {
+        ApiError::Protocol(format!(
+            "expected {wanted} response, got {}",
+            self.kind_name()
+        ))
+    }
+}
+
+// ---------------------------------------------------------------------------
+// the deployment-agnostic client
+// ---------------------------------------------------------------------------
+
+/// Anything that can serve the C3O protocol: the sequential
+/// [`Coordinator`](crate::coordinator::Coordinator), the ordered
+/// [`Session`](crate::coordinator::session::Session), and the concurrent
+/// [`ServiceClient`](crate::coordinator::service::ServiceClient) all
+/// implement it, so user code written against `Client` is
+/// deployment-agnostic.
+///
+/// [`Client::call`] is the one required method; the typed convenience
+/// wrappers are default methods that pair each request with its response
+/// variant (a mismatch is [`ApiError::Protocol`]).
+pub trait Client {
+    /// Execute one protocol request.
+    fn call(&mut self, request: Request) -> Result<Response, ApiError>;
+
+    /// Full submission loop for one job request.
+    fn submit(&mut self, org: &Organization, request: JobRequest) -> Result<JobOutcome, ApiError> {
+        match self.call(Request::Submit {
+            org: org.clone(),
+            request,
+        })? {
+            Response::Submitted(outcome) => Ok(outcome),
+            other => Err(other.unexpected("Submitted")),
+        }
+    }
+
+    /// Read-only configuration recommendation.
+    fn recommend(&mut self, request: JobRequest) -> Result<Recommendation, ApiError> {
+        match self.call(Request::Recommend { request })? {
+            Response::Recommendation(r) => Ok(r),
+            other => Err(other.unexpected("Recommendation")),
+        }
+    }
+
+    /// Record one externally-observed run.
+    fn contribute(&mut self, record: RuntimeRecord) -> Result<Contribution, ApiError> {
+        match self.call(Request::Contribute { record })? {
+            Response::Contributed(c) => Ok(c),
+            other => Err(other.unexpected("Contributed")),
+        }
+    }
+
+    /// Merge a whole runtime-data repository.
+    fn share(&mut self, repo: RuntimeDataRepo) -> Result<Contribution, ApiError> {
+        match self.call(Request::Share { repo })? {
+            Response::Shared(c) => Ok(c),
+            other => Err(other.unexpected("Shared")),
+        }
+    }
+
+    /// Deployment-wide metrics snapshot.
+    fn metrics(&mut self) -> Result<Metrics, ApiError> {
+        match self.call(Request::Metrics)? {
+            Response::Metrics(m) => Ok(m),
+            other => Err(other.unexpected("Metrics")),
+        }
+    }
+
+    /// Describe the model snapshot serving a job's reads.
+    fn snapshot_info(&mut self, job: JobKind) -> Result<SnapshotInfo, ApiError> {
+        match self.call(Request::SnapshotInfo { job })? {
+            Response::SnapshotInfo(info) => Ok(info),
+            other => Err(other.unexpected("SnapshotInfo")),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// JSON projections (the CLI's scriptable output)
+// ---------------------------------------------------------------------------
+
+impl Recommendation {
+    /// JSON projection (stable key order) for `c3o recommend --json`.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("api_version", Json::Num(API_VERSION as f64)),
+            ("job", Json::Str(self.job.name().to_string())),
+            ("model", Json::Str(self.model_used.name().to_string())),
+            ("generation", Json::Num(self.generation as f64)),
+            (
+                "trained_at_generation",
+                Json::Num(self.trained_at_generation as f64),
+            ),
+            ("choice", self.choice.to_json()),
+        ])
+    }
+}
+
+impl SnapshotInfo {
+    /// JSON projection (stable key order).
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("api_version", Json::Num(self.api_version as f64)),
+            ("job", Json::Str(self.job.name().to_string())),
+            ("records", Json::Num(self.records as f64)),
+            ("generation", Json::Num(self.generation as f64)),
+            (
+                "trained_at_generation",
+                self.trained_at_generation
+                    .map_or(Json::Null, |g| Json::Num(g as f64)),
+            ),
+            (
+                "model",
+                self.model
+                    .map_or(Json::Null, |k| Json::Str(k.name().to_string())),
+            ),
+            ("observed_machines", Json::strs(&self.observed_machines)),
+        ])
+    }
+}
+
+impl Contribution {
+    /// JSON projection (stable key order) for `c3o contribute --json`.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("api_version", Json::Num(API_VERSION as f64)),
+            ("job", Json::Str(self.job.name().to_string())),
+            ("added", Json::Num(self.added as f64)),
+            ("generation", Json::Num(self.generation as f64)),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn errors_render_their_class() {
+        let e = ApiError::InvalidRequest("target must be positive".into());
+        assert!(e.to_string().contains("invalid request"));
+        let e = ApiError::ColdStart {
+            job: JobKind::Sort,
+            records: 3,
+            min_records: 12,
+        };
+        let msg = e.to_string();
+        assert!(msg.contains("cold start") && msg.contains('3') && msg.contains("12"), "{msg}");
+        assert_eq!(ApiError::Stopped.to_string(), "service stopped");
+    }
+
+    #[test]
+    fn anyhow_folds_into_internal_with_full_chain() {
+        use anyhow::Context as _;
+        let inner: anyhow::Result<()> = Err(anyhow::anyhow!("root cause"));
+        let err = inner.context("outer step").unwrap_err();
+        match ApiError::from(err) {
+            ApiError::Internal(msg) => {
+                assert!(msg.contains("outer step") && msg.contains("root cause"), "{msg}");
+            }
+            other => panic!("wrong variant: {other:?}"),
+        }
+    }
+
+    #[test]
+    fn requests_classify_reads_and_writes() {
+        let req = JobRequest::sort(10.0);
+        assert!(Request::Submit {
+            org: Organization::new("o"),
+            request: req.clone()
+        }
+        .is_write());
+        assert!(!Request::Recommend { request: req.clone() }.is_write());
+        assert!(!Request::Metrics.is_write());
+        assert_eq!(Request::Metrics.job(), None);
+        assert_eq!(
+            Request::Recommend { request: req }.job(),
+            Some(JobKind::Sort)
+        );
+        assert_eq!(
+            Request::SnapshotInfo { job: JobKind::Grep }.job(),
+            Some(JobKind::Grep)
+        );
+    }
+
+    #[test]
+    fn snapshot_info_renders_null_for_untrained() {
+        let info = SnapshotInfo {
+            api_version: API_VERSION,
+            job: JobKind::Sort,
+            records: 0,
+            generation: 0,
+            trained_at_generation: None,
+            model: None,
+            observed_machines: vec![],
+        };
+        let s = info.to_json().render();
+        assert!(s.contains("\"model\":null"), "{s}");
+        assert!(s.contains("\"observed_machines\":[]"), "{s}");
+    }
+}

@@ -14,8 +14,10 @@
 //! scale-out-invariant — enabling the two-stage heuristic of fixing the
 //! machine type first and then choosing the scale-out.
 
+use crate::api::ApiError;
 use crate::cloud::Cloud;
 use crate::models::{QueryBatch, RuntimeModel};
+use crate::util::json::Json;
 use crate::workloads::{JobKind, JobSpec};
 use anyhow::Result;
 
@@ -52,14 +54,39 @@ impl JobRequest {
         Self::new(JobSpec::pagerank(graph_mb, conv))
     }
 
+    /// Attach a runtime target. The builder never panics: an invalid
+    /// target (zero, negative, NaN, infinite) is stored as-is and
+    /// rejected by [`JobRequest::validate`] at the API boundary, surfaced
+    /// as [`ApiError::InvalidRequest`].
     pub fn with_target_seconds(mut self, target: f64) -> Self {
-        assert!(target > 0.0);
         self.target_s = Some(target);
         self
     }
 
     pub fn kind(&self) -> JobKind {
         self.spec.kind()
+    }
+
+    /// Validate the request before it touches any shared state: the
+    /// runtime target (if any) must be a positive finite number of
+    /// seconds, and every job feature must be finite. Every deployment
+    /// validates at submission/recommendation time.
+    pub fn validate(&self) -> Result<(), ApiError> {
+        if let Some(t) = self.target_s {
+            if !(t.is_finite() && t > 0.0) {
+                return Err(ApiError::InvalidRequest(format!(
+                    "runtime target must be a positive finite number of seconds, got {t}"
+                )));
+            }
+        }
+        let features = self.spec.job_features();
+        if let Some(bad) = features.iter().find(|f| !f.is_finite()) {
+            return Err(ApiError::InvalidRequest(format!(
+                "non-finite job feature {bad} in {:?} request",
+                self.kind().name()
+            )));
+        }
+        Ok(())
     }
 }
 
@@ -73,6 +100,19 @@ pub struct Candidate {
     pub meets_target: bool,
 }
 
+impl Candidate {
+    /// JSON projection (stable key order).
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("machine", Json::Str(self.machine.clone())),
+            ("scaleout", Json::Num(self.scaleout as f64)),
+            ("predicted_runtime_s", Json::Num(self.predicted_runtime_s)),
+            ("predicted_cost_usd", Json::Num(self.predicted_cost_usd)),
+            ("meets_target", Json::Bool(self.meets_target)),
+        ])
+    }
+}
+
 /// The configurator's decision.
 #[derive(Debug, Clone)]
 pub struct ClusterChoice {
@@ -83,6 +123,24 @@ pub struct ClusterChoice {
     pub meets_target: bool,
     /// Every candidate evaluated (sorted by cost), for reports/figures.
     pub candidates: Vec<Candidate>,
+}
+
+impl ClusterChoice {
+    /// JSON projection (stable key order) for `c3o recommend --json`:
+    /// the decision plus every scored candidate, cheapest first.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("machine_type", Json::Str(self.machine_type.clone())),
+            ("node_count", Json::Num(self.node_count as f64)),
+            ("predicted_runtime_s", Json::Num(self.predicted_runtime_s)),
+            ("expected_cost_usd", Json::Num(self.expected_cost_usd)),
+            ("meets_target", Json::Bool(self.meets_target)),
+            (
+                "candidates",
+                Json::Arr(self.candidates.iter().map(Candidate::to_json).collect()),
+            ),
+        ])
+    }
 }
 
 /// Enumerates and scores candidate configurations.
@@ -148,6 +206,11 @@ impl<'c> Configurator<'c> {
         model: &mut dyn RuntimeModel,
         request: &JobRequest,
     ) -> Result<Option<ClusterChoice>> {
+        // re-validate at this depth too: `configure` is public, so
+        // library users bypassing the coordinator boundary must not get
+        // silent everything-misses-the-target behavior from a NaN target
+        // (this check replaced the old panicking builder assert)
+        request.validate().map_err(anyhow::Error::msg)?;
         let pairs = self.enumerate();
         if pairs.is_empty() {
             return Ok(None);
@@ -155,10 +218,31 @@ impl<'c> Configurator<'c> {
         let features = request.spec.job_features();
         let batch = QueryBatch::from_candidates(self.cloud, &pairs, &features);
         let runtimes = model.predict_batch(self.cloud, &batch)?;
+        Ok(self.choose(request, &pairs, &runtimes))
+    }
 
+    /// Build the decision from already-predicted runtimes: price each
+    /// candidate, sort by cost, pick per the policy. Split out of
+    /// [`Configurator::configure`] so the service can score several
+    /// same-kind `Recommend` requests as **one coalesced predict batch**
+    /// and still make each request's decision through the exact same
+    /// code (bitwise-identical to an uncoalesced `configure`).
+    ///
+    /// `runtimes[i]` is the predicted runtime of `pairs[i]`. Returns
+    /// `None` only when `pairs` is empty.
+    pub fn choose(
+        &self,
+        request: &JobRequest,
+        pairs: &[(String, u32)],
+        runtimes: &[f64],
+    ) -> Option<ClusterChoice> {
+        debug_assert_eq!(pairs.len(), runtimes.len());
+        if pairs.is_empty() {
+            return None;
+        }
         let mut candidates: Vec<Candidate> = pairs
             .iter()
-            .zip(&runtimes)
+            .zip(runtimes)
             .map(|((m, n), &t)| {
                 let cost = self.cloud.cost_usd(m, *n, t);
                 Candidate {
@@ -190,14 +274,14 @@ impl<'c> Configurator<'c> {
             .cloned()
             .expect("candidates nonempty");
 
-        Ok(Some(ClusterChoice {
+        Some(ClusterChoice {
             machine_type: best.machine.clone(),
             node_count: best.scaleout,
             predicted_runtime_s: best.predicted_runtime_s,
             expected_cost_usd: best.predicted_cost_usd,
             meets_target: best.meets_target,
             candidates,
-        }))
+        })
     }
 
     /// Fig. 3 analysis: rank machine types by total predicted cost for a
@@ -348,5 +432,73 @@ mod tests {
             pos(&r2, "r5.xlarge") < pos(&r2, "c5.xlarge"),
             "at n=2 r5.xlarge should rank above c5.xlarge: {r2:?}"
         );
+    }
+
+    #[test]
+    fn invalid_targets_fail_validation_instead_of_panicking() {
+        for bad in [0.0, -5.0, f64::NAN, f64::INFINITY] {
+            let req = JobRequest::sort(10.0).with_target_seconds(bad);
+            match req.validate() {
+                Err(ApiError::InvalidRequest(msg)) => {
+                    assert!(msg.contains("runtime target"), "{msg}")
+                }
+                other => panic!("target {bad} should be invalid, got {other:?}"),
+            }
+        }
+        assert!(JobRequest::sort(10.0).with_target_seconds(60.0).validate().is_ok());
+        assert!(JobRequest::sort(10.0).validate().is_ok(), "no target is valid");
+    }
+
+    #[test]
+    fn non_finite_features_fail_validation() {
+        let req = JobRequest::sort(f64::NAN);
+        match req.validate() {
+            Err(ApiError::InvalidRequest(msg)) => assert!(msg.contains("feature"), "{msg}"),
+            other => panic!("NaN feature should be invalid, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn choose_matches_configure_bitwise() {
+        // `configure` = enumerate → score → choose; calling `choose` on
+        // the same runtimes must reproduce the decision bit for bit
+        // (the coalesced-recommend path in the service relies on this).
+        let cloud = Cloud::aws_like();
+        let cfg = Configurator::new(&cloud);
+        let mut oracle = SimOracle::deterministic(JobKind::Sort, 1);
+        let req = JobRequest::sort(15.0).with_target_seconds(400.0);
+        let via_configure = cfg.configure(&mut oracle, &req).unwrap().unwrap();
+        let pairs = cfg.enumerate();
+        let runtimes: Vec<f64> = {
+            let batch =
+                QueryBatch::from_candidates(&cloud, &pairs, &req.spec.job_features());
+            let mut oracle = SimOracle::deterministic(JobKind::Sort, 1);
+            oracle.predict_batch(&cloud, &batch).unwrap()
+        };
+        let via_choose = cfg.choose(&req, &pairs, &runtimes).unwrap();
+        assert_eq!(via_configure.machine_type, via_choose.machine_type);
+        assert_eq!(via_configure.node_count, via_choose.node_count);
+        assert_eq!(
+            via_configure.predicted_runtime_s.to_bits(),
+            via_choose.predicted_runtime_s.to_bits()
+        );
+        assert_eq!(
+            via_configure.expected_cost_usd.to_bits(),
+            via_choose.expected_cost_usd.to_bits()
+        );
+    }
+
+    #[test]
+    fn choice_json_is_scriptable() {
+        let cloud = Cloud::aws_like();
+        let cfg = Configurator::new(&cloud).with_scaleouts(vec![2, 4]);
+        let mut oracle = SimOracle::deterministic(JobKind::Sort, 1);
+        let choice = cfg
+            .configure(&mut oracle, &JobRequest::sort(12.0))
+            .unwrap()
+            .unwrap();
+        let s = choice.to_json().render();
+        assert!(s.contains("\"machine_type\":"), "{s}");
+        assert!(s.contains("\"candidates\":["), "{s}");
     }
 }

@@ -1,35 +1,50 @@
 //! The collaboration coordinator — the C3O system runtime (paper Fig. 1/2).
 //!
-//! The coordination stack is **sharded by job kind** and layered so one
-//! submission pipeline serves every deployment shape:
+//! Every deployment shape serves the same **typed protocol**
+//! ([`crate::api`]): a versioned [`Request`](crate::api::Request) /
+//! [`Response`](crate::api::Response) pair with a structured
+//! [`ApiError`] taxonomy, behind the deployment-agnostic
+//! [`Client`](crate::api::Client) trait. The protocol splits the
+//! paper's collaborative loop into its two asymmetric halves:
 //!
-//! * [`shard`] — a [`JobShard`](shard::JobShard) per [`JobKind`] owns that
-//!   kind's shared runtime-data repository, its RNG stream, and its
-//!   **generation-cached model**: trained models are keyed by the repo's
-//!   monotone generation counter and retrained only when the shared
-//!   corpus actually advanced past the retrain threshold. Model training
-//!   uses **dynamic model selection** (§V-C) between the pessimistic and
-//!   optimistic families; repositories beyond the kNN capacity train on a
-//!   coverage-preserving sample (§III-C).
-//! * [`Coordinator`] (this module) — the sequential facade: one engine,
-//!   plain shards, the ergonomic API for examples, benches, and the CLI.
-//! * [`session`] — the legacy single-worker deployment: one thread owns a
-//!   whole coordinator behind an **ordered** request/reply channel pair.
-//!   Kept as the throughput baseline the service is benchmarked against.
-//! * [`service`] — the concurrent deployment: shards behind mutexes, `N`
-//!   worker threads (PJRT-owning workers pinned to their runtime,
-//!   native-fallback workers free-floating), and **per-request reply
-//!   channels** so concurrent clients never block on each other's
-//!   submissions.
+//! * **Reads** — `Recommend` (score every `machine × scaleout`
+//!   candidate and return the decision without provisioning or
+//!   running), `SnapshotInfo`, `Metrics`. Reads never train and never
+//!   mutate; they are served from the model state the last write left
+//!   behind.
+//! * **Writes** — `Submit` (the full loop: decide → provision + run →
+//!   contribute), `Contribute` (record an externally-observed run),
+//!   `Share` (bulk-merge a repository). Writes mutate the shared
+//!   repository and then **refresh the model** the reads are served
+//!   from (retraining is gated on the repo's generation counter).
 //!
-//! One submission flows: route to the kind's shard → ensure a
-//! generation-fresh model → score **all** `machine × scaleout` candidates
-//! in one featurized batch and pick the cheapest configuration meeting
-//! the target → provision (paying the EMR-like delay) and run on the
-//! dataflow simulator → contribute the measurement back to the shared
-//! repository, closing the collaborative loop. Cold-start submissions
-//! (too little shared data) fall back to conservative overprovisioning —
-//! and the run they contribute shrinks that window for everyone.
+//! The stack is **sharded by job kind** and layered:
+//!
+//! * [`shard`] — a [`JobShard`](shard::JobShard) per [`JobKind`] owns
+//!   that kind's shared runtime-data repository, its RNG stream, and its
+//!   generation-cached model (dynamic model selection §V-C; coverage
+//!   sampling §III-C past the kNN capacity). Shards export immutable
+//!   [`ModelSnapshot`](shard::ModelSnapshot)s — everything a read needs,
+//!   detached from the shard.
+//! * [`Coordinator`] (this module) — the sequential deployment: one
+//!   engine, plain shards, no threads.
+//! * [`session`] — the ordered single-worker deployment: one thread owns
+//!   a whole coordinator behind a strictly-ordered request/reply channel
+//!   pair. Kept as the throughput baseline.
+//! * [`service`] — the concurrent deployment: shards behind mutexes
+//!   taken **only by writes**; reads are served lock-free from published
+//!   `Arc<ModelSnapshot>`s by `N` worker threads, with per-request reply
+//!   channels, pipelined `submit_nowait` tickets, and cross-request
+//!   coalescing of same-kind `Recommend` batches.
+//!
+//! One submission flows: route to the kind's shard → decide from the
+//! write-maintained model (all candidates scored as one featurized
+//! batch; cheapest configuration meeting the target) → provision (paying
+//! the EMR-like delay) and run on the dataflow simulator → contribute
+//! the measurement back → refresh the model, closing the collaborative
+//! loop. Cold-start submissions fall back to conservative
+//! overprovisioning — and the run they contribute shrinks that window
+//! for everyone.
 //!
 //! Model execution is backend-agnostic ([`crate::models::ModelTrainer`]):
 //! PJRT-compiled artifacts when available, bit-compatible pure-Rust
@@ -39,17 +54,20 @@ pub mod service;
 pub mod session;
 pub mod shard;
 
-pub use service::{CoordinatorService, ServiceClient, ServiceConfig};
-pub use shard::{JobShard, ShardPolicy};
+pub use service::{CoordinatorService, ServiceClient, ServiceConfig, SubmitTicket};
+pub use shard::{JobShard, ModelSnapshot, ShardPolicy};
 
+use crate::api::{
+    ApiError, Client, Contribution, Recommendation, Request, Response, SnapshotInfo,
+};
 use crate::cloud::Cloud;
 use crate::configurator::{ClusterChoice, JobRequest};
 use crate::models::selection::SelectionReport;
 use crate::models::{Engine, ModelKind, ModelTrainer};
-use crate::repo::RuntimeDataRepo;
+use crate::repo::{RuntimeDataRepo, RuntimeRecord};
+use crate::util::json::Json;
 use crate::util::rng::Pcg32;
 use crate::workloads::JobKind;
-use anyhow::Result;
 use std::collections::HashMap;
 use std::path::Path;
 
@@ -96,6 +114,30 @@ impl JobOutcome {
             100.0 * ((self.predicted_runtime_s - self.actual_runtime_s) / self.actual_runtime_s).abs()
         }
     }
+
+    /// JSON projection (stable key order) for `c3o configure --json`.
+    /// Candidate details live in `choice`; NaN predictions render as
+    /// `null` per JSON rules.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("org", Json::Str(self.org.clone())),
+            ("job", Json::Str(self.job.name().to_string())),
+            ("machine", Json::Str(self.machine.clone())),
+            ("scaleout", Json::Num(self.scaleout as f64)),
+            (
+                "model",
+                self.model_used
+                    .map_or(Json::Null, |k| Json::Str(k.name().to_string())),
+            ),
+            ("predicted_runtime_s", Json::Num(self.predicted_runtime_s)),
+            ("actual_runtime_s", Json::Num(self.actual_runtime_s)),
+            ("prediction_error_pct", Json::Num(self.prediction_error_pct())),
+            ("actual_cost_usd", Json::Num(self.actual_cost_usd)),
+            ("provisioning_s", Json::Num(self.provisioning_s)),
+            ("target_s", self.target_s.map_or(Json::Null, Json::Num)),
+            ("met_target", Json::Bool(self.met_target)),
+        ])
+    }
 }
 
 /// Aggregate coordinator metrics.
@@ -103,12 +145,19 @@ impl JobOutcome {
 pub struct Metrics {
     pub submissions: u64,
     pub fallbacks: u64,
-    /// Model (re)trainings actually performed.
+    /// Model (re)trainings actually performed (always on the write path).
     pub retrains: u64,
-    /// Submissions served from a generation-fresh cached model (the
-    /// observable complement of `retrains`: no new shared data ⇒ only
-    /// this counter moves).
+    /// Model-served `Submit` decisions — the cached model answered
+    /// without retraining (the observable complement of `retrains`).
     pub cache_hits: u64,
+    /// Read-only `Recommend` requests served.
+    pub recommends: u64,
+    /// Externally-observed runs recorded via `Contribute` (bulk `Share`
+    /// merges are not counted here).
+    pub contributions: u64,
+    /// `Recommend` groups the service scored as one coalesced predict
+    /// batch (each group covers ≥ 2 requests).
+    pub coalesced_batches: u64,
     pub targets_given: u64,
     pub targets_met: u64,
     pub total_cost_usd: f64,
@@ -141,6 +190,9 @@ impl Metrics {
         self.fallbacks += other.fallbacks;
         self.retrains += other.retrains;
         self.cache_hits += other.cache_hits;
+        self.recommends += other.recommends;
+        self.contributions += other.contributions;
+        self.coalesced_batches += other.coalesced_batches;
         self.targets_given += other.targets_given;
         self.targets_met += other.targets_met;
         self.total_cost_usd += other.total_cost_usd;
@@ -151,7 +203,8 @@ impl Metrics {
 
 /// The sequential C3O coordinator: one model engine over per-job-kind
 /// shards. The concurrent deployment of the same pipeline is
-/// [`service::CoordinatorService`].
+/// [`service::CoordinatorService`]; all deployments speak the
+/// [`crate::api`] protocol through [`crate::api::Client`].
 pub struct Coordinator {
     cloud: Cloud,
     engine: Engine,
@@ -172,7 +225,7 @@ impl Coordinator {
     /// Build a coordinator over a cloud and an artifacts directory. Uses
     /// the PJRT backend when the artifacts load, the native engines
     /// otherwise — construction itself cannot fail on a missing runtime.
-    pub fn new(cloud: Cloud, artifacts_dir: &Path, seed: u64) -> Result<Coordinator> {
+    pub fn new(cloud: Cloud, artifacts_dir: &Path, seed: u64) -> Result<Coordinator, ApiError> {
         Ok(Coordinator::with_engine(
             cloud,
             Engine::auto(artifacts_dir),
@@ -231,35 +284,122 @@ impl Coordinator {
         }
     }
 
-    fn shard_mut(&mut self, job: JobKind) -> &mut JobShard {
+    /// Ensure a shard exists for `job` (writes allocate shards; reads
+    /// never do — a missing shard is simply cold).
+    fn ensure_shard(&mut self, job: JobKind) {
         if !self.shards.contains_key(&job) {
             let seed = self.seed_rng.next_u64();
             self.shards.insert(job, JobShard::new(job, seed));
         }
-        self.shards.get_mut(&job).expect("just inserted")
     }
 
-    /// Merge externally shared data (e.g. the public corpus) into the
-    /// job's repository — "users can contribute their generated runtime
-    /// data" (§III-A). Returns records actually added.
-    pub fn share(&mut self, repo: &RuntimeDataRepo) -> Result<usize> {
-        self.shard_mut(repo.job()).share(repo)
+    /// **Write.** Merge externally shared data (e.g. the public corpus)
+    /// into the job's repository — "users can contribute their generated
+    /// runtime data" (§III-A) — then refresh the model reads are served
+    /// from.
+    pub fn share(&mut self, repo: &RuntimeDataRepo) -> Result<Contribution, ApiError> {
+        crate::api::validate_machines(&self.cloud, repo.records())?;
+        let policy = self.policy();
+        let job = repo.job();
+        self.ensure_shard(job);
+        let shard = self.shards.get_mut(&job).expect("just ensured");
+        let added = shard.share(repo).map_err(ApiError::internal)?;
+        shard
+            .refresh_model(&mut self.engine, &self.cloud, &policy, &mut self.metrics)
+            .map_err(ApiError::internal)?;
+        Ok(Contribution {
+            job,
+            added,
+            generation: shard.generation(),
+        })
     }
 
-    /// Full submission loop for one job request.
-    pub fn submit(&mut self, org: &Organization, request: &JobRequest) -> Result<JobOutcome> {
+    /// **Write.** Full submission loop for one job request.
+    pub fn submit(
+        &mut self,
+        org: &Organization,
+        request: &JobRequest,
+    ) -> Result<JobOutcome, ApiError> {
+        request.validate()?;
         let policy = self.policy();
         let job = request.kind();
-        self.shard_mut(job); // ensure the shard exists
+        self.ensure_shard(job);
         let shard = self.shards.get_mut(&job).expect("just ensured");
-        shard.submit(
-            &mut self.engine,
-            &self.cloud,
-            &policy,
-            &mut self.metrics,
-            org,
-            request,
-        )
+        shard
+            .submit(
+                &mut self.engine,
+                &self.cloud,
+                &policy,
+                &mut self.metrics,
+                org,
+                request,
+            )
+            .map_err(ApiError::internal)
+    }
+
+    /// **Read.** Score every candidate configuration and return the
+    /// decision `Submit` would make — without provisioning, running, or
+    /// contributing. Errors with [`ApiError::ColdStart`] when the job's
+    /// shared repository is below the cold-start threshold.
+    pub fn recommend(&mut self, request: &JobRequest) -> Result<Recommendation, ApiError> {
+        request.validate()?;
+        let policy = self.policy();
+        let job = request.kind();
+        match self.shards.get(&job) {
+            None => Err(ApiError::ColdStart {
+                job,
+                records: 0,
+                min_records: policy.min_records,
+            }),
+            Some(shard) => {
+                let rec = shard.recommend(&mut self.engine, &self.cloud, &policy, request)?;
+                self.metrics.recommends += 1;
+                Ok(rec)
+            }
+        }
+    }
+
+    /// **Write.** Record one externally-observed run (e.g. a
+    /// `Recommend`-ed cluster the user actually ran) into the job's
+    /// shared repository, then refresh the model.
+    pub fn contribute(&mut self, record: RuntimeRecord) -> Result<Contribution, ApiError> {
+        crate::api::validate_machines(&self.cloud, std::slice::from_ref(&record))?;
+        let policy = self.policy();
+        let job = record.job;
+        self.ensure_shard(job);
+        let shard = self.shards.get_mut(&job).expect("just ensured");
+        let contribution = shard.contribute_record(record)?;
+        shard
+            .refresh_model(&mut self.engine, &self.cloud, &policy, &mut self.metrics)
+            .map_err(ApiError::internal)?;
+        self.metrics.contributions += 1;
+        Ok(contribution)
+    }
+
+    /// **Read.** Describe the model state currently serving a job's
+    /// reads (a missing shard is reported as cold, not allocated).
+    pub fn snapshot_info(&self, job: JobKind) -> SnapshotInfo {
+        match self.shards.get(&job) {
+            Some(shard) => shard.snapshot_info(),
+            None => ModelSnapshot::empty(job).info(),
+        }
+    }
+}
+
+impl Client for Coordinator {
+    fn call(&mut self, request: Request) -> Result<Response, ApiError> {
+        match request {
+            Request::Submit { org, request } => {
+                self.submit(&org, &request).map(Response::Submitted)
+            }
+            Request::Recommend { request } => {
+                self.recommend(&request).map(Response::Recommendation)
+            }
+            Request::Contribute { record } => self.contribute(record).map(Response::Contributed),
+            Request::Share { repo } => self.share(&repo).map(Response::Shared),
+            Request::Metrics => Ok(Response::Metrics(self.metrics.clone())),
+            Request::SnapshotInfo { job } => Ok(Response::SnapshotInfo(self.snapshot_info(job))),
+        }
     }
 }
 
@@ -314,8 +454,9 @@ mod tests {
         let cloud = Cloud::aws_like();
         let repo = corpus_repo(&cloud, JobKind::Grep);
         let mut coord = coordinator(cloud, 2);
-        let added = coord.share(&repo).unwrap();
-        assert_eq!(added, 162);
+        let shared = coord.share(&repo).unwrap();
+        assert_eq!(shared.added, 162);
+        assert_eq!(shared.generation, 162);
         let org = Organization::new("new-org");
         let req = JobRequest::grep(15.0, 0.1).with_target_seconds(500.0);
         let o = coord.submit(&org, &req).unwrap();
@@ -341,7 +482,7 @@ mod tests {
                 .submit(&org, &JobRequest::sort(10.0 + i as f64))
                 .unwrap();
         }
-        // initial train + retrains every 4 contributions: 1 + 2
+        // share-time training + retrains every 4 contributions: 1 + 2
         assert_eq!(coord.metrics().retrains, 3, "{:?}", coord.metrics());
     }
 
@@ -355,16 +496,17 @@ mod tests {
         let mut coord = coordinator(cloud, 5);
         coord.retrain_every = 1000; // far beyond this test's contributions
         coord.share(&repo).unwrap();
-        let org = Organization::new("steady");
-        coord.submit(&org, &JobRequest::sort(12.0)).unwrap();
-        assert_eq!(coord.metrics().retrains, 1, "initial training only");
+        assert_eq!(coord.metrics().retrains, 1, "the share trains the model");
+        coord.submit(&Organization::new("steady"), &JobRequest::sort(12.0)).unwrap();
+        assert_eq!(coord.metrics().retrains, 1, "submission served from cache");
 
         // re-sharing the identical corpus adds nothing and must not move
         // the generation
         let gen = coord.generation(JobKind::Sort);
-        assert_eq!(coord.share(&repo).unwrap(), 0);
+        assert_eq!(coord.share(&repo).unwrap().added, 0);
         assert_eq!(coord.generation(JobKind::Sort), gen);
 
+        let org = Organization::new("steady");
         for i in 0..6 {
             let o = coord
                 .submit(&org, &JobRequest::sort(11.0 + i as f64))
@@ -373,7 +515,7 @@ mod tests {
         }
         let m = coord.metrics();
         assert_eq!(m.retrains, 1, "no retrain without new shared data: {m:?}");
-        assert_eq!(m.cache_hits, 6, "every further submission is a cache hit");
+        assert_eq!(m.cache_hits, 7, "every submission decides from the cache");
     }
 
     #[test]
@@ -392,5 +534,119 @@ mod tests {
         assert_eq!(m.targets_met, 1);
         assert!(m.total_cost_usd > 0.0);
         assert!(m.mean_prediction_error_pct().is_finite());
+    }
+
+    #[test]
+    fn recommend_matches_submit_decision_bitwise() {
+        // Two identically-seeded coordinators over the same shared
+        // corpus: the read-only recommendation must equal the decision
+        // inside a full submission, bit for bit.
+        let cloud = Cloud::aws_like();
+        let repo = corpus_repo(&cloud, JobKind::Sort);
+        let mut a = coordinator(cloud.clone(), 6);
+        let mut b = coordinator(cloud, 6);
+        a.share(&repo).unwrap();
+        b.share(&repo).unwrap();
+        let req = JobRequest::sort(13.5).with_target_seconds(600.0);
+        let outcome = a.submit(&Organization::new("o"), &req).unwrap();
+        let rec = b.recommend(&req).unwrap();
+        let choice = outcome.choice.expect("model-served");
+        assert_eq!(choice.machine_type, rec.choice.machine_type);
+        assert_eq!(choice.node_count, rec.choice.node_count);
+        assert_eq!(
+            choice.predicted_runtime_s.to_bits(),
+            rec.choice.predicted_runtime_s.to_bits()
+        );
+        assert_eq!(
+            choice.expected_cost_usd.to_bits(),
+            rec.choice.expected_cost_usd.to_bits()
+        );
+        // the read mutated nothing
+        assert_eq!(b.generation(JobKind::Sort), repo.len() as u64);
+        assert_eq!(b.metrics().submissions, 0);
+        assert_eq!(b.metrics().recommends, 1);
+    }
+
+    #[test]
+    fn contribute_records_external_run_and_advances_generation() {
+        let cloud = Cloud::aws_like();
+        let repo = corpus_repo(&cloud, JobKind::Sort);
+        let mut coord = coordinator(cloud, 7);
+        coord.share(&repo).unwrap();
+        let gen = coord.generation(JobKind::Sort);
+        let record = RuntimeRecord {
+            job: JobKind::Sort,
+            org: "external".into(),
+            machine: "m5.xlarge".into(),
+            scaleout: 6,
+            job_features: vec![13.7],
+            runtime_s: 312.5,
+        };
+        let c = coord.contribute(record).unwrap();
+        assert_eq!(c.added, 1);
+        assert_eq!(c.generation, gen + 1);
+        assert_eq!(coord.metrics().contributions, 1);
+        assert!(coord
+            .repo(JobKind::Sort)
+            .unwrap()
+            .organizations()
+            .contains("external"));
+    }
+
+    #[test]
+    fn invalid_requests_are_rejected_at_the_boundary() {
+        let cloud = Cloud::aws_like();
+        let mut coord = coordinator(cloud, 8);
+        let org = Organization::new("o");
+        let bad = JobRequest::sort(10.0).with_target_seconds(-3.0);
+        assert!(matches!(
+            coord.submit(&org, &bad),
+            Err(ApiError::InvalidRequest(_))
+        ));
+        assert!(matches!(
+            coord.recommend(&bad),
+            Err(ApiError::InvalidRequest(_))
+        ));
+        // nothing was allocated or recorded for the invalid request
+        assert_eq!(coord.metrics().submissions, 0);
+        assert_eq!(coord.generation(JobKind::Sort), 0);
+    }
+
+    #[test]
+    fn cold_recommend_reports_cold_start_without_allocating() {
+        let cloud = Cloud::aws_like();
+        let mut coord = coordinator(cloud, 9);
+        match coord.recommend(&JobRequest::sort(10.0)) {
+            Err(ApiError::ColdStart { job, records, .. }) => {
+                assert_eq!(job, JobKind::Sort);
+                assert_eq!(records, 0);
+            }
+            other => panic!("expected ColdStart, got {other:?}"),
+        }
+        let info = coord.snapshot_info(JobKind::Sort);
+        assert_eq!(info.records, 0);
+        assert!(info.model.is_none());
+    }
+
+    #[test]
+    fn client_trait_round_trips_the_protocol() {
+        let cloud = Cloud::aws_like();
+        let repo = corpus_repo(&cloud, JobKind::Sort);
+        let mut coord = coordinator(cloud, 10);
+        let client: &mut dyn Client = &mut coord;
+        let shared = client.share(repo.clone()).unwrap();
+        assert_eq!(shared.added, repo.len());
+        let info = client.snapshot_info(JobKind::Sort).unwrap();
+        assert!(info.model.is_some(), "share trains the model");
+        assert_eq!(info.records, repo.len());
+        let rec = client.recommend(JobRequest::sort(12.0)).unwrap();
+        assert!(rec.choice.predicted_runtime_s > 0.0);
+        let outcome = client
+            .submit(&Organization::new("o"), JobRequest::sort(12.0))
+            .unwrap();
+        assert!(outcome.model_used.is_some());
+        let m = client.metrics().unwrap();
+        assert_eq!(m.submissions, 1);
+        assert_eq!(m.recommends, 1);
     }
 }

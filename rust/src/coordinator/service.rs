@@ -1,30 +1,40 @@
 //! The sharded, concurrent coordinator service — the "many organizations,
-//! heavy traffic" deployment shape.
+//! heavy traffic" deployment shape, with the protocol's read/write split
+//! realized in the locking discipline.
 //!
 //! Architecture (contrast with the strictly-ordered single-worker
 //! [`super::session`]):
 //!
 //! * **Shards** — one [`JobShard`] per [`JobKind`], each behind its own
-//!   mutex. A submission only locks its own kind's shard, so concurrent
-//!   clients working on different kinds never serialize against each
-//!   other; same-kind submissions serialize exactly as much as the shared
-//!   repository requires.
+//!   mutex, taken **only by writes** (`Submit`, `Contribute`, `Share`).
+//!   Distinct kinds never serialize against each other; same-kind writes
+//!   serialize exactly as much as the shared repository requires.
+//! * **Snapshots** — after every write, the shard publishes a
+//!   generation-stamped immutable [`Arc<ModelSnapshot>`]: an atomic
+//!   pointer swap under a write-only `RwLock` slot. Reads (`Recommend`,
+//!   `SnapshotInfo`) clone the `Arc` and serve from it **without ever
+//!   touching the shard mutex** — a hot job kind can retrain for seconds
+//!   while its recommendations keep flowing.
 //! * **Workers** — `N` threads pull requests from one shared queue. Every
 //!   worker owns its **own model engine**, constructed on the worker's
 //!   thread: the first `pjrt_workers` try to own a PJRT runtime (the PJRT
 //!   client is thread-pinned, hence "pinned workers"); the rest always use
 //!   the pure-Rust native engine ("free-floating"). Trained models are
-//!   plain data stored in the shard, padded to one fixed layout, so a
-//!   model trained by any worker is served by every other.
-//! * **Per-request replies** — each request carries its own reply
-//!   channel. There is no ordered reply stream to hold up: a client
-//!   blocked on a slow submission never delays another client's reply
-//!   (the session's single ordered `Receiver` could not offer this).
-//! * **Generation-cached models** — shards retrain only when the repo
-//!   generation moved past the retrain threshold (see [`JobShard`]), so
-//!   request throughput is decoupled from training frequency.
+//!   plain data stored in the shard/snapshot, padded to one fixed layout,
+//!   so a model trained by any worker is served by every other.
+//! * **Per-request replies + tickets** — each request carries its own
+//!   reply channel; [`ServiceClient::submit_nowait`] returns a
+//!   [`SubmitTicket`] immediately so one client can pipeline many
+//!   submissions and collect the outcomes later.
+//! * **Coalesced reads** — a worker that dequeues a `Recommend` drains
+//!   further same-kind `Recommend`s waiting in the queue (up to
+//!   [`ServiceConfig::coalesce`]) and scores all their candidates as
+//!   **one** predict batch ([`ModelSnapshot::recommend_batch`]); each
+//!   request still gets its own decision, bitwise-identical to
+//!   uncoalesced serving (observable via `Metrics::coalesced_batches`).
 //!
 //! ```no_run
+//! use c3o::api::Client as _;
 //! use c3o::cloud::Cloud;
 //! use c3o::configurator::JobRequest;
 //! use c3o::coordinator::service::{CoordinatorService, ServiceConfig};
@@ -38,20 +48,22 @@
 //! service.shutdown();
 //! ```
 
+use crate::api::{
+    self, ApiError, Client, Contribution, Recommendation, Response, SnapshotInfo,
+};
 use crate::cloud::Cloud;
 use crate::configurator::JobRequest;
-use crate::coordinator::shard::{JobShard, ShardPolicy};
+use crate::coordinator::shard::{JobShard, ModelSnapshot, ShardPolicy};
 use crate::coordinator::{JobOutcome, Metrics, Organization};
-use crate::models::Engine;
-use crate::repo::RuntimeDataRepo;
+use crate::models::{Engine, ModelTrainer};
+use crate::repo::{RuntimeDataRepo, RuntimeRecord};
 use crate::runtime::Runtime;
 use crate::util::rng::Pcg32;
 use crate::workloads::JobKind;
-use anyhow::{anyhow, Result};
 use std::collections::HashMap;
 use std::path::PathBuf;
 use std::sync::mpsc;
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Mutex, RwLock};
 use std::thread::JoinHandle;
 
 /// Deployment knobs for a [`CoordinatorService`].
@@ -69,6 +81,9 @@ pub struct ServiceConfig {
     pub policy: ShardPolicy,
     /// Master seed; each shard derives its own RNG stream from it.
     pub seed: u64,
+    /// Maximum same-kind `Recommend` requests a worker coalesces into
+    /// one predict batch (1 disables coalescing).
+    pub coalesce: usize,
 }
 
 impl Default for ServiceConfig {
@@ -81,6 +96,7 @@ impl Default for ServiceConfig {
             artifacts_dir: Runtime::default_dir(),
             policy: ShardPolicy::default(),
             seed: 0xC30,
+            coalesce: 16,
         }
     }
 }
@@ -113,27 +129,56 @@ impl ServiceConfig {
         self.pjrt_workers = pjrt_workers;
         self
     }
+
+    /// Cap (or disable, with `1`) cross-request `Recommend` coalescing.
+    pub fn with_coalesce(mut self, coalesce: usize) -> Self {
+        self.coalesce = coalesce.max(1);
+        self
+    }
 }
 
-/// A request paired with its own reply channel (no cross-client ordering).
-enum Request {
-    Share(RuntimeDataRepo, mpsc::Sender<Result<usize>>),
-    Submit(Organization, JobRequest, mpsc::Sender<Result<JobOutcome>>),
-    Metrics(mpsc::Sender<Metrics>),
+/// Reply channel of one in-flight protocol request.
+type ReplyTx = mpsc::Sender<Result<Response, ApiError>>;
+
+/// One queued protocol request paired with its own reply channel (no
+/// cross-client ordering).
+enum WorkItem {
+    Api(Box<api::Request>, ReplyTx),
     Shutdown,
 }
 
 /// Shared state every worker sees.
 struct Shared {
+    /// Write-path state: taken only by `Submit`/`Contribute`/`Share`.
     shards: HashMap<JobKind, Mutex<JobShard>>,
+    /// Read-path state: one immutable snapshot per shard, swapped by the
+    /// write that changed it. Readers hold the `RwLock` only long enough
+    /// to clone the `Arc`.
+    snapshots: HashMap<JobKind, RwLock<Arc<ModelSnapshot>>>,
     metrics: Mutex<Metrics>,
     cloud: Cloud,
     policy: ShardPolicy,
+    coalesce: usize,
+}
+
+impl Shared {
+    /// Swap in a fresh snapshot of `shard` (called with the shard lock
+    /// held, so snapshot order matches write order).
+    fn publish(&self, shard: &JobShard) {
+        let snap = Arc::new(shard.snapshot());
+        *self.snapshots[&shard.job()].write().unwrap() = snap;
+    }
+
+    /// Clone the current snapshot `Arc` for a job — the whole read-path
+    /// synchronization cost.
+    fn snapshot(&self, job: JobKind) -> Arc<ModelSnapshot> {
+        Arc::clone(&self.snapshots[&job].read().unwrap())
+    }
 }
 
 /// The running service: owns the worker threads and the request queue.
 pub struct CoordinatorService {
-    tx: mpsc::Sender<Request>,
+    tx: mpsc::Sender<WorkItem>,
     shared: Arc<Shared>,
     workers: Vec<JoinHandle<()>>,
 }
@@ -142,67 +187,176 @@ pub struct CoordinatorService {
 /// its own reply channel only.
 #[derive(Clone)]
 pub struct ServiceClient {
-    tx: mpsc::Sender<Request>,
+    tx: mpsc::Sender<WorkItem>,
 }
 
-fn share_on(tx: &mpsc::Sender<Request>, repo: RuntimeDataRepo) -> Result<usize> {
-    let (rtx, rrx) = mpsc::channel();
-    tx.send(Request::Share(repo, rtx))
-        .map_err(|_| anyhow!("service stopped"))?;
-    rrx.recv().map_err(|_| anyhow!("service dropped the reply"))?
+/// Handle to a pipelined submission dispatched with
+/// [`ServiceClient::submit_nowait`]: the request is in flight (or being
+/// served) while the client does other work; [`SubmitTicket::wait`]
+/// collects the outcome.
+pub struct SubmitTicket {
+    rx: mpsc::Receiver<Result<Response, ApiError>>,
+    done: Option<Result<JobOutcome, ApiError>>,
 }
 
-fn submit_on(
-    tx: &mpsc::Sender<Request>,
-    org: &Organization,
-    request: JobRequest,
-) -> Result<JobOutcome> {
-    let (rtx, rrx) = mpsc::channel();
-    tx.send(Request::Submit(org.clone(), request, rtx))
-        .map_err(|_| anyhow!("service stopped"))?;
-    rrx.recv().map_err(|_| anyhow!("service dropped the reply"))?
+impl SubmitTicket {
+    fn unpack(result: Result<Response, ApiError>) -> Result<JobOutcome, ApiError> {
+        match result? {
+            Response::Submitted(outcome) => Ok(outcome),
+            other => Err(ApiError::Protocol(format!(
+                "submit ticket resolved to a non-Submitted response: {other:?}"
+            ))),
+        }
+    }
+
+    /// Block until the outcome arrives.
+    pub fn wait(mut self) -> Result<JobOutcome, ApiError> {
+        if let Some(done) = self.done.take() {
+            return done;
+        }
+        match self.rx.recv() {
+            Ok(result) => Self::unpack(result),
+            Err(_) => Err(ApiError::Stopped),
+        }
+    }
+
+    /// Non-blocking readiness poll; once `true`, [`SubmitTicket::wait`]
+    /// returns immediately.
+    pub fn is_ready(&mut self) -> bool {
+        if self.done.is_some() {
+            return true;
+        }
+        match self.rx.try_recv() {
+            Ok(result) => {
+                self.done = Some(Self::unpack(result));
+                true
+            }
+            Err(mpsc::TryRecvError::Disconnected) => {
+                self.done = Some(Err(ApiError::Stopped));
+                true
+            }
+            Err(mpsc::TryRecvError::Empty) => false,
+        }
+    }
 }
 
-fn metrics_on(tx: &mpsc::Sender<Request>) -> Result<Metrics> {
+fn call_on(
+    tx: &mpsc::Sender<WorkItem>,
+    request: api::Request,
+) -> Result<Response, ApiError> {
     let (rtx, rrx) = mpsc::channel();
-    tx.send(Request::Metrics(rtx))
-        .map_err(|_| anyhow!("service stopped"))?;
-    rrx.recv().map_err(|_| anyhow!("service dropped the reply"))
+    tx.send(WorkItem::Api(Box::new(request), rtx))
+        .map_err(|_| ApiError::Stopped)?;
+    rrx.recv().map_err(|_| ApiError::Stopped)?
 }
 
 impl ServiceClient {
+    /// Execute one protocol request; blocks on this request's own reply
+    /// channel only.
+    pub fn call(&self, request: api::Request) -> Result<Response, ApiError> {
+        call_on(&self.tx, request)
+    }
+
     /// Merge shared runtime data into the owning shard's repository.
-    pub fn share(&self, repo: RuntimeDataRepo) -> Result<usize> {
-        share_on(&self.tx, repo)
+    pub fn share(&self, repo: RuntimeDataRepo) -> Result<Contribution, ApiError> {
+        let mut this = self;
+        Client::share(&mut this, repo)
     }
 
     /// Submit a job; blocks on this request's own reply only.
-    pub fn submit(&self, org: &Organization, request: JobRequest) -> Result<JobOutcome> {
-        submit_on(&self.tx, org, request)
+    pub fn submit(&self, org: &Organization, request: JobRequest) -> Result<JobOutcome, ApiError> {
+        let mut this = self;
+        Client::submit(&mut this, org, request)
+    }
+
+    /// Dispatch a submission without waiting: returns a ticket
+    /// immediately so the client can pipeline further requests (and the
+    /// worker pool can interleave/coalesce them) before collecting
+    /// outcomes.
+    pub fn submit_nowait(
+        &self,
+        org: &Organization,
+        request: JobRequest,
+    ) -> Result<SubmitTicket, ApiError> {
+        request.validate()?;
+        let (rtx, rrx) = mpsc::channel();
+        self.tx
+            .send(WorkItem::Api(
+                Box::new(api::Request::Submit {
+                    org: org.clone(),
+                    request,
+                }),
+                rtx,
+            ))
+            .map_err(|_| ApiError::Stopped)?;
+        Ok(SubmitTicket {
+            rx: rrx,
+            done: None,
+        })
+    }
+
+    /// Read-only configuration recommendation, served lock-free from the
+    /// job's published snapshot.
+    pub fn recommend(&self, request: JobRequest) -> Result<Recommendation, ApiError> {
+        let mut this = self;
+        Client::recommend(&mut this, request)
+    }
+
+    /// Record one externally-observed run.
+    pub fn contribute(&self, record: RuntimeRecord) -> Result<Contribution, ApiError> {
+        let mut this = self;
+        Client::contribute(&mut this, record)
     }
 
     /// Snapshot the service-wide metrics.
-    pub fn metrics(&self) -> Result<Metrics> {
-        metrics_on(&self.tx)
+    pub fn metrics(&self) -> Result<Metrics, ApiError> {
+        let mut this = self;
+        Client::metrics(&mut this)
+    }
+
+    /// Describe the model snapshot serving a job's reads.
+    pub fn snapshot_info(&self, job: JobKind) -> Result<SnapshotInfo, ApiError> {
+        let mut this = self;
+        Client::snapshot_info(&mut this, job)
+    }
+}
+
+/// `ServiceClient` speaks the protocol (on `&ServiceClient` too, so a
+/// shared handle serves the trait's `&mut self` methods — every call is
+/// an independent request with its own reply channel).
+impl Client for &ServiceClient {
+    fn call(&mut self, request: api::Request) -> Result<Response, ApiError> {
+        ServiceClient::call(*self, request)
+    }
+}
+
+impl Client for ServiceClient {
+    fn call(&mut self, request: api::Request) -> Result<Response, ApiError> {
+        ServiceClient::call(self, request)
     }
 }
 
 impl CoordinatorService {
-    /// Spawn the service: shards for every job kind plus `workers`
-    /// threads, each constructing its engine on its own thread.
+    /// Spawn the service: shards + published snapshots for every job
+    /// kind plus `workers` threads, each constructing its engine on its
+    /// own thread.
     pub fn spawn(cloud: Cloud, config: ServiceConfig) -> CoordinatorService {
-        let (tx, rx) = mpsc::channel::<Request>();
+        let (tx, rx) = mpsc::channel::<WorkItem>();
         let queue = Arc::new(Mutex::new(rx));
         let mut seed_rng = Pcg32::new(config.seed);
         let mut shards = HashMap::new();
+        let mut snapshots = HashMap::new();
         for kind in JobKind::all() {
             shards.insert(kind, Mutex::new(JobShard::new(kind, seed_rng.next_u64())));
+            snapshots.insert(kind, RwLock::new(Arc::new(ModelSnapshot::empty(kind))));
         }
         let shared = Arc::new(Shared {
             shards,
+            snapshots,
             metrics: Mutex::new(Metrics::default()),
             cloud,
             policy: config.policy.clone(),
+            coalesce: config.coalesce.max(1),
         });
         let n = config.workers.max(1);
         let mut workers = Vec::with_capacity(n);
@@ -230,31 +384,47 @@ impl CoordinatorService {
     }
 
     /// Merge shared runtime data (convenience over [`Self::client`]).
-    pub fn share(&self, repo: RuntimeDataRepo) -> Result<usize> {
-        share_on(&self.tx, repo)
+    pub fn share(&self, repo: RuntimeDataRepo) -> Result<Contribution, ApiError> {
+        self.client().share(repo)
     }
 
     /// Submit a job (convenience over [`Self::client`]).
-    pub fn submit(&self, org: &Organization, request: JobRequest) -> Result<JobOutcome> {
-        submit_on(&self.tx, org, request)
+    pub fn submit(&self, org: &Organization, request: JobRequest) -> Result<JobOutcome, ApiError> {
+        self.client().submit(org, request)
+    }
+
+    /// Read-only recommendation (convenience over [`Self::client`]).
+    pub fn recommend(&self, request: JobRequest) -> Result<Recommendation, ApiError> {
+        self.client().recommend(request)
     }
 
     /// Snapshot the service-wide metrics.
-    pub fn metrics(&self) -> Result<Metrics> {
-        metrics_on(&self.tx)
+    pub fn metrics(&self) -> Result<Metrics, ApiError> {
+        self.client().metrics()
     }
 
-    /// Current repo generation of a shard (observability / tests).
+    /// Current repo generation of a shard — read off the published
+    /// snapshot, no shard lock (observability / tests).
     pub fn generation(&self, kind: JobKind) -> u64 {
-        self.shared.shards[&kind].lock().unwrap().generation()
+        self.shared.snapshot(kind).generation
     }
 
-    /// The generation the shard's cached model was trained at.
+    /// The generation the shard's cached model was trained at — read off
+    /// the published snapshot, no shard lock.
     pub fn trained_at_generation(&self, kind: JobKind) -> Option<u64> {
-        self.shared.shards[&kind]
-            .lock()
-            .unwrap()
-            .trained_at_generation()
+        self.shared
+            .snapshot(kind)
+            .model
+            .as_ref()
+            .map(|m| m.trained_at_gen)
+    }
+
+    /// Test hook: grab a shard's write mutex, simulating a slow write /
+    /// retrain holding the lock. Reads must keep completing while the
+    /// guard is alive; same-kind writes must block.
+    #[doc(hidden)]
+    pub fn hold_shard_for_tests(&self, kind: JobKind) -> std::sync::MutexGuard<'_, JobShard> {
+        self.shared.shards[&kind].lock().unwrap()
     }
 
     /// Graceful shutdown: every worker drains one `Shutdown` and exits.
@@ -264,7 +434,7 @@ impl CoordinatorService {
 
     fn shutdown_inner(&mut self) {
         for _ in 0..self.workers.len() {
-            let _ = self.tx.send(Request::Shutdown);
+            let _ = self.tx.send(WorkItem::Shutdown);
         }
         for handle in self.workers.drain(..) {
             let _ = handle.join();
@@ -279,7 +449,7 @@ impl Drop for CoordinatorService {
 }
 
 fn worker_loop(
-    queue: Arc<Mutex<mpsc::Receiver<Request>>>,
+    queue: Arc<Mutex<mpsc::Receiver<WorkItem>>>,
     shared: Arc<Shared>,
     try_pjrt: bool,
     artifacts_dir: PathBuf,
@@ -292,55 +462,205 @@ fn worker_loop(
     } else {
         Engine::native()
     };
+    // Items drained off the queue while assembling a coalesced read
+    // group. Served by THIS worker immediately after the group, so a
+    // drained write is delayed by at most one predict batch — never
+    // requeued, never starved.
+    let mut backlog: std::collections::VecDeque<WorkItem> = std::collections::VecDeque::new();
     loop {
         // Hold the queue lock only for the dequeue, never while serving.
-        let request = {
-            let rx = queue.lock().unwrap();
-            rx.recv()
-        };
-        let Ok(request) = request else {
-            break; // all senders gone
-        };
-        match request {
-            Request::Shutdown => break,
-            Request::Share(repo, reply) => {
-                let result = match shared.shards.get(&repo.job()) {
-                    Some(shard) => shard.lock().unwrap().share(&repo),
-                    None => Err(anyhow!("no shard for job {}", repo.job().name())),
-                };
-                let _ = reply.send(result);
+        let item = if let Some(item) = backlog.pop_front() {
+            item
+        } else {
+            let received = {
+                let rx = queue.lock().unwrap();
+                rx.recv()
+            };
+            match received {
+                Ok(item) => item,
+                Err(_) => break, // all senders gone
             }
-            Request::Submit(org, request, reply) => {
-                let kind = request.kind();
-                let result = match shared.shards.get(&kind) {
-                    Some(shard) => {
-                        // Stage metrics locally and fold after the shard
-                        // lock drops, so the global metrics mutex never
-                        // nests inside a busy shard.
-                        let mut local = Metrics::default();
-                        let outcome = {
-                            let mut shard = shard.lock().unwrap();
-                            shard.submit(
-                                &mut engine,
-                                &shared.cloud,
-                                &shared.policy,
-                                &mut local,
-                                &org,
-                                &request,
-                            )
-                        };
-                        shared.metrics.lock().unwrap().fold(&local);
-                        outcome
+        };
+        match item {
+            WorkItem::Shutdown => break,
+            WorkItem::Api(request, reply) => match *request {
+                api::Request::Recommend { request } => {
+                    let kind = request.kind();
+                    let mut group = vec![(request, reply)];
+                    // Opportunistically coalesce further same-kind reads
+                    // already waiting in the queue; the first non-matching
+                    // item stops the drain and goes to the local backlog.
+                    {
+                        let rx = queue.lock().unwrap();
+                        while group.len() < shared.coalesce {
+                            match rx.try_recv() {
+                                Ok(WorkItem::Api(req2, reply2)) => match *req2 {
+                                    api::Request::Recommend { request: r2 }
+                                        if r2.kind() == kind =>
+                                    {
+                                        group.push((r2, reply2));
+                                    }
+                                    other => {
+                                        backlog.push_back(WorkItem::Api(
+                                            Box::new(other),
+                                            reply2,
+                                        ));
+                                        break;
+                                    }
+                                },
+                                Ok(WorkItem::Shutdown) => {
+                                    backlog.push_back(WorkItem::Shutdown);
+                                    break;
+                                }
+                                Err(_) => break,
+                            }
+                        }
                     }
-                    None => Err(anyhow!("no shard for job {}", kind.name())),
-                };
-                let _ = reply.send(result);
-            }
-            Request::Metrics(reply) => {
-                let _ = reply.send(shared.metrics.lock().unwrap().clone());
-            }
+                    serve_recommend_group(&shared, &mut engine, kind, group);
+                }
+                other => {
+                    let result = serve_request(&shared, &mut engine, other);
+                    let _ = reply.send(result);
+                }
+            },
         }
     }
+}
+
+/// Serve a coalesced group of same-kind `Recommend`s from the published
+/// snapshot — the lock-free read path: no shard mutex, one predict batch
+/// for every candidate of every request.
+fn serve_recommend_group(
+    shared: &Shared,
+    engine: &mut dyn ModelTrainer,
+    kind: JobKind,
+    group: Vec<(JobRequest, ReplyTx)>,
+) {
+    let snap = shared.snapshot(kind);
+    let mut local = Metrics::default();
+    // validate before scoring; invalid requests drop out of the batch
+    let mut valid: Vec<usize> = Vec::with_capacity(group.len());
+    let mut results: Vec<Option<Result<Recommendation, ApiError>>> = vec![None; group.len()];
+    for (i, (request, _)) in group.iter().enumerate() {
+        match request.validate() {
+            Ok(()) => valid.push(i),
+            Err(e) => results[i] = Some(Err(e)),
+        }
+    }
+    if !valid.is_empty() {
+        let requests: Vec<JobRequest> =
+            valid.iter().map(|&i| group[i].0.clone()).collect();
+        let served = snap.recommend_batch(engine, &shared.cloud, &shared.policy, &requests);
+        if valid.len() > 1 {
+            local.coalesced_batches += 1;
+        }
+        for (&i, result) in valid.iter().zip(served) {
+            if result.is_ok() {
+                local.recommends += 1;
+            }
+            results[i] = Some(result);
+        }
+    }
+    shared.metrics.lock().unwrap().fold(&local);
+    for ((_, reply), result) in group.into_iter().zip(results) {
+        let result = result.expect("every slot filled");
+        let _ = reply.send(result.map(Response::Recommendation));
+    }
+}
+
+/// Serve one non-`Recommend` protocol request. Writes take their shard's
+/// mutex and republish the snapshot before releasing it; the remaining
+/// reads (`Metrics`, `SnapshotInfo`) touch no shard lock at all.
+fn serve_request(
+    shared: &Shared,
+    engine: &mut dyn ModelTrainer,
+    request: api::Request,
+) -> Result<Response, ApiError> {
+    match request {
+        api::Request::Submit { org, request } => {
+            request.validate()?;
+            let kind = request.kind();
+            let shard_mutex = shard_for(shared, kind)?;
+            let mut local = Metrics::default();
+            let outcome = {
+                let mut shard = shard_mutex.lock().unwrap();
+                let outcome = shard.submit(
+                    engine,
+                    &shared.cloud,
+                    &shared.policy,
+                    &mut local,
+                    &org,
+                    &request,
+                );
+                if outcome.is_ok() {
+                    shared.publish(&shard);
+                }
+                outcome
+            };
+            // Fold after the shard lock drops, so the global metrics
+            // mutex never nests inside a busy shard.
+            shared.metrics.lock().unwrap().fold(&local);
+            outcome.map(Response::Submitted).map_err(ApiError::internal)
+        }
+        api::Request::Contribute { record } => {
+            api::validate_machines(&shared.cloud, std::slice::from_ref(&record))?;
+            let kind = record.job;
+            let shard_mutex = shard_for(shared, kind)?;
+            let mut local = Metrics::default();
+            let result = {
+                let mut shard = shard_mutex.lock().unwrap();
+                shard.contribute_record(record).and_then(|contribution| {
+                    shard
+                        .refresh_model(engine, &shared.cloud, &shared.policy, &mut local)
+                        .map_err(ApiError::internal)?;
+                    shared.publish(&shard);
+                    local.contributions += 1;
+                    Ok(contribution)
+                })
+            };
+            shared.metrics.lock().unwrap().fold(&local);
+            result.map(Response::Contributed)
+        }
+        api::Request::Share { repo } => {
+            api::validate_machines(&shared.cloud, repo.records())?;
+            let kind = repo.job();
+            let shard_mutex = shard_for(shared, kind)?;
+            let mut local = Metrics::default();
+            let result = {
+                let mut shard = shard_mutex.lock().unwrap();
+                shard
+                    .share(&repo)
+                    .map_err(ApiError::internal)
+                    .and_then(|added| {
+                        shard
+                            .refresh_model(engine, &shared.cloud, &shared.policy, &mut local)
+                            .map_err(ApiError::internal)?;
+                        shared.publish(&shard);
+                        Ok(Contribution {
+                            job: kind,
+                            added,
+                            generation: shard.generation(),
+                        })
+                    })
+            };
+            shared.metrics.lock().unwrap().fold(&local);
+            result.map(Response::Shared)
+        }
+        api::Request::Metrics => Ok(Response::Metrics(shared.metrics.lock().unwrap().clone())),
+        api::Request::SnapshotInfo { job } => {
+            Ok(Response::SnapshotInfo(shared.snapshot(job).info()))
+        }
+        api::Request::Recommend { .. } => {
+            unreachable!("Recommend is routed through serve_recommend_group")
+        }
+    }
+}
+
+fn shard_for(shared: &Shared, kind: JobKind) -> Result<&Mutex<JobShard>, ApiError> {
+    shared
+        .shards
+        .get(&kind)
+        .ok_or_else(|| ApiError::Internal(format!("no shard for job {}", kind.name())))
 }
 
 #[cfg(test)]
@@ -363,7 +683,7 @@ mod tests {
         let client = service.client();
         service.shutdown();
         let err = client.metrics();
-        assert!(err.is_err(), "stopped service must error, not hang");
+        assert_eq!(err.unwrap_err(), ApiError::Stopped, "stopped service must error, not hang");
     }
 
     #[test]
@@ -379,6 +699,40 @@ mod tests {
         assert_eq!(metrics.submissions, 1);
         assert_eq!(metrics.fallbacks, 1);
         assert_eq!(service.generation(JobKind::Sort), 1, "run was contributed");
+        service.shutdown();
+    }
+
+    #[test]
+    fn cold_recommend_is_a_typed_error() {
+        let service = CoordinatorService::spawn(
+            Cloud::aws_like(),
+            ServiceConfig::default().with_workers(1).with_seed(8),
+        );
+        let err = service.recommend(JobRequest::sort(12.0)).unwrap_err();
+        assert!(
+            matches!(err, ApiError::ColdStart { job: JobKind::Sort, records: 0, .. }),
+            "{err:?}"
+        );
+        service.shutdown();
+    }
+
+    #[test]
+    fn invalid_requests_fail_fast_client_side() {
+        let service = CoordinatorService::spawn(
+            Cloud::aws_like(),
+            ServiceConfig::default().with_workers(1).with_seed(9),
+        );
+        let client = service.client();
+        let bad = JobRequest::sort(10.0).with_target_seconds(f64::NAN);
+        assert!(matches!(
+            client.submit(&Organization::new("o"), bad.clone()),
+            Err(ApiError::InvalidRequest(_))
+        ));
+        assert!(matches!(
+            client.submit_nowait(&Organization::new("o"), bad),
+            Err(ApiError::InvalidRequest(_))
+        ));
+        assert_eq!(service.metrics().unwrap().submissions, 0);
         service.shutdown();
     }
 }

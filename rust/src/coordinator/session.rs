@@ -4,37 +4,33 @@
 //!
 //! One dedicated worker thread owns a whole [`Coordinator`] (and its
 //! model engine — the PJRT client is not `Send`); clients talk to it
-//! through a strictly-ordered request/reply channel pair. That ordering
-//! is the shape's scalability ceiling: every client's reply waits behind
-//! every earlier request, across *all* job kinds. The service replaces
-//! this with per-kind shards and per-request reply channels.
+//! through a strictly-ordered request/reply channel pair carrying the
+//! typed [`crate::api`] protocol. That ordering is the shape's
+//! scalability ceiling: every client's reply waits behind every earlier
+//! request, across *all* job kinds — reads included, which is exactly
+//! what the service's read/write split removes.
 
+use crate::api::{ApiError, Client, Contribution, Recommendation, Request, Response, SnapshotInfo};
 use crate::cloud::Cloud;
 use crate::configurator::JobRequest;
 use crate::coordinator::{Coordinator, JobOutcome, Metrics, Organization};
-use crate::repo::RuntimeDataRepo;
-use anyhow::{anyhow, Result};
+use crate::repo::{RuntimeDataRepo, RuntimeRecord};
+use crate::workloads::JobKind;
 use std::path::PathBuf;
 use std::sync::mpsc;
 use std::thread::JoinHandle;
 
-/// Requests accepted by the session worker.
-pub enum Event {
-    /// Merge shared runtime data into the coordinator's repositories.
-    Share(RuntimeDataRepo),
-    /// Submit a job for an organization.
-    Submit(Organization, JobRequest),
-    /// Snapshot the metrics.
-    GetMetrics,
+/// Requests accepted by the session worker: the protocol, plus shutdown.
+enum Event {
+    /// One protocol request, answered in order.
+    Api(Box<Request>),
     /// Stop the worker.
     Shutdown,
 }
 
 /// Replies from the worker (one per event, in order).
-pub enum Reply {
-    Shared(Result<usize>),
-    Submitted(Box<Result<JobOutcome>>),
-    Metrics(Metrics),
+enum Reply {
+    Api(Box<Result<Response, ApiError>>),
     ShuttingDown,
 }
 
@@ -60,15 +56,9 @@ impl Session {
                 .expect("coordinator construction is infallible (native fallback)");
             while let Ok(event) = worker_rx.recv() {
                 match event {
-                    Event::Share(repo) => {
-                        let _ = worker_tx.send(Reply::Shared(coord.share(&repo)));
-                    }
-                    Event::Submit(org, request) => {
-                        let _ = worker_tx
-                            .send(Reply::Submitted(Box::new(coord.submit(&org, &request))));
-                    }
-                    Event::GetMetrics => {
-                        let _ = worker_tx.send(Reply::Metrics(coord.metrics().clone()));
+                    Event::Api(request) => {
+                        let result = coord.call(*request);
+                        let _ = worker_tx.send(Reply::Api(Box::new(result)));
                     }
                     Event::Shutdown => {
                         let _ = worker_tx.send(Reply::ShuttingDown);
@@ -84,37 +74,51 @@ impl Session {
         }
     }
 
-    /// Share runtime data; blocks for the worker's reply.
-    pub fn share(&self, repo: RuntimeDataRepo) -> Result<usize> {
+    /// Execute one protocol request; blocks for the (ordered) reply.
+    pub fn call(&self, request: Request) -> Result<Response, ApiError> {
         self.tx
-            .send(Event::Share(repo))
-            .map_err(|_| anyhow!("session worker gone"))?;
+            .send(Event::Api(Box::new(request)))
+            .map_err(|_| ApiError::Stopped)?;
         match self.rx.recv() {
-            Ok(Reply::Shared(r)) => r,
-            _ => Err(anyhow!("unexpected session reply")),
+            Ok(Reply::Api(result)) => *result,
+            Ok(Reply::ShuttingDown) | Err(_) => Err(ApiError::Stopped),
         }
+    }
+
+    /// Share runtime data; blocks for the worker's reply.
+    pub fn share(&self, repo: RuntimeDataRepo) -> Result<Contribution, ApiError> {
+        let mut this = self;
+        Client::share(&mut this, repo)
     }
 
     /// Submit a job; blocks for the outcome.
-    pub fn submit(&self, org: &Organization, request: JobRequest) -> Result<JobOutcome> {
-        self.tx
-            .send(Event::Submit(org.clone(), request))
-            .map_err(|_| anyhow!("session worker gone"))?;
-        match self.rx.recv() {
-            Ok(Reply::Submitted(r)) => *r,
-            _ => Err(anyhow!("unexpected session reply")),
-        }
+    pub fn submit(&self, org: &Organization, request: JobRequest) -> Result<JobOutcome, ApiError> {
+        let mut this = self;
+        Client::submit(&mut this, org, request)
+    }
+
+    /// Read-only configuration recommendation.
+    pub fn recommend(&self, request: JobRequest) -> Result<Recommendation, ApiError> {
+        let mut this = self;
+        Client::recommend(&mut this, request)
+    }
+
+    /// Record one externally-observed run.
+    pub fn contribute(&self, record: RuntimeRecord) -> Result<Contribution, ApiError> {
+        let mut this = self;
+        Client::contribute(&mut this, record)
     }
 
     /// Fetch a metrics snapshot.
-    pub fn metrics(&self) -> Result<Metrics> {
-        self.tx
-            .send(Event::GetMetrics)
-            .map_err(|_| anyhow!("session worker gone"))?;
-        match self.rx.recv() {
-            Ok(Reply::Metrics(m)) => Ok(m),
-            _ => Err(anyhow!("unexpected session reply")),
-        }
+    pub fn metrics(&self) -> Result<Metrics, ApiError> {
+        let mut this = self;
+        Client::metrics(&mut this)
+    }
+
+    /// Describe the model snapshot serving a job's reads.
+    pub fn snapshot_info(&self, job: JobKind) -> Result<SnapshotInfo, ApiError> {
+        let mut this = self;
+        Client::snapshot_info(&mut this, job)
     }
 
     /// Graceful shutdown (also runs on drop).
@@ -143,6 +147,22 @@ impl Drop for Session {
     }
 }
 
+/// The session is a [`Client`]: one ordered pipe speaking the protocol.
+/// (Implemented on `&Session` too, so a shared session handle can serve
+/// the trait's `&mut self` methods without interior mutability — every
+/// call is one channel round trip.)
+impl Client for &Session {
+    fn call(&mut self, request: Request) -> Result<Response, ApiError> {
+        Session::call(*self, request)
+    }
+}
+
+impl Client for Session {
+    fn call(&mut self, request: Request) -> Result<Response, ApiError> {
+        Session::call(self, request)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -167,15 +187,21 @@ mod tests {
         let repo = grid.execute(&cloud, 5).repo_for(JobKind::Sort);
 
         let session = Session::spawn(cloud, dir, 9);
-        let added = session.share(repo).unwrap();
-        assert_eq!(added, 126);
+        let shared = session.share(repo).unwrap();
+        assert_eq!(shared.added, 126);
         let org = Organization::new("threaded-org");
         let outcome = session
             .submit(&org, JobRequest::sort(15.0).with_target_seconds(1000.0))
             .unwrap();
         assert!(outcome.model_used.is_some());
+        // the read half works through the same ordered pipe
+        let rec = session.recommend(JobRequest::sort(15.0)).unwrap();
+        assert!(rec.choice.predicted_runtime_s > 0.0);
+        let info = session.snapshot_info(JobKind::Sort).unwrap();
+        assert_eq!(info.records, 127, "corpus + the submitted run");
         let metrics = session.metrics().unwrap();
         assert_eq!(metrics.submissions, 1);
+        assert_eq!(metrics.recommends, 1);
         session.shutdown();
     }
 
@@ -193,5 +219,24 @@ mod tests {
         assert_eq!(metrics.submissions, 1);
         assert_eq!(metrics.fallbacks, 1);
         session.shutdown();
+    }
+
+    #[test]
+    fn stopped_session_errors_with_typed_stopped() {
+        let cloud = Cloud::aws_like();
+        let session = Session::spawn(cloud, PathBuf::from("/nonexistent/artifacts"), 2);
+        // shut the worker down out from under a second handle path: take
+        // the worker down, then call — must be ApiError::Stopped, not a
+        // hang or a protocol error
+        let _ = session.tx.send(Event::Shutdown);
+        // drain the acknowledgement so the reply channel is empty
+        loop {
+            match session.rx.recv() {
+                Ok(Reply::ShuttingDown) | Err(_) => break,
+                Ok(_) => continue,
+            }
+        }
+        let err = session.metrics().unwrap_err();
+        assert_eq!(err, ApiError::Stopped);
     }
 }

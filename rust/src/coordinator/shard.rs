@@ -3,32 +3,50 @@
 //!
 //! A shard owns everything one job kind needs — its shared runtime-data
 //! repository, its generation-cached trained model, and its RNG stream —
-//! and nothing else, so distinct kinds never contend. Both deployment
-//! shapes drive the same shard code: the sequential [`super::Coordinator`]
+//! and nothing else, so distinct kinds never contend. Every deployment
+//! shape drives the same shard code: the sequential [`super::Coordinator`]
 //! holds plain shards, the multi-worker [`super::service`] wraps each in
 //! a mutex and lets any worker thread serve any shard with its own model
 //! engine.
 //!
-//! **Generation-cached models:** a trained model is tagged with the repo
-//! [`generation`](crate::repo::RuntimeDataRepo::generation) it was
-//! trained at. The shard retrains only when the generation advanced past
-//! the retrain threshold — merging already-known data does not move the
-//! generation, so redundant sharing can never trigger redundant training
-//! (observable through [`Metrics::retrains`] / [`Metrics::cache_hits`]).
+//! **Write-maintained models, read-only serving.** The protocol's
+//! read/write split ([`crate::api`]) is realized here:
+//!
+//! * **Writes** ([`JobShard::submit`], [`JobShard::share`],
+//!   [`JobShard::contribute_record`]) mutate the repository and then
+//!   [`JobShard::refresh_model`] — retraining via dynamic selection
+//!   (§V-C) only when the repo
+//!   [`generation`](crate::repo::RuntimeDataRepo::generation) advanced
+//!   past the retrain threshold since the cached model was trained.
+//!   Merging already-known data does not move the generation, so
+//!   redundant sharing can never trigger redundant training (observable
+//!   through [`Metrics::retrains`]).
+//! * **Reads** ([`JobShard::recommend`], [`JobShard::snapshot`]) never
+//!   train and never mutate: they serve the model the last write left
+//!   behind. `Submit` decides through the *same* cached model (counted
+//!   in [`Metrics::cache_hits`]), which is what makes a read-only
+//!   `Recommend` decision-bitwise-equal to the decision inside `Submit`.
+//!
+//! [`ModelSnapshot`] is the immutable export of a shard's read state:
+//! the concurrent service publishes one `Arc<ModelSnapshot>` per shard
+//! after every write and serves `Recommend`/`SnapshotInfo` from it
+//! without touching the shard mutex.
 
+use crate::api::{ApiError, Contribution, Recommendation, SnapshotInfo, API_VERSION};
 use crate::baselines::{ConfigSearch, NaiveMax};
 use crate::cloud::Cloud;
-use crate::configurator::{Configurator, JobRequest};
+use crate::configurator::{ClusterChoice, Configurator, JobRequest};
 use crate::coordinator::{JobOutcome, Metrics, Organization};
 use crate::models::oracle::SimOracle;
 use crate::models::selection::{select_and_train, SelectionReport};
-use crate::models::{EngineBound, ModelKind, ModelTrainer, TrainedModel};
+use crate::models::{EngineBound, ModelKind, ModelTrainer, QueryBatch, TrainedModel};
 use crate::repo::sampling::sampled_repo;
 use crate::repo::{RuntimeDataRepo, RuntimeRecord};
 use crate::util::rng::Pcg32;
 use crate::workloads::JobKind;
 use anyhow::{Context, Result};
 use std::collections::BTreeSet;
+use std::sync::Arc;
 
 /// Retrain/cold-start policy knobs shared by every shard of a deployment.
 #[derive(Debug, Clone)]
@@ -54,18 +72,163 @@ impl Default for ShardPolicy {
 }
 
 /// A trained model tagged with the repo generation it was trained at.
-#[derive(Debug)]
+/// Shards hold it behind an `Arc` so publishing a snapshot is a
+/// reference-count bump, not a copy of the padded training matrices.
+#[derive(Debug, Clone)]
 pub struct CachedModel {
     pub trained_at_gen: u64,
     pub model: TrainedModel,
     pub report: SelectionReport,
 }
 
+/// Immutable export of a shard's read state: everything `Recommend` and
+/// `SnapshotInfo` need, detached from the shard itself. The concurrent
+/// service publishes one `Arc<ModelSnapshot>` per shard after every
+/// write; reads clone the `Arc` and never take the shard mutex.
+#[derive(Debug, Clone)]
+pub struct ModelSnapshot {
+    pub job: JobKind,
+    /// Records in the shared repository at publish time.
+    pub records: usize,
+    /// Repository generation at publish time (the snapshot's "stamp").
+    pub generation: u64,
+    /// The cached model, if the write path has trained one (shared
+    /// with the owning shard — never copied on publish).
+    pub model: Option<Arc<CachedModel>>,
+    /// Machine types observed in the shared data, sorted — the candidate
+    /// axis recommendations are restricted to (black-box models
+    /// interpolate; they don't leap across unmeasured memory
+    /// configurations).
+    pub observed_machines: Vec<String>,
+}
+
+impl ModelSnapshot {
+    /// An empty snapshot for a cold shard.
+    pub fn empty(job: JobKind) -> ModelSnapshot {
+        ModelSnapshot {
+            job,
+            records: 0,
+            generation: 0,
+            model: None,
+            observed_machines: Vec::new(),
+        }
+    }
+
+    /// Protocol description of this snapshot.
+    pub fn info(&self) -> SnapshotInfo {
+        SnapshotInfo {
+            api_version: API_VERSION,
+            job: self.job,
+            records: self.records,
+            generation: self.generation,
+            trained_at_generation: self.model.as_ref().map(|m| m.trained_at_gen),
+            model: self.model.as_ref().map(|m| m.model.kind),
+            observed_machines: self.observed_machines.clone(),
+        }
+    }
+
+    /// Serve one read-only recommendation from this snapshot.
+    pub fn recommend(
+        &self,
+        engine: &mut dyn ModelTrainer,
+        cloud: &Cloud,
+        policy: &ShardPolicy,
+        request: &JobRequest,
+    ) -> Result<Recommendation, ApiError> {
+        let mut out = self.recommend_batch(engine, cloud, policy, std::slice::from_ref(request));
+        out.pop().expect("one result per request")
+    }
+
+    /// Serve several same-kind read-only recommendations from this
+    /// snapshot, scoring **all candidates of all requests as one
+    /// coalesced predict batch**. Each request's decision goes through
+    /// [`Configurator::choose`], so results are bitwise-identical to
+    /// serving the requests one by one (both production engines score
+    /// candidate rows independently).
+    pub fn recommend_batch(
+        &self,
+        engine: &mut dyn ModelTrainer,
+        cloud: &Cloud,
+        policy: &ShardPolicy,
+        requests: &[JobRequest],
+    ) -> Vec<Result<Recommendation, ApiError>> {
+        let Some(cached) = &self.model else {
+            return requests
+                .iter()
+                .map(|_| {
+                    Err(ApiError::ColdStart {
+                        job: self.job,
+                        records: self.records,
+                        min_records: policy.min_records,
+                    })
+                })
+                .collect();
+        };
+        let configurator =
+            Configurator::new(cloud).with_machines(self.observed_machines.clone());
+        let pairs = configurator.enumerate();
+        if pairs.is_empty() {
+            let err = ApiError::Internal("empty candidate catalog".to_string());
+            return requests.iter().map(|_| Err(err.clone())).collect();
+        }
+        let batches: Vec<QueryBatch> = requests
+            .iter()
+            .map(|r| QueryBatch::from_candidates(cloud, &pairs, &r.spec.job_features()))
+            .collect();
+        let combined = QueryBatch::concat(&batches);
+        let runtimes = match engine.predict_batch(&cached.model, cloud, &combined) {
+            Ok(r) => r,
+            Err(e) => {
+                let err = ApiError::internal(e);
+                return requests.iter().map(|_| Err(err.clone())).collect();
+            }
+        };
+        requests
+            .iter()
+            .enumerate()
+            .map(|(i, request)| {
+                let chunk = &runtimes[i * pairs.len()..(i + 1) * pairs.len()];
+                let choice = configurator
+                    .choose(request, &pairs, chunk)
+                    .expect("pairs nonempty");
+                Ok(Recommendation {
+                    job: self.job,
+                    choice,
+                    model_used: cached.model.kind,
+                    generation: self.generation,
+                    trained_at_generation: cached.trained_at_gen,
+                })
+            })
+            .collect()
+    }
+}
+
+/// Score every candidate with a trained model and decide — the one
+/// decision path shared by `Submit` (inside the shard lock) and
+/// `Recommend` (from an immutable snapshot), so the two are
+/// decision-bitwise-equal by construction.
+pub(crate) fn decide_with_model(
+    engine: &mut dyn ModelTrainer,
+    cloud: &Cloud,
+    model: &TrainedModel,
+    observed_machines: &[String],
+    request: &JobRequest,
+) -> Result<ClusterChoice> {
+    let mut bound = EngineBound {
+        engine,
+        model: model.clone(),
+    };
+    let configurator = Configurator::new(cloud).with_machines(observed_machines.to_vec());
+    configurator
+        .configure(&mut bound, request)?
+        .context("empty catalog")
+}
+
 /// Per-job-kind state: repository + generation-cached model + RNG stream.
 pub struct JobShard {
     job: JobKind,
     repo: RuntimeDataRepo,
-    model: Option<CachedModel>,
+    model: Option<Arc<CachedModel>>,
     rng: Pcg32,
 }
 
@@ -104,17 +267,75 @@ impl JobShard {
         self.model.as_ref().map(|m| &m.report)
     }
 
+    /// Machine types observed in the shared data, sorted.
+    pub fn observed_machines(&self) -> Vec<String> {
+        let set: BTreeSet<String> = self
+            .repo
+            .records()
+            .iter()
+            .map(|r| r.machine.clone())
+            .collect();
+        set.into_iter().collect()
+    }
+
+    /// Protocol description of the shard's read state (metadata only).
+    pub fn snapshot_info(&self) -> SnapshotInfo {
+        SnapshotInfo {
+            api_version: API_VERSION,
+            job: self.job,
+            records: self.repo.len(),
+            generation: self.repo.generation(),
+            trained_at_generation: self.trained_at_generation(),
+            model: self.model.as_ref().map(|m| m.model.kind),
+            observed_machines: self.observed_machines(),
+        }
+    }
+
+    /// Immutable export of the read state (see [`ModelSnapshot`]).
+    pub fn snapshot(&self) -> ModelSnapshot {
+        ModelSnapshot {
+            job: self.job,
+            records: self.repo.len(),
+            generation: self.repo.generation(),
+            model: self.model.clone(),
+            observed_machines: self.observed_machines(),
+        }
+    }
+
     /// Merge shared runtime data into the shard's repository. Returns
-    /// records actually added (== generation advance).
+    /// records actually added (== generation advance). Write path: the
+    /// caller follows up with [`JobShard::refresh_model`].
     pub fn share(&mut self, other: &RuntimeDataRepo) -> Result<usize> {
         self.repo.merge(other).map_err(anyhow::Error::msg)
     }
 
-    /// Ensure a generation-fresh model: retrain via dynamic selection
-    /// only when the repo generation advanced by `retrain_every` since
-    /// the cached model was trained. Returns the active model kind, or
-    /// `None` below the cold-start threshold.
-    pub fn ensure_model(
+    /// Record one externally-observed run. Write path: the caller
+    /// follows up with [`JobShard::refresh_model`].
+    pub fn contribute_record(&mut self, record: RuntimeRecord) -> Result<Contribution, ApiError> {
+        if record.job != self.job {
+            return Err(ApiError::InvalidRequest(format!(
+                "{} record routed to {} shard",
+                record.job.name(),
+                self.job.name()
+            )));
+        }
+        self.repo
+            .contribute(record)
+            .map_err(ApiError::InvalidRequest)?;
+        Ok(Contribution {
+            job: self.job,
+            added: 1,
+            generation: self.repo.generation(),
+        })
+    }
+
+    /// Write-path model maintenance: retrain via dynamic selection when
+    /// the repo generation advanced by `retrain_every` since the cached
+    /// model was trained (or no model exists yet and the cold-start
+    /// threshold is met). Returns the active model kind, or `None` below
+    /// the threshold. Reads never call this — they serve whatever model
+    /// the last write left behind.
+    pub fn refresh_model(
         &mut self,
         engine: &mut dyn ModelTrainer,
         cloud: &Cloud,
@@ -140,21 +361,54 @@ impl JobShard {
             };
             let (model, report) =
                 select_and_train(engine, cloud, &train_repo, policy.cv_folds, gen)?;
-            self.model = Some(CachedModel {
+            self.model = Some(Arc::new(CachedModel {
                 trained_at_gen: gen,
                 model,
                 report,
-            });
+            }));
             metrics.retrains += 1;
-        } else {
-            metrics.cache_hits += 1;
         }
         Ok(self.model.as_ref().map(|m| m.model.kind))
     }
 
-    /// Full submission loop for one job request: ensure model → decide
-    /// configuration (all candidates scored as one featurized batch) →
-    /// provision + run → contribute the measurement → account metrics.
+    /// Read-only recommendation straight off the shard (the sequential
+    /// deployments' path; the service uses [`ModelSnapshot::recommend`]
+    /// on the published snapshot — same decision code either way).
+    pub fn recommend(
+        &self,
+        engine: &mut dyn ModelTrainer,
+        cloud: &Cloud,
+        policy: &ShardPolicy,
+        request: &JobRequest,
+    ) -> Result<Recommendation, ApiError> {
+        let Some(cached) = &self.model else {
+            return Err(ApiError::ColdStart {
+                job: self.job,
+                records: self.repo.len(),
+                min_records: policy.min_records,
+            });
+        };
+        let choice = decide_with_model(
+            engine,
+            cloud,
+            &cached.model,
+            &self.observed_machines(),
+            request,
+        )
+        .map_err(ApiError::internal)?;
+        Ok(Recommendation {
+            job: self.job,
+            choice,
+            model_used: cached.model.kind,
+            generation: self.repo.generation(),
+            trained_at_generation: cached.trained_at_gen,
+        })
+    }
+
+    /// Full submission loop for one job request: decide a configuration
+    /// from the cached model (or the cold-start fallback) → provision +
+    /// run → contribute the measurement → refresh the model → account
+    /// metrics.
     pub fn submit(
         &mut self,
         engine: &mut dyn ModelTrainer,
@@ -165,35 +419,25 @@ impl JobShard {
         request: &JobRequest,
     ) -> Result<JobOutcome> {
         debug_assert_eq!(request.kind(), self.job, "request routed to wrong shard");
-        let model_used = self.ensure_model(engine, cloud, policy, metrics)?;
 
-        // 1) decide a configuration
-        let (machine, scaleout, predicted, choice) = match model_used {
-            Some(_) => {
-                let jm = self.model.as_ref().expect("ensured");
-                // candidates only over machine types present in the
-                // shared data: the models interpolate, they don't leap
-                // across unmeasured memory configurations
-                let observed: BTreeSet<String> = self
-                    .repo
-                    .records()
-                    .iter()
-                    .map(|r| r.machine.clone())
-                    .collect();
-                let mut bound = EngineBound {
-                    engine: &mut *engine,
-                    model: jm.model.clone(),
-                };
-                let configurator =
-                    Configurator::new(cloud).with_machines(observed.into_iter().collect());
-                let choice = configurator
-                    .configure(&mut bound, request)?
-                    .context("empty catalog")?;
+        // 1) decide a configuration — from the write-maintained cached
+        //    model, exactly as a read-only `Recommend` would
+        let (machine, scaleout, predicted, choice, model_used) = match &self.model {
+            Some(cached) => {
+                let choice = decide_with_model(
+                    &mut *engine,
+                    cloud,
+                    &cached.model,
+                    &self.observed_machines(),
+                    request,
+                )?;
+                metrics.cache_hits += 1;
                 (
                     choice.machine_type.clone(),
                     choice.node_count,
                     choice.predicted_runtime_s,
                     Some(choice),
+                    Some(cached.model.kind),
                 )
             }
             None => {
@@ -201,7 +445,7 @@ impl JobShard {
                 let mut oracle = SimOracle::new(self.job, self.rng.next_u64());
                 let out = NaiveMax::default().search(cloud, &mut oracle, request)?;
                 metrics.fallbacks += 1;
-                (out.machine, out.scaleout, f64::NAN, None)
+                (out.machine, out.scaleout, f64::NAN, None, None)
             }
         };
 
@@ -230,7 +474,10 @@ impl JobShard {
         // dedup happens when repos are exchanged between parties
         self.repo.contribute(record).map_err(anyhow::Error::msg)?;
 
-        // 4) metrics
+        // 4) the write maintains the model the reads are served from
+        self.refresh_model(engine, cloud, policy, metrics)?;
+
+        // 5) metrics
         let met_target = request.target_s.map_or(true, |t| actual <= t);
         metrics.submissions += 1;
         metrics.total_cost_usd += cost;
@@ -266,6 +513,7 @@ impl JobShard {
 mod tests {
     use super::*;
     use crate::models::Engine;
+    use crate::workloads::ExperimentGrid;
 
     #[test]
     fn cold_shard_has_no_model_and_no_report() {
@@ -274,20 +522,155 @@ mod tests {
         assert!(shard.trained_at_generation().is_none());
         assert!(shard.selection_report().is_none());
         assert!(shard.repo().is_empty());
+        let snap = shard.snapshot();
+        assert_eq!(snap.records, 0);
+        assert!(snap.model.is_none());
+        assert!(snap.observed_machines.is_empty());
     }
 
     #[test]
-    fn ensure_model_respects_cold_start_threshold() {
+    fn refresh_model_respects_cold_start_threshold() {
         let cloud = Cloud::aws_like();
         let mut shard = JobShard::new(JobKind::Sort, 2);
         let mut engine = Engine::native();
         let mut metrics = Metrics::default();
         let policy = ShardPolicy::default();
         let kind = shard
-            .ensure_model(&mut engine, &cloud, &policy, &mut metrics)
+            .refresh_model(&mut engine, &cloud, &policy, &mut metrics)
             .unwrap();
         assert!(kind.is_none(), "empty shard must not train");
         assert_eq!(metrics.retrains, 0);
         assert_eq!(metrics.cache_hits, 0);
+    }
+
+    #[test]
+    fn cold_recommend_is_a_typed_error_not_a_fallback() {
+        let cloud = Cloud::aws_like();
+        let shard = JobShard::new(JobKind::Sort, 3);
+        let mut engine = Engine::native();
+        let policy = ShardPolicy::default();
+        let err = shard
+            .recommend(&mut engine, &cloud, &policy, &JobRequest::sort(10.0))
+            .unwrap_err();
+        match err {
+            ApiError::ColdStart {
+                job,
+                records,
+                min_records,
+            } => {
+                assert_eq!(job, JobKind::Sort);
+                assert_eq!(records, 0);
+                assert_eq!(min_records, policy.min_records);
+            }
+            other => panic!("expected ColdStart, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn snapshot_recommend_matches_shard_recommend_bitwise() {
+        let cloud = Cloud::aws_like();
+        let grid = ExperimentGrid {
+            experiments: ExperimentGrid::paper_table1()
+                .experiments
+                .into_iter()
+                .filter(|e| e.spec.kind() == JobKind::Sort)
+                .collect(),
+            repetitions: 1,
+        };
+        let repo = grid.execute(&cloud, 5).repo_for(JobKind::Sort);
+        let mut shard = JobShard::new(JobKind::Sort, 4);
+        let mut engine = Engine::native();
+        let mut metrics = Metrics::default();
+        let policy = ShardPolicy::default();
+        shard.share(&repo).unwrap();
+        shard
+            .refresh_model(&mut engine, &cloud, &policy, &mut metrics)
+            .unwrap()
+            .expect("corpus exceeds cold-start threshold");
+
+        let request = JobRequest::sort(14.5).with_target_seconds(700.0);
+        let direct = shard
+            .recommend(&mut engine, &cloud, &policy, &request)
+            .unwrap();
+        let snap = shard.snapshot();
+        let via_snapshot = snap
+            .recommend(&mut engine, &cloud, &policy, &request)
+            .unwrap();
+        assert_eq!(direct.choice.machine_type, via_snapshot.choice.machine_type);
+        assert_eq!(direct.choice.node_count, via_snapshot.choice.node_count);
+        assert_eq!(
+            direct.choice.predicted_runtime_s.to_bits(),
+            via_snapshot.choice.predicted_runtime_s.to_bits()
+        );
+        assert_eq!(direct.generation, via_snapshot.generation);
+        assert_eq!(
+            direct.trained_at_generation,
+            via_snapshot.trained_at_generation
+        );
+
+        // coalescing several requests into one predict batch must not
+        // change any individual decision
+        let requests = [
+            request.clone(),
+            JobRequest::sort(11.0),
+            JobRequest::sort(19.0).with_target_seconds(300.0),
+        ];
+        let coalesced = snap.recommend_batch(&mut engine, &cloud, &policy, &requests);
+        let first = coalesced[0].as_ref().unwrap();
+        assert_eq!(
+            first.choice.predicted_runtime_s.to_bits(),
+            via_snapshot.choice.predicted_runtime_s.to_bits()
+        );
+        for (req, result) in requests.iter().zip(&coalesced) {
+            let one = snap.recommend(&mut engine, &cloud, &policy, req).unwrap();
+            let many = result.as_ref().unwrap();
+            assert_eq!(one.choice.machine_type, many.choice.machine_type);
+            assert_eq!(one.choice.node_count, many.choice.node_count);
+            assert_eq!(
+                one.choice.predicted_runtime_s.to_bits(),
+                many.choice.predicted_runtime_s.to_bits()
+            );
+        }
+    }
+
+    #[test]
+    fn contribute_record_rejects_cross_kind_and_invalid() {
+        let mut shard = JobShard::new(JobKind::Sort, 6);
+        let grep = RuntimeRecord {
+            job: JobKind::Grep,
+            org: "o".into(),
+            machine: "m5.xlarge".into(),
+            scaleout: 4,
+            job_features: vec![10.0, 0.1],
+            runtime_s: 100.0,
+        };
+        assert!(matches!(
+            shard.contribute_record(grep),
+            Err(ApiError::InvalidRequest(_))
+        ));
+        let bad_runtime = RuntimeRecord {
+            job: JobKind::Sort,
+            org: "o".into(),
+            machine: "m5.xlarge".into(),
+            scaleout: 4,
+            job_features: vec![10.0],
+            runtime_s: -1.0,
+        };
+        assert!(matches!(
+            shard.contribute_record(bad_runtime),
+            Err(ApiError::InvalidRequest(_))
+        ));
+        let good = RuntimeRecord {
+            job: JobKind::Sort,
+            org: "o".into(),
+            machine: "m5.xlarge".into(),
+            scaleout: 4,
+            job_features: vec![10.0],
+            runtime_s: 100.0,
+        };
+        let c = shard.contribute_record(good).unwrap();
+        assert_eq!(c.added, 1);
+        assert_eq!(c.generation, 1);
+        assert_eq!(shard.repo().len(), 1);
     }
 }

@@ -13,6 +13,33 @@
 //! configuration (machine type × scale-out) that meets a runtime target —
 //! without any profiling runs.
 //!
+//! ## The protocol and its read/write split
+//!
+//! All serving goes through one **typed, versioned protocol** ([`api`]):
+//! a [`Request`](api::Request)/[`Response`](api::Response) pair with a
+//! structured [`ApiError`](api::ApiError) taxonomy, behind the
+//! deployment-agnostic [`Client`](api::Client) trait. The protocol
+//! mirrors the paper's asymmetry — many cheap reads, few writes:
+//!
+//! * **Reads** — `Recommend` (the configurator step as a standalone
+//!   query: score all candidates, return the decision, run nothing),
+//!   `SnapshotInfo`, `Metrics`. Reads never train or mutate.
+//! * **Writes** — `Submit` (decide → provision + run → contribute),
+//!   `Contribute` (record an externally-observed run), `Share`
+//!   (bulk-merge a repository). Writes refresh the generation-stamped
+//!   model that reads are served from.
+//!
+//! Three deployments implement [`Client`](api::Client) with identical
+//! decisions on identical inputs: the sequential
+//! [`Coordinator`](coordinator::Coordinator), the ordered single-worker
+//! [`session`](coordinator::session), and the concurrent
+//! [`service`](coordinator::service) — where the split becomes a locking
+//! discipline: writes take their shard's mutex, while reads are served
+//! lock-free from published immutable
+//! [`ModelSnapshot`](coordinator::shard::ModelSnapshot)s (with
+//! cross-request coalescing of same-kind `Recommend` batches and
+//! pipelined `submit_nowait` tickets).
+//!
 //! ## Layer map
 //!
 //! * **L3 (this crate)** — the coordination system: simulated cloud
@@ -21,13 +48,9 @@
 //!   counter** that keys all model caching), prediction models
 //!   ([`models`]), cluster configurator ([`configurator`], which scores
 //!   every `machine × scaleout` candidate of a request as **one
-//!   featurized batch**), search/model baselines ([`baselines`]), and the
-//!   sharded multi-org collaboration runtime ([`coordinator`]):
-//!   per-job-kind shards with generation-cached models, served either
-//!   sequentially ([`coordinator::Coordinator`]), by a single-owner
-//!   worker thread ([`coordinator::session`]), or by the concurrent
-//!   multi-worker service with per-request reply channels
-//!   ([`coordinator::service`]).
+//!   featurized batch**), search/model baselines ([`baselines`]), the
+//!   public protocol ([`api`]), and the sharded multi-org collaboration
+//!   runtime ([`coordinator`]).
 //! * **L2 (python/compile/model.py)** — JAX graphs for the prediction
 //!   models, AOT-lowered to HLO text in `artifacts/`.
 //! * **L1 (python/compile/kernels/knn.py)** — Pallas kernel for the
@@ -47,6 +70,7 @@
 // would obscure the column/row correspondence with the XLA graphs.
 #![allow(clippy::needless_range_loop)]
 
+pub mod api;
 pub mod baselines;
 pub mod cloud;
 pub mod configurator;
@@ -61,11 +85,15 @@ pub mod workloads;
 
 /// Convenience re-exports of the most commonly used types.
 pub mod prelude {
+    pub use crate::api::{
+        ApiError, Client, Contribution, Recommendation, Request, Response, SnapshotInfo,
+        API_VERSION,
+    };
     pub use crate::cloud::{Cloud, MachineType};
     pub use crate::configurator::{ClusterChoice, Configurator, JobRequest};
     pub use crate::coordinator::{
-        Coordinator, CoordinatorService, JobOutcome, Organization, ServiceClient, ServiceConfig,
-        ShardPolicy,
+        Coordinator, CoordinatorService, JobOutcome, ModelSnapshot, Organization, ServiceClient,
+        ServiceConfig, ShardPolicy, SubmitTicket,
     };
     pub use crate::models::{
         ConfigQuery, Engine, ModelKind, ModelTrainer, Predictor, QueryBatch, RuntimeModel,

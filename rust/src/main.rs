@@ -4,19 +4,25 @@
 //! c3o corpus     [--seed N] [--out DIR]        generate the 930-run corpus CSVs
 //! c3o figures    [--seed N]                    regenerate Table I + Figs 3–7
 //! c3o table1 | fig3 | fig4 | fig5 | fig6 | fig7
-//! c3o configure  --job J [job args] [--target S] [--seed N]
+//! c3o configure  --job J [job args] [--target S] [--seed N] [--json]
+//! c3o recommend  --job J [job args] [--target S] [--seed N] [--json]
+//! c3o contribute --job J [job args] --machine M --scaleout N --runtime-s T
+//!                [--org NAME] [--data DIR] [--json]
 //! c3o e2e        [--jobs N] [--seed N]         collaborative end-to-end demo
 //! c3o serve      [--workers N] [--clients N] [--jobs N] [--seed N]
 //!                                              sharded multi-org service demo
 //! ```
 //!
 //! Argument parsing is hand-rolled (clap is not in the offline vendor
-//! set): `--key value` pairs after the subcommand.
+//! set): `--key value` pairs after the subcommand; a `--key` followed by
+//! another `--flag` (or the end of the line) is a boolean switch.
 
+use c3o::api::ApiError;
 use c3o::cloud::Cloud;
 use c3o::configurator::JobRequest;
 use c3o::coordinator::{Coordinator, CoordinatorService, Organization, ServiceConfig};
 use c3o::figures;
+use c3o::repo::{RuntimeDataRepo, RuntimeRecord};
 use c3o::runtime::Runtime;
 use c3o::workloads::{ExperimentGrid, JobKind, JobSpec};
 use std::collections::HashMap;
@@ -29,6 +35,12 @@ struct Args {
     flags: HashMap<String, String>,
 }
 
+/// Flags that are boolean switches: `--json` alone means `true`. Every
+/// other flag still requires a value, so a forgotten value (e.g.
+/// `--org --machine ...`) stays a hard error instead of silently
+/// becoming the string "true".
+const SWITCHES: &[&str] = &["json"];
+
 impl Args {
     fn parse(argv: &[String]) -> Result<Args, String> {
         let mut flags = HashMap::new();
@@ -36,16 +48,27 @@ impl Args {
         while i < argv.len() {
             let a = &argv[i];
             if let Some(key) = a.strip_prefix("--") {
-                let val = argv
-                    .get(i + 1)
-                    .ok_or_else(|| format!("--{key} needs a value"))?;
-                flags.insert(key.to_string(), val.clone());
-                i += 2;
+                match argv.get(i + 1) {
+                    Some(v) if !v.starts_with("--") => {
+                        flags.insert(key.to_string(), v.clone());
+                        i += 2;
+                    }
+                    _ if SWITCHES.contains(&key) => {
+                        flags.insert(key.to_string(), "true".to_string());
+                        i += 1;
+                    }
+                    _ => return Err(format!("--{key} needs a value")),
+                }
             } else {
                 return Err(format!("unexpected argument {a:?}"));
             }
         }
         Ok(Args { flags })
+    }
+
+    /// Boolean switch: present (with no value or `true`) ⇒ on.
+    fn switch(&self, key: &str) -> bool {
+        matches!(self.flags.get(key).map(String::as_str), Some("true") | Some("1"))
     }
 
     fn get<T: std::str::FromStr>(&self, key: &str) -> Result<Option<T>, String> {
@@ -74,7 +97,14 @@ USAGE:
                  --job sgd      --data-gb X --iters I
                  --job kmeans   --data-gb X --k K [--conv C]
                  --job pagerank --graph-mb X [--conv C]
-                 [--target SECONDS] [--seed N]
+                 [--target SECONDS] [--seed N] [--json]
+                                              full loop: decide + run + contribute
+  c3o recommend  --job J [job args as above] [--target SECONDS] [--seed N] [--json]
+                                              read-only: score candidates, run nothing
+  c3o contribute --job J [job args as above] --machine M --scaleout N --runtime-s T
+                 [--org NAME] [--data DIR] [--json]
+                                              record an externally-observed run
+                                              into DIR/<job>.csv (default data/)
   c3o e2e        [--jobs N] [--seed N]        collaborative end-to-end demo
   c3o serve      [--workers N] [--clients N] [--jobs N] [--seed N]
                                               sharded multi-org service demo
@@ -132,6 +162,8 @@ fn run(cmd: &str, rest: &[String]) -> Result<(), String> {
             Ok(())
         }
         "configure" => cmd_configure(&cloud, &args, seed),
+        "recommend" => cmd_recommend(&cloud, &args, seed),
+        "contribute" => cmd_contribute(&cloud, &args),
         "e2e" => cmd_e2e(&cloud, &args, seed),
         "serve" => cmd_serve(&cloud, &args, seed),
         "help" | "--help" | "-h" => {
@@ -183,33 +215,54 @@ fn spec_from_args(args: &Args) -> Result<JobSpec, String> {
     })
 }
 
-fn cmd_configure(cloud: &Cloud, args: &Args, seed: u64) -> Result<(), String> {
+/// Build the shared corpus slice for one job kind (what other
+/// organizations have contributed) — the data both `configure` and
+/// `recommend` are served from.
+fn shared_corpus_for(cloud: &Cloud, kind: JobKind, seed: u64) -> RuntimeDataRepo {
+    let grid = ExperimentGrid {
+        experiments: ExperimentGrid::paper_table1()
+            .experiments
+            .into_iter()
+            .filter(|e| e.spec.kind() == kind)
+            .collect(),
+        repetitions: 5,
+    };
+    grid.execute(cloud, seed).repo_for(kind)
+}
+
+fn request_from_args(args: &Args) -> Result<JobRequest, String> {
     let spec = spec_from_args(args)?;
-    let mut request = JobRequest::new(spec.clone());
+    let mut request = JobRequest::new(spec);
     if let Some(t) = args.get::<f64>("target")? {
         request = request.with_target_seconds(t);
     }
+    Ok(request)
+}
+
+fn api_err(e: ApiError) -> String {
+    e.to_string()
+}
+
+fn cmd_configure(cloud: &Cloud, args: &Args, seed: u64) -> Result<(), String> {
+    let request = request_from_args(args)?;
+    let spec = request.spec.clone();
     let dir = Runtime::default_dir();
     if !Runtime::artifacts_available(&dir) {
         eprintln!("note: PJRT artifacts not built — serving with native models");
     }
 
     eprintln!("building shared corpus for {}...", spec.kind().name());
-    let grid = ExperimentGrid {
-        experiments: ExperimentGrid::paper_table1()
-            .experiments
-            .into_iter()
-            .filter(|e| e.spec.kind() == spec.kind())
-            .collect(),
-        repetitions: 5,
-    };
-    let repo = grid.execute(cloud, seed).repo_for(spec.kind());
+    let repo = shared_corpus_for(cloud, spec.kind(), seed);
 
-    let mut coord = Coordinator::new(cloud.clone(), &dir, seed).map_err(|e| format!("{e:#}"))?;
-    coord.share(&repo).map_err(|e| format!("{e:#}"))?;
+    let mut coord = Coordinator::new(cloud.clone(), &dir, seed).map_err(api_err)?;
+    coord.share(&repo).map_err(api_err)?;
     let org = Organization::new("cli-user");
-    let outcome = coord.submit(&org, &request).map_err(|e| format!("{e:#}"))?;
+    let outcome = coord.submit(&org, &request).map_err(api_err)?;
 
+    if args.switch("json") {
+        println!("{}", outcome.to_json().pretty());
+        return Ok(());
+    }
     println!("job:        {} {:?}", spec.kind().name(), spec.job_features());
     if let Some(t) = request.target_s {
         println!("target:     {t:.0} s");
@@ -237,6 +290,114 @@ fn cmd_configure(cloud: &Cloud, args: &Args, seed: u64) -> Result<(), String> {
     Ok(())
 }
 
+/// Read-only recommendation: the configurator step as a standalone
+/// query. Scores every candidate and prints the decision — provisions
+/// nothing, runs nothing, contributes nothing. `--json` emits the full
+/// `Recommendation` (decision + all scored candidates) for scripting.
+fn cmd_recommend(cloud: &Cloud, args: &Args, seed: u64) -> Result<(), String> {
+    let request = request_from_args(args)?;
+    let kind = request.kind();
+    let dir = Runtime::default_dir();
+    if !Runtime::artifacts_available(&dir) {
+        eprintln!("note: PJRT artifacts not built — serving with native models");
+    }
+
+    eprintln!("building shared corpus for {}...", kind.name());
+    let repo = shared_corpus_for(cloud, kind, seed);
+
+    let mut coord = Coordinator::new(cloud.clone(), &dir, seed).map_err(api_err)?;
+    coord.share(&repo).map_err(api_err)?;
+    let rec = coord.recommend(&request).map_err(api_err)?;
+
+    if args.switch("json") {
+        println!("{}", rec.to_json().pretty());
+        return Ok(());
+    }
+    println!("job:        {} {:?}", kind.name(), request.spec.job_features());
+    if let Some(t) = request.target_s {
+        println!("target:     {t:.0} s");
+    }
+    println!(
+        "model:      {} (trained at generation {}, serving generation {})",
+        rec.model_used.name(),
+        rec.trained_at_generation,
+        rec.generation
+    );
+    println!("choice:     {} x{}", rec.choice.machine_type, rec.choice.node_count);
+    println!("predicted:  {:.1} s", rec.choice.predicted_runtime_s);
+    println!("est. cost:  ${:.3}", rec.choice.expected_cost_usd);
+    println!("met target: {}", rec.choice.meets_target);
+    println!(
+        "candidates: {} scored (cheapest meeting the target wins)",
+        rec.choice.candidates.len()
+    );
+    Ok(())
+}
+
+/// Record an externally-observed run into the on-disk shared repository
+/// (`DIR/<job>.csv`) — the capture-and-share step of Fig. 1 for runs
+/// executed outside this tool, e.g. on a cluster `c3o recommend` picked.
+fn cmd_contribute(cloud: &Cloud, args: &Args) -> Result<(), String> {
+    let spec = spec_from_args(args)?;
+    let kind = spec.kind();
+    let machine: String = args
+        .get::<String>("machine")?
+        .ok_or("--machine is required".to_string())?;
+    if cloud.machine(&machine).is_none() {
+        let known: Vec<&str> = cloud.machine_types().iter().map(|m| m.name.as_str()).collect();
+        return Err(format!(
+            "unknown machine type {machine:?} (catalog: {})",
+            known.join(", ")
+        ));
+    }
+    let scaleout: u32 = args
+        .get::<u32>("scaleout")?
+        .ok_or("--scaleout is required".to_string())?;
+    let runtime_s: f64 = args
+        .get::<f64>("runtime-s")?
+        .ok_or("--runtime-s is required".to_string())?;
+    let org: String = args.get_or("org", "cli-user".to_string())?;
+    let data_dir = PathBuf::from(args.get_or("data", "data".to_string())?);
+
+    let record = RuntimeRecord {
+        job: kind,
+        org,
+        machine,
+        scaleout,
+        job_features: spec.job_features(),
+        runtime_s,
+    };
+
+    // load-or-create the on-disk repository, route the record through
+    // the same contribute path a coordinator shard uses, save back
+    let path = data_dir.join(format!("{}.csv", kind.name()));
+    let mut repo = if path.exists() {
+        RuntimeDataRepo::load(kind, &path)?
+    } else {
+        RuntimeDataRepo::new(kind)
+    };
+    repo.contribute(record)
+        .map_err(|e| format!("invalid record: {e}"))?;
+    repo.save(&path).map_err(|e| e.to_string())?;
+
+    let contribution = c3o::api::Contribution {
+        job: kind,
+        added: 1,
+        generation: repo.generation(),
+    };
+    if args.switch("json") {
+        println!("{}", contribution.to_json().pretty());
+    } else {
+        println!(
+            "recorded 1 {} run ({} records total) -> {}",
+            kind.name(),
+            repo.len(),
+            path.display()
+        );
+    }
+    Ok(())
+}
+
 fn cmd_e2e(cloud: &Cloud, args: &Args, seed: u64) -> Result<(), String> {
     let jobs: usize = args.get_or("jobs", 10)?;
     let dir = Runtime::default_dir();
@@ -245,11 +406,9 @@ fn cmd_e2e(cloud: &Cloud, args: &Args, seed: u64) -> Result<(), String> {
     }
     eprintln!("seeding shared repositories from the 930-run corpus...");
     let corpus = ExperimentGrid::paper_table1().execute(cloud, seed);
-    let mut coord = Coordinator::new(cloud.clone(), &dir, seed).map_err(|e| format!("{e:#}"))?;
+    let mut coord = Coordinator::new(cloud.clone(), &dir, seed).map_err(api_err)?;
     for kind in JobKind::all() {
-        coord
-            .share(&corpus.repo_for(kind))
-            .map_err(|e| format!("{e:#}"))?;
+        coord.share(&corpus.repo_for(kind)).map_err(api_err)?;
     }
     let org = Organization::new("new-org");
     let requests = [
@@ -265,7 +424,7 @@ fn cmd_e2e(cloud: &Cloud, args: &Args, seed: u64) -> Result<(), String> {
     );
     for i in 0..jobs {
         let req = requests[i % requests.len()].clone();
-        let o = coord.submit(&org, &req).map_err(|e| format!("{e:#}"))?;
+        let o = coord.submit(&org, &req).map_err(api_err)?;
         println!(
             "{:<10} {:>12} {:>5} {:>10.1} {:>10.1} {:>7.1} {:>7}",
             o.job.name(),
@@ -316,10 +475,8 @@ fn cmd_serve(cloud: &Cloud, args: &Args, seed: u64) -> Result<(), String> {
             .with_artifacts_dir(Runtime::default_dir()),
     );
     for kind in JobKind::all() {
-        let added = service
-            .share(corpus.repo_for(kind))
-            .map_err(|e| format!("{e:#}"))?;
-        eprintln!("  {:>9}: {added} records shared", kind.name());
+        let shared = service.share(corpus.repo_for(kind)).map_err(api_err)?;
+        eprintln!("  {:>9}: {} records shared", kind.name(), shared.added);
     }
 
     let request_for = |i: usize| -> JobRequest {
@@ -333,7 +490,9 @@ fn cmd_serve(cloud: &Cloud, args: &Args, seed: u64) -> Result<(), String> {
         }
     };
 
-    eprintln!("{clients} client threads submitting {jobs} jobs through {workers} workers...");
+    eprintln!(
+        "{clients} client threads pipelining {jobs} jobs through {workers} workers..."
+    );
     let t0 = Instant::now();
     let errors: Vec<String> = std::thread::scope(|scope| {
         let mut handles = Vec::new();
@@ -342,12 +501,21 @@ fn cmd_serve(cloud: &Cloud, args: &Args, seed: u64) -> Result<(), String> {
             handles.push(scope.spawn(move || {
                 let org = Organization::new(&format!("org-{c}"));
                 let mut failures = Vec::new();
+                // pipeline: dispatch every request as a ticket up front,
+                // then collect the outcomes
+                let mut tickets = Vec::new();
                 let mut i = c;
                 while i < jobs {
-                    if let Err(e) = client.submit(&org, request_for(i)) {
-                        failures.push(format!("job {i}: {e:#}"));
+                    match client.submit_nowait(&org, request_for(i)) {
+                        Ok(ticket) => tickets.push((i, ticket)),
+                        Err(e) => failures.push(format!("job {i}: {e}")),
                     }
                     i += clients;
+                }
+                for (i, ticket) in tickets {
+                    if let Err(e) = ticket.wait() {
+                        failures.push(format!("job {i}: {e}"));
+                    }
                 }
                 failures
             }));
@@ -362,7 +530,7 @@ fn cmd_serve(cloud: &Cloud, args: &Args, seed: u64) -> Result<(), String> {
         return Err(format!("{} submissions failed; first: {first}", errors.len()));
     }
 
-    let m = service.metrics().map_err(|e| format!("{e:#}"))?;
+    let m = service.metrics().map_err(api_err)?;
     println!("jobs served:        {}", m.submissions);
     println!("wall clock:         {wall:.2} s");
     println!("throughput:         {:.1} submissions/s", jobs as f64 / wall);

@@ -113,6 +113,45 @@ impl QueryBatch {
         }
     }
 
+    /// Concatenate several batches (same column layout) into one matrix
+    /// for a single `predict_batch` execution — the service's
+    /// cross-request coalescing path: candidates of multiple same-kind
+    /// requests scored in one call.
+    ///
+    /// The batches may carry **different job features** (they share only
+    /// the column layout), so the concatenated batch is only valid for
+    /// backends that score `raw` directly. Both production backends
+    /// ([`Predictor`] and [`native::NativeEngine`]) do; the
+    /// [`QueryBatch::queries`] compatibility reconstruction is *not*
+    /// meaningful on a concatenated batch and must not be used on one.
+    ///
+    /// # Panics
+    /// Panics on an empty batch list or mismatched column counts.
+    pub fn concat(batches: &[QueryBatch]) -> QueryBatch {
+        assert!(!batches.is_empty(), "cannot concat zero batches");
+        let cols = batches[0].raw.cols;
+        let rows: usize = batches.iter().map(|b| b.raw.rows).sum();
+        let mut raw = MatF32::zeros(rows, cols);
+        let mut machines = Vec::with_capacity(rows);
+        let mut scaleouts = Vec::with_capacity(rows);
+        let mut r0 = 0;
+        for b in batches {
+            assert_eq!(b.raw.cols, cols, "mismatched feature layouts");
+            for r in 0..b.raw.rows {
+                raw.row_mut(r0 + r).copy_from_slice(b.raw.row(r));
+            }
+            machines.extend(b.machines.iter().cloned());
+            scaleouts.extend(b.scaleouts.iter().copied());
+            r0 += b.raw.rows;
+        }
+        QueryBatch {
+            job_features: batches[0].job_features.clone(),
+            machines,
+            scaleouts,
+            raw,
+        }
+    }
+
     pub fn len(&self) -> usize {
         self.machines.len()
     }
@@ -1113,6 +1152,26 @@ mod tests {
         assert!(mape < 40.0, "extrapolation MAPE {mape}%");
         // extrapolated runtimes must stay positive and finite
         assert!(preds.iter().all(|&t| t.is_finite() && t > 0.0));
+    }
+
+    #[test]
+    fn query_batch_concat_preserves_rows_bitwise() {
+        let cloud = Cloud::aws_like();
+        let pairs = vec![
+            ("m5.xlarge".to_string(), 2u32),
+            ("c5.xlarge".to_string(), 4u32),
+        ];
+        let a = QueryBatch::from_candidates(&cloud, &pairs, &[10.0]);
+        let b = QueryBatch::from_candidates(&cloud, &pairs, &[17.5]);
+        let both = QueryBatch::concat(&[a.clone(), b.clone()]);
+        assert_eq!(both.len(), a.len() + b.len());
+        assert_eq!(both.raw.rows, a.raw.rows + b.raw.rows);
+        for r in 0..a.raw.rows {
+            assert_eq!(both.raw.row(r), a.raw.row(r));
+            assert_eq!(both.raw.row(a.raw.rows + r), b.raw.row(r));
+        }
+        assert_eq!(both.machines[2], "m5.xlarge");
+        assert_eq!(both.scaleouts[3], 4);
     }
 
     #[test]

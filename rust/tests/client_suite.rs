@@ -1,0 +1,186 @@
+//! The deployment-agnostic protocol suite: one scenario written against
+//! `&mut dyn Client`, run verbatim against all three deployments — the
+//! sequential `Coordinator`, the ordered `Session`, and the concurrent
+//! `CoordinatorService` — which must produce **identical decisions (and
+//! identical simulated runs) on a fixed seed**. All three are forced
+//! onto the native model engines so the comparison is
+//! artifact-independent.
+
+use c3o::api::{ApiError, Client};
+use c3o::cloud::Cloud;
+use c3o::configurator::JobRequest;
+use c3o::coordinator::session::Session;
+use c3o::coordinator::{Coordinator, CoordinatorService, Organization, ServiceConfig};
+use c3o::models::Engine;
+use c3o::repo::RuntimeRecord;
+use c3o::workloads::{Corpus, ExperimentGrid, JobKind};
+use std::path::PathBuf;
+
+const SEED: u64 = 7;
+
+fn corpus(cloud: &Cloud) -> Corpus {
+    ExperimentGrid {
+        experiments: ExperimentGrid::paper_table1()
+            .experiments
+            .into_iter()
+            .filter(|e| matches!(e.spec.kind(), JobKind::Sort | JobKind::Grep))
+            .collect(),
+        repetitions: 1,
+    }
+    .execute(cloud, 11)
+}
+
+/// Everything decision-relevant one scenario step produced, bit-exact.
+#[derive(Debug, PartialEq)]
+struct Fingerprint {
+    step: &'static str,
+    machine: String,
+    scaleout: u32,
+    predicted_bits: u64,
+    /// Simulated runtime of the actual run (0 for read-only steps).
+    actual_bits: u64,
+}
+
+fn external_record() -> RuntimeRecord {
+    RuntimeRecord {
+        job: JobKind::Sort,
+        org: "external".into(),
+        machine: "m5.xlarge".into(),
+        scaleout: 6,
+        job_features: vec![13.25],
+        runtime_s: 287.5,
+    }
+}
+
+/// The scenario: cold read → shares (writes train) → read → write →
+/// contribute → second-kind write → metrics. Returns the bit-exact
+/// decision trace.
+fn scenario(client: &mut dyn Client, corpus: &Corpus) -> Vec<Fingerprint> {
+    let org = Organization::new("suite-org");
+    let mut trace = Vec::new();
+
+    // cold read: a typed ColdStart, never a fallback and never an alloc
+    match client.recommend(JobRequest::sort(12.0)) {
+        Err(ApiError::ColdStart {
+            job: JobKind::Sort,
+            records: 0,
+            ..
+        }) => {}
+        other => panic!("cold recommend must be ColdStart, got {other:?}"),
+    }
+
+    // invalid requests are rejected at the boundary with the typed error
+    match client.submit(&org, JobRequest::sort(10.0).with_target_seconds(-1.0)) {
+        Err(ApiError::InvalidRequest(_)) => {}
+        other => panic!("invalid target must be InvalidRequest, got {other:?}"),
+    }
+
+    // writes: share both corpora (Table-I order keeps the per-kind RNG
+    // stream assignment identical across deployments)
+    let sort_shared = client.share(corpus.repo_for(JobKind::Sort)).unwrap();
+    assert!(sort_shared.added > 0);
+    let grep_shared = client.share(corpus.repo_for(JobKind::Grep)).unwrap();
+    assert!(grep_shared.added > 0);
+
+    // the share trained the model: visible in the snapshot
+    let info = client.snapshot_info(JobKind::Sort).unwrap();
+    assert_eq!(info.records, sort_shared.added);
+    assert_eq!(info.generation, sort_shared.generation);
+    assert!(info.model.is_some(), "writes maintain the model");
+    assert!(!info.observed_machines.is_empty());
+
+    // read: recommend
+    let request = JobRequest::sort(14.0).with_target_seconds(600.0);
+    let rec = client.recommend(request.clone()).unwrap();
+    trace.push(Fingerprint {
+        step: "recommend-sort",
+        machine: rec.choice.machine_type.clone(),
+        scaleout: rec.choice.node_count,
+        predicted_bits: rec.choice.predicted_runtime_s.to_bits(),
+        actual_bits: 0,
+    });
+
+    // write: submit the same request — must decide exactly as the read
+    let outcome = client.submit(&org, request).unwrap();
+    assert_eq!(outcome.machine, rec.choice.machine_type);
+    assert_eq!(outcome.scaleout, rec.choice.node_count);
+    assert_eq!(
+        outcome.predicted_runtime_s.to_bits(),
+        rec.choice.predicted_runtime_s.to_bits(),
+        "submit must decide exactly what recommend promised"
+    );
+    trace.push(Fingerprint {
+        step: "submit-sort",
+        machine: outcome.machine.clone(),
+        scaleout: outcome.scaleout,
+        predicted_bits: outcome.predicted_runtime_s.to_bits(),
+        actual_bits: outcome.actual_runtime_s.to_bits(),
+    });
+
+    // write: record an externally-observed run
+    let contribution = client.contribute(external_record()).unwrap();
+    assert_eq!(contribution.added, 1);
+    assert_eq!(contribution.generation, info.generation + 2, "submit + contribute");
+
+    // write on the second shard
+    let grep_req = JobRequest::grep(15.0, 0.1).with_target_seconds(500.0);
+    let grep_outcome = client.submit(&org, grep_req).unwrap();
+    assert!(grep_outcome.model_used.is_some());
+    trace.push(Fingerprint {
+        step: "submit-grep",
+        machine: grep_outcome.machine.clone(),
+        scaleout: grep_outcome.scaleout,
+        predicted_bits: grep_outcome.predicted_runtime_s.to_bits(),
+        actual_bits: grep_outcome.actual_runtime_s.to_bits(),
+    });
+
+    // metrics agree across deployments
+    let m = client.metrics().unwrap();
+    assert_eq!(m.submissions, 2);
+    assert_eq!(m.recommends, 1);
+    assert_eq!(m.contributions, 1);
+    assert_eq!(m.retrains, 2, "one training per shared corpus");
+    assert_eq!(m.cache_hits, 2, "both submissions decided from the cache");
+    assert_eq!(m.fallbacks, 0);
+
+    trace
+}
+
+#[test]
+fn all_three_deployments_serve_identical_decisions() {
+    let cloud = Cloud::aws_like();
+    let corpus = corpus(&cloud);
+    let no_artifacts = PathBuf::from("/nonexistent-artifacts");
+
+    // 1) the sequential coordinator
+    let mut coordinator = Coordinator::with_engine(cloud.clone(), Engine::native(), SEED);
+    let coordinator_trace = scenario(&mut coordinator, &corpus);
+
+    // 2) the ordered single-worker session (native: bogus artifacts dir)
+    let session = Session::spawn(cloud.clone(), no_artifacts.clone(), SEED);
+    let mut session_ref = &session;
+    let session_trace = scenario(&mut session_ref, &corpus);
+    session.shutdown();
+
+    // 3) the concurrent service (native workers)
+    let service = CoordinatorService::spawn(
+        cloud,
+        ServiceConfig::default()
+            .with_workers(2)
+            .with_pjrt_workers(0)
+            .with_artifacts_dir(no_artifacts)
+            .with_seed(SEED),
+    );
+    let mut client = service.client();
+    let service_trace = scenario(&mut client, &corpus);
+    service.shutdown();
+
+    assert_eq!(
+        coordinator_trace, session_trace,
+        "session must match the sequential coordinator bit for bit"
+    );
+    assert_eq!(
+        coordinator_trace, service_trace,
+        "service must match the sequential coordinator bit for bit"
+    );
+}

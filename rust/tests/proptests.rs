@@ -350,3 +350,97 @@ fn median_is_order_invariant_and_bounded() {
         assert_eq!(stats::median(&shuffled), m);
     });
 }
+
+// --------------------------------------------------------------------------
+// Protocol invariants: the read/write split must not change decisions
+// --------------------------------------------------------------------------
+
+#[test]
+fn recommend_then_contribute_is_decision_equal_to_submit() {
+    // The API's core promise: `Recommend` (read) followed by
+    // `Contribute` of the observed run is decision-bitwise-equal to one
+    // `Submit` (write) — on the request itself AND on the next request,
+    // whose model state depends on what the first one contributed.
+    use c3o::coordinator::{Coordinator, Organization};
+    use c3o::models::Engine;
+
+    let cloud = Cloud::aws_like();
+    let corpus = c3o::workloads::ExperimentGrid {
+        experiments: c3o::workloads::ExperimentGrid::paper_table1()
+            .experiments
+            .into_iter()
+            .filter(|e| e.spec.kind() == JobKind::Sort)
+            .collect(),
+        repetitions: 1,
+    }
+    .execute(&cloud, 3)
+    .repo_for(JobKind::Sort);
+
+    forall("recommend_contribute_equals_submit", 6, |g| {
+        let seed = g.rng().next_u64();
+        let mut via_submit = Coordinator::with_engine(cloud.clone(), Engine::native(), seed);
+        let mut via_read = Coordinator::with_engine(cloud.clone(), Engine::native(), seed);
+        via_submit.share(&corpus).unwrap();
+        via_read.share(&corpus).unwrap();
+        let org = Organization::new("prop-org");
+
+        let mut request = JobRequest::sort(g.f64_in(9.0, 21.0));
+        if g.bool() {
+            request = request.with_target_seconds(g.f64_log(100.0, 3000.0));
+        }
+
+        // path A: one write
+        let outcome = via_submit.submit(&org, &request).unwrap();
+        let submit_choice = outcome.choice.as_ref().expect("model-served");
+
+        // path B: read, then contribute the observed run
+        let rec = via_read.recommend(&request).unwrap();
+        assert_eq!(rec.choice.machine_type, submit_choice.machine_type);
+        assert_eq!(rec.choice.node_count, submit_choice.node_count);
+        assert_eq!(
+            rec.choice.predicted_runtime_s.to_bits(),
+            submit_choice.predicted_runtime_s.to_bits(),
+            "read decision must equal the write's decision bitwise"
+        );
+        assert_eq!(
+            rec.choice.expected_cost_usd.to_bits(),
+            submit_choice.expected_cost_usd.to_bits()
+        );
+        via_read
+            .contribute(RuntimeRecord {
+                job: JobKind::Sort,
+                org: org.name.clone(),
+                machine: outcome.machine.clone(),
+                scaleout: outcome.scaleout,
+                job_features: request.spec.job_features(),
+                runtime_s: outcome.actual_runtime_s,
+            })
+            .unwrap();
+
+        // both paths left the same repository behind
+        assert_eq!(
+            via_read.generation(JobKind::Sort),
+            via_submit.generation(JobKind::Sort)
+        );
+
+        // ...so the NEXT decision must also be bitwise-identical
+        let mut follow_up = JobRequest::sort(g.f64_in(9.0, 21.0));
+        if g.bool() {
+            follow_up = follow_up.with_target_seconds(g.f64_log(100.0, 3000.0));
+        }
+        let next_submit = via_submit.recommend(&follow_up).unwrap();
+        let next_read = via_read.recommend(&follow_up).unwrap();
+        assert_eq!(next_submit.choice.machine_type, next_read.choice.machine_type);
+        assert_eq!(next_submit.choice.node_count, next_read.choice.node_count);
+        assert_eq!(
+            next_submit.choice.predicted_runtime_s.to_bits(),
+            next_read.choice.predicted_runtime_s.to_bits(),
+            "post-contribution decisions must stay bitwise-equal"
+        );
+        assert_eq!(next_submit.generation, next_read.generation);
+        assert_eq!(
+            next_submit.trained_at_generation,
+            next_read.trained_at_generation
+        );
+    });
+}

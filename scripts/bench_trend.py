@@ -1,0 +1,93 @@
+#!/usr/bin/env python3
+"""Diff a fresh BENCH_serve_throughput.json against the committed baseline.
+
+Usage: bench_trend.py BASELINE.json CURRENT.json
+
+Prints a throughput comparison table for CI trend reporting. Exits
+nonzero only on a gross regression (current < REGRESSION_FLOOR x
+baseline) so ordinary CI-runner jitter never blocks a merge; the
+uploaded artifact carries the precise numbers.
+
+A baseline with {"placeholder": true} records that no reference numbers
+have been committed yet: the script then just prints the current run and
+succeeds. Refresh the baseline by copying a representative run's
+BENCH_serve_throughput.json over the .baseline.json file.
+"""
+
+import json
+import sys
+
+REGRESSION_FLOOR = 0.5
+
+
+def service_points(doc, section=None, key="jobs_per_s"):
+    node = doc.get(section, {}) if section else doc
+    return {int(p["clients"]): float(p[key]) for p in node.get("service", [])}
+
+
+def main():
+    if len(sys.argv) != 3:
+        sys.exit(__doc__)
+    with open(sys.argv[1]) as f:
+        base = json.load(f)
+    with open(sys.argv[2]) as f:
+        cur = json.load(f)
+
+    if base.get("placeholder"):
+        print("baseline is a placeholder — reporting current numbers only")
+        print(json.dumps(cur, indent=2))
+        print(
+            "\nTo start trend-diffing, commit this run as "
+            "BENCH_serve_throughput.baseline.json"
+        )
+        return
+
+    failures = []
+
+    def compare(label, base_v, cur_v):
+        ratio = cur_v / base_v if base_v else float("inf")
+        flag = ""
+        if ratio < REGRESSION_FLOOR:
+            flag = "  << REGRESSION"
+            failures.append(label)
+        print(f"{label:<42} {base_v:>10.1f} {cur_v:>10.1f} {ratio:>7.2f}x{flag}")
+
+    print(f"{'metric':<42} {'baseline':>10} {'current':>10} {'ratio':>8}")
+    compare(
+        "write-heavy session 1 client (jobs/s)",
+        float(base["baseline_session_jobs_per_s"]),
+        float(cur["baseline_session_jobs_per_s"]),
+    )
+    base_svc = service_points(base)
+    cur_svc = service_points(cur)
+    for clients in sorted(base_svc):
+        if clients in cur_svc:
+            compare(
+                f"write-heavy service {clients} clients (jobs/s)",
+                base_svc[clients],
+                cur_svc[clients],
+            )
+
+    if "read_heavy" in base and "read_heavy" in cur:
+        compare(
+            "read-heavy session 1 client (req/s)",
+            float(base["read_heavy"]["baseline_session_req_per_s"]),
+            float(cur["read_heavy"]["baseline_session_req_per_s"]),
+        )
+        base_r = service_points(base, "read_heavy", "req_per_s")
+        cur_r = service_points(cur, "read_heavy", "req_per_s")
+        for clients in sorted(base_r):
+            if clients in cur_r:
+                compare(
+                    f"read-heavy service {clients} clients (req/s)",
+                    base_r[clients],
+                    cur_r[clients],
+                )
+
+    if failures:
+        sys.exit(f"gross throughput regression (< {REGRESSION_FLOOR}x baseline): {failures}")
+    print("\nno gross regression")
+
+
+if __name__ == "__main__":
+    main()
