@@ -33,7 +33,7 @@ fn main() -> anyhow::Result<()> {
     let t0 = std::time::Instant::now();
 
     // ---- phase 1: the shared corpus (Table I) --------------------------
-    println!("[1/4] executing the 930-experiment grid (5 reps each)...");
+    println!("[1/5] executing the 930-experiment grid (5 reps each)...");
     let grid = ExperimentGrid::paper_table1();
     let corpus = grid.execute(&cloud, 42);
     let mut orgs: std::collections::BTreeSet<String> = Default::default();
@@ -49,7 +49,7 @@ fn main() -> anyhow::Result<()> {
     assert_eq!(corpus.len(), 930, "Table I count");
 
     // ---- phase 2: share through the coordinator session ----------------
-    println!("[2/4] sharing runtime data into the coordinator...");
+    println!("[2/5] sharing runtime data into the coordinator...");
     let session = Session::spawn(cloud.clone(), artifacts, 7);
     for kind in JobKind::all() {
         let shared = session.share(corpus.repo_for(kind))?;
@@ -57,7 +57,7 @@ fn main() -> anyhow::Result<()> {
     }
 
     // ---- phase 3: a new organization submits real work ------------------
-    println!("[3/4] new organization submits 25 jobs (targets attached)...");
+    println!("[3/5] new organization submits 25 jobs (targets attached)...");
     let org = Organization::new("fresh-org");
     let battery: Vec<JobRequest> = vec![
         JobRequest::sort(11.0).with_target_seconds(500.0),
@@ -113,7 +113,7 @@ fn main() -> anyhow::Result<()> {
     }
 
     // ---- phase 4: headline metrics --------------------------------------
-    println!("[4/4] headline report");
+    println!("[4/5] headline report");
     let metrics = session.metrics()?;
     let hit_rate = 100.0 * metrics.target_hit_rate();
     let mape = stats::mean(&errors);
@@ -151,6 +151,64 @@ fn main() -> anyhow::Result<()> {
     assert!(hit_rate >= 70.0, "hit rate {hit_rate}% too low");
     assert!(c3o_cost < naive_cost, "C3O must beat overprovisioning");
     session.shutdown();
+
+    // ---- phase 5: persistence + federation ------------------------------
+    // The `c3o store` / `c3o sync` flow as a library walkthrough: two
+    // organizations run their *own* durable coordinators, each persisting
+    // through a segment store, and exchange runtime data through the
+    // SyncPull/SyncPush protocol until both hold the identical corpus.
+    // CLI equivalent:
+    //   c3o store --dir /tmp/c3o-alpha --mode seed     (durable corpus)
+    //   c3o sync                                        (two-service demo)
+    println!("[5/5] persistence + federation walkthrough...");
+    let store_alpha = std::env::temp_dir().join(format!("c3o_wf_alpha_{}", std::process::id()));
+    let store_beta = std::env::temp_dir().join(format!("c3o_wf_beta_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&store_alpha);
+    let _ = std::fs::remove_dir_all(&store_beta);
+    let artifacts = c3o::runtime::Runtime::default_dir();
+
+    // each org contributes its half of the sort corpus, durably
+    let sort_repo = corpus.repo_for(JobKind::Sort);
+    let half = sort_repo.len() / 2;
+    let relabel = |records: &[RuntimeRecord], org: &str| -> RuntimeDataRepo {
+        RuntimeDataRepo::from_records(JobKind::Sort, records.iter().map(|r| r.with_org(org)))
+    };
+    let mut alpha =
+        Coordinator::open_with_store(cloud.clone(), &artifacts, 71, &store_alpha)?;
+    let mut beta = Coordinator::open_with_store(cloud.clone(), &artifacts, 72, &store_beta)?;
+    alpha.share(&relabel(&sort_repo.records()[..half], "org-alpha"))?;
+    beta.share(&relabel(&sort_repo.records()[half..], "org-beta"))?;
+
+    // gossip until quiescent (here: one bidirectional exchange)
+    let stats = c3o::store::sync_all(&mut alpha, &mut beta, &[JobKind::Sort])?;
+    println!(
+        "      sync moved {} records ({} conflicts); generations {} / {}",
+        stats.records_in + stats.records_out,
+        stats.conflicts,
+        alpha.generation(JobKind::Sort),
+        beta.generation(JobKind::Sort),
+    );
+    assert_eq!(
+        alpha.repo(JobKind::Sort).unwrap().records(),
+        beta.repo(JobKind::Sort).unwrap().records(),
+        "converged peers hold bitwise-identical repositories"
+    );
+
+    // durability: drop alpha entirely and recover it from its store —
+    // corpus, generation, and a warm model, before any new write
+    let gen_before = alpha.generation(JobKind::Sort);
+    drop(alpha);
+    let mut recovered =
+        Coordinator::open_with_store(cloud.clone(), &artifacts, 71, &store_alpha)?;
+    assert_eq!(recovered.generation(JobKind::Sort), gen_before);
+    let rec = recovered.recommend(&JobRequest::sort(14.0).with_target_seconds(600.0))?;
+    println!(
+        "      recovered coordinator at generation {} recommends {} x{}",
+        gen_before, rec.choice.machine_type, rec.choice.node_count
+    );
+    let _ = std::fs::remove_dir_all(&store_alpha);
+    let _ = std::fs::remove_dir_all(&store_beta);
+
     println!("\nE2E validation PASSED");
     Ok(())
 }

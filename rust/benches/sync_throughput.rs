@@ -1,0 +1,144 @@
+//! Bench: the federation subsystem's two hot paths, in records/second.
+//!
+//! * **Replay** — how fast a segment store recovers a corpus on
+//!   startup, from the WAL (line-by-line op replay) and from a compacted
+//!   snapshot (bulk CSV load). This bounds restart time for a durable
+//!   coordinator service.
+//! * **Sync** — how fast two peers holding disjoint org corpora
+//!   converge through a full `Watermarks`/`SyncPull`/`SyncPush`
+//!   exchange (both directions, merge-dedup applied). This bounds how
+//!   quickly a fresh deployment catches up with the federation.
+//!
+//! Model training is disabled (cold-start threshold maxed) so the
+//! numbers measure persistence and exchange, not model selection.
+//!
+//! Emits `BENCH_sync_throughput.json`. Shrink with
+//! `C3O_SYNC_RECORDS=500` for smoke runs.
+
+use c3o::cloud::Cloud;
+use c3o::coordinator::Coordinator;
+use c3o::models::Engine;
+use c3o::repo::{RuntimeDataRepo, RuntimeRecord};
+use c3o::store::{sync_all, JobStore, StoreOp};
+use c3o::util::json::Json;
+use c3o::workloads::JobKind;
+use std::path::PathBuf;
+use std::time::Instant;
+
+const MACHINES: [&str; 3] = ["c5.xlarge", "m5.xlarge", "r5.xlarge"];
+
+/// Synthetic sort records with globally-unique configurations.
+fn synthetic_records(n: usize) -> Vec<RuntimeRecord> {
+    (0..n)
+        .map(|i| RuntimeRecord {
+            job: JobKind::Sort,
+            org: format!("org-{}", i % 7),
+            machine: MACHINES[i % MACHINES.len()].to_string(),
+            scaleout: 2 + (i % 14) as u32,
+            job_features: vec![1.0 + 0.5 * i as f64],
+            runtime_s: 50.0 + (i % 997) as f64,
+        })
+        .collect()
+}
+
+fn temp_root(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("c3o_syncbench_{}_{name}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+fn main() {
+    let n: usize = std::env::var("C3O_SYNC_RECORDS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(4000);
+    let records = synthetic_records(n);
+
+    // ---- replay: WAL-only recovery -------------------------------------
+    let root = temp_root("replay");
+    {
+        let (mut store, mut repo) = JobStore::open(&root, JobKind::Sort).unwrap();
+        for chunk in records.chunks(64) {
+            let outcome = repo.merge_records(chunk).unwrap();
+            let ops: Vec<StoreOp> =
+                outcome.applied.into_iter().map(StoreOp::Merge).collect();
+            store.append(&ops, repo.generation()).unwrap();
+        }
+    }
+    let t0 = Instant::now();
+    let (mut store, repo) = JobStore::open(&root, JobKind::Sort).unwrap();
+    let wal_secs = t0.elapsed().as_secs_f64();
+    assert_eq!(repo.len(), n, "replay must recover every record");
+    let wal_rate = n as f64 / wal_secs;
+    println!("replay   WAL      : {n:>6} records in {wal_secs:.3}s  ({wal_rate:>9.0} records/s)");
+
+    // ---- replay: snapshot recovery -------------------------------------
+    store.compact(&repo).unwrap();
+    drop(store);
+    let t0 = Instant::now();
+    let (_store, repo2) = JobStore::open(&root, JobKind::Sort).unwrap();
+    let snap_secs = t0.elapsed().as_secs_f64();
+    assert_eq!(repo2.len(), n);
+    let snap_rate = n as f64 / snap_secs;
+    println!("replay   snapshot : {n:>6} records in {snap_secs:.3}s  ({snap_rate:>9.0} records/s)");
+    let _ = std::fs::remove_dir_all(&root);
+
+    // ---- sync: two peers with disjoint org corpora ---------------------
+    let cloud = Cloud::aws_like();
+    let half = n / 2;
+    let relabel = |rs: &[RuntimeRecord], org: &str| -> Vec<RuntimeRecord> {
+        rs.iter().map(|r| r.with_org(org)).collect()
+    };
+    let mut peer_a = Coordinator::with_engine(cloud.clone(), Engine::native(), 1);
+    let mut peer_b = Coordinator::with_engine(cloud, Engine::native(), 2);
+    // measure exchange, not model selection
+    peer_a.min_records = usize::MAX;
+    peer_b.min_records = usize::MAX;
+    peer_a
+        .share(&RuntimeDataRepo::from_records(
+            JobKind::Sort,
+            relabel(&records[..half], "alpha"),
+        ))
+        .unwrap();
+    peer_b
+        .share(&RuntimeDataRepo::from_records(
+            JobKind::Sort,
+            relabel(&records[half..], "beta"),
+        ))
+        .unwrap();
+
+    let t0 = Instant::now();
+    let stats = sync_all(&mut peer_a, &mut peer_b, &[JobKind::Sort]).unwrap();
+    let sync_secs = t0.elapsed().as_secs_f64();
+    let exchanged = stats.records_in + stats.records_out;
+    assert_eq!(exchanged as usize, n, "full bidirectional exchange");
+    let again = sync_all(&mut peer_a, &mut peer_b, &[JobKind::Sort]).unwrap();
+    assert!(again.quiescent(), "second exchange must be a no-op");
+    let sync_rate = exchanged as f64 / sync_secs;
+    println!(
+        "sync     exchange : {exchanged:>6} records in {sync_secs:.3}s  ({sync_rate:>9.0} records/s)"
+    );
+
+    let json = Json::obj(vec![
+        ("bench", Json::Str("sync_throughput".to_string())),
+        ("records", Json::Num(n as f64)),
+        (
+            "replay",
+            Json::obj(vec![
+                ("wal_records_per_s", Json::Num(wal_rate)),
+                ("snapshot_records_per_s", Json::Num(snap_rate)),
+            ]),
+        ),
+        (
+            "sync",
+            Json::obj(vec![
+                ("records_exchanged", Json::Num(exchanged as f64)),
+                ("records_per_s", Json::Num(sync_rate)),
+                ("pulls", Json::Num(stats.pulls as f64)),
+                ("conflicts", Json::Num(stats.conflicts as f64)),
+            ]),
+        ),
+    ]);
+    std::fs::write("BENCH_sync_throughput.json", json.render() + "\n").unwrap();
+    println!("wrote BENCH_sync_throughput.json");
+}

@@ -8,10 +8,15 @@
 //! * [`Request`] — the closed set of operations a client can ask for.
 //!   The paper's collaborative loop has two asymmetric halves, and the
 //!   protocol keeps them distinct: **reads** ([`Request::Recommend`],
-//!   [`Request::SnapshotInfo`], [`Request::Metrics`]) never mutate the
+//!   [`Request::SnapshotInfo`], [`Request::Metrics`],
+//!   [`Request::Watermarks`], [`Request::SyncPull`]) never mutate the
 //!   shared repositories, while **writes** ([`Request::Submit`],
-//!   [`Request::Contribute`], [`Request::Share`]) both mutate them and
-//!   refresh the generation-stamped model the reads are served from.
+//!   [`Request::Contribute`], [`Request::Share`],
+//!   [`Request::SyncPush`]) both mutate them and refresh the
+//!   generation-stamped model the reads are served from. The three
+//!   federation requests are the peer exchange of [`crate::store`]:
+//!   watermark read → delta pull → idempotent push, driven by
+//!   [`sync_job`](crate::store::sync::sync_job).
 //! * [`Response`] — one typed variant per request, so a protocol-level
 //!   mismatch is a bug surfaced as [`ApiError::Protocol`], never a
 //!   silently misinterpreted reply.
@@ -36,16 +41,20 @@ use crate::cloud::Cloud;
 use crate::configurator::{ClusterChoice, JobRequest};
 use crate::coordinator::{JobOutcome, Metrics, Organization};
 use crate::models::ModelKind;
-use crate::repo::{RuntimeDataRepo, RuntimeRecord};
+use crate::repo::{MergeConflict, OrgWatermark, RuntimeDataRepo, RuntimeRecord};
 use crate::util::json::Json;
 use crate::workloads::JobKind;
+use std::collections::BTreeMap;
 use std::fmt;
 
 /// Protocol version. Bump on any breaking change to [`Request`],
 /// [`Response`], or [`ApiError`]; servers answer
 /// [`Request::SnapshotInfo`] with the version they speak so mixed-version
 /// tooling can detect skew.
-pub const API_VERSION: u32 = 1;
+///
+/// * v2 — federation: `Watermarks`/`SyncPull`/`SyncPush` requests, the
+///   [`ApiError::Store`] class, structured merge conflicts.
+pub const API_VERSION: u32 = 2;
 
 // ---------------------------------------------------------------------------
 // errors
@@ -76,6 +85,11 @@ pub enum ApiError {
     /// The serving deployment has shut down (worker gone, channel
     /// closed). Retryable against a fresh deployment.
     Stopped,
+    /// The durable segment store failed (I/O error, corrupt segment,
+    /// generation desync). The in-memory state may be ahead of disk;
+    /// the deployment keeps serving, but durability is degraded until
+    /// the store recovers.
+    Store(String),
     /// Internal failure below the API boundary (model training, the
     /// dataflow simulator, catalog lookups). Carries the full `anyhow`
     /// context chain, rendered.
@@ -98,6 +112,7 @@ impl fmt::Display for ApiError {
             ),
             ApiError::Protocol(msg) => write!(f, "protocol violation: {msg}"),
             ApiError::Stopped => write!(f, "service stopped"),
+            ApiError::Store(msg) => write!(f, "store error: {msg}"),
             ApiError::Internal(msg) => write!(f, "internal error: {msg}"),
         }
     }
@@ -115,6 +130,11 @@ impl ApiError {
     /// Fold an internal `anyhow` error into the taxonomy.
     pub fn internal(e: anyhow::Error) -> ApiError {
         ApiError::from(e)
+    }
+
+    /// Fold a segment-store failure into the taxonomy (full chain).
+    pub fn store(e: anyhow::Error) -> ApiError {
+        ApiError::Store(format!("{e:#}"))
     }
 }
 
@@ -167,6 +187,27 @@ pub enum Request {
     /// **Read.** Describe the model snapshot currently serving a job's
     /// reads. Answered by [`Response::SnapshotInfo`].
     SnapshotInfo { job: JobKind },
+    /// **Read.** The per-organization high-water marks of a job's
+    /// shared repository — what a peer sends to ask "what am I
+    /// missing?". Answered by [`Response::Watermarks`].
+    Watermarks { job: JobKind },
+    /// **Read.** Delta extraction: every record of each org whose local
+    /// watermark differs from the requester's. The reply also carries
+    /// the responder's own marks (priming the reverse direction of a
+    /// [`sync_job`](crate::store::sync::sync_job) exchange). Answered by
+    /// [`Response::SyncDelta`].
+    SyncPull {
+        job: JobKind,
+        watermarks: BTreeMap<String, OrgWatermark>,
+    },
+    /// **Write.** Apply a peer's delta through merge-level dedup with
+    /// deterministic conflict resolution, canonicalize the repo order,
+    /// and refresh the model. Idempotent — re-pushing a delta changes
+    /// nothing. Answered by [`Response::SyncApplied`].
+    SyncPush {
+        job: JobKind,
+        records: Vec<RuntimeRecord>,
+    },
 }
 
 impl Request {
@@ -179,7 +220,10 @@ impl Request {
             Request::Contribute { record } => Some(record.job),
             Request::Share { repo } => Some(repo.job()),
             Request::Metrics => None,
-            Request::SnapshotInfo { job } => Some(*job),
+            Request::SnapshotInfo { job }
+            | Request::Watermarks { job }
+            | Request::SyncPull { job, .. }
+            | Request::SyncPush { job, .. } => Some(*job),
         }
     }
 
@@ -187,7 +231,10 @@ impl Request {
     pub fn is_write(&self) -> bool {
         matches!(
             self,
-            Request::Submit { .. } | Request::Contribute { .. } | Request::Share { .. }
+            Request::Submit { .. }
+                | Request::Contribute { .. }
+                | Request::Share { .. }
+                | Request::SyncPush { .. }
         )
     }
 }
@@ -242,6 +289,52 @@ pub struct SnapshotInfo {
     pub observed_machines: Vec<String>,
 }
 
+/// A job repository's per-organization high-water marks, stamped with
+/// the generation they describe.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct WatermarkSet {
+    pub job: JobKind,
+    /// Repository generation the marks were read at.
+    pub generation: u64,
+    pub watermarks: BTreeMap<String, OrgWatermark>,
+}
+
+/// A delta computed against a peer's watermarks: the records the peer
+/// is missing, plus the responder's own marks for the reverse
+/// direction.
+#[derive(Debug, Clone)]
+pub struct SyncDelta {
+    pub job: JobKind,
+    /// Responder's repository generation at extraction time.
+    pub generation: u64,
+    /// Records of every org whose watermark differed.
+    pub records: Vec<RuntimeRecord>,
+    /// The responder's own watermarks.
+    pub watermarks: BTreeMap<String, OrgWatermark>,
+}
+
+/// The structured result of applying a sync delta.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SyncReport {
+    pub job: JobKind,
+    /// Previously-unknown configurations appended.
+    pub added: usize,
+    /// Existing records replaced by a deterministically-preferred
+    /// incoming record.
+    pub replaced: usize,
+    /// Runtime disagreements surfaced (whichever side won).
+    pub conflicts: Vec<MergeConflict>,
+    /// Repository generation after the apply.
+    pub generation: u64,
+}
+
+impl SyncReport {
+    /// Total mutations (adds + replacements).
+    pub fn changed(&self) -> usize {
+        self.added + self.replaced
+    }
+}
+
 /// One typed reply per [`Request`] variant.
 // Variant sizes are dominated by `Submitted(JobOutcome)`; boxing it
 // would push an allocation + indirection into every submission reply
@@ -255,6 +348,9 @@ pub enum Response {
     Shared(Contribution),
     Metrics(Metrics),
     SnapshotInfo(SnapshotInfo),
+    Watermarks(WatermarkSet),
+    SyncDelta(SyncDelta),
+    SyncApplied(SyncReport),
 }
 
 impl Response {
@@ -266,6 +362,9 @@ impl Response {
             Response::Shared(_) => "Shared",
             Response::Metrics(_) => "Metrics",
             Response::SnapshotInfo(_) => "SnapshotInfo",
+            Response::Watermarks(_) => "Watermarks",
+            Response::SyncDelta(_) => "SyncDelta",
+            Response::SyncApplied(_) => "SyncApplied",
         }
     }
 
@@ -345,6 +444,38 @@ pub trait Client {
             other => Err(other.unexpected("SnapshotInfo")),
         }
     }
+
+    /// Read a job repository's per-org high-water marks.
+    fn watermarks(&mut self, job: JobKind) -> Result<WatermarkSet, ApiError> {
+        match self.call(Request::Watermarks { job })? {
+            Response::Watermarks(set) => Ok(set),
+            other => Err(other.unexpected("Watermarks")),
+        }
+    }
+
+    /// Extract the delta a peer with `watermarks` is missing.
+    fn sync_pull(
+        &mut self,
+        job: JobKind,
+        watermarks: BTreeMap<String, OrgWatermark>,
+    ) -> Result<SyncDelta, ApiError> {
+        match self.call(Request::SyncPull { job, watermarks })? {
+            Response::SyncDelta(delta) => Ok(delta),
+            other => Err(other.unexpected("SyncDelta")),
+        }
+    }
+
+    /// Apply a peer's delta (idempotent merge + canonical reorder).
+    fn sync_push(
+        &mut self,
+        job: JobKind,
+        records: Vec<RuntimeRecord>,
+    ) -> Result<SyncReport, ApiError> {
+        match self.call(Request::SyncPush { job, records })? {
+            Response::SyncApplied(report) => Ok(report),
+            other => Err(other.unexpected("SyncApplied")),
+        }
+    }
 }
 
 // ---------------------------------------------------------------------------
@@ -403,6 +534,20 @@ impl Contribution {
     }
 }
 
+impl SyncReport {
+    /// JSON projection (stable key order) for `c3o sync --json`.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("api_version", Json::Num(API_VERSION as f64)),
+            ("job", Json::Str(self.job.name().to_string())),
+            ("added", Json::Num(self.added as f64)),
+            ("replaced", Json::Num(self.replaced as f64)),
+            ("conflicts", Json::Num(self.conflicts.len() as f64)),
+            ("generation", Json::Num(self.generation as f64)),
+        ])
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -453,6 +598,41 @@ mod tests {
             Request::SnapshotInfo { job: JobKind::Grep }.job(),
             Some(JobKind::Grep)
         );
+        // federation: pulls are reads, pushes are writes
+        let pull = Request::SyncPull {
+            job: JobKind::Sort,
+            watermarks: BTreeMap::new(),
+        };
+        assert!(!pull.is_write());
+        assert_eq!(pull.job(), Some(JobKind::Sort));
+        assert!(!Request::Watermarks { job: JobKind::Sort }.is_write());
+        let push = Request::SyncPush {
+            job: JobKind::Grep,
+            records: vec![],
+        };
+        assert!(push.is_write());
+        assert_eq!(push.job(), Some(JobKind::Grep));
+    }
+
+    #[test]
+    fn store_errors_render_their_class() {
+        let e = ApiError::Store("wal-000001.log: checksum mismatch".into());
+        assert!(e.to_string().starts_with("store error"));
+    }
+
+    #[test]
+    fn sync_report_renders_conflict_count() {
+        let report = SyncReport {
+            job: JobKind::Sort,
+            added: 3,
+            replaced: 1,
+            conflicts: vec![],
+            generation: 9,
+        };
+        assert_eq!(report.changed(), 4);
+        let s = report.to_json().render();
+        assert!(s.contains("\"conflicts\":0"), "{s}");
+        assert!(s.contains("\"generation\":9"), "{s}");
     }
 
     #[test]

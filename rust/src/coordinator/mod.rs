@@ -14,9 +14,19 @@
 //!   behind.
 //! * **Writes** — `Submit` (the full loop: decide → provision + run →
 //!   contribute), `Contribute` (record an externally-observed run),
-//!   `Share` (bulk-merge a repository). Writes mutate the shared
-//!   repository and then **refresh the model** the reads are served
-//!   from (retraining is gated on the repo's generation counter).
+//!   `Share` (bulk-merge a repository), `SyncPush` (apply a federated
+//!   peer's delta). Writes mutate the shared repository — persisting
+//!   through the shard's segment store in durable deployments — and
+//!   then **refresh the model** the reads are served from (retraining
+//!   is gated on the repo's generation counter).
+//!
+//! Deployments built with [`Coordinator::open_with_store`] /
+//! [`service::ServiceConfig::with_store_dir`] are **durable**: the
+//! corpus is recovered from the [`crate::store`] segment store on
+//! startup (model caches warmed from the recovered generation), and the
+//! `Watermarks`/`SyncPull`/`SyncPush` requests let independent
+//! deployments exchange deltas until they hold bitwise-identical
+//! repositories (see [`crate::store::sync`]).
 //!
 //! The stack is **sharded by job kind** and layered:
 //!
@@ -58,17 +68,19 @@ pub use service::{CoordinatorService, ServiceClient, ServiceConfig, SubmitTicket
 pub use shard::{JobShard, ModelSnapshot, ShardPolicy};
 
 use crate::api::{
-    ApiError, Client, Contribution, Recommendation, Request, Response, SnapshotInfo,
+    ApiError, Client, Contribution, Recommendation, Request, Response, SnapshotInfo, SyncDelta,
+    SyncReport, WatermarkSet,
 };
 use crate::cloud::Cloud;
 use crate::configurator::{ClusterChoice, JobRequest};
 use crate::models::selection::SelectionReport;
 use crate::models::{Engine, ModelKind, ModelTrainer};
-use crate::repo::{RuntimeDataRepo, RuntimeRecord};
+use crate::repo::{OrgWatermark, RuntimeDataRepo, RuntimeRecord};
+use crate::store::JobStore;
 use crate::util::json::Json;
 use crate::util::rng::Pcg32;
 use crate::workloads::JobKind;
-use std::collections::HashMap;
+use std::collections::{BTreeMap, HashMap};
 use std::path::Path;
 
 /// A participating organization (provenance + its usual submission niche).
@@ -158,6 +170,12 @@ pub struct Metrics {
     /// `Recommend` groups the service scored as one coalesced predict
     /// batch (each group covers ≥ 2 requests).
     pub coalesced_batches: u64,
+    /// Peer deltas applied via `SyncPush` (including no-op re-pushes).
+    pub sync_pushes: u64,
+    /// Records a `SyncPush` actually added or replaced.
+    pub sync_records_applied: u64,
+    /// Runtime disagreements surfaced while applying peer deltas.
+    pub sync_conflicts: u64,
     pub targets_given: u64,
     pub targets_met: u64,
     pub total_cost_usd: f64,
@@ -193,6 +211,9 @@ impl Metrics {
         self.recommends += other.recommends;
         self.contributions += other.contributions;
         self.coalesced_batches += other.coalesced_batches;
+        self.sync_pushes += other.sync_pushes;
+        self.sync_records_applied += other.sync_records_applied;
+        self.sync_conflicts += other.sync_conflicts;
         self.targets_given += other.targets_given;
         self.targets_met += other.targets_met;
         self.total_cost_usd += other.total_cost_usd;
@@ -231,6 +252,33 @@ impl Coordinator {
             Engine::auto(artifacts_dir),
             seed,
         ))
+    }
+
+    /// Build a **durable** coordinator over a segment store: every
+    /// job's repository is recovered from `store_root` (newest snapshot
+    /// + WAL replay), models are warmed from the recovered corpora, and
+    /// all subsequent writes persist through the store. A fresh (empty)
+    /// directory yields an empty-but-durable coordinator.
+    pub fn open_with_store(
+        cloud: Cloud,
+        artifacts_dir: &Path,
+        seed: u64,
+        store_root: &Path,
+    ) -> Result<Coordinator, ApiError> {
+        let mut coord = Coordinator::new(cloud, artifacts_dir, seed)?;
+        let policy = coord.policy();
+        for kind in JobKind::all() {
+            let (store, repo) = JobStore::open(store_root, kind).map_err(ApiError::store)?;
+            let shard_seed = coord.seed_rng.next_u64();
+            let mut shard = JobShard::recover(kind, shard_seed, store, repo);
+            // warm the model cache so recovered reads are served
+            // without waiting for the next write
+            shard
+                .refresh_model(&mut coord.engine, &coord.cloud, &policy, &mut coord.metrics)
+                .map_err(ApiError::internal)?;
+            coord.shards.insert(kind, shard);
+        }
+        Ok(coord)
     }
 
     /// Build over an explicit model engine.
@@ -303,13 +351,13 @@ impl Coordinator {
         let job = repo.job();
         self.ensure_shard(job);
         let shard = self.shards.get_mut(&job).expect("just ensured");
-        let added = shard.share(repo).map_err(ApiError::internal)?;
+        let outcome = shard.share(repo)?;
         shard
             .refresh_model(&mut self.engine, &self.cloud, &policy, &mut self.metrics)
             .map_err(ApiError::internal)?;
         Ok(Contribution {
             job,
-            added,
+            added: outcome.added,
             generation: shard.generation(),
         })
     }
@@ -384,6 +432,73 @@ impl Coordinator {
             None => ModelSnapshot::empty(job).info(),
         }
     }
+
+    /// **Read.** Per-org high-water marks of a job's repository (empty
+    /// for a cold job — reads never allocate shards).
+    pub fn watermarks(&self, job: JobKind) -> WatermarkSet {
+        match self.shards.get(&job) {
+            Some(shard) => WatermarkSet {
+                job,
+                generation: shard.generation(),
+                watermarks: shard.repo().watermarks(),
+            },
+            None => WatermarkSet {
+                job,
+                generation: 0,
+                watermarks: BTreeMap::new(),
+            },
+        }
+    }
+
+    /// **Read.** Delta extraction against a peer's watermarks.
+    pub fn sync_pull(
+        &self,
+        job: JobKind,
+        theirs: &BTreeMap<String, OrgWatermark>,
+    ) -> SyncDelta {
+        match self.shards.get(&job) {
+            Some(shard) => SyncDelta {
+                job,
+                generation: shard.generation(),
+                records: shard.repo().delta_for(theirs),
+                watermarks: shard.repo().watermarks(),
+            },
+            None => SyncDelta {
+                job,
+                generation: 0,
+                records: Vec::new(),
+                watermarks: BTreeMap::new(),
+            },
+        }
+    }
+
+    /// **Write.** Apply a peer's delta: merge with deterministic
+    /// conflict resolution, canonicalize the record order, refresh the
+    /// model. Idempotent.
+    pub fn sync_push(
+        &mut self,
+        job: JobKind,
+        records: &[RuntimeRecord],
+    ) -> Result<SyncReport, ApiError> {
+        crate::api::validate_machines(&self.cloud, records)?;
+        let policy = self.policy();
+        self.ensure_shard(job);
+        let shard = self.shards.get_mut(&job).expect("just ensured");
+        let outcome = shard.apply_sync_records(records)?;
+        shard
+            .refresh_model(&mut self.engine, &self.cloud, &policy, &mut self.metrics)
+            .map_err(ApiError::internal)?;
+        self.metrics.sync_pushes += 1;
+        self.metrics.sync_records_applied += outcome.changed() as u64;
+        self.metrics.sync_conflicts += outcome.conflicts.len() as u64;
+        Ok(SyncReport {
+            job,
+            added: outcome.added,
+            replaced: outcome.replaced,
+            conflicts: outcome.conflicts,
+            generation: shard.generation(),
+        })
+    }
 }
 
 impl Client for Coordinator {
@@ -399,6 +514,13 @@ impl Client for Coordinator {
             Request::Share { repo } => self.share(&repo).map(Response::Shared),
             Request::Metrics => Ok(Response::Metrics(self.metrics.clone())),
             Request::SnapshotInfo { job } => Ok(Response::SnapshotInfo(self.snapshot_info(job))),
+            Request::Watermarks { job } => Ok(Response::Watermarks(self.watermarks(job))),
+            Request::SyncPull { job, watermarks } => {
+                Ok(Response::SyncDelta(self.sync_pull(job, &watermarks)))
+            }
+            Request::SyncPush { job, records } => {
+                self.sync_push(job, &records).map(Response::SyncApplied)
+            }
         }
     }
 }

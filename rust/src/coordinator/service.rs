@@ -6,9 +6,15 @@
 //! [`super::session`]):
 //!
 //! * **Shards** — one [`JobShard`] per [`JobKind`], each behind its own
-//!   mutex, taken **only by writes** (`Submit`, `Contribute`, `Share`).
-//!   Distinct kinds never serialize against each other; same-kind writes
-//!   serialize exactly as much as the shared repository requires.
+//!   mutex, taken **only by writes** (`Submit`, `Contribute`, `Share`,
+//!   `SyncPush`) — plus `SyncPull`, the one read that needs the full
+//!   record set for delta extraction. Distinct kinds never serialize
+//!   against each other; same-kind writes serialize exactly as much as
+//!   the shared repository requires. With
+//!   [`ServiceConfig::with_store_dir`] every shard persists its writes
+//!   through a [`crate::store::JobStore`], and
+//!   [`CoordinatorService::open`] recovers the corpus (and warms the
+//!   models) from that store on startup.
 //! * **Snapshots** — after every write, the shard publishes a
 //!   generation-stamped immutable [`Arc<ModelSnapshot>`]: an atomic
 //!   pointer swap under a write-only `RwLock` slot. Reads (`Recommend`,
@@ -84,6 +90,11 @@ pub struct ServiceConfig {
     /// Maximum same-kind `Recommend` requests a worker coalesces into
     /// one predict batch (1 disables coalescing).
     pub coalesce: usize,
+    /// Segment-store root for a **durable** service: repositories are
+    /// recovered from it on startup (models warmed from the recovered
+    /// corpora) and every write persists through it. `None` (default)
+    /// keeps the service in-memory.
+    pub store_dir: Option<PathBuf>,
 }
 
 impl Default for ServiceConfig {
@@ -97,6 +108,7 @@ impl Default for ServiceConfig {
             policy: ShardPolicy::default(),
             seed: 0xC30,
             coalesce: 16,
+            store_dir: None,
         }
     }
 }
@@ -133,6 +145,14 @@ impl ServiceConfig {
     /// Cap (or disable, with `1`) cross-request `Recommend` coalescing.
     pub fn with_coalesce(mut self, coalesce: usize) -> Self {
         self.coalesce = coalesce.max(1);
+        self
+    }
+
+    /// Make the service durable: recover from (and persist through) the
+    /// segment store rooted at `dir`. Use [`CoordinatorService::open`]
+    /// to surface store errors instead of panicking.
+    pub fn with_store_dir(mut self, dir: PathBuf) -> Self {
+        self.store_dir = Some(dir);
         self
     }
 }
@@ -339,21 +359,56 @@ impl Client for ServiceClient {
 impl CoordinatorService {
     /// Spawn the service: shards + published snapshots for every job
     /// kind plus `workers` threads, each constructing its engine on its
-    /// own thread.
+    /// own thread. Panics on a segment-store failure — durable
+    /// deployments should prefer [`CoordinatorService::open`].
     pub fn spawn(cloud: Cloud, config: ServiceConfig) -> CoordinatorService {
+        Self::open(cloud, config).expect("service construction failed")
+    }
+
+    /// Fallible constructor. For a durable config
+    /// ([`ServiceConfig::with_store_dir`]) this recovers every job's
+    /// repository from the segment store (newest snapshot + WAL
+    /// replay), warms the model caches from the recovered corpora with
+    /// a native engine, and publishes the recovered snapshots — so a
+    /// restarted service answers `SnapshotInfo` with its pre-restart
+    /// generation and serves `Recommend` before any new write arrives.
+    pub fn open(cloud: Cloud, config: ServiceConfig) -> Result<CoordinatorService, ApiError> {
         let (tx, rx) = mpsc::channel::<WorkItem>();
         let queue = Arc::new(Mutex::new(rx));
         let mut seed_rng = Pcg32::new(config.seed);
         let mut shards = HashMap::new();
         let mut snapshots = HashMap::new();
+        let mut boot_metrics = Metrics::default();
+        // Recovery warm-up uses a native engine on this thread; workers
+        // still build their own engines (incl. PJRT) below. Trained
+        // model state is backend-portable, so this is only a boot cost.
+        let mut warm_engine = config.store_dir.as_ref().map(|_| Engine::native());
         for kind in JobKind::all() {
-            shards.insert(kind, Mutex::new(JobShard::new(kind, seed_rng.next_u64())));
-            snapshots.insert(kind, RwLock::new(Arc::new(ModelSnapshot::empty(kind))));
+            let seed = seed_rng.next_u64();
+            let shard = match &config.store_dir {
+                None => JobShard::new(kind, seed),
+                Some(root) => {
+                    let (store, repo) =
+                        crate::store::JobStore::open(root, kind).map_err(ApiError::store)?;
+                    let mut shard = JobShard::recover(kind, seed, store, repo);
+                    shard
+                        .refresh_model(
+                            warm_engine.as_mut().expect("engine built with store"),
+                            &cloud,
+                            &config.policy,
+                            &mut boot_metrics,
+                        )
+                        .map_err(ApiError::internal)?;
+                    shard
+                }
+            };
+            snapshots.insert(kind, RwLock::new(Arc::new(shard.snapshot())));
+            shards.insert(kind, Mutex::new(shard));
         }
         let shared = Arc::new(Shared {
             shards,
             snapshots,
-            metrics: Mutex::new(Metrics::default()),
+            metrics: Mutex::new(boot_metrics),
             cloud,
             policy: config.policy.clone(),
             coalesce: config.coalesce.max(1),
@@ -369,11 +424,11 @@ impl CoordinatorService {
                 worker_loop(queue, shared, try_pjrt, artifacts_dir);
             }));
         }
-        CoordinatorService {
+        Ok(CoordinatorService {
             tx,
             shared,
             workers,
-        }
+        })
     }
 
     /// A new client handle (clone freely across threads).
@@ -425,6 +480,28 @@ impl CoordinatorService {
     #[doc(hidden)]
     pub fn hold_shard_for_tests(&self, kind: JobKind) -> std::sync::MutexGuard<'_, JobShard> {
         self.shared.shards[&kind].lock().unwrap()
+    }
+
+    /// Observability/test hook: a clone of a shard's repository (takes
+    /// the shard lock briefly). The federation tests compare peers'
+    /// repositories bitwise through this.
+    #[doc(hidden)]
+    pub fn repo_snapshot(&self, kind: JobKind) -> RuntimeDataRepo {
+        self.shared.shards[&kind].lock().unwrap().repo().clone()
+    }
+
+    /// Spawn a background gossip loop that keeps this service's shared
+    /// repositories in sync with `peers` (client handles of other
+    /// deployments), exchanging deltas for `jobs` every `interval`.
+    /// Stop it with [`SyncDriver::stop`]; it also stops when this
+    /// service shuts down (the next exchange sees `ApiError::Stopped`).
+    pub fn sync_with(
+        &self,
+        peers: Vec<ServiceClient>,
+        jobs: Vec<JobKind>,
+        interval: std::time::Duration,
+    ) -> crate::store::SyncDriver {
+        crate::store::SyncDriver::spawn(self.client(), peers, jobs, interval)
     }
 
     /// Graceful shutdown: every worker drains one `Shutdown` and exits.
@@ -630,15 +707,14 @@ fn serve_request(
                 let mut shard = shard_mutex.lock().unwrap();
                 shard
                     .share(&repo)
-                    .map_err(ApiError::internal)
-                    .and_then(|added| {
+                    .and_then(|outcome| {
                         shard
                             .refresh_model(engine, &shared.cloud, &shared.policy, &mut local)
                             .map_err(ApiError::internal)?;
                         shared.publish(&shard);
                         Ok(Contribution {
                             job: kind,
-                            added,
+                            added: outcome.added,
                             generation: shard.generation(),
                         })
                     })
@@ -649,6 +725,55 @@ fn serve_request(
         api::Request::Metrics => Ok(Response::Metrics(shared.metrics.lock().unwrap().clone())),
         api::Request::SnapshotInfo { job } => {
             Ok(Response::SnapshotInfo(shared.snapshot(job).info()))
+        }
+        // Federation. `Watermarks` is served lock-free off the published
+        // snapshot like every read. `SyncPull` is the one read that
+        // needs the full record set (delta extraction), which snapshots
+        // deliberately don't carry — it takes the shard lock; sync
+        // exchanges are rare and bandwidth-bound, not latency-bound.
+        api::Request::Watermarks { job } => {
+            let snap = shared.snapshot(job);
+            Ok(Response::Watermarks(api::WatermarkSet {
+                job,
+                generation: snap.generation,
+                watermarks: snap.watermarks.clone(),
+            }))
+        }
+        api::Request::SyncPull { job, watermarks } => {
+            let shard_mutex = shard_for(shared, job)?;
+            let shard = shard_mutex.lock().unwrap();
+            Ok(Response::SyncDelta(api::SyncDelta {
+                job,
+                generation: shard.generation(),
+                records: shard.repo().delta_for(&watermarks),
+                watermarks: shard.repo().watermarks(),
+            }))
+        }
+        api::Request::SyncPush { job, records } => {
+            api::validate_machines(&shared.cloud, &records)?;
+            let shard_mutex = shard_for(shared, job)?;
+            let mut local = Metrics::default();
+            let result = {
+                let mut shard = shard_mutex.lock().unwrap();
+                shard.apply_sync_records(&records).and_then(|outcome| {
+                    shard
+                        .refresh_model(engine, &shared.cloud, &shared.policy, &mut local)
+                        .map_err(ApiError::internal)?;
+                    shared.publish(&shard);
+                    local.sync_pushes += 1;
+                    local.sync_records_applied += outcome.changed() as u64;
+                    local.sync_conflicts += outcome.conflicts.len() as u64;
+                    Ok(api::SyncReport {
+                        job,
+                        added: outcome.added,
+                        replaced: outcome.replaced,
+                        conflicts: outcome.conflicts,
+                        generation: shard.generation(),
+                    })
+                })
+            };
+            shared.metrics.lock().unwrap().fold(&local);
+            result.map(Response::SyncApplied)
         }
         api::Request::Recommend { .. } => {
             unreachable!("Recommend is routed through serve_recommend_group")

@@ -29,8 +29,14 @@
 //!
 //! [`ModelSnapshot`] is the immutable export of a shard's read state:
 //! the concurrent service publishes one `Arc<ModelSnapshot>` per shard
-//! after every write and serves `Recommend`/`SnapshotInfo` from it
-//! without touching the shard mutex.
+//! after every write and serves `Recommend`/`SnapshotInfo`/`Watermarks`
+//! from it without touching the shard mutex.
+//!
+//! **Durability.** A shard built with [`JobShard::recover`] owns a
+//! [`JobStore`](crate::store::JobStore): every write logs exactly the
+//! records it applied (contribute ops, merge ops, canonical reorders)
+//! through the store's WAL, and the store folds the log into an atomic
+//! snapshot when it grows. Reads never touch the store.
 
 use crate::api::{ApiError, Contribution, Recommendation, SnapshotInfo, API_VERSION};
 use crate::baselines::{ConfigSearch, NaiveMax};
@@ -41,11 +47,12 @@ use crate::models::oracle::SimOracle;
 use crate::models::selection::{select_and_train, SelectionReport};
 use crate::models::{EngineBound, ModelKind, ModelTrainer, QueryBatch, TrainedModel};
 use crate::repo::sampling::sampled_repo;
-use crate::repo::{RuntimeDataRepo, RuntimeRecord};
+use crate::repo::{MergeOutcome, OrgWatermark, RuntimeDataRepo, RuntimeRecord};
+use crate::store::{JobStore, StoreOp};
 use crate::util::rng::Pcg32;
 use crate::workloads::JobKind;
 use anyhow::{Context, Result};
-use std::collections::BTreeSet;
+use std::collections::BTreeMap;
 use std::sync::Arc;
 
 /// Retrain/cold-start policy knobs shared by every shard of a deployment.
@@ -100,6 +107,9 @@ pub struct ModelSnapshot {
     /// interpolate; they don't leap across unmeasured memory
     /// configurations).
     pub observed_machines: Vec<String>,
+    /// Per-org high-water marks at publish time, so the `Watermarks`
+    /// federation read is served lock-free like every other read.
+    pub watermarks: BTreeMap<String, OrgWatermark>,
 }
 
 impl ModelSnapshot {
@@ -111,6 +121,7 @@ impl ModelSnapshot {
             generation: 0,
             model: None,
             observed_machines: Vec::new(),
+            watermarks: BTreeMap::new(),
         }
     }
 
@@ -224,23 +235,61 @@ pub(crate) fn decide_with_model(
         .context("empty catalog")
 }
 
-/// Per-job-kind state: repository + generation-cached model + RNG stream.
+/// Per-job-kind state: repository + generation-cached model + RNG
+/// stream, plus (when the deployment is durable) the segment store the
+/// shard's writes persist through.
 pub struct JobShard {
     job: JobKind,
     repo: RuntimeDataRepo,
     model: Option<Arc<CachedModel>>,
     rng: Pcg32,
+    /// Durable write-through log; `None` for in-memory deployments.
+    store: Option<JobStore>,
 }
 
 impl JobShard {
-    /// Fresh shard for one job kind.
+    /// Fresh shard for one job kind (in-memory; no persistence).
     pub fn new(job: JobKind, seed: u64) -> JobShard {
         JobShard {
             job,
             repo: RuntimeDataRepo::new(job),
             model: None,
             rng: Pcg32::new(seed),
+            store: None,
         }
+    }
+
+    /// Shard recovered from a segment store: adopts the replayed
+    /// repository and keeps persisting writes through `store`. The
+    /// caller follows up with [`JobShard::refresh_model`] to warm the
+    /// model cache from the recovered corpus.
+    pub fn recover(job: JobKind, seed: u64, store: JobStore, repo: RuntimeDataRepo) -> JobShard {
+        debug_assert_eq!(repo.job(), job, "store recovered a foreign repo");
+        debug_assert_eq!(store.generation(), repo.generation(), "store/repo desync");
+        JobShard {
+            job,
+            repo,
+            model: None,
+            rng: Pcg32::new(seed),
+            store: Some(store),
+        }
+    }
+
+    /// Whether writes are durably persisted.
+    pub fn is_durable(&self) -> bool {
+        self.store.is_some()
+    }
+
+    /// Durably log `ops` (no-op for in-memory shards), then fold the
+    /// WAL into a snapshot if it crossed the compaction threshold.
+    fn persist(&mut self, ops: &[StoreOp]) -> Result<()> {
+        if let Some(store) = &mut self.store {
+            store
+                .append(ops, self.repo.generation())
+                .context("persisting write")?;
+            store.maybe_compact(&self.repo).context("compacting store")?;
+        }
+        Ok(())
     }
 
     pub fn job(&self) -> JobKind {
@@ -267,15 +316,11 @@ impl JobShard {
         self.model.as_ref().map(|m| &m.report)
     }
 
-    /// Machine types observed in the shared data, sorted.
+    /// Machine types observed in the shared data, sorted — served from
+    /// the repository's incremental refcount cache (O(machines), not
+    /// O(records), so frequent snapshot publishes stay cheap).
     pub fn observed_machines(&self) -> Vec<String> {
-        let set: BTreeSet<String> = self
-            .repo
-            .records()
-            .iter()
-            .map(|r| r.machine.clone())
-            .collect();
-        set.into_iter().collect()
+        self.repo.observed_machines()
     }
 
     /// Protocol description of the shard's read state (metadata only).
@@ -299,14 +344,47 @@ impl JobShard {
             generation: self.repo.generation(),
             model: self.model.clone(),
             observed_machines: self.observed_machines(),
+            watermarks: self.repo.watermarks(),
         }
     }
 
-    /// Merge shared runtime data into the shard's repository. Returns
-    /// records actually added (== generation advance). Write path: the
-    /// caller follows up with [`JobShard::refresh_model`].
-    pub fn share(&mut self, other: &RuntimeDataRepo) -> Result<usize> {
-        self.repo.merge(other).map_err(anyhow::Error::msg)
+    /// Merge shared runtime data into the shard's repository,
+    /// persisting the applied records. Merge rejections (foreign-job or
+    /// invalid records) are [`ApiError::InvalidRequest`]; persistence
+    /// failures are [`ApiError::Store`], the same classification the
+    /// contribute and sync paths use. Write path: the caller follows
+    /// up with [`JobShard::refresh_model`].
+    pub fn share(&mut self, other: &RuntimeDataRepo) -> Result<MergeOutcome, ApiError> {
+        let outcome = self.repo.merge(other).map_err(ApiError::InvalidRequest)?;
+        if !outcome.applied.is_empty() {
+            let ops: Vec<StoreOp> =
+                outcome.applied.iter().cloned().map(StoreOp::Merge).collect();
+            self.persist(&ops).map_err(ApiError::store)?;
+        }
+        Ok(outcome)
+    }
+
+    /// Apply a peer's sync delta: merge with deterministic conflict
+    /// resolution, then canonicalize the record order so converged
+    /// peers hold bitwise-identical repositories (and train
+    /// bitwise-identical models). Write path: the caller follows up
+    /// with [`JobShard::refresh_model`].
+    pub fn apply_sync_records(
+        &mut self,
+        records: &[RuntimeRecord],
+    ) -> Result<MergeOutcome, ApiError> {
+        let outcome = self
+            .repo
+            .merge_records(records)
+            .map_err(ApiError::InvalidRequest)?;
+        if outcome.changed() > 0 {
+            self.repo.canonicalize();
+            let mut ops: Vec<StoreOp> =
+                outcome.applied.iter().cloned().map(StoreOp::Merge).collect();
+            ops.push(StoreOp::Canonicalize);
+            self.persist(&ops).map_err(ApiError::store)?;
+        }
+        Ok(outcome)
     }
 
     /// Record one externally-observed run. Write path: the caller
@@ -319,9 +397,14 @@ impl JobShard {
                 self.job.name()
             )));
         }
+        let op = self.store.is_some().then(|| record.clone());
         self.repo
             .contribute(record)
             .map_err(ApiError::InvalidRequest)?;
+        if let Some(rec) = op {
+            self.persist(&[StoreOp::Contribute(rec)])
+                .map_err(ApiError::store)?;
+        }
         Ok(Contribution {
             job: self.job,
             added: 1,
@@ -472,7 +555,11 @@ impl JobShard {
         };
         // duplicate configs are fine at contribution time; merge-level
         // dedup happens when repos are exchanged between parties
+        let op = self.store.is_some().then(|| record.clone());
         self.repo.contribute(record).map_err(anyhow::Error::msg)?;
+        if let Some(rec) = op {
+            self.persist(&[StoreOp::Contribute(rec)])?;
+        }
 
         // 4) the write maintains the model the reads are served from
         self.refresh_model(engine, cloud, policy, metrics)?;

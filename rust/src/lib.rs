@@ -23,11 +23,14 @@
 //!
 //! * **Reads** — `Recommend` (the configurator step as a standalone
 //!   query: score all candidates, return the decision, run nothing),
-//!   `SnapshotInfo`, `Metrics`. Reads never train or mutate.
+//!   `SnapshotInfo`, `Metrics`, `Watermarks`, `SyncPull`. Reads never
+//!   train or mutate.
 //! * **Writes** — `Submit` (decide → provision + run → contribute),
 //!   `Contribute` (record an externally-observed run), `Share`
-//!   (bulk-merge a repository). Writes refresh the generation-stamped
-//!   model that reads are served from.
+//!   (bulk-merge a repository), `SyncPush` (apply a federated peer's
+//!   delta). Writes refresh the generation-stamped model that reads are
+//!   served from — and persist through the segment store in durable
+//!   deployments.
 //!
 //! Three deployments implement [`Client`](api::Client) with identical
 //! decisions on identical inputs: the sequential
@@ -40,17 +43,38 @@
 //! cross-request coalescing of same-kind `Recommend` batches and
 //! pipelined `submit_nowait` tickets).
 //!
+//! ## Persistence and federation
+//!
+//! The collaborative corpus is long-lived, shared state ([`store`]):
+//!
+//! * The **durable segment store** ([`store::segment`]) gives every job
+//!   an append-only WAL of generation-stamped, checksummed ops plus
+//!   atomic snapshots with segment compaction. A deployment opened over
+//!   a store ([`Coordinator::open_with_store`](coordinator::Coordinator::open_with_store),
+//!   [`ServiceConfig::with_store_dir`](coordinator::ServiceConfig::with_store_dir))
+//!   recovers its corpus bitwise — including record order — and warms
+//!   its model caches before serving.
+//! * The **peer delta-sync protocol** ([`store::sync`]) exchanges only
+//!   missing records between deployments, driven by per-(org, job)
+//!   high-water marks ([`repo::OrgWatermark`]). Merge-level dedup with
+//!   a deterministic conflict order makes the exchange idempotent and
+//!   convergent: peers gossiping in any order end up with
+//!   bitwise-identical repositories serving bitwise-identical
+//!   recommendations, and runtime disagreements surface as structured
+//!   [`MergeConflict`](repo::MergeConflict)s.
+//!
 //! ## Layer map
 //!
 //! * **L3 (this crate)** — the coordination system: simulated cloud
 //!   ([`cloud`]), dataflow simulator ([`sim`]), workloads ([`workloads`]),
 //!   runtime-data repository ([`repo`], with a monotone **generation
-//!   counter** that keys all model caching), prediction models
-//!   ([`models`]), cluster configurator ([`configurator`], which scores
-//!   every `machine × scaleout` candidate of a request as **one
-//!   featurized batch**), search/model baselines ([`baselines`]), the
-//!   public protocol ([`api`]), and the sharded multi-org collaboration
-//!   runtime ([`coordinator`]).
+//!   counter** that keys all model caching, plus per-org watermarks and
+//!   the convergent merge), durable persistence + federation
+//!   ([`store`]), prediction models ([`models`]), cluster configurator
+//!   ([`configurator`], which scores every `machine × scaleout`
+//!   candidate of a request as **one featurized batch**), search/model
+//!   baselines ([`baselines`]), the public protocol ([`api`]), and the
+//!   sharded multi-org collaboration runtime ([`coordinator`]).
 //! * **L2 (python/compile/model.py)** — JAX graphs for the prediction
 //!   models, AOT-lowered to HLO text in `artifacts/`.
 //! * **L1 (python/compile/kernels/knn.py)** — Pallas kernel for the
@@ -80,6 +104,7 @@ pub mod models;
 pub mod repo;
 pub mod runtime;
 pub mod sim;
+pub mod store;
 pub mod util;
 pub mod workloads;
 
@@ -87,7 +112,7 @@ pub mod workloads;
 pub mod prelude {
     pub use crate::api::{
         ApiError, Client, Contribution, Recommendation, Request, Response, SnapshotInfo,
-        API_VERSION,
+        SyncDelta, SyncReport, WatermarkSet, API_VERSION,
     };
     pub use crate::cloud::{Cloud, MachineType};
     pub use crate::configurator::{ClusterChoice, Configurator, JobRequest};
@@ -99,8 +124,11 @@ pub mod prelude {
         ConfigQuery, Engine, ModelKind, ModelTrainer, Predictor, QueryBatch, RuntimeModel,
         TrainedModel,
     };
-    pub use crate::repo::{RuntimeDataRepo, RuntimeRecord};
+    pub use crate::repo::{
+        MergeConflict, MergeOutcome, OrgWatermark, RuntimeDataRepo, RuntimeRecord,
+    };
     pub use crate::sim::SimulationResult;
+    pub use crate::store::{JobStore, StoreOp, SyncDriver, SyncStats};
     pub use crate::util::rng::Pcg32;
     pub use crate::workloads::{ExperimentGrid, JobKind, JobSpec};
 }

@@ -11,6 +11,10 @@
 //! c3o e2e        [--jobs N] [--seed N]         collaborative end-to-end demo
 //! c3o serve      [--workers N] [--clients N] [--jobs N] [--seed N]
 //!                                              sharded multi-org service demo
+//! c3o store      --dir DIR [--mode seed|verify|stat] [--seed N]
+//!                                              durable segment-store exercise
+//! c3o sync       [--max-rounds N] [--seed N] [--store-a DIR] [--store-b DIR]
+//!                                             two-service federation demo
 //! ```
 //!
 //! Argument parsing is hand-rolled (clap is not in the offline vendor
@@ -108,6 +112,13 @@ USAGE:
   c3o e2e        [--jobs N] [--seed N]        collaborative end-to-end demo
   c3o serve      [--workers N] [--clients N] [--jobs N] [--seed N]
                                               sharded multi-org service demo
+  c3o store      --dir DIR [--mode seed|verify|stat] [--seed N]
+                                              durable segment store: seed it from
+                                              the corpus, verify recovery, or stat
+  c3o sync       [--max-rounds N] [--seed N] [--store-a DIR] [--store-b DIR]
+                                              federation demo: two services with
+                                              disjoint org corpora converge via
+                                              SyncPull/SyncPush
 ";
 
 fn main() -> ExitCode {
@@ -166,6 +177,8 @@ fn run(cmd: &str, rest: &[String]) -> Result<(), String> {
         "contribute" => cmd_contribute(&cloud, &args),
         "e2e" => cmd_e2e(&cloud, &args, seed),
         "serve" => cmd_serve(&cloud, &args, seed),
+        "store" => cmd_store(&cloud, &args, seed),
+        "sync" => cmd_sync(&cloud, &args, seed),
         "help" | "--help" | "-h" => {
             print!("{USAGE}");
             Ok(())
@@ -541,4 +554,240 @@ fn cmd_serve(cloud: &Cloud, args: &Args, seed: u64) -> Result<(), String> {
     println!("total cost:         ${:.2}", m.total_cost_usd);
     service.shutdown();
     Ok(())
+}
+
+/// Exercise the durable segment store. `--mode seed` writes the corpus
+/// through a store-backed coordinator (the real write path: WAL append
+/// per applied record); `--mode verify` reopens the store cold and
+/// diffs the recovered repositories against a regenerated corpus —
+/// exiting nonzero on any loss, duplication, or generation drift;
+/// `--mode stat` prints what the store holds. The seed→kill→verify
+/// sequence is the CI crash-recovery exercise.
+fn cmd_store(cloud: &Cloud, args: &Args, seed: u64) -> Result<(), String> {
+    let dir = PathBuf::from(
+        args.get::<String>("dir")?
+            .ok_or("--dir is required".to_string())?,
+    );
+    let mode: String = args.get_or("mode", "stat".to_string())?;
+    match mode.as_str() {
+        "seed" => {
+            eprintln!("seeding store at {} from the corpus grid (1 repetition)...", dir.display());
+            let corpus = ExperimentGrid {
+                experiments: ExperimentGrid::paper_table1().experiments,
+                repetitions: 1,
+            }
+            .execute(cloud, seed);
+            let mut coord =
+                Coordinator::open_with_store(cloud.clone(), &Runtime::default_dir(), seed, &dir)
+                    .map_err(api_err)?;
+            // persistence exercise, not model serving: skip training
+            coord.min_records = usize::MAX;
+            for kind in JobKind::all() {
+                let shared = coord.share(&corpus.repo_for(kind)).map_err(api_err)?;
+                println!(
+                    "  {:>9}: {:>4} records appended, generation {}",
+                    kind.name(),
+                    shared.added,
+                    shared.generation
+                );
+            }
+            println!("seeded (WAL only — no compaction; verify replays it)");
+            Ok(())
+        }
+        "verify" => {
+            eprintln!("regenerating the corpus grid to diff against...");
+            let corpus = ExperimentGrid {
+                experiments: ExperimentGrid::paper_table1().experiments,
+                repetitions: 1,
+            }
+            .execute(cloud, seed);
+            let mut failures = Vec::new();
+            for kind in JobKind::all() {
+                let mut expected = RuntimeDataRepo::new(kind);
+                expected
+                    .merge(&corpus.repo_for(kind))
+                    .map_err(|e| format!("building expected repo: {e}"))?;
+                let (store, recovered) =
+                    c3o::store::JobStore::open(&dir, kind).map_err(|e| format!("{e:#}"))?;
+                let records_ok = recovered.canonical_records() == expected.canonical_records();
+                let gen_ok = recovered.generation() == expected.generation();
+                println!(
+                    "  {:>9}: {:>4} records, generation {:>4}, pending ops {:>4}  {}",
+                    kind.name(),
+                    recovered.len(),
+                    recovered.generation(),
+                    store.pending_ops(),
+                    if records_ok && gen_ok { "OK" } else { "MISMATCH" }
+                );
+                if !records_ok {
+                    failures.push(format!(
+                        "{}: recovered {} records != expected {}",
+                        kind.name(),
+                        recovered.len(),
+                        expected.len()
+                    ));
+                }
+                if !gen_ok {
+                    failures.push(format!(
+                        "{}: recovered generation {} != expected {}",
+                        kind.name(),
+                        recovered.generation(),
+                        expected.generation()
+                    ));
+                }
+            }
+            if failures.is_empty() {
+                println!("store recovery verified: no loss, no duplication");
+                Ok(())
+            } else {
+                Err(format!("store recovery FAILED: {}", failures.join("; ")))
+            }
+        }
+        "stat" => {
+            for kind in JobKind::all() {
+                let (store, recovered) =
+                    c3o::store::JobStore::open(&dir, kind).map_err(|e| format!("{e:#}"))?;
+                println!(
+                    "  {:>9}: {:>4} records, generation {:>4}, snapshot at {:>4}, pending ops {:>4}",
+                    kind.name(),
+                    recovered.len(),
+                    recovered.generation(),
+                    store.snapshot_generation(),
+                    store.pending_ops()
+                );
+            }
+            Ok(())
+        }
+        other => Err(format!("unknown --mode {other:?} (seed|verify|stat)")),
+    }
+}
+
+/// Federation demo: two coordinator services are fed *disjoint* halves
+/// of the corpus (organizations "org-alpha" and "org-beta"), then
+/// exchange deltas via `SyncPull`/`SyncPush` until quiescent. The demo
+/// verifies the convergence contract — identical generations, identical
+/// content digests, and bitwise-identical `Recommend` decisions — and
+/// exits nonzero if any of it fails. `--store-a`/`--store-b` make the
+/// two services durable.
+fn cmd_sync(cloud: &Cloud, args: &Args, seed: u64) -> Result<(), String> {
+    let max_rounds: usize = args.get_or("max-rounds", 6)?;
+    eprintln!("building disjoint org corpora from the corpus grid (1 repetition)...");
+    let corpus = ExperimentGrid {
+        experiments: ExperimentGrid::paper_table1().experiments,
+        repetitions: 1,
+    }
+    .execute(cloud, seed);
+
+    let relabel = |records: &[RuntimeRecord], org: &str| -> Vec<RuntimeRecord> {
+        records.iter().map(|r| r.with_org(org)).collect()
+    };
+
+    let mut config_a = ServiceConfig::default()
+        .with_workers(2)
+        .with_pjrt_workers(0)
+        .with_seed(seed);
+    let mut config_b = ServiceConfig::default()
+        .with_workers(2)
+        .with_pjrt_workers(0)
+        .with_seed(seed.wrapping_add(1));
+    if let Some(dir) = args.get::<String>("store-a")? {
+        config_a = config_a.with_store_dir(PathBuf::from(dir));
+    }
+    if let Some(dir) = args.get::<String>("store-b")? {
+        config_b = config_b.with_store_dir(PathBuf::from(dir));
+    }
+    let service_a = CoordinatorService::open(cloud.clone(), config_a).map_err(api_err)?;
+    let service_b = CoordinatorService::open(cloud.clone(), config_b).map_err(api_err)?;
+
+    let kinds = JobKind::all();
+    for kind in kinds {
+        let records = corpus.repo_for(kind).records().to_vec();
+        let half = records.len() / 2;
+        let repo_a =
+            RuntimeDataRepo::from_records(kind, relabel(&records[..half], "org-alpha"));
+        let repo_b =
+            RuntimeDataRepo::from_records(kind, relabel(&records[half..], "org-beta"));
+        eprintln!(
+            "  {:>9}: alpha holds {}, beta holds {}",
+            kind.name(),
+            repo_a.len(),
+            repo_b.len()
+        );
+        service_a.share(repo_a).map_err(api_err)?;
+        service_b.share(repo_b).map_err(api_err)?;
+    }
+
+    let mut client_a = service_a.client();
+    let mut client_b = service_b.client();
+    let mut total = c3o::store::SyncStats::default();
+    let mut rounds = 0usize;
+    loop {
+        rounds += 1;
+        let stats =
+            c3o::store::sync_all(&mut client_a, &mut client_b, &kinds).map_err(api_err)?;
+        total.fold(&stats);
+        println!(
+            "round {rounds}: {} records in, {} out, {} conflicts",
+            stats.records_in, stats.records_out, stats.conflicts
+        );
+        if stats.quiescent() {
+            break;
+        }
+        if rounds >= max_rounds {
+            return Err(format!("no quiescence after {max_rounds} sync rounds"));
+        }
+    }
+
+    let probe = |kind: JobKind| -> JobRequest {
+        match kind {
+            JobKind::Sort => JobRequest::sort(14.0),
+            JobKind::Grep => JobRequest::grep(14.0, 0.1),
+            JobKind::Sgd => JobRequest::sgd(20.0, 60),
+            JobKind::KMeans => JobRequest::kmeans(15.0, 5, 0.001),
+            JobKind::PageRank => JobRequest::pagerank(330.0, 0.001),
+        }
+    };
+
+    let mut failures = Vec::new();
+    for kind in kinds {
+        let info_a = client_a.snapshot_info(kind).map_err(api_err)?;
+        let info_b = client_b.snapshot_info(kind).map_err(api_err)?;
+        let digest_a = service_a.repo_snapshot(kind).content_digest();
+        let digest_b = service_b.repo_snapshot(kind).content_digest();
+        let rec_a = client_a.recommend(probe(kind)).map_err(api_err)?;
+        let rec_b = client_b.recommend(probe(kind)).map_err(api_err)?;
+        let decisions_match = rec_a.choice.machine_type == rec_b.choice.machine_type
+            && rec_a.choice.node_count == rec_b.choice.node_count
+            && rec_a.choice.predicted_runtime_s.to_bits()
+                == rec_b.choice.predicted_runtime_s.to_bits();
+        let converged =
+            info_a.generation == info_b.generation && digest_a == digest_b && decisions_match;
+        println!(
+            "  {:>9}: gen {}/{}  digest {}  decision {} ({} x{})",
+            kind.name(),
+            info_a.generation,
+            info_b.generation,
+            if digest_a == digest_b { "match" } else { "MISMATCH" },
+            if decisions_match { "match" } else { "MISMATCH" },
+            rec_a.choice.machine_type,
+            rec_a.choice.node_count,
+        );
+        if !converged {
+            failures.push(kind.name().to_string());
+        }
+    }
+    println!(
+        "\nsynced in {rounds} round(s): {} records exchanged, {} conflicts, {} pulls",
+        total.records_in + total.records_out,
+        total.conflicts,
+        total.pulls
+    );
+    service_a.shutdown();
+    service_b.shutdown();
+    if failures.is_empty() {
+        println!("federation converged: identical repos, identical decisions");
+        Ok(())
+    } else {
+        Err(format!("peers diverged on: {}", failures.join(", ")))
+    }
 }

@@ -12,6 +12,18 @@
 //! * [`RuntimeDataRepo`] — a per-job collection with CSV persistence
 //!   (the "runtime data repository" of Fig. 2), deduplication, and
 //!   **fork/merge** versioning in the style of DataHub/DVC (§III-C).
+//!   [`RuntimeDataRepo::merge`] is the convergence primitive of the
+//!   federation layer ([`crate::store`]): duplicate configurations are
+//!   resolved by a deterministic total order, so merging is idempotent,
+//!   commutative, and associative over record *sets* — independently
+//!   gossiping peers converge — and disagreements are surfaced as
+//!   structured [`MergeConflict`]s instead of silently dropped.
+//! * **Watermarks** — the repo maintains one [`OrgWatermark`] (record
+//!   count + order-independent content digest) per contributing
+//!   organization, updated incrementally on every mutation.
+//!   [`RuntimeDataRepo::delta_for`] extracts exactly the records a peer
+//!   with different watermarks is missing — the unit of transfer of the
+//!   `SyncPull`/`SyncPush` protocol.
 //! * [`sampling`] — the paper's proposed mitigation when the shared
 //!   dataset grows too large: download only a *coverage-preserving
 //!   sample* of bounded size (farthest-point sampling in feature space).
@@ -24,8 +36,9 @@ pub mod sampling;
 pub use featurize::{FeatureSpace, Featurizer};
 
 use crate::util::csv::Table;
+use crate::util::hash::fnv1a64_parts;
 use crate::workloads::JobKind;
-use std::collections::BTreeSet;
+use std::collections::{BTreeMap, BTreeSet};
 use std::path::Path;
 
 /// One shared runtime observation.
@@ -61,8 +74,8 @@ fn canonical_feature(f: f64) -> String {
 impl RuntimeRecord {
     /// Stable identity key for deduplication: everything except runtime
     /// and org (two orgs measuring the same configuration are duplicates
-    /// of the same grid point; merge keeps the first). Feature values are
-    /// canonicalized (`-0.0` ≡ `0.0`, all NaNs ≡ `nan`) before formatting.
+    /// of the same grid point). Feature values are canonicalized
+    /// (`-0.0` ≡ `0.0`, all NaNs ≡ `nan`) before formatting.
     pub fn config_key(&self) -> String {
         let feats: Vec<String> = self
             .job_features
@@ -78,9 +91,64 @@ impl RuntimeRecord {
         )
     }
 
+    /// Stable 64-bit content hash over identity *and* measurement
+    /// (config key, org, runtime bits). XOR-combining these hashes gives
+    /// the order-independent set digests of [`OrgWatermark`].
+    pub fn content_hash(&self) -> u64 {
+        fnv1a64_parts(&[
+            self.config_key().as_bytes(),
+            self.org.as_bytes(),
+            &self.runtime_s.to_bits().to_le_bytes(),
+        ])
+    }
+
+    /// The deterministic merge-priority key: of two records sharing a
+    /// configuration, the one with the **smaller** key survives a
+    /// merge. Runtimes are validated positive, so the bit order equals
+    /// the value order. The rule is arbitrary but *total* and
+    /// *order-independent*, which is what makes federated merging
+    /// converge regardless of gossip order.
+    pub fn merge_priority(&self) -> (u64, &str) {
+        (self.runtime_s.to_bits(), self.org.as_str())
+    }
+
+    /// The canonical federation ordering key (config key, org, runtime
+    /// bits) — the one total order [`RuntimeDataRepo::canonicalize`]
+    /// sorts by; converged peers are bitwise-identical *because* they
+    /// all sort by this same key.
+    pub fn canonical_sort_key(&self) -> (String, String, u64) {
+        (self.config_key(), self.org.clone(), self.runtime_s.to_bits())
+    }
+
+    /// A copy of the record re-attributed to `org` (e.g. when building
+    /// per-organization corpora for federation demos and tests).
+    pub fn with_org(&self, org: &str) -> RuntimeRecord {
+        RuntimeRecord {
+            org: org.to_string(),
+            ..self.clone()
+        }
+    }
+
+    fn wins_over(&self, other: &RuntimeRecord) -> bool {
+        self.merge_priority() < other.merge_priority()
+    }
+
     fn validate(&self) -> Result<(), String> {
         if self.scaleout == 0 {
             return Err("scaleout must be >= 1".into());
+        }
+        // line-oriented persistence (the segment store WAL) frames one
+        // record per physical line; reject control characters that
+        // would break that framing at the one validation choke point
+        // every ingress path shares
+        if self.org.contains('\n') || self.org.contains('\r') {
+            return Err(format!("org may not contain newlines: {:?}", self.org));
+        }
+        if self.machine.contains('\n') || self.machine.contains('\r') {
+            return Err(format!(
+                "machine may not contain newlines: {:?}",
+                self.machine
+            ));
         }
         if !(self.runtime_s.is_finite() && self.runtime_s > 0.0) {
             return Err(format!("bad runtime {}", self.runtime_s));
@@ -100,18 +168,94 @@ impl RuntimeRecord {
     }
 }
 
+/// Per-organization high-water mark: how much of that organization's
+/// data a repository holds. `count` is the number of records attributed
+/// to the org; `digest` is the XOR of their [`RuntimeRecord::content_hash`]es
+/// — order-independent, so two repos holding the same record set for an
+/// org agree on the watermark no matter how the records arrived.
+///
+/// Watermarks are the unit of the delta-sync protocol: a peer sends its
+/// marks, and [`RuntimeDataRepo::delta_for`] returns the records of
+/// every org whose mark differs. The granularity is per-org, not
+/// per-record — over-sending is harmless because merge dedups — which
+/// keeps the watermark exchange O(orgs), not O(records).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct OrgWatermark {
+    /// Records attributed to the organization.
+    pub count: u64,
+    /// XOR of the records' content hashes (order-independent).
+    pub digest: u64,
+}
+
+/// One surfaced merge disagreement: two records shared a configuration
+/// key but disagreed on the measured runtime. The deterministic order
+/// ([`RuntimeRecord::wins_over`]) decides which survives; the loser is
+/// reported here instead of being silently skipped — federated peers
+/// need to *see* that their measurement was contested.
+#[derive(Debug, Clone, PartialEq)]
+pub struct MergeConflict {
+    pub config_key: String,
+    pub kept_org: String,
+    pub kept_runtime_s: f64,
+    pub dropped_org: String,
+    pub dropped_runtime_s: f64,
+}
+
+/// Structured result of a merge.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct MergeOutcome {
+    /// Records with previously-unknown configurations, appended.
+    pub added: usize,
+    /// Existing records replaced because the incoming record wins the
+    /// deterministic order (in place — the slot index is preserved).
+    pub replaced: usize,
+    /// Runtime disagreements encountered (whether or not the incoming
+    /// side won).
+    pub conflicts: Vec<MergeConflict>,
+    /// The records that actually changed the repository (adds and
+    /// replacement winners), in application order. Each advanced the
+    /// generation by exactly one; the segment store WAL-logs exactly
+    /// these.
+    pub applied: Vec<RuntimeRecord>,
+}
+
+impl MergeOutcome {
+    /// Total mutations (adds + replacements) — how far the generation
+    /// advanced.
+    pub fn changed(&self) -> usize {
+        self.added + self.replaced
+    }
+}
+
 /// A per-job shared repository of runtime records.
 #[derive(Debug, Clone)]
 pub struct RuntimeDataRepo {
     job: JobKind,
     records: Vec<RuntimeRecord>,
     /// Monotone generation counter: advances by the number of records a
-    /// mutation actually added, and never moves otherwise. Consumers
-    /// (the coordinator shards' model caches) key trained models on this
-    /// value, so "the corpus did not change" is observable as "the
-    /// generation did not change" — re-merging already-known data is a
-    /// guaranteed no-op for retraining.
+    /// mutation actually added or replaced, and never moves otherwise.
+    /// Consumers (the coordinator shards' model caches) key trained
+    /// models on this value, so "the corpus did not change" is
+    /// observable as "the generation did not change" — re-merging
+    /// already-known data is a guaranteed no-op for retraining.
     generation: u64,
+    /// Machine-type refcounts, maintained incrementally so the sorted
+    /// observed-machines list is O(machines) per snapshot publish
+    /// instead of O(records).
+    machines: BTreeMap<String, usize>,
+    /// Per-org watermarks (count + XOR digest), maintained incrementally.
+    org_marks: BTreeMap<String, OrgWatermark>,
+    /// Merge-representative slot per configuration key: the slot of
+    /// the record with the **smallest** [`RuntimeRecord::merge_priority`]
+    /// among same-key records. Using the priority winner (not the first
+    /// occurrence) keeps merging idempotent even when the blind
+    /// contribute path has appended duplicate configurations: an
+    /// incoming record identical to the local best is a no-op rather
+    /// than a spurious replacement of a weaker duplicate. Maintained
+    /// incrementally so merging `m` records into a repo of `n` is
+    /// O(m log n); rebuilt after [`RuntimeDataRepo::canonicalize`]
+    /// reorders the records.
+    key_index: BTreeMap<String, usize>,
 }
 
 impl RuntimeDataRepo {
@@ -121,6 +265,9 @@ impl RuntimeDataRepo {
             job,
             records: Vec::new(),
             generation: 0,
+            machines: BTreeMap::new(),
+            org_marks: BTreeMap::new(),
+            key_index: BTreeMap::new(),
         }
     }
 
@@ -150,10 +297,10 @@ impl RuntimeDataRepo {
         self.records.is_empty()
     }
 
-    /// Current generation: advances by the number of records added. A
-    /// repository whose generation is unchanged is guaranteed to hold
-    /// exactly the same data, which is what the coordinator's model
-    /// cache keys on.
+    /// Current generation: advances by the number of records added or
+    /// replaced. A repository whose generation is unchanged is
+    /// guaranteed to hold exactly the same data, which is what the
+    /// coordinator's model cache keys on.
     pub fn generation(&self) -> u64 {
         self.generation
     }
@@ -161,6 +308,43 @@ impl RuntimeDataRepo {
     /// Legacy alias for [`RuntimeDataRepo::generation`].
     pub fn version(&self) -> u64 {
         self.generation
+    }
+
+    /// Restore the generation counter after segment-store recovery. The
+    /// generation can run ahead of `len()` (conflict replacements
+    /// advance it without growing the repo), so replaying records alone
+    /// cannot always reconstruct it. Recovery-only; must be monotone.
+    pub(crate) fn restore_generation(&mut self, generation: u64) {
+        assert!(
+            generation >= self.generation,
+            "generation restore must be monotone ({} < {})",
+            generation,
+            self.generation
+        );
+        self.generation = generation;
+    }
+
+    fn cache_add(&mut self, r: &RuntimeRecord) {
+        *self.machines.entry(r.machine.clone()).or_insert(0) += 1;
+        let mark = self.org_marks.entry(r.org.clone()).or_default();
+        mark.count += 1;
+        mark.digest ^= r.content_hash();
+    }
+
+    fn cache_remove(&mut self, r: &RuntimeRecord) {
+        if let Some(n) = self.machines.get_mut(&r.machine) {
+            *n -= 1;
+            if *n == 0 {
+                self.machines.remove(&r.machine);
+            }
+        }
+        if let Some(mark) = self.org_marks.get_mut(&r.org) {
+            mark.count -= 1;
+            mark.digest ^= r.content_hash();
+            if mark.count == 0 {
+                self.org_marks.remove(&r.org);
+            }
+        }
     }
 
     /// Contribute one record (the "capture and save" step of Fig. 1).
@@ -173,6 +357,20 @@ impl RuntimeDataRepo {
             ));
         }
         r.validate()?;
+        self.cache_add(&r);
+        let next_slot = self.records.len();
+        match self.key_index.entry(r.config_key()) {
+            std::collections::btree_map::Entry::Vacant(e) => {
+                e.insert(next_slot);
+            }
+            std::collections::btree_map::Entry::Occupied(mut e) => {
+                // duplicate configuration: the representative stays the
+                // merge-priority winner
+                if r.merge_priority() < self.records[*e.get()].merge_priority() {
+                    e.insert(next_slot);
+                }
+            }
+        }
         self.records.push(r);
         self.generation += 1;
         Ok(())
@@ -180,7 +378,93 @@ impl RuntimeDataRepo {
 
     /// Distinct contributing organizations.
     pub fn organizations(&self) -> BTreeSet<String> {
-        self.records.iter().map(|r| r.org.clone()).collect()
+        self.org_marks.keys().cloned().collect()
+    }
+
+    /// Machine types observed in the shared data, sorted — served from
+    /// the incremental refcount cache in O(machines), not O(records).
+    pub fn observed_machines(&self) -> Vec<String> {
+        self.machines.keys().cloned().collect()
+    }
+
+    /// Per-org high-water marks (count + order-independent digest) —
+    /// what a peer sends to ask "what am I missing?".
+    pub fn watermarks(&self) -> BTreeMap<String, OrgWatermark> {
+        self.org_marks.clone()
+    }
+
+    /// Delta extraction by watermark: every record of each organization
+    /// whose local watermark differs from `theirs` (including orgs the
+    /// peer has never seen). Per-org granularity — a changed org ships
+    /// whole, which merge-level dedup makes harmless — so the transfer
+    /// cost scales with *changed* organizations, not corpus size.
+    ///
+    /// Known cost of that granularity: blind-contributed duplicate
+    /// configurations (the submit path's local history) are never
+    /// accepted by a peer's merge, so the org's watermarks stay
+    /// permanently unequal and its slice is re-offered on every
+    /// exchange. The exchange stays correct and quiescence-detection
+    /// unaffected (both count *applied* records); the waste is visible
+    /// as `SyncStats::offered` exceeding applied counts. Record-level
+    /// deltas are a ROADMAP follow-up.
+    pub fn delta_for(&self, theirs: &BTreeMap<String, OrgWatermark>) -> Vec<RuntimeRecord> {
+        let stale: BTreeSet<&String> = self
+            .org_marks
+            .iter()
+            .filter(|&(org, mark)| theirs.get(org) != Some(mark))
+            .map(|(org, _)| org)
+            .collect();
+        if stale.is_empty() {
+            return Vec::new();
+        }
+        self.records
+            .iter()
+            .filter(|r| stale.contains(&r.org))
+            .cloned()
+            .collect()
+    }
+
+    /// Order-independent digest of the whole record set (XOR of content
+    /// hashes). Two converged peers agree on it; a cheap equality probe
+    /// for the `c3o sync` driver and the federation tests. (Exact
+    /// duplicate records XOR-cancel — use [`Self::canonical_records`]
+    /// for a collision-proof comparison.)
+    pub fn content_digest(&self) -> u64 {
+        self.records.iter().fold(0u64, |acc, r| acc ^ r.content_hash())
+    }
+
+    /// Sort the records into the canonical federation order (config
+    /// key, then org, then runtime bits). Two repos holding the same
+    /// record *set* become bitwise-identical — including iteration
+    /// order, hence identical downstream featurization and training
+    /// inputs. Content is unchanged, so the generation does not move.
+    /// The sync write path canonicalizes after applying a delta.
+    pub fn canonicalize(&mut self) {
+        self.records
+            .sort_by_cached_key(RuntimeRecord::canonical_sort_key);
+        // the reorder invalidated the representative slots; rebuild
+        // them as the merge-priority winner per key
+        self.key_index.clear();
+        for (i, r) in self.records.iter().enumerate() {
+            match self.key_index.entry(r.config_key()) {
+                std::collections::btree_map::Entry::Vacant(e) => {
+                    e.insert(i);
+                }
+                std::collections::btree_map::Entry::Occupied(mut e) => {
+                    if r.merge_priority() < self.records[*e.get()].merge_priority() {
+                        e.insert(i);
+                    }
+                }
+            }
+        }
+    }
+
+    /// A canonically-ordered clone of the records — the equality form
+    /// the federation tests compare peers by.
+    pub fn canonical_records(&self) -> Vec<RuntimeRecord> {
+        let mut rs = self.records.clone();
+        rs.sort_by_cached_key(RuntimeRecord::canonical_sort_key);
+        rs
     }
 
     /// Fork: an independent copy (DataHub/DVC-style).
@@ -188,26 +472,101 @@ impl RuntimeDataRepo {
         self.clone()
     }
 
-    /// Merge another repository of the same job into this one.
-    /// Duplicate configurations (same [`RuntimeRecord::config_key`]) keep
-    /// the existing record — idempotent re-merges don't grow the repo and
-    /// don't advance the generation. Returns the number of records
-    /// actually added (which is also how far the generation advanced).
-    pub fn merge(&mut self, other: &RuntimeDataRepo) -> Result<usize, String> {
+    /// Merge another repository of the same job into this one. See
+    /// [`RuntimeDataRepo::merge_records`] for the semantics.
+    pub fn merge(&mut self, other: &RuntimeDataRepo) -> Result<MergeOutcome, String> {
         if other.job != self.job {
             return Err("cannot merge repos of different jobs".into());
         }
-        let mut existing: BTreeSet<String> =
-            self.records.iter().map(|r| r.config_key()).collect();
-        let mut added: usize = 0;
-        for r in &other.records {
-            if existing.insert(r.config_key()) {
-                self.records.push(r.clone());
-                added += 1;
+        self.merge_records(&other.records)
+    }
+
+    /// Merge a batch of records (the `SyncPush` application path, and
+    /// the body of [`RuntimeDataRepo::merge`]).
+    ///
+    /// Per incoming record, by [`RuntimeRecord::config_key`]:
+    ///
+    /// * **unknown configuration** — appended (`added`).
+    /// * **known configuration, incoming wins** the deterministic total
+    ///   order ([`RuntimeRecord::wins_over`]) — replaces the existing
+    ///   record *in place* (`replaced`); a runtime disagreement is also
+    ///   reported as a [`MergeConflict`].
+    /// * **known configuration, existing wins** — nothing changes; a
+    ///   runtime disagreement is still reported.
+    ///
+    /// The winner rule is order-independent, so merging is idempotent
+    /// and commutative over record sets: peers exchanging deltas in any
+    /// gossip order converge to the same contents. The generation
+    /// advances by `added + replaced` — exactly the records in
+    /// [`MergeOutcome::applied`]. An `Err` applies **nothing**: the
+    /// batch is validated in full before the first mutation.
+    pub fn merge_records(&mut self, incoming: &[RuntimeRecord]) -> Result<MergeOutcome, String> {
+        // Validate the WHOLE batch before applying anything: a
+        // half-applied delta would advance the generation while the
+        // request errors, leaving callers (and any attached segment
+        // store, which only logs successful applies) desynced from the
+        // repo. Rejecting up front keeps a failed merge side-effect-free.
+        for r in incoming {
+            if r.job != self.job {
+                return Err(format!(
+                    "record for {} merged into {} repo",
+                    r.job.name(),
+                    self.job.name()
+                ));
+            }
+            r.validate()?;
+        }
+        // The maintained index resolves each incoming record against
+        // its merge representative — the priority winner among local
+        // same-key records, so a record the repo already holds (even
+        // alongside weaker blind-contributed duplicates) merges as a
+        // no-op.
+        let mut out = MergeOutcome::default();
+        for r in incoming {
+            let key = r.config_key();
+            match self.key_index.get(&key).copied() {
+                None => {
+                    self.key_index.insert(key, self.records.len());
+                    self.cache_add(r);
+                    self.records.push(r.clone());
+                    self.generation += 1;
+                    out.added += 1;
+                    out.applied.push(r.clone());
+                }
+                Some(slot) => {
+                    let existing = &self.records[slot];
+                    let disagrees = existing.runtime_s.to_bits() != r.runtime_s.to_bits();
+                    if r.wins_over(existing) {
+                        if disagrees {
+                            out.conflicts.push(MergeConflict {
+                                config_key: key,
+                                kept_org: r.org.clone(),
+                                kept_runtime_s: r.runtime_s,
+                                dropped_org: existing.org.clone(),
+                                dropped_runtime_s: existing.runtime_s,
+                            });
+                        }
+                        let dropped = self.records[slot].clone();
+                        self.cache_remove(&dropped);
+                        self.cache_add(r);
+                        self.records[slot] = r.clone();
+                        self.generation += 1;
+                        out.replaced += 1;
+                        out.applied.push(r.clone());
+                    } else if disagrees {
+                        out.conflicts.push(MergeConflict {
+                            config_key: key,
+                            kept_org: existing.org.clone(),
+                            kept_runtime_s: existing.runtime_s,
+                            dropped_org: r.org.clone(),
+                            dropped_runtime_s: r.runtime_s,
+                        });
+                    }
+                    // identical record (same key, org, runtime): no-op
+                }
             }
         }
-        self.generation += added as u64;
-        Ok(added)
+        Ok(out)
     }
 
     /// CSV header for this job's schema.
@@ -332,18 +691,55 @@ mod tests {
     }
 
     #[test]
-    fn merge_dedups_by_config() {
+    fn merge_dedups_by_config_and_reports_conflicts() {
         let mut a = RuntimeDataRepo::new(JobKind::Sort);
         a.contribute(rec("orgA", "m5.xlarge", 4, 10.0, 100.0)).unwrap();
         let mut b = a.fork();
         b.contribute(rec("orgB", "m5.xlarge", 8, 10.0, 60.0)).unwrap();
-        // orgB also re-measured orgA's config — duplicate by key
+        // orgB also re-measured orgA's config — duplicate by key, with a
+        // disagreeing (and losing: 102 > 100) runtime
         b.contribute(rec("orgB", "m5.xlarge", 4, 10.0, 102.0)).unwrap();
-        let added = a.merge(&b).unwrap();
-        assert_eq!(added, 1, "only the new configuration is merged");
+        let out = a.merge(&b).unwrap();
+        assert_eq!(out.added, 1, "only the new configuration is merged");
+        assert_eq!(out.replaced, 0, "the existing lower runtime wins");
         assert_eq!(a.len(), 2);
-        // merging again adds nothing
-        assert_eq!(a.merge(&b).unwrap(), 0);
+        // the disagreement is surfaced, not silently skipped
+        assert_eq!(out.conflicts.len(), 1);
+        let c = &out.conflicts[0];
+        assert_eq!(c.kept_org, "orgA");
+        assert_eq!(c.dropped_org, "orgB");
+        assert_eq!(c.kept_runtime_s, 100.0);
+        assert_eq!(c.dropped_runtime_s, 102.0);
+        // merging again changes nothing (the conflict is re-reported)
+        let again = a.merge(&b).unwrap();
+        assert_eq!(again.changed(), 0);
+        assert_eq!(again.conflicts.len(), 1);
+    }
+
+    #[test]
+    fn merge_replacement_is_deterministic_and_order_independent() {
+        // Same configuration measured twice with different runtimes: the
+        // deterministic order keeps the smaller (runtime, org) pair on
+        // BOTH merge directions, so peers converge.
+        let mut a = RuntimeDataRepo::new(JobKind::Sort);
+        a.contribute(rec("orgA", "m5.xlarge", 4, 10.0, 102.0)).unwrap();
+        let mut b = RuntimeDataRepo::new(JobKind::Sort);
+        b.contribute(rec("orgB", "m5.xlarge", 4, 10.0, 100.0)).unwrap();
+
+        let mut ab = a.fork();
+        let out = ab.merge(&b).unwrap();
+        assert_eq!((out.added, out.replaced), (0, 1), "incoming 100.0 wins");
+        assert_eq!(out.conflicts.len(), 1);
+        assert_eq!(out.applied.len(), 1);
+        assert_eq!(ab.len(), 1);
+        assert_eq!(ab.records()[0].org, "orgB");
+        assert_eq!(ab.generation(), 2, "replacement advances the generation");
+
+        let mut ba = b.fork();
+        let out = ba.merge(&a).unwrap();
+        assert_eq!((out.added, out.replaced), (0, 0), "existing 100.0 wins");
+        assert_eq!(out.conflicts.len(), 1);
+        assert_eq!(ba.records(), ab.records(), "both directions converge");
     }
 
     #[test]
@@ -366,7 +762,8 @@ mod tests {
         a.contribute(rec("orgA", "m5.xlarge", 4, 0.0, 100.0)).unwrap();
         let mut b = RuntimeDataRepo::new(JobKind::Sort);
         b.contribute(rec("orgB", "m5.xlarge", 4, -0.0, 101.0)).unwrap();
-        assert_eq!(a.merge(&b).unwrap(), 0, "-0.0 must dedup against 0.0");
+        let out = a.merge(&b).unwrap();
+        assert_eq!(out.added, 0, "-0.0 must dedup against 0.0");
         assert_eq!(a.len(), 1);
     }
 
@@ -383,7 +780,7 @@ mod tests {
         assert_eq!(a.generation(), 3, "merge advances by records added");
         // idempotent re-merge: no data change, no generation change
         let before = a.generation();
-        assert_eq!(a.merge(&b).unwrap(), 0);
+        assert_eq!(a.merge(&b).unwrap().changed(), 0);
         assert_eq!(a.generation(), before);
     }
 
@@ -395,6 +792,150 @@ mod tests {
     }
 
     #[test]
+    fn merge_is_idempotent_despite_blind_duplicates() {
+        // The submit path appends duplicate configurations blindly; the
+        // merge representative must be the priority winner among them,
+        // so re-receiving a record the repo already holds is a no-op —
+        // not a spurious replacement of the weaker duplicate.
+        let mut repo = RuntimeDataRepo::new(JobKind::Sort);
+        repo.contribute(rec("a", "m5.xlarge", 4, 10.0, 100.0)).unwrap();
+        repo.contribute(rec("a", "m5.xlarge", 4, 10.0, 90.0)).unwrap(); // dup, better
+        let before = repo.records().to_vec();
+        let gen = repo.generation();
+        // a peer ships back exactly the winner we already hold
+        let out = repo
+            .merge_records(&[rec("a", "m5.xlarge", 4, 10.0, 90.0)])
+            .unwrap();
+        assert_eq!(out.changed(), 0, "identical-to-best must be a no-op");
+        assert_eq!(repo.records(), &before[..], "no duplication, no swap");
+        assert_eq!(repo.generation(), gen);
+        // a genuinely better measurement still replaces the winner
+        let out = repo
+            .merge_records(&[rec("b", "m5.xlarge", 4, 10.0, 80.0)])
+            .unwrap();
+        assert_eq!(out.replaced, 1);
+        assert_eq!(
+            repo.records().iter().filter(|r| r.runtime_s == 80.0).count(),
+            1
+        );
+    }
+
+    #[test]
+    fn rejects_framing_unsafe_org_and_machine() {
+        // the WAL is line-framed: newlines in text fields are rejected
+        // at validation, before any repository (or store) mutation
+        let mut repo = RuntimeDataRepo::new(JobKind::Sort);
+        assert!(repo.contribute(rec("or\ng", "m5.xlarge", 4, 10.0, 1.0)).is_err());
+        assert!(repo.contribute(rec("org", "m5\r.xlarge", 4, 10.0, 1.0)).is_err());
+        assert!(repo.is_empty());
+    }
+
+    #[test]
+    fn failed_merge_applies_nothing() {
+        // A batch with an invalid record mid-stream must be rejected
+        // atomically: no records applied, no generation movement —
+        // otherwise a durable shard's store mirror would desync from
+        // the half-mutated repo.
+        let mut repo = RuntimeDataRepo::new(JobKind::Sort);
+        repo.contribute(rec("a", "m5.xlarge", 4, 10.0, 100.0)).unwrap();
+        let gen = repo.generation();
+        let batch = vec![
+            rec("b", "m5.xlarge", 8, 11.0, 90.0), // valid, would be added
+            rec("b", "m5.xlarge", 0, 12.0, 80.0), // invalid scaleout
+        ];
+        assert!(repo.merge_records(&batch).is_err());
+        assert_eq!(repo.len(), 1, "nothing from the failed batch landed");
+        assert_eq!(repo.generation(), gen);
+        assert_eq!(repo.watermarks().len(), 1);
+    }
+
+    #[test]
+    fn observed_machines_cache_matches_recompute() {
+        let mut repo = RuntimeDataRepo::new(JobKind::Sort);
+        repo.contribute(rec("a", "m5.xlarge", 4, 10.0, 100.0)).unwrap();
+        repo.contribute(rec("a", "c5.xlarge", 4, 11.0, 90.0)).unwrap();
+        repo.contribute(rec("b", "m5.xlarge", 8, 12.0, 80.0)).unwrap();
+        assert_eq!(
+            repo.observed_machines(),
+            vec!["c5.xlarge".to_string(), "m5.xlarge".to_string()]
+        );
+
+        // a replacement reattributes the record: the machine set is
+        // unchanged (the config key pins the machine), but the org
+        // watermark moves from the loser to the winner
+        let mut only = RuntimeDataRepo::new(JobKind::Sort);
+        only.contribute(rec("x", "r5.xlarge", 4, 10.0, 100.0)).unwrap();
+        let mut winner = RuntimeDataRepo::new(JobKind::Sort);
+        winner.contribute(rec("w", "r5.xlarge", 4, 10.0, 50.0)).unwrap();
+        let out = only.merge(&winner).unwrap();
+        assert_eq!(out.replaced, 1);
+        assert_eq!(only.observed_machines(), vec!["r5.xlarge".to_string()]);
+        assert_eq!(
+            only.organizations().into_iter().collect::<Vec<_>>(),
+            vec!["w".to_string()],
+            "the dropped org's watermark entry is removed"
+        );
+    }
+
+    #[test]
+    fn watermarks_track_counts_and_digests() {
+        let mut repo = RuntimeDataRepo::new(JobKind::Sort);
+        repo.contribute(rec("a", "m5.xlarge", 4, 10.0, 100.0)).unwrap();
+        repo.contribute(rec("a", "m5.xlarge", 8, 10.0, 60.0)).unwrap();
+        repo.contribute(rec("b", "m5.xlarge", 2, 10.0, 200.0)).unwrap();
+        let marks = repo.watermarks();
+        assert_eq!(marks.len(), 2);
+        assert_eq!(marks["a"].count, 2);
+        assert_eq!(marks["b"].count, 1);
+
+        // the digest is order-independent: a repo built in another order
+        // agrees per org
+        let mut other = RuntimeDataRepo::new(JobKind::Sort);
+        other.contribute(rec("b", "m5.xlarge", 2, 10.0, 200.0)).unwrap();
+        other.contribute(rec("a", "m5.xlarge", 8, 10.0, 60.0)).unwrap();
+        other.contribute(rec("a", "m5.xlarge", 4, 10.0, 100.0)).unwrap();
+        assert_eq!(repo.watermarks(), other.watermarks());
+        assert_eq!(repo.content_digest(), other.content_digest());
+    }
+
+    #[test]
+    fn delta_for_ships_only_stale_orgs() {
+        let mut repo = RuntimeDataRepo::new(JobKind::Sort);
+        repo.contribute(rec("a", "m5.xlarge", 4, 10.0, 100.0)).unwrap();
+        repo.contribute(rec("b", "m5.xlarge", 8, 10.0, 60.0)).unwrap();
+        repo.contribute(rec("b", "m5.xlarge", 2, 10.0, 200.0)).unwrap();
+
+        // peer that matches org "a" but has never seen "b"
+        let mut peer = RuntimeDataRepo::new(JobKind::Sort);
+        peer.contribute(rec("a", "m5.xlarge", 4, 10.0, 100.0)).unwrap();
+        let delta = repo.delta_for(&peer.watermarks());
+        assert_eq!(delta.len(), 2);
+        assert!(delta.iter().all(|r| r.org == "b"));
+
+        // a converged peer gets an empty delta
+        peer.merge_records(&delta).unwrap();
+        assert!(repo.delta_for(&peer.watermarks()).is_empty());
+        assert!(peer.delta_for(&repo.watermarks()).is_empty());
+    }
+
+    #[test]
+    fn canonicalize_orders_and_preserves_content() {
+        let mut a = RuntimeDataRepo::new(JobKind::Sort);
+        a.contribute(rec("z", "m5.xlarge", 8, 10.0, 60.0)).unwrap();
+        a.contribute(rec("a", "c5.xlarge", 4, 11.0, 90.0)).unwrap();
+        let mut b = RuntimeDataRepo::new(JobKind::Sort);
+        b.contribute(rec("a", "c5.xlarge", 4, 11.0, 90.0)).unwrap();
+        b.contribute(rec("z", "m5.xlarge", 8, 10.0, 60.0)).unwrap();
+        assert_ne!(a.records(), b.records(), "insertion orders differ");
+        let gen = a.generation();
+        a.canonicalize();
+        b.canonicalize();
+        assert_eq!(a.records(), b.records(), "canonical order is unique");
+        assert_eq!(a.generation(), gen, "reordering is not a data change");
+        assert_eq!(a.canonical_records(), a.records().to_vec());
+    }
+
+    #[test]
     fn csv_round_trip() {
         let mut repo = RuntimeDataRepo::new(JobKind::Sort);
         repo.contribute(rec("orgA", "m5.xlarge", 4, 12.5, 123.456)).unwrap();
@@ -402,6 +943,8 @@ mod tests {
         let t = repo.to_table();
         let back = RuntimeDataRepo::from_table(JobKind::Sort, &t).unwrap();
         assert_eq!(back.records(), repo.records());
+        assert_eq!(back.watermarks(), repo.watermarks());
+        assert_eq!(back.observed_machines(), repo.observed_machines());
     }
 
     #[test]

@@ -1,0 +1,45 @@
+//! Durable persistence + federation: the subsystem that turns the
+//! in-memory collaborative repositories into long-lived, *shared*
+//! state — the paper's premise that runtime data outlives any one
+//! process and flows between organizations.
+//!
+//! Two halves:
+//!
+//! * [`segment`] — the **durable segment store**: per-[`JobKind`]
+//!   append-only WALs with generation-stamped, checksummed ops, atomic
+//!   snapshots, and segment compaction. A coordinator or service
+//!   recovers its full corpus (bitwise, including record order) from
+//!   [`JobStore::open`] on startup, then warms its model caches from
+//!   the recovered generation.
+//! * [`sync`] — the **peer delta-sync protocol**: per-(org, job)
+//!   high-water marks ([`crate::repo::OrgWatermark`]) drive
+//!   `SyncPull`/`SyncPush` exchanges that ship only missing records.
+//!   Merge-level dedup with deterministic conflict resolution makes the
+//!   exchange idempotent and convergent: any gossip order drives peers
+//!   to bitwise-identical repositories. [`SyncDriver`] runs the
+//!   exchange on a background thread.
+//!
+//! The write path is layered: a [`JobShard`](crate::coordinator::shard)
+//! mutates its repo, logs exactly the applied ops through its attached
+//! [`JobStore`], and lets [`JobStore::maybe_compact`] fold the WAL into
+//! a snapshot when it grows. Reads never touch the store.
+
+pub mod segment;
+pub mod sync;
+
+pub use segment::{JobStore, StoreOp, DEFAULT_COMPACT_THRESHOLD, DEFAULT_SEGMENT_CAP};
+pub use sync::{sync_all, sync_job, SyncDriver, SyncStats};
+
+use crate::repo::RuntimeDataRepo;
+use crate::workloads::JobKind;
+use std::path::Path;
+
+/// Open (or create) the per-job stores under `root`, recovering every
+/// job's repository — one entry per [`JobKind::all`] kind, in that
+/// order.
+pub fn open_all(root: &Path) -> anyhow::Result<Vec<(JobStore, RuntimeDataRepo)>> {
+    JobKind::all()
+        .into_iter()
+        .map(|kind| JobStore::open(root, kind))
+        .collect()
+}

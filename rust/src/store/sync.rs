@@ -1,0 +1,193 @@
+//! Peer delta-sync: convergent runtime-data exchange between
+//! independently-running C3O deployments.
+//!
+//! The protocol is three [`crate::api`] requests, all spoken through the
+//! deployment-agnostic [`Client`] trait, so any two deployments (two
+//! services, a service and a sequential coordinator, ...) can gossip:
+//!
+//! 1. `Watermarks { job }` — read the local per-org high-water marks.
+//! 2. `SyncPull { job, watermarks }` — ask a peer for every record of
+//!    each org whose watermark differs; the reply also carries the
+//!    peer's own marks, so one round trip primes the reverse direction.
+//! 3. `SyncPush { job, records }` — apply a delta through merge-level
+//!    dedup with deterministic conflict resolution, then canonicalize
+//!    the repo order. Idempotent: re-pushing a delta changes nothing.
+//!
+//! [`sync_job`] performs one full bidirectional exchange; because merge
+//! resolution is a deterministic total order, repeated exchanges drive
+//! any set of peers to **bitwise-identical** repositories regardless of
+//! gossip order (property-tested in `rust/tests/federation.rs`).
+//! [`SyncDriver`] runs exchanges on a background thread at a fixed
+//! interval — the service-side gossip loop.
+
+use crate::api::{ApiError, Client};
+use crate::workloads::JobKind;
+use std::sync::mpsc;
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+/// Counters from one or more sync exchanges.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct SyncStats {
+    /// `SyncPull` round trips issued.
+    pub pulls: u64,
+    /// Records applied locally (adds + replacements).
+    pub records_in: u64,
+    /// Records the peer applied from us.
+    pub records_out: u64,
+    /// Records shipped over the wire in either direction, applied or
+    /// not. `offered > records_in + records_out` means deltas are being
+    /// re-shipped without effect — the per-org granularity re-sends a
+    /// whole org whenever watermarks differ, e.g. when one peer holds
+    /// blind-contributed duplicate configurations the other's merge
+    /// dedup will never accept (see
+    /// [`delta_for`](crate::repo::RuntimeDataRepo::delta_for)).
+    pub offered: u64,
+    /// Runtime disagreements surfaced by either side.
+    pub conflicts: u64,
+    /// Exchanges that failed (driver keeps going; the next tick retries).
+    pub errors: u64,
+}
+
+impl SyncStats {
+    /// Accumulate another stats block.
+    pub fn fold(&mut self, other: &SyncStats) {
+        self.pulls += other.pulls;
+        self.records_in += other.records_in;
+        self.records_out += other.records_out;
+        self.offered += other.offered;
+        self.conflicts += other.conflicts;
+        self.errors += other.errors;
+    }
+
+    /// True when the exchange *changed* no repository in either
+    /// direction — the peers hold converged (merge-equivalent) data for
+    /// the synced jobs. Note this is convergence up to merge dedup:
+    /// blind local duplicates are contribution history, not shared
+    /// state, so they neither block quiescence nor transfer; a
+    /// quiescent exchange can still have `offered > 0` for such orgs.
+    pub fn quiescent(&self) -> bool {
+        self.records_in == 0 && self.records_out == 0
+    }
+}
+
+/// One full bidirectional exchange for one job kind.
+///
+/// Inbound: read local watermarks, pull the peer's delta against them,
+/// apply it. Outbound: the pull reply carried the peer's marks — compute
+/// our delta against those (a local `SyncPull`) and push it. Both
+/// directions reuse merge's dedup, so the exchange is idempotent and
+/// over-shipping (the per-org delta granularity) is harmless.
+pub fn sync_job(
+    local: &mut dyn Client,
+    peer: &mut dyn Client,
+    job: JobKind,
+) -> Result<SyncStats, ApiError> {
+    let mut stats = SyncStats::default();
+
+    // inbound: what does the peer hold that we lack?
+    let ours = local.watermarks(job)?;
+    let delta = peer.sync_pull(job, ours.watermarks)?;
+    stats.pulls += 1;
+    let peer_marks = delta.watermarks.clone();
+    stats.offered += delta.records.len() as u64;
+    if !delta.records.is_empty() {
+        let report = local.sync_push(job, delta.records)?;
+        stats.records_in += report.changed() as u64;
+        stats.conflicts += report.conflicts.len() as u64;
+    }
+
+    // outbound: ship the peer what it lacks. Computed *after* the
+    // inbound apply, so records we just learned (that the peer already
+    // holds) are not echoed back.
+    let out = local.sync_pull(job, peer_marks)?;
+    stats.pulls += 1;
+    stats.offered += out.records.len() as u64;
+    if !out.records.is_empty() {
+        let report = peer.sync_push(job, out.records)?;
+        stats.records_out += report.changed() as u64;
+        stats.conflicts += report.conflicts.len() as u64;
+    }
+    Ok(stats)
+}
+
+/// [`sync_job`] over several job kinds, stats folded.
+pub fn sync_all(
+    local: &mut dyn Client,
+    peer: &mut dyn Client,
+    jobs: &[JobKind],
+) -> Result<SyncStats, ApiError> {
+    let mut total = SyncStats::default();
+    for &job in jobs {
+        total.fold(&sync_job(local, peer, job)?);
+    }
+    Ok(total)
+}
+
+/// Background gossip loop: exchanges deltas between a local deployment
+/// and a set of peers at a fixed interval, on its own thread.
+///
+/// The driver holds plain [`Client`] handles (e.g.
+/// [`ServiceClient`](crate::coordinator::service::ServiceClient)s), so
+/// it composes with any deployment. A failed exchange is counted and
+/// retried on the next tick; a peer answering
+/// [`ApiError::Stopped`] ends the loop (the deployment is gone).
+pub struct SyncDriver {
+    stop: mpsc::Sender<()>,
+    handle: Option<JoinHandle<SyncStats>>,
+}
+
+impl SyncDriver {
+    /// Spawn the loop: one immediate round, then one round per
+    /// `interval` until [`SyncDriver::stop`].
+    pub fn spawn<C: Client + Send + 'static>(
+        mut local: C,
+        mut peers: Vec<C>,
+        jobs: Vec<JobKind>,
+        interval: Duration,
+    ) -> SyncDriver {
+        let (stop_tx, stop_rx) = mpsc::channel::<()>();
+        let handle = std::thread::spawn(move || {
+            let mut total = SyncStats::default();
+            loop {
+                for peer in peers.iter_mut() {
+                    for &job in &jobs {
+                        match sync_job(&mut local, peer, job) {
+                            Ok(stats) => total.fold(&stats),
+                            Err(ApiError::Stopped) => return total,
+                            Err(_) => total.errors += 1,
+                        }
+                    }
+                }
+                match stop_rx.recv_timeout(interval) {
+                    // stop requested, or the driver handle is gone
+                    Ok(()) | Err(mpsc::RecvTimeoutError::Disconnected) => return total,
+                    Err(mpsc::RecvTimeoutError::Timeout) => {}
+                }
+            }
+        });
+        SyncDriver {
+            stop: stop_tx,
+            handle: Some(handle),
+        }
+    }
+
+    /// Stop the loop and return the accumulated stats.
+    pub fn stop(mut self) -> SyncStats {
+        self.stop_inner()
+    }
+
+    fn stop_inner(&mut self) -> SyncStats {
+        let _ = self.stop.send(());
+        match self.handle.take() {
+            Some(handle) => handle.join().unwrap_or_default(),
+            None => SyncStats::default(),
+        }
+    }
+}
+
+impl Drop for SyncDriver {
+    fn drop(&mut self) {
+        self.stop_inner();
+    }
+}

@@ -87,6 +87,28 @@ impl Table {
     }
 }
 
+/// Render a single CSV row (quoting as needed) **without** a trailing
+/// newline — the segment store's line-framed WAL needs exactly one row
+/// per physical line. Fields containing a newline would break that
+/// framing; the store rejects them before rendering.
+pub fn render_line(fields: &[String]) -> String {
+    let mut out = String::new();
+    write_row(&mut out, fields);
+    out.pop(); // drop the '\n' write_row appends
+    out
+}
+
+/// Parse a single CSV line into its fields (the inverse of
+/// [`render_line`]).
+pub fn parse_line(line: &str) -> Result<Vec<String>, CsvError> {
+    let mut rows = parse_rows(line)?;
+    match rows.len() {
+        0 => Ok(Vec::new()),
+        1 => Ok(rows.remove(0)),
+        n => Err(CsvError::Io(format!("expected one CSV row, got {n}"))),
+    }
+}
+
 /// CSV parse errors. (Display/Error are hand-implemented — `thiserror`
 /// is not in the offline vendor set.)
 #[derive(Debug, PartialEq)]
@@ -271,6 +293,15 @@ mod tests {
         t.push(vec!["héllo → wörld".into()]);
         let parsed = Table::parse(&t.to_csv()).unwrap();
         assert_eq!(parsed.rows, t.rows);
+    }
+
+    #[test]
+    fn line_round_trip() {
+        let fields = vec!["12".to_string(), "a,b".to_string(), "say \"hi\"".to_string()];
+        let line = render_line(&fields);
+        assert!(!line.contains('\n'));
+        assert_eq!(parse_line(&line).unwrap(), fields);
+        assert_eq!(parse_line("").unwrap(), Vec::<String>::new());
     }
 
     #[test]

@@ -1,0 +1,71 @@
+//! Small deterministic hashing for content digests (FNV-1a).
+//!
+//! The federation layer identifies "do we hold the same records for this
+//! organization?" by an order-independent digest of the record set
+//! ([`crate::repo::OrgWatermark`]), and the segment store stamps every
+//! WAL line with a checksum so a torn tail write is detected on
+//! recovery. Both need a stable, dependency-free 64-bit hash — `std`'s
+//! `DefaultHasher` is explicitly not stable across releases, so the
+//! classic FNV-1a is implemented here.
+
+/// FNV-1a 64-bit offset basis.
+const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+/// FNV-1a 64-bit prime.
+const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
+
+/// FNV-1a over a byte slice. Deterministic across platforms and
+/// releases; used for WAL line checksums and org watermark digests.
+pub fn fnv1a64(bytes: &[u8]) -> u64 {
+    let mut h = FNV_OFFSET;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(FNV_PRIME);
+    }
+    h
+}
+
+/// FNV-1a over several byte slices, as if concatenated with a `0xFF`
+/// separator (a byte that cannot appear inside UTF-8 text), so
+/// `("ab", "c")` and `("a", "bc")` hash differently.
+pub fn fnv1a64_parts(parts: &[&[u8]]) -> u64 {
+    let mut h = FNV_OFFSET;
+    for part in parts {
+        for &b in *part {
+            h ^= b as u64;
+            h = h.wrapping_mul(FNV_PRIME);
+        }
+        h ^= 0xFF;
+        h = h.wrapping_mul(FNV_PRIME);
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn known_vectors() {
+        // Published FNV-1a test vectors.
+        assert_eq!(fnv1a64(b""), 0xcbf2_9ce4_8422_2325);
+        assert_eq!(fnv1a64(b"a"), 0xaf63_dc4c_8601_ec8c);
+        assert_eq!(fnv1a64(b"foobar"), 0x85944171f73967e8);
+    }
+
+    #[test]
+    fn parts_are_boundary_sensitive() {
+        assert_ne!(
+            fnv1a64_parts(&[b"ab", b"c"]),
+            fnv1a64_parts(&[b"a", b"bc"])
+        );
+        assert_eq!(
+            fnv1a64_parts(&[b"ab", b"c"]),
+            fnv1a64_parts(&[b"ab", b"c"])
+        );
+    }
+
+    #[test]
+    fn different_inputs_differ() {
+        assert_ne!(fnv1a64(b"record-1"), fnv1a64(b"record-2"));
+    }
+}

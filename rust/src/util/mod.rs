@@ -8,6 +8,7 @@
 //!   variance model, and all property tests are seeded and reproducible).
 //! * [`stats`] — medians, quantiles, means, linear regression, MAPE/SMAPE.
 //! * [`csv`] — minimal CSV reading/writing for the runtime-data repository.
+//! * [`hash`] — stable FNV-1a hashing for WAL checksums and org digests.
 //! * [`json`] — minimal JSON writer for metrics/figure exports.
 //! * [`bench`] — a tiny criterion-style harness used by the
 //!   `harness = false` bench binaries (warmup, timed iterations,
@@ -19,6 +20,7 @@
 
 pub mod bench;
 pub mod csv;
+pub mod hash;
 pub mod json;
 pub mod matrix;
 pub mod prop;

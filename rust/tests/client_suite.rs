@@ -134,6 +134,29 @@ fn scenario(client: &mut dyn Client, corpus: &Corpus) -> Vec<Fingerprint> {
         actual_bits: grep_outcome.actual_runtime_s.to_bits(),
     });
 
+    // federation reads: the watermarks cover every contributing org,
+    // and their counts sum to the repository size
+    let marks = client.watermarks(JobKind::Sort).unwrap();
+    assert!(marks.watermarks.contains_key("external"));
+    assert_eq!(
+        marks.watermarks.values().map(|m| m.count).sum::<u64>(),
+        (info.records + 2) as u64,
+        "corpus + submitted run + external contribution"
+    );
+    // a fresh peer (empty marks) pulls the whole corpus as its delta
+    let delta = client.sync_pull(JobKind::Sort, Default::default()).unwrap();
+    assert_eq!(delta.records.len(), info.records + 2);
+    assert_eq!(delta.generation, marks.generation);
+    assert_eq!(delta.watermarks, marks.watermarks);
+    // re-pushing an already-known record is a no-op: the exchange is
+    // idempotent and must not move the generation
+    let report = client
+        .sync_push(JobKind::Sort, vec![external_record()])
+        .unwrap();
+    assert_eq!(report.changed(), 0);
+    assert!(report.conflicts.is_empty());
+    assert_eq!(report.generation, marks.generation);
+
     // metrics agree across deployments
     let m = client.metrics().unwrap();
     assert_eq!(m.submissions, 2);
@@ -142,6 +165,8 @@ fn scenario(client: &mut dyn Client, corpus: &Corpus) -> Vec<Fingerprint> {
     assert_eq!(m.retrains, 2, "one training per shared corpus");
     assert_eq!(m.cache_hits, 2, "both submissions decided from the cache");
     assert_eq!(m.fallbacks, 0);
+    assert_eq!(m.sync_pushes, 1);
+    assert_eq!(m.sync_records_applied, 0, "the re-push applied nothing");
 
     trace
 }

@@ -1,0 +1,433 @@
+//! Federation tests: convergence of the peer delta-sync protocol and
+//! durability of the segment store — the acceptance gates of the
+//! persistence + federation subsystem.
+//!
+//! * Property: any interleaving of `SyncPull`/`SyncPush` exchanges
+//!   between N peers converges to identical generation + identical
+//!   canonical records (disjoint corpora), and to identical content
+//!   with surfaced conflicts when peers disagree on measurements.
+//! * Crash recovery: a store killed mid-append reopens with no loss of
+//!   complete records and no duplication.
+//! * Acceptance: two durable services fed disjoint org corpora
+//!   converge to bitwise-identical repositories serving
+//!   bitwise-identical `Recommend` decisions, and a restarted service
+//!   recovers its corpus and pre-restart generation from the store.
+
+use c3o::cloud::Cloud;
+use c3o::configurator::JobRequest;
+use c3o::coordinator::{Coordinator, CoordinatorService, ServiceConfig};
+use c3o::models::Engine;
+use c3o::repo::{RuntimeDataRepo, RuntimeRecord};
+use c3o::store::{sync_all, sync_job, JobStore, StoreOp, SyncStats};
+use c3o::util::prop::{forall, Gen};
+use c3o::workloads::{ExperimentGrid, JobKind};
+use std::path::PathBuf;
+use std::time::Duration;
+
+const MACHINES: [&str; 3] = ["c5.xlarge", "m5.xlarge", "r5.xlarge"];
+
+fn temp_root(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("c3o_fed_{}_{name}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+/// A no-training peer (cold-start threshold maxed): the properties
+/// exercise the exchange, not model selection.
+fn peer(cloud: &Cloud, seed: u64) -> Coordinator {
+    let mut coord = Coordinator::with_engine(cloud.clone(), Engine::native(), seed);
+    coord.min_records = usize::MAX;
+    coord
+}
+
+/// Sweep the peer chain (0,1), (1,2), ... until a full sweep moves no
+/// records; panics if `max_sweeps` is not enough.
+fn sync_until_quiescent(peers: &mut [Coordinator], job: JobKind, max_sweeps: usize) -> SyncStats {
+    let mut total = SyncStats::default();
+    for _ in 0..max_sweeps {
+        let mut sweep = SyncStats::default();
+        for i in 0..peers.len() - 1 {
+            let (left, right) = peers.split_at_mut(i + 1);
+            let stats = sync_job(&mut left[i], &mut right[0], job).unwrap();
+            sweep.fold(&stats);
+        }
+        total.fold(&sweep);
+        if sweep.quiescent() {
+            return total;
+        }
+    }
+    panic!("no quiescence after {max_sweeps} sweeps: {total:?}");
+}
+
+#[test]
+fn gossip_converges_to_identical_generation_and_records() {
+    let cloud = Cloud::aws_like();
+    forall("gossip_convergence", 25, |g| {
+        let n_peers = g.usize_in(2, 4);
+        let mut peers: Vec<Coordinator> = (0..n_peers)
+            .map(|i| peer(&cloud, 100 + i as u64))
+            .collect();
+        // disjoint corpora: each peer's configurations are unique to it
+        // (the data-gb feature embeds the peer index)
+        let mut total_records = 0usize;
+        for (i, p) in peers.iter_mut().enumerate() {
+            let count = g.usize_in(1, 20);
+            total_records += count;
+            let records: Vec<RuntimeRecord> = (0..count)
+                .map(|k| RuntimeRecord {
+                    job: JobKind::Sort,
+                    org: format!("org-{i}"),
+                    machine: MACHINES[g.usize_in(0, 2)].to_string(),
+                    scaleout: g.usize_in(2, 12) as u32,
+                    job_features: vec![(i * 10_000 + k) as f64 + 0.5],
+                    runtime_s: g.f64_log(10.0, 5000.0),
+                })
+                .collect();
+            p.share(&RuntimeDataRepo::from_records(JobKind::Sort, records))
+                .unwrap();
+        }
+
+        // a burst of random exchanges in arbitrary order...
+        for _ in 0..g.usize_in(0, 6) {
+            let i = g.usize_in(0, n_peers - 1);
+            let j = g.usize_in(0, n_peers - 1);
+            if i == j {
+                continue;
+            }
+            let (lo, hi) = (i.min(j), i.max(j));
+            let (left, right) = peers.split_at_mut(hi);
+            sync_job(&mut left[lo], &mut right[0], JobKind::Sort).unwrap();
+        }
+        // ...then sweeps until quiescent
+        sync_until_quiescent(&mut peers, JobKind::Sort, 20);
+
+        let reference = peers[0].repo(JobKind::Sort).unwrap();
+        let ref_records = reference.canonical_records();
+        assert_eq!(ref_records.len(), total_records, "disjoint corpora only add");
+        for p in &peers[1..] {
+            let repo = p.repo(JobKind::Sort).unwrap();
+            assert_eq!(
+                p.generation(JobKind::Sort),
+                peers[0].generation(JobKind::Sort),
+                "generations converge"
+            );
+            assert_eq!(
+                repo.canonical_records(),
+                ref_records,
+                "record sets converge"
+            );
+            assert_eq!(repo.content_digest(), reference.content_digest());
+            assert_eq!(repo.watermarks(), reference.watermarks());
+        }
+    });
+}
+
+#[test]
+fn conflicting_measurements_converge_to_one_deterministic_winner() {
+    let cloud = Cloud::aws_like();
+    forall("conflict_convergence", 25, |g| {
+        let n_peers = g.usize_in(2, 3);
+        // every peer measures the SAME configuration grid with its own
+        // runtimes: every shared key is a potential conflict
+        let n_configs = g.usize_in(1, 10);
+        let configs: Vec<(String, u32, f64)> = (0..n_configs)
+            .map(|k| {
+                (
+                    MACHINES[g.usize_in(0, 2)].to_string(),
+                    g.usize_in(2, 12) as u32,
+                    k as f64 + 0.5,
+                )
+            })
+            .collect();
+        let mut all_records: Vec<RuntimeRecord> = Vec::new();
+        let mut peers: Vec<Coordinator> = Vec::new();
+        for i in 0..n_peers {
+            let records: Vec<RuntimeRecord> = configs
+                .iter()
+                .map(|(machine, scaleout, gb)| RuntimeRecord {
+                    job: JobKind::Sort,
+                    org: format!("org-{i}"),
+                    machine: machine.clone(),
+                    scaleout: *scaleout,
+                    job_features: vec![*gb],
+                    runtime_s: g.f64_log(10.0, 5000.0),
+                })
+                .collect();
+            all_records.extend(records.iter().cloned());
+            let mut p = peer(&cloud, 200 + i as u64);
+            p.share(&RuntimeDataRepo::from_records(JobKind::Sort, records))
+                .unwrap();
+            peers.push(p);
+        }
+        let stats = sync_until_quiescent(&mut peers, JobKind::Sort, 30);
+
+        // content converges (generation may legitimately differ when
+        // replacements happened on some peers but not others)
+        let ref_records = peers[0].repo(JobKind::Sort).unwrap().canonical_records();
+        for p in &peers[1..] {
+            assert_eq!(
+                p.repo(JobKind::Sort).unwrap().canonical_records(),
+                ref_records
+            );
+        }
+        // every configuration resolved to the globally-smallest
+        // (runtime, org) measurement — the deterministic winner
+        assert_eq!(ref_records.len(), n_configs);
+        for held in &ref_records {
+            let winner = all_records
+                .iter()
+                .filter(|r| r.config_key() == held.config_key())
+                .min_by(|a, b| a.merge_priority().cmp(&b.merge_priority()))
+                .expect("config came from somewhere");
+            assert_eq!(held.org, winner.org);
+            assert_eq!(held.runtime_s.to_bits(), winner.runtime_s.to_bits());
+        }
+        // disagreements were surfaced, not silently dropped (each
+        // config was measured by every peer; identical runtimes from
+        // the log-uniform generator are vanishingly rare but possible,
+        // so only require conflicts when runtimes actually differed)
+        let distinct_runtimes = {
+            let mut bits: Vec<u64> = all_records.iter().map(|r| r.runtime_s.to_bits()).collect();
+            bits.sort_unstable();
+            bits.dedup();
+            bits.len()
+        };
+        if n_peers > 1 && distinct_runtimes == all_records.len() {
+            assert!(stats.conflicts > 0, "conflicts must be surfaced");
+        }
+    });
+}
+
+#[test]
+fn crash_torn_append_recovers_without_loss_or_duplication() {
+    let root = temp_root("crash_recovery");
+    let (mut store, mut repo) = JobStore::open(&root, JobKind::Sort).unwrap();
+    // a blind-contribute history where consecutive pairs re-measure the
+    // SAME configuration (the submit path allows duplicates) — recovery
+    // must preserve them, not dedup them
+    for i in 0..20u32 {
+        let record = RuntimeRecord {
+            job: JobKind::Sort,
+            org: format!("org-{}", i % 3),
+            machine: MACHINES[((i / 2) % 3) as usize].to_string(),
+            scaleout: 2 + (i / 2) % 6,
+            job_features: vec![10.0 + (i / 2) as f64],
+            runtime_s: 100.0 + i as f64,
+        };
+        repo.contribute(record.clone()).unwrap();
+        store
+            .append(&[StoreOp::Contribute(record)], repo.generation())
+            .unwrap();
+    }
+    let pre_crash = repo.clone();
+    drop(store);
+
+    // kill mid-append: torn half-line at the tail of the last segment
+    let seg = std::fs::read_dir(root.join("sort"))
+        .unwrap()
+        .map(|e| e.unwrap().path())
+        .filter(|p| p.file_name().unwrap().to_string_lossy().starts_with("wal-"))
+        .max()
+        .unwrap();
+    let mut bytes = std::fs::read(&seg).unwrap();
+    bytes.extend_from_slice(b"21,C,sort,org-0,m5.xla");
+    std::fs::write(&seg, bytes).unwrap();
+
+    let (_store2, recovered) = JobStore::open(&root, JobKind::Sort).unwrap();
+    assert_eq!(recovered.records(), pre_crash.records(), "no loss, no dup");
+    assert_eq!(recovered.generation(), pre_crash.generation());
+
+    // reopening again is idempotent
+    let (_store3, recovered2) = JobStore::open(&root, JobKind::Sort).unwrap();
+    assert_eq!(recovered2.records(), pre_crash.records());
+    let _ = std::fs::remove_dir_all(root);
+}
+
+#[test]
+fn background_sync_driver_converges_two_services() {
+    let cloud = Cloud::aws_like();
+    let corpus = sort_corpus(&cloud);
+    let half = corpus.len() / 2;
+    let service_a = CoordinatorService::spawn(
+        cloud.clone(),
+        ServiceConfig::default()
+            .with_workers(2)
+            .with_pjrt_workers(0)
+            .with_seed(3),
+    );
+    let service_b = CoordinatorService::spawn(
+        cloud,
+        ServiceConfig::default()
+            .with_workers(2)
+            .with_pjrt_workers(0)
+            .with_seed(4),
+    );
+    service_a
+        .share(RuntimeDataRepo::from_records(
+            JobKind::Sort,
+            relabel(&corpus.records()[..half], "org-alpha"),
+        ))
+        .unwrap();
+    service_b
+        .share(RuntimeDataRepo::from_records(
+            JobKind::Sort,
+            relabel(&corpus.records()[half..], "org-beta"),
+        ))
+        .unwrap();
+
+    // the background gossip loop does the rest
+    let driver = service_a.sync_with(
+        vec![service_b.client()],
+        vec![JobKind::Sort],
+        Duration::from_millis(25),
+    );
+    let deadline = std::time::Instant::now() + Duration::from_secs(60);
+    let target = corpus.len() as u64;
+    while service_a.generation(JobKind::Sort) != target
+        || service_b.generation(JobKind::Sort) != target
+    {
+        assert!(
+            std::time::Instant::now() < deadline,
+            "sync driver did not converge: generations {}/{} (want {target})",
+            service_a.generation(JobKind::Sort),
+            service_b.generation(JobKind::Sort),
+        );
+        std::thread::sleep(Duration::from_millis(10));
+    }
+    let stats = driver.stop();
+    assert_eq!(
+        (stats.records_in + stats.records_out) as usize,
+        corpus.len(),
+        "exactly one full exchange despite repeated rounds: {stats:?}"
+    );
+    assert_eq!(
+        service_a.repo_snapshot(JobKind::Sort).canonical_records(),
+        service_b.repo_snapshot(JobKind::Sort).canonical_records()
+    );
+    service_a.shutdown();
+    service_b.shutdown();
+}
+
+// ---------------------------------------------------------------------------
+// acceptance: two durable services converge and survive restart
+// ---------------------------------------------------------------------------
+
+fn sort_corpus(cloud: &Cloud) -> RuntimeDataRepo {
+    ExperimentGrid {
+        experiments: ExperimentGrid::paper_table1()
+            .experiments
+            .into_iter()
+            .filter(|e| e.spec.kind() == JobKind::Sort)
+            .collect(),
+        repetitions: 1,
+    }
+    .execute(cloud, 11)
+    .repo_for(JobKind::Sort)
+}
+
+fn relabel(records: &[RuntimeRecord], org: &str) -> Vec<RuntimeRecord> {
+    records.iter().map(|r| r.with_org(org)).collect()
+}
+
+#[test]
+fn durable_services_converge_and_recover_across_restart() {
+    let cloud = Cloud::aws_like();
+    let root_a = temp_root("svc_a");
+    let root_b = temp_root("svc_b");
+    let no_artifacts = PathBuf::from("/nonexistent-artifacts");
+    let config_a = ServiceConfig::default()
+        .with_workers(2)
+        .with_pjrt_workers(0)
+        .with_artifacts_dir(no_artifacts.clone())
+        .with_seed(7)
+        .with_store_dir(root_a.clone());
+    let config_b = ServiceConfig::default()
+        .with_workers(2)
+        .with_pjrt_workers(0)
+        .with_artifacts_dir(no_artifacts)
+        .with_seed(9)
+        .with_store_dir(root_b.clone());
+
+    // two services from empty stores, fed disjoint org corpora
+    let corpus = sort_corpus(&cloud);
+    let half = corpus.len() / 2;
+    let service_a = CoordinatorService::open(cloud.clone(), config_a.clone()).unwrap();
+    let service_b = CoordinatorService::open(cloud.clone(), config_b).unwrap();
+    service_a
+        .share(RuntimeDataRepo::from_records(
+            JobKind::Sort,
+            relabel(&corpus.records()[..half], "org-alpha"),
+        ))
+        .unwrap();
+    service_b
+        .share(RuntimeDataRepo::from_records(
+            JobKind::Sort,
+            relabel(&corpus.records()[half..], "org-beta"),
+        ))
+        .unwrap();
+
+    // synced via SyncPull/SyncPush until quiescent
+    let mut client_a = service_a.client();
+    let mut client_b = service_b.client();
+    let stats = sync_all(&mut client_a, &mut client_b, &[JobKind::Sort]).unwrap();
+    assert_eq!(
+        (stats.records_in + stats.records_out) as usize,
+        corpus.len(),
+        "full bidirectional exchange"
+    );
+    let again = sync_all(&mut client_a, &mut client_b, &[JobKind::Sort]).unwrap();
+    assert!(again.quiescent(), "second exchange is a no-op");
+
+    // bitwise-identical repository contents (incl. record order: both
+    // sides canonicalized on apply)
+    let repo_a = service_a.repo_snapshot(JobKind::Sort);
+    let repo_b = service_b.repo_snapshot(JobKind::Sort);
+    assert_eq!(repo_a.records(), repo_b.records(), "bitwise-identical repos");
+    assert_eq!(repo_a.generation(), repo_b.generation());
+    assert_eq!(repo_a.len(), corpus.len());
+
+    // identical Recommend decisions, bit for bit
+    let request = JobRequest::sort(14.5).with_target_seconds(700.0);
+    let rec_a = client_a.recommend(request.clone()).unwrap();
+    let rec_b = client_b.recommend(request.clone()).unwrap();
+    assert_eq!(rec_a.choice.machine_type, rec_b.choice.machine_type);
+    assert_eq!(rec_a.choice.node_count, rec_b.choice.node_count);
+    assert_eq!(
+        rec_a.choice.predicted_runtime_s.to_bits(),
+        rec_b.choice.predicted_runtime_s.to_bits()
+    );
+    assert_eq!(rec_a.generation, rec_b.generation);
+    assert_eq!(rec_a.trained_at_generation, rec_b.trained_at_generation);
+
+    // restart A: the store is the only carrier of its state
+    let info_before = client_a.snapshot_info(JobKind::Sort).unwrap();
+    let records_before = repo_a.records().to_vec();
+    service_a.shutdown();
+    service_b.shutdown();
+
+    let service_a2 = CoordinatorService::open(cloud, config_a).unwrap();
+    let client_a2 = service_a2.client();
+    let info_after = client_a2.snapshot_info(JobKind::Sort).unwrap();
+    assert_eq!(
+        info_after.generation, info_before.generation,
+        "restart answers SnapshotInfo with the pre-restart generation"
+    );
+    assert_eq!(info_after.records, info_before.records);
+    assert_eq!(
+        service_a2.repo_snapshot(JobKind::Sort).records(),
+        &records_before[..],
+        "corpus recovered bitwise"
+    );
+    // the recovered service serves model reads before any new write —
+    // and decides exactly as it did before the restart
+    let rec_recovered = client_a2.recommend(request).unwrap();
+    assert_eq!(rec_recovered.choice.machine_type, rec_a.choice.machine_type);
+    assert_eq!(rec_recovered.choice.node_count, rec_a.choice.node_count);
+    assert_eq!(
+        rec_recovered.choice.predicted_runtime_s.to_bits(),
+        rec_a.choice.predicted_runtime_s.to_bits()
+    );
+    service_a2.shutdown();
+    let _ = std::fs::remove_dir_all(root_a);
+    let _ = std::fs::remove_dir_all(root_b);
+}

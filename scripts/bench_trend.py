@@ -1,7 +1,7 @@
 #!/usr/bin/env python3
 """Diff a fresh BENCH_serve_throughput.json against the committed baseline.
 
-Usage: bench_trend.py BASELINE.json CURRENT.json
+Usage: bench_trend.py BASELINE.json CURRENT.json [EXTRA.json ...]
 
 Prints a throughput comparison table for CI trend reporting. Exits
 nonzero only on a gross regression (current < REGRESSION_FLOOR x
@@ -12,6 +12,11 @@ A baseline with {"placeholder": true} records that no reference numbers
 have been committed yet: the script then just prints the current run and
 succeeds. Refresh the baseline by copying a representative run's
 BENCH_serve_throughput.json over the .baseline.json file.
+
+EXTRA files are additional BENCH_*.json outputs without a committed
+baseline (e.g. BENCH_sync_throughput.json): each is summarized,
+report-only. The sync_throughput schema gets a dedicated table; anything
+else is pretty-printed.
 """
 
 import json
@@ -20,18 +25,43 @@ import sys
 REGRESSION_FLOOR = 0.5
 
 
+def report_extra(path):
+    with open(path) as f:
+        doc = json.load(f)
+    print(f"\n--- {path} (report-only, no baseline) ---")
+    if doc.get("bench") == "sync_throughput":
+        replay = doc.get("replay", {})
+        sync = doc.get("sync", {})
+        print(f"{'metric':<42} {'value':>14}")
+        rows = [
+            ("records", doc.get("records")),
+            ("replay WAL (records/s)", replay.get("wal_records_per_s")),
+            ("replay snapshot (records/s)", replay.get("snapshot_records_per_s")),
+            ("sync exchange (records/s)", sync.get("records_per_s")),
+            ("sync records exchanged", sync.get("records_exchanged")),
+            ("sync pulls", sync.get("pulls")),
+            ("sync conflicts", sync.get("conflicts")),
+        ]
+        for label, value in rows:
+            if value is not None:
+                print(f"{label:<42} {float(value):>14.1f}")
+    else:
+        print(json.dumps(doc, indent=2))
+
+
 def service_points(doc, section=None, key="jobs_per_s"):
     node = doc.get(section, {}) if section else doc
     return {int(p["clients"]): float(p[key]) for p in node.get("service", [])}
 
 
 def main():
-    if len(sys.argv) != 3:
+    if len(sys.argv) < 3:
         sys.exit(__doc__)
     with open(sys.argv[1]) as f:
         base = json.load(f)
     with open(sys.argv[2]) as f:
         cur = json.load(f)
+    extras = sys.argv[3:]
 
     if base.get("placeholder"):
         print("baseline is a placeholder — reporting current numbers only")
@@ -40,6 +70,8 @@ def main():
             "\nTo start trend-diffing, commit this run as "
             "BENCH_serve_throughput.baseline.json"
         )
+        for path in extras:
+            report_extra(path)
         return
 
     failures = []
@@ -83,6 +115,9 @@ def main():
                     base_r[clients],
                     cur_r[clients],
                 )
+
+    for path in extras:
+        report_extra(path)
 
     if failures:
         sys.exit(f"gross throughput regression (< {REGRESSION_FLOOR}x baseline): {failures}")
