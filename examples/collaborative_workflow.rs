@@ -14,6 +14,13 @@
 //!   4. **Report** — headline metrics: runtime-prediction MAPE, target
 //!      hit rate, and cost vs the naive-overprovisioning strategy the
 //!      paper says users fall back to.
+//!   5. **Persistence + federation** — two durable coordinators with
+//!      disjoint org corpora converge via SyncPull/SyncPush, and one is
+//!      recovered from its segment store.
+//!   6. **Record-level deltas** — after convergence, a single new
+//!      measurement travels as exactly ONE sequence-numbered op on the
+//!      next exchange (O(changed records), not O(org corpus)) — the
+//!      paper's "continuous cheap sharing" premise at steady state.
 //!
 //! Run with: `make artifacts && cargo run --release --example collaborative_workflow`
 
@@ -33,7 +40,7 @@ fn main() -> anyhow::Result<()> {
     let t0 = std::time::Instant::now();
 
     // ---- phase 1: the shared corpus (Table I) --------------------------
-    println!("[1/5] executing the 930-experiment grid (5 reps each)...");
+    println!("[1/6] executing the 930-experiment grid (5 reps each)...");
     let grid = ExperimentGrid::paper_table1();
     let corpus = grid.execute(&cloud, 42);
     let mut orgs: std::collections::BTreeSet<String> = Default::default();
@@ -49,7 +56,7 @@ fn main() -> anyhow::Result<()> {
     assert_eq!(corpus.len(), 930, "Table I count");
 
     // ---- phase 2: share through the coordinator session ----------------
-    println!("[2/5] sharing runtime data into the coordinator...");
+    println!("[2/6] sharing runtime data into the coordinator...");
     let session = Session::spawn(cloud.clone(), artifacts, 7);
     for kind in JobKind::all() {
         let shared = session.share(corpus.repo_for(kind))?;
@@ -57,7 +64,7 @@ fn main() -> anyhow::Result<()> {
     }
 
     // ---- phase 3: a new organization submits real work ------------------
-    println!("[3/5] new organization submits 25 jobs (targets attached)...");
+    println!("[3/6] new organization submits 25 jobs (targets attached)...");
     let org = Organization::new("fresh-org");
     let battery: Vec<JobRequest> = vec![
         JobRequest::sort(11.0).with_target_seconds(500.0),
@@ -113,7 +120,7 @@ fn main() -> anyhow::Result<()> {
     }
 
     // ---- phase 4: headline metrics --------------------------------------
-    println!("[4/5] headline report");
+    println!("[4/6] headline report");
     let metrics = session.metrics()?;
     let hit_rate = 100.0 * metrics.target_hit_rate();
     let mape = stats::mean(&errors);
@@ -160,7 +167,7 @@ fn main() -> anyhow::Result<()> {
     // CLI equivalent:
     //   c3o store --dir /tmp/c3o-alpha --mode seed     (durable corpus)
     //   c3o sync                                        (two-service demo)
-    println!("[5/5] persistence + federation walkthrough...");
+    println!("[5/6] persistence + federation walkthrough...");
     let store_alpha = std::env::temp_dir().join(format!("c3o_wf_alpha_{}", std::process::id()));
     let store_beta = std::env::temp_dir().join(format!("c3o_wf_beta_{}", std::process::id()));
     let _ = std::fs::remove_dir_all(&store_alpha);
@@ -195,7 +202,7 @@ fn main() -> anyhow::Result<()> {
     );
 
     // durability: drop alpha entirely and recover it from its store —
-    // corpus, generation, and a warm model, before any new write
+    // corpus, generation, op logs, and a warm model, before any new write
     let gen_before = alpha.generation(JobKind::Sort);
     drop(alpha);
     let mut recovered =
@@ -205,6 +212,39 @@ fn main() -> anyhow::Result<()> {
     println!(
         "      recovered coordinator at generation {} recommends {} x{}",
         gen_before, rec.choice.machine_type, rec.choice.node_count
+    );
+
+    // ---- phase 6: record-level deltas at steady state --------------------
+    // The converged federation now lives its real life: occasionally one
+    // new measurement lands somewhere. With the per-(org, job) op log,
+    // the next exchange ships exactly that op — not the whole org corpus.
+    println!("[6/6] record-level delta: one new measurement, one shipped op...");
+    recovered.contribute(RuntimeRecord {
+        job: JobKind::Sort,
+        org: "org-alpha".to_string(),
+        machine: "m5.xlarge".to_string(),
+        scaleout: 6,
+        job_features: vec![23.75],
+        runtime_s: 411.0,
+    })?;
+    let stats = c3o::store::sync_job(&mut recovered, &mut beta, JobKind::Sort)?;
+    println!(
+        "      exchange shipped {} op(s), applied {}, skipped {}",
+        stats.offered,
+        stats.records_in + stats.records_out,
+        stats.skipped
+    );
+    assert_eq!(stats.offered, 1, "exactly the changed record ships");
+    assert_eq!(stats.records_in + stats.records_out, 1);
+    let quiet = c3o::store::sync_job(&mut recovered, &mut beta, JobKind::Sort)?;
+    assert!(quiet.quiescent() && quiet.offered == 0, "then silence");
+    // the contributor appended locally (no reorder); the receiver
+    // canonicalized on apply — content is identical, compared in the
+    // canonical form
+    assert_eq!(
+        recovered.repo(JobKind::Sort).unwrap().canonical_records(),
+        beta.repo(JobKind::Sort).unwrap().canonical_records(),
+        "peers hold identical corpora again"
     );
     let _ = std::fs::remove_dir_all(&store_alpha);
     let _ = std::fs::remove_dir_all(&store_beta);

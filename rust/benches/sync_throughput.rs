@@ -1,13 +1,18 @@
-//! Bench: the federation subsystem's two hot paths, in records/second.
+//! Bench: the federation subsystem's hot paths, in records/second.
 //!
 //! * **Replay** — how fast a segment store recovers a corpus on
 //!   startup, from the WAL (line-by-line op replay) and from a compacted
-//!   snapshot (bulk CSV load). This bounds restart time for a durable
-//!   coordinator service.
+//!   snapshot (bulk CSV load + op-log sidecar). This bounds restart time
+//!   for a durable coordinator service.
 //! * **Sync** — how fast two peers holding disjoint org corpora
 //!   converge through a full `Watermarks`/`SyncPull`/`SyncPush`
 //!   exchange (both directions, merge-dedup applied). This bounds how
 //!   quickly a fresh deployment catches up with the federation.
+//! * **Incremental** — the record-level-delta payoff: after two peers
+//!   converge, exactly **one** record changes. The v3 (op log) exchange
+//!   must ship one op; the v2-equivalent org-granular exchange re-ships
+//!   the whole changed org. The shipped-record ratio is asserted ≥ 10x
+//!   and recorded in the JSON.
 //!
 //! Model training is disabled (cold-start threshold maxed) so the
 //! numbers measure persistence and exchange, not model selection.
@@ -19,7 +24,7 @@ use c3o::cloud::Cloud;
 use c3o::coordinator::Coordinator;
 use c3o::models::Engine;
 use c3o::repo::{RuntimeDataRepo, RuntimeRecord};
-use c3o::store::{sync_all, JobStore, StoreOp};
+use c3o::store::{sync_all, sync_job, sync_job_v2, JobStore, StoreOp, SyncStats};
 use c3o::util::json::Json;
 use c3o::workloads::JobKind;
 use std::path::PathBuf;
@@ -47,50 +52,16 @@ fn temp_root(name: &str) -> PathBuf {
     dir
 }
 
-fn main() {
-    let n: usize = std::env::var("C3O_SYNC_RECORDS")
-        .ok()
-        .and_then(|s| s.parse().ok())
-        .unwrap_or(4000);
-    let records = synthetic_records(n);
+fn relabel(rs: &[RuntimeRecord], org: &str) -> Vec<RuntimeRecord> {
+    rs.iter().map(|r| r.with_org(org)).collect()
+}
 
-    // ---- replay: WAL-only recovery -------------------------------------
-    let root = temp_root("replay");
-    {
-        let (mut store, mut repo) = JobStore::open(&root, JobKind::Sort).unwrap();
-        for chunk in records.chunks(64) {
-            let outcome = repo.merge_records(chunk).unwrap();
-            let ops: Vec<StoreOp> =
-                outcome.applied.into_iter().map(StoreOp::Merge).collect();
-            store.append(&ops, repo.generation()).unwrap();
-        }
-    }
-    let t0 = Instant::now();
-    let (mut store, repo) = JobStore::open(&root, JobKind::Sort).unwrap();
-    let wal_secs = t0.elapsed().as_secs_f64();
-    assert_eq!(repo.len(), n, "replay must recover every record");
-    let wal_rate = n as f64 / wal_secs;
-    println!("replay   WAL      : {n:>6} records in {wal_secs:.3}s  ({wal_rate:>9.0} records/s)");
-
-    // ---- replay: snapshot recovery -------------------------------------
-    store.compact(&repo).unwrap();
-    drop(store);
-    let t0 = Instant::now();
-    let (_store, repo2) = JobStore::open(&root, JobKind::Sort).unwrap();
-    let snap_secs = t0.elapsed().as_secs_f64();
-    assert_eq!(repo2.len(), n);
-    let snap_rate = n as f64 / snap_secs;
-    println!("replay   snapshot : {n:>6} records in {snap_secs:.3}s  ({snap_rate:>9.0} records/s)");
-    let _ = std::fs::remove_dir_all(&root);
-
-    // ---- sync: two peers with disjoint org corpora ---------------------
-    let cloud = Cloud::aws_like();
-    let half = n / 2;
-    let relabel = |rs: &[RuntimeRecord], org: &str| -> Vec<RuntimeRecord> {
-        rs.iter().map(|r| r.with_org(org)).collect()
-    };
+/// A pair of no-training peers, each having shared one half of
+/// `records` under its own org (not yet exchanged).
+fn seeded_peers(cloud: &Cloud, records: &[RuntimeRecord]) -> (Coordinator, Coordinator) {
+    let half = records.len() / 2;
     let mut peer_a = Coordinator::with_engine(cloud.clone(), Engine::native(), 1);
-    let mut peer_b = Coordinator::with_engine(cloud, Engine::native(), 2);
+    let mut peer_b = Coordinator::with_engine(cloud.clone(), Engine::native(), 2);
     // measure exchange, not model selection
     peer_a.min_records = usize::MAX;
     peer_b.min_records = usize::MAX;
@@ -106,7 +77,78 @@ fn main() {
             relabel(&records[half..], "beta"),
         ))
         .unwrap();
+    (peer_a, peer_b)
+}
 
+/// [`seeded_peers`] driven to convergence by one full exchange.
+fn converged_peers(
+    cloud: &Cloud,
+    records: &[RuntimeRecord],
+) -> (Coordinator, Coordinator, SyncStats) {
+    let (mut peer_a, mut peer_b) = seeded_peers(cloud, records);
+    let stats = sync_all(&mut peer_a, &mut peer_b, &[JobKind::Sort]).unwrap();
+    (peer_a, peer_b, stats)
+}
+
+/// The one-record update both incremental scenarios replay: a fresh
+/// configuration contributed by the (existing) org "alpha" on peer A.
+fn incremental_record(i: usize) -> RuntimeRecord {
+    RuntimeRecord {
+        job: JobKind::Sort,
+        org: "alpha".into(),
+        machine: MACHINES[0].to_string(),
+        scaleout: 2,
+        job_features: vec![1_000_000.0 + i as f64],
+        runtime_s: 123.0,
+    }
+}
+
+fn main() {
+    let n: usize = std::env::var("C3O_SYNC_RECORDS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(4000);
+    let records = synthetic_records(n);
+
+    // ---- replay: WAL-only recovery -------------------------------------
+    let root = temp_root("replay");
+    {
+        let (mut store, mut repo) = JobStore::open(&root, JobKind::Sort).unwrap();
+        for chunk in records.chunks(64) {
+            let outcome = repo.merge_records(chunk).unwrap();
+            let ops: Vec<StoreOp> = outcome
+                .applied
+                .into_iter()
+                .map(|op| StoreOp::Merge {
+                    seqno: op.seqno,
+                    record: op.record,
+                })
+                .collect();
+            store.append(&ops, repo.generation()).unwrap();
+        }
+    }
+    let t0 = Instant::now();
+    let (mut store, repo) = JobStore::open(&root, JobKind::Sort).unwrap();
+    let wal_secs = t0.elapsed().as_secs_f64();
+    assert_eq!(repo.len(), n, "replay must recover every record");
+    let wal_rate = n as f64 / wal_secs;
+    println!("replay   WAL      : {n:>6} records in {wal_secs:.3}s  ({wal_rate:>9.0} records/s)");
+
+    // ---- replay: snapshot (+ op-log sidecar) recovery -------------------
+    store.compact(&repo).unwrap();
+    drop(store);
+    let t0 = Instant::now();
+    let (_store, repo2) = JobStore::open(&root, JobKind::Sort).unwrap();
+    let snap_secs = t0.elapsed().as_secs_f64();
+    assert_eq!(repo2.len(), n);
+    assert_eq!(repo2.watermarks(), repo.watermarks(), "op logs recover too");
+    let snap_rate = n as f64 / snap_secs;
+    println!("replay   snapshot : {n:>6} records in {snap_secs:.3}s  ({snap_rate:>9.0} records/s)");
+    let _ = std::fs::remove_dir_all(&root);
+
+    // ---- sync: two peers with disjoint org corpora ---------------------
+    let cloud = Cloud::aws_like();
+    let (mut peer_a, mut peer_b) = seeded_peers(&cloud, &records);
     let t0 = Instant::now();
     let stats = sync_all(&mut peer_a, &mut peer_b, &[JobKind::Sort]).unwrap();
     let sync_secs = t0.elapsed().as_secs_f64();
@@ -114,9 +156,43 @@ fn main() {
     assert_eq!(exchanged as usize, n, "full bidirectional exchange");
     let again = sync_all(&mut peer_a, &mut peer_b, &[JobKind::Sort]).unwrap();
     assert!(again.quiescent(), "second exchange must be a no-op");
+    assert_eq!(again.offered, 0, "converged op logs offer nothing");
     let sync_rate = exchanged as f64 / sync_secs;
     println!(
         "sync     exchange : {exchanged:>6} records in {sync_secs:.3}s  ({sync_rate:>9.0} records/s)"
+    );
+
+    // ---- incremental: 1 of N changed ------------------------------------
+    // v3 (record-level): one new record ships as exactly one op.
+    peer_a.contribute(incremental_record(0)).unwrap();
+    let t0 = Instant::now();
+    let inc_v3 = sync_job(&mut peer_a, &mut peer_b, JobKind::Sort).unwrap();
+    let inc_v3_secs = t0.elapsed().as_secs_f64();
+    assert_eq!(inc_v3.records_in + inc_v3.records_out, 1);
+    assert_eq!(inc_v3.offered, 1, "v3 ships exactly the changed record");
+
+    // v2-equivalent (org-granular) on an identically-converged pair: the
+    // same one-record change re-ships the whole changed org.
+    let (mut v2_a, mut v2_b, _) = converged_peers(&cloud, &records);
+    v2_a.contribute(incremental_record(0)).unwrap();
+    let t0 = Instant::now();
+    let inc_v2 = sync_job_v2(&mut v2_a, &mut v2_b, JobKind::Sort).unwrap();
+    let inc_v2_secs = t0.elapsed().as_secs_f64();
+    assert_eq!(inc_v2.records_in + inc_v2.records_out, 1, "same data lands");
+    assert!(inc_v2.offered > 1, "v2 re-ships the whole changed org");
+
+    let ratio = inc_v2.offered as f64 / inc_v3.offered as f64;
+    println!(
+        "incremental (1 of {n} changed): v3 ships {} record(s) in {inc_v3_secs:.4}s, \
+         v2-equivalent ships {} in {inc_v2_secs:.4}s  ({ratio:.0}x fewer records at v3)",
+        inc_v3.offered, inc_v2.offered
+    );
+    assert!(
+        ratio >= 10.0,
+        "record-level sync must ship >= 10x fewer records than the org-granular path \
+         (got {ratio:.1}x: v3 {} vs v2 {})",
+        inc_v3.offered,
+        inc_v2.offered
     );
 
     let json = Json::obj(vec![
@@ -136,6 +212,17 @@ fn main() {
                 ("records_per_s", Json::Num(sync_rate)),
                 ("pulls", Json::Num(stats.pulls as f64)),
                 ("conflicts", Json::Num(stats.conflicts as f64)),
+            ]),
+        ),
+        (
+            "incremental",
+            Json::obj(vec![
+                ("changed_records", Json::Num(1.0)),
+                ("v3_records_shipped", Json::Num(inc_v3.offered as f64)),
+                ("v2_records_shipped", Json::Num(inc_v2.offered as f64)),
+                ("ship_ratio_v2_over_v3", Json::Num(ratio)),
+                ("v3_exchange_s", Json::Num(inc_v3_secs)),
+                ("v2_exchange_s", Json::Num(inc_v2_secs)),
             ]),
         ),
     ]);

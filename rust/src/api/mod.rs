@@ -41,7 +41,9 @@ use crate::cloud::Cloud;
 use crate::configurator::{ClusterChoice, JobRequest};
 use crate::coordinator::{JobOutcome, Metrics, Organization};
 use crate::models::ModelKind;
-use crate::repo::{MergeConflict, OrgWatermark, RuntimeDataRepo, RuntimeRecord};
+use crate::repo::{
+    LoggedOp, MergeConflict, OrgWatermark, OrgWatermarkV2, RuntimeDataRepo, RuntimeRecord, SyncOp,
+};
 use crate::util::json::Json;
 use crate::workloads::JobKind;
 use std::collections::BTreeMap;
@@ -54,7 +56,14 @@ use std::fmt;
 ///
 /// * v2 — federation: `Watermarks`/`SyncPull`/`SyncPush` requests, the
 ///   [`ApiError::Store`] class, structured merge conflicts.
-pub const API_VERSION: u32 = 2;
+/// * v3 — record-level deltas: watermarks are per-org op-log positions
+///   (`(seqno, digest)` [`OrgWatermark`]s), `SyncPull`/`SyncPush` ship
+///   sequence-numbered [`SyncOp`]s (O(changed records) per exchange),
+///   and merge-rejected ops advance the receiver's watermark so blind
+///   duplicates are never re-offered. The v2 org-granular exchange is
+///   still served, via the `WatermarksV2`/`SyncPullV2`/`SyncPushV2`
+///   compatibility translation.
+pub const API_VERSION: u32 = 3;
 
 // ---------------------------------------------------------------------------
 // errors
@@ -142,9 +151,17 @@ impl ApiError {
 /// absent from the catalog. Such records can never be featurized, so
 /// letting one into a shared repository would poison every later
 /// training run. Used identically by all deployments so they reject
-/// identically.
-pub fn validate_machines(cloud: &Cloud, records: &[RuntimeRecord]) -> Result<(), ApiError> {
-    if let Some(bad) = records.iter().find(|r| cloud.machine(&r.machine).is_none()) {
+/// identically. Accepts any borrowing iterator (a record slice, or the
+/// records inside a sync-op delta) so hot paths never clone to
+/// validate.
+pub fn validate_machines<'a, I>(cloud: &Cloud, records: I) -> Result<(), ApiError>
+where
+    I: IntoIterator<Item = &'a RuntimeRecord>,
+{
+    if let Some(bad) = records
+        .into_iter()
+        .find(|r| cloud.machine(&r.machine).is_none())
+    {
         return Err(ApiError::InvalidRequest(format!(
             "unknown machine type {:?}",
             bad.machine
@@ -187,24 +204,47 @@ pub enum Request {
     /// **Read.** Describe the model snapshot currently serving a job's
     /// reads. Answered by [`Response::SnapshotInfo`].
     SnapshotInfo { job: JobKind },
-    /// **Read.** The per-organization high-water marks of a job's
+    /// **Read.** The per-organization op-log positions of a job's
     /// shared repository — what a peer sends to ask "what am I
     /// missing?". Answered by [`Response::Watermarks`].
     Watermarks { job: JobKind },
-    /// **Read.** Delta extraction: every record of each org whose local
-    /// watermark differs from the requester's. The reply also carries
-    /// the responder's own marks (priming the reverse direction of a
+    /// **Read.** Record-level delta extraction: the sequence-numbered
+    /// ops past each of the requester's marks — O(changed records) when
+    /// the logs are prefix-aligned, a whole-org fallback when they have
+    /// diverged. The reply also carries the responder's own marks
+    /// (priming the reverse direction of a
     /// [`sync_job`](crate::store::sync::sync_job) exchange). Answered by
     /// [`Response::SyncDelta`].
     SyncPull {
         job: JobKind,
         watermarks: BTreeMap<String, OrgWatermark>,
     },
-    /// **Write.** Apply a peer's delta through merge-level dedup with
-    /// deterministic conflict resolution, canonicalize the repo order,
-    /// and refresh the model. Idempotent — re-pushing a delta changes
-    /// nothing. Answered by [`Response::SyncApplied`].
-    SyncPush {
+    /// **Write.** Apply a peer's record-level delta through merge-level
+    /// dedup with deterministic conflict resolution, canonicalize the
+    /// repo order, and refresh the model. Idempotent — re-pushing a
+    /// delta changes nothing, and a merge-rejected op still advances the
+    /// receiver's watermark (logged as *seen*), so it is never offered
+    /// again. Answered by [`Response::SyncApplied`].
+    SyncPush { job: JobKind, ops: Vec<SyncOp> },
+    /// **Read.** Legacy (v2) holdings watermarks, for peers that
+    /// predate the op log. Answered by [`Response::WatermarksV2`].
+    WatermarksV2 { job: JobKind },
+    /// **Read.** Legacy (v2) org-granular delta extraction: every held
+    /// record of each org whose holdings watermark differs — O(org
+    /// corpus) per changed org. Served via compatibility translation
+    /// ([`crate::repo::RuntimeDataRepo::delta_for_v2`]). Answered by
+    /// [`Response::SyncDeltaV2`].
+    SyncPullV2 {
+        job: JobKind,
+        watermarks: BTreeMap<String, OrgWatermarkV2>,
+    },
+    /// **Write.** Legacy (v2) delta application: bare records without
+    /// sequence numbers. Translated onto the op log by appending each
+    /// *applied* record with a fresh local seqno (which may mark the
+    /// org's log divergent from its home — subsequent v3 exchanges for
+    /// that org then fall back to whole-org ships, exactly the v2
+    /// cost). Answered by [`Response::SyncApplied`].
+    SyncPushV2 {
         job: JobKind,
         records: Vec<RuntimeRecord>,
     },
@@ -223,7 +263,10 @@ impl Request {
             Request::SnapshotInfo { job }
             | Request::Watermarks { job }
             | Request::SyncPull { job, .. }
-            | Request::SyncPush { job, .. } => Some(*job),
+            | Request::SyncPush { job, .. }
+            | Request::WatermarksV2 { job }
+            | Request::SyncPullV2 { job, .. }
+            | Request::SyncPushV2 { job, .. } => Some(*job),
         }
     }
 
@@ -235,6 +278,7 @@ impl Request {
                 | Request::Contribute { .. }
                 | Request::Share { .. }
                 | Request::SyncPush { .. }
+                | Request::SyncPushV2 { .. }
         )
     }
 }
@@ -289,7 +333,7 @@ pub struct SnapshotInfo {
     pub observed_machines: Vec<String>,
 }
 
-/// A job repository's per-organization high-water marks, stamped with
+/// A job repository's per-organization op-log positions, stamped with
 /// the generation they describe.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct WatermarkSet {
@@ -299,18 +343,41 @@ pub struct WatermarkSet {
     pub watermarks: BTreeMap<String, OrgWatermark>,
 }
 
-/// A delta computed against a peer's watermarks: the records the peer
-/// is missing, plus the responder's own marks for the reverse
-/// direction.
+/// Legacy (v2) holdings watermarks for a job repository.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct WatermarkSetV2 {
+    pub job: JobKind,
+    /// Repository generation the marks were read at.
+    pub generation: u64,
+    pub watermarks: BTreeMap<String, OrgWatermarkV2>,
+}
+
+/// A record-level delta computed against a peer's watermarks: the
+/// sequence-numbered ops the peer is missing, plus the responder's own
+/// marks for the reverse direction.
 #[derive(Debug, Clone)]
 pub struct SyncDelta {
     pub job: JobKind,
     /// Responder's repository generation at extraction time.
     pub generation: u64,
-    /// Records of every org whose watermark differed.
-    pub records: Vec<RuntimeRecord>,
+    /// Ops past each of the requester's marks, per-org in sequence
+    /// order.
+    pub ops: Vec<SyncOp>,
     /// The responder's own watermarks.
     pub watermarks: BTreeMap<String, OrgWatermark>,
+}
+
+/// A legacy (v2) org-granular delta: bare records of every org whose
+/// holdings watermark differed, plus the responder's own v2 marks.
+#[derive(Debug, Clone)]
+pub struct SyncDeltaV2 {
+    pub job: JobKind,
+    /// Responder's repository generation at extraction time.
+    pub generation: u64,
+    /// Records of every org whose watermark differed.
+    pub records: Vec<RuntimeRecord>,
+    /// The responder's own v2 watermarks.
+    pub watermarks: BTreeMap<String, OrgWatermarkV2>,
 }
 
 /// The structured result of applying a sync delta.
@@ -322,8 +389,15 @@ pub struct SyncReport {
     /// Existing records replaced by a deterministically-preferred
     /// incoming record.
     pub replaced: usize,
+    /// Ops that changed no holdings: already-seen re-deliveries plus
+    /// merge-rejected (seen) ops.
+    pub skipped: usize,
     /// Runtime disagreements surfaced (whichever side won).
     pub conflicts: Vec<MergeConflict>,
+    /// Holdings mutations per organization (adds + replacements,
+    /// keyed by the applied record's org) — the `c3o sync --json`
+    /// per-org accounting.
+    pub applied_by_org: BTreeMap<String, u64>,
     /// Repository generation after the apply.
     pub generation: u64,
 }
@@ -332,6 +406,35 @@ impl SyncReport {
     /// Total mutations (adds + replacements).
     pub fn changed(&self) -> usize {
         self.added + self.replaced
+    }
+
+    /// Assemble a report from one delta application — the one tally
+    /// every deployment's push path uses, so the per-org accounting can
+    /// never diverge between them. `offered` is the incoming op/record
+    /// count; `logged` the ops the repository appended (the per-org
+    /// applied counts come from its applied entries).
+    pub fn tally(
+        job: JobKind,
+        offered: usize,
+        added: usize,
+        replaced: usize,
+        conflicts: Vec<MergeConflict>,
+        logged: &[LoggedOp],
+        generation: u64,
+    ) -> SyncReport {
+        let mut applied_by_org: BTreeMap<String, u64> = BTreeMap::new();
+        for op in logged.iter().filter(|op| op.applied) {
+            *applied_by_org.entry(op.record.org.clone()).or_default() += 1;
+        }
+        SyncReport {
+            job,
+            added,
+            replaced,
+            skipped: offered - (added + replaced),
+            conflicts,
+            applied_by_org,
+            generation,
+        }
     }
 }
 
@@ -351,6 +454,8 @@ pub enum Response {
     Watermarks(WatermarkSet),
     SyncDelta(SyncDelta),
     SyncApplied(SyncReport),
+    WatermarksV2(WatermarkSetV2),
+    SyncDeltaV2(SyncDeltaV2),
 }
 
 impl Response {
@@ -365,6 +470,8 @@ impl Response {
             Response::Watermarks(_) => "Watermarks",
             Response::SyncDelta(_) => "SyncDelta",
             Response::SyncApplied(_) => "SyncApplied",
+            Response::WatermarksV2(_) => "WatermarksV2",
+            Response::SyncDeltaV2(_) => "SyncDeltaV2",
         }
     }
 
@@ -445,7 +552,7 @@ pub trait Client {
         }
     }
 
-    /// Read a job repository's per-org high-water marks.
+    /// Read a job repository's per-org op-log watermarks.
     fn watermarks(&mut self, job: JobKind) -> Result<WatermarkSet, ApiError> {
         match self.call(Request::Watermarks { job })? {
             Response::Watermarks(set) => Ok(set),
@@ -453,7 +560,8 @@ pub trait Client {
         }
     }
 
-    /// Extract the delta a peer with `watermarks` is missing.
+    /// Extract the record-level delta a peer with `watermarks` is
+    /// missing.
     fn sync_pull(
         &mut self,
         job: JobKind,
@@ -465,13 +573,42 @@ pub trait Client {
         }
     }
 
-    /// Apply a peer's delta (idempotent merge + canonical reorder).
-    fn sync_push(
+    /// Apply a peer's record-level delta (idempotent merge + canonical
+    /// reorder; rejected ops advance the watermark).
+    fn sync_push(&mut self, job: JobKind, ops: Vec<SyncOp>) -> Result<SyncReport, ApiError> {
+        match self.call(Request::SyncPush { job, ops })? {
+            Response::SyncApplied(report) => Ok(report),
+            other => Err(other.unexpected("SyncApplied")),
+        }
+    }
+
+    /// Read a job repository's legacy (v2) holdings watermarks.
+    fn watermarks_v2(&mut self, job: JobKind) -> Result<WatermarkSetV2, ApiError> {
+        match self.call(Request::WatermarksV2 { job })? {
+            Response::WatermarksV2(set) => Ok(set),
+            other => Err(other.unexpected("WatermarksV2")),
+        }
+    }
+
+    /// Extract the legacy (v2) org-granular delta a peer is missing.
+    fn sync_pull_v2(
+        &mut self,
+        job: JobKind,
+        watermarks: BTreeMap<String, OrgWatermarkV2>,
+    ) -> Result<SyncDeltaV2, ApiError> {
+        match self.call(Request::SyncPullV2 { job, watermarks })? {
+            Response::SyncDeltaV2(delta) => Ok(delta),
+            other => Err(other.unexpected("SyncDeltaV2")),
+        }
+    }
+
+    /// Apply a legacy (v2) delta of bare records.
+    fn sync_push_v2(
         &mut self,
         job: JobKind,
         records: Vec<RuntimeRecord>,
     ) -> Result<SyncReport, ApiError> {
-        match self.call(Request::SyncPush { job, records })? {
+        match self.call(Request::SyncPushV2 { job, records })? {
             Response::SyncApplied(report) => Ok(report),
             other => Err(other.unexpected("SyncApplied")),
         }
@@ -542,6 +679,7 @@ impl SyncReport {
             ("job", Json::Str(self.job.name().to_string())),
             ("added", Json::Num(self.added as f64)),
             ("replaced", Json::Num(self.replaced as f64)),
+            ("skipped", Json::Num(self.skipped as f64)),
             ("conflicts", Json::Num(self.conflicts.len() as f64)),
             ("generation", Json::Num(self.generation as f64)),
         ])
@@ -598,7 +736,8 @@ mod tests {
             Request::SnapshotInfo { job: JobKind::Grep }.job(),
             Some(JobKind::Grep)
         );
-        // federation: pulls are reads, pushes are writes
+        // federation: pulls are reads, pushes are writes — on both the
+        // record-level (v3) and compatibility (v2) paths
         let pull = Request::SyncPull {
             job: JobKind::Sort,
             watermarks: BTreeMap::new(),
@@ -608,10 +747,23 @@ mod tests {
         assert!(!Request::Watermarks { job: JobKind::Sort }.is_write());
         let push = Request::SyncPush {
             job: JobKind::Grep,
-            records: vec![],
+            ops: vec![],
         };
         assert!(push.is_write());
         assert_eq!(push.job(), Some(JobKind::Grep));
+        assert!(!Request::WatermarksV2 { job: JobKind::Sort }.is_write());
+        let pull_v2 = Request::SyncPullV2 {
+            job: JobKind::Sort,
+            watermarks: BTreeMap::new(),
+        };
+        assert!(!pull_v2.is_write());
+        assert_eq!(pull_v2.job(), Some(JobKind::Sort));
+        let push_v2 = Request::SyncPushV2 {
+            job: JobKind::Grep,
+            records: vec![],
+        };
+        assert!(push_v2.is_write());
+        assert_eq!(push_v2.job(), Some(JobKind::Grep));
     }
 
     #[test]
@@ -626,12 +778,15 @@ mod tests {
             job: JobKind::Sort,
             added: 3,
             replaced: 1,
+            skipped: 2,
             conflicts: vec![],
+            applied_by_org: BTreeMap::new(),
             generation: 9,
         };
         assert_eq!(report.changed(), 4);
         let s = report.to_json().render();
         assert!(s.contains("\"conflicts\":0"), "{s}");
+        assert!(s.contains("\"skipped\":2"), "{s}");
         assert!(s.contains("\"generation\":9"), "{s}");
     }
 

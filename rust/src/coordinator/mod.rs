@@ -69,13 +69,13 @@ pub use shard::{JobShard, ModelSnapshot, ShardPolicy};
 
 use crate::api::{
     ApiError, Client, Contribution, Recommendation, Request, Response, SnapshotInfo, SyncDelta,
-    SyncReport, WatermarkSet,
+    SyncDeltaV2, SyncReport, WatermarkSet, WatermarkSetV2,
 };
 use crate::cloud::Cloud;
 use crate::configurator::{ClusterChoice, JobRequest};
 use crate::models::selection::SelectionReport;
 use crate::models::{Engine, ModelKind, ModelTrainer};
-use crate::repo::{OrgWatermark, RuntimeDataRepo, RuntimeRecord};
+use crate::repo::{OrgWatermark, OrgWatermarkV2, RuntimeDataRepo, RuntimeRecord, SyncOp};
 use crate::store::JobStore;
 use crate::util::json::Json;
 use crate::util::rng::Pcg32;
@@ -373,16 +373,14 @@ impl Coordinator {
         let job = request.kind();
         self.ensure_shard(job);
         let shard = self.shards.get_mut(&job).expect("just ensured");
-        shard
-            .submit(
-                &mut self.engine,
-                &self.cloud,
-                &policy,
-                &mut self.metrics,
-                org,
-                request,
-            )
-            .map_err(ApiError::internal)
+        shard.submit(
+            &mut self.engine,
+            &self.cloud,
+            &policy,
+            &mut self.metrics,
+            org,
+            request,
+        )
     }
 
     /// **Read.** Score every candidate configuration and return the
@@ -433,7 +431,7 @@ impl Coordinator {
         }
     }
 
-    /// **Read.** Per-org high-water marks of a job's repository (empty
+    /// **Read.** Per-org op-log watermarks of a job's repository (empty
     /// for a cold job — reads never allocate shards).
     pub fn watermarks(&self, job: JobKind) -> WatermarkSet {
         match self.shards.get(&job) {
@@ -450,7 +448,24 @@ impl Coordinator {
         }
     }
 
-    /// **Read.** Delta extraction against a peer's watermarks.
+    /// **Read.** Legacy (v2) holdings watermarks of a job's repository.
+    pub fn watermarks_v2(&self, job: JobKind) -> WatermarkSetV2 {
+        match self.shards.get(&job) {
+            Some(shard) => WatermarkSetV2 {
+                job,
+                generation: shard.generation(),
+                watermarks: shard.repo().watermarks_v2(),
+            },
+            None => WatermarkSetV2 {
+                job,
+                generation: 0,
+                watermarks: BTreeMap::new(),
+            },
+        }
+    }
+
+    /// **Read.** Record-level delta extraction against a peer's op-log
+    /// watermarks.
     pub fn sync_pull(
         &self,
         job: JobKind,
@@ -460,10 +475,32 @@ impl Coordinator {
             Some(shard) => SyncDelta {
                 job,
                 generation: shard.generation(),
-                records: shard.repo().delta_for(theirs),
+                ops: shard.repo().delta_for(theirs),
                 watermarks: shard.repo().watermarks(),
             },
             None => SyncDelta {
+                job,
+                generation: 0,
+                ops: Vec::new(),
+                watermarks: BTreeMap::new(),
+            },
+        }
+    }
+
+    /// **Read.** Legacy (v2) org-granular delta extraction.
+    pub fn sync_pull_v2(
+        &self,
+        job: JobKind,
+        theirs: &BTreeMap<String, OrgWatermarkV2>,
+    ) -> SyncDeltaV2 {
+        match self.shards.get(&job) {
+            Some(shard) => SyncDeltaV2 {
+                job,
+                generation: shard.generation(),
+                records: shard.repo().delta_for_v2(theirs),
+                watermarks: shard.repo().watermarks_v2(),
+            },
+            None => SyncDeltaV2 {
                 job,
                 generation: 0,
                 records: Vec::new(),
@@ -472,10 +509,37 @@ impl Coordinator {
         }
     }
 
-    /// **Write.** Apply a peer's delta: merge with deterministic
-    /// conflict resolution, canonicalize the record order, refresh the
-    /// model. Idempotent.
-    pub fn sync_push(
+    /// **Write.** Apply a peer's record-level delta: merge with
+    /// deterministic conflict resolution, advance the org logs (seen
+    /// ops included), canonicalize the record order, refresh the model.
+    /// Idempotent.
+    pub fn sync_push(&mut self, job: JobKind, ops: &[SyncOp]) -> Result<SyncReport, ApiError> {
+        crate::api::validate_machines(&self.cloud, ops.iter().map(|op| &op.record))?;
+        let policy = self.policy();
+        self.ensure_shard(job);
+        let shard = self.shards.get_mut(&job).expect("just ensured");
+        let outcome = shard.apply_sync_ops(ops)?;
+        shard
+            .refresh_model(&mut self.engine, &self.cloud, &policy, &mut self.metrics)
+            .map_err(ApiError::internal)?;
+        self.metrics.sync_pushes += 1;
+        self.metrics.sync_records_applied += outcome.changed() as u64;
+        self.metrics.sync_conflicts += outcome.conflicts.len() as u64;
+        Ok(SyncReport::tally(
+            job,
+            ops.len(),
+            outcome.added,
+            outcome.replaced,
+            outcome.conflicts,
+            &outcome.logged,
+            shard.generation(),
+        ))
+    }
+
+    /// **Write.** Legacy (v2) delta application — the compatibility
+    /// translation onto the op log (applied records get fresh local
+    /// seqnos). Idempotent.
+    pub fn sync_push_v2(
         &mut self,
         job: JobKind,
         records: &[RuntimeRecord],
@@ -491,13 +555,15 @@ impl Coordinator {
         self.metrics.sync_pushes += 1;
         self.metrics.sync_records_applied += outcome.changed() as u64;
         self.metrics.sync_conflicts += outcome.conflicts.len() as u64;
-        Ok(SyncReport {
+        Ok(SyncReport::tally(
             job,
-            added: outcome.added,
-            replaced: outcome.replaced,
-            conflicts: outcome.conflicts,
-            generation: shard.generation(),
-        })
+            records.len(),
+            outcome.added,
+            outcome.replaced,
+            outcome.conflicts,
+            &outcome.applied,
+            shard.generation(),
+        ))
     }
 }
 
@@ -518,8 +584,17 @@ impl Client for Coordinator {
             Request::SyncPull { job, watermarks } => {
                 Ok(Response::SyncDelta(self.sync_pull(job, &watermarks)))
             }
-            Request::SyncPush { job, records } => {
-                self.sync_push(job, &records).map(Response::SyncApplied)
+            Request::SyncPush { job, ops } => {
+                self.sync_push(job, &ops).map(Response::SyncApplied)
+            }
+            Request::WatermarksV2 { job } => {
+                Ok(Response::WatermarksV2(self.watermarks_v2(job)))
+            }
+            Request::SyncPullV2 { job, watermarks } => {
+                Ok(Response::SyncDeltaV2(self.sync_pull_v2(job, &watermarks)))
+            }
+            Request::SyncPushV2 { job, records } => {
+                self.sync_push_v2(job, &records).map(Response::SyncApplied)
             }
         }
     }

@@ -677,7 +677,7 @@ fn serve_request(
             // Fold after the shard lock drops, so the global metrics
             // mutex never nests inside a busy shard.
             shared.metrics.lock().unwrap().fold(&local);
-            outcome.map(Response::Submitted).map_err(ApiError::internal)
+            outcome.map(Response::Submitted)
         }
         api::Request::Contribute { record } => {
             api::validate_machines(&shared.cloud, std::slice::from_ref(&record))?;
@@ -727,10 +727,10 @@ fn serve_request(
             Ok(Response::SnapshotInfo(shared.snapshot(job).info()))
         }
         // Federation. `Watermarks` is served lock-free off the published
-        // snapshot like every read. `SyncPull` is the one read that
-        // needs the full record set (delta extraction), which snapshots
-        // deliberately don't carry — it takes the shard lock; sync
-        // exchanges are rare and bandwidth-bound, not latency-bound.
+        // snapshot like every read. `SyncPull` (and the rare v2
+        // compatibility reads) need the op logs / full record set, which
+        // snapshots deliberately don't carry — they take the shard lock;
+        // sync exchanges are rare and bandwidth-bound, not latency-bound.
         api::Request::Watermarks { job } => {
             let snap = shared.snapshot(job);
             Ok(Response::Watermarks(api::WatermarkSet {
@@ -745,11 +745,58 @@ fn serve_request(
             Ok(Response::SyncDelta(api::SyncDelta {
                 job,
                 generation: shard.generation(),
-                records: shard.repo().delta_for(&watermarks),
+                ops: shard.repo().delta_for(&watermarks),
                 watermarks: shard.repo().watermarks(),
             }))
         }
-        api::Request::SyncPush { job, records } => {
+        api::Request::SyncPush { job, ops } => {
+            api::validate_machines(&shared.cloud, ops.iter().map(|op| &op.record))?;
+            let shard_mutex = shard_for(shared, job)?;
+            let mut local = Metrics::default();
+            let result = {
+                let mut shard = shard_mutex.lock().unwrap();
+                shard.apply_sync_ops(&ops).and_then(|outcome| {
+                    shard
+                        .refresh_model(engine, &shared.cloud, &shared.policy, &mut local)
+                        .map_err(ApiError::internal)?;
+                    shared.publish(&shard);
+                    local.sync_pushes += 1;
+                    local.sync_records_applied += outcome.changed() as u64;
+                    local.sync_conflicts += outcome.conflicts.len() as u64;
+                    Ok(api::SyncReport::tally(
+                        job,
+                        ops.len(),
+                        outcome.added,
+                        outcome.replaced,
+                        outcome.conflicts,
+                        &outcome.logged,
+                        shard.generation(),
+                    ))
+                })
+            };
+            shared.metrics.lock().unwrap().fold(&local);
+            result.map(Response::SyncApplied)
+        }
+        api::Request::WatermarksV2 { job } => {
+            let shard_mutex = shard_for(shared, job)?;
+            let shard = shard_mutex.lock().unwrap();
+            Ok(Response::WatermarksV2(api::WatermarkSetV2 {
+                job,
+                generation: shard.generation(),
+                watermarks: shard.repo().watermarks_v2(),
+            }))
+        }
+        api::Request::SyncPullV2 { job, watermarks } => {
+            let shard_mutex = shard_for(shared, job)?;
+            let shard = shard_mutex.lock().unwrap();
+            Ok(Response::SyncDeltaV2(api::SyncDeltaV2 {
+                job,
+                generation: shard.generation(),
+                records: shard.repo().delta_for_v2(&watermarks),
+                watermarks: shard.repo().watermarks_v2(),
+            }))
+        }
+        api::Request::SyncPushV2 { job, records } => {
             api::validate_machines(&shared.cloud, &records)?;
             let shard_mutex = shard_for(shared, job)?;
             let mut local = Metrics::default();
@@ -763,13 +810,15 @@ fn serve_request(
                     local.sync_pushes += 1;
                     local.sync_records_applied += outcome.changed() as u64;
                     local.sync_conflicts += outcome.conflicts.len() as u64;
-                    Ok(api::SyncReport {
+                    Ok(api::SyncReport::tally(
                         job,
-                        added: outcome.added,
-                        replaced: outcome.replaced,
-                        conflicts: outcome.conflicts,
-                        generation: shard.generation(),
-                    })
+                        records.len(),
+                        outcome.added,
+                        outcome.replaced,
+                        outcome.conflicts,
+                        &outcome.applied,
+                        shard.generation(),
+                    ))
                 })
             };
             shared.metrics.lock().unwrap().fold(&local);

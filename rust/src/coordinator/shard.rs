@@ -47,7 +47,9 @@ use crate::models::oracle::SimOracle;
 use crate::models::selection::{select_and_train, SelectionReport};
 use crate::models::{EngineBound, ModelKind, ModelTrainer, QueryBatch, TrainedModel};
 use crate::repo::sampling::sampled_repo;
-use crate::repo::{MergeOutcome, OrgWatermark, RuntimeDataRepo, RuntimeRecord};
+use crate::repo::{
+    LoggedOp, MergeOutcome, OrgWatermark, RuntimeDataRepo, RuntimeRecord, SyncOp, SyncOutcome,
+};
 use crate::store::{JobStore, StoreOp};
 use crate::util::rng::Pcg32;
 use crate::workloads::JobKind;
@@ -282,14 +284,32 @@ impl JobShard {
 
     /// Durably log `ops` (no-op for in-memory shards), then fold the
     /// WAL into a snapshot if it crossed the compaction threshold.
-    fn persist(&mut self, ops: &[StoreOp]) -> Result<()> {
+    /// Persistence failures are [`ApiError::Store`] on every write path
+    /// — submit included — so callers can match on the failure class.
+    fn persist(&mut self, ops: &[StoreOp]) -> Result<(), ApiError> {
         if let Some(store) = &mut self.store {
             store
                 .append(ops, self.repo.generation())
-                .context("persisting write")?;
-            store.maybe_compact(&self.repo).context("compacting store")?;
+                .context("persisting write")
+                .map_err(ApiError::store)?;
+            store
+                .maybe_compact(&self.repo)
+                .context("compacting store")
+                .map_err(ApiError::store)?;
         }
         Ok(())
+    }
+
+    /// WAL frames for the ops a merge applied (always holdings
+    /// mutations).
+    fn merge_store_ops(applied: &[LoggedOp]) -> Vec<StoreOp> {
+        applied
+            .iter()
+            .map(|op| StoreOp::Merge {
+                seqno: op.seqno,
+                record: op.record.clone(),
+            })
+            .collect()
     }
 
     pub fn job(&self) -> JobKind {
@@ -357,18 +377,56 @@ impl JobShard {
     pub fn share(&mut self, other: &RuntimeDataRepo) -> Result<MergeOutcome, ApiError> {
         let outcome = self.repo.merge(other).map_err(ApiError::InvalidRequest)?;
         if !outcome.applied.is_empty() {
-            let ops: Vec<StoreOp> =
-                outcome.applied.iter().cloned().map(StoreOp::Merge).collect();
-            self.persist(&ops).map_err(ApiError::store)?;
+            self.persist(&Self::merge_store_ops(&outcome.applied))?;
         }
         Ok(outcome)
     }
 
-    /// Apply a peer's sync delta: merge with deterministic conflict
-    /// resolution, then canonicalize the record order so converged
-    /// peers hold bitwise-identical repositories (and train
-    /// bitwise-identical models). Write path: the caller follows up
-    /// with [`JobShard::refresh_model`].
+    /// Apply a peer's record-level sync delta: merge with deterministic
+    /// conflict resolution, advance the org logs (seen ops included),
+    /// then canonicalize the record order so converged peers hold
+    /// bitwise-identical repositories (and train bitwise-identical
+    /// models). Every log append — applied *or* seen — is WAL-framed,
+    /// so a restarted shard never re-pulls ops it already saw. Write
+    /// path: the caller follows up with [`JobShard::refresh_model`].
+    pub fn apply_sync_ops(&mut self, ops: &[SyncOp]) -> Result<SyncOutcome, ApiError> {
+        let outcome = self
+            .repo
+            .apply_sync_ops(ops)
+            .map_err(ApiError::InvalidRequest)?;
+        if !outcome.logged.is_empty() {
+            if outcome.changed() > 0 {
+                self.repo.canonicalize();
+            }
+            let mut store_ops: Vec<StoreOp> = outcome
+                .logged
+                .iter()
+                .map(|op| {
+                    if op.applied {
+                        StoreOp::Merge {
+                            seqno: op.seqno,
+                            record: op.record.clone(),
+                        }
+                    } else {
+                        StoreOp::Seen {
+                            seqno: op.seqno,
+                            record: op.record.clone(),
+                        }
+                    }
+                })
+                .collect();
+            if outcome.changed() > 0 {
+                store_ops.push(StoreOp::Canonicalize);
+            }
+            self.persist(&store_ops)?;
+        }
+        Ok(outcome)
+    }
+
+    /// Apply a legacy (v2) delta of bare records — the `SyncPushV2`
+    /// compatibility translation: merge, then append the applied
+    /// records to their org logs with fresh local seqnos. Write path:
+    /// the caller follows up with [`JobShard::refresh_model`].
     pub fn apply_sync_records(
         &mut self,
         records: &[RuntimeRecord],
@@ -379,10 +437,9 @@ impl JobShard {
             .map_err(ApiError::InvalidRequest)?;
         if outcome.changed() > 0 {
             self.repo.canonicalize();
-            let mut ops: Vec<StoreOp> =
-                outcome.applied.iter().cloned().map(StoreOp::Merge).collect();
+            let mut ops = Self::merge_store_ops(&outcome.applied);
             ops.push(StoreOp::Canonicalize);
-            self.persist(&ops).map_err(ApiError::store)?;
+            self.persist(&ops)?;
         }
         Ok(outcome)
     }
@@ -398,12 +455,12 @@ impl JobShard {
             )));
         }
         let op = self.store.is_some().then(|| record.clone());
-        self.repo
+        let seqno = self
+            .repo
             .contribute(record)
             .map_err(ApiError::InvalidRequest)?;
         if let Some(rec) = op {
-            self.persist(&[StoreOp::Contribute(rec)])
-                .map_err(ApiError::store)?;
+            self.persist(&[StoreOp::Contribute { seqno, record: rec }])?;
         }
         Ok(Contribution {
             job: self.job,
@@ -491,7 +548,10 @@ impl JobShard {
     /// Full submission loop for one job request: decide a configuration
     /// from the cached model (or the cold-start fallback) → provision +
     /// run → contribute the measurement → refresh the model → account
-    /// metrics.
+    /// metrics. Speaks the typed error taxonomy end to end: model and
+    /// simulator failures surface as [`ApiError::Internal`], persistence
+    /// failures as [`ApiError::Store`] — the same classification the
+    /// contribute/share/sync write paths use.
     pub fn submit(
         &mut self,
         engine: &mut dyn ModelTrainer,
@@ -500,7 +560,7 @@ impl JobShard {
         metrics: &mut Metrics,
         org: &Organization,
         request: &JobRequest,
-    ) -> Result<JobOutcome> {
+    ) -> Result<JobOutcome, ApiError> {
         debug_assert_eq!(request.kind(), self.job, "request routed to wrong shard");
 
         // 1) decide a configuration — from the write-maintained cached
@@ -513,7 +573,8 @@ impl JobShard {
                     &cached.model,
                     &self.observed_machines(),
                     request,
-                )?;
+                )
+                .map_err(ApiError::internal)?;
                 metrics.cache_hits += 1;
                 (
                     choice.machine_type.clone(),
@@ -526,7 +587,9 @@ impl JobShard {
             None => {
                 // cold start: conservative overprovisioning
                 let mut oracle = SimOracle::new(self.job, self.rng.next_u64());
-                let out = NaiveMax::default().search(cloud, &mut oracle, request)?;
+                let out = NaiveMax::default()
+                    .search(cloud, &mut oracle, request)
+                    .map_err(ApiError::internal)?;
                 metrics.fallbacks += 1;
                 (out.machine, out.scaleout, f64::NAN, None, None)
             }
@@ -556,13 +619,17 @@ impl JobShard {
         // duplicate configs are fine at contribution time; merge-level
         // dedup happens when repos are exchanged between parties
         let op = self.store.is_some().then(|| record.clone());
-        self.repo.contribute(record).map_err(anyhow::Error::msg)?;
+        let seqno = self
+            .repo
+            .contribute(record)
+            .map_err(|e| ApiError::Internal(format!("contributing submit record: {e}")))?;
         if let Some(rec) = op {
-            self.persist(&[StoreOp::Contribute(rec)])?;
+            self.persist(&[StoreOp::Contribute { seqno, record: rec }])?;
         }
 
         // 4) the write maintains the model the reads are served from
-        self.refresh_model(engine, cloud, policy, metrics)?;
+        self.refresh_model(engine, cloud, policy, metrics)
+            .map_err(ApiError::internal)?;
 
         // 5) metrics
         let met_target = request.target_s.map_or(true, |t| actual <= t);

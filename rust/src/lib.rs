@@ -43,25 +43,40 @@
 //! cross-request coalescing of same-kind `Recommend` batches and
 //! pipelined `submit_nowait` tickets).
 //!
-//! ## Persistence and federation
+//! ## Persistence and federation: one operation log
 //!
-//! The collaborative corpus is long-lived, shared state ([`store`]):
+//! The collaborative corpus is long-lived, shared state, and every
+//! notion of "what changed" flows through **one abstraction**: the
+//! per-(org, job) sequence-numbered operation log maintained by the
+//! repository ([`repo`]). Each accepted mutation gets a monotone
+//! per-org seqno; [`repo::OrgWatermark`] is a log position
+//! `(seqno, digest)`; [`RuntimeDataRepo::ops_since`](repo::RuntimeDataRepo::ops_since)
+//! extracts record-level deltas. The WAL and the sync protocol replay
+//! the *same* log:
 //!
 //! * The **durable segment store** ([`store::segment`]) gives every job
-//!   an append-only WAL of generation-stamped, checksummed ops plus
-//!   atomic snapshots with segment compaction. A deployment opened over
-//!   a store ([`Coordinator::open_with_store`](coordinator::Coordinator::open_with_store),
+//!   an append-only WAL of generation- and seqno-stamped, checksummed
+//!   ops plus atomic snapshots (with an op-log sidecar) and segment
+//!   compaction. A deployment opened over a store
+//!   ([`Coordinator::open_with_store`](coordinator::Coordinator::open_with_store),
 //!   [`ServiceConfig::with_store_dir`](coordinator::ServiceConfig::with_store_dir))
-//!   recovers its corpus bitwise — including record order — and warms
-//!   its model caches before serving.
-//! * The **peer delta-sync protocol** ([`store::sync`]) exchanges only
-//!   missing records between deployments, driven by per-(org, job)
-//!   high-water marks ([`repo::OrgWatermark`]). Merge-level dedup with
-//!   a deterministic conflict order makes the exchange idempotent and
-//!   convergent: peers gossiping in any order end up with
-//!   bitwise-identical repositories serving bitwise-identical
-//!   recommendations, and runtime disagreements surface as structured
-//!   [`MergeConflict`](repo::MergeConflict)s.
+//!   recovers its corpus bitwise — including record order and org-log
+//!   positions — and warms its model caches before serving.
+//! * The **peer delta-sync protocol** ([`store::sync`], API v3) ships
+//!   sequence-numbered [`SyncOp`](repo::SyncOp)s past the peer's
+//!   watermarks: **O(changed records)** per exchange when logs are
+//!   prefix-aligned (the gossip steady state), with a digest-checked
+//!   whole-org fallback on genuine divergence. Merge-rejected ops still
+//!   advance the receiver's watermark (logged as *seen*), so an org's
+//!   blind duplicate contributions are shipped once and never
+//!   re-offered. Merge-level dedup with a deterministic conflict order
+//!   makes the exchange idempotent and convergent: peers gossiping in
+//!   any order end up with bitwise-identical repositories serving
+//!   bitwise-identical recommendations, and runtime disagreements
+//!   surface as structured [`MergeConflict`](repo::MergeConflict)s.
+//!   Legacy v2 peers are served through the
+//!   `WatermarksV2`/`SyncPullV2`/`SyncPushV2` compatibility
+//!   translation (org-granular, O(org corpus) per changed org).
 //!
 //! ## Layer map
 //!
@@ -112,7 +127,7 @@ pub mod workloads;
 pub mod prelude {
     pub use crate::api::{
         ApiError, Client, Contribution, Recommendation, Request, Response, SnapshotInfo,
-        SyncDelta, SyncReport, WatermarkSet, API_VERSION,
+        SyncDelta, SyncDeltaV2, SyncReport, WatermarkSet, WatermarkSetV2, API_VERSION,
     };
     pub use crate::cloud::{Cloud, MachineType};
     pub use crate::configurator::{ClusterChoice, Configurator, JobRequest};
@@ -125,7 +140,8 @@ pub mod prelude {
         TrainedModel,
     };
     pub use crate::repo::{
-        MergeConflict, MergeOutcome, OrgWatermark, RuntimeDataRepo, RuntimeRecord,
+        LoggedOp, MergeConflict, MergeOutcome, OrgWatermark, OrgWatermarkV2, RuntimeDataRepo,
+        RuntimeRecord, SyncOp, SyncOutcome,
     };
     pub use crate::sim::SimulationResult;
     pub use crate::store::{JobStore, StoreOp, SyncDriver, SyncStats};

@@ -14,7 +14,7 @@
 //! c3o store      --dir DIR [--mode seed|verify|stat] [--seed N]
 //!                                              durable segment-store exercise
 //! c3o sync       [--max-rounds N] [--seed N] [--store-a DIR] [--store-b DIR]
-//!                                             two-service federation demo
+//!                [--json]                    two-service federation demo
 //! ```
 //!
 //! Argument parsing is hand-rolled (clap is not in the offline vendor
@@ -116,9 +116,11 @@ USAGE:
                                               durable segment store: seed it from
                                               the corpus, verify recovery, or stat
   c3o sync       [--max-rounds N] [--seed N] [--store-a DIR] [--store-b DIR]
-                                              federation demo: two services with
+                 [--json]                     federation demo: two services with
                                               disjoint org corpora converge via
-                                              SyncPull/SyncPush
+                                              record-level SyncPull/SyncPush;
+                                              --json emits per-org exchange stats
+                                              (records offered/applied/skipped)
 ";
 
 fn main() -> ExitCode {
@@ -664,13 +666,16 @@ fn cmd_store(cloud: &Cloud, args: &Args, seed: u64) -> Result<(), String> {
 
 /// Federation demo: two coordinator services are fed *disjoint* halves
 /// of the corpus (organizations "org-alpha" and "org-beta"), then
-/// exchange deltas via `SyncPull`/`SyncPush` until quiescent. The demo
-/// verifies the convergence contract — identical generations, identical
-/// content digests, and bitwise-identical `Recommend` decisions — and
-/// exits nonzero if any of it fails. `--store-a`/`--store-b` make the
-/// two services durable.
+/// exchange record-level deltas via `SyncPull`/`SyncPush` until
+/// quiescent. The demo verifies the convergence contract — identical
+/// generations, identical content digests, and bitwise-identical
+/// `Recommend` decisions — and exits nonzero if any of it fails.
+/// `--store-a`/`--store-b` make the two services durable; `--json`
+/// emits the exchange stats (records offered/applied/skipped per org)
+/// instead of the prose report.
 fn cmd_sync(cloud: &Cloud, args: &Args, seed: u64) -> Result<(), String> {
     let max_rounds: usize = args.get_or("max-rounds", 6)?;
+    let json_out = args.switch("json");
     eprintln!("building disjoint org corpora from the corpus grid (1 repetition)...");
     let corpus = ExperimentGrid {
         experiments: ExperimentGrid::paper_table1().experiments,
@@ -720,15 +725,21 @@ fn cmd_sync(cloud: &Cloud, args: &Args, seed: u64) -> Result<(), String> {
     let mut client_a = service_a.client();
     let mut client_b = service_b.client();
     let mut total = c3o::store::SyncStats::default();
+    let mut by_job: std::collections::BTreeMap<JobKind, c3o::store::OrgExchangeMap> =
+        Default::default();
     let mut rounds = 0usize;
     loop {
         rounds += 1;
-        let stats =
-            c3o::store::sync_all(&mut client_a, &mut client_b, &kinds).map_err(api_err)?;
+        let (stats, round_orgs) =
+            c3o::store::sync_all_detailed(&mut client_a, &mut client_b, &kinds)
+                .map_err(api_err)?;
         total.fold(&stats);
-        println!(
-            "round {rounds}: {} records in, {} out, {} conflicts",
-            stats.records_in, stats.records_out, stats.conflicts
+        for (kind, orgs) in &round_orgs {
+            c3o::store::fold_orgs(by_job.entry(*kind).or_default(), orgs);
+        }
+        eprintln!(
+            "round {rounds}: {} records in, {} out, {} skipped, {} conflicts",
+            stats.records_in, stats.records_out, stats.skipped, stats.conflicts
         );
         if stats.quiescent() {
             break;
@@ -762,30 +773,80 @@ fn cmd_sync(cloud: &Cloud, args: &Args, seed: u64) -> Result<(), String> {
                 == rec_b.choice.predicted_runtime_s.to_bits();
         let converged =
             info_a.generation == info_b.generation && digest_a == digest_b && decisions_match;
-        println!(
-            "  {:>9}: gen {}/{}  digest {}  decision {} ({} x{})",
-            kind.name(),
-            info_a.generation,
-            info_b.generation,
-            if digest_a == digest_b { "match" } else { "MISMATCH" },
-            if decisions_match { "match" } else { "MISMATCH" },
-            rec_a.choice.machine_type,
-            rec_a.choice.node_count,
-        );
+        if !json_out {
+            println!(
+                "  {:>9}: gen {}/{}  digest {}  decision {} ({} x{})",
+                kind.name(),
+                info_a.generation,
+                info_b.generation,
+                if digest_a == digest_b { "match" } else { "MISMATCH" },
+                if decisions_match { "match" } else { "MISMATCH" },
+                rec_a.choice.machine_type,
+                rec_a.choice.node_count,
+            );
+        }
         if !converged {
             failures.push(kind.name().to_string());
         }
     }
-    println!(
-        "\nsynced in {rounds} round(s): {} records exchanged, {} conflicts, {} pulls",
-        total.records_in + total.records_out,
-        total.conflicts,
-        total.pulls
-    );
     service_a.shutdown();
     service_b.shutdown();
+    if json_out {
+        use c3o::util::json::Json;
+        let jobs: Vec<Json> = by_job
+            .iter()
+            .map(|(kind, orgs)| {
+                let org_rows: Vec<Json> = orgs
+                    .iter()
+                    .map(|(org, x)| {
+                        Json::obj(vec![
+                            ("org", Json::Str(org.clone())),
+                            ("offered", Json::Num(x.offered as f64)),
+                            ("applied", Json::Num(x.applied as f64)),
+                            ("skipped", Json::Num(x.skipped as f64)),
+                        ])
+                    })
+                    .collect();
+                Json::obj(vec![
+                    ("job", Json::Str(kind.name().to_string())),
+                    ("orgs", Json::Arr(org_rows)),
+                ])
+            })
+            .collect();
+        let doc = Json::obj(vec![
+            ("api_version", Json::Num(c3o::api::API_VERSION as f64)),
+            ("rounds", Json::Num(rounds as f64)),
+            ("converged", Json::Bool(failures.is_empty())),
+            (
+                "totals",
+                Json::obj(vec![
+                    ("offered", Json::Num(total.offered as f64)),
+                    (
+                        "applied",
+                        Json::Num((total.records_in + total.records_out) as f64),
+                    ),
+                    ("skipped", Json::Num(total.skipped as f64)),
+                    ("conflicts", Json::Num(total.conflicts as f64)),
+                    ("pulls", Json::Num(total.pulls as f64)),
+                ]),
+            ),
+            ("jobs", Json::Arr(jobs)),
+        ]);
+        println!("{}", doc.pretty());
+    } else {
+        println!(
+            "\nsynced in {rounds} round(s): {} records exchanged ({} offered, {} skipped), {} conflicts, {} pulls",
+            total.records_in + total.records_out,
+            total.offered,
+            total.skipped,
+            total.conflicts,
+            total.pulls
+        );
+    }
     if failures.is_empty() {
-        println!("federation converged: identical repos, identical decisions");
+        if !json_out {
+            println!("federation converged: identical repos, identical decisions");
+        }
         Ok(())
     } else {
         Err(format!("peers diverged on: {}", failures.join(", ")))

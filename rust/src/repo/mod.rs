@@ -18,12 +18,19 @@
 //!   commutative, and associative over record *sets* — independently
 //!   gossiping peers converge — and disagreements are surfaced as
 //!   structured [`MergeConflict`]s instead of silently dropped.
-//! * **Watermarks** — the repo maintains one [`OrgWatermark`] (record
-//!   count + order-independent content digest) per contributing
-//!   organization, updated incrementally on every mutation.
-//!   [`RuntimeDataRepo::delta_for`] extracts exactly the records a peer
-//!   with different watermarks is missing — the unit of transfer of the
-//!   `SyncPull`/`SyncPush` protocol.
+//! * **Operation logs** — the repo assigns every accepted mutation a
+//!   monotone per-organization sequence number and keeps one append-only
+//!   op log per org: every op *seen* for that org (applied, or delivered
+//!   by a peer and merge-rejected), in sequence order. The log is the
+//!   one change-tracking abstraction shared by the WAL
+//!   ([`crate::store::segment`], which frames every line with the seqno)
+//!   and the sync protocol: [`OrgWatermark`] is the log position
+//!   `(seqno, digest)`, [`RuntimeDataRepo::ops_since`] extracts the
+//!   record-level delta past a seqno, and [`RuntimeDataRepo::delta_for`]
+//!   ships O(changed records) per exchange — falling back to a whole-org
+//!   ship only when two logs have genuinely diverged (the digest check).
+//!   Merge-rejected sync ops still advance the receiver's log, so blind
+//!   duplicate contributions are never re-offered.
 //! * [`sampling`] — the paper's proposed mitigation when the shared
 //!   dataset grows too large: download only a *coverage-preserving
 //!   sample* of bounded size (farthest-point sampling in feature space).
@@ -168,23 +175,74 @@ impl RuntimeRecord {
     }
 }
 
-/// Per-organization high-water mark: how much of that organization's
-/// data a repository holds. `count` is the number of records attributed
-/// to the org; `digest` is the XOR of their [`RuntimeRecord::content_hash`]es
-/// — order-independent, so two repos holding the same record set for an
-/// org agree on the watermark no matter how the records arrived.
+/// Per-organization high-water mark: a position in that organization's
+/// operation log. `seqno` is the highest sequence number the repository
+/// has *seen* for the org (applied or merge-rejected); `digest` is the
+/// XOR of the content hashes of every op through that seqno —
+/// order-independent over the op set, so two repos that have seen the
+/// same ops agree on the mark regardless of exchange order.
 ///
-/// Watermarks are the unit of the delta-sync protocol: a peer sends its
-/// marks, and [`RuntimeDataRepo::delta_for`] returns the records of
-/// every org whose mark differs. The granularity is per-org, not
-/// per-record — over-sending is harmless because merge dedups — which
-/// keeps the watermark exchange O(orgs), not O(records).
+/// Watermarks are the unit of the record-level delta-sync protocol
+/// (API v3): a peer sends its marks, and [`RuntimeDataRepo::delta_for`]
+/// returns exactly the ops past each mark — O(changed records), with a
+/// digest check that falls back to a whole-org ship only when two logs
+/// have genuinely diverged. Because *seen* (not just applied) ops
+/// advance the mark, an org whose blind duplicate contributions a
+/// peer's merge rejects is never re-offered.
 #[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
 pub struct OrgWatermark {
-    /// Records attributed to the organization.
-    pub count: u64,
-    /// XOR of the records' content hashes (order-independent).
+    /// Highest op-log sequence number seen for the organization.
+    pub seqno: u64,
+    /// XOR of the content hashes of ops 1..=`seqno` (order-independent).
     pub digest: u64,
+}
+
+/// The legacy (API v2) per-organization watermark: records *held* for
+/// the org, not ops seen. Kept for the v2 compatibility translation of
+/// `SyncPullV2`/`SyncPushV2` — the org-granular exchange that re-ships a
+/// whole org whenever holdings differ.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct OrgWatermarkV2 {
+    /// Records attributed to the organization in the holdings.
+    pub count: u64,
+    /// XOR of the held records' content hashes (order-independent).
+    pub digest: u64,
+}
+
+/// One sequence-numbered operation of an organization's log, as shipped
+/// by the record-level sync protocol. The `seqno` is the *origin*
+/// numbering: receivers that apply ops in order keep their log aligned
+/// with the sender's, so subsequent exchanges ship only the suffix.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SyncOp {
+    /// Organization whose log this op belongs to (always equals
+    /// `record.org`; carried separately for grouping without touching
+    /// the record).
+    pub org: String,
+    /// 1-based position in the org's operation log.
+    pub seqno: u64,
+    pub record: RuntimeRecord,
+}
+
+/// One op appended to an org log by a repository mutation, reported back
+/// so the caller (a durable shard) can WAL-frame exactly what happened.
+#[derive(Debug, Clone, PartialEq)]
+pub struct LoggedOp {
+    /// Sequence number the op received in its org's log.
+    pub seqno: u64,
+    pub record: RuntimeRecord,
+    /// Whether the op mutated the holdings (`false`: a sync op that was
+    /// seen — advancing the watermark — but rejected by merge dedup).
+    pub applied: bool,
+}
+
+/// One entry of an org's operation log. Entry `k` (0-based) holds
+/// seqno `k + 1`; `cum_digest` is the XOR of content hashes of entries
+/// `1..=k+1`, so a prefix digest is an O(1) lookup.
+#[derive(Debug, Clone, PartialEq)]
+struct LogEntry {
+    record: RuntimeRecord,
+    cum_digest: u64,
 }
 
 /// One surfaced merge disagreement: two records shared a configuration
@@ -212,11 +270,11 @@ pub struct MergeOutcome {
     /// Runtime disagreements encountered (whether or not the incoming
     /// side won).
     pub conflicts: Vec<MergeConflict>,
-    /// The records that actually changed the repository (adds and
-    /// replacement winners), in application order. Each advanced the
-    /// generation by exactly one; the segment store WAL-logs exactly
-    /// these.
-    pub applied: Vec<RuntimeRecord>,
+    /// The ops that actually changed the repository (adds and
+    /// replacement winners), in application order, each with the org-log
+    /// seqno it received. Each advanced the generation by exactly one;
+    /// the segment store WAL-frames exactly these.
+    pub applied: Vec<LoggedOp>,
 }
 
 impl MergeOutcome {
@@ -225,6 +283,44 @@ impl MergeOutcome {
     pub fn changed(&self) -> usize {
         self.added + self.replaced
     }
+}
+
+/// Structured result of applying a record-level sync delta
+/// ([`RuntimeDataRepo::apply_sync_ops`]).
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct SyncOutcome {
+    /// Previously-unknown configurations appended.
+    pub added: usize,
+    /// Existing records replaced by a deterministically-preferred
+    /// incoming record.
+    pub replaced: usize,
+    /// Ops that changed no holdings: duplicate deliveries of
+    /// already-seen ops, in-order seen-but-rejected ops (which still
+    /// advance the watermark), and divergent-log ops the holdings
+    /// already resolve. Always `ops.len() - changed()`.
+    pub skipped: usize,
+    /// Runtime disagreements surfaced (whichever side won).
+    pub conflicts: Vec<MergeConflict>,
+    /// Every op appended to an org log, in order — applied mutations
+    /// *and* seen-but-rejected ops (which advance the watermark without
+    /// touching the holdings or the generation). The segment store
+    /// WAL-frames exactly these.
+    pub logged: Vec<LoggedOp>,
+}
+
+impl SyncOutcome {
+    /// Total holdings mutations (adds + replacements) — how far the
+    /// generation advanced.
+    pub fn changed(&self) -> usize {
+        self.added + self.replaced
+    }
+}
+
+/// Outcome of resolving one pre-validated record against the holdings.
+enum MergeEffect {
+    Added,
+    Replaced(Option<MergeConflict>),
+    Rejected(Option<MergeConflict>),
 }
 
 /// A per-job shared repository of runtime records.
@@ -243,8 +339,16 @@ pub struct RuntimeDataRepo {
     /// observed-machines list is O(machines) per snapshot publish
     /// instead of O(records).
     machines: BTreeMap<String, usize>,
-    /// Per-org watermarks (count + XOR digest), maintained incrementally.
-    org_marks: BTreeMap<String, OrgWatermark>,
+    /// Legacy (v2) per-org holdings watermarks (count + XOR digest),
+    /// maintained incrementally — the view the `SyncPullV2` compatibility
+    /// translation serves.
+    org_marks: BTreeMap<String, OrgWatermarkV2>,
+    /// Per-org operation logs: every op seen for the org (applied or
+    /// merge-rejected), in sequence order. Entry `k` holds seqno `k+1`.
+    /// Append-only — replacements and rejections never remove entries —
+    /// so the log is the durable change history the WAL and the sync
+    /// protocol both replay.
+    org_logs: BTreeMap<String, Vec<LogEntry>>,
     /// Merge-representative slot per configuration key: the slot of
     /// the record with the **smallest** [`RuntimeRecord::merge_priority`]
     /// among same-key records. Using the priority winner (not the first
@@ -267,6 +371,7 @@ impl RuntimeDataRepo {
             generation: 0,
             machines: BTreeMap::new(),
             org_marks: BTreeMap::new(),
+            org_logs: BTreeMap::new(),
             key_index: BTreeMap::new(),
         }
     }
@@ -331,6 +436,36 @@ impl RuntimeDataRepo {
         mark.digest ^= r.content_hash();
     }
 
+    /// Append one op to its org's operation log, returning the seqno it
+    /// received. The log is append-only and independent of the holdings:
+    /// replacements and merge rejections never remove entries.
+    fn log_append(&mut self, r: &RuntimeRecord) -> u64 {
+        let log = self.org_logs.entry(r.org.clone()).or_default();
+        let prev = log.last().map_or(0, |e| e.cum_digest);
+        log.push(LogEntry {
+            record: r.clone(),
+            cum_digest: prev ^ r.content_hash(),
+        });
+        log.len() as u64
+    }
+
+    /// Length of an org's operation log (its watermark seqno).
+    pub fn log_len(&self, org: &str) -> u64 {
+        self.org_logs.get(org).map_or(0, |l| l.len() as u64)
+    }
+
+    /// Cumulative digest of an org's log through `seqno` (`None` when
+    /// the position does not exist).
+    fn log_digest_at(&self, org: &str, seqno: u64) -> Option<u64> {
+        if seqno == 0 {
+            return None;
+        }
+        self.org_logs
+            .get(org)
+            .and_then(|log| log.get(seqno as usize - 1))
+            .map(|e| e.cum_digest)
+    }
+
     fn cache_remove(&mut self, r: &RuntimeRecord) {
         if let Some(n) = self.machines.get_mut(&r.machine) {
             *n -= 1;
@@ -348,7 +483,9 @@ impl RuntimeDataRepo {
     }
 
     /// Contribute one record (the "capture and save" step of Fig. 1).
-    pub fn contribute(&mut self, r: RuntimeRecord) -> Result<(), String> {
+    /// Returns the sequence number the op received in its org's log —
+    /// the number the WAL frames it with and peers address it by.
+    pub fn contribute(&mut self, r: RuntimeRecord) -> Result<u64, String> {
         if r.job != self.job {
             return Err(format!(
                 "record for {} contributed to {} repo",
@@ -358,6 +495,7 @@ impl RuntimeDataRepo {
         }
         r.validate()?;
         self.cache_add(&r);
+        let seqno = self.log_append(&r);
         let next_slot = self.records.len();
         match self.key_index.entry(r.config_key()) {
             std::collections::btree_map::Entry::Vacant(e) => {
@@ -373,7 +511,7 @@ impl RuntimeDataRepo {
         }
         self.records.push(r);
         self.generation += 1;
-        Ok(())
+        Ok(seqno)
     }
 
     /// Distinct contributing organizations.
@@ -387,27 +525,95 @@ impl RuntimeDataRepo {
         self.machines.keys().cloned().collect()
     }
 
-    /// Per-org high-water marks (count + order-independent digest) —
-    /// what a peer sends to ask "what am I missing?".
+    /// Per-org high-water marks — each org's op-log position `(seqno,
+    /// digest)` — what a peer sends to ask "what am I missing?".
     pub fn watermarks(&self) -> BTreeMap<String, OrgWatermark> {
+        self.org_logs
+            .iter()
+            .map(|(org, log)| {
+                let last = log.last().expect("org logs are never empty");
+                (
+                    org.clone(),
+                    OrgWatermark {
+                        seqno: log.len() as u64,
+                        digest: last.cum_digest,
+                    },
+                )
+            })
+            .collect()
+    }
+
+    /// The legacy (v2) holdings watermarks, for the `SyncPullV2`
+    /// compatibility translation.
+    pub fn watermarks_v2(&self) -> BTreeMap<String, OrgWatermarkV2> {
         self.org_marks.clone()
     }
 
-    /// Delta extraction by watermark: every record of each organization
-    /// whose local watermark differs from `theirs` (including orgs the
-    /// peer has never seen). Per-org granularity — a changed org ships
-    /// whole, which merge-level dedup makes harmless — so the transfer
-    /// cost scales with *changed* organizations, not corpus size.
+    /// Every op of `org`'s log past `seqno`, in sequence order — the
+    /// record-level delta a peer whose mark sits at `seqno` is missing.
+    pub fn ops_since(&self, org: &str, seqno: u64) -> Vec<SyncOp> {
+        match self.org_logs.get(org) {
+            None => Vec::new(),
+            Some(log) => log
+                .iter()
+                .enumerate()
+                .skip(seqno as usize)
+                .map(|(i, e)| SyncOp {
+                    org: org.to_string(),
+                    seqno: (i + 1) as u64,
+                    record: e.record.clone(),
+                })
+                .collect(),
+        }
+    }
+
+    /// Record-level delta extraction by watermark. For each org we hold,
+    /// against the peer's claimed mark:
     ///
-    /// Known cost of that granularity: blind-contributed duplicate
-    /// configurations (the submit path's local history) are never
-    /// accepted by a peer's merge, so the org's watermarks stay
-    /// permanently unequal and its slice is re-offered on every
-    /// exchange. The exchange stays correct and quiescence-detection
-    /// unaffected (both count *applied* records); the waste is visible
-    /// as `SyncStats::offered` exceeding applied counts. Record-level
-    /// deltas are a ROADMAP follow-up.
-    pub fn delta_for(&self, theirs: &BTreeMap<String, OrgWatermark>) -> Vec<RuntimeRecord> {
+    /// * **unknown org** — ship the whole log.
+    /// * **prefix-aligned** (peer seqno ≤ ours and their digest matches
+    ///   our cumulative digest at that seqno) — ship only the ops past
+    ///   their mark: **O(changed records)**, the common gossip path.
+    /// * **complete** (equal seqno, equal digest) — ship nothing.
+    /// * **peer ahead** — ship nothing; the reverse direction of the
+    ///   exchange reconciles.
+    /// * **divergent** (digest mismatch — the org's ops entered the
+    ///   federation through more than one home, or a v2 peer injected
+    ///   records) — fall back to shipping the whole log. Merge dedup
+    ///   keeps the fallback correct; it costs what v2 always cost.
+    pub fn delta_for(&self, theirs: &BTreeMap<String, OrgWatermark>) -> Vec<SyncOp> {
+        let mut ops = Vec::new();
+        for (org, log) in &self.org_logs {
+            let len = log.len() as u64;
+            let ship_from = match theirs.get(org) {
+                None => 0,
+                Some(m) if m.seqno > len => continue, // peer ahead
+                Some(m) if m.seqno == len => {
+                    if self.log_digest_at(org, len) == Some(m.digest) {
+                        continue; // complete
+                    }
+                    0 // divergent
+                }
+                Some(m) => {
+                    if m.seqno > 0 && self.log_digest_at(org, m.seqno) == Some(m.digest) {
+                        m.seqno // prefix-aligned: ship the suffix only
+                    } else {
+                        0 // divergent (or empty claim)
+                    }
+                }
+            };
+            ops.extend(self.ops_since(org, ship_from));
+        }
+        ops
+    }
+
+    /// Legacy (v2) org-granular delta extraction: every *held* record of
+    /// each organization whose holdings watermark differs from `theirs`.
+    /// A changed org ships whole — O(org corpus) — and an org holding
+    /// blind-contributed duplicates a peer's merge never accepts is
+    /// re-offered forever. Kept solely to serve v2 peers (and as the
+    /// comparison path of `benches/sync_throughput.rs`).
+    pub fn delta_for_v2(&self, theirs: &BTreeMap<String, OrgWatermarkV2>) -> Vec<RuntimeRecord> {
         let stale: BTreeSet<&String> = self
             .org_marks
             .iter()
@@ -520,53 +726,213 @@ impl RuntimeDataRepo {
         // its merge representative — the priority winner among local
         // same-key records, so a record the repo already holds (even
         // alongside weaker blind-contributed duplicates) merges as a
-        // no-op.
+        // no-op. Applied records are appended to their org's op log
+        // with fresh local seqnos (this repo is their federation home).
         let mut out = MergeOutcome::default();
         for r in incoming {
-            let key = r.config_key();
-            match self.key_index.get(&key).copied() {
-                None => {
-                    self.key_index.insert(key, self.records.len());
-                    self.cache_add(r);
-                    self.records.push(r.clone());
-                    self.generation += 1;
+            match self.merge_one(r) {
+                MergeEffect::Added => {
                     out.added += 1;
-                    out.applied.push(r.clone());
+                    let seqno = self.log_append(r);
+                    out.applied.push(LoggedOp {
+                        seqno,
+                        record: r.clone(),
+                        applied: true,
+                    });
                 }
-                Some(slot) => {
-                    let existing = &self.records[slot];
-                    let disagrees = existing.runtime_s.to_bits() != r.runtime_s.to_bits();
-                    if r.wins_over(existing) {
-                        if disagrees {
-                            out.conflicts.push(MergeConflict {
-                                config_key: key,
-                                kept_org: r.org.clone(),
-                                kept_runtime_s: r.runtime_s,
-                                dropped_org: existing.org.clone(),
-                                dropped_runtime_s: existing.runtime_s,
-                            });
-                        }
-                        let dropped = self.records[slot].clone();
-                        self.cache_remove(&dropped);
-                        self.cache_add(r);
-                        self.records[slot] = r.clone();
-                        self.generation += 1;
-                        out.replaced += 1;
-                        out.applied.push(r.clone());
-                    } else if disagrees {
-                        out.conflicts.push(MergeConflict {
-                            config_key: key,
-                            kept_org: existing.org.clone(),
-                            kept_runtime_s: existing.runtime_s,
-                            dropped_org: r.org.clone(),
-                            dropped_runtime_s: r.runtime_s,
-                        });
-                    }
-                    // identical record (same key, org, runtime): no-op
+                MergeEffect::Replaced(conflict) => {
+                    out.replaced += 1;
+                    out.conflicts.extend(conflict);
+                    let seqno = self.log_append(r);
+                    out.applied.push(LoggedOp {
+                        seqno,
+                        record: r.clone(),
+                        applied: true,
+                    });
+                }
+                MergeEffect::Rejected(conflict) => {
+                    out.conflicts.extend(conflict);
+                    // identical or losing record: holdings unchanged,
+                    // and a locally-shared reject is not logged (it
+                    // never entered the federation)
                 }
             }
         }
         Ok(out)
+    }
+
+    /// Resolve one pre-validated record against the holdings by the
+    /// deterministic merge order — the single mutation primitive shared
+    /// by [`RuntimeDataRepo::merge_records`] and
+    /// [`RuntimeDataRepo::apply_sync_ops`]. Touches the holdings, the
+    /// key index, the caches, and the generation; never the op logs
+    /// (callers decide what to log, and with which seqno).
+    fn merge_one(&mut self, r: &RuntimeRecord) -> MergeEffect {
+        let key = r.config_key();
+        match self.key_index.get(&key).copied() {
+            None => {
+                self.key_index.insert(key, self.records.len());
+                self.cache_add(r);
+                self.records.push(r.clone());
+                self.generation += 1;
+                MergeEffect::Added
+            }
+            Some(slot) => {
+                let existing = &self.records[slot];
+                let disagrees = existing.runtime_s.to_bits() != r.runtime_s.to_bits();
+                if r.wins_over(existing) {
+                    let conflict = disagrees.then(|| MergeConflict {
+                        config_key: key,
+                        kept_org: r.org.clone(),
+                        kept_runtime_s: r.runtime_s,
+                        dropped_org: existing.org.clone(),
+                        dropped_runtime_s: existing.runtime_s,
+                    });
+                    let dropped = self.records[slot].clone();
+                    self.cache_remove(&dropped);
+                    self.cache_add(r);
+                    self.records[slot] = r.clone();
+                    self.generation += 1;
+                    MergeEffect::Replaced(conflict)
+                } else {
+                    MergeEffect::Rejected(disagrees.then(|| MergeConflict {
+                        config_key: key,
+                        kept_org: existing.org.clone(),
+                        kept_runtime_s: existing.runtime_s,
+                        dropped_org: r.org.clone(),
+                        dropped_runtime_s: r.runtime_s,
+                    }))
+                }
+            }
+        }
+    }
+
+    /// Apply a record-level sync delta (the `SyncPush` body). Per op,
+    /// against the op's org log:
+    ///
+    /// * **already seen** (seqno within the log, same content) — skipped
+    ///   outright; re-delivery is a no-op.
+    /// * **in-order extension** (seqno == log length + 1) — the op is
+    ///   appended to the log *with the origin's numbering*, keeping this
+    ///   log a prefix of the sender's, and merged into the holdings.
+    ///   A merge-rejected op (e.g. a blind duplicate the dedup order
+    ///   refuses) is still logged as *seen*: the watermark advances, so
+    ///   the op is never offered to us again — without moving the
+    ///   generation.
+    /// * **divergent** (a different op already sits at that seqno, or
+    ///   the seqno leaves a gap) — the op falls back to content-level
+    ///   dedup: an applied record is logged with a fresh local seqno,
+    ///   a rejected one is skipped. Divergent orgs keep exchanging at
+    ///   v2 (whole-org) cost but never lose data.
+    ///
+    /// An `Err` applies **nothing**: the batch is validated in full
+    /// before the first mutation, like [`RuntimeDataRepo::merge_records`].
+    pub fn apply_sync_ops(&mut self, ops: &[SyncOp]) -> Result<SyncOutcome, String> {
+        for op in ops {
+            if op.record.job != self.job {
+                return Err(format!(
+                    "sync op for {} pushed to {} repo",
+                    op.record.job.name(),
+                    self.job.name()
+                ));
+            }
+            if op.seqno == 0 {
+                return Err("sync op seqno must be >= 1".into());
+            }
+            if op.org != op.record.org {
+                return Err(format!(
+                    "sync op org {:?} does not match its record's org {:?}",
+                    op.org, op.record.org
+                ));
+            }
+            op.record.validate()?;
+        }
+        let mut out = SyncOutcome::default();
+        for op in ops {
+            let len = self.log_len(&op.org);
+            if op.seqno <= len {
+                let entry = &self.org_logs[&op.org][op.seqno as usize - 1];
+                if entry.record.content_hash() == op.record.content_hash() {
+                    out.skipped += 1; // duplicate delivery of a seen op
+                    continue;
+                }
+            }
+            let in_order = op.seqno == len + 1;
+            let (applied, conflict) = match self.merge_one(&op.record) {
+                MergeEffect::Added => {
+                    out.added += 1;
+                    (true, None)
+                }
+                MergeEffect::Replaced(c) => {
+                    out.replaced += 1;
+                    (true, c)
+                }
+                MergeEffect::Rejected(c) => (false, c),
+            };
+            out.conflicts.extend(conflict);
+            if in_order {
+                let seqno = self.log_append(&op.record);
+                debug_assert_eq!(seqno, op.seqno, "in-order append keeps origin numbering");
+                if !applied {
+                    out.skipped += 1; // seen: watermark advances, holdings don't
+                }
+                out.logged.push(LoggedOp {
+                    seqno,
+                    record: op.record.clone(),
+                    applied,
+                });
+            } else if applied {
+                // divergent log: keep the record, renumber locally
+                let seqno = self.log_append(&op.record);
+                out.logged.push(LoggedOp {
+                    seqno,
+                    record: op.record.clone(),
+                    applied: true,
+                });
+            } else {
+                out.skipped += 1; // divergent and already resolved
+            }
+        }
+        Ok(out)
+    }
+
+    /// Replay one *seen* (merge-rejected) sync op during segment-store
+    /// recovery: append it to its org's log without touching the
+    /// holdings or the generation. Returns the seqno it received.
+    pub(crate) fn replay_seen(&mut self, record: RuntimeRecord) -> Result<u64, String> {
+        if record.job != self.job {
+            return Err(format!(
+                "seen op for {} replayed into {} repo",
+                record.job.name(),
+                self.job.name()
+            ));
+        }
+        record.validate()?;
+        Ok(self.log_append(&record))
+    }
+
+    /// Replace the op logs wholesale with recovered history (the
+    /// `oplog-<gen>.csv` snapshot sidecar). Recovery-only: the default
+    /// logs built while loading a holdings snapshot know nothing of
+    /// replaced or seen-but-rejected ops, which only the sidecar (or the
+    /// WAL) preserves. Per-org records must arrive in sequence order.
+    pub(crate) fn restore_org_logs(
+        &mut self,
+        logs: BTreeMap<String, Vec<RuntimeRecord>>,
+    ) -> Result<(), String> {
+        self.org_logs.clear();
+        for (org, records) in logs {
+            for r in records {
+                if r.org != org {
+                    return Err(format!(
+                        "op log for {org:?} holds a record attributed to {:?}",
+                        r.org
+                    ));
+                }
+                self.log_append(&r);
+            }
+        }
+        Ok(())
     }
 
     /// CSV header for this job's schema.
@@ -878,44 +1244,170 @@ mod tests {
     }
 
     #[test]
-    fn watermarks_track_counts_and_digests() {
+    fn watermarks_track_seqnos_and_digests() {
         let mut repo = RuntimeDataRepo::new(JobKind::Sort);
         repo.contribute(rec("a", "m5.xlarge", 4, 10.0, 100.0)).unwrap();
         repo.contribute(rec("a", "m5.xlarge", 8, 10.0, 60.0)).unwrap();
         repo.contribute(rec("b", "m5.xlarge", 2, 10.0, 200.0)).unwrap();
         let marks = repo.watermarks();
         assert_eq!(marks.len(), 2);
-        assert_eq!(marks["a"].count, 2);
-        assert_eq!(marks["b"].count, 1);
+        assert_eq!(marks["a"].seqno, 2);
+        assert_eq!(marks["b"].seqno, 1);
+        let v2 = repo.watermarks_v2();
+        assert_eq!(v2["a"].count, 2);
+        assert_eq!(v2["b"].count, 1);
 
-        // the digest is order-independent: a repo built in another order
-        // agrees per org
+        // the full-mark digest is order-independent (XOR of the op set):
+        // a repo built in another per-org order agrees per org
         let mut other = RuntimeDataRepo::new(JobKind::Sort);
         other.contribute(rec("b", "m5.xlarge", 2, 10.0, 200.0)).unwrap();
         other.contribute(rec("a", "m5.xlarge", 8, 10.0, 60.0)).unwrap();
         other.contribute(rec("a", "m5.xlarge", 4, 10.0, 100.0)).unwrap();
-        assert_eq!(repo.watermarks(), other.watermarks());
+        for (org, mark) in repo.watermarks() {
+            assert_eq!(other.watermarks()[&org].seqno, mark.seqno);
+            assert_eq!(other.watermarks()[&org].digest, mark.digest);
+        }
+        assert_eq!(repo.watermarks_v2(), other.watermarks_v2());
         assert_eq!(repo.content_digest(), other.content_digest());
     }
 
     #[test]
-    fn delta_for_ships_only_stale_orgs() {
+    fn delta_for_ships_only_ops_past_the_peers_marks() {
         let mut repo = RuntimeDataRepo::new(JobKind::Sort);
         repo.contribute(rec("a", "m5.xlarge", 4, 10.0, 100.0)).unwrap();
         repo.contribute(rec("b", "m5.xlarge", 8, 10.0, 60.0)).unwrap();
         repo.contribute(rec("b", "m5.xlarge", 2, 10.0, 200.0)).unwrap();
 
-        // peer that matches org "a" but has never seen "b"
+        // a fresh peer pulls everything, with origin seqnos
         let mut peer = RuntimeDataRepo::new(JobKind::Sort);
-        peer.contribute(rec("a", "m5.xlarge", 4, 10.0, 100.0)).unwrap();
         let delta = repo.delta_for(&peer.watermarks());
-        assert_eq!(delta.len(), 2);
-        assert!(delta.iter().all(|r| r.org == "b"));
+        assert_eq!(delta.len(), 3);
+        peer.apply_sync_ops(&delta).unwrap();
+        assert_eq!(peer.watermarks(), repo.watermarks());
 
-        // a converged peer gets an empty delta
-        peer.merge_records(&delta).unwrap();
+        // one new record on one org: exactly one op ships
+        repo.contribute(rec("b", "m5.xlarge", 6, 11.0, 90.0)).unwrap();
+        let delta = repo.delta_for(&peer.watermarks());
+        assert_eq!(delta.len(), 1, "record-level delta, not the whole org");
+        assert_eq!(delta[0].org, "b");
+        assert_eq!(delta[0].seqno, 3);
+
+        // a converged peer gets an empty delta in both directions
+        peer.apply_sync_ops(&delta).unwrap();
         assert!(repo.delta_for(&peer.watermarks()).is_empty());
         assert!(peer.delta_for(&repo.watermarks()).is_empty());
+    }
+
+    #[test]
+    fn rejected_sync_ops_advance_the_watermark_and_are_never_reoffered() {
+        // the blind-duplicate scenario: org "a" measured one config
+        // twice (submit-style history); a peer's merge accepts only the
+        // winner, but the loser must still advance the peer's mark
+        let mut home = RuntimeDataRepo::new(JobKind::Sort);
+        home.contribute(rec("a", "m5.xlarge", 4, 10.0, 100.0)).unwrap();
+        home.contribute(rec("a", "m5.xlarge", 4, 10.0, 90.0)).unwrap(); // dup, wins
+
+        let mut peer = RuntimeDataRepo::new(JobKind::Sort);
+        let delta = home.delta_for(&peer.watermarks());
+        assert_eq!(delta.len(), 2);
+        let out = peer.apply_sync_ops(&delta).unwrap();
+        assert_eq!(out.added, 1, "only the first lands as an add");
+        assert_eq!(out.replaced, 1, "the better duplicate replaces it");
+        assert_eq!(peer.len(), 1, "holdings dedup to the winner");
+        assert_eq!(
+            peer.watermarks(),
+            home.watermarks(),
+            "seen ops advance the mark even when merge rejects them"
+        );
+        assert!(
+            home.delta_for(&peer.watermarks()).is_empty(),
+            "nothing is ever re-offered"
+        );
+
+        // a genuinely rejected op (peer already holds a better record)
+        let mut late = RuntimeDataRepo::new(JobKind::Sort);
+        late.contribute(rec("z", "m5.xlarge", 4, 10.0, 50.0)).unwrap();
+        let out = late.apply_sync_ops(&delta).unwrap();
+        assert_eq!(out.changed(), 0, "local 50.0 beats both");
+        assert_eq!(out.skipped, 2, "skipped always equals ops - changed");
+        assert_eq!(out.logged.len(), 2, "both ops logged as seen");
+        assert!(out.logged.iter().all(|l| !l.applied));
+        assert_eq!(late.len(), 1);
+        assert!(
+            home.delta_for(&late.watermarks()).is_empty(),
+            "seen-but-rejected ops are not re-offered either"
+        );
+        // the v2 view would keep re-offering (holdings differ):
+        assert!(!home.delta_for_v2(&late.watermarks_v2()).is_empty());
+    }
+
+    #[test]
+    fn apply_sync_ops_is_idempotent_and_handles_divergence() {
+        let mut home = RuntimeDataRepo::new(JobKind::Sort);
+        home.contribute(rec("a", "m5.xlarge", 4, 10.0, 100.0)).unwrap();
+        home.contribute(rec("a", "m5.xlarge", 8, 10.0, 60.0)).unwrap();
+        let delta = home.delta_for(&BTreeMap::new());
+
+        let mut peer = RuntimeDataRepo::new(JobKind::Sort);
+        peer.apply_sync_ops(&delta).unwrap();
+        let marks = peer.watermarks();
+        let gen = peer.generation();
+        // re-delivering the same ops changes nothing
+        let again = peer.apply_sync_ops(&delta).unwrap();
+        assert_eq!(again.changed(), 0);
+        assert_eq!(again.skipped, 2);
+        assert!(again.logged.is_empty());
+        assert_eq!(peer.watermarks(), marks);
+        assert_eq!(peer.generation(), gen);
+
+        // divergence: a peer whose org-a log holds a *different* op at
+        // seqno 1 falls back to content dedup with local renumbering
+        let mut divergent = RuntimeDataRepo::new(JobKind::Sort);
+        divergent.contribute(rec("a", "c5.xlarge", 2, 12.0, 70.0)).unwrap();
+        let out = divergent.apply_sync_ops(&delta).unwrap();
+        assert_eq!(out.added, 2, "both foreign configs still land");
+        assert_eq!(divergent.len(), 3);
+        assert_eq!(divergent.log_len("a"), 3, "divergent ops renumber locally");
+        // the divergent peer's log is now numerically ahead, so home
+        // ships it nothing; reconciliation flows the other way — the
+        // divergent side full-ships its (renumbered) log, and home
+        // content-dedups it
+        assert!(home.delta_for(&divergent.watermarks()).is_empty());
+        let refetch = divergent.delta_for(&home.watermarks());
+        assert_eq!(refetch.len(), 3, "divergent org ships whole");
+        let out = home.apply_sync_ops(&refetch).unwrap();
+        assert_eq!(out.added, 1, "only the genuinely-new record lands");
+        assert_eq!(home.canonical_records(), divergent.canonical_records());
+        // once both sides have seen the same op SET, the
+        // order-independent XOR digests re-align and the exchange goes
+        // silent in both directions despite the different log orders
+        assert!(home.delta_for(&divergent.watermarks()).is_empty());
+        assert!(divergent.delta_for(&home.watermarks()).is_empty());
+    }
+
+    #[test]
+    fn sync_op_batches_validate_atomically() {
+        let mut repo = RuntimeDataRepo::new(JobKind::Sort);
+        let good = SyncOp {
+            org: "a".into(),
+            seqno: 1,
+            record: rec("a", "m5.xlarge", 4, 10.0, 100.0),
+        };
+        let bad = SyncOp {
+            org: "a".into(),
+            seqno: 2,
+            record: rec("b", "m5.xlarge", 8, 10.0, 60.0), // org mismatch
+        };
+        assert!(repo.apply_sync_ops(&[good.clone(), bad]).is_err());
+        assert!(repo.is_empty(), "nothing from the failed batch landed");
+        assert_eq!(repo.log_len("a"), 0);
+        let zero = SyncOp {
+            seqno: 0,
+            ..good.clone()
+        };
+        assert!(repo.apply_sync_ops(&[zero]).is_err());
+        repo.apply_sync_ops(&[good]).unwrap();
+        assert_eq!(repo.len(), 1);
     }
 
     #[test]

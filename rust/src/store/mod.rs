@@ -3,32 +3,52 @@
 //! state — the paper's premise that runtime data outlives any one
 //! process and flows between organizations.
 //!
-//! Two halves:
+//! Both halves replay **one abstraction**: the per-(org, job)
+//! sequence-numbered operation log the repository maintains
+//! ([`crate::repo`]). Every accepted mutation gets a monotone per-org
+//! seqno; a [`crate::repo::OrgWatermark`] is a log position
+//! `(seqno, digest)`; deltas are the ops past a position. The store and
+//! the sync protocol are two consumers of that log, not two parallel
+//! change-tracking mechanisms:
 //!
 //! * [`segment`] — the **durable segment store**: per-[`JobKind`]
-//!   append-only WALs with generation-stamped, checksummed ops, atomic
-//!   snapshots, and segment compaction. A coordinator or service
-//!   recovers its full corpus (bitwise, including record order) from
+//!   append-only WALs whose lines carry both the generation stamp and
+//!   the op's org-log seqno (checksummed, torn-tail tolerant), atomic
+//!   snapshots paired with an `oplog-<gen>.csv` sidecar, and segment
+//!   compaction. A coordinator or service recovers its full corpus —
+//!   bitwise, including record order *and* org-log positions — from
 //!   [`JobStore::open`] on startup, then warms its model caches from
-//!   the recovered generation.
-//! * [`sync`] — the **peer delta-sync protocol**: per-(org, job)
-//!   high-water marks ([`crate::repo::OrgWatermark`]) drive
-//!   `SyncPull`/`SyncPush` exchanges that ship only missing records.
-//!   Merge-level dedup with deterministic conflict resolution makes the
-//!   exchange idempotent and convergent: any gossip order drives peers
-//!   to bitwise-identical repositories. [`SyncDriver`] runs the
-//!   exchange on a background thread.
+//!   the recovered generation. Legacy (PR-3 format) WALs and snapshots
+//!   still recover: lines without the seqno field get their numbers
+//!   assigned during (deterministic) replay.
+//! * [`sync`] — the **record-level peer delta-sync protocol** (API v3):
+//!   watermark positions drive `SyncPull`/`SyncPush` exchanges that
+//!   ship sequence-numbered [`crate::repo::SyncOp`]s — **O(changed
+//!   records)** per exchange on prefix-aligned logs, a digest-checked
+//!   whole-org fallback on divergence. Merge-level dedup with
+//!   deterministic conflict resolution makes the exchange idempotent
+//!   and convergent (any gossip order → bitwise-identical
+//!   repositories), and merge-rejected ops are logged as *seen* — the
+//!   watermark advances, so blind duplicate contributions transfer once
+//!   and are never re-offered. [`SyncDriver`] runs the exchange on a
+//!   background thread; [`sync_job_v2`] speaks the legacy org-granular
+//!   protocol to pre-op-log deployments.
 //!
 //! The write path is layered: a [`JobShard`](crate::coordinator::shard)
-//! mutates its repo, logs exactly the applied ops through its attached
-//! [`JobStore`], and lets [`JobStore::maybe_compact`] fold the WAL into
-//! a snapshot when it grows. Reads never touch the store.
+//! mutates its repo, WAL-frames exactly the logged ops through its
+//! attached [`JobStore`] (applied mutations as `C`/`M` lines, seen
+//! rejections as generation-neutral `S` lines), and lets
+//! [`JobStore::maybe_compact`] fold the WAL into a snapshot + sidecar
+//! when it grows. Reads never touch the store.
 
 pub mod segment;
 pub mod sync;
 
 pub use segment::{JobStore, StoreOp, DEFAULT_COMPACT_THRESHOLD, DEFAULT_SEGMENT_CAP};
-pub use sync::{sync_all, sync_job, SyncDriver, SyncStats};
+pub use sync::{
+    fold_orgs, sync_all, sync_all_detailed, sync_job, sync_job_detailed, sync_job_v2,
+    OrgExchange, OrgExchangeMap, SyncDriver, SyncStats,
+};
 
 use crate::repo::RuntimeDataRepo;
 use crate::workloads::JobKind;

@@ -11,26 +11,40 @@
 //! ```
 //!
 //! * **WAL lines.** Every repository mutation is one line:
-//!   `gen,op,job,org,machine,scaleout,features,runtime,checksum`. `gen`
-//!   is the repo generation *after* the op; `op` is `C` (blind
-//!   contribute), `M` (merge-applied add-or-replace), or `K` (canonical
-//!   reorder, no content change). The trailing FNV-1a checksum makes a
-//!   torn tail write detectable on recovery.
+//!   `gen,op,seq,job,org,machine,scaleout,features,runtime,checksum`.
+//!   `gen` is the repo generation *after* the op; `seq` is the op's
+//!   per-organization sequence number in the repo's operation log
+//!   ([`crate::repo`]) — the same numbering the sync protocol ships, so
+//!   recovery and sync replay one shared log; `op` is `C` (blind
+//!   contribute), `M` (merge-applied add-or-replace), `S` (sync op seen
+//!   but merge-rejected: advances the org log and watermark, the
+//!   generation does not move), or `K` (canonical reorder, no content
+//!   change). The trailing FNV-1a checksum makes a torn tail write
+//!   detectable on recovery. Legacy (PR-3 format) lines without the
+//!   `seq` field still parse: replay assigns the sequence numbers,
+//!   which is deterministic because replay order is.
 //! * **Segments** rotate at [`JobStore::with_segment_cap`] lines, so
 //!   compaction never rewrites unbounded history.
 //! * **Snapshots** are whole-repo CSVs written to a temp file and
 //!   `rename`d into place (atomic on POSIX), with the generation in the
-//!   file name. [`JobStore::compact`] writes one and deletes all
-//!   segments — every op they held is ≤ the snapshot generation.
-//! * **Recovery** ([`JobStore::open`]) loads the newest snapshot, then
-//!   replays segments in order, skipping ops the snapshot already
-//!   covers. A checksum-failing or newline-less final line is tolerated
-//!   as a crash-torn tail (and the store rotates to a fresh segment so
-//!   it never appends after torn bytes); corruption anywhere else is a
-//!   hard error. Replay re-applies ops through the same
-//!   `contribute`/`merge_records` code the live write path uses, and
-//!   cross-checks every line's generation stamp, so a recovered repo is
-//!   bitwise-identical to the pre-crash one — including record order.
+//!   file name, paired with an `oplog-<gen>.csv` sidecar persisting the
+//!   per-org operation logs (which the holdings alone cannot
+//!   reconstruct: replaced and seen-but-rejected ops live only there).
+//!   [`JobStore::compact`] writes both and deletes all segments — every
+//!   op they held is ≤ the snapshot generation. A legacy snapshot
+//!   without a sidecar still recovers: the logs are rebuilt from the
+//!   holdings (losing reject/replace history, which at worst degrades
+//!   the org to the v2 whole-org sync fallback).
+//! * **Recovery** ([`JobStore::open`]) loads the newest snapshot (and
+//!   its oplog sidecar), then replays segments in order, skipping ops
+//!   the snapshot already covers. A checksum-failing or newline-less
+//!   final line is tolerated as a crash-torn tail (and the store
+//!   rotates to a fresh segment so it never appends after torn bytes);
+//!   corruption anywhere else is a hard error. Replay re-applies ops
+//!   through the same `contribute`/`merge_records`/seen code the live
+//!   write path uses, and cross-checks every line's generation and
+//!   sequence stamps, so a recovered repo is bitwise-identical to the
+//!   pre-crash one — including record order and org-log positions.
 //!
 //! **Durability scope.** Appends flush to the OS (surviving process
 //! crashes, the failure mode of the simulated substrate); they do not
@@ -54,15 +68,24 @@ pub const DEFAULT_SEGMENT_CAP: usize = 256;
 pub const DEFAULT_COMPACT_THRESHOLD: usize = 1024;
 
 /// One durable repository mutation, as logged to (and replayed from)
-/// the WAL.
+/// the WAL. Record-bearing ops carry the per-org sequence number the
+/// repository's operation log assigned — `seqno == 0` only on lines
+/// parsed from a legacy (PR-3 format) WAL, where replay assigns it.
 #[derive(Debug, Clone, PartialEq)]
 pub enum StoreOp {
     /// Blind append — the contribute path. Replay re-contributes, so
     /// locally-observed duplicate configurations survive recovery.
-    Contribute(RuntimeRecord),
+    /// Advances the generation.
+    Contribute { seqno: u64, record: RuntimeRecord },
     /// Merge-applied record (an add or a deterministic-winner
     /// replacement). Replay re-merges, reproducing the same slot.
-    Merge(RuntimeRecord),
+    /// Advances the generation.
+    Merge { seqno: u64, record: RuntimeRecord },
+    /// Sync op *seen* but merge-rejected: advances the org's operation
+    /// log (and thus its watermark) without touching the holdings —
+    /// the generation does not move. Logged so a restarted deployment
+    /// never re-pulls (or re-offers) ops it already saw.
+    Seen { seqno: u64, record: RuntimeRecord },
     /// Canonical reordering of the whole repo (content unchanged, the
     /// generation does not move). Logged so recovery reproduces record
     /// *order* bitwise, not just content.
@@ -97,6 +120,7 @@ impl JobStore {
             .with_context(|| format!("creating store dir {}", dir.display()))?;
 
         let mut snaps: Vec<(u64, PathBuf)> = Vec::new();
+        let mut oplogs: Vec<(u64, PathBuf)> = Vec::new();
         let mut segs: Vec<(u64, PathBuf)> = Vec::new();
         for entry in
             fs::read_dir(&dir).with_context(|| format!("reading {}", dir.display()))?
@@ -109,6 +133,12 @@ impl JobStore {
                 .and_then(|s| s.parse::<u64>().ok())
             {
                 snaps.push((gen, entry.path()));
+            } else if let Some(gen) = name
+                .strip_prefix("oplog-")
+                .and_then(|s| s.strip_suffix(".csv"))
+                .and_then(|s| s.parse::<u64>().ok())
+            {
+                oplogs.push((gen, entry.path()));
             } else if let Some(ord) = name
                 .strip_prefix("wal-")
                 .and_then(|s| s.strip_suffix(".log"))
@@ -122,7 +152,7 @@ impl JobStore {
         snaps.sort();
         segs.sort();
 
-        // 1) newest snapshot, if any
+        // 1) newest snapshot, if any, plus its op-log sidecar
         let (mut repo, snap_gen) = match snaps.last() {
             None => (RuntimeDataRepo::new(job), 0u64),
             Some((gen, path)) => {
@@ -139,6 +169,18 @@ impl JobStore {
                 );
                 let mut repo = repo;
                 repo.restore_generation(*gen);
+                // the sidecar carries the true op logs (incl. replaced
+                // and seen-but-rejected history); a legacy snapshot
+                // without one keeps the holdings-rebuilt logs, which at
+                // worst degrades affected orgs to the v2 sync fallback
+                if let Some((_, oplog_path)) =
+                    oplogs.iter().find(|(oplog_gen, _)| oplog_gen == gen)
+                {
+                    let logs = load_oplog(job, oplog_path)?;
+                    repo.restore_org_logs(logs)
+                        .map_err(anyhow::Error::msg)
+                        .with_context(|| format!("restoring {}", oplog_path.display()))?;
+                }
                 (repo, *gen)
             }
         };
@@ -289,9 +331,16 @@ impl JobStore {
         Ok(())
     }
 
-    /// Write an atomic snapshot of `repo` (temp file + rename), then
-    /// delete every segment and superseded snapshot — all their ops are
-    /// ≤ the snapshot generation.
+    /// Write an atomic snapshot of `repo` — the holdings CSV plus the
+    /// `oplog-<gen>.csv` op-log sidecar, each temp file + rename — then
+    /// delete every segment and superseded snapshot/sidecar: all their
+    /// ops are ≤ the snapshot generation. The sidecar is published
+    /// FIRST: a crash between the two renames leaves an orphan sidecar
+    /// and no new snapshot, so recovery falls back to the previous
+    /// snapshot + still-present segments at full fidelity (orphan
+    /// sidecars are ignored — they pair by exact generation). Publishing
+    /// in the other order would be the real hazard: a snapshot without
+    /// its sidecar silently drops replaced/seen op-log history.
     pub fn compact(&mut self, repo: &RuntimeDataRepo) -> Result<()> {
         ensure!(
             repo.generation() == self.generation,
@@ -300,23 +349,23 @@ impl JobStore {
             repo.generation()
         );
         let gen = self.generation;
+        let oplog_path = self.dir.join(format!("oplog-{gen:020}.csv"));
+        write_atomic(
+            &self.dir,
+            "oplog.tmp",
+            &oplog_path,
+            oplog_table(repo).to_csv().as_bytes(),
+        )?;
         let final_path = self.dir.join(format!("snap-{gen:020}.csv"));
-        let tmp = self.dir.join("snap.tmp");
-        {
-            let mut file = fs::File::create(&tmp)
-                .with_context(|| format!("creating {}", tmp.display()))?;
-            file.write_all(repo.to_table().to_csv().as_bytes())
-                .with_context(|| format!("writing {}", tmp.display()))?;
-            // snapshots supersede segments, so they must actually be on
-            // disk before the rename publishes them
-            file.sync_all()
-                .with_context(|| format!("syncing {}", tmp.display()))?;
-        }
-        fs::rename(&tmp, &final_path)
-            .with_context(|| format!("publishing {}", final_path.display()))?;
-        // best-effort directory sync so the rename itself is durable
-        // (not supported on every platform; recovery tolerates a lost
-        // rename by falling back to the previous snapshot + segments)
+        write_atomic(
+            &self.dir,
+            "snap.tmp",
+            &final_path,
+            repo.to_table().to_csv().as_bytes(),
+        )?;
+        // best-effort directory sync so the renames themselves are
+        // durable (not supported on every platform; recovery tolerates a
+        // lost rename by falling back to the previous snapshot + segments)
         if let Ok(dir_handle) = fs::File::open(&self.dir) {
             let _ = dir_handle.sync_all();
         }
@@ -328,8 +377,11 @@ impl JobStore {
             let superseded_snap = name.starts_with("snap-")
                 && name.ends_with(".csv")
                 && entry.path() != final_path;
+            let superseded_oplog = name.starts_with("oplog-")
+                && name.ends_with(".csv")
+                && entry.path() != oplog_path;
             let segment = name.starts_with("wal-") && name.ends_with(".log");
-            if superseded_snap || segment {
+            if superseded_snap || superseded_oplog || segment {
                 fs::remove_file(entry.path())
                     .with_context(|| format!("removing {}", name))?;
             }
@@ -372,13 +424,136 @@ impl JobStore {
 
 }
 
+/// fsync-then-rename publication of one file (the snapshot discipline).
+fn write_atomic(dir: &Path, tmp_name: &str, final_path: &Path, bytes: &[u8]) -> Result<()> {
+    let tmp = dir.join(tmp_name);
+    {
+        let mut file =
+            fs::File::create(&tmp).with_context(|| format!("creating {}", tmp.display()))?;
+        file.write_all(bytes)
+            .with_context(|| format!("writing {}", tmp.display()))?;
+        // published files supersede segments, so they must actually be
+        // on disk before the rename
+        file.sync_all()
+            .with_context(|| format!("syncing {}", tmp.display()))?;
+    }
+    fs::rename(&tmp, final_path)
+        .with_context(|| format!("publishing {}", final_path.display()))
+}
+
+/// The six record fields in the one text form both the WAL and the
+/// op-log sidecar use — `(job, org, machine, scaleout, ';'-joined
+/// features, runtime)` with `{}` float formatting. ONE serializer, so
+/// the bitwise round-trip invariant cannot drift between the formats.
+fn record_to_fields(r: &RuntimeRecord) -> [String; 6] {
+    [
+        r.job.name().to_string(),
+        r.org.clone(),
+        r.machine.clone(),
+        r.scaleout.to_string(),
+        r.job_features
+            .iter()
+            .map(|f| format!("{f}"))
+            .collect::<Vec<_>>()
+            .join(";"),
+        format!("{}", r.runtime_s),
+    ]
+}
+
+/// Inverse of [`record_to_fields`]: parse six fields (job, org,
+/// machine, scaleout, features, runtime) back into a record of `job`.
+fn record_from_fields(job: JobKind, fields: &[String]) -> Result<RuntimeRecord> {
+    ensure!(fields.len() == 6, "expected 6 record fields, got {}", fields.len());
+    ensure!(
+        fields[0] == job.name(),
+        "foreign job {:?} in {} store",
+        fields[0],
+        job.name()
+    );
+    let job_features: Vec<f64> = if fields[4].is_empty() {
+        Vec::new()
+    } else {
+        fields[4]
+            .split(';')
+            .map(|s| s.parse::<f64>().map_err(|_| anyhow!("bad feature {s:?}")))
+            .collect::<Result<_>>()?
+    };
+    Ok(RuntimeRecord {
+        job,
+        org: fields[1].clone(),
+        machine: fields[2].clone(),
+        scaleout: fields[3].parse().context("bad scaleout")?,
+        job_features,
+        runtime_s: fields[5]
+            .parse()
+            .map_err(|_| anyhow!("bad runtime {:?}", fields[5]))?,
+    })
+}
+
+const OPLOG_HEADER: [&str; 7] = [
+    "seqno", "job", "org", "machine", "scaleout", "features", "runtime_s",
+];
+
+/// Op-log sidecar schema: one row per org-log entry — the seqno
+/// followed by the shared [`record_to_fields`] columns — grouped per
+/// org in sequence order.
+fn oplog_table(repo: &RuntimeDataRepo) -> csv::Table {
+    let mut t = csv::Table::new(&OPLOG_HEADER);
+    for org in repo.watermarks().keys() {
+        for op in repo.ops_since(org, 0) {
+            let mut row = vec![op.seqno.to_string()];
+            row.extend(record_to_fields(&op.record));
+            t.push(row);
+        }
+    }
+    t
+}
+
+/// Parse an op-log sidecar back into per-org record sequences (each
+/// org's rows must be contiguous seqnos from 1, in order — exactly what
+/// [`oplog_table`] writes).
+fn load_oplog(
+    job: JobKind,
+    path: &Path,
+) -> Result<std::collections::BTreeMap<String, Vec<RuntimeRecord>>> {
+    let table = csv::Table::load(path)
+        .map_err(|e| anyhow!("loading op log {}: {e}", path.display()))?;
+    ensure!(
+        table.header == OPLOG_HEADER,
+        "unrecognized op-log schema in {}: {:?}",
+        path.display(),
+        table.header
+    );
+    let mut logs: std::collections::BTreeMap<String, Vec<RuntimeRecord>> = Default::default();
+    for (i, row) in table.rows.iter().enumerate() {
+        let line = i + 2; // 1-based, after the header
+        let seqno: u64 = row[0]
+            .parse()
+            .with_context(|| format!("{} line {line}: bad seqno", path.display()))?;
+        let record = record_from_fields(job, &row[1..])
+            .with_context(|| format!("{} line {line}", path.display()))?;
+        let log = logs.entry(record.org.clone()).or_default();
+        ensure!(
+            seqno == log.len() as u64 + 1,
+            "{} line {line}: op log gap for {:?} (seqno {seqno} after {})",
+            path.display(),
+            record.org,
+            log.len()
+        );
+        log.push(record);
+    }
+    Ok(logs)
+}
+
 /// Render one op to its sealed WAL line, advancing the caller's
-/// generation cursor for record ops (pure with respect to the store —
-/// [`JobStore::append`] commits the cursor only after the batch hits
-/// the file).
+/// generation cursor for holdings-mutating ops (pure with respect to
+/// the store — [`JobStore::append`] commits the cursor only after the
+/// batch hits the file).
 fn render_op(job: JobKind, gen: &mut u64, op: &StoreOp) -> Result<String> {
     let fields = match op {
-        StoreOp::Contribute(r) | StoreOp::Merge(r) => {
+        StoreOp::Contribute { seqno, record: r }
+        | StoreOp::Merge { seqno, record: r }
+        | StoreOp::Seen { seqno, record: r } => {
             // defense in depth: RuntimeRecord::validate already rejects
             // these at every ingress, but a framing break would corrupt
             // the WAL, so re-check at the last line of defense
@@ -394,26 +569,23 @@ fn render_op(job: JobKind, gen: &mut u64, op: &StoreOp) -> Result<String> {
                 r.job.name(),
                 job.name()
             );
-            *gen += 1;
-            let code = if matches!(op, StoreOp::Contribute(_)) { "C" } else { "M" };
-            vec![
-                gen.to_string(),
-                code.to_string(),
-                r.job.name().to_string(),
-                r.org.clone(),
-                r.machine.clone(),
-                r.scaleout.to_string(),
-                r.job_features
-                    .iter()
-                    .map(|f| format!("{f}"))
-                    .collect::<Vec<_>>()
-                    .join(";"),
-                format!("{}", r.runtime_s),
-            ]
+            ensure!(*seqno >= 1, "record op without an assigned seqno");
+            let code = match op {
+                StoreOp::Contribute { .. } => "C",
+                StoreOp::Merge { .. } => "M",
+                _ => "S",
+            };
+            if code != "S" {
+                *gen += 1; // seen ops never move the generation
+            }
+            let mut fields = vec![gen.to_string(), code.to_string(), seqno.to_string()];
+            fields.extend(record_to_fields(r));
+            fields
         }
         StoreOp::Canonicalize => vec![
             gen.to_string(),
             "K".to_string(),
+            "0".to_string(),
             job.name().to_string(),
             String::new(),
             String::new(),
@@ -432,44 +604,35 @@ fn framing_safe(s: &str) -> bool {
 }
 
 /// Parse one sealed WAL line back into its generation stamp and op.
+/// Accepts both the op-log format (9-field body with `seq`) and the
+/// legacy PR-3 format (8-field body without it); legacy record ops come
+/// back with `seqno == 0`, meaning "assign during replay".
 fn parse_wal_line(job: JobKind, line: &str) -> Result<(u64, StoreOp)> {
     let (body, sum_hex) = line.rsplit_once(',').context("missing checksum")?;
     let sum = u64::from_str_radix(sum_hex, 16).context("bad checksum field")?;
     ensure!(sum == fnv1a64(body.as_bytes()), "checksum mismatch");
     let fields = csv::parse_line(body).map_err(|e| anyhow!("bad WAL row: {e}"))?;
-    ensure!(fields.len() == 8, "expected 8 fields, got {}", fields.len());
+    let (seqno, rest) = match fields.len() {
+        9 => (
+            fields[2].parse::<u64>().context("bad seqno")?,
+            &fields[3..],
+        ),
+        8 => (0u64, &fields[2..]), // legacy PR-3 line: no seq field
+        n => bail!("expected 8 (legacy) or 9 fields, got {n}"),
+    };
     let gen: u64 = fields[0].parse().context("bad generation")?;
     let op = match fields[1].as_str() {
         "K" => StoreOp::Canonicalize,
-        "C" | "M" => {
+        code @ ("C" | "M" | "S") => {
             ensure!(
-                fields[2] == job.name(),
-                "foreign job {:?} in {} store",
-                fields[2],
-                job.name()
+                code != "S" || fields.len() == 9,
+                "seen op in a legacy-format WAL line"
             );
-            let job_features: Vec<f64> = if fields[6].is_empty() {
-                Vec::new()
-            } else {
-                fields[6]
-                    .split(';')
-                    .map(|s| s.parse::<f64>().map_err(|_| anyhow!("bad feature {s:?}")))
-                    .collect::<Result<_>>()?
-            };
-            let record = RuntimeRecord {
-                job,
-                org: fields[3].clone(),
-                machine: fields[4].clone(),
-                scaleout: fields[5].parse().context("bad scaleout")?,
-                job_features,
-                runtime_s: fields[7]
-                    .parse()
-                    .map_err(|_| anyhow!("bad runtime {:?}", fields[7]))?,
-            };
-            if fields[1] == "C" {
-                StoreOp::Contribute(record)
-            } else {
-                StoreOp::Merge(record)
+            let record = record_from_fields(job, rest)?;
+            match code {
+                "C" => StoreOp::Contribute { seqno, record },
+                "M" => StoreOp::Merge { seqno, record },
+                _ => StoreOp::Seen { seqno, record },
             }
         }
         other => bail!("unknown WAL op {other:?}"),
@@ -478,8 +641,8 @@ fn parse_wal_line(job: JobKind, line: &str) -> Result<(u64, StoreOp)> {
 }
 
 /// Replay one op against the recovering repo. Ops the snapshot already
-/// covers are skipped; everything else must advance the generation in
-/// exact sequence. Returns whether the op was applied.
+/// covers are skipped; everything else must advance the generation (and
+/// its org's log) in exact sequence. Returns whether the op was applied.
 fn apply_wal_op(
     repo: &mut RuntimeDataRepo,
     snap_gen: u64,
@@ -487,7 +650,7 @@ fn apply_wal_op(
     op: StoreOp,
 ) -> Result<bool> {
     match op {
-        StoreOp::Contribute(r) => {
+        StoreOp::Contribute { seqno, record } => {
             if gen <= snap_gen {
                 return Ok(false);
             }
@@ -496,10 +659,14 @@ fn apply_wal_op(
                 "WAL generation gap: line stamped {gen}, repo at {}",
                 repo.generation()
             );
-            repo.contribute(r).map_err(anyhow::Error::msg)?;
+            let assigned = repo.contribute(record).map_err(anyhow::Error::msg)?;
+            ensure!(
+                seqno == 0 || seqno == assigned,
+                "WAL seqno gap: line stamped {seqno}, log assigned {assigned}"
+            );
             Ok(true)
         }
-        StoreOp::Merge(r) => {
+        StoreOp::Merge { seqno, record } => {
             if gen <= snap_gen {
                 return Ok(false);
             }
@@ -509,12 +676,32 @@ fn apply_wal_op(
                 repo.generation()
             );
             let out = repo
-                .merge_records(std::slice::from_ref(&r))
+                .merge_records(std::slice::from_ref(&record))
                 .map_err(anyhow::Error::msg)?;
             ensure!(
                 out.changed() == 1,
                 "WAL merge line replayed as a no-op at generation {gen}"
             );
+            let assigned = out.applied[0].seqno;
+            ensure!(
+                seqno == 0 || seqno == assigned,
+                "WAL seqno gap: line stamped {seqno}, log assigned {assigned}"
+            );
+            Ok(true)
+        }
+        StoreOp::Seen { seqno, record } => {
+            // seen ops never move the generation, so coverage is decided
+            // by the op's own position in the (snapshot-restored) log
+            let len = repo.log_len(&record.org);
+            if seqno <= len {
+                return Ok(false); // covered by the oplog sidecar
+            }
+            ensure!(
+                seqno == len + 1,
+                "WAL seen-op gap: line stamped {seqno}, {} log at {len}",
+                record.org
+            );
+            repo.replay_seen(record).map_err(anyhow::Error::msg)?;
             Ok(true)
         }
         StoreOp::Canonicalize => {
@@ -556,37 +743,108 @@ mod tests {
         dir
     }
 
-    /// Drive a (repo, store) pair through the same motions a shard does.
-    fn apply(
-        repo: &mut RuntimeDataRepo,
-        store: &mut JobStore,
-        op: StoreOp,
-    ) {
-        match &op {
-            StoreOp::Contribute(r) => repo.contribute(r.clone()).unwrap(),
-            StoreOp::Merge(r) => {
-                let out = repo.merge_records(std::slice::from_ref(r)).unwrap();
-                assert_eq!(out.changed(), 1, "test op must change the repo");
-            }
-            StoreOp::Canonicalize => repo.canonicalize(),
-        }
-        store.append(std::slice::from_ref(&op), repo.generation()).unwrap();
+    /// Drive a (repo, store) pair through the contribute motion a shard
+    /// performs.
+    fn contribute(repo: &mut RuntimeDataRepo, store: &mut JobStore, r: RuntimeRecord) {
+        let seqno = repo.contribute(r.clone()).unwrap();
+        store
+            .append(&[StoreOp::Contribute { seqno, record: r }], repo.generation())
+            .unwrap();
+    }
+
+    /// Drive a (repo, store) pair through a merge that must change the
+    /// repo, WAL-framing the applied op.
+    fn merge(repo: &mut RuntimeDataRepo, store: &mut JobStore, r: RuntimeRecord) {
+        let out = repo.merge_records(std::slice::from_ref(&r)).unwrap();
+        assert_eq!(out.changed(), 1, "test op must change the repo");
+        let op = &out.applied[0];
+        store
+            .append(
+                &[StoreOp::Merge {
+                    seqno: op.seqno,
+                    record: op.record.clone(),
+                }],
+                repo.generation(),
+            )
+            .unwrap();
+    }
+
+    fn canonicalize(repo: &mut RuntimeDataRepo, store: &mut JobStore) {
+        repo.canonicalize();
+        store
+            .append(&[StoreOp::Canonicalize], repo.generation())
+            .unwrap();
     }
 
     #[test]
     fn append_and_reopen_round_trip() {
         let root = temp_store("round_trip");
         let (mut store, mut repo) = JobStore::open(&root, JobKind::Sort).unwrap();
-        apply(&mut repo, &mut store, StoreOp::Contribute(rec("a", 4, 10.0, 100.0)));
-        apply(&mut repo, &mut store, StoreOp::Merge(rec("b", 8, 10.0, 60.0)));
-        apply(&mut repo, &mut store, StoreOp::Canonicalize);
+        contribute(&mut repo, &mut store, rec("a", 4, 10.0, 100.0));
+        merge(&mut repo, &mut store, rec("b", 8, 10.0, 60.0));
+        canonicalize(&mut repo, &mut store);
         drop(store);
 
         let (store2, repo2) = JobStore::open(&root, JobKind::Sort).unwrap();
         assert_eq!(repo2.records(), repo.records(), "bitwise incl. order");
         assert_eq!(repo2.generation(), repo.generation());
+        assert_eq!(repo2.watermarks(), repo.watermarks(), "op logs recover");
         assert_eq!(store2.generation(), repo.generation());
         assert_eq!(store2.pending_ops(), 3);
+        let _ = fs::remove_dir_all(root);
+    }
+
+    #[test]
+    fn seen_ops_recover_the_watermark_without_moving_the_generation() {
+        let root = temp_store("seen");
+        let (mut store, mut repo) = JobStore::open(&root, JobKind::Sort).unwrap();
+        contribute(&mut repo, &mut store, rec("a", 4, 10.0, 100.0));
+        // a peer pushes the blind-duplicate history of org "p": the
+        // winner applies, the loser is seen-but-rejected
+        let ops = vec![
+            crate::repo::SyncOp {
+                org: "p".into(),
+                seqno: 1,
+                record: rec("p", 4, 10.0, 90.0),
+            },
+            crate::repo::SyncOp {
+                org: "p".into(),
+                seqno: 2,
+                record: rec("p", 4, 10.0, 95.0),
+            },
+        ];
+        let out = repo.apply_sync_ops(&ops).unwrap();
+        assert_eq!(out.changed(), 1, "the 90.0 replaces, the 95.0 is seen");
+        let store_ops: Vec<StoreOp> = out
+            .logged
+            .iter()
+            .map(|l| {
+                if l.applied {
+                    StoreOp::Merge {
+                        seqno: l.seqno,
+                        record: l.record.clone(),
+                    }
+                } else {
+                    StoreOp::Seen {
+                        seqno: l.seqno,
+                        record: l.record.clone(),
+                    }
+                }
+            })
+            .collect();
+        store.append(&store_ops, repo.generation()).unwrap();
+        assert_eq!(repo.generation(), 2);
+        assert_eq!(repo.log_len("p"), 2, "both ops seen");
+        drop(store);
+
+        let (_store2, repo2) = JobStore::open(&root, JobKind::Sort).unwrap();
+        assert_eq!(repo2.records(), repo.records());
+        assert_eq!(repo2.generation(), 2, "seen op did not move the generation");
+        assert_eq!(
+            repo2.watermarks(),
+            repo.watermarks(),
+            "the seen op's watermark advance survives restart"
+        );
         let _ = fs::remove_dir_all(root);
     }
 
@@ -596,11 +854,7 @@ mod tests {
         let (store, mut repo) = JobStore::open(&root, JobKind::Sort).unwrap();
         let mut store = store.with_segment_cap(2);
         for i in 0..5u32 {
-            apply(
-                &mut repo,
-                &mut store,
-                StoreOp::Contribute(rec("a", 2 + i, 10.0 + i as f64, 100.0)),
-            );
+            contribute(&mut repo, &mut store, rec("a", 2 + i, 10.0 + i as f64, 100.0));
         }
         store.compact(&repo).unwrap();
         assert_eq!(store.pending_ops(), 0);
@@ -611,14 +865,48 @@ mod tests {
             .collect();
         assert!(names.iter().all(|n| !n.starts_with("wal-")), "{names:?}");
         assert_eq!(names.iter().filter(|n| n.starts_with("snap-")).count(), 1);
+        assert_eq!(
+            names.iter().filter(|n| n.starts_with("oplog-")).count(),
+            1,
+            "the op-log sidecar is published with the snapshot: {names:?}"
+        );
 
         // appends continue after compaction; reopen sees snapshot + tail
-        apply(&mut repo, &mut store, StoreOp::Contribute(rec("a", 9, 21.0, 90.0)));
+        contribute(&mut repo, &mut store, rec("a", 9, 21.0, 90.0));
         drop(store);
         let (store2, repo2) = JobStore::open(&root, JobKind::Sort).unwrap();
         assert_eq!(repo2.records(), repo.records());
         assert_eq!(repo2.generation(), 6);
+        assert_eq!(repo2.watermarks(), repo.watermarks());
         assert_eq!(store2.pending_ops(), 1, "only the post-snapshot op is pending");
+        let _ = fs::remove_dir_all(root);
+    }
+
+    #[test]
+    fn oplog_sidecar_preserves_replaced_and_seen_history_across_compaction() {
+        let root = temp_store("sidecar");
+        let (mut store, mut repo) = JobStore::open(&root, JobKind::Sort).unwrap();
+        // blind duplicate by org "a" (both logged, holdings dedup later),
+        // then a merge replacement by org "b"
+        contribute(&mut repo, &mut store, rec("a", 4, 10.0, 100.0));
+        contribute(&mut repo, &mut store, rec("a", 4, 10.0, 95.0));
+        merge(&mut repo, &mut store, rec("b", 4, 10.0, 80.0));
+        store.compact(&repo).unwrap();
+        drop(store);
+
+        // the WAL is gone; only snapshot + sidecar remain — yet the op
+        // logs (incl. the replaced duplicate history) must recover, or a
+        // restarted peer would be re-offered org "a" forever
+        let (_store2, repo2) = JobStore::open(&root, JobKind::Sort).unwrap();
+        assert_eq!(repo2.records(), repo.records());
+        assert_eq!(repo2.log_len("a"), 2, "replaced history recovered");
+        assert_eq!(repo2.log_len("b"), 1);
+        assert_eq!(repo2.watermarks(), repo.watermarks());
+        assert!(
+            repo2.delta_for(&repo.watermarks()).is_empty()
+                && repo.delta_for(&repo2.watermarks()).is_empty(),
+            "restart is invisible to peers"
+        );
         let _ = fs::remove_dir_all(root);
     }
 
@@ -626,8 +914,8 @@ mod tests {
     fn torn_tail_is_ignored_and_never_appended_after() {
         let root = temp_store("torn");
         let (mut store, mut repo) = JobStore::open(&root, JobKind::Sort).unwrap();
-        apply(&mut repo, &mut store, StoreOp::Contribute(rec("a", 4, 10.0, 100.0)));
-        apply(&mut repo, &mut store, StoreOp::Contribute(rec("a", 8, 10.0, 60.0)));
+        contribute(&mut repo, &mut store, rec("a", 4, 10.0, 100.0));
+        contribute(&mut repo, &mut store, rec("a", 8, 10.0, 60.0));
         drop(store);
 
         // simulate a crash mid-append: half a line, no newline
@@ -637,7 +925,7 @@ mod tests {
             .find(|p| p.to_string_lossy().contains("wal-"))
             .unwrap();
         let mut bytes = fs::read(&seg).unwrap();
-        bytes.extend_from_slice(b"3,C,sort,org-x,m5.xl");
+        bytes.extend_from_slice(b"3,C,3,sort,org-x,m5.xl");
         fs::write(&seg, bytes).unwrap();
 
         let (mut store2, mut repo2) = JobStore::open(&root, JobKind::Sort).unwrap();
@@ -645,7 +933,7 @@ mod tests {
         assert_eq!(repo2.generation(), 2);
 
         // new appends land in a fresh segment, then everything recovers
-        apply(&mut repo2, &mut store2, StoreOp::Contribute(rec("b", 2, 12.0, 200.0)));
+        contribute(&mut repo2, &mut store2, rec("b", 2, 12.0, 200.0));
         drop(store2);
         let (_store3, repo3) = JobStore::open(&root, JobKind::Sort).unwrap();
         assert_eq!(repo3.records(), repo2.records());
@@ -657,8 +945,8 @@ mod tests {
     fn corruption_before_the_tail_is_a_hard_error() {
         let root = temp_store("corrupt");
         let (mut store, mut repo) = JobStore::open(&root, JobKind::Sort).unwrap();
-        apply(&mut repo, &mut store, StoreOp::Contribute(rec("a", 4, 10.0, 100.0)));
-        apply(&mut repo, &mut store, StoreOp::Contribute(rec("a", 8, 10.0, 60.0)));
+        contribute(&mut repo, &mut store, rec("a", 4, 10.0, 100.0));
+        contribute(&mut repo, &mut store, rec("a", 8, 10.0, 60.0));
         drop(store);
         let seg = fs::read_dir(root.join("sort"))
             .unwrap()
@@ -676,19 +964,53 @@ mod tests {
     }
 
     #[test]
+    fn legacy_pr3_wal_lines_replay_with_assigned_seqnos() {
+        // hand-build a PR-3 format segment (8-field body, no seq) and
+        // recover it with the current reader: records and generation
+        // must come back bitwise, with seqnos assigned in replay order
+        let root = temp_store("legacy");
+        let dir = root.join("sort");
+        fs::create_dir_all(&dir).unwrap();
+        let mut wal = String::new();
+        for body in [
+            "1,C,sort,org-a,m5.xlarge,4,10.5,100",
+            "2,C,sort,org-a,m5.xlarge,4,10.5,90",
+            "3,M,sort,org-b,m5.xlarge,8,11,80",
+            "3,K,sort,,,0,,0",
+        ] {
+            let sum = fnv1a64(body.as_bytes());
+            wal.push_str(&format!("{body},{sum:016x}\n"));
+        }
+        fs::write(dir.join("wal-000001.log"), wal).unwrap();
+
+        let (store, repo) = JobStore::open(&root, JobKind::Sort).unwrap();
+        assert_eq!(repo.len(), 3);
+        assert_eq!(repo.generation(), 3);
+        assert_eq!(store.generation(), 3);
+        assert_eq!(repo.log_len("org-a"), 2, "legacy replay assigns seqnos");
+        assert_eq!(repo.log_len("org-b"), 1);
+        // the canonicalize replayed: blind duplicates ordered by runtime
+        assert_eq!(repo.records()[0].runtime_s, 90.0);
+        assert_eq!(repo.records()[1].runtime_s, 100.0);
+        assert_eq!(repo.records()[2].org, "org-b");
+        let _ = fs::remove_dir_all(root);
+    }
+
+    #[test]
     fn merge_replacements_replay_bitwise() {
         let root = temp_store("replace");
         let (mut store, mut repo) = JobStore::open(&root, JobKind::Sort).unwrap();
-        apply(&mut repo, &mut store, StoreOp::Contribute(rec("z", 4, 10.0, 100.0)));
+        contribute(&mut repo, &mut store, rec("z", 4, 10.0, 100.0));
         // a deterministic-winner replacement (smaller runtime) + reorder
-        apply(&mut repo, &mut store, StoreOp::Merge(rec("a", 4, 10.0, 90.0)));
-        apply(&mut repo, &mut store, StoreOp::Canonicalize);
+        merge(&mut repo, &mut store, rec("a", 4, 10.0, 90.0));
+        canonicalize(&mut repo, &mut store);
         assert_eq!(repo.len(), 1);
         assert_eq!(repo.generation(), 2, "replacement advanced the generation");
         drop(store);
         let (_s, repo2) = JobStore::open(&root, JobKind::Sort).unwrap();
         assert_eq!(repo2.records(), repo.records());
         assert_eq!(repo2.generation(), 2);
+        assert_eq!(repo2.watermarks(), repo.watermarks());
         let _ = fs::remove_dir_all(root);
     }
 }

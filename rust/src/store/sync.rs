@@ -1,27 +1,37 @@
 //! Peer delta-sync: convergent runtime-data exchange between
-//! independently-running C3O deployments.
+//! independently-running C3O deployments, at **record-level** (op log)
+//! granularity.
 //!
 //! The protocol is three [`crate::api`] requests, all spoken through the
 //! deployment-agnostic [`Client`] trait, so any two deployments (two
 //! services, a service and a sequential coordinator, ...) can gossip:
 //!
-//! 1. `Watermarks { job }` — read the local per-org high-water marks.
-//! 2. `SyncPull { job, watermarks }` — ask a peer for every record of
-//!    each org whose watermark differs; the reply also carries the
-//!    peer's own marks, so one round trip primes the reverse direction.
-//! 3. `SyncPush { job, records }` — apply a delta through merge-level
-//!    dedup with deterministic conflict resolution, then canonicalize
-//!    the repo order. Idempotent: re-pushing a delta changes nothing.
+//! 1. `Watermarks { job }` — read the local per-org op-log positions
+//!    (`(seqno, digest)` [`crate::repo::OrgWatermark`]s).
+//! 2. `SyncPull { job, watermarks }` — ask a peer for the ops past each
+//!    of our marks; prefix-aligned logs ship **only the changed
+//!    records** (O(changed), not O(org corpus)); the reply also carries
+//!    the peer's own marks, so one round trip primes the reverse
+//!    direction.
+//! 3. `SyncPush { job, ops }` — apply a delta through merge-level dedup
+//!    with deterministic conflict resolution, then canonicalize the
+//!    repo order. Idempotent: re-pushing a delta changes nothing, and a
+//!    merge-rejected op still advances the receiver's watermark (logged
+//!    as *seen*), so blind duplicate contributions are never re-offered.
 //!
 //! [`sync_job`] performs one full bidirectional exchange; because merge
 //! resolution is a deterministic total order, repeated exchanges drive
 //! any set of peers to **bitwise-identical** repositories regardless of
 //! gossip order (property-tested in `rust/tests/federation.rs`).
-//! [`SyncDriver`] runs exchanges on a background thread at a fixed
-//! interval — the service-side gossip loop.
+//! [`sync_job_v2`] speaks the legacy org-granular exchange
+//! (`SyncPullV2`/`SyncPushV2`) against deployments that predate the op
+//! log — kept as the compatibility path and as the comparison baseline
+//! of `benches/sync_throughput.rs`. [`SyncDriver`] runs exchanges on a
+//! background thread at a fixed interval — the service-side gossip loop.
 
 use crate::api::{ApiError, Client};
 use crate::workloads::JobKind;
+use std::collections::BTreeMap;
 use std::sync::mpsc;
 use std::thread::JoinHandle;
 use std::time::Duration;
@@ -35,14 +45,15 @@ pub struct SyncStats {
     pub records_in: u64,
     /// Records the peer applied from us.
     pub records_out: u64,
-    /// Records shipped over the wire in either direction, applied or
-    /// not. `offered > records_in + records_out` means deltas are being
-    /// re-shipped without effect — the per-org granularity re-sends a
-    /// whole org whenever watermarks differ, e.g. when one peer holds
-    /// blind-contributed duplicate configurations the other's merge
-    /// dedup will never accept (see
-    /// [`delta_for`](crate::repo::RuntimeDataRepo::delta_for)).
+    /// Ops shipped over the wire in either direction, applied or not.
+    /// With record-level deltas this tracks `records_in + records_out`
+    /// except on the first delivery of blind-duplicate history (shipped
+    /// once, then marked seen) or after log divergence (the whole-org
+    /// fallback, which re-ships until content converges).
     pub offered: u64,
+    /// Ops shipped but not applied: already-seen re-deliveries plus
+    /// merge-rejected (seen) ops.
+    pub skipped: u64,
     /// Runtime disagreements surfaced by either side.
     pub conflicts: u64,
     /// Exchanges that failed (driver keeps going; the next tick retries).
@@ -56,56 +67,159 @@ impl SyncStats {
         self.records_in += other.records_in;
         self.records_out += other.records_out;
         self.offered += other.offered;
+        self.skipped += other.skipped;
         self.conflicts += other.conflicts;
         self.errors += other.errors;
     }
 
     /// True when the exchange *changed* no repository in either
     /// direction — the peers hold converged (merge-equivalent) data for
-    /// the synced jobs. Note this is convergence up to merge dedup:
-    /// blind local duplicates are contribution history, not shared
-    /// state, so they neither block quiescence nor transfer; a
-    /// quiescent exchange can still have `offered > 0` for such orgs.
+    /// the synced jobs.
     pub fn quiescent(&self) -> bool {
         self.records_in == 0 && self.records_out == 0
     }
 }
 
-/// One full bidirectional exchange for one job kind.
+/// Per-organization accounting of one or more exchanges: how many ops
+/// of this org's log were offered over the wire, how many the receiver
+/// applied, and how many it skipped (seen/duplicate). The
+/// `c3o sync --json` breakdown.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct OrgExchange {
+    pub offered: u64,
+    pub applied: u64,
+    pub skipped: u64,
+}
+
+impl OrgExchange {
+    /// Accumulate another exchange's counters (rounds, directions).
+    pub fn fold(&mut self, other: &OrgExchange) {
+        self.offered += other.offered;
+        self.applied += other.applied;
+        self.skipped += other.skipped;
+    }
+}
+
+/// Per-org exchange accounting, folded across directions and rounds.
+pub type OrgExchangeMap = BTreeMap<String, OrgExchange>;
+
+/// Fold one per-org map into another (the accumulation the driver and
+/// the `c3o sync` CLI both perform across rounds).
+pub fn fold_orgs(into: &mut OrgExchangeMap, from: &OrgExchangeMap) {
+    for (org, x) in from {
+        into.entry(org.clone()).or_default().fold(x);
+    }
+}
+
+/// One direction of a v3 exchange: pull the delta `dst` is missing from
+/// `src` (against `dst_marks`, or a fresh `Watermarks` read when
+/// `None`), push it into `dst`, account per org — crediting
+/// `records_in` when `inbound`, `records_out` otherwise. Returns the
+/// source's marks from the pull reply, priming the reverse direction.
+fn exchange_direction(
+    dst: &mut dyn Client,
+    src: &mut dyn Client,
+    job: JobKind,
+    dst_marks: Option<BTreeMap<String, crate::repo::OrgWatermark>>,
+    inbound: bool,
+    stats: &mut SyncStats,
+    orgs: &mut OrgExchangeMap,
+) -> Result<BTreeMap<String, crate::repo::OrgWatermark>, ApiError> {
+    let marks = match dst_marks {
+        Some(marks) => marks,
+        None => dst.watermarks(job)?.watermarks,
+    };
+    let delta = src.sync_pull(job, marks)?;
+    stats.pulls += 1;
+    let src_marks = delta.watermarks.clone();
+    stats.offered += delta.ops.len() as u64;
+    for op in &delta.ops {
+        orgs.entry(op.org.clone()).or_default().offered += 1;
+    }
+    if !delta.ops.is_empty() {
+        let report = dst.sync_push(job, delta.ops)?;
+        let applied = if inbound {
+            &mut stats.records_in
+        } else {
+            &mut stats.records_out
+        };
+        *applied += report.changed() as u64;
+        stats.skipped += report.skipped as u64;
+        stats.conflicts += report.conflicts.len() as u64;
+        for (org, applied) in &report.applied_by_org {
+            orgs.entry(org.clone()).or_default().applied += applied;
+        }
+    }
+    Ok(src_marks)
+}
+
+/// One full bidirectional exchange for one job kind, with per-org
+/// accounting.
 ///
-/// Inbound: read local watermarks, pull the peer's delta against them,
-/// apply it. Outbound: the pull reply carried the peer's marks — compute
-/// our delta against those (a local `SyncPull`) and push it. Both
-/// directions reuse merge's dedup, so the exchange is idempotent and
-/// over-shipping (the per-org delta granularity) is harmless.
+/// Inbound: read local marks, pull the peer's delta against them, apply
+/// it. Outbound: the pull reply carried the peer's marks — compute our
+/// delta against those (a local `SyncPull`) and push it, *after* the
+/// inbound apply so ops we just learned (that the peer already holds)
+/// are not echoed back. Both directions reuse merge's dedup, so the
+/// exchange is idempotent; prefix-aligned op logs make each direction
+/// O(changed records).
+pub fn sync_job_detailed(
+    local: &mut dyn Client,
+    peer: &mut dyn Client,
+    job: JobKind,
+) -> Result<(SyncStats, OrgExchangeMap), ApiError> {
+    let mut stats = SyncStats::default();
+    let mut orgs = OrgExchangeMap::new();
+    let peer_marks =
+        exchange_direction(local, peer, job, None, true, &mut stats, &mut orgs)?;
+    exchange_direction(peer, local, job, Some(peer_marks), false, &mut stats, &mut orgs)?;
+    for x in orgs.values_mut() {
+        x.skipped = x.offered.saturating_sub(x.applied);
+    }
+    Ok((stats, orgs))
+}
+
+/// One full bidirectional exchange for one job kind (see
+/// [`sync_job_detailed`] for the per-org accounting variant).
 pub fn sync_job(
+    local: &mut dyn Client,
+    peer: &mut dyn Client,
+    job: JobKind,
+) -> Result<SyncStats, ApiError> {
+    sync_job_detailed(local, peer, job).map(|(stats, _)| stats)
+}
+
+/// One full bidirectional exchange over the **legacy v2** org-granular
+/// protocol (`WatermarksV2`/`SyncPullV2`/`SyncPushV2`): a changed org
+/// ships whole, and blind-duplicate holders are re-offered forever.
+/// Kept to interoperate with pre-op-log deployments and as the
+/// comparison baseline for the record-level path.
+pub fn sync_job_v2(
     local: &mut dyn Client,
     peer: &mut dyn Client,
     job: JobKind,
 ) -> Result<SyncStats, ApiError> {
     let mut stats = SyncStats::default();
 
-    // inbound: what does the peer hold that we lack?
-    let ours = local.watermarks(job)?;
-    let delta = peer.sync_pull(job, ours.watermarks)?;
+    let ours = local.watermarks_v2(job)?;
+    let delta = peer.sync_pull_v2(job, ours.watermarks)?;
     stats.pulls += 1;
     let peer_marks = delta.watermarks.clone();
     stats.offered += delta.records.len() as u64;
     if !delta.records.is_empty() {
-        let report = local.sync_push(job, delta.records)?;
+        let report = local.sync_push_v2(job, delta.records)?;
         stats.records_in += report.changed() as u64;
+        stats.skipped += report.skipped as u64;
         stats.conflicts += report.conflicts.len() as u64;
     }
 
-    // outbound: ship the peer what it lacks. Computed *after* the
-    // inbound apply, so records we just learned (that the peer already
-    // holds) are not echoed back.
-    let out = local.sync_pull(job, peer_marks)?;
+    let out = local.sync_pull_v2(job, peer_marks)?;
     stats.pulls += 1;
     stats.offered += out.records.len() as u64;
     if !out.records.is_empty() {
-        let report = peer.sync_push(job, out.records)?;
+        let report = peer.sync_push_v2(job, out.records)?;
         stats.records_out += report.changed() as u64;
+        stats.skipped += report.skipped as u64;
         stats.conflicts += report.conflicts.len() as u64;
     }
     Ok(stats)
@@ -122,6 +236,23 @@ pub fn sync_all(
         total.fold(&sync_job(local, peer, job)?);
     }
     Ok(total)
+}
+
+/// [`sync_job_detailed`] over several job kinds: folded stats plus the
+/// per-(job, org) breakdown.
+pub fn sync_all_detailed(
+    local: &mut dyn Client,
+    peer: &mut dyn Client,
+    jobs: &[JobKind],
+) -> Result<(SyncStats, BTreeMap<JobKind, OrgExchangeMap>), ApiError> {
+    let mut total = SyncStats::default();
+    let mut by_job: BTreeMap<JobKind, OrgExchangeMap> = BTreeMap::new();
+    for &job in jobs {
+        let (stats, orgs) = sync_job_detailed(local, peer, job)?;
+        total.fold(&stats);
+        fold_orgs(by_job.entry(job).or_default(), &orgs);
+    }
+    Ok((total, by_job))
 }
 
 /// Background gossip loop: exchanges deltas between a local deployment

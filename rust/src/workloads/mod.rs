@@ -32,7 +32,9 @@ pub use grid::{Corpus, Experiment, ExperimentGrid};
 use crate::sim::stage::Stage;
 
 /// The five distributed dataflow jobs of Table I.
-#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+// Ord follows declaration (= Table I) order; used only for stable map
+// keys (e.g. the per-job sync breakdowns), never for semantics.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
 pub enum JobKind {
     Sort,
     Grep,

@@ -134,28 +134,59 @@ fn scenario(client: &mut dyn Client, corpus: &Corpus) -> Vec<Fingerprint> {
         actual_bits: grep_outcome.actual_runtime_s.to_bits(),
     });
 
-    // federation reads: the watermarks cover every contributing org,
-    // and their counts sum to the repository size
+    // federation reads: the op-log watermarks cover every contributing
+    // org, and their seqnos sum to the repository size (every op here
+    // was applied — no rejects, no replacements)
     let marks = client.watermarks(JobKind::Sort).unwrap();
     assert!(marks.watermarks.contains_key("external"));
     assert_eq!(
-        marks.watermarks.values().map(|m| m.count).sum::<u64>(),
+        marks.watermarks.values().map(|m| m.seqno).sum::<u64>(),
         (info.records + 2) as u64,
         "corpus + submitted run + external contribution"
     );
-    // a fresh peer (empty marks) pulls the whole corpus as its delta
+    // the legacy (v2) holdings view agrees record-for-record
+    let marks_v2 = client.watermarks_v2(JobKind::Sort).unwrap();
+    assert_eq!(
+        marks_v2.watermarks.values().map(|m| m.count).sum::<u64>(),
+        (info.records + 2) as u64
+    );
+    assert_eq!(marks_v2.watermarks["external"].count, 1);
+    // a fresh peer (empty marks) pulls the whole op log as its delta
     let delta = client.sync_pull(JobKind::Sort, Default::default()).unwrap();
-    assert_eq!(delta.records.len(), info.records + 2);
+    assert_eq!(delta.ops.len(), info.records + 2);
     assert_eq!(delta.generation, marks.generation);
     assert_eq!(delta.watermarks, marks.watermarks);
-    // re-pushing an already-known record is a no-op: the exchange is
-    // idempotent and must not move the generation
-    let report = client
-        .sync_push(JobKind::Sort, vec![external_record()])
+    // ...and through the v2 compatibility translation too
+    let delta_v2 = client
+        .sync_pull_v2(JobKind::Sort, Default::default())
         .unwrap();
+    assert_eq!(delta_v2.records.len(), info.records + 2);
+    assert_eq!(delta_v2.watermarks, marks_v2.watermarks);
+    // re-pushing an already-seen op is a no-op: the exchange is
+    // idempotent and must not move the generation
+    let external_op = delta
+        .ops
+        .iter()
+        .find(|op| op.org == "external")
+        .expect("external org in the delta")
+        .clone();
+    let report = client.sync_push(JobKind::Sort, vec![external_op]).unwrap();
     assert_eq!(report.changed(), 0);
+    assert_eq!(report.skipped, 1, "a seen op is skipped, not re-applied");
     assert!(report.conflicts.is_empty());
     assert_eq!(report.generation, marks.generation);
+    // the v2 push translation dedups identically
+    let report_v2 = client
+        .sync_push_v2(JobKind::Sort, vec![external_record()])
+        .unwrap();
+    assert_eq!(report_v2.changed(), 0);
+    assert_eq!(report_v2.skipped, 1);
+    assert_eq!(report_v2.generation, marks.generation);
+    // neither push disturbed the watermarks
+    assert_eq!(
+        client.watermarks(JobKind::Sort).unwrap().watermarks,
+        marks.watermarks
+    );
 
     // metrics agree across deployments
     let m = client.metrics().unwrap();
@@ -165,8 +196,8 @@ fn scenario(client: &mut dyn Client, corpus: &Corpus) -> Vec<Fingerprint> {
     assert_eq!(m.retrains, 2, "one training per shared corpus");
     assert_eq!(m.cache_hits, 2, "both submissions decided from the cache");
     assert_eq!(m.fallbacks, 0);
-    assert_eq!(m.sync_pushes, 1);
-    assert_eq!(m.sync_records_applied, 0, "the re-push applied nothing");
+    assert_eq!(m.sync_pushes, 2, "one v3 push, one v2-compat push");
+    assert_eq!(m.sync_records_applied, 0, "the re-pushes applied nothing");
 
     trace
 }

@@ -18,10 +18,10 @@ use c3o::configurator::JobRequest;
 use c3o::coordinator::{Coordinator, CoordinatorService, ServiceConfig};
 use c3o::models::Engine;
 use c3o::repo::{RuntimeDataRepo, RuntimeRecord};
-use c3o::store::{sync_all, sync_job, JobStore, StoreOp, SyncStats};
+use c3o::store::{sync_all, sync_job, sync_job_v2, JobStore, StoreOp, SyncStats};
 use c3o::util::prop::{forall, Gen};
 use c3o::workloads::{ExperimentGrid, JobKind};
-use std::path::PathBuf;
+use std::path::{Path, PathBuf};
 use std::time::Duration;
 
 const MACHINES: [&str; 3] = ["c5.xlarge", "m5.xlarge", "r5.xlarge"];
@@ -214,9 +214,9 @@ fn crash_torn_append_recovers_without_loss_or_duplication() {
             job_features: vec![10.0 + (i / 2) as f64],
             runtime_s: 100.0 + i as f64,
         };
-        repo.contribute(record.clone()).unwrap();
+        let seqno = repo.contribute(record.clone()).unwrap();
         store
-            .append(&[StoreOp::Contribute(record)], repo.generation())
+            .append(&[StoreOp::Contribute { seqno, record }], repo.generation())
             .unwrap();
     }
     let pre_crash = repo.clone();
@@ -306,6 +306,215 @@ fn background_sync_driver_converges_two_services() {
     );
     service_a.shutdown();
     service_b.shutdown();
+}
+
+// ---------------------------------------------------------------------------
+// record-level deltas: O(changed) shipping and no re-offered duplicates
+// ---------------------------------------------------------------------------
+
+#[test]
+fn single_record_contribution_ships_exactly_one_op() {
+    // Property: once two peers converge, contributing ONE record ships
+    // exactly one op on the next exchange (offered == applied == 1) —
+    // even when the corpora contain blind duplicate configurations —
+    // and the round after that re-offers nothing.
+    let cloud = Cloud::aws_like();
+    forall("single_record_delta", 25, |g| {
+        let mut peers: Vec<Coordinator> = vec![peer(&cloud, 300), peer(&cloud, 301)];
+        for i in 0..peers.len() {
+            let count = g.usize_in(1, 15);
+            let mut records: Vec<RuntimeRecord> = (0..count)
+                .map(|k| RuntimeRecord {
+                    job: JobKind::Sort,
+                    org: format!("org-{i}"),
+                    machine: MACHINES[g.usize_in(0, 2)].to_string(),
+                    scaleout: g.usize_in(2, 12) as u32,
+                    job_features: vec![(i * 10_000 + k) as f64 + 0.5],
+                    runtime_s: g.f64_log(10.0, 5000.0),
+                })
+                .collect();
+            if g.bool() {
+                // submit-style blind duplicate: same config, new runtime
+                let mut dup = records[g.usize_in(0, count - 1)].clone();
+                dup.runtime_s += 1.0;
+                records.push(dup);
+            }
+            // the contribute path keeps duplicates (share would dedup)
+            for r in records {
+                peers[i].contribute(r).unwrap();
+            }
+        }
+        sync_until_quiescent(&mut peers, JobKind::Sort, 10);
+
+        // converged peers — blind duplicates included — offer NOTHING
+        let (left, right) = peers.split_at_mut(1);
+        let idle = sync_job(&mut left[0], &mut right[0], JobKind::Sort).unwrap();
+        assert!(idle.quiescent());
+        assert_eq!(idle.offered, 0, "converged logs re-offer nothing: {idle:?}");
+
+        // one new record: the next exchange ships exactly one op
+        left[0]
+            .contribute(RuntimeRecord {
+                job: JobKind::Sort,
+                org: "org-0".into(),
+                machine: MACHINES[0].to_string(),
+                scaleout: 3,
+                job_features: vec![999_999.5],
+                runtime_s: 321.0,
+            })
+            .unwrap();
+        let stats = sync_job(&mut left[0], &mut right[0], JobKind::Sort).unwrap();
+        assert_eq!(stats.offered, 1, "exactly the changed record ships");
+        assert_eq!(stats.records_in + stats.records_out, 1);
+        assert_eq!(stats.skipped, 0);
+
+        // and the round after that is silent again
+        let after = sync_job(&mut left[0], &mut right[0], JobKind::Sort).unwrap();
+        assert!(after.quiescent());
+        assert_eq!(after.offered, 0);
+    });
+}
+
+#[test]
+fn blind_duplicates_ship_once_and_are_never_reoffered() {
+    // Deterministic contrast of the v3 (record-level) and v2
+    // (org-granular) exchanges on the exact ROADMAP pathology: an org
+    // holding blind-contributed duplicate configurations a peer's merge
+    // never accepts.
+    let cloud = Cloud::aws_like();
+    let dup_history = |p: &mut Coordinator| {
+        // the scaleout-4 config is measured twice, better run first, so
+        // the later duplicate LOSES merge resolution at every receiver —
+        // the op a v2 peer is re-offered forever
+        for (scaleout, runtime) in [(4u32, 90.0), (4, 100.0), (8, 60.0)] {
+            p.contribute(RuntimeRecord {
+                job: JobKind::Sort,
+                org: "dup-org".into(),
+                machine: "m5.xlarge".into(),
+                scaleout,
+                job_features: vec![10.0],
+                runtime_s: runtime,
+            })
+            .unwrap();
+        }
+    };
+
+    // v3: the duplicate ships once (seen), then never again
+    let mut a = peer(&cloud, 310);
+    let mut b = peer(&cloud, 311);
+    dup_history(&mut a);
+    let first = sync_job(&mut a, &mut b, JobKind::Sort).unwrap();
+    assert_eq!(first.offered, 3, "the whole history ships once");
+    assert_eq!(first.records_in + first.records_out, 2, "dedup keeps 2");
+    assert_eq!(first.skipped, 1, "the losing duplicate is seen, not applied");
+    let second = sync_job(&mut a, &mut b, JobKind::Sort).unwrap();
+    assert!(second.quiescent());
+    assert_eq!(second.offered, 0, "nothing is ever re-offered");
+
+    // v2 on an identical pair: the org is re-offered on EVERY exchange
+    let mut a2 = peer(&cloud, 312);
+    let mut b2 = peer(&cloud, 313);
+    dup_history(&mut a2);
+    let first = sync_job_v2(&mut a2, &mut b2, JobKind::Sort).unwrap();
+    assert_eq!(first.records_in + first.records_out, 2);
+    let second = sync_job_v2(&mut a2, &mut b2, JobKind::Sort).unwrap();
+    assert!(second.quiescent(), "correct but wasteful");
+    assert!(
+        second.offered > 0,
+        "v2 re-offers the blind-duplicate org forever: {second:?}"
+    );
+
+    // the two protocols interoperate: a v3 peer that received data via
+    // the v2 path still converges (content-wise) with everyone
+    assert_eq!(
+        b.repo(JobKind::Sort).unwrap().canonical_records(),
+        b2.repo(JobKind::Sort).unwrap().canonical_records()
+    );
+}
+
+// ---------------------------------------------------------------------------
+// store-format migration: PR-3 stores open bitwise under the new code
+// ---------------------------------------------------------------------------
+
+/// Copy the committed PR-3-format fixture into a scratch dir (opening a
+/// store may later write beside it; the fixture itself must stay
+/// pristine).
+fn copy_fixture(name: &str) -> PathBuf {
+    let src = Path::new(env!("CARGO_MANIFEST_DIR")).join("tests/fixtures/pr3-store");
+    let dst = temp_root(name);
+    let mut copied = 0usize;
+    for entry in std::fs::read_dir(&src).unwrap() {
+        let entry = entry.unwrap();
+        if !entry.path().is_dir() {
+            continue; // the fixture root also holds a README
+        }
+        let job_dir = dst.join(entry.file_name());
+        std::fs::create_dir_all(&job_dir).unwrap();
+        for f in std::fs::read_dir(entry.path()).unwrap() {
+            let f = f.unwrap();
+            std::fs::copy(f.path(), job_dir.join(f.file_name())).unwrap();
+            copied += 1;
+        }
+    }
+    assert!(copied > 0, "fixture copy found no store files at {src:?}");
+    dst
+}
+
+#[test]
+fn pr3_format_store_recovers_bitwise_and_round_trips_sync() {
+    let cloud = Cloud::aws_like();
+    let root = copy_fixture("pr3_migration");
+
+    // 1) the legacy WAL (8-field lines, no seqnos) recovers bitwise
+    let (store, repo) = JobStore::open(&root, JobKind::Sort).unwrap();
+    assert_eq!(repo.len(), 4);
+    assert_eq!(repo.generation(), 4);
+    assert_eq!(store.generation(), 4);
+    // canonical order was WAL-logged (the trailing K line) and replays:
+    // (config_key, org, runtime) — c5 first, then m5 x2, then m5 x4 dup
+    let orgs: Vec<&str> = repo.records().iter().map(|r| r.org.as_str()).collect();
+    assert_eq!(orgs, ["org-b", "org-c", "org-a", "org-a"]);
+    assert_eq!(repo.records()[2].runtime_s, 90.0, "blind dup order: 90 first");
+    assert_eq!(repo.records()[3].runtime_s, 100.0);
+    // replay assigned the op-log seqnos the legacy lines lack
+    assert_eq!(repo.log_len("org-a"), 2);
+    assert_eq!(repo.log_len("org-b"), 1);
+    assert_eq!(repo.log_len("org-c"), 1);
+    drop(store);
+
+    // 2) reopening is idempotent (bitwise again)
+    let (_s2, repo2) = JobStore::open(&root, JobKind::Sort).unwrap();
+    assert_eq!(repo2.records(), repo.records());
+    assert_eq!(repo2.watermarks(), repo.watermarks());
+
+    // 3) a durable coordinator over the migrated store round-trips one
+    //    record-level sync against a fresh peer
+    let mut durable = Coordinator::open_with_store(
+        cloud.clone(),
+        &PathBuf::from("/nonexistent-artifacts"),
+        21,
+        &root,
+    )
+    .unwrap();
+    let mut fresh = peer(&cloud, 320);
+    let stats = sync_job(&mut durable, &mut fresh, JobKind::Sort).unwrap();
+    assert_eq!(stats.offered, 4, "the full migrated log ships");
+    assert_eq!(
+        stats.records_in + stats.records_out,
+        3,
+        "the losing blind duplicate dedups on apply"
+    );
+    assert_eq!(stats.skipped, 1, "...logged as seen at the receiver");
+    let fresh_repo = fresh.repo(JobKind::Sort).unwrap();
+    assert_eq!(fresh_repo.len(), 3, "receiver holds the deduped corpus");
+    assert!(
+        fresh_repo.records().iter().all(|r| r.runtime_s != 100.0),
+        "the losing duplicate measurement is not in the holdings"
+    );
+    let again = sync_job(&mut durable, &mut fresh, JobKind::Sort).unwrap();
+    assert!(again.quiescent());
+    assert_eq!(again.offered, 0, "migrated logs are never re-offered");
+    let _ = std::fs::remove_dir_all(root);
 }
 
 // ---------------------------------------------------------------------------

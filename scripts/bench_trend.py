@@ -32,6 +32,7 @@ def report_extra(path):
     if doc.get("bench") == "sync_throughput":
         replay = doc.get("replay", {})
         sync = doc.get("sync", {})
+        incremental = doc.get("incremental", {})
         print(f"{'metric':<42} {'value':>14}")
         rows = [
             ("records", doc.get("records")),
@@ -41,6 +42,9 @@ def report_extra(path):
             ("sync records exchanged", sync.get("records_exchanged")),
             ("sync pulls", sync.get("pulls")),
             ("sync conflicts", sync.get("conflicts")),
+            ("1-of-N incremental: v3 records shipped", incremental.get("v3_records_shipped")),
+            ("1-of-N incremental: v2 records shipped", incremental.get("v2_records_shipped")),
+            ("1-of-N incremental: v2/v3 ship ratio", incremental.get("ship_ratio_v2_over_v3")),
         ]
         for label, value in rows:
             if value is not None:
