@@ -40,6 +40,73 @@ fn main() {
     let c = MatF32::from_vec(128, 128, (0..128 * 128).map(|i| (i % 5) as f32).collect());
     b.run("l3_matmul_128x128", || black_box(a.matmul(&c).data[0]));
 
+    // ---- L3: incremental feature cache (delta-aware retrain inputs) --------
+    // What a steady-state retrain pays to assemble its training inputs:
+    // from-scratch featurization of a ~400-row corpus vs. replaying a
+    // one-record delta through the cache. The gap is the per-retrain
+    // saving before any model math starts — and it scales with delta
+    // size, not corpus size.
+    {
+        use c3o::models::native::NativeEngine;
+        use c3o::models::ModelTrainer;
+        use c3o::repo::{FeatureMatrixCache, Featurizer, RuntimeDataRepo, RuntimeRecord};
+
+        let featurizer = Featurizer::new(&cloud);
+        let mut repo = RuntimeDataRepo::new(JobKind::Grep);
+        let machines = ["c5.xlarge", "m5.xlarge", "r5.xlarge"];
+        for k in 0..400usize {
+            repo.contribute(RuntimeRecord {
+                job: JobKind::Grep,
+                org: format!("org-{}", k % 5),
+                machine: machines[k % 3].to_string(),
+                scaleout: 2 + (k % 11) as u32,
+                job_features: vec![5.0 + k as f64 * 0.1, 0.01 + (k % 50) as f64 * 0.002],
+                runtime_s: 50.0 + ((k * 31) % 997) as f64,
+            })
+            .unwrap();
+        }
+        b.run("l3_featurize_400_rows_scratch", || {
+            black_box(featurizer.fit(&repo).2.len())
+        });
+
+        let mut cache = FeatureMatrixCache::new();
+        cache.refresh(&featurizer, &repo);
+        // per iteration: one conflict-replacement delta (a re-measurement
+        // that wins the merge) replayed into the cache, then a cached fit
+        let template = repo.records()[0].clone();
+        let mut runtime = template.runtime_s;
+        b.run("l3_featurize_1_row_delta_cached", || {
+            runtime *= 0.999_999; // smaller runtime always wins the merge
+            let mut peer = RuntimeDataRepo::new(JobKind::Grep);
+            let mut r = template.clone();
+            r.runtime_s = runtime;
+            peer.contribute(r).unwrap();
+            repo.merge(&peer).unwrap();
+            let reused = cache.refresh(&featurizer, &repo);
+            black_box(cache.fit(&repo).2.len() + reused)
+        });
+
+        // the same gap one layer up: a full kNN train (featurize + pad)
+        // from scratch vs. consuming the warm cache
+        let mut engine = NativeEngine::default();
+        b.run("l3_knn_train_400_rows_scratch", || {
+            black_box(
+                engine
+                    .train(&cloud, &repo, ModelKind::Pessimistic)
+                    .unwrap()
+                    .kind,
+            )
+        });
+        b.run("l3_knn_train_400_rows_cached", || {
+            black_box(
+                engine
+                    .train_cached(&cloud, &repo, ModelKind::Pessimistic, Some(&mut cache))
+                    .unwrap()
+                    .kind,
+            )
+        });
+    }
+
     // ---- PJRT layers --------------------------------------------------------
     let dir = Runtime::default_dir();
     if !Runtime::artifacts_available(&dir) {

@@ -1,7 +1,7 @@
 //! Bench: requests/second of the sharded multi-worker service vs the
 //! single-thread ordered session, at 1, 4, and 8 client threads.
 //!
-//! Two scenarios:
+//! Three scenarios:
 //!
 //! * **write-heavy** (the original): pure `Submit` traffic. The workload
 //!   interleaves four job kinds so the service's per-kind shards can
@@ -12,6 +12,10 @@
 //!   service serves reads lock-free from published model snapshots and
 //!   coalesces same-kind reads into one predict batch, so this is where
 //!   the read/write split pays.
+//! * **write mix**: `Recommend:Submit ≈ 1:9` with pipelined submits —
+//!   the shape that exercises write-side coalescing (same-kind submit
+//!   groups pre-scored as one predict batch) and the incremental
+//!   feature cache (delta-aware retrains inside the timed window).
 //!
 //! Both paths are warmed by the corpus share (writes train the model),
 //! so initial training is paid outside the timed window; retrains inside
@@ -138,7 +142,7 @@ fn main() {
 
     // baseline: the same mix through the ordered session (reads queue
     // behind writes — the shape's ceiling)
-    let session = Session::spawn(cloud.clone(), no_artifacts, 7);
+    let session = Session::spawn(cloud.clone(), no_artifacts.clone(), 7);
     for kind in KINDS {
         session.share(corpus.repo_for(kind)).unwrap();
     }
@@ -198,6 +202,86 @@ fn main() {
     let read_speedup = read_best / read_baseline;
     println!("read-heavy speedup (best service vs session): {read_speedup:.2}x");
 
+    // ---- scenario 3: write mix (recommend:submit ≈ 1:9, pipelined) ------
+    // The inverse of scenario 2: the serialized write path dominates.
+    // Service clients pipeline their submits as tickets, so queue depth
+    // builds and the write-side coalescing pre-scores same-kind submit
+    // groups as one predict batch before their contribute steps.
+
+    let is_rare_read = |i: usize| i % 10 == 0;
+
+    let session = Session::spawn(cloud.clone(), no_artifacts, 7);
+    for kind in KINDS {
+        session.share(corpus.repo_for(kind)).unwrap();
+    }
+    let t0 = Instant::now();
+    for i in 0..total_jobs {
+        if is_rare_read(i) {
+            session.recommend(request_for(i)).unwrap();
+        } else {
+            session.submit(&org, request_for(i)).unwrap();
+        }
+    }
+    let write_baseline = total_jobs as f64 / t0.elapsed().as_secs_f64();
+    session.shutdown();
+    println!("write-mix    session   1 client : {write_baseline:>8.1} requests/s");
+
+    let mut write_points: Vec<(usize, f64, u64, u64)> = Vec::new();
+    for &clients in &[1usize, 4, 8] {
+        let service = CoordinatorService::spawn(
+            cloud.clone(),
+            ServiceConfig::default()
+                .with_workers(8)
+                .with_pjrt_workers(0)
+                .with_seed(7),
+        );
+        for kind in KINDS {
+            service.share(corpus.repo_for(kind)).unwrap();
+        }
+        let t0 = Instant::now();
+        std::thread::scope(|scope| {
+            for c in 0..clients {
+                let client = service.client();
+                scope.spawn(move || {
+                    let org = Organization::new(&format!("client-{c}"));
+                    let mut tickets = Vec::new();
+                    let mut i = c;
+                    while i < total_jobs {
+                        if is_rare_read(i) {
+                            client.recommend(request_for(i)).unwrap();
+                        } else {
+                            tickets.push(
+                                client.submit_nowait(&org, request_for(i)).unwrap(),
+                            );
+                        }
+                        i += clients;
+                    }
+                    for ticket in tickets {
+                        ticket.wait().unwrap();
+                    }
+                });
+            }
+        });
+        let req_per_s = total_jobs as f64 / t0.elapsed().as_secs_f64();
+        let m = service.metrics().unwrap();
+        println!(
+            "write-mix    service  {clients:>2} clients: {req_per_s:>8.1} requests/s  \
+             ({} coalesced write batches, {} featurized rows reused)",
+            m.coalesced_write_batches, m.featurized_rows_reused
+        );
+        write_points.push((
+            clients,
+            req_per_s,
+            m.coalesced_write_batches,
+            m.featurized_rows_reused,
+        ));
+        service.shutdown();
+    }
+
+    let write_best = write_points.iter().map(|&(_, j, _, _)| j).fold(0.0f64, f64::max);
+    let write_speedup = write_best / write_baseline;
+    println!("write-mix speedup (best service vs session): {write_speedup:.2}x");
+
     let json = Json::obj(vec![
         ("bench", Json::Str("serve_throughput".to_string())),
         ("total_jobs", Json::Num(total_jobs as f64)),
@@ -241,6 +325,39 @@ fn main() {
                     ),
                 ),
                 ("speedup_vs_session", Json::Num(read_speedup)),
+            ]),
+        ),
+        (
+            "write_mix",
+            Json::obj(vec![
+                (
+                    "mix",
+                    Json::Str(format!("{}:{READS_PER_10} recommend:submit", 10 - READS_PER_10)),
+                ),
+                ("baseline_session_req_per_s", Json::Num(write_baseline)),
+                (
+                    "service",
+                    Json::Arr(
+                        write_points
+                            .iter()
+                            .map(|&(clients, req_per_s, coalesced, reused)| {
+                                Json::obj(vec![
+                                    ("clients", Json::Num(clients as f64)),
+                                    ("req_per_s", Json::Num(req_per_s)),
+                                    (
+                                        "coalesced_write_batches",
+                                        Json::Num(coalesced as f64),
+                                    ),
+                                    (
+                                        "featurized_rows_reused",
+                                        Json::Num(reused as f64),
+                                    ),
+                                ])
+                            })
+                            .collect(),
+                    ),
+                ),
+                ("speedup_vs_session", Json::Num(write_speedup)),
             ]),
         ),
     ]);

@@ -45,7 +45,9 @@
 //!   taken **only by writes**; reads are served lock-free from published
 //!   `Arc<ModelSnapshot>`s by `N` worker threads, with per-request reply
 //!   channels, pipelined `submit_nowait` tickets, and cross-request
-//!   coalescing of same-kind `Recommend` batches.
+//!   coalescing of same-kind `Recommend` *and* `Submit` batches (write
+//!   groups are pre-scored as one predict batch before their serialized
+//!   contribute steps).
 //!
 //! One submission flows: route to the kind's shard → decide from the
 //! write-maintained model (all candidates scored as one featurized
@@ -170,6 +172,15 @@ pub struct Metrics {
     /// `Recommend` groups the service scored as one coalesced predict
     /// batch (each group covers ≥ 2 requests).
     pub coalesced_batches: u64,
+    /// `Submit` groups whose decisions the service pre-scored as one
+    /// coalesced predict batch (each group covers ≥ 2 submits).
+    pub coalesced_write_batches: u64,
+    /// Wall-clock nanoseconds spent in model refreshes (CV + winner
+    /// train), summed over all retrains.
+    pub retrain_nanos_total: u64,
+    /// Already-featurized rows the incremental feature cache reused
+    /// across retrains (rows NOT re-run through the featurizer).
+    pub featurized_rows_reused: u64,
     /// Peer deltas applied via `SyncPush` (including no-op re-pushes).
     pub sync_pushes: u64,
     /// Records a `SyncPush` actually added or replaced.
@@ -201,6 +212,44 @@ impl Metrics {
         }
     }
 
+    /// JSON rendering of every counter (the `c3o serve --json` surface,
+    /// so the incremental-training and coalescing effects are observable
+    /// in production, not just in benches).
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("submissions", Json::Num(self.submissions as f64)),
+            ("fallbacks", Json::Num(self.fallbacks as f64)),
+            ("retrains", Json::Num(self.retrains as f64)),
+            ("cache_hits", Json::Num(self.cache_hits as f64)),
+            ("recommends", Json::Num(self.recommends as f64)),
+            ("contributions", Json::Num(self.contributions as f64)),
+            ("coalesced_batches", Json::Num(self.coalesced_batches as f64)),
+            (
+                "coalesced_write_batches",
+                Json::Num(self.coalesced_write_batches as f64),
+            ),
+            ("retrain_nanos_total", Json::Num(self.retrain_nanos_total as f64)),
+            (
+                "featurized_rows_reused",
+                Json::Num(self.featurized_rows_reused as f64),
+            ),
+            ("sync_pushes", Json::Num(self.sync_pushes as f64)),
+            (
+                "sync_records_applied",
+                Json::Num(self.sync_records_applied as f64),
+            ),
+            ("sync_conflicts", Json::Num(self.sync_conflicts as f64)),
+            ("targets_given", Json::Num(self.targets_given as f64)),
+            ("targets_met", Json::Num(self.targets_met as f64)),
+            ("target_hit_rate", Json::Num(self.target_hit_rate())),
+            ("total_cost_usd", Json::Num(self.total_cost_usd)),
+            (
+                "mean_prediction_error_pct",
+                Json::Num(self.mean_prediction_error_pct()),
+            ),
+        ])
+    }
+
     /// Fold another metrics block into this one (the service workers
     /// stage per-request metrics locally and fold them in afterwards).
     pub fn fold(&mut self, other: &Metrics) {
@@ -211,6 +260,9 @@ impl Metrics {
         self.recommends += other.recommends;
         self.contributions += other.contributions;
         self.coalesced_batches += other.coalesced_batches;
+        self.coalesced_write_batches += other.coalesced_write_batches;
+        self.retrain_nanos_total += other.retrain_nanos_total;
+        self.featurized_rows_reused += other.featurized_rows_reused;
         self.sync_pushes += other.sync_pushes;
         self.sync_records_applied += other.sync_records_applied;
         self.sync_conflicts += other.sync_conflicts;

@@ -38,6 +38,14 @@
 //!   **one** predict batch ([`ModelSnapshot::recommend_batch`]); each
 //!   request still gets its own decision, bitwise-identical to
 //!   uncoalesced serving (observable via `Metrics::coalesced_batches`).
+//! * **Coalesced writes** — `Submit` gets the same drain: a same-kind
+//!   submit group is pre-scored as one predict batch against the cached
+//!   model before the contribute/retrain steps run one by one under the
+//!   shard lock. Each member re-checks the model's identity before
+//!   honouring its pre-scored decision (an earlier member's retrain
+//!   invalidates the rest of the group, which then decide inside their
+//!   own submit), so outcomes stay bitwise-identical to sequential
+//!   serving (observable via `Metrics::coalesced_write_batches`).
 //!
 //! ```no_run
 //! use c3o::api::Client as _;
@@ -58,10 +66,10 @@ use crate::api::{
     self, ApiError, Client, Contribution, Recommendation, Response, SnapshotInfo,
 };
 use crate::cloud::Cloud;
-use crate::configurator::JobRequest;
+use crate::configurator::{ClusterChoice, Configurator, JobRequest};
 use crate::coordinator::shard::{JobShard, ModelSnapshot, ShardPolicy};
 use crate::coordinator::{JobOutcome, Metrics, Organization};
-use crate::models::{Engine, ModelTrainer};
+use crate::models::{Engine, ModelTrainer, QueryBatch};
 use crate::repo::{RuntimeDataRepo, RuntimeRecord};
 use crate::runtime::Runtime;
 use crate::util::rng::Pcg32;
@@ -87,8 +95,8 @@ pub struct ServiceConfig {
     pub policy: ShardPolicy,
     /// Master seed; each shard derives its own RNG stream from it.
     pub seed: u64,
-    /// Maximum same-kind `Recommend` requests a worker coalesces into
-    /// one predict batch (1 disables coalescing).
+    /// Maximum same-kind `Recommend` (or `Submit`) requests a worker
+    /// coalesces into one predict batch (1 disables coalescing).
     pub coalesce: usize,
     /// Segment-store root for a **durable** service: repositories are
     /// recovered from it on startup (models warmed from the recovered
@@ -595,6 +603,43 @@ fn worker_loop(
                     }
                     serve_recommend_group(&shared, &mut engine, kind, group);
                 }
+                api::Request::Submit { org, request } => {
+                    let kind = request.kind();
+                    let mut group = vec![(org, request, reply)];
+                    // Same drain discipline as the read path: pull
+                    // further same-kind `Submit`s already waiting in the
+                    // queue so their candidate scoring shares one
+                    // predict batch; the first non-matching item stops
+                    // the drain and goes to the local backlog.
+                    {
+                        let rx = queue.lock().unwrap();
+                        while group.len() < shared.coalesce {
+                            match rx.try_recv() {
+                                Ok(WorkItem::Api(req2, reply2)) => match *req2 {
+                                    api::Request::Submit {
+                                        org: org2,
+                                        request: r2,
+                                    } if r2.kind() == kind => {
+                                        group.push((org2, r2, reply2));
+                                    }
+                                    other => {
+                                        backlog.push_back(WorkItem::Api(
+                                            Box::new(other),
+                                            reply2,
+                                        ));
+                                        break;
+                                    }
+                                },
+                                Ok(WorkItem::Shutdown) => {
+                                    backlog.push_back(WorkItem::Shutdown);
+                                    break;
+                                }
+                                Err(_) => break,
+                            }
+                        }
+                    }
+                    serve_submit_group(&shared, &mut engine, kind, group);
+                }
                 other => {
                     let result = serve_request(&shared, &mut engine, other);
                     let _ = reply.send(result);
@@ -645,40 +690,129 @@ fn serve_recommend_group(
     }
 }
 
-/// Serve one non-`Recommend` protocol request. Writes take their shard's
-/// mutex and republish the snapshot before releasing it; the remaining
-/// reads (`Metrics`, `SnapshotInfo`) touch no shard lock at all.
+/// Serve a coalesced group of same-kind `Submit`s. The per-submit
+/// candidate scoring is hoisted out of the serialized write path: when
+/// the shard has a cached model and the group has two or more members,
+/// **every member's candidates are scored as one predict batch** —
+/// exactly the arithmetic of [`ModelSnapshot::recommend_batch`] — before
+/// the contribute/retrain steps run one by one in arrival order. Each
+/// member re-checks that the model it was pre-scored against is still
+/// the shard's cached model (an earlier member's retrain may have
+/// replaced it) and falls back to deciding inside its own submit
+/// otherwise, so decisions are bitwise-identical to serving the submits
+/// sequentially (`Submit` and `Recommend` share one decision path).
+fn serve_submit_group(
+    shared: &Shared,
+    engine: &mut dyn ModelTrainer,
+    kind: JobKind,
+    group: Vec<(Organization, JobRequest, ReplyTx)>,
+) {
+    let mut local = Metrics::default();
+    let mut results: Vec<Option<Result<JobOutcome, ApiError>>> =
+        (0..group.len()).map(|_| None).collect();
+    // validate before taking the shard lock; invalid requests drop out
+    let mut valid: Vec<usize> = Vec::with_capacity(group.len());
+    for (i, (_, request, _)) in group.iter().enumerate() {
+        match request.validate() {
+            Ok(()) => valid.push(i),
+            Err(e) => results[i] = Some(Err(e)),
+        }
+    }
+    if !valid.is_empty() {
+        match shard_for(shared, kind) {
+            Err(e) => {
+                for &i in &valid {
+                    results[i] = Some(Err(e.clone()));
+                }
+            }
+            Ok(shard_mutex) => {
+                let mut shard = shard_mutex.lock().unwrap();
+                // Pre-score all members' candidates as one batch
+                // against the current cached model (same shape as the
+                // read path). A scoring failure here is not an error:
+                // the member just decides inside its own submit.
+                let mut predecided: Vec<Option<ClusterChoice>> = vec![None; group.len()];
+                let mut scored_model: Option<usize> = None;
+                if valid.len() > 1 {
+                    if let Some(cached) = shard.cached_model() {
+                        let configurator = Configurator::new(&shared.cloud)
+                            .with_machines(shard.observed_machines());
+                        let pairs = configurator.enumerate();
+                        if !pairs.is_empty() {
+                            let batches: Vec<QueryBatch> = valid
+                                .iter()
+                                .map(|&i| {
+                                    QueryBatch::from_candidates(
+                                        &shared.cloud,
+                                        &pairs,
+                                        &group[i].1.spec.job_features(),
+                                    )
+                                })
+                                .collect();
+                            let combined = QueryBatch::concat(&batches);
+                            if let Ok(runtimes) =
+                                engine.predict_batch(&cached.model, &shared.cloud, &combined)
+                            {
+                                for (slot, &i) in valid.iter().enumerate() {
+                                    let chunk =
+                                        &runtimes[slot * pairs.len()..(slot + 1) * pairs.len()];
+                                    predecided[i] = configurator.choose(&group[i].1, &pairs, chunk);
+                                }
+                                scored_model = Some(Arc::as_ptr(cached) as usize);
+                                local.coalesced_write_batches += 1;
+                            }
+                        }
+                    }
+                }
+                for &i in &valid {
+                    let pre = match (predecided[i].take(), scored_model) {
+                        // honour the pre-scored decision only while the
+                        // model it was scored against is still cached
+                        (Some(choice), Some(ptr))
+                            if shard.cached_model().map(|m| Arc::as_ptr(m) as usize)
+                                == Some(ptr) =>
+                        {
+                            Some(choice)
+                        }
+                        _ => None,
+                    };
+                    let (org, request, _) = &group[i];
+                    let outcome = shard.submit_predecided(
+                        engine,
+                        &shared.cloud,
+                        &shared.policy,
+                        &mut local,
+                        org,
+                        request,
+                        pre,
+                    );
+                    if outcome.is_ok() {
+                        shared.publish(&shard);
+                    }
+                    results[i] = Some(outcome);
+                }
+            }
+        }
+    }
+    // Fold after the shard lock drops, so the global metrics mutex
+    // never nests inside a busy shard.
+    shared.metrics.lock().unwrap().fold(&local);
+    for ((_, _, reply), result) in group.into_iter().zip(results) {
+        let result = result.expect("every slot filled");
+        let _ = reply.send(result.map(Response::Submitted));
+    }
+}
+
+/// Serve one non-`Recommend`, non-`Submit` protocol request. Writes take
+/// their shard's mutex and republish the snapshot before releasing it;
+/// the remaining reads (`Metrics`, `SnapshotInfo`) touch no shard lock
+/// at all.
 fn serve_request(
     shared: &Shared,
     engine: &mut dyn ModelTrainer,
     request: api::Request,
 ) -> Result<Response, ApiError> {
     match request {
-        api::Request::Submit { org, request } => {
-            request.validate()?;
-            let kind = request.kind();
-            let shard_mutex = shard_for(shared, kind)?;
-            let mut local = Metrics::default();
-            let outcome = {
-                let mut shard = shard_mutex.lock().unwrap();
-                let outcome = shard.submit(
-                    engine,
-                    &shared.cloud,
-                    &shared.policy,
-                    &mut local,
-                    &org,
-                    &request,
-                );
-                if outcome.is_ok() {
-                    shared.publish(&shard);
-                }
-                outcome
-            };
-            // Fold after the shard lock drops, so the global metrics
-            // mutex never nests inside a busy shard.
-            shared.metrics.lock().unwrap().fold(&local);
-            outcome.map(Response::Submitted)
-        }
         api::Request::Contribute { record } => {
             api::validate_machines(&shared.cloud, std::slice::from_ref(&record))?;
             let kind = record.job;
@@ -826,6 +960,9 @@ fn serve_request(
         }
         api::Request::Recommend { .. } => {
             unreachable!("Recommend is routed through serve_recommend_group")
+        }
+        api::Request::Submit { .. } => {
+            unreachable!("Submit is routed through serve_submit_group")
         }
     }
 }

@@ -44,11 +44,12 @@ use crate::cloud::Cloud;
 use crate::configurator::{ClusterChoice, Configurator, JobRequest};
 use crate::coordinator::{JobOutcome, Metrics, Organization};
 use crate::models::oracle::SimOracle;
-use crate::models::selection::{select_and_train, SelectionReport};
+use crate::models::selection::{select_and_train, select_and_train_cached, SelectionReport};
 use crate::models::{EngineBound, ModelKind, ModelTrainer, QueryBatch, TrainedModel};
 use crate::repo::sampling::sampled_repo;
 use crate::repo::{
-    LoggedOp, MergeOutcome, OrgWatermark, RuntimeDataRepo, RuntimeRecord, SyncOp, SyncOutcome,
+    FeatureMatrixCache, Featurizer, LoggedOp, MergeOutcome, OrgWatermark, RuntimeDataRepo,
+    RuntimeRecord, SyncOp, SyncOutcome,
 };
 use crate::store::{JobStore, StoreOp};
 use crate::util::rng::Pcg32;
@@ -247,6 +248,9 @@ pub struct JobShard {
     rng: Pcg32,
     /// Durable write-through log; `None` for in-memory deployments.
     store: Option<JobStore>,
+    /// Incremental feature-matrix mirror of `repo`: retrains replay the
+    /// repo's delta journal instead of refeaturizing the corpus.
+    feat_cache: FeatureMatrixCache,
 }
 
 impl JobShard {
@@ -258,6 +262,7 @@ impl JobShard {
             model: None,
             rng: Pcg32::new(seed),
             store: None,
+            feat_cache: FeatureMatrixCache::new(),
         }
     }
 
@@ -274,6 +279,7 @@ impl JobShard {
             model: None,
             rng: Pcg32::new(seed),
             store: Some(store),
+            feat_cache: FeatureMatrixCache::new(),
         }
     }
 
@@ -334,6 +340,14 @@ impl JobShard {
     /// Latest selection report, if a model is cached.
     pub fn selection_report(&self) -> Option<&SelectionReport> {
         self.model.as_ref().map(|m| &m.report)
+    }
+
+    /// The cached model (shared `Arc`), if the write path has trained
+    /// one. Write-side coalescing captures it to pre-score a submit
+    /// group and re-checks pointer identity before honouring a
+    /// pre-decided choice.
+    pub(crate) fn cached_model(&self) -> Option<&Arc<CachedModel>> {
+        self.model.as_ref()
     }
 
     /// Machine types observed in the shared data, sorted — served from
@@ -491,22 +505,34 @@ impl JobShard {
             Some(m) => gen.saturating_sub(m.trained_at_gen) >= policy.retrain_every,
         };
         if stale {
+            let started = std::time::Instant::now();
             // cap training set at the backend's kNN capacity via
             // coverage sampling (§III-C)
             let cap = engine.knn_capacity();
-            let train_repo = if self.repo.len() > cap {
-                sampled_repo(&self.repo, cloud, cap)
+            let (model, report) = if self.repo.len() > cap {
+                // the feature cache mirrors the full repo, not the
+                // coverage sample — sampled retrains run from scratch
+                let train_repo = sampled_repo(&self.repo, cloud, cap);
+                select_and_train(engine, cloud, &train_repo, policy.cv_folds, gen)?
             } else {
-                self.repo.clone()
+                let reused = self.feat_cache.refresh(&Featurizer::new(cloud), &self.repo);
+                metrics.featurized_rows_reused += reused as u64;
+                select_and_train_cached(
+                    engine,
+                    cloud,
+                    &self.repo,
+                    policy.cv_folds,
+                    gen,
+                    Some(&mut self.feat_cache),
+                )?
             };
-            let (model, report) =
-                select_and_train(engine, cloud, &train_repo, policy.cv_folds, gen)?;
             self.model = Some(Arc::new(CachedModel {
                 trained_at_gen: gen,
                 model,
                 report,
             }));
             metrics.retrains += 1;
+            metrics.retrain_nanos_total += started.elapsed().as_nanos() as u64;
         }
         Ok(self.model.as_ref().map(|m| m.model.kind))
     }
@@ -561,12 +587,45 @@ impl JobShard {
         org: &Organization,
         request: &JobRequest,
     ) -> Result<JobOutcome, ApiError> {
+        self.submit_predecided(engine, cloud, policy, metrics, org, request, None)
+    }
+
+    /// [`submit`](Self::submit) with an optional pre-decided
+    /// configuration. Write-side coalescing pre-scores a same-kind
+    /// group of submits against one snapshot of the cached model as a
+    /// single [`QueryBatch`] predict; each group member then runs its
+    /// serialized contribute step here with the decision already in
+    /// hand. A pre-decided choice is only honoured while a model is
+    /// cached — if the shard went cold it is discarded and the regular
+    /// fallback path runs.
+    #[allow(clippy::too_many_arguments)]
+    pub(crate) fn submit_predecided(
+        &mut self,
+        engine: &mut dyn ModelTrainer,
+        cloud: &Cloud,
+        policy: &ShardPolicy,
+        metrics: &mut Metrics,
+        org: &Organization,
+        request: &JobRequest,
+        predecided: Option<ClusterChoice>,
+    ) -> Result<JobOutcome, ApiError> {
         debug_assert_eq!(request.kind(), self.job, "request routed to wrong shard");
 
         // 1) decide a configuration — from the write-maintained cached
         //    model, exactly as a read-only `Recommend` would
-        let (machine, scaleout, predicted, choice, model_used) = match &self.model {
-            Some(cached) => {
+        let (machine, scaleout, predicted, choice, model_used) = match (&self.model, predecided) {
+            (Some(cached), Some(choice)) => {
+                // decision pre-scored by the coalesced group pass
+                metrics.cache_hits += 1;
+                (
+                    choice.machine_type.clone(),
+                    choice.node_count,
+                    choice.predicted_runtime_s,
+                    Some(choice),
+                    Some(cached.model.kind),
+                )
+            }
+            (Some(cached), None) => {
                 let choice = decide_with_model(
                     &mut *engine,
                     cloud,
@@ -584,7 +643,7 @@ impl JobShard {
                     Some(cached.model.kind),
                 )
             }
-            None => {
+            (None, _) => {
                 // cold start: conservative overprovisioning
                 let mut oracle = SimOracle::new(self.job, self.rng.next_u64());
                 let out = NaiveMax::default()

@@ -40,8 +40,10 @@
 //! discipline: writes take their shard's mutex, while reads are served
 //! lock-free from published immutable
 //! [`ModelSnapshot`](coordinator::shard::ModelSnapshot)s (with
-//! cross-request coalescing of same-kind `Recommend` batches and
-//! pipelined `submit_nowait` tickets).
+//! cross-request coalescing of same-kind `Recommend` *and* `Submit`
+//! batches and pipelined `submit_nowait` tickets — a drained write
+//! group is pre-scored as one predict batch before its serialized
+//! contribute steps, with identical decisions to sequential serving).
 //!
 //! ## Persistence and federation: one operation log
 //!
@@ -77,6 +79,24 @@
 //!   Legacy v2 peers are served through the
 //!   `WatermarksV2`/`SyncPullV2`/`SyncPushV2` compatibility
 //!   translation (org-granular, O(org corpus) per changed org).
+//!
+//! ## Incremental training: retrain cost scales with the delta
+//!
+//! The same "what changed" discipline drives training cost. The
+//! repository keeps a bounded **delta journal** (slot-level
+//! `Set`/`Reordered` events with a monotone `delta_seq`), and each
+//! serving shard pairs its repo with a
+//! [`FeatureMatrixCache`](repo::FeatureMatrixCache): the raw featurized
+//! rows and log-targets, maintained through every mutation choke point
+//! (contribute, merge, sync replay, canonical reorder). A steady-state
+//! retrain therefore replays O(changed records) instead of
+//! re-featurizing the whole corpus — and the standardized matrices the
+//! cache hands to [`models::ModelTrainer::train_cached`] are **bitwise
+//! identical** to the from-scratch path (property-tested across random
+//! contribute/merge/sync/reorder sequences), so cached and uncached
+//! retrains produce interchangeable models. When the journal is
+//! truncated or the cache has never been primed, it silently rebuilds
+//! from scratch; correctness never depends on cache freshness.
 //!
 //! ## Layer map
 //!
@@ -140,8 +160,8 @@ pub mod prelude {
         TrainedModel,
     };
     pub use crate::repo::{
-        LoggedOp, MergeConflict, MergeOutcome, OrgWatermark, OrgWatermarkV2, RuntimeDataRepo,
-        RuntimeRecord, SyncOp, SyncOutcome,
+        FeatureMatrixCache, LoggedOp, MergeConflict, MergeOutcome, OrgWatermark, OrgWatermarkV2,
+        RuntimeDataRepo, RuntimeRecord, SyncOp, SyncOutcome,
     };
     pub use crate::sim::SimulationResult;
     pub use crate::store::{JobStore, StoreOp, SyncDriver, SyncStats};

@@ -9,7 +9,7 @@
 //! c3o contribute --job J [job args] --machine M --scaleout N --runtime-s T
 //!                [--org NAME] [--data DIR] [--json]
 //! c3o e2e        [--jobs N] [--seed N]         collaborative end-to-end demo
-//! c3o serve      [--workers N] [--clients N] [--jobs N] [--seed N]
+//! c3o serve      [--workers N] [--clients N] [--jobs N] [--seed N] [--json]
 //!                                              sharded multi-org service demo
 //! c3o store      --dir DIR [--mode seed|verify|stat] [--seed N]
 //!                                              durable segment-store exercise
@@ -110,8 +110,10 @@ USAGE:
                                               record an externally-observed run
                                               into DIR/<job>.csv (default data/)
   c3o e2e        [--jobs N] [--seed N]        collaborative end-to-end demo
-  c3o serve      [--workers N] [--clients N] [--jobs N] [--seed N]
-                                              sharded multi-org service demo
+  c3o serve      [--workers N] [--clients N] [--jobs N] [--seed N] [--json]
+                                              sharded multi-org service demo;
+                                              --json emits every metrics counter
+                                              (retrain nanos, rows reused, ...)
   c3o store      --dir DIR [--mode seed|verify|stat] [--seed N]
                                               durable segment store: seed it from
                                               the corpus, verify recovery, or stat
@@ -546,14 +548,30 @@ fn cmd_serve(cloud: &Cloud, args: &Args, seed: u64) -> Result<(), String> {
     }
 
     let m = service.metrics().map_err(api_err)?;
-    println!("jobs served:        {}", m.submissions);
-    println!("wall clock:         {wall:.2} s");
-    println!("throughput:         {:.1} submissions/s", jobs as f64 / wall);
-    println!("model retrains:     {}", m.retrains);
-    println!("model cache hits:   {}", m.cache_hits);
-    println!("target hit rate:    {:.0}%", 100.0 * m.target_hit_rate());
-    println!("mean pred. error:   {:.1}%", m.mean_prediction_error_pct());
-    println!("total cost:         ${:.2}", m.total_cost_usd);
+    if args.switch("json") {
+        use c3o::util::json::Json;
+        let doc = Json::obj(vec![
+            ("wall_s", Json::Num(wall)),
+            ("throughput_jobs_per_s", Json::Num(jobs as f64 / wall)),
+            ("metrics", m.to_json()),
+        ]);
+        println!("{}", doc.pretty());
+    } else {
+        println!("jobs served:        {}", m.submissions);
+        println!("wall clock:         {wall:.2} s");
+        println!("throughput:         {:.1} submissions/s", jobs as f64 / wall);
+        println!("model retrains:     {}", m.retrains);
+        println!(
+            "retrain wall time:  {:.2} s",
+            m.retrain_nanos_total as f64 / 1e9
+        );
+        println!("feat. rows reused:  {}", m.featurized_rows_reused);
+        println!("model cache hits:   {}", m.cache_hits);
+        println!("coalesced writes:   {} batches", m.coalesced_write_batches);
+        println!("target hit rate:    {:.0}%", 100.0 * m.target_hit_rate());
+        println!("mean pred. error:   {:.1}%", m.mean_prediction_error_pct());
+        println!("total cost:         ${:.2}", m.total_cost_usd);
+    }
     service.shutdown();
     Ok(())
 }

@@ -20,13 +20,32 @@
 //! re-implementations used for differential testing and as a fallback,
 //! and [`selection`] implements the paper's dynamic cross-validation
 //! model choice (§V-C).
+//!
+//! ## Training cost: featurize once, retrain on deltas
+//!
+//! Training is dominated by assembling its inputs, not by the model
+//! math: featurizing the corpus, standardizing columns, and (for the
+//! kNN family) padding rows to the fixed kernel layout. Every trainer
+//! therefore exposes two entry points: [`ModelTrainer::train`]
+//! featurizes from scratch, while [`ModelTrainer::train_cached`]
+//! accepts an incrementally maintained
+//! [`FeatureMatrixCache`](crate::repo::FeatureMatrixCache) whose raw
+//! rows were kept up to date by the repository's delta journal — so a
+//! steady-state retrain re-featurizes only the records that changed
+//! since the previous fit, and skips re-padding kNN rows entirely when
+//! only targets changed. The cache feeds byte-identical matrices
+//! through the same fit code, so both entry points produce bitwise
+//! identical models; cross-validated selection
+//! ([`selection::select_and_train_cached`]) trains its per-fold
+//! sub-repos from scratch and hands the cache only to the winning
+//! full-corpus fit.
 
 pub mod native;
 pub mod oracle;
 pub mod selection;
 
 use crate::cloud::Cloud;
-use crate::repo::featurize::{FeatureSpace, Featurizer};
+use crate::repo::featurize::{FeatureMatrixCache, FeatureSpace, Featurizer};
 use crate::repo::RuntimeDataRepo;
 use crate::runtime::Runtime;
 use crate::util::matrix::MatF32;
@@ -213,6 +232,22 @@ pub trait ModelTrainer {
         cloud: &Cloud,
         repo: &RuntimeDataRepo,
         kind: ModelKind,
+    ) -> Result<TrainedModel> {
+        self.train_cached(cloud, repo, kind, None)
+    }
+
+    /// Train like [`ModelTrainer::train`], optionally consuming an
+    /// incremental [`FeatureMatrixCache`] already refreshed to `repo`'s
+    /// journal position. The cached path skips per-record
+    /// refeaturization (and re-padding of unchanged KNN rows) while
+    /// producing bitwise-identical models; passing `None` is the
+    /// from-scratch path.
+    fn train_cached(
+        &mut self,
+        cloud: &Cloud,
+        repo: &RuntimeDataRepo,
+        kind: ModelKind,
+        feat: Option<&mut FeatureMatrixCache>,
     ) -> Result<TrainedModel>;
 
     /// Predict runtimes (seconds) for a batch of queries.
@@ -288,6 +323,7 @@ pub(crate) fn fit_knn_state(
     repo: &RuntimeDataRepo,
     rows_cap: usize,
     dim_cap: usize,
+    feat: Option<&mut FeatureMatrixCache>,
 ) -> Result<ModelState> {
     if repo.is_empty() {
         bail!("cannot train on an empty repository");
@@ -299,8 +335,22 @@ pub(crate) fn fit_knn_state(
             rows_cap
         );
     }
-    let featurizer = Featurizer::new(cloud);
-    let (space, x, y) = featurizer.fit(repo);
+    // With a refreshed feature cache the fit is a standardization pass
+    // over pre-built matrices, and the padded KNN block is memoized —
+    // bitwise-identical to the from-scratch path either way, because
+    // both run the same featurize helpers over the same raw bits.
+    let mut cached_pad: Option<MatF32> = None;
+    let (space, x, y) = match feat {
+        Some(cache) => {
+            let (space, x, y) = cache.fit(repo);
+            if space.dim() > dim_cap {
+                bail!("feature dim {} exceeds backend feature dim {dim_cap}", space.dim());
+            }
+            cached_pad = Some(cache.padded_x(rows_cap, dim_cap).clone());
+            (space, x, y)
+        }
+        None => Featurizer::new(cloud).fit(repo),
+    };
     let d = space.dim();
     if d > dim_cap {
         bail!("feature dim {d} exceeds backend feature dim {dim_cap}");
@@ -320,12 +370,21 @@ pub(crate) fn fit_knn_state(
         *w = w.max(0.05);
     }
 
-    // pad rows to rows_cap and cols to dim_cap
-    let mut train_x = MatF32::zeros(rows_cap, dim_cap);
+    // pad rows to rows_cap and cols to dim_cap (the x block comes
+    // pre-padded from the cache when one was supplied)
+    let train_x = match cached_pad {
+        Some(px) => px,
+        None => {
+            let mut train_x = MatF32::zeros(rows_cap, dim_cap);
+            for r in 0..x.rows {
+                train_x.row_mut(r)[..d].copy_from_slice(x.row(r));
+            }
+            train_x
+        }
+    };
     let mut train_y = vec![0.0f32; rows_cap];
     let mut valid = vec![0.0f32; rows_cap];
     for r in 0..x.rows {
-        train_x.row_mut(r)[..d].copy_from_slice(x.row(r));
         train_y[r] = y[r];
         valid[r] = 1.0;
     }
@@ -417,9 +476,9 @@ impl Predictor {
         kind: ModelKind,
     ) -> Result<TrainedModel> {
         match kind {
-            ModelKind::Pessimistic => self.train_pessimistic(cloud, repo),
+            ModelKind::Pessimistic => self.train_pessimistic(cloud, repo, None),
             ModelKind::Optimistic => {
-                self.train_optimistic(cloud, repo, &OptTrainConfig::default())
+                self.train_optimistic(cloud, repo, &OptTrainConfig::default(), None)
             }
         }
     }
@@ -435,9 +494,10 @@ impl Predictor {
         &mut self,
         cloud: &Cloud,
         repo: &RuntimeDataRepo,
+        feat: Option<&mut FeatureMatrixCache>,
     ) -> Result<TrainedModel> {
         let man = self.runtime.manifest().clone();
-        let state = fit_knn_state(cloud, repo, man.knn_train_rows, man.feature_dim)?;
+        let state = fit_knn_state(cloud, repo, man.knn_train_rows, man.feature_dim, feat)?;
         Ok(TrainedModel {
             kind: ModelKind::Pessimistic,
             id: next_model_id(),
@@ -454,17 +514,37 @@ impl Predictor {
         cloud: &Cloud,
         repo: &RuntimeDataRepo,
         cfg: &OptTrainConfig,
+        feat: Option<&mut FeatureMatrixCache>,
     ) -> Result<TrainedModel> {
         let man = self.runtime.manifest().clone();
         if repo.is_empty() {
             bail!("cannot train on an empty repository");
         }
-        let featurizer = Featurizer::new(cloud);
-        let raw: Vec<Vec<f32>> = repo
-            .records()
-            .iter()
-            .map(|r| featurizer.raw_row(&r.machine, r.scaleout, &r.job_features))
-            .collect();
+        // The cache's raw rows and log targets are bitwise what the
+        // from-scratch loops below would produce, so every downstream
+        // float lands on identical bits.
+        let owned: Option<(Vec<Vec<f32>>, Vec<f32>)>;
+        let (raw, log_y): (&[Vec<f32>], &[f32]) = match feat {
+            Some(cache) => {
+                assert!(cache.is_fresh(repo), "feature cache is stale: refresh() before train");
+                (cache.raw_rows(), cache.log_y())
+            }
+            None => {
+                let featurizer = Featurizer::new(cloud);
+                owned = Some((
+                    repo.records()
+                        .iter()
+                        .map(|r| featurizer.raw_row(&r.machine, r.scaleout, &r.job_features))
+                        .collect(),
+                    repo.records()
+                        .iter()
+                        .map(|r| r.runtime_s.ln() as f32)
+                        .collect(),
+                ));
+                let (raw, log_y) = owned.as_ref().expect("just set");
+                (raw, log_y)
+            }
+        };
         let d = raw[0].len();
         if d > man.feature_dim {
             bail!("feature dim {d} exceeds artifact feature dim {}", man.feature_dim);
@@ -474,7 +554,7 @@ impl Predictor {
         // min-max scaling to [0, 1] (the basis domain)
         let mut mins = vec![f32::INFINITY; man.feature_dim];
         let mut maxs = vec![f32::NEG_INFINITY; man.feature_dim];
-        for row in &raw {
+        for row in raw {
             for c in 0..d {
                 mins[c] = mins[c].min(row[c]);
                 maxs[c] = maxs[c].max(row[c]);
@@ -490,7 +570,6 @@ impl Predictor {
         }
 
         // standardized log target
-        let log_y: Vec<f32> = repo.records().iter().map(|r| r.runtime_s.ln() as f32).collect();
         let y_mean = log_y.iter().sum::<f32>() / n as f32;
         let y_sd = (log_y.iter().map(|v| (v - y_mean).powi(2)).sum::<f32>() / n as f32)
             .sqrt()
@@ -861,13 +940,19 @@ impl ModelTrainer for Predictor {
         self.runtime.manifest().knn_train_rows
     }
 
-    fn train(
+    fn train_cached(
         &mut self,
         cloud: &Cloud,
         repo: &RuntimeDataRepo,
         kind: ModelKind,
+        feat: Option<&mut FeatureMatrixCache>,
     ) -> Result<TrainedModel> {
-        Predictor::train(self, cloud, repo, kind)
+        match kind {
+            ModelKind::Pessimistic => self.train_pessimistic(cloud, repo, feat),
+            ModelKind::Optimistic => {
+                self.train_optimistic(cloud, repo, &OptTrainConfig::default(), feat)
+            }
+        }
     }
 
     fn predict(
@@ -943,15 +1028,16 @@ impl ModelTrainer for Engine {
         }
     }
 
-    fn train(
+    fn train_cached(
         &mut self,
         cloud: &Cloud,
         repo: &RuntimeDataRepo,
         kind: ModelKind,
+        feat: Option<&mut FeatureMatrixCache>,
     ) -> Result<TrainedModel> {
         match self {
-            Engine::Pjrt(p) => ModelTrainer::train(p, cloud, repo, kind),
-            Engine::Native(n) => ModelTrainer::train(n, cloud, repo, kind),
+            Engine::Pjrt(p) => ModelTrainer::train_cached(p, cloud, repo, kind, feat),
+            Engine::Native(n) => ModelTrainer::train_cached(n, cloud, repo, kind, feat),
         }
     }
 

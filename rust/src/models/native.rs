@@ -19,7 +19,7 @@ use crate::models::{
     fit_knn_state, next_model_id, ConfigQuery, ModelKind, ModelState, ModelTrainer,
     OptTrainConfig, QueryBatch, RuntimeModel, TrainedModel,
 };
-use crate::repo::featurize::{FeatureSpace, Featurizer};
+use crate::repo::featurize::{FeatureMatrixCache, FeatureSpace, Featurizer};
 use crate::repo::RuntimeDataRepo;
 use crate::util::matrix::MatF32;
 use crate::util::rng::Pcg32;
@@ -210,8 +210,13 @@ impl Default for NativeEngine {
 impl NativeEngine {
     /// Fit the pessimistic model (standardize + correlation weights),
     /// padded to the engine's fixed shapes.
-    pub fn train_pessimistic(&self, cloud: &Cloud, repo: &RuntimeDataRepo) -> Result<TrainedModel> {
-        let state = fit_knn_state(cloud, repo, self.knn_rows, self.feature_dim)?;
+    pub fn train_pessimistic(
+        &self,
+        cloud: &Cloud,
+        repo: &RuntimeDataRepo,
+        feat: Option<&mut FeatureMatrixCache>,
+    ) -> Result<TrainedModel> {
+        let state = fit_knn_state(cloud, repo, self.knn_rows, self.feature_dim, feat)?;
         Ok(TrainedModel {
             kind: ModelKind::Pessimistic,
             id: next_model_id(),
@@ -226,17 +231,37 @@ impl NativeEngine {
         cloud: &Cloud,
         repo: &RuntimeDataRepo,
         cfg: &OptTrainConfig,
+        feat: Option<&mut FeatureMatrixCache>,
     ) -> Result<TrainedModel> {
         if repo.is_empty() {
             bail!("cannot train on an empty repository");
         }
         let fd = self.feature_dim;
-        let featurizer = Featurizer::new(cloud);
-        let raw: Vec<Vec<f32>> = repo
-            .records()
-            .iter()
-            .map(|r| featurizer.raw_row(&r.machine, r.scaleout, &r.job_features))
-            .collect();
+        // Cached raw rows/targets are bitwise what the from-scratch
+        // loops would produce (same helper over the same records), so
+        // the Adam trajectory is bit-for-bit unchanged.
+        let owned: Option<(Vec<Vec<f32>>, Vec<f32>)>;
+        let (raw, log_y): (&[Vec<f32>], &[f32]) = match feat {
+            Some(cache) => {
+                assert!(cache.is_fresh(repo), "feature cache is stale: refresh() before train");
+                (cache.raw_rows(), cache.log_y())
+            }
+            None => {
+                let featurizer = Featurizer::new(cloud);
+                owned = Some((
+                    repo.records()
+                        .iter()
+                        .map(|r| featurizer.raw_row(&r.machine, r.scaleout, &r.job_features))
+                        .collect(),
+                    repo.records()
+                        .iter()
+                        .map(|r| r.runtime_s.ln() as f32)
+                        .collect(),
+                ));
+                let (raw, log_y) = owned.as_ref().expect("just set");
+                (raw, log_y)
+            }
+        };
         let d = raw[0].len();
         if d > fd {
             bail!("feature dim {d} exceeds native feature dim {fd}");
@@ -246,7 +271,7 @@ impl NativeEngine {
         // min-max scaling to [0, 1] (the basis domain)
         let mut mins = vec![f32::INFINITY; fd];
         let mut maxs = vec![f32::NEG_INFINITY; fd];
-        for row in &raw {
+        for row in raw {
             for c in 0..d {
                 mins[c] = mins[c].min(row[c]);
                 maxs[c] = maxs[c].max(row[c]);
@@ -262,7 +287,6 @@ impl NativeEngine {
         }
 
         // standardized log target
-        let log_y: Vec<f32> = repo.records().iter().map(|r| r.runtime_s.ln() as f32).collect();
         let y_mean = log_y.iter().sum::<f32>() / n as f32;
         let y_sd = (log_y.iter().map(|v| (v - y_mean).powi(2)).sum::<f32>() / n as f32)
             .sqrt()
@@ -380,17 +404,18 @@ impl ModelTrainer for NativeEngine {
         self.knn_rows
     }
 
-    fn train(
+    fn train_cached(
         &mut self,
         cloud: &Cloud,
         repo: &RuntimeDataRepo,
         kind: ModelKind,
+        feat: Option<&mut FeatureMatrixCache>,
     ) -> Result<TrainedModel> {
         match kind {
-            ModelKind::Pessimistic => self.train_pessimistic(cloud, repo),
+            ModelKind::Pessimistic => self.train_pessimistic(cloud, repo, feat),
             ModelKind::Optimistic => {
                 let cfg = self.opt_cfg.clone();
-                self.train_optimistic(cloud, repo, &cfg)
+                self.train_optimistic(cloud, repo, &cfg, feat)
             }
         }
     }
@@ -748,6 +773,6 @@ mod tests {
             ..NativeEngine::default()
         };
         let repo = toy_repo(); // 18 records
-        assert!(engine.train_pessimistic(&cloud, &repo).is_err());
+        assert!(engine.train_pessimistic(&cloud, &repo, None).is_err());
     }
 }

@@ -8,6 +8,7 @@
 
 use crate::cloud::Cloud;
 use crate::models::{ConfigQuery, ModelKind, ModelTrainer, TrainedModel};
+use crate::repo::featurize::FeatureMatrixCache;
 use crate::repo::RuntimeDataRepo;
 use crate::util::rng::Pcg32;
 use crate::util::stats;
@@ -98,6 +99,23 @@ pub fn select_and_train(
     folds: usize,
     seed: u64,
 ) -> Result<(TrainedModel, SelectionReport)> {
+    select_and_train_cached(predictor, cloud, repo, folds, seed, None)
+}
+
+/// [`select_and_train`] with an optional incremental
+/// [`FeatureMatrixCache`] consumed by the winner's full-repository
+/// train. The CV folds train on fresh per-fold sub-repos the cache
+/// cannot mirror, so they always run from scratch; only the final —
+/// and by far largest — fit takes the cached path. Bitwise-identical
+/// models either way.
+pub fn select_and_train_cached(
+    predictor: &mut dyn ModelTrainer,
+    cloud: &Cloud,
+    repo: &RuntimeDataRepo,
+    folds: usize,
+    seed: u64,
+    feat: Option<&mut FeatureMatrixCache>,
+) -> Result<(TrainedModel, SelectionReport)> {
     let mut cv = Vec::new();
     for kind in ModelKind::all() {
         let mape = cv_mape(predictor, cloud, repo, kind, folds, seed)?;
@@ -108,7 +126,7 @@ pub fn select_and_train(
         .min_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
         .map(|(k, _)| *k)
         .unwrap();
-    let model = predictor.train(cloud, repo, chosen)?;
+    let model = predictor.train_cached(cloud, repo, chosen, feat)?;
     Ok((
         model,
         SelectionReport {

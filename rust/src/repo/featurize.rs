@@ -11,10 +11,21 @@
 //!
 //! All features and the target are standardized; runtimes are modeled in
 //! log space (multiplicative errors, matching MAPE evaluation).
+//!
+//! Featurization is the per-retrain cost that scales with the corpus:
+//! every raw row resolves a machine descriptor against the catalog and
+//! converts features, per record, per fit. [`FeatureMatrixCache`]
+//! removes that cost from the steady state — it mirrors the raw rows
+//! and targets incrementally by replaying the repo's bounded
+//! [`RepoDelta`](crate::repo::RepoDelta) journal, so a fit after `k`
+//! new contributions refeaturizes `k` rows, not the whole corpus. The
+//! cached fit is **bitwise-identical** to [`Featurizer::fit`] because
+//! both run the same standardization helpers over the same raw bits.
 
 use crate::cloud::Cloud;
-use crate::repo::{RuntimeDataRepo, RuntimeRecord};
+use crate::repo::{RepoDelta, RuntimeDataRepo, RuntimeRecord};
 use crate::util::matrix::MatF32;
+use crate::workloads::JobKind;
 
 /// Fitted feature-space metadata: column names and z-scoring parameters,
 /// learned from a training repo and applied to queries.
@@ -62,6 +73,42 @@ pub const CLUSTER_FEATURES: [&str; 6] = [
     "m_net_mb_s",
 ];
 
+/// Standardize a raw feature matrix in place; returns the per-column
+/// `(mean, sd)`. Spans are clamped at `1e-6` (mirroring the `y_sd`
+/// clamp) so a near-constant column — one whose sd squeaks past the
+/// `col_stats` exact-constant guard but is still denormal-tiny —
+/// cannot blow standardized values up to inf and poison downstream
+/// reciprocal bases. The one shared x-standardization path: both
+/// [`Featurizer::fit`] and [`FeatureMatrixCache`] call it, which is
+/// what makes the cached fit bitwise-identical by construction.
+fn standardize_x(x: &mut MatF32) -> (Vec<f32>, Vec<f32>) {
+    let (mean, mut sd) = x.col_stats();
+    for s in &mut sd {
+        *s = s.max(1e-6);
+    }
+    x.standardize(&mean, &sd);
+    (mean, sd)
+}
+
+/// Standardize log-runtime targets; returns `(y_mean, y_sd, y)`. The
+/// shared y-standardization path of [`Featurizer::fit`] and
+/// [`FeatureMatrixCache::fit`].
+fn standardize_y(log_y: &[f32]) -> (f32, f32, Vec<f32>) {
+    let y_mean = log_y.iter().sum::<f32>() / log_y.len() as f32;
+    let y_var = log_y.iter().map(|y| (y - y_mean).powi(2)).sum::<f32>() / log_y.len() as f32;
+    let y_sd = y_var.sqrt().max(1e-6);
+    let y = log_y.iter().map(|v| (v - y_mean) / y_sd).collect();
+    (y_mean, y_sd, y)
+}
+
+/// Feature-column names for a job: its own features, then the cluster
+/// descriptor columns.
+fn feature_names(job: JobKind) -> Vec<String> {
+    let mut names: Vec<String> = job.feature_names().iter().map(|s| s.to_string()).collect();
+    names.extend(CLUSTER_FEATURES.iter().map(|s| s.to_string()));
+    names
+}
+
 impl<'a> Featurizer<'a> {
     pub fn new(cloud: &'a Cloud) -> Self {
         Featurizer { cloud }
@@ -101,30 +148,18 @@ impl<'a> Featurizer<'a> {
             .map(|r| self.raw_row(&r.machine, r.scaleout, &r.job_features))
             .collect();
         let mut x = MatF32::from_rows(&rows);
-        let (mean, sd) = x.col_stats();
-        x.standardize(&mean, &sd);
+        let (mean, sd) = standardize_x(&mut x);
 
         let log_y: Vec<f32> = repo
             .records()
             .iter()
             .map(|r| r.runtime_s.ln() as f32)
             .collect();
-        let y_mean = log_y.iter().sum::<f32>() / log_y.len() as f32;
-        let y_var = log_y.iter().map(|y| (y - y_mean).powi(2)).sum::<f32>() / log_y.len() as f32;
-        let y_sd = y_var.sqrt().max(1e-6);
-        let y: Vec<f32> = log_y.iter().map(|v| (v - y_mean) / y_sd).collect();
-
-        let mut names: Vec<String> = repo
-            .job()
-            .feature_names()
-            .iter()
-            .map(|s| s.to_string())
-            .collect();
-        names.extend(CLUSTER_FEATURES.iter().map(|s| s.to_string()));
+        let (y_mean, y_sd, y) = standardize_y(&log_y);
 
         (
             FeatureSpace {
-                names,
+                names: feature_names(repo.job()),
                 mean,
                 sd,
                 y_mean,
@@ -158,6 +193,261 @@ impl<'a> Featurizer<'a> {
             .map(|r| self.transform(space, &r.machine, r.scaleout, &r.job_features))
             .collect();
         MatF32::from_rows(&rows)
+    }
+}
+
+/// Bitwise row equality. Plain `f32` equality is too weak here:
+/// `-0.0 == 0.0` holds while the bits differ, and a bit-level change
+/// can shift downstream f32 accumulation order results.
+fn rows_bits_equal(a: &[f32], b: &[f32]) -> bool {
+    a.len() == b.len() && a.iter().zip(b).all(|(x, y)| x.to_bits() == y.to_bits())
+}
+
+/// Memoized zero-padded KNN feature block (see
+/// [`FeatureMatrixCache::padded_x`]).
+#[derive(Debug, Clone)]
+struct KnnPad {
+    rows_cap: usize,
+    dim_cap: usize,
+    raw_epoch: u64,
+    x: MatF32,
+}
+
+/// Incremental mirror of a repo's featurized training inputs.
+///
+/// The cache tracks the repo's delta journal
+/// ([`RuntimeDataRepo::deltas_since`]): [`FeatureMatrixCache::refresh`]
+/// replays only the slots that changed since the last refresh,
+/// re-featurizing the delta instead of the corpus, and recomputes the
+/// standardized matrix only when some raw row's *bits* actually moved
+/// (a replacement that changes only the runtime leaves the x side —
+/// and the memoized KNN padding — untouched). A cache that has fallen
+/// past the journal's retention window rebuilds from scratch, so it is
+/// never wrong, only occasionally cold.
+///
+/// [`FeatureMatrixCache::fit`] then returns exactly what
+/// [`Featurizer::fit`] would: the same helper code runs over the same
+/// raw bits, making the result bitwise-identical by construction (and
+/// property-tested in `tests/proptests.rs`).
+#[derive(Debug, Clone)]
+pub struct FeatureMatrixCache {
+    /// Journal position the mirrored rows reflect.
+    seq: u64,
+    /// False until the first rebuild; an unprimed cache always rebuilds.
+    primed: bool,
+    /// Raw featurized rows, slot-aligned with the repo's records.
+    raw: Vec<Vec<f32>>,
+    /// Log-runtime targets, slot-aligned.
+    log_y: Vec<f32>,
+    /// Bumped whenever raw row content changes (append, bit-level
+    /// replacement, reorder) — the staleness key of the standardized
+    /// state and the KNN padding. Target-only changes do not bump it.
+    raw_epoch: u64,
+    /// `raw_epoch` the standardized state below reflects.
+    std_epoch: u64,
+    x_std: MatF32,
+    mean: Vec<f32>,
+    sd: Vec<f32>,
+    knn_pad: Option<KnnPad>,
+}
+
+impl Default for FeatureMatrixCache {
+    fn default() -> Self {
+        FeatureMatrixCache {
+            seq: 0,
+            primed: false,
+            raw: Vec::new(),
+            log_y: Vec::new(),
+            raw_epoch: 0,
+            std_epoch: 0,
+            x_std: MatF32::zeros(0, 0),
+            mean: Vec::new(),
+            sd: Vec::new(),
+            knn_pad: None,
+        }
+    }
+}
+
+impl FeatureMatrixCache {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Bring the mirror up to date with `repo`, replaying the delta
+    /// journal where possible and rebuilding from scratch otherwise.
+    /// Returns how many already-featurized rows were *reused* (i.e. not
+    /// re-run through [`Featurizer::raw_row`]) — the
+    /// `featurized_rows_reused` metric.
+    pub fn refresh(&mut self, featurizer: &Featurizer, repo: &RuntimeDataRepo) -> usize {
+        let target = repo.delta_seq();
+        if !self.primed {
+            return self.rebuild(featurizer, repo);
+        }
+        let mut featurized = 0usize;
+        match repo.deltas_since(self.seq) {
+            None => return self.rebuild(featurizer, repo),
+            Some(deltas) => {
+                for d in deltas {
+                    match d {
+                        RepoDelta::Set { slot, record } => {
+                            let row = featurizer.raw_row(
+                                &record.machine,
+                                record.scaleout,
+                                &record.job_features,
+                            );
+                            featurized += 1;
+                            let ly = record.runtime_s.ln() as f32;
+                            if *slot == self.raw.len() {
+                                self.raw.push(row);
+                                self.log_y.push(ly);
+                                self.raw_epoch += 1;
+                            } else if *slot < self.raw.len() {
+                                if !rows_bits_equal(&self.raw[*slot], &row) {
+                                    self.raw[*slot] = row;
+                                    self.raw_epoch += 1;
+                                }
+                                self.log_y[*slot] = ly;
+                            } else {
+                                return self.rebuild(featurizer, repo);
+                            }
+                        }
+                        RepoDelta::Reordered { perm } => {
+                            if perm.len() != self.raw.len() {
+                                return self.rebuild(featurizer, repo);
+                            }
+                            let mut old: Vec<Option<Vec<f32>>> =
+                                self.raw.drain(..).map(Some).collect();
+                            let mut raw = Vec::with_capacity(perm.len());
+                            let mut log_y = Vec::with_capacity(perm.len());
+                            for &p in perm {
+                                raw.push(old[p as usize].take().expect("bijective permutation"));
+                                log_y.push(self.log_y[p as usize]);
+                            }
+                            self.raw = raw;
+                            self.log_y = log_y;
+                            self.raw_epoch += 1;
+                        }
+                    }
+                }
+            }
+        }
+        if self.raw.len() != repo.len() {
+            // the journal and the holdings disagree (e.g. the cache was
+            // pointed at a different repo) — never serve a skewed mirror
+            return self.rebuild(featurizer, repo);
+        }
+        self.seq = target;
+        if self.std_epoch != self.raw_epoch {
+            self.rebuild_std();
+        }
+        repo.len().saturating_sub(featurized)
+    }
+
+    /// Full rebuild: featurize every record. Returns 0 rows reused.
+    fn rebuild(&mut self, featurizer: &Featurizer, repo: &RuntimeDataRepo) -> usize {
+        self.raw = repo
+            .records()
+            .iter()
+            .map(|r| featurizer.raw_row(&r.machine, r.scaleout, &r.job_features))
+            .collect();
+        self.log_y = repo
+            .records()
+            .iter()
+            .map(|r| r.runtime_s.ln() as f32)
+            .collect();
+        self.raw_epoch += 1;
+        self.primed = true;
+        self.seq = repo.delta_seq();
+        self.rebuild_std();
+        0
+    }
+
+    /// Recompute the standardized matrix and column stats from the raw
+    /// mirror — the exact code path of [`Featurizer::fit`].
+    fn rebuild_std(&mut self) {
+        let mut x = MatF32::from_rows(&self.raw);
+        let (mean, sd) = standardize_x(&mut x);
+        self.x_std = x;
+        self.mean = mean;
+        self.sd = sd;
+        self.std_epoch = self.raw_epoch;
+    }
+
+    /// The cached equivalent of [`Featurizer::fit`]: bitwise-identical
+    /// output, O(records) float work (target standardization) instead
+    /// of O(records) featurization.
+    ///
+    /// # Panics
+    /// Panics on an empty repo, or when the cache was not
+    /// [`refresh`](FeatureMatrixCache::refresh)ed to the repo's current
+    /// journal position.
+    pub fn fit(&self, repo: &RuntimeDataRepo) -> (FeatureSpace, MatF32, Vec<f32>) {
+        assert!(!repo.is_empty(), "cannot featurize an empty repo");
+        assert!(self.is_fresh(repo), "feature cache is stale: refresh() before fit()");
+        debug_assert_eq!(self.std_epoch, self.raw_epoch);
+        let (y_mean, y_sd, y) = standardize_y(&self.log_y);
+        (
+            FeatureSpace {
+                names: feature_names(repo.job()),
+                mean: self.mean.clone(),
+                sd: self.sd.clone(),
+                y_mean,
+                y_sd,
+            },
+            self.x_std.clone(),
+            y,
+        )
+    }
+
+    /// Whether the mirror reflects `repo`'s current journal position
+    /// and holdings size.
+    pub fn is_fresh(&self, repo: &RuntimeDataRepo) -> bool {
+        self.primed && self.seq == repo.delta_seq() && self.raw.len() == repo.len()
+    }
+
+    /// Raw featurized rows, slot-aligned with the repo.
+    pub fn raw_rows(&self) -> &[Vec<f32>] {
+        &self.raw
+    }
+
+    /// Log-runtime targets, slot-aligned with the repo.
+    pub fn log_y(&self) -> &[f32] {
+        &self.log_y
+    }
+
+    /// The standardized rows zero-padded into a `rows_cap × dim_cap`
+    /// block — the KNN train matrix layout. Memoized on the raw epoch:
+    /// a refresh that changed only targets serves the previous padding
+    /// without copying a single row.
+    pub fn padded_x(&mut self, rows_cap: usize, dim_cap: usize) -> &MatF32 {
+        debug_assert_eq!(self.std_epoch, self.raw_epoch, "refresh() before padded_x()");
+        let fresh = matches!(
+            &self.knn_pad,
+            Some(p) if p.rows_cap == rows_cap && p.dim_cap == dim_cap && p.raw_epoch == self.raw_epoch
+        );
+        if !fresh {
+            let d = self.x_std.cols;
+            let mut x = MatF32::zeros(rows_cap, dim_cap);
+            for r in 0..self.x_std.rows {
+                x.row_mut(r)[..d].copy_from_slice(self.x_std.row(r));
+            }
+            self.knn_pad = Some(KnnPad {
+                rows_cap,
+                dim_cap,
+                raw_epoch: self.raw_epoch,
+                x,
+            });
+        }
+        &self.knn_pad.as_ref().expect("just ensured").x
+    }
+
+    /// Whether the memoized KNN padding for these caps is already
+    /// current (test/metrics hook).
+    pub fn knn_pad_is_warm(&self, rows_cap: usize, dim_cap: usize) -> bool {
+        matches!(
+            &self.knn_pad,
+            Some(p) if p.rows_cap == rows_cap && p.dim_cap == dim_cap && p.raw_epoch == self.raw_epoch
+        )
     }
 }
 
@@ -241,6 +531,133 @@ mod tests {
         for c in 0..x.cols {
             assert!((q[c] - x.at(0, c)).abs() < 1e-6);
         }
+    }
+
+    #[test]
+    fn near_constant_column_span_is_clamped() {
+        // sd small enough to slip past col_stats' exact-constant guard
+        // (1e-9) but tiny enough to explode z-scores without the clamp
+        let mut x = MatF32::from_rows(&[vec![0.0], vec![1e-7]]);
+        let (_, sd) = standardize_x(&mut x);
+        assert_eq!(sd[0], 1e-6);
+        assert!(x.data.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn constant_column_fit_stays_finite() {
+        // every record shares data_gb: a constant feature column must
+        // not produce NaN/inf anywhere in the standardized outputs
+        let recs: Vec<RuntimeRecord> = [("m5.xlarge", 4u32, 100.0), ("c5.xlarge", 8, 80.0), ("r5.xlarge", 2, 300.0)]
+            .iter()
+            .map(|&(machine, scaleout, runtime_s)| RuntimeRecord {
+                job: JobKind::Grep,
+                org: "a".into(),
+                machine: machine.into(),
+                scaleout,
+                job_features: vec![10.0, 0.2],
+                runtime_s,
+            })
+            .collect();
+        let repo = RuntimeDataRepo::from_records(JobKind::Grep, recs);
+        let cloud = Cloud::aws_like();
+        let (space, x, y) = Featurizer::new(&cloud).fit(&repo);
+        assert!(x.data.iter().all(|v| v.is_finite()));
+        assert!(y.iter().all(|v| v.is_finite()));
+        assert!(space.sd.iter().all(|s| *s >= 1e-6));
+    }
+
+    fn assert_fit_bits_equal(
+        a: &(FeatureSpace, MatF32, Vec<f32>),
+        b: &(FeatureSpace, MatF32, Vec<f32>),
+    ) {
+        assert_eq!(a.0.names, b.0.names);
+        let bits = |v: &[f32]| v.iter().map(|f| f.to_bits()).collect::<Vec<u32>>();
+        assert_eq!(bits(&a.0.mean), bits(&b.0.mean));
+        assert_eq!(bits(&a.0.sd), bits(&b.0.sd));
+        assert_eq!(a.0.y_mean.to_bits(), b.0.y_mean.to_bits());
+        assert_eq!(a.0.y_sd.to_bits(), b.0.y_sd.to_bits());
+        assert_eq!((a.1.rows, a.1.cols), (b.1.rows, b.1.cols));
+        assert_eq!(bits(&a.1.data), bits(&b.1.data));
+        assert_eq!(bits(&a.2), bits(&b.2));
+    }
+
+    #[test]
+    fn cache_fit_matches_from_scratch_across_mutations() {
+        let cloud = Cloud::aws_like();
+        let f = Featurizer::new(&cloud);
+        let mut repo = small_repo();
+        let mut cache = FeatureMatrixCache::new();
+        assert_eq!(cache.refresh(&f, &repo), 0, "cold cache rebuilds");
+        assert_fit_bits_equal(&cache.fit(&repo), &f.fit(&repo));
+
+        // append via contribute: only the new row is featurized
+        repo.contribute(RuntimeRecord {
+            job: JobKind::Grep,
+            org: "c".into(),
+            machine: "m5.2xlarge".into(),
+            scaleout: 6,
+            job_features: vec![12.0, 0.2],
+            runtime_s: 140.0,
+        })
+        .unwrap();
+        assert_eq!(cache.refresh(&f, &repo), 3, "three rows reused");
+        assert_fit_bits_equal(&cache.fit(&repo), &f.fit(&repo));
+
+        // replacement via merge (same config as record 0, lower runtime)
+        let winner = RuntimeRecord {
+            org: "z".into(),
+            runtime_s: 90.0,
+            ..repo.records()[0].clone()
+        };
+        let out = repo.merge_records(&[winner]).unwrap();
+        assert_eq!(out.replaced, 1);
+        cache.refresh(&f, &repo);
+        assert_fit_bits_equal(&cache.fit(&repo), &f.fit(&repo));
+
+        // canonical reorder replays as a permutation
+        repo.canonicalize();
+        assert_eq!(cache.refresh(&f, &repo), repo.len(), "reorder reuses all rows");
+        assert_fit_bits_equal(&cache.fit(&repo), &f.fit(&repo));
+    }
+
+    #[test]
+    fn knn_padding_survives_target_only_changes() {
+        let cloud = Cloud::aws_like();
+        let f = Featurizer::new(&cloud);
+        let mut repo = small_repo();
+        let mut cache = FeatureMatrixCache::new();
+        cache.refresh(&f, &repo);
+        let before = cache.padded_x(16, 12).clone();
+        assert!(cache.knn_pad_is_warm(16, 12));
+
+        // replace record 0's runtime only: identical raw feature bits
+        let winner = RuntimeRecord {
+            org: "z".into(),
+            runtime_s: 90.0,
+            ..repo.records()[0].clone()
+        };
+        assert_eq!(repo.merge_records(&[winner]).unwrap().replaced, 1);
+        cache.refresh(&f, &repo);
+        assert!(
+            cache.knn_pad_is_warm(16, 12),
+            "target-only change must not invalidate the padded block"
+        );
+        let after = cache.padded_x(16, 12);
+        let bits = |m: &MatF32| m.data.iter().map(|f| f.to_bits()).collect::<Vec<u32>>();
+        assert_eq!(bits(&before), bits(after));
+
+        // an appended record DOES invalidate it
+        repo.contribute(RuntimeRecord {
+            job: JobKind::Grep,
+            org: "c".into(),
+            machine: "m5.2xlarge".into(),
+            scaleout: 6,
+            job_features: vec![12.0, 0.2],
+            runtime_s: 140.0,
+        })
+        .unwrap();
+        cache.refresh(&f, &repo);
+        assert!(!cache.knn_pad_is_warm(16, 12));
     }
 
     #[test]

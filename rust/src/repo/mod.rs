@@ -40,12 +40,12 @@
 pub mod featurize;
 pub mod sampling;
 
-pub use featurize::{FeatureSpace, Featurizer};
+pub use featurize::{FeatureMatrixCache, FeatureSpace, Featurizer};
 
 use crate::util::csv::Table;
 use crate::util::hash::fnv1a64_parts;
 use crate::workloads::JobKind;
-use std::collections::{BTreeMap, BTreeSet};
+use std::collections::{BTreeMap, BTreeSet, VecDeque};
 use std::path::Path;
 
 /// One shared runtime observation.
@@ -323,6 +323,31 @@ enum MergeEffect {
     Rejected(Option<MergeConflict>),
 }
 
+/// One slot-level change to the record holdings, as recorded in the
+/// repo's bounded delta journal. Consumers that mirror the holdings
+/// (the incremental feature-matrix cache in [`featurize`]) replay these
+/// instead of rebuilding from scratch.
+///
+/// `Set` carries the record *as written* — replaying against the
+/// current holdings would be wrong once later deltas overwrite the
+/// slot. `Reordered` carries the permutation applied by
+/// [`RuntimeDataRepo::canonicalize`]: `perm[i]` is the old slot of the
+/// record now living at slot `i`.
+#[derive(Debug, Clone)]
+pub enum RepoDelta {
+    /// Slot `slot` now holds `record` (an append when `slot` equals the
+    /// pre-mutation length, an in-place replacement otherwise).
+    Set { slot: usize, record: RuntimeRecord },
+    /// The holdings were permuted: new slot `i` holds what was at
+    /// `perm[i]`.
+    Reordered { perm: Vec<u32> },
+}
+
+/// Bounded length of the delta journal. Mirrors that fall further
+/// behind than this rebuild from scratch — the cap keeps a repo that
+/// nobody mirrors from accumulating unbounded history.
+const DELTA_JOURNAL_CAP: usize = 1024;
+
 /// A per-job shared repository of runtime records.
 #[derive(Debug, Clone)]
 pub struct RuntimeDataRepo {
@@ -360,6 +385,14 @@ pub struct RuntimeDataRepo {
     /// O(m log n); rebuilt after [`RuntimeDataRepo::canonicalize`]
     /// reorders the records.
     key_index: BTreeMap<String, usize>,
+    /// Monotone counter of slot-level holdings changes — one tick per
+    /// journaled [`RepoDelta`]. Unlike `generation` it also advances on
+    /// canonical reorders (which change slot contents without changing
+    /// the record set), so mirrors of the *layout* key on it.
+    delta_seq: u64,
+    /// The last [`DELTA_JOURNAL_CAP`] deltas, newest at the back; entry
+    /// `k` from the back carries seq `delta_seq - k`.
+    deltas: VecDeque<RepoDelta>,
 }
 
 impl RuntimeDataRepo {
@@ -373,6 +406,8 @@ impl RuntimeDataRepo {
             org_marks: BTreeMap::new(),
             org_logs: BTreeMap::new(),
             key_index: BTreeMap::new(),
+            delta_seq: 0,
+            deltas: VecDeque::new(),
         }
     }
 
@@ -427,6 +462,36 @@ impl RuntimeDataRepo {
             self.generation
         );
         self.generation = generation;
+    }
+
+    /// Journal one slot-level holdings change.
+    fn delta_push(&mut self, d: RepoDelta) {
+        self.delta_seq += 1;
+        self.deltas.push_back(d);
+        while self.deltas.len() > DELTA_JOURNAL_CAP {
+            self.deltas.pop_front();
+        }
+    }
+
+    /// Sequence number of the newest journaled delta. Advances on every
+    /// slot-level holdings change, *including* canonical reorders.
+    pub fn delta_seq(&self) -> u64 {
+        self.delta_seq
+    }
+
+    /// The journaled deltas past `since`, oldest first — what a mirror
+    /// whose state reflects seq `since` must replay to catch up.
+    /// `None` when the journal no longer retains that far back (or
+    /// `since` is from the future): the mirror must rebuild.
+    pub fn deltas_since(&self, since: u64) -> Option<impl Iterator<Item = &RepoDelta> + '_> {
+        if since > self.delta_seq {
+            return None;
+        }
+        let missing = (self.delta_seq - since) as usize;
+        if missing > self.deltas.len() {
+            return None;
+        }
+        Some(self.deltas.iter().skip(self.deltas.len() - missing))
     }
 
     fn cache_add(&mut self, r: &RuntimeRecord) {
@@ -509,6 +574,10 @@ impl RuntimeDataRepo {
                 }
             }
         }
+        self.delta_push(RepoDelta::Set {
+            slot: next_slot,
+            record: r.clone(),
+        });
         self.records.push(r);
         self.generation += 1;
         Ok(seqno)
@@ -646,8 +715,26 @@ impl RuntimeDataRepo {
     /// inputs. Content is unchanged, so the generation does not move.
     /// The sync write path canonicalizes after applying a delta.
     pub fn canonicalize(&mut self) {
-        self.records
-            .sort_by_cached_key(RuntimeRecord::canonical_sort_key);
+        // Sort slot indices by precomputed keys instead of the records
+        // themselves: both index sort and `sort_by_cached_key` are
+        // stable, so the resulting order is identical — and the index
+        // vector *is* the permutation the delta journal needs.
+        let keys: Vec<(String, String, u64)> = self
+            .records
+            .iter()
+            .map(RuntimeRecord::canonical_sort_key)
+            .collect();
+        let mut perm: Vec<u32> = (0..self.records.len() as u32).collect();
+        perm.sort_by(|&a, &b| keys[a as usize].cmp(&keys[b as usize]));
+        if perm.iter().enumerate().any(|(i, &p)| p as usize != i) {
+            let mut slots: Vec<Option<RuntimeRecord>> =
+                self.records.drain(..).map(Some).collect();
+            self.records = perm
+                .iter()
+                .map(|&p| slots[p as usize].take().expect("permutation is a bijection"))
+                .collect();
+            self.delta_push(RepoDelta::Reordered { perm });
+        }
         // the reorder invalidated the representative slots; rebuild
         // them as the merge-priority winner per key
         self.key_index.clear();
@@ -773,6 +860,10 @@ impl RuntimeDataRepo {
             None => {
                 self.key_index.insert(key, self.records.len());
                 self.cache_add(r);
+                self.delta_push(RepoDelta::Set {
+                    slot: self.records.len(),
+                    record: r.clone(),
+                });
                 self.records.push(r.clone());
                 self.generation += 1;
                 MergeEffect::Added
@@ -791,6 +882,10 @@ impl RuntimeDataRepo {
                     let dropped = self.records[slot].clone();
                     self.cache_remove(&dropped);
                     self.cache_add(r);
+                    self.delta_push(RepoDelta::Set {
+                        slot,
+                        record: r.clone(),
+                    });
                     self.records[slot] = r.clone();
                     self.generation += 1;
                     MergeEffect::Replaced(conflict)
@@ -1034,6 +1129,70 @@ mod tests {
         repo.contribute(rec("a", "m5.xlarge", 4, 10.0, 100.0)).unwrap();
         assert_eq!(repo.len(), 1);
         assert_eq!(repo.version(), 1);
+    }
+
+    #[test]
+    fn delta_journal_records_sets_and_reorders() {
+        let mut repo = RuntimeDataRepo::new(JobKind::Sort);
+        assert_eq!(repo.delta_seq(), 0);
+        repo.contribute(rec("b", "m5.xlarge", 8, 10.0, 50.0)).unwrap();
+        repo.contribute(rec("a", "c5.xlarge", 4, 10.0, 100.0)).unwrap();
+        assert_eq!(repo.delta_seq(), 2);
+        let ds: Vec<&RepoDelta> = repo.deltas_since(0).unwrap().collect();
+        assert_eq!(ds.len(), 2);
+        match ds[0] {
+            RepoDelta::Set { slot, record } => {
+                assert_eq!(*slot, 0);
+                assert_eq!(record.org, "b");
+            }
+            other => panic!("expected Set, got {other:?}"),
+        }
+        // canonicalize reorders (c5 key sorts before m5) and journals
+        // the permutation without moving the generation
+        let gen = repo.generation();
+        repo.canonicalize();
+        assert_eq!(repo.generation(), gen);
+        assert_eq!(repo.delta_seq(), 3);
+        let ds: Vec<&RepoDelta> = repo.deltas_since(2).unwrap().collect();
+        assert_eq!(ds.len(), 1);
+        match ds[0] {
+            RepoDelta::Reordered { perm } => assert_eq!(perm, &[1, 0]),
+            other => panic!("expected Reordered, got {other:?}"),
+        }
+        // a second canonicalize is a no-op: already in order, nothing journaled
+        repo.canonicalize();
+        assert_eq!(repo.delta_seq(), 3);
+        // a replacement journals a Set at the replaced slot
+        let out = repo
+            .merge_records(&[rec("c", "c5.xlarge", 4, 10.0, 90.0)])
+            .unwrap();
+        assert_eq!(out.replaced, 1);
+        match repo.deltas_since(3).unwrap().next().unwrap() {
+            RepoDelta::Set { slot, record } => {
+                assert_eq!(*slot, 0);
+                assert_eq!(record.org, "c");
+            }
+            other => panic!("expected Set, got {other:?}"),
+        }
+        // future or truncated positions yield None
+        assert!(repo.deltas_since(99).is_none());
+    }
+
+    #[test]
+    fn delta_journal_is_bounded() {
+        let mut repo = RuntimeDataRepo::new(JobKind::Sort);
+        for i in 0..(DELTA_JOURNAL_CAP + 10) {
+            repo.contribute(rec("a", "m5.xlarge", 2 + (i as u32 % 30), i as f64 + 1.0, 10.0))
+                .unwrap();
+        }
+        assert_eq!(repo.delta_seq() as usize, DELTA_JOURNAL_CAP + 10);
+        assert!(repo.deltas_since(0).is_none(), "oldest deltas were dropped");
+        assert!(repo.deltas_since(10).is_some());
+        assert_eq!(
+            repo.deltas_since(10).unwrap().count(),
+            DELTA_JOURNAL_CAP,
+            "exactly the cap is retained"
+        );
     }
 
     #[test]

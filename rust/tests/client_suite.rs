@@ -203,6 +203,89 @@ fn scenario(client: &mut dyn Client, corpus: &Corpus) -> Vec<Fingerprint> {
 }
 
 #[test]
+fn pipelined_submit_bursts_match_sequential_deployments_bitwise() {
+    // Write-side coalescing across deployment shapes: the same burst of
+    // same-kind submits, served strictly sequentially by the
+    // coordinator and the ordered session, and as a pre-scored coalesced
+    // group by the concurrent service (the whole burst is pipelined
+    // while the shard lock is held, so the single worker drains it into
+    // one batch). All three traces must agree bit for bit — decisions
+    // AND simulated runs.
+    let cloud = Cloud::aws_like();
+    let corpus = corpus(&cloud);
+    let no_artifacts = PathBuf::from("/nonexistent-artifacts");
+    let org = Organization::new("burst-org");
+    let requests: Vec<JobRequest> = (0..6)
+        .map(|i| JobRequest::sort(10.0 + i as f64).with_target_seconds(900.0))
+        .collect();
+    let fingerprint = |o: &c3o::coordinator::JobOutcome| Fingerprint {
+        step: "burst-sort",
+        machine: o.machine.clone(),
+        scaleout: o.scaleout,
+        predicted_bits: o.predicted_runtime_s.to_bits(),
+        actual_bits: o.actual_runtime_s.to_bits(),
+    };
+
+    // 1) the sequential coordinator
+    let mut coordinator = Coordinator::with_engine(cloud.clone(), Engine::native(), SEED);
+    Client::share(&mut coordinator, corpus.repo_for(JobKind::Sort)).unwrap();
+    let coordinator_trace: Vec<Fingerprint> = requests
+        .iter()
+        .map(|r| {
+            let o = Client::submit(&mut coordinator, &org, r.clone()).unwrap();
+            assert!(o.model_used.is_some(), "burst must be model-served");
+            fingerprint(&o)
+        })
+        .collect();
+
+    // 2) the ordered single-worker session
+    let session = Session::spawn(cloud.clone(), no_artifacts.clone(), SEED);
+    let mut session_ref = &session;
+    Client::share(&mut session_ref, corpus.repo_for(JobKind::Sort)).unwrap();
+    let session_trace: Vec<Fingerprint> = requests
+        .iter()
+        .map(|r| fingerprint(&Client::submit(&mut session_ref, &org, r.clone()).unwrap()))
+        .collect();
+    session.shutdown();
+
+    // 3) the concurrent service, burst pipelined into a coalesced group
+    let service = CoordinatorService::spawn(
+        cloud,
+        ServiceConfig::default()
+            .with_workers(1)
+            .with_pjrt_workers(0)
+            .with_artifacts_dir(no_artifacts)
+            .with_seed(SEED),
+    );
+    service.share(corpus.repo_for(JobKind::Sort)).unwrap();
+    let guard = service.hold_shard_for_tests(JobKind::Sort);
+    let client = service.client();
+    let tickets: Vec<_> = requests
+        .iter()
+        .map(|r| client.submit_nowait(&org, r.clone()).unwrap())
+        .collect();
+    drop(guard);
+    let service_trace: Vec<Fingerprint> = tickets
+        .into_iter()
+        .map(|t| fingerprint(&t.wait().unwrap()))
+        .collect();
+    assert!(
+        service.metrics().unwrap().coalesced_write_batches >= 1,
+        "the pipelined burst must have been pre-scored as one batch"
+    );
+    service.shutdown();
+
+    assert_eq!(
+        coordinator_trace, session_trace,
+        "session burst must match the sequential coordinator bit for bit"
+    );
+    assert_eq!(
+        coordinator_trace, service_trace,
+        "coalesced service burst must match the sequential coordinator bit for bit"
+    );
+}
+
+#[test]
 fn all_three_deployments_serve_identical_decisions() {
     let cloud = Cloud::aws_like();
     let corpus = corpus(&cloud);

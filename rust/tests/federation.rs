@@ -123,6 +123,78 @@ fn gossip_converges_to_identical_generation_and_records() {
 }
 
 #[test]
+fn repo_rebuilt_from_sync_ops_yields_identical_cached_feature_matrix() {
+    // Federation path of the incremental feature cache: a peer that
+    // rebuilds the corpus purely from sync ops (full op-log pull into an
+    // empty repo, then the canonical reorder) must end up with cached
+    // training inputs bitwise-identical to the directly-contributing
+    // origin's. Converged peers already hold bitwise-identical records;
+    // this extends that guarantee to the feature matrices derived from
+    // them — so converged peers train bitwise-identical models through
+    // the cached path too.
+    use c3o::repo::{FeatureMatrixCache, Featurizer};
+    let cloud = Cloud::aws_like();
+    let featurizer = Featurizer::new(&cloud);
+
+    let mut origin = RuntimeDataRepo::new(JobKind::Sort);
+    let mut origin_cache = FeatureMatrixCache::new();
+    for k in 0..36usize {
+        origin
+            .contribute(RuntimeRecord {
+                job: JobKind::Sort,
+                org: format!("org-{}", k % 3),
+                machine: MACHINES[k % 3].to_string(),
+                scaleout: 2 + (k % 7) as u32,
+                job_features: vec![10.0 + k as f64 * 0.25],
+                runtime_s: 100.0 + ((k * k) % 97) as f64,
+            })
+            .unwrap();
+        // keep the origin's cache warm incrementally (delta replays),
+        // never one bulk rebuild at the end
+        if k % 5 == 0 {
+            origin_cache.refresh(&featurizer, &origin);
+        }
+    }
+
+    // the mirror rebuilds purely from the op-log delta
+    let mut mirror = RuntimeDataRepo::new(JobKind::Sort);
+    let mut mirror_cache = FeatureMatrixCache::new();
+    let ops = origin.delta_for(&mirror.watermarks());
+    assert_eq!(ops.len(), origin.len());
+    mirror.apply_sync_ops(&ops).unwrap();
+    mirror.canonicalize();
+    origin.canonicalize();
+    origin_cache.refresh(&featurizer, &origin);
+    mirror_cache.refresh(&featurizer, &mirror);
+
+    // records converged bitwise...
+    assert_eq!(origin.content_digest(), mirror.content_digest());
+    // ...and so did the cached training inputs, which also match a
+    // from-scratch featurization of the converged corpus
+    let (o_space, o_x, o_y) = origin_cache.fit(&origin);
+    let (m_space, m_x, m_y) = mirror_cache.fit(&mirror);
+    let (s_space, s_x, s_y) = featurizer.fit(&origin);
+    for (space, x, y) in [(&m_space, &m_x, &m_y), (&s_space, &s_x, &s_y)] {
+        assert_eq!(o_space.names, space.names);
+        assert_eq!((o_x.rows, o_x.cols), (x.rows, x.cols));
+        for (a, b) in o_space.mean.iter().zip(&space.mean) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        for (a, b) in o_space.sd.iter().zip(&space.sd) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        assert_eq!(o_space.y_mean.to_bits(), space.y_mean.to_bits());
+        assert_eq!(o_space.y_sd.to_bits(), space.y_sd.to_bits());
+        for (a, b) in o_x.data.iter().zip(&x.data) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        for (a, b) in o_y.iter().zip(y.iter()) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+}
+
+#[test]
 fn conflicting_measurements_converge_to_one_deterministic_winner() {
     let cloud = Cloud::aws_like();
     forall("conflict_convergence", 25, |g| {

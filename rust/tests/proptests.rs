@@ -99,6 +99,106 @@ fn csv_round_trip_is_lossless() {
 }
 
 // --------------------------------------------------------------------------
+// Incremental feature-matrix cache invariants
+// --------------------------------------------------------------------------
+
+/// The cache's training inputs must be BITWISE equal to featurizing from
+/// scratch — f32 accumulation is order-sensitive, so this is the whole
+/// contract that makes the incremental path a pure optimization.
+fn assert_feature_fit_bits_equal(
+    scratch: &(c3o::repo::FeatureSpace, c3o::util::matrix::MatF32, Vec<f32>),
+    cached: &(c3o::repo::FeatureSpace, c3o::util::matrix::MatF32, Vec<f32>),
+    context: &str,
+) {
+    let (fs, fx, fy) = scratch;
+    let (cs, cx, cy) = cached;
+    assert_eq!(fs.names, cs.names, "{context}: feature names");
+    assert_eq!(fs.mean.len(), cs.mean.len(), "{context}: mean dim");
+    for (i, (a, b)) in fs.mean.iter().zip(&cs.mean).enumerate() {
+        assert_eq!(a.to_bits(), b.to_bits(), "{context}: mean[{i}] {a} vs {b}");
+    }
+    for (i, (a, b)) in fs.sd.iter().zip(&cs.sd).enumerate() {
+        assert_eq!(a.to_bits(), b.to_bits(), "{context}: sd[{i}] {a} vs {b}");
+    }
+    assert_eq!(fs.y_mean.to_bits(), cs.y_mean.to_bits(), "{context}: y_mean");
+    assert_eq!(fs.y_sd.to_bits(), cs.y_sd.to_bits(), "{context}: y_sd");
+    assert_eq!((fx.rows, fx.cols), (cx.rows, cx.cols), "{context}: x shape");
+    for (i, (a, b)) in fx.data.iter().zip(&cx.data).enumerate() {
+        assert_eq!(a.to_bits(), b.to_bits(), "{context}: x.data[{i}] {a} vs {b}");
+    }
+    assert_eq!(fy.len(), cy.len(), "{context}: y len");
+    for (i, (a, b)) in fy.iter().zip(cy).enumerate() {
+        assert_eq!(a.to_bits(), b.to_bits(), "{context}: y[{i}] {a} vs {b}");
+    }
+}
+
+#[test]
+fn feature_cache_is_bitwise_equal_across_random_mutation_sequences() {
+    // Random interleavings of every repo mutation the op log knows —
+    // contribute, bulk merge (adds + conflict replacements), record-level
+    // sync deltas, canonical reorders — replayed incrementally into the
+    // cache, must yield training inputs bitwise-identical to refitting
+    // from scratch after every step.
+    use c3o::repo::{FeatureMatrixCache, Featurizer};
+    let cloud = Cloud::aws_like();
+    forall("feature_cache_bitwise", 80, |g| {
+        let kind = *g.pick(&JobKind::all());
+        let featurizer = Featurizer::new(&cloud);
+        let mut repo = RuntimeDataRepo::new(kind);
+        let mut cache = FeatureMatrixCache::new();
+        for _ in 0..g.usize_in(1, 6) {
+            let _ = repo.contribute(random_record(g, kind));
+        }
+        for step in 0..g.usize_in(2, 10) {
+            let op = g.usize_in(0, 3);
+            match op {
+                0 => {
+                    for _ in 0..g.usize_in(1, 4) {
+                        let _ = repo.contribute(random_record(g, kind));
+                    }
+                }
+                1 => {
+                    // bulk merge: fresh peer rows, plus (sometimes) a
+                    // re-measurement of a config the repo already holds,
+                    // exercising the conflict/replace path
+                    let mut peer = RuntimeDataRepo::new(kind);
+                    for _ in 0..g.usize_in(1, 4) {
+                        let _ = peer.contribute(random_record(g, kind));
+                    }
+                    if g.bool() && !repo.is_empty() {
+                        let mut again =
+                            repo.records()[g.usize_in(0, repo.len() - 1)].clone();
+                        again.org = format!("re-{}", again.org);
+                        again.runtime_s *= g.f64_in(0.5, 1.5);
+                        let _ = peer.contribute(again);
+                    }
+                    repo.merge(&peer).unwrap();
+                }
+                2 => {
+                    // record-level sync delta from a diverged fork
+                    let mut peer = repo.fork();
+                    for _ in 0..g.usize_in(1, 3) {
+                        let _ = peer.contribute(random_record(g, kind));
+                    }
+                    let ops = peer.delta_for(&repo.watermarks());
+                    repo.apply_sync_ops(&ops).unwrap();
+                }
+                _ => repo.canonicalize(),
+            }
+            let reused = cache.refresh(&featurizer, &repo);
+            assert!(reused <= repo.len(), "reuse count is bounded by the corpus");
+            let scratch = featurizer.fit(&repo);
+            let cached = cache.fit(&repo);
+            assert_feature_fit_bits_equal(
+                &scratch,
+                &cached,
+                &format!("case {} step {step} op {op}", g.case),
+            );
+        }
+    });
+}
+
+// --------------------------------------------------------------------------
 // Billing invariants
 // --------------------------------------------------------------------------
 

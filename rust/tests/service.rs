@@ -330,6 +330,91 @@ fn concurrent_reads_coalesce_and_match_sequential_decisions() {
 }
 
 #[test]
+fn coalesced_writes_decide_bitwise_identically_to_sequential() {
+    // THE write-coalescing acceptance test. Two identically-seeded
+    // single-worker services serve the same submit stream: one strictly
+    // sequentially (each submit blocks, so every group has one member),
+    // one with the whole stream pipelined while the shard lock is held —
+    // so the queue backs up and the worker drains the submits into a
+    // pre-scored group. Every outcome must match bitwise: the decision
+    // (pre-scored as one batch) and the simulated run (same shard RNG
+    // stream — pre-deciding must consume no randomness).
+    let cloud = Cloud::aws_like();
+    let corpus = corpus(&cloud, 43);
+    let org = Organization::new("writer");
+    const SUBMITS: usize = 8;
+    let policy = ShardPolicy {
+        retrain_every: 4, // force mid-stream retrains: a retrain inside
+        // the coalesced group must invalidate the rest of the group's
+        // pre-scored decisions (they re-decide against the new model,
+        // exactly as sequential serving would)
+        ..ShardPolicy::default()
+    };
+    let config = || {
+        ServiceConfig::default()
+            .with_workers(1)
+            .with_seed(59)
+            .with_policy(policy.clone())
+            // native engines on both services: its kNN capacity (512)
+            // covers the sort corpus, so retrains take the cached path
+            .with_pjrt_workers(0)
+    };
+
+    // sequential ground truth
+    let seq = CoordinatorService::spawn(cloud.clone(), config());
+    seq.share(corpus.repo_for(JobKind::Sort)).unwrap();
+    let expected: Vec<_> = (0..SUBMITS)
+        .map(|i| {
+            let o = seq.submit(&org, request_for(JobKind::Sort, i)).unwrap();
+            assert!(o.model_used.is_some(), "submit {i} must be model-served");
+            (
+                o.machine.clone(),
+                o.scaleout,
+                o.predicted_runtime_s.to_bits(),
+                o.actual_runtime_s.to_bits(),
+            )
+        })
+        .collect();
+    seq.shutdown();
+
+    // coalesced replay: hold the shard lock, pipeline the whole stream,
+    // then release — the single worker drains the queued submits into a
+    // same-kind group and pre-scores them as one batch
+    let coal = CoordinatorService::spawn(cloud, config());
+    coal.share(corpus.repo_for(JobKind::Sort)).unwrap();
+    let guard = coal.hold_shard_for_tests(JobKind::Sort);
+    let client = coal.client();
+    let tickets: Vec<_> = (0..SUBMITS)
+        .map(|i| client.submit_nowait(&org, request_for(JobKind::Sort, i)).unwrap())
+        .collect();
+    drop(guard);
+    for (i, ticket) in tickets.into_iter().enumerate() {
+        let o = ticket.wait().unwrap();
+        let actual = (
+            o.machine.clone(),
+            o.scaleout,
+            o.predicted_runtime_s.to_bits(),
+            o.actual_runtime_s.to_bits(),
+        );
+        assert_eq!(
+            actual, expected[i],
+            "submit {i} diverged under write coalescing"
+        );
+    }
+    let metrics = coal.metrics().unwrap();
+    assert_eq!(metrics.submissions, SUBMITS as u64);
+    assert!(
+        metrics.coalesced_write_batches >= 1,
+        "the pipelined stream must have been pre-scored as a group: {metrics:?}"
+    );
+    assert!(
+        metrics.featurized_rows_reused > 0,
+        "mid-stream retrains must reuse cached feature rows: {metrics:?}"
+    );
+    coal.shutdown();
+}
+
+#[test]
 fn cold_recommend_errors_while_cold_submit_falls_back() {
     // The API's asymmetry: a cold `Submit` has the overprovisioning
     // fallback, a cold `Recommend` is a typed `ColdStart` error.

@@ -13,27 +13,67 @@ have been committed yet: the script then just prints the current run and
 succeeds. Refresh the baseline by copying a representative run's
 BENCH_serve_throughput.json over the .baseline.json file.
 
-EXTRA files are additional BENCH_*.json outputs without a committed
-baseline (e.g. BENCH_sync_throughput.json): each is summarized,
-report-only. The sync_throughput schema gets a dedicated table; anything
-else is pretty-printed.
+EXTRA files are additional BENCH_*.json outputs (e.g.
+BENCH_sync_throughput.json). If a sibling <name>.baseline.json is
+committed next to the script's invocation directory, the extra's rate
+metrics are held to the same REGRESSION_FLOOR; otherwise the extra is
+summarized report-only. The sync_throughput schema gets a dedicated
+table; anything else is pretty-printed.
 """
 
 import json
+import os
 import sys
 
 REGRESSION_FLOOR = 0.5
+
+FAILURES = []
+
+
+def compare(label, base_v, cur_v):
+    ratio = cur_v / base_v if base_v else float("inf")
+    flag = ""
+    if ratio < REGRESSION_FLOOR:
+        flag = "  << REGRESSION"
+        FAILURES.append(label)
+    print(f"{label:<42} {base_v:>10.1f} {cur_v:>10.1f} {ratio:>7.2f}x{flag}")
+
+
+def load_sibling_baseline(path):
+    """Return the committed <name>.baseline.json next to an extra, if any."""
+    stem = path[:-5] if path.endswith(".json") else path
+    baseline_path = stem + ".baseline.json"
+    if not os.path.exists(baseline_path):
+        return None
+    with open(baseline_path) as f:
+        base = json.load(f)
+    return None if base.get("placeholder") else base
 
 
 def report_extra(path):
     with open(path) as f:
         doc = json.load(f)
-    print(f"\n--- {path} (report-only, no baseline) ---")
+    base = load_sibling_baseline(path)
     if doc.get("bench") == "sync_throughput":
         replay = doc.get("replay", {})
         sync = doc.get("sync", {})
         incremental = doc.get("incremental", {})
-        print(f"{'metric':<42} {'value':>14}")
+        rates = [
+            ("sync replay WAL (records/s)", ("replay", "wal_records_per_s")),
+            ("sync replay snapshot (records/s)", ("replay", "snapshot_records_per_s")),
+            ("sync exchange (records/s)", ("sync", "records_per_s")),
+        ]
+        if base is not None:
+            print(f"\n--- {path} (vs committed baseline) ---")
+            print(f"{'metric':<42} {'baseline':>10} {'current':>10} {'ratio':>8}")
+            for label, (section, key) in rates:
+                base_v = base.get(section, {}).get(key)
+                cur_v = doc.get(section, {}).get(key)
+                if base_v is not None and cur_v is not None:
+                    compare(label, float(base_v), float(cur_v))
+        else:
+            print(f"\n--- {path} (report-only, no baseline) ---")
+        print(f"\n{'metric':<42} {'value':>14}")
         rows = [
             ("records", doc.get("records")),
             ("replay WAL (records/s)", replay.get("wal_records_per_s")),
@@ -50,12 +90,42 @@ def report_extra(path):
             if value is not None:
                 print(f"{label:<42} {float(value):>14.1f}")
     else:
+        print(f"\n--- {path} (report-only, no baseline) ---")
         print(json.dumps(doc, indent=2))
+
+
+def report_write_mix(doc):
+    """Summarize the write-mix serve scenario, report-only (no baseline yet)."""
+    wm = doc.get("write_mix")
+    if not wm:
+        return
+    print(f"\n--- write-mix {wm.get('mix', '?')} (report-only, no baseline) ---")
+    session = wm.get("baseline_session_req_per_s")
+    if session is not None:
+        print(f"{'session 1 client (req/s)':<42} {float(session):>10.1f}")
+    for p in wm.get("service", []):
+        label = f"service {p.get('clients')} clients (req/s)"
+        extras = (
+            f"  coalesced_write_batches={p.get('coalesced_write_batches')}"
+            f"  featurized_rows_reused={p.get('featurized_rows_reused')}"
+        )
+        print(f"{label:<42} {float(p.get('req_per_s', 0.0)):>10.1f}{extras}")
+    speedup = wm.get("speedup_vs_session")
+    if speedup is not None:
+        print(f"{'speedup vs session':<42} {float(speedup):>9.1f}x")
 
 
 def service_points(doc, section=None, key="jobs_per_s"):
     node = doc.get(section, {}) if section else doc
     return {int(p["clients"]): float(p[key]) for p in node.get("service", [])}
+
+
+def finish():
+    if FAILURES:
+        sys.exit(
+            f"gross throughput regression (< {REGRESSION_FLOOR}x baseline): {FAILURES}"
+        )
+    print("\nno gross regression")
 
 
 def main():
@@ -74,19 +144,11 @@ def main():
             "\nTo start trend-diffing, commit this run as "
             "BENCH_serve_throughput.baseline.json"
         )
+        report_write_mix(cur)
         for path in extras:
             report_extra(path)
+        finish()
         return
-
-    failures = []
-
-    def compare(label, base_v, cur_v):
-        ratio = cur_v / base_v if base_v else float("inf")
-        flag = ""
-        if ratio < REGRESSION_FLOOR:
-            flag = "  << REGRESSION"
-            failures.append(label)
-        print(f"{label:<42} {base_v:>10.1f} {cur_v:>10.1f} {ratio:>7.2f}x{flag}")
 
     print(f"{'metric':<42} {'baseline':>10} {'current':>10} {'ratio':>8}")
     compare(
@@ -120,12 +182,12 @@ def main():
                     cur_r[clients],
                 )
 
+    report_write_mix(cur)
+
     for path in extras:
         report_extra(path)
 
-    if failures:
-        sys.exit(f"gross throughput regression (< {REGRESSION_FLOOR}x baseline): {failures}")
-    print("\nno gross regression")
+    finish()
 
 
 if __name__ == "__main__":
