@@ -1,0 +1,272 @@
+//! `lint.toml` — the checked-in invariant-zone map and rule tables,
+//! parsed by a deliberately minimal TOML-subset reader (sections,
+//! string/bool/integer values, and single- or multi-line string arrays;
+//! everything this tool needs and nothing more, so the lint crate stays
+//! dependency-free like the workspace it checks).
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+/// Which invariant zone a top-level module belongs to.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Zone {
+    /// Bitwise-reproducibility zone: `repo`, `models`, `store`,
+    /// `configurator` — anything whose output feeds converged-peer or
+    /// cached-vs-scratch equality.
+    Deterministic,
+    /// Request-serving zone: `api`, `coordinator` — panics are outages,
+    /// failures must speak the typed `ApiError` taxonomy.
+    Serving,
+    /// Everything else (util, sim, cloud, CLI, figures, ...).
+    Boundary,
+}
+
+impl Zone {
+    pub fn name(self) -> &'static str {
+        match self {
+            Zone::Deterministic => "deterministic",
+            Zone::Serving => "serving",
+            Zone::Boundary => "boundary",
+        }
+    }
+}
+
+/// Parsed configuration for one run of the analyzer.
+#[derive(Debug, Clone)]
+pub struct LintConfig {
+    /// Source root the walker scans (resolved relative to the config
+    /// file's directory).
+    pub root: PathBuf,
+    /// module name -> zone (top-level path component under `root`).
+    pub zones: BTreeMap<String, Zone>,
+    /// Modules the `float-order` rule applies to.
+    pub float_order_modules: Vec<String>,
+    /// Modules exempt from `no-anyhow-public` (the documented internal
+    /// engine layers whose pub surface is folded into `ApiError` at the
+    /// boundary).
+    pub anyhow_exempt_modules: Vec<String>,
+    /// Lock classes, matched by substring against the receiver's
+    /// deciding identifier (e.g. class `shard` matches `self.shards[..]`).
+    pub lock_classes: Vec<String>,
+    /// Allowed nestings: `(outer, inner)` pairs.
+    pub lock_order: Vec<(String, String)>,
+}
+
+/// All rule identifiers, in reporting order.
+pub const RULES: &[&str] = &[
+    "hash-iter",
+    "float-order",
+    "no-panic-serving",
+    "no-anyhow-public",
+    "lock-discipline",
+    "bad-suppression",
+];
+
+pub fn is_known_rule(name: &str) -> bool {
+    RULES.contains(&name)
+}
+
+impl LintConfig {
+    /// Parse `lint.toml` at `path`. `root` inside the file is resolved
+    /// relative to the file's parent directory.
+    pub fn load(path: &Path) -> Result<LintConfig, String> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| format!("{}: {}", path.display(), e))?;
+        let table = parse_toml_subset(&text).map_err(|e| format!("{}: {}", path.display(), e))?;
+        let base = path.parent().unwrap_or(Path::new(".")).to_path_buf();
+        LintConfig::from_table(&table, &base)
+    }
+
+    fn from_table(table: &TomlTable, base: &Path) -> Result<LintConfig, String> {
+        let root_rel = table
+            .string("", "root")
+            .ok_or("missing top-level `root` key")?;
+        let mut zones = BTreeMap::new();
+        for m in table.strings("zones", "deterministic") {
+            zones.insert(m, Zone::Deterministic);
+        }
+        for m in table.strings("zones", "serving") {
+            zones.insert(m, Zone::Serving);
+        }
+        let mut lock_order = Vec::new();
+        for entry in table.strings("rules.lock-discipline", "order") {
+            let (outer, inner) = entry
+                .split_once("->")
+                .ok_or_else(|| format!("lock order entry `{entry}` is not `outer -> inner`"))?;
+            lock_order.push((outer.trim().to_string(), inner.trim().to_string()));
+        }
+        Ok(LintConfig {
+            root: base.join(root_rel),
+            zones,
+            float_order_modules: table.strings("rules.float-order", "modules"),
+            anyhow_exempt_modules: table.strings("rules.no-anyhow-public", "exempt"),
+            lock_classes: table.strings("rules.lock-discipline", "classes"),
+            lock_order,
+        })
+    }
+
+    /// Zone of a top-level module name (`repo`, `api`, `main`, ...).
+    pub fn zone_of(&self, module: &str) -> Zone {
+        self.zones.get(module).copied().unwrap_or(Zone::Boundary)
+    }
+}
+
+/// section name (`""` for top level) -> key -> value.
+struct TomlTable {
+    values: BTreeMap<(String, String), TomlValue>,
+}
+
+enum TomlValue {
+    Str(String),
+    Array(Vec<String>),
+    #[allow(dead_code)]
+    Other(String),
+}
+
+impl TomlTable {
+    fn string(&self, section: &str, key: &str) -> Option<String> {
+        match self.values.get(&(section.to_string(), key.to_string())) {
+            Some(TomlValue::Str(s)) => Some(s.clone()),
+            _ => None,
+        }
+    }
+    fn strings(&self, section: &str, key: &str) -> Vec<String> {
+        match self.values.get(&(section.to_string(), key.to_string())) {
+            Some(TomlValue::Array(v)) => v.clone(),
+            _ => Vec::new(),
+        }
+    }
+}
+
+/// Strip a `#` comment that is outside any quoted string.
+fn strip_comment(line: &str) -> &str {
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_toml_subset(text: &str) -> Result<TomlTable, String> {
+    let mut values = BTreeMap::new();
+    let mut section = String::new();
+    let mut lines = text.lines().enumerate();
+    while let Some((n, raw)) = lines.next() {
+        let line = strip_comment(raw).trim();
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(name) = line.strip_prefix('[') {
+            let name = name
+                .strip_suffix(']')
+                .ok_or_else(|| format!("line {}: unclosed section header", n + 1))?;
+            section = name.trim().to_string();
+            continue;
+        }
+        let (key, mut value) = line
+            .split_once('=')
+            .map(|(k, v)| (k.trim().to_string(), v.trim().to_string()))
+            .ok_or_else(|| format!("line {}: expected `key = value`", n + 1))?;
+        // Multi-line arrays: keep consuming until brackets balance.
+        if value.starts_with('[') {
+            while value.matches('[').count() > value.matches(']').count() {
+                let (_, next) = lines
+                    .next()
+                    .ok_or_else(|| format!("line {}: unterminated array", n + 1))?;
+                value.push(' ');
+                value.push_str(strip_comment(next).trim());
+            }
+        }
+        let parsed = if let Some(inner) = value.strip_prefix('[') {
+            let inner = inner
+                .strip_suffix(']')
+                .ok_or_else(|| format!("line {}: unterminated array", n + 1))?;
+            let mut items = Vec::new();
+            for item in inner.split(',') {
+                let item = item.trim();
+                if item.is_empty() {
+                    continue;
+                }
+                items.push(unquote(item).ok_or_else(|| {
+                    format!("line {}: array items must be quoted strings", n + 1)
+                })?);
+            }
+            TomlValue::Array(items)
+        } else if let Some(s) = unquote(&value) {
+            TomlValue::Str(s)
+        } else {
+            TomlValue::Other(value)
+        };
+        values.insert((section.clone(), key), parsed);
+    }
+    Ok(TomlTable { values })
+}
+
+fn unquote(s: &str) -> Option<String> {
+    let s = s.strip_prefix('"')?.strip_suffix('"')?;
+    Some(s.to_string())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"
+# the zone map
+root = "../src"
+
+[zones]
+deterministic = ["repo", "models", "store", "configurator"]
+serving = ["api", "coordinator"]
+
+[rules.float-order]
+modules = ["models", "repo"]
+
+[rules.no-anyhow-public]
+exempt = [
+    "util",    # utility layer
+    "runtime",
+]
+
+[rules.lock-discipline]
+classes = ["shard", "metrics", "snapshot", "queue", "store"]
+order = ["shard -> snapshot", "shard -> store"]
+"#;
+
+    #[test]
+    fn parses_full_config() {
+        let table = parse_toml_subset(SAMPLE).unwrap();
+        let cfg = LintConfig::from_table(&table, Path::new("/x/lint")).unwrap();
+        assert_eq!(cfg.root, Path::new("/x/lint/../src"));
+        assert_eq!(cfg.zone_of("repo"), Zone::Deterministic);
+        assert_eq!(cfg.zone_of("api"), Zone::Serving);
+        assert_eq!(cfg.zone_of("sim"), Zone::Boundary);
+        assert_eq!(cfg.anyhow_exempt_modules, vec!["util", "runtime"]);
+        assert_eq!(
+            cfg.lock_order,
+            vec![
+                ("shard".to_string(), "snapshot".to_string()),
+                ("shard".to_string(), "store".to_string())
+            ]
+        );
+    }
+
+    #[test]
+    fn comments_inside_strings_survive() {
+        let table = parse_toml_subset("root = \"a#b\"").unwrap();
+        assert_eq!(table.string("", "root").unwrap(), "a#b");
+    }
+
+    #[test]
+    fn bad_lock_order_entry_is_an_error() {
+        let table = parse_toml_subset(
+            "root = \"s\"\n[rules.lock-discipline]\norder = [\"shard snapshot\"]",
+        )
+        .unwrap();
+        assert!(LintConfig::from_table(&table, Path::new(".")).is_err());
+    }
+}

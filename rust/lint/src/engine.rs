@@ -1,0 +1,991 @@
+//! The rule engine: walks the module tree, classifies each file into
+//! its invariant zone, runs the token-pattern rules, and applies inline
+//! `c3o-lint:` suppression directives.
+//!
+//! Every rule is a *lexical* check (token patterns + brace matching),
+//! so each trigger is documented precisely in `README.md` and the
+//! corresponding fixture under `tests/fixtures/` proves both that it
+//! fires and that a justified suppression silences it.
+
+use crate::config::{is_known_rule, LintConfig, Zone};
+use crate::lexer::{lex, Comment, Tok, TokKind};
+use std::collections::BTreeSet;
+use std::path::Path;
+
+/// One diagnostic: `file:line: rule: message`.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Finding {
+    /// Path relative to the scanned root, `/`-separated.
+    pub file: String,
+    pub line: u32,
+    pub rule: String,
+    pub message: String,
+}
+
+/// Result of scanning a tree: unsuppressed findings (the failures),
+/// suppressed findings (for `--list-suppressed`), and a file count.
+#[derive(Debug, Default)]
+pub struct ScanResult {
+    pub findings: Vec<Finding>,
+    pub suppressed: Vec<Finding>,
+    pub files_scanned: usize,
+}
+
+/// Scan every `.rs` file under `cfg.root`.
+pub fn scan_tree(cfg: &LintConfig) -> Result<ScanResult, String> {
+    let mut files = Vec::new();
+    collect_rs_files(&cfg.root, &mut files)
+        .map_err(|e| format!("walking {}: {}", cfg.root.display(), e))?;
+    files.sort();
+    if files.is_empty() {
+        return Err(format!("no .rs files under {}", cfg.root.display()));
+    }
+    let mut out = ScanResult::default();
+    for path in files {
+        let rel = path
+            .strip_prefix(&cfg.root)
+            .unwrap_or(&path)
+            .components()
+            .map(|c| c.as_os_str().to_string_lossy().into_owned())
+            .collect::<Vec<_>>()
+            .join("/");
+        let src = std::fs::read_to_string(&path)
+            .map_err(|e| format!("{}: {}", path.display(), e))?;
+        let (mut findings, mut suppressed) = scan_source(cfg, &rel, &src);
+        out.findings.append(&mut findings);
+        out.suppressed.append(&mut suppressed);
+        out.files_scanned += 1;
+    }
+    sort_findings(&mut out.findings);
+    sort_findings(&mut out.suppressed);
+    Ok(out)
+}
+
+fn sort_findings(v: &mut [Finding]) {
+    v.sort_by(|a, b| {
+        (a.file.as_str(), a.line, a.rule.as_str()).cmp(&(b.file.as_str(), b.line, b.rule.as_str()))
+    });
+}
+
+fn collect_rs_files(dir: &Path, out: &mut Vec<std::path::PathBuf>) -> std::io::Result<()> {
+    for entry in std::fs::read_dir(dir)? {
+        let entry = entry?;
+        let path = entry.path();
+        if path.is_dir() {
+            collect_rs_files(&path, out)?;
+        } else if path.extension().is_some_and(|e| e == "rs") {
+            out.push(path);
+        }
+    }
+    Ok(())
+}
+
+/// Top-level module of a root-relative path: `repo/mod.rs` -> `repo`,
+/// `lib.rs` -> `lib`.
+fn module_of(rel: &str) -> String {
+    match rel.split_once('/') {
+        Some((first, _)) => first.to_string(),
+        None => rel.trim_end_matches(".rs").to_string(),
+    }
+}
+
+/// Scan one file's source. Returns (unsuppressed, suppressed) findings.
+pub fn scan_source(cfg: &LintConfig, rel: &str, src: &str) -> (Vec<Finding>, Vec<Finding>) {
+    let module = module_of(rel);
+    let zone = cfg.zone_of(&module);
+    let (toks, comments) = lex(src);
+    let fns = fn_ranges(&toks);
+    let (directives, mut bad) = parse_directives(cfg, rel, &comments, &fns);
+    let tests = test_regions(&toks);
+
+    let mut raw: Vec<Finding> = Vec::new();
+    if zone == Zone::Deterministic {
+        rule_hash_iter(rel, &module, &toks, &mut raw);
+    }
+    if cfg.float_order_modules.contains(&module) {
+        rule_float_order(rel, &toks, &mut raw);
+    }
+    if zone == Zone::Serving {
+        rule_no_panic_serving(rel, &toks, &mut raw);
+    }
+    if !cfg.anyhow_exempt_modules.contains(&module) {
+        rule_no_anyhow_public(rel, &module, &toks, &mut raw);
+    }
+    rule_lock_discipline(cfg, rel, &toks, &directives, &mut raw);
+
+    // Test code is out of scope for every rule (fixtures and asserts
+    // unwrap freely; they run under the harness, not on the serving path).
+    raw.retain(|f| !tests.iter().any(|r| r.contains(&f.line)));
+    dedupe(&mut raw);
+
+    let mut kept = Vec::new();
+    let mut suppressed = Vec::new();
+    for f in raw {
+        if is_suppressed(&f, &directives) {
+            suppressed.push(f);
+        } else {
+            kept.push(f);
+        }
+    }
+    kept.append(&mut bad); // bad-suppression diagnostics are never suppressible
+    (kept, suppressed)
+}
+
+fn dedupe(v: &mut Vec<Finding>) {
+    let mut seen: BTreeSet<(String, u32, String)> = BTreeSet::new();
+    v.retain(|f| seen.insert((f.file.clone(), f.line, f.rule.clone())));
+}
+
+// ---------------------------------------------------------------------------
+// Suppression directives
+// ---------------------------------------------------------------------------
+
+/// A parsed, well-formed `c3o-lint:` directive.
+#[derive(Debug, Clone)]
+pub struct Directive {
+    pub line: u32,
+    pub kind: DirectiveKind,
+}
+
+#[derive(Debug, Clone)]
+pub enum DirectiveKind {
+    /// `allow(rule, ...)` — suppresses matching findings on the
+    /// directive's own line (trailing form) or the line below it.
+    Allow { rules: Vec<String> },
+    /// `allow-fn(rule, ...)` — suppresses matching findings anywhere in
+    /// the next `fn` item (signature + body).
+    AllowFn { rules: Vec<String>, range: LineRange },
+    /// `holds(class, ...)` — lock-discipline: the named lock classes
+    /// are considered held for the whole body of the next `fn` (the
+    /// caller's obligation, checked at every call site by review).
+    Holds { classes: Vec<String>, range: LineRange },
+}
+
+#[derive(Debug, Clone, Copy)]
+pub struct LineRange {
+    pub start: u32,
+    pub end: u32,
+}
+
+impl LineRange {
+    fn contains(&self, line: u32) -> bool {
+        self.start <= line && line <= self.end
+    }
+}
+
+/// A `fn` item: the line of the `fn` keyword and the last line of its
+/// body (or of the signature, for body-less trait methods).
+#[derive(Debug, Clone, Copy)]
+struct FnSpan {
+    start: u32,
+    end: u32,
+}
+
+/// Max lines between a fn-scoped directive and the `fn` it governs
+/// (doc comments and attributes in between are fine; further away is a
+/// dangling directive and reported as such).
+const FN_ATTACH_WINDOW: u32 = 20;
+
+fn parse_directives(
+    cfg: &LintConfig,
+    rel: &str,
+    comments: &[Comment],
+    fns: &[FnSpan],
+) -> (Vec<Directive>, Vec<Finding>) {
+    let mut dirs = Vec::new();
+    let mut bad = Vec::new();
+    let mut report = |line: u32, msg: String| {
+        bad.push(Finding {
+            file: rel.to_string(),
+            line,
+            rule: "bad-suppression".to_string(),
+            message: msg,
+        });
+    };
+    for c in comments {
+        let text = c.text.trim();
+        let Some(rest) = text.strip_prefix("c3o-lint:") else {
+            continue;
+        };
+        let rest = rest.trim_start();
+        let Some((name, args, justification)) = split_directive(rest) else {
+            report(
+                c.line,
+                "malformed c3o-lint directive — expected `c3o-lint: allow(<rule>) — <justification>`"
+                    .to_string(),
+            );
+            continue;
+        };
+        if justification.len() < 8 {
+            report(
+                c.line,
+                format!(
+                    "c3o-lint `{name}` suppression without a justification — write why the \
+                     finding is safe (a short sentence after an em dash)"
+                ),
+            );
+            continue;
+        }
+        match name.as_str() {
+            "allow" | "allow-fn" => {
+                if let Some(unknown) = args.iter().find(|r| !is_known_rule(r)) {
+                    report(c.line, format!("unknown rule `{unknown}` in c3o-lint allow"));
+                    continue;
+                }
+                if name == "allow" {
+                    dirs.push(Directive {
+                        line: c.line,
+                        kind: DirectiveKind::Allow { rules: args },
+                    });
+                } else {
+                    match attach_to_fn(c.line, fns) {
+                        Some(range) => dirs.push(Directive {
+                            line: c.line,
+                            kind: DirectiveKind::AllowFn { rules: args, range },
+                        }),
+                        None => report(
+                            c.line,
+                            "allow-fn directive is not followed by a `fn` item".to_string(),
+                        ),
+                    }
+                }
+            }
+            "holds" => {
+                if let Some(unknown) = args.iter().find(|a| !cfg.lock_classes.contains(a)) {
+                    report(
+                        c.line,
+                        format!("unknown lock class `{unknown}` in c3o-lint holds"),
+                    );
+                    continue;
+                }
+                match attach_to_fn(c.line, fns) {
+                    Some(range) => dirs.push(Directive {
+                        line: c.line,
+                        kind: DirectiveKind::Holds {
+                            classes: args,
+                            range,
+                        },
+                    }),
+                    None => report(
+                        c.line,
+                        "holds directive is not followed by a `fn` item".to_string(),
+                    ),
+                }
+            }
+            other => report(c.line, format!("unknown c3o-lint directive `{other}`")),
+        }
+    }
+    (dirs, bad)
+}
+
+/// Split `allow(rule-a, rule-b) — justification` into its parts.
+fn split_directive(s: &str) -> Option<(String, Vec<String>, String)> {
+    let open = s.find('(')?;
+    let close = s.find(')')?;
+    if close < open {
+        return None;
+    }
+    let name = s[..open].trim().to_string();
+    let args: Vec<String> = s[open + 1..close]
+        .split(',')
+        .map(|a| a.trim().to_string())
+        .filter(|a| !a.is_empty())
+        .collect();
+    if name.is_empty() || args.is_empty() {
+        return None;
+    }
+    // Justification: whatever follows the closing paren, with separator
+    // punctuation (dashes / em dashes / colons) stripped.
+    let just = s[close + 1..]
+        .trim_start_matches(|c: char| c == '-' || c == '—' || c == '–' || c == ':' || c.is_whitespace())
+        .trim()
+        .to_string();
+    Some((name, args, just))
+}
+
+/// The `fn` a fn-scoped directive at `line` governs: the first fn
+/// starting after `line` within the attachment window.
+fn attach_to_fn(line: u32, fns: &[FnSpan]) -> Option<LineRange> {
+    fns.iter()
+        .filter(|f| f.start > line && f.start - line <= FN_ATTACH_WINDOW)
+        .min_by_key(|f| f.start)
+        .map(|f| LineRange {
+            start: line,
+            end: f.end,
+        })
+}
+
+fn is_suppressed(f: &Finding, directives: &[Directive]) -> bool {
+    directives.iter().any(|d| match &d.kind {
+        DirectiveKind::Allow { rules } => {
+            rules.contains(&f.rule) && (d.line == f.line || d.line + 1 == f.line)
+        }
+        DirectiveKind::AllowFn { rules, range } => rules.contains(&f.rule) && range.contains(f.line),
+        DirectiveKind::Holds { .. } => false,
+    })
+}
+
+// ---------------------------------------------------------------------------
+// Structure passes: fn items, #[cfg(test)] regions
+// ---------------------------------------------------------------------------
+
+/// Token positions where an *item* `fn` keyword appears (`fn` in type
+/// position — `f: fn(u32) -> u32` — is excluded by its preceding token).
+fn is_item_fn(toks: &[Tok], i: usize) -> bool {
+    if !toks[i].is_ident("fn") {
+        return false;
+    }
+    match i.checked_sub(1).map(|j| &toks[j]) {
+        Some(prev) if prev.kind == TokKind::Punct => {
+            !matches!(prev.text.as_str(), "(" | "," | ":" | "<" | "=" | "->" | "&" | "|")
+        }
+        _ => true,
+    }
+}
+
+fn fn_ranges(toks: &[Tok]) -> Vec<FnSpan> {
+    let mut spans = Vec::new();
+    for i in 0..toks.len() {
+        if !is_item_fn(toks, i) {
+            continue;
+        }
+        let start = toks[i].line;
+        // Scan to the body `{` (or `;` for body-less trait methods).
+        let mut j = i + 1;
+        while j < toks.len() && !toks[j].is_punct("{") && !toks[j].is_punct(";") {
+            j += 1;
+        }
+        let end = if j < toks.len() && toks[j].is_punct("{") {
+            matching_brace(toks, j).map_or(toks[j].line, |k| toks[k].line)
+        } else if j < toks.len() {
+            toks[j].line
+        } else {
+            start
+        };
+        spans.push(FnSpan { start, end });
+    }
+    spans
+}
+
+/// Index of the `}` matching the `{` at `open`.
+fn matching_brace(toks: &[Tok], open: usize) -> Option<usize> {
+    let mut depth = 0i64;
+    for (k, t) in toks.iter().enumerate().skip(open) {
+        if t.is_punct("{") {
+            depth += 1;
+        } else if t.is_punct("}") {
+            depth -= 1;
+            if depth == 0 {
+                return Some(k);
+            }
+        }
+    }
+    None
+}
+
+/// Line ranges covered by `#[cfg(test)]` / `#[test]` items.
+fn test_regions(toks: &[Tok]) -> Vec<LineRange> {
+    let mut regions = Vec::new();
+    let mut i = 0usize;
+    while i + 1 < toks.len() {
+        if !(toks[i].is_punct("#") && toks[i + 1].is_punct("[")) {
+            i += 1;
+            continue;
+        }
+        let Some(close) = matching_bracket(toks, i + 1) else {
+            break;
+        };
+        let idents: Vec<&str> = toks[i + 1..close]
+            .iter()
+            .filter(|t| t.kind == TokKind::Ident)
+            .map(|t| t.text.as_str())
+            .collect();
+        let is_test_attr = idents.contains(&"test")
+            && !idents.contains(&"not") // #[cfg(not(test))] is NON-test code
+            && matches!(idents.first(), Some(&"cfg") | Some(&"test"));
+        if !is_test_attr {
+            i = close + 1;
+            continue;
+        }
+        let start_line = toks[i].line;
+        // Skip any further attributes, then span the item itself.
+        let mut j = close + 1;
+        while j + 1 < toks.len() && toks[j].is_punct("#") && toks[j + 1].is_punct("[") {
+            match matching_bracket(toks, j + 1) {
+                Some(c) => j = c + 1,
+                None => break,
+            }
+        }
+        while j < toks.len() && !toks[j].is_punct("{") && !toks[j].is_punct(";") {
+            j += 1;
+        }
+        let (end_line, next) = if j < toks.len() && toks[j].is_punct("{") {
+            match matching_brace(toks, j) {
+                Some(k) => (toks[k].line, k + 1),
+                None => (toks[toks.len() - 1].line, toks.len()),
+            }
+        } else if j < toks.len() {
+            (toks[j].line, j + 1)
+        } else {
+            (toks[toks.len() - 1].line, toks.len())
+        };
+        regions.push(LineRange {
+            start: start_line,
+            end: end_line,
+        });
+        i = next;
+    }
+    regions
+}
+
+/// Index of the `]` matching the `[` at `open`.
+fn matching_bracket(toks: &[Tok], open: usize) -> Option<usize> {
+    let mut depth = 0i64;
+    for (k, t) in toks.iter().enumerate().skip(open) {
+        if t.is_punct("[") {
+            depth += 1;
+        } else if t.is_punct("]") {
+            depth -= 1;
+            if depth == 0 {
+                return Some(k);
+            }
+        }
+    }
+    None
+}
+
+// ---------------------------------------------------------------------------
+// Rule 1: hash-iter
+// ---------------------------------------------------------------------------
+
+fn rule_hash_iter(rel: &str, module: &str, toks: &[Tok], out: &mut Vec<Finding>) {
+    for t in toks {
+        if t.is_ident("HashMap") || t.is_ident("HashSet") {
+            out.push(Finding {
+                file: rel.to_string(),
+                line: t.line,
+                rule: "hash-iter".to_string(),
+                message: format!(
+                    "`{}` in deterministic-path module `{module}` — iteration order breaks \
+                     bitwise convergence; use `BTreeMap`/`BTreeSet` or a sorted `Vec`",
+                    t.text
+                ),
+            });
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Rule 2: float-order
+// ---------------------------------------------------------------------------
+
+/// Tokens scanned backwards from a `.sum()`/`.product()` call for float
+/// evidence when there is no turbofish to decide the element type.
+const FLOAT_EVIDENCE_BACK: usize = 60;
+const FLOAT_EVIDENCE_FWD: usize = 12;
+
+fn is_float_evidence(t: &Tok) -> bool {
+    t.kind == TokKind::Float || t.is_ident("f32") || t.is_ident("f64")
+}
+
+fn rule_float_order(rel: &str, toks: &[Tok], out: &mut Vec<Finding>) {
+    for i in 0..toks.len() {
+        let t = &toks[i];
+        let after_dot = i > 0 && toks[i - 1].is_punct(".");
+        if !after_dot || t.kind != TokKind::Ident {
+            continue;
+        }
+        let flagged = match t.text.as_str() {
+            "sum" | "product" => reduction_is_float(toks, i),
+            "fold" => fold_init_is_float(toks, i),
+            _ => false,
+        };
+        if flagged {
+            out.push(Finding {
+                file: rel.to_string(),
+                line: t.line,
+                rule: "float-order".to_string(),
+                message: format!(
+                    "unannotated float reduction `.{}(...)` — summation order changes bits on \
+                     the deterministic path; keep a fixed-order loop or suppress with the \
+                     ordering argument written out",
+                    t.text
+                ),
+            });
+        }
+    }
+}
+
+/// `.sum::<f64>()` is float; `.sum::<usize>()` is not; `.sum()` falls
+/// back to a token window scan for float evidence.
+fn reduction_is_float(toks: &[Tok], i: usize) -> bool {
+    if i + 2 < toks.len() && toks[i + 1].is_punct("::") && toks[i + 2].is_punct("<") {
+        let mut depth = 1i64;
+        let mut j = i + 3;
+        while j < toks.len() && depth > 0 {
+            if toks[j].is_punct("<") {
+                depth += 1;
+            } else if toks[j].is_punct(">") {
+                depth -= 1;
+            } else if depth > 0 && (toks[j].is_ident("f32") || toks[j].is_ident("f64")) {
+                return true;
+            }
+            j += 1;
+        }
+        return false;
+    }
+    let lo = i.saturating_sub(FLOAT_EVIDENCE_BACK);
+    let hi = (i + FLOAT_EVIDENCE_FWD).min(toks.len());
+    toks[lo..hi].iter().any(is_float_evidence)
+}
+
+/// `.fold(init, f)` — float iff the init expression (first argument)
+/// contains a float literal or an `f32`/`f64` token.
+fn fold_init_is_float(toks: &[Tok], i: usize) -> bool {
+    if i + 1 >= toks.len() || !toks[i + 1].is_punct("(") {
+        return false;
+    }
+    let mut depth = 1i64;
+    let mut j = i + 2;
+    while j < toks.len() && depth > 0 {
+        let t = &toks[j];
+        if t.is_punct("(") || t.is_punct("[") || t.is_punct("{") {
+            depth += 1;
+        } else if t.is_punct(")") || t.is_punct("]") || t.is_punct("}") {
+            depth -= 1;
+        } else if depth == 1 && t.is_punct(",") {
+            return false; // end of the init argument, no float evidence
+        } else if is_float_evidence(t) {
+            return true;
+        }
+        j += 1;
+    }
+    false
+}
+
+// ---------------------------------------------------------------------------
+// Rule 3: no-panic-serving
+// ---------------------------------------------------------------------------
+
+const PANIC_METHODS: &[&str] = &["unwrap", "expect", "unwrap_err", "expect_err"];
+const PANIC_MACROS: &[&str] = &["panic", "todo", "unimplemented", "unreachable"];
+
+fn rule_no_panic_serving(rel: &str, toks: &[Tok], out: &mut Vec<Finding>) {
+    let mut push = |line: u32, message: String| {
+        out.push(Finding {
+            file: rel.to_string(),
+            line,
+            rule: "no-panic-serving".to_string(),
+            message,
+        });
+    };
+    for i in 0..toks.len() {
+        let t = &toks[i];
+        if t.kind == TokKind::Ident
+            && PANIC_METHODS.contains(&t.text.as_str())
+            && i > 0
+            && toks[i - 1].is_punct(".")
+            && i + 1 < toks.len()
+            && toks[i + 1].is_punct("(")
+        {
+            push(
+                t.line,
+                format!(
+                    "`.{}()` in serving-path non-test code — the typed `ApiError` taxonomy is \
+                     the only failure channel; return an error instead",
+                    t.text
+                ),
+            );
+            continue;
+        }
+        if t.kind == TokKind::Ident
+            && PANIC_MACROS.contains(&t.text.as_str())
+            && i + 1 < toks.len()
+            && toks[i + 1].is_punct("!")
+        {
+            push(
+                t.line,
+                format!(
+                    "`{}!` in serving-path non-test code — a panic here is an outage; return a \
+                     typed `ApiError` instead",
+                    t.text
+                ),
+            );
+            continue;
+        }
+        // Index expression: `x[i]`, `x()[i]`, `x?[i]` — but not
+        // attributes `#[...]`, macro brackets `vec![...]`, or array
+        // literals/types (whose `[` follows punctuation).
+        if t.is_punct("[") && i > 0 {
+            let prev = &toks[i - 1];
+            let indexing = prev.kind == TokKind::Ident && !is_keyword_before_bracket(&prev.text)
+                || prev.is_punct(")")
+                || prev.is_punct("]")
+                || prev.is_punct("?");
+            if indexing {
+                push(
+                    t.line,
+                    "slice/map index in serving-path non-test code — indexing panics out of \
+                     bounds; use `.get()`/`.get_mut()` or document the in-bounds invariant \
+                     with a suppression"
+                        .to_string(),
+                );
+            }
+        }
+    }
+}
+
+/// Keywords that can directly precede `[` without forming an index
+/// expression (`return [..]`, `in [..]`, `else [..]` etc. are array
+/// literals / iterator sources, not indexing).
+fn is_keyword_before_bracket(word: &str) -> bool {
+    matches!(
+        word,
+        "return" | "in" | "else" | "match" | "if" | "break" | "mut" | "dyn" | "as" | "impl"
+    )
+}
+
+// ---------------------------------------------------------------------------
+// Rule 4: no-anyhow-public
+// ---------------------------------------------------------------------------
+
+fn rule_no_anyhow_public(rel: &str, module: &str, toks: &[Tok], out: &mut Vec<Finding>) {
+    let imports_anyhow_result = imports_anyhow_result(toks);
+    let mut i = 0usize;
+    while i < toks.len() {
+        if !toks[i].is_ident("pub") {
+            i += 1;
+            continue;
+        }
+        // `pub(crate)` / `pub(super)` surfaces are internal — skip.
+        if i + 1 < toks.len() && toks[i + 1].is_punct("(") {
+            i += 1;
+            continue;
+        }
+        // Allow qualifiers between `pub` and `fn`.
+        let mut j = i + 1;
+        while j < toks.len()
+            && (toks[j].is_ident("unsafe")
+                || toks[j].is_ident("const")
+                || toks[j].is_ident("async")
+                || toks[j].is_ident("extern")
+                || toks[j].kind == TokKind::Str)
+        {
+            j += 1;
+        }
+        if j >= toks.len() || !toks[j].is_ident("fn") {
+            i += 1;
+            continue;
+        }
+        // Signature: everything to the body `{` or the trailing `;`.
+        let mut end = j + 1;
+        while end < toks.len() && !toks[end].is_punct("{") && !toks[end].is_punct(";") {
+            end += 1;
+        }
+        let sig = &toks[j..end];
+        if let Some(line) = anyhow_in_signature(sig, imports_anyhow_result) {
+            out.push(Finding {
+                file: rel.to_string(),
+                line,
+                rule: "no-anyhow-public".to_string(),
+                message: format!(
+                    "`anyhow` in a `pub fn` signature in module `{module}` — public failures \
+                     must speak the typed `ApiError` taxonomy (fold internal errors in via \
+                     `ApiError::internal`/`ApiError::store` at the boundary)"
+                ),
+            });
+        }
+        i = end;
+    }
+}
+
+/// Does any `use` statement bring `anyhow`'s `Result` alias into scope?
+fn imports_anyhow_result(toks: &[Tok]) -> bool {
+    let mut i = 0usize;
+    while i < toks.len() {
+        if !toks[i].is_ident("use") {
+            i += 1;
+            continue;
+        }
+        let mut j = i + 1;
+        let mut saw_anyhow = false;
+        let mut saw_result = false;
+        while j < toks.len() && !toks[j].is_punct(";") {
+            saw_anyhow |= toks[j].is_ident("anyhow");
+            saw_result |= toks[j].is_ident("Result");
+            j += 1;
+        }
+        if saw_anyhow && saw_result {
+            return true;
+        }
+        i = j + 1;
+    }
+    false
+}
+
+/// Line of the first anyhow occurrence in a `pub fn` signature:
+/// an explicit `anyhow` path segment, or — when the file imports
+/// `anyhow::Result` — an unqualified single-generic `Result<T>`
+/// (the alias form; `Result<T, E>` with an explicit error is fine).
+fn anyhow_in_signature(sig: &[Tok], imports_anyhow_result: bool) -> Option<u32> {
+    for (k, t) in sig.iter().enumerate() {
+        if t.is_ident("anyhow") {
+            return Some(t.line);
+        }
+        if imports_anyhow_result
+            && t.is_ident("Result")
+            && !(k > 0 && sig[k - 1].is_punct("::"))
+            && k + 1 < sig.len()
+            && sig[k + 1].is_punct("<")
+            && generic_arg_count(&sig[k + 1..]) == 1
+        {
+            return Some(t.line);
+        }
+    }
+    None
+}
+
+/// Number of top-level generic arguments in `<...>` starting at the `<`.
+fn generic_arg_count(toks: &[Tok]) -> usize {
+    let mut angle = 0i64;
+    let mut group = 0i64; // (), [] nesting
+    let mut args = 0usize;
+    let mut saw_any = false;
+    for t in toks {
+        if t.is_punct("<") {
+            angle += 1;
+            continue;
+        }
+        if t.is_punct(">") {
+            angle -= 1;
+            if angle == 0 {
+                return if saw_any { args + 1 } else { 0 };
+            }
+            continue;
+        }
+        if t.is_punct("(") || t.is_punct("[") {
+            group += 1;
+        } else if t.is_punct(")") || t.is_punct("]") {
+            group -= 1;
+        } else if t.is_punct(",") && angle == 1 && group == 0 {
+            args += 1;
+            continue;
+        }
+        if angle >= 1 {
+            saw_any = true;
+        }
+    }
+    if saw_any {
+        args + 1
+    } else {
+        0
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Rule 5: lock-discipline
+// ---------------------------------------------------------------------------
+
+/// One lexically-held guard.
+#[derive(Debug)]
+struct HeldGuard {
+    class: String,
+    /// `let`-binding name, when bound (released by `drop(name)` too).
+    name: Option<String>,
+    /// Brace depth at acquisition; released when that block closes.
+    depth: i64,
+    /// Paren/bracket nesting at acquisition — a temporary dies at the
+    /// next `,` no deeper than this (match arms end in `,`, not `;`).
+    group: i64,
+    /// Temporary guard (no `let`): released at the next `;` or
+    /// arm-terminating `,`.
+    stmt: bool,
+}
+
+fn rule_lock_discipline(
+    cfg: &LintConfig,
+    rel: &str,
+    toks: &[Tok],
+    directives: &[Directive],
+    out: &mut Vec<Finding>,
+) {
+    if cfg.lock_classes.is_empty() {
+        return;
+    }
+    let holds: Vec<(&Vec<String>, LineRange)> = directives
+        .iter()
+        .filter_map(|d| match &d.kind {
+            DirectiveKind::Holds { classes, range } => Some((classes, *range)),
+            _ => None,
+        })
+        .collect();
+    let mut held: Vec<HeldGuard> = Vec::new();
+    let mut depth = 0i64;
+    let mut group = 0i64;
+    let mut i = 0usize;
+    while i < toks.len() {
+        let t = &toks[i];
+        if t.is_punct("{") {
+            depth += 1;
+        } else if t.is_punct("}") {
+            held.retain(|g| g.depth < depth);
+            depth -= 1;
+        } else if t.is_punct("(") || t.is_punct("[") {
+            group += 1;
+        } else if t.is_punct(")") || t.is_punct("]") {
+            group -= 1;
+        } else if t.is_punct(";") {
+            held.retain(|g| !(g.stmt && g.depth >= depth));
+        } else if t.is_punct(",") {
+            // End of a match arm (or of the expression holding the
+            // temporary): a `,` at or above the guard's nesting level
+            // ends its statement even without a `;`.
+            held.retain(|g| !(g.stmt && g.depth >= depth && g.group >= group));
+        } else if t.is_ident("drop") && i + 2 < toks.len() && toks[i + 1].is_punct("(") {
+            let name = toks[i + 2].text.clone();
+            held.retain(|g| g.name.as_deref() != Some(name.as_str()));
+        } else if is_lock_acquisition(toks, i) {
+            if let Some(class) = classify_receiver(cfg, toks, i) {
+                let line = t.line;
+                // Classes asserted held for this whole fn by `holds()`.
+                let annotated: Vec<&String> = holds
+                    .iter()
+                    .filter(|(_, r)| r.contains(line))
+                    .flat_map(|(cs, _)| cs.iter())
+                    .collect();
+                let outer = held
+                    .iter()
+                    .map(|g| g.class.as_str())
+                    .chain(annotated.iter().map(|c| c.as_str()));
+                let mut violation = None;
+                for h in outer {
+                    if h == class {
+                        violation = Some(format!(
+                            "lock class `{class}` acquired while a `{class}` guard is already \
+                             held — self-deadlock"
+                        ));
+                        break;
+                    }
+                    let allowed = cfg
+                        .lock_order
+                        .iter()
+                        .any(|(o, inn)| o == h && *inn == class);
+                    if !allowed {
+                        violation = Some(format!(
+                            "lock class `{class}` acquired while holding `{h}` — the pair is \
+                             not in the declared lock order (lint.toml \
+                             [rules.lock-discipline] order)"
+                        ));
+                        break;
+                    }
+                }
+                if let Some(message) = violation {
+                    out.push(Finding {
+                        file: rel.to_string(),
+                        line,
+                        rule: "lock-discipline".to_string(),
+                        message,
+                    });
+                }
+                let (stmt, name) = binding_of(toks, i);
+                held.push(HeldGuard {
+                    class: class.to_string(),
+                    name,
+                    depth,
+                    group,
+                    stmt,
+                });
+            }
+        }
+        i += 1;
+    }
+}
+
+/// `.lock()`, `.read()`, `.write()` and the poison-recovering
+/// `*_unpoisoned()` extension methods from `util::sync` —
+/// zero-argument calls only, so `file.write(buf)` (io) never matches.
+fn is_lock_acquisition(toks: &[Tok], i: usize) -> bool {
+    let t = &toks[i];
+    t.kind == TokKind::Ident
+        && matches!(
+            t.text.as_str(),
+            "lock" | "read" | "write" | "lock_unpoisoned" | "read_unpoisoned" | "write_unpoisoned"
+        )
+        && i > 0
+        && toks[i - 1].is_punct(".")
+        && i + 2 < toks.len()
+        && toks[i + 1].is_punct("(")
+        && toks[i + 2].is_punct(")")
+}
+
+/// Classify the receiver chain of an acquisition at token `i` (the
+/// `lock`/`read`/`write` ident). Walks backwards, skipping one
+/// `[...]`/`(...)` group at a time, and classifies by the *nearest*
+/// chain identifier matching a configured class substring — so
+/// `self.snapshots[&shard.job()].write()` classifies as `snapshot`
+/// (the `shard` inside the index key is not the receiver).
+fn classify_receiver<'a>(cfg: &'a LintConfig, toks: &[Tok], i: usize) -> Option<&'a str> {
+    let mut j = i.checked_sub(2)?; // skip the `.` before lock/read/write
+    loop {
+        // Skip a trailing index/call group: `...[k]` or `...(x)`.
+        while toks[j].is_punct("]") || toks[j].is_punct(")") {
+            let open = if toks[j].is_punct("]") { "[" } else { "(" };
+            let close = &toks[j].text;
+            let mut d = 1i64;
+            loop {
+                j = j.checked_sub(1)?;
+                if toks[j].kind == TokKind::Punct && toks[j].text == *close {
+                    d += 1;
+                } else if toks[j].is_punct(open) {
+                    d -= 1;
+                    if d == 0 {
+                        break;
+                    }
+                }
+            }
+            j = j.checked_sub(1)?;
+        }
+        if toks[j].kind != TokKind::Ident {
+            return None;
+        }
+        let ident = toks[j].text.to_lowercase();
+        if let Some(class) = cfg
+            .lock_classes
+            .iter()
+            .find(|c| ident.contains(c.as_str()))
+        {
+            return Some(class);
+        }
+        // Continue down the chain (`self.shared.metrics` — keep walking
+        // past `shared`/`self` until something classifies).
+        let prev = j.checked_sub(1)?;
+        if toks[prev].is_punct(".") || toks[prev].is_punct("::") {
+            j = prev.checked_sub(1)?;
+        } else {
+            return None;
+        }
+    }
+}
+
+/// Is the acquisition at token `i` part of a `let` statement (a
+/// block-held guard), and if so what is the binding name?
+fn binding_of(toks: &[Tok], i: usize) -> (bool, Option<String>) {
+    let mut s = i;
+    while s > 0 {
+        let t = &toks[s - 1];
+        if t.is_punct(";") || t.is_punct("{") || t.is_punct("}") {
+            break;
+        }
+        s -= 1;
+    }
+    if s < toks.len() && toks[s].is_ident("let") {
+        let mut k = s + 1;
+        if k < toks.len() && toks[k].is_ident("mut") {
+            k += 1;
+        }
+        let name = toks.get(k).filter(|t| t.kind == TokKind::Ident).map(|t| t.text.clone());
+        (false, name)
+    } else {
+        (true, None)
+    }
+}

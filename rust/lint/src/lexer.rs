@@ -1,0 +1,449 @@
+//! A lightweight Rust tokenizer — just enough lexical structure for the
+//! invariant rules: identifiers, literals, punctuation (with `::`,
+//! `->`, `=>` joined), line numbers, and the text of `//` comments (the
+//! carrier for `c3o-lint:` suppression directives).
+//!
+//! Deliberately NOT a parser: no expression trees, no type resolution.
+//! Every rule is written against token patterns plus brace matching,
+//! which keeps the analyzer dependency-free and the heuristics easy to
+//! audit (each rule documents its exact trigger pattern in README.md).
+
+/// Kind of one lexed token.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TokKind {
+    /// Identifier or keyword (the lexer does not distinguish).
+    Ident,
+    /// Lifetime (`'a`) — kept distinct so char literals never leak.
+    Lifetime,
+    /// Integer literal (including hex/octal/binary and int suffixes).
+    Int,
+    /// Float literal (contains `.`, an exponent, or an `f32`/`f64` suffix).
+    Float,
+    /// String literal (regular, raw, byte — contents dropped).
+    Str,
+    /// Char literal.
+    Char,
+    /// Punctuation. Multi-char tokens are only `::`, `->`, `=>`;
+    /// everything else (including `>` of `>>`) is one char per token.
+    Punct,
+}
+
+/// One token with its source line (1-based).
+#[derive(Debug, Clone)]
+pub struct Tok {
+    pub kind: TokKind,
+    pub text: String,
+    pub line: u32,
+}
+
+impl Tok {
+    pub fn is_ident(&self, s: &str) -> bool {
+        self.kind == TokKind::Ident && self.text == s
+    }
+    pub fn is_punct(&self, s: &str) -> bool {
+        self.kind == TokKind::Punct && self.text == s
+    }
+}
+
+/// A `//` comment, preserved for directive parsing.
+#[derive(Debug, Clone)]
+pub struct Comment {
+    /// Text after the `//` (or `///`, `//!`) marker, untrimmed.
+    pub text: String,
+    pub line: u32,
+    /// True when at least one token precedes the comment on its line
+    /// (a *trailing* comment, e.g. `let x = m.lock(); // c3o-lint: ...`).
+    pub trailing: bool,
+}
+
+/// Lex one source file. Never fails: unterminated constructs consume to
+/// end of input (the real toolchain rejects such files anyway).
+pub fn lex(src: &str) -> (Vec<Tok>, Vec<Comment>) {
+    let b: Vec<char> = src.chars().collect();
+    let mut toks: Vec<Tok> = Vec::new();
+    let mut comments: Vec<Comment> = Vec::new();
+    let mut i = 0usize;
+    let mut line: u32 = 1;
+    let mut line_had_token = false;
+
+    while i < b.len() {
+        let c = b[i];
+        if c == '\n' {
+            line += 1;
+            line_had_token = false;
+            i += 1;
+            continue;
+        }
+        if c.is_whitespace() {
+            i += 1;
+            continue;
+        }
+        // Line comment (also doc comments).
+        if c == '/' && i + 1 < b.len() && b[i + 1] == '/' {
+            let mut j = i + 2;
+            while j < b.len() && b[j] == '/' {
+                j += 1; // swallow the doc-comment marker
+            }
+            if j < b.len() && b[j] == '!' {
+                j += 1;
+            }
+            let start = j;
+            while j < b.len() && b[j] != '\n' {
+                j += 1;
+            }
+            comments.push(Comment {
+                text: b[start..j].iter().collect(),
+                line,
+                trailing: line_had_token,
+            });
+            i = j;
+            continue;
+        }
+        // Block comment (nested).
+        if c == '/' && i + 1 < b.len() && b[i + 1] == '*' {
+            let mut depth = 1;
+            let mut j = i + 2;
+            while j < b.len() && depth > 0 {
+                if b[j] == '\n' {
+                    line += 1;
+                    line_had_token = false;
+                } else if b[j] == '/' && j + 1 < b.len() && b[j + 1] == '*' {
+                    depth += 1;
+                    j += 1;
+                } else if b[j] == '*' && j + 1 < b.len() && b[j + 1] == '/' {
+                    depth -= 1;
+                    j += 1;
+                }
+                j += 1;
+            }
+            i = j;
+            continue;
+        }
+        // Raw strings / raw idents / byte strings: r"..."  r#"..."#  r#ident  b"..."  br#"..."#
+        if (c == 'r' || c == 'b') && raw_or_byte_string_start(&b, i) {
+            let (j, newlines) = skip_string_like(&b, i);
+            toks.push(Tok {
+                kind: TokKind::Str,
+                text: String::new(),
+                line,
+            });
+            line += newlines;
+            i = j;
+            line_had_token = true;
+            continue;
+        }
+        if c == 'r' && i + 1 < b.len() && b[i + 1] == '#' && i + 2 < b.len() && is_ident_start(b[i + 2]) {
+            // raw identifier r#foo
+            let mut j = i + 2;
+            while j < b.len() && is_ident_continue(b[j]) {
+                j += 1;
+            }
+            toks.push(Tok {
+                kind: TokKind::Ident,
+                text: b[i + 2..j].iter().collect(),
+                line,
+            });
+            i = j;
+            line_had_token = true;
+            continue;
+        }
+        if is_ident_start(c) {
+            let mut j = i + 1;
+            while j < b.len() && is_ident_continue(b[j]) {
+                j += 1;
+            }
+            toks.push(Tok {
+                kind: TokKind::Ident,
+                text: b[i..j].iter().collect(),
+                line,
+            });
+            i = j;
+            line_had_token = true;
+            continue;
+        }
+        if c.is_ascii_digit() {
+            let (j, kind) = lex_number(&b, i);
+            toks.push(Tok {
+                kind,
+                text: b[i..j].iter().collect(),
+                line,
+            });
+            i = j;
+            line_had_token = true;
+            continue;
+        }
+        if c == '"' {
+            let (j, newlines) = skip_string_like(&b, i);
+            toks.push(Tok {
+                kind: TokKind::Str,
+                text: String::new(),
+                line,
+            });
+            line += newlines;
+            i = j;
+            line_had_token = true;
+            continue;
+        }
+        if c == '\'' {
+            // Lifetime vs char literal: 'a followed by a non-quote is a
+            // lifetime; anything else ('x', '\n', '\'') is a char.
+            if i + 1 < b.len()
+                && is_ident_start(b[i + 1])
+                && !(i + 2 < b.len() && b[i + 2] == '\'')
+            {
+                let mut j = i + 1;
+                while j < b.len() && is_ident_continue(b[j]) {
+                    j += 1;
+                }
+                toks.push(Tok {
+                    kind: TokKind::Lifetime,
+                    text: b[i + 1..j].iter().collect(),
+                    line,
+                });
+                i = j;
+            } else {
+                let mut j = i + 1;
+                if j < b.len() && b[j] == '\\' {
+                    j += 2; // escape + escaped char
+                } else {
+                    j += 1;
+                }
+                while j < b.len() && b[j] != '\'' {
+                    j += 1; // e.g. '\u{1f600}'
+                }
+                toks.push(Tok {
+                    kind: TokKind::Char,
+                    text: String::new(),
+                    line,
+                });
+                i = j + 1;
+            }
+            line_had_token = true;
+            continue;
+        }
+        // Punctuation; join only ::, ->, =>.
+        let two: String = b[i..(i + 2).min(b.len())].iter().collect();
+        let text = if two == "::" || two == "->" || two == "=>" {
+            i += 2;
+            two
+        } else {
+            i += 1;
+            c.to_string()
+        };
+        toks.push(Tok {
+            kind: TokKind::Punct,
+            text,
+            line,
+        });
+        line_had_token = true;
+    }
+    (toks, comments)
+}
+
+fn is_ident_start(c: char) -> bool {
+    c.is_alphabetic() || c == '_'
+}
+
+fn is_ident_continue(c: char) -> bool {
+    c.is_alphanumeric() || c == '_'
+}
+
+/// Does position `i` (at `r` or `b`) start a raw/byte string?
+fn raw_or_byte_string_start(b: &[char], i: usize) -> bool {
+    let mut j = i;
+    if b[j] == 'b' {
+        j += 1;
+        if j < b.len() && b[j] == 'r' {
+            j += 1;
+        }
+    } else if b[j] == 'r' {
+        j += 1;
+    } else {
+        return false;
+    }
+    while j < b.len() && b[j] == '#' {
+        j += 1;
+    }
+    j < b.len() && b[j] == '"'
+}
+
+/// Skip a string literal starting at `i` (regular `"`, raw `r#"`, byte
+/// `b"`). Returns (index past the literal, newline count inside it).
+fn skip_string_like(b: &[char], i: usize) -> (usize, u32) {
+    let mut j = i;
+    let mut hashes = 0usize;
+    let mut raw = false;
+    if b[j] == 'b' {
+        j += 1;
+    }
+    if j < b.len() && b[j] == 'r' {
+        raw = true;
+        j += 1;
+        while j < b.len() && b[j] == '#' {
+            hashes += 1;
+            j += 1;
+        }
+    }
+    debug_assert!(j < b.len() && b[j] == '"');
+    j += 1; // opening quote
+    let mut newlines = 0u32;
+    while j < b.len() {
+        if b[j] == '\n' {
+            newlines += 1;
+            j += 1;
+            continue;
+        }
+        if !raw && b[j] == '\\' {
+            // an escaped newline (line-continuation `\` at end of line)
+            // still advances the source line
+            if j + 1 < b.len() && b[j + 1] == '\n' {
+                newlines += 1;
+            }
+            j += 2;
+            continue;
+        }
+        if b[j] == '"' {
+            if raw {
+                // need `"` followed by `hashes` hash marks
+                let mut k = j + 1;
+                let mut seen = 0usize;
+                while k < b.len() && b[k] == '#' && seen < hashes {
+                    k += 1;
+                    seen += 1;
+                }
+                if seen == hashes {
+                    return (k, newlines);
+                }
+                j += 1;
+                continue;
+            }
+            return (j + 1, newlines);
+        }
+        j += 1;
+    }
+    (j, newlines)
+}
+
+/// Lex a numeric literal starting at a digit. Float iff it has a
+/// fractional part (`1.5`), a decimal exponent (`1e3`), or an explicit
+/// `f32`/`f64` suffix — `1..2` and `1.max(2)` stay integers.
+fn lex_number(b: &[char], i: usize) -> (usize, TokKind) {
+    let mut j = i;
+    let mut float = false;
+    if b[j] == '0' && j + 1 < b.len() && (b[j + 1] == 'x' || b[j + 1] == 'o' || b[j + 1] == 'b') {
+        j += 2;
+        while j < b.len() && (b[j].is_ascii_alphanumeric() || b[j] == '_') {
+            j += 1;
+        }
+        return (j, TokKind::Int);
+    }
+    while j < b.len() && (b[j].is_ascii_digit() || b[j] == '_') {
+        j += 1;
+    }
+    if j < b.len() && b[j] == '.' && j + 1 < b.len() && b[j + 1].is_ascii_digit() {
+        float = true;
+        j += 1;
+        while j < b.len() && (b[j].is_ascii_digit() || b[j] == '_') {
+            j += 1;
+        }
+    } else if j < b.len() && b[j] == '.' && !(j + 1 < b.len() && (b[j + 1] == '.' || is_ident_start(b[j + 1]))) {
+        // trailing-dot float like `1.`
+        float = true;
+        j += 1;
+    }
+    if j < b.len() && (b[j] == 'e' || b[j] == 'E') {
+        let mut k = j + 1;
+        if k < b.len() && (b[k] == '+' || b[k] == '-') {
+            k += 1;
+        }
+        if k < b.len() && b[k].is_ascii_digit() {
+            float = true;
+            j = k;
+            while j < b.len() && (b[j].is_ascii_digit() || b[j] == '_') {
+                j += 1;
+            }
+        }
+    }
+    // suffix (u32, i64, f32, usize, ...)
+    let sfx_start = j;
+    while j < b.len() && is_ident_continue(b[j]) {
+        j += 1;
+    }
+    let sfx: String = b[sfx_start..j].iter().collect();
+    if sfx == "f32" || sfx == "f64" {
+        float = true;
+    }
+    (j, if float { TokKind::Float } else { TokKind::Int })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn kinds(src: &str) -> Vec<(TokKind, String)> {
+        lex(src).0.into_iter().map(|t| (t.kind, t.text)).collect()
+    }
+
+    #[test]
+    fn numbers_floats_vs_ints() {
+        let ks = kinds("1 1.5 1e3 0x1E 1..2 1.max(2) 3f64 4u32");
+        let floats: Vec<&str> = ks
+            .iter()
+            .filter(|(k, _)| *k == TokKind::Float)
+            .map(|(_, t)| t.as_str())
+            .collect();
+        assert_eq!(floats, vec!["1.5", "1e3", "3f64"]);
+        assert!(ks.iter().any(|(k, t)| *k == TokKind::Int && t == "0x1E"));
+    }
+
+    #[test]
+    fn lifetimes_are_not_chars() {
+        let ks = kinds("fn f<'a>(x: &'a str) { let c = 'x'; }");
+        assert!(ks.iter().any(|(k, t)| *k == TokKind::Lifetime && t == "a"));
+        assert_eq!(ks.iter().filter(|(k, _)| *k == TokKind::Char).count(), 1);
+    }
+
+    #[test]
+    fn comments_captured_with_trailing_flag() {
+        let (_, cs) = lex("let x = 1; // trailing\n// leading\nlet y = 2;");
+        assert_eq!(cs.len(), 2);
+        assert!(cs[0].trailing);
+        assert!(!cs[1].trailing);
+        assert_eq!(cs[1].text.trim(), "leading");
+    }
+
+    #[test]
+    fn raw_strings_and_nested_block_comments() {
+        let (toks, cs) = lex("let s = r#\"has \"quotes\" and // not a comment\"#; /* a /* b */ c */ x");
+        assert!(cs.is_empty());
+        assert!(toks.iter().any(|t| t.is_ident("x")));
+        assert_eq!(toks.iter().filter(|t| t.kind == TokKind::Str).count(), 1);
+    }
+
+    #[test]
+    fn multiline_string_advances_lines() {
+        let (toks, _) = lex("let a = \"x\ny\";\nlet b = 1;");
+        let b_tok = toks.iter().find(|t| t.is_ident("b")).unwrap();
+        assert_eq!(b_tok.line, 3);
+    }
+
+    #[test]
+    fn escaped_newline_in_string_advances_lines() {
+        // a line-continuation `\` swallows the newline lexically, but
+        // the token after the string is still on source line 3
+        let (toks, _) = lex("let a = \"x \\\n y\";\nlet b = 1;");
+        let b_tok = toks.iter().find(|t| t.is_ident("b")).unwrap();
+        assert_eq!(b_tok.line, 3);
+    }
+
+    #[test]
+    fn joined_punct() {
+        let ks = kinds("a::b -> c => d >> e");
+        let puncts: Vec<&str> = ks
+            .iter()
+            .filter(|(k, _)| *k == TokKind::Punct)
+            .map(|(_, t)| t.as_str())
+            .collect();
+        assert_eq!(puncts, vec!["::", "->", "=>", ">", ">"]);
+    }
+}

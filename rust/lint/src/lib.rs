@@ -1,0 +1,77 @@
+//! `c3o-lint` — a repo-specific static-analysis pass over the c3o
+//! source tree.
+//!
+//! The collaborative premise of the reproduced paper rests on *bitwise*
+//! guarantees (converged peers train identical models; coalesced
+//! batches equal sequential serving; cached fits equal from-scratch
+//! fits), and the serving stack adds panic-freedom and a typed error
+//! taxonomy on top. Property tests enforce those invariants
+//! dynamically; this crate pins them at the source level with five
+//! zone-aware lexical rules. See `README.md` for the rule catalogue,
+//! the zone map, and the suppression grammar.
+//!
+//! Library layout:
+//! * [`lexer`] — the dependency-free Rust tokenizer.
+//! * [`config`] — `lint.toml` (zones, rule tables, lock order).
+//! * [`engine`] — the rules + suppression handling.
+
+pub mod config;
+pub mod engine;
+pub mod lexer;
+
+pub use config::{LintConfig, Zone, RULES};
+pub use engine::{scan_source, scan_tree, Finding, ScanResult};
+
+/// Escape a string for inclusion in a JSON string literal.
+pub fn json_escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() + 2);
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\t' => out.push_str("\\t"),
+            '\r' => out.push_str("\\r"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+/// Render a scan result as the `--json` document.
+pub fn to_json(result: &ScanResult, list_suppressed: bool) -> String {
+    let mut out = String::from("{\n");
+    out.push_str(&format!(
+        "  \"files_scanned\": {},\n  \"suppressed\": {},\n",
+        result.files_scanned,
+        result.suppressed.len()
+    ));
+    let render = |findings: &[Finding]| -> String {
+        let items: Vec<String> = findings
+            .iter()
+            .map(|f| {
+                format!(
+                    "    {{\"file\": \"{}\", \"line\": {}, \"rule\": \"{}\", \"message\": \"{}\"}}",
+                    json_escape(&f.file),
+                    f.line,
+                    json_escape(&f.rule),
+                    json_escape(&f.message)
+                )
+            })
+            .collect();
+        if items.is_empty() {
+            "[]".to_string()
+        } else {
+            format!("[\n{}\n  ]", items.join(",\n"))
+        }
+    };
+    if list_suppressed {
+        out.push_str(&format!(
+            "  \"suppressed_findings\": {},\n",
+            render(&result.suppressed)
+        ));
+    }
+    out.push_str(&format!("  \"findings\": {}\n}}\n", render(&result.findings)));
+    out
+}

@@ -1,0 +1,121 @@
+//! CLI for `c3o-lint`.
+//!
+//! ```text
+//! c3o-lint [--config PATH] [--root PATH] [--json] [--list-suppressed]
+//! ```
+//!
+//! Exit status: 0 when the tree is clean, 1 on any unsuppressed
+//! finding, 2 on usage/configuration errors. CI runs
+//! `cargo run -p c3o-lint -- --json` from the repository root.
+
+use c3o_lint::{scan_tree, to_json, LintConfig};
+use std::path::PathBuf;
+use std::process::ExitCode;
+
+/// Default config locations, tried in order relative to the working
+/// directory (the second makes `cargo run -p c3o-lint` work from the
+/// workspace root without flags).
+const CONFIG_CANDIDATES: &[&str] = &["lint.toml", "rust/lint/lint.toml"];
+
+struct Args {
+    config: Option<PathBuf>,
+    root: Option<PathBuf>,
+    json: bool,
+    list_suppressed: bool,
+}
+
+fn parse_args() -> Result<Args, String> {
+    let mut args = Args {
+        config: None,
+        root: None,
+        json: false,
+        list_suppressed: false,
+    };
+    let mut it = std::env::args().skip(1);
+    while let Some(a) = it.next() {
+        match a.as_str() {
+            "--config" => {
+                args.config = Some(PathBuf::from(
+                    it.next().ok_or("--config requires a path")?,
+                ))
+            }
+            "--root" => {
+                args.root = Some(PathBuf::from(it.next().ok_or("--root requires a path")?))
+            }
+            "--json" => args.json = true,
+            "--list-suppressed" => args.list_suppressed = true,
+            "--help" | "-h" => {
+                println!(
+                    "c3o-lint [--config PATH] [--root PATH] [--json] [--list-suppressed]\n\
+                     Repo-specific invariant lint; see rust/lint/README.md."
+                );
+                std::process::exit(0);
+            }
+            other => return Err(format!("unknown argument `{other}`")),
+        }
+    }
+    Ok(args)
+}
+
+fn main() -> ExitCode {
+    let args = match parse_args() {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("c3o-lint: {e}");
+            return ExitCode::from(2);
+        }
+    };
+    let config_path = args.config.clone().or_else(|| {
+        CONFIG_CANDIDATES
+            .iter()
+            .map(PathBuf::from)
+            .find(|p| p.exists())
+    });
+    let Some(config_path) = config_path else {
+        eprintln!(
+            "c3o-lint: no lint.toml found (tried {}); pass --config",
+            CONFIG_CANDIDATES.join(", ")
+        );
+        return ExitCode::from(2);
+    };
+    let mut cfg = match LintConfig::load(&config_path) {
+        Ok(c) => c,
+        Err(e) => {
+            eprintln!("c3o-lint: {e}");
+            return ExitCode::from(2);
+        }
+    };
+    if let Some(root) = args.root {
+        cfg.root = root;
+    }
+    let result = match scan_tree(&cfg) {
+        Ok(r) => r,
+        Err(e) => {
+            eprintln!("c3o-lint: {e}");
+            return ExitCode::from(2);
+        }
+    };
+    if args.json {
+        print!("{}", to_json(&result, args.list_suppressed));
+    } else {
+        for f in &result.findings {
+            println!("{}:{}: {}: {}", f.file, f.line, f.rule, f.message);
+        }
+        if args.list_suppressed {
+            for f in &result.suppressed {
+                println!("{}:{}: suppressed {}: {}", f.file, f.line, f.rule, f.message);
+            }
+        }
+        println!(
+            "c3o-lint: {} file(s), {} finding(s), {} suppressed",
+            result.files_scanned,
+            result.findings.len(),
+            result.suppressed.len()
+        );
+    }
+    if result.findings.is_empty() {
+        ExitCode::SUCCESS
+    } else {
+        ExitCode::from(1)
+    }
+}

@@ -1,0 +1,23 @@
+//! Fixture: serving zone — `no-panic-serving` (method, macro, index).
+
+pub fn answer(xs: &[u32]) -> u32 {
+    let first = xs.first().copied().unwrap();
+    if first == 0 {
+        unreachable!("zero is filtered upstream");
+    }
+    xs[1] + first
+}
+
+pub fn head(xs: &[u32]) -> u32 {
+    // c3o-lint: allow(no-panic-serving) — fixture: in-bounds by the caller contract
+    xs[0]
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn unwrap_in_tests_is_fine() {
+        let v = Some(1u32);
+        assert_eq!(v.unwrap(), 1);
+    }
+}

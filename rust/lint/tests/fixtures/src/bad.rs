@@ -1,0 +1,18 @@
+//! Fixture: every malformed / unjustified / unknown suppression form.
+
+// c3o-lint: allow(no-such-rule) — fixture: the rule name does not exist
+pub fn a() {}
+
+// c3o-lint: allow(hash-iter)
+pub fn b() {}
+
+// c3o-lint: frobnicate(hash-iter) — fixture: unknown directive name
+pub fn c() {}
+
+// c3o-lint: allow hash-iter — fixture: missing parentheses
+pub fn d() {}
+
+// c3o-lint: holds(filesystem) — fixture: not a configured lock class
+pub fn e() {}
+
+// c3o-lint: allow-fn(float-order) — fixture: dangling, no fn follows

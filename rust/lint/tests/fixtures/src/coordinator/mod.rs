@@ -1,0 +1,60 @@
+//! Fixture: serving zone — `lock-discipline` (violation, allowed
+//! nesting, suppression, `holds`) and `no-anyhow-public`.
+
+use std::sync::Mutex;
+
+pub struct State {
+    pub shard_lock: Mutex<u32>,
+    pub metrics: Mutex<u32>,
+    pub snapshot: Mutex<u32>,
+}
+
+pub fn nested_wrong_order(s: &State) -> u32 {
+    let shard = s.shard_lock.lock();
+    let m = s.metrics.lock();
+    drop(m);
+    drop(shard);
+    0
+}
+
+pub fn nested_allowed(s: &State) -> u32 {
+    let shard = s.shard_lock.lock();
+    let snap = s.snapshot.lock();
+    drop(snap);
+    drop(shard);
+    0
+}
+
+pub fn nested_suppressed(s: &State) -> u32 {
+    let shard = s.shard_lock.lock();
+    // c3o-lint: allow(lock-discipline) — fixture: metrics fold is deadlock-free by construction
+    let m = s.metrics.lock();
+    drop(m);
+    drop(shard);
+    0
+}
+
+// c3o-lint: holds(shard) — fixture: caller acquires the shard guard before calling
+pub fn publish_under_shard(s: &State) -> u32 {
+    let snap = s.snapshot.lock();
+    drop(snap);
+    0
+}
+
+// c3o-lint: holds(shard) — fixture: caller already holds the shard guard
+pub fn fold_under_shard(s: &State) -> u32 {
+    let m = s.metrics.lock();
+    drop(m);
+    0
+}
+
+pub fn load(path: &str) -> anyhow::Result<u32> {
+    let _ = path;
+    Ok(0)
+}
+
+// c3o-lint: allow(no-anyhow-public) — fixture: documented boundary fold-in point
+pub fn load_justified(path: &str) -> anyhow::Result<u32> {
+    let _ = path;
+    Ok(0)
+}

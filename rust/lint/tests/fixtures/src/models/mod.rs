@@ -1,0 +1,12 @@
+//! Fixture: `float-order` fold form and the `allow-fn` suppression.
+
+pub fn fold_total(xs: &[f32]) -> f32 {
+    xs.iter().fold(0.0f32, |a, b| a + b)
+}
+
+// c3o-lint: allow-fn(float-order) — fixture: whole-fn suppression; order fixed by slice iteration
+pub fn fn_scoped(xs: &[f32]) -> f32 {
+    let head = xs.iter().take(2).sum::<f32>();
+    let tail = xs.iter().skip(2).sum::<f32>();
+    head + tail
+}

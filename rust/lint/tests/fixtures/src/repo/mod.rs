@@ -1,0 +1,17 @@
+//! Fixture: deterministic zone — `hash-iter` and `float-order`.
+
+use std::collections::HashMap;
+
+pub fn keyed_total(xs: &HashMap<String, f64>) -> f64 {
+    xs.values().sum::<f64>()
+}
+
+// c3o-lint: allow(hash-iter) — fixture: documented single-use map length helper
+pub fn map_len(xs: &HashMap<String, f64>) -> usize {
+    xs.len()
+}
+
+pub fn ordered_total(xs: &[f64]) -> f64 {
+    // c3o-lint: allow(float-order) — fixture: sequential in-order slice reduction
+    xs.iter().sum::<f64>()
+}

@@ -1,0 +1,7 @@
+//! Fixture: `util` is `no-anyhow-public`-exempt and boundary-zoned, so
+//! neither the anyhow signature nor the index fires.
+
+pub fn helper() -> anyhow::Result<u32> {
+    let xs = [1u32, 2];
+    Ok(xs[0])
+}

@@ -1,0 +1,34 @@
+//! The real tree must lint clean: this is the same gate CI runs
+//! (`cargo run -p c3o-lint -- --json`), wired into `cargo test` so a
+//! violation fails the suite even without the dedicated CI job.
+
+use c3o_lint::{scan_tree, LintConfig};
+use std::path::PathBuf;
+
+#[test]
+fn lint_self_clean() {
+    let manifest = PathBuf::from(env!("CARGO_MANIFEST_DIR"));
+    let cfg = LintConfig::load(&manifest.join("lint.toml")).unwrap();
+    let result = scan_tree(&cfg).unwrap();
+    let rendered: Vec<String> = result
+        .findings
+        .iter()
+        .map(|f| format!("{}:{}: {}: {}", f.file, f.line, f.rule, f.message))
+        .collect();
+    assert!(
+        result.findings.is_empty(),
+        "c3o-lint found unsuppressed violations in rust/src \
+         (fix them or add a justified `c3o-lint: allow`):\n{}",
+        rendered.join("\n")
+    );
+    assert!(
+        result.files_scanned > 30,
+        "walker found only {} files — wrong root?",
+        result.files_scanned
+    );
+    assert!(
+        !result.suppressed.is_empty(),
+        "the real tree carries justified suppressions; zero means the \
+         directive parser regressed"
+    );
+}

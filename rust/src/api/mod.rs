@@ -37,6 +37,11 @@
 //! observed") is the rare write that closes the collaborative loop, as
 //! in the paper's capture-and-share step.
 
+// Serving zone: unwraps are outages. The module-scoped clippy
+// promotion mirrors the repo lint's `no-panic-serving` rule
+// (see rust/lint).
+#![cfg_attr(not(test), warn(clippy::unwrap_used))]
+
 use crate::cloud::Cloud;
 use crate::configurator::{ClusterChoice, JobRequest};
 use crate::coordinator::{JobOutcome, Metrics, Organization};
@@ -137,11 +142,13 @@ impl From<anyhow::Error> for ApiError {
 
 impl ApiError {
     /// Fold an internal `anyhow` error into the taxonomy.
+    // c3o-lint: allow(no-anyhow-public) — this IS the designated fold-in point where internal anyhow chains become taxonomy errors
     pub fn internal(e: anyhow::Error) -> ApiError {
         ApiError::from(e)
     }
 
     /// Fold a segment-store failure into the taxonomy (full chain).
+    // c3o-lint: allow(no-anyhow-public) — this IS the designated fold-in point where store anyhow chains become taxonomy errors
     pub fn store(e: anyhow::Error) -> ApiError {
         ApiError::Store(format!("{e:#}"))
     }

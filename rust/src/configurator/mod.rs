@@ -19,7 +19,6 @@ use crate::cloud::Cloud;
 use crate::models::{QueryBatch, RuntimeModel};
 use crate::util::json::Json;
 use crate::workloads::{JobKind, JobSpec};
-use anyhow::Result;
 
 /// A user's request: the job plus constraints (paper Fig. 1 "job inputs:
 /// dataset, parameters, runtime target").
@@ -205,19 +204,21 @@ impl<'c> Configurator<'c> {
         &self,
         model: &mut dyn RuntimeModel,
         request: &JobRequest,
-    ) -> Result<Option<ClusterChoice>> {
+    ) -> Result<Option<ClusterChoice>, ApiError> {
         // re-validate at this depth too: `configure` is public, so
         // library users bypassing the coordinator boundary must not get
         // silent everything-misses-the-target behavior from a NaN target
         // (this check replaced the old panicking builder assert)
-        request.validate().map_err(anyhow::Error::msg)?;
+        request.validate()?;
         let pairs = self.enumerate();
         if pairs.is_empty() {
             return Ok(None);
         }
         let features = request.spec.job_features();
         let batch = QueryBatch::from_candidates(self.cloud, &pairs, &features);
-        let runtimes = model.predict_batch(self.cloud, &batch)?;
+        let runtimes = model
+            .predict_batch(self.cloud, &batch)
+            .map_err(ApiError::internal)?;
         Ok(self.choose(request, &pairs, &runtimes))
     }
 
@@ -292,7 +293,7 @@ impl<'c> Configurator<'c> {
         model: &mut dyn RuntimeModel,
         spec: &JobSpec,
         scaleout: u32,
-    ) -> Result<Vec<(String, f64)>> {
+    ) -> Result<Vec<(String, f64)>, ApiError> {
         let features = spec.job_features();
         let pairs: Vec<(String, u32)> = self
             .cloud
@@ -301,7 +302,9 @@ impl<'c> Configurator<'c> {
             .map(|m| (m.name.clone(), scaleout))
             .collect();
         let batch = QueryBatch::from_candidates(self.cloud, &pairs, &features);
-        let runtimes = model.predict_batch(self.cloud, &batch)?;
+        let runtimes = model
+            .predict_batch(self.cloud, &batch)
+            .map_err(ApiError::internal)?;
         let mut ranked: Vec<(String, f64)> = pairs
             .iter()
             .zip(&runtimes)

@@ -62,6 +62,11 @@
 //! PJRT-compiled artifacts when available, bit-compatible pure-Rust
 //! engines otherwise, so the whole stack works on a bare `cargo test`.
 
+// Serving zone: unwraps are outages. The module-scoped clippy
+// promotion mirrors the repo lint's `no-panic-serving` rule
+// (see rust/lint).
+#![cfg_attr(not(test), warn(clippy::unwrap_used))]
+
 pub mod service;
 pub mod session;
 pub mod shard;
@@ -320,14 +325,12 @@ impl Coordinator {
         let mut coord = Coordinator::new(cloud, artifacts_dir, seed)?;
         let policy = coord.policy();
         for kind in JobKind::all() {
-            let (store, repo) = JobStore::open(store_root, kind).map_err(ApiError::store)?;
+            let (store, repo) = JobStore::open(store_root, kind)?;
             let shard_seed = coord.seed_rng.next_u64();
             let mut shard = JobShard::recover(kind, shard_seed, store, repo);
             // warm the model cache so recovered reads are served
             // without waiting for the next write
-            shard
-                .refresh_model(&mut coord.engine, &coord.cloud, &policy, &mut coord.metrics)
-                .map_err(ApiError::internal)?;
+            shard.refresh_model(&mut coord.engine, &coord.cloud, &policy, &mut coord.metrics)?;
             coord.shards.insert(kind, shard);
         }
         Ok(coord)
@@ -385,12 +388,17 @@ impl Coordinator {
     }
 
     /// Ensure a shard exists for `job` (writes allocate shards; reads
-    /// never do — a missing shard is simply cold).
-    fn ensure_shard(&mut self, job: JobKind) {
-        if !self.shards.contains_key(&job) {
-            let seed = self.seed_rng.next_u64();
-            self.shards.insert(job, JobShard::new(job, seed));
-        }
+    /// never do — a missing shard is simply cold). Takes the two
+    /// fields it touches instead of `&mut self` so the returned shard
+    /// borrow stays disjoint from `engine`/`metrics` at call sites.
+    fn ensure_shard<'a>(
+        shards: &'a mut HashMap<JobKind, JobShard>,
+        seed_rng: &mut Pcg32,
+        job: JobKind,
+    ) -> &'a mut JobShard {
+        shards
+            .entry(job)
+            .or_insert_with(|| JobShard::new(job, seed_rng.next_u64()))
     }
 
     /// **Write.** Merge externally shared data (e.g. the public corpus)
@@ -401,12 +409,9 @@ impl Coordinator {
         crate::api::validate_machines(&self.cloud, repo.records())?;
         let policy = self.policy();
         let job = repo.job();
-        self.ensure_shard(job);
-        let shard = self.shards.get_mut(&job).expect("just ensured");
+        let shard = Self::ensure_shard(&mut self.shards, &mut self.seed_rng, job);
         let outcome = shard.share(repo)?;
-        shard
-            .refresh_model(&mut self.engine, &self.cloud, &policy, &mut self.metrics)
-            .map_err(ApiError::internal)?;
+        shard.refresh_model(&mut self.engine, &self.cloud, &policy, &mut self.metrics)?;
         Ok(Contribution {
             job,
             added: outcome.added,
@@ -423,8 +428,7 @@ impl Coordinator {
         request.validate()?;
         let policy = self.policy();
         let job = request.kind();
-        self.ensure_shard(job);
-        let shard = self.shards.get_mut(&job).expect("just ensured");
+        let shard = Self::ensure_shard(&mut self.shards, &mut self.seed_rng, job);
         shard.submit(
             &mut self.engine,
             &self.cloud,
@@ -464,12 +468,9 @@ impl Coordinator {
         crate::api::validate_machines(&self.cloud, std::slice::from_ref(&record))?;
         let policy = self.policy();
         let job = record.job;
-        self.ensure_shard(job);
-        let shard = self.shards.get_mut(&job).expect("just ensured");
+        let shard = Self::ensure_shard(&mut self.shards, &mut self.seed_rng, job);
         let contribution = shard.contribute_record(record)?;
-        shard
-            .refresh_model(&mut self.engine, &self.cloud, &policy, &mut self.metrics)
-            .map_err(ApiError::internal)?;
+        shard.refresh_model(&mut self.engine, &self.cloud, &policy, &mut self.metrics)?;
         self.metrics.contributions += 1;
         Ok(contribution)
     }
@@ -568,12 +569,9 @@ impl Coordinator {
     pub fn sync_push(&mut self, job: JobKind, ops: &[SyncOp]) -> Result<SyncReport, ApiError> {
         crate::api::validate_machines(&self.cloud, ops.iter().map(|op| &op.record))?;
         let policy = self.policy();
-        self.ensure_shard(job);
-        let shard = self.shards.get_mut(&job).expect("just ensured");
+        let shard = Self::ensure_shard(&mut self.shards, &mut self.seed_rng, job);
         let outcome = shard.apply_sync_ops(ops)?;
-        shard
-            .refresh_model(&mut self.engine, &self.cloud, &policy, &mut self.metrics)
-            .map_err(ApiError::internal)?;
+        shard.refresh_model(&mut self.engine, &self.cloud, &policy, &mut self.metrics)?;
         self.metrics.sync_pushes += 1;
         self.metrics.sync_records_applied += outcome.changed() as u64;
         self.metrics.sync_conflicts += outcome.conflicts.len() as u64;
@@ -598,12 +596,9 @@ impl Coordinator {
     ) -> Result<SyncReport, ApiError> {
         crate::api::validate_machines(&self.cloud, records)?;
         let policy = self.policy();
-        self.ensure_shard(job);
-        let shard = self.shards.get_mut(&job).expect("just ensured");
+        let shard = Self::ensure_shard(&mut self.shards, &mut self.seed_rng, job);
         let outcome = shard.apply_sync_records(records)?;
-        shard
-            .refresh_model(&mut self.engine, &self.cloud, &policy, &mut self.metrics)
-            .map_err(ApiError::internal)?;
+        shard.refresh_model(&mut self.engine, &self.cloud, &policy, &mut self.metrics)?;
         self.metrics.sync_pushes += 1;
         self.metrics.sync_records_applied += outcome.changed() as u64;
         self.metrics.sync_conflicts += outcome.conflicts.len() as u64;

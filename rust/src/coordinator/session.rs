@@ -10,6 +10,11 @@
 //! request, across *all* job kinds — reads included, which is exactly
 //! what the service's read/write split removes.
 
+// Serving zone: unwraps are outages. The module-scoped clippy
+// promotion mirrors the repo lint's `no-panic-serving` rule
+// (see rust/lint).
+#![cfg_attr(not(test), warn(clippy::unwrap_used))]
+
 use crate::api::{ApiError, Client, Contribution, Recommendation, Request, Response, SnapshotInfo};
 use crate::cloud::Cloud;
 use crate::configurator::JobRequest;
@@ -53,6 +58,7 @@ impl Session {
             // native model engines when PJRT artifacts are absent or
             // unloadable, so there is no error path to serve here.
             let mut coord = Coordinator::new(cloud, &artifacts_dir, seed)
+                // c3o-lint: allow(no-panic-serving) — `Engine::auto` has a native fallback, so `new` cannot fail; a panic here would mean that contract broke and surfaces as `ApiError::Stopped` on the first call
                 .expect("coordinator construction is infallible (native fallback)");
             while let Ok(event) = worker_rx.recv() {
                 match event {

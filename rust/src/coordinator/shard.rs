@@ -38,6 +38,11 @@
 //! through the store's WAL, and the store folds the log into an atomic
 //! snapshot when it grows. Reads never touch the store.
 
+// Serving zone: unwraps are outages. The module-scoped clippy
+// promotion mirrors the repo lint's `no-panic-serving` rule
+// (see rust/lint).
+#![cfg_attr(not(test), warn(clippy::unwrap_used))]
+
 use crate::api::{ApiError, Contribution, Recommendation, SnapshotInfo, API_VERSION};
 use crate::baselines::{ConfigSearch, NaiveMax};
 use crate::cloud::Cloud;
@@ -150,7 +155,11 @@ impl ModelSnapshot {
         request: &JobRequest,
     ) -> Result<Recommendation, ApiError> {
         let mut out = self.recommend_batch(engine, cloud, policy, std::slice::from_ref(request));
-        out.pop().expect("one result per request")
+        out.pop().unwrap_or_else(|| {
+            Err(ApiError::Internal(
+                "recommend_batch returned no result for a one-request batch".to_string(),
+            ))
+        })
     }
 
     /// Serve several same-kind read-only recommendations from this
@@ -201,10 +210,11 @@ impl ModelSnapshot {
             .iter()
             .enumerate()
             .map(|(i, request)| {
+                // c3o-lint: allow(no-panic-serving) — `predict_batch` returns one runtime per concatenated candidate row, so chunk bounds hold by construction
                 let chunk = &runtimes[i * pairs.len()..(i + 1) * pairs.len()];
                 let choice = configurator
                     .choose(request, &pairs, chunk)
-                    .expect("pairs nonempty");
+                    .ok_or_else(|| ApiError::Internal("empty candidate catalog".to_string()))?;
                 Ok(Recommendation {
                     job: self.job,
                     choice,
@@ -294,14 +304,8 @@ impl JobShard {
     /// — submit included — so callers can match on the failure class.
     fn persist(&mut self, ops: &[StoreOp]) -> Result<(), ApiError> {
         if let Some(store) = &mut self.store {
-            store
-                .append(ops, self.repo.generation())
-                .context("persisting write")
-                .map_err(ApiError::store)?;
-            store
-                .maybe_compact(&self.repo)
-                .context("compacting store")
-                .map_err(ApiError::store)?;
+            store.append(ops, self.repo.generation())?;
+            store.maybe_compact(&self.repo)?;
         }
         Ok(())
     }
@@ -495,7 +499,7 @@ impl JobShard {
         cloud: &Cloud,
         policy: &ShardPolicy,
         metrics: &mut Metrics,
-    ) -> Result<Option<ModelKind>> {
+    ) -> Result<Option<ModelKind>, ApiError> {
         if self.repo.len() < policy.min_records {
             return Ok(None);
         }
@@ -513,7 +517,8 @@ impl JobShard {
                 // the feature cache mirrors the full repo, not the
                 // coverage sample — sampled retrains run from scratch
                 let train_repo = sampled_repo(&self.repo, cloud, cap);
-                select_and_train(engine, cloud, &train_repo, policy.cv_folds, gen)?
+                select_and_train(engine, cloud, &train_repo, policy.cv_folds, gen)
+                    .map_err(ApiError::internal)?
             } else {
                 let reused = self.feat_cache.refresh(&Featurizer::new(cloud), &self.repo);
                 metrics.featurized_rows_reused += reused as u64;
@@ -524,7 +529,8 @@ impl JobShard {
                     policy.cv_folds,
                     gen,
                     Some(&mut self.feat_cache),
-                )?
+                )
+                .map_err(ApiError::internal)?
             };
             self.model = Some(Arc::new(CachedModel {
                 trained_at_gen: gen,
@@ -658,7 +664,9 @@ impl JobShard {
         let mut cluster = cloud.provision(&machine, scaleout, &mut self.rng);
         cluster.mark_running();
         let spec_stages = request.spec.stages();
-        let mt = cloud.machine(&machine).expect("catalog");
+        let mt = cloud
+            .machine(&machine)
+            .ok_or_else(|| ApiError::Internal(format!("machine `{machine}` missing from catalog")))?;
         let sim = crate::sim::Simulator::default();
         let mut run_rng = self.rng.fork(0xEC);
         let actual = sim.run(mt, scaleout, &spec_stages, &mut run_rng).runtime_s;
@@ -687,8 +695,7 @@ impl JobShard {
         }
 
         // 4) the write maintains the model the reads are served from
-        self.refresh_model(engine, cloud, policy, metrics)
-            .map_err(ApiError::internal)?;
+        self.refresh_model(engine, cloud, policy, metrics)?;
 
         // 5) metrics
         let met_target = request.target_s.map_or(true, |t| actual <= t);

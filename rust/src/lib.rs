@@ -123,11 +123,42 @@
 //! `cargo test` without artifacts) runs the bit-compatible pure-Rust
 //! engines in [`models::native`] — trained model state is padded to one
 //! fixed layout, so models interchange freely between backends.
+//!
+//! ## Invariant zones & static checks
+//!
+//! The guarantees above are pinned at the source level by `c3o-lint`
+//! (the `rust/lint` workspace member — see its `README.md` for the
+//! rule catalogue and suppression grammar). `rust/lint/lint.toml` maps
+//! each top-level module into an invariant zone:
+//!
+//! * **deterministic** ([`repo`], [`models`], [`store`],
+//!   [`configurator`]) — anything feeding converged-peer or
+//!   cached-vs-scratch bitwise equality. No `HashMap`/`HashSet`
+//!   (iteration order varies per process), no unannotated float
+//!   reductions (summation order changes bits).
+//! * **serving** ([`api`], [`coordinator`]) — the request path. No
+//!   panics (`unwrap`/`expect`/panic macros/raw indexing): failures
+//!   speak the typed [`api::ApiError`] taxonomy, and poisoned locks
+//!   recover through [`util::sync`] instead of unwrapping. The same
+//!   zone promotes `clippy::unwrap_used` via module attributes.
+//! * **boundary** (everything else) — CLI, benches, experiment
+//!   drivers; only the signature and suppression rules apply.
+//!
+//! Across all zones, `pub fn` signatures outside the documented
+//! internal-engine modules must not leak `anyhow` (fold errors in via
+//! [`api::ApiError::internal`]/[`api::ApiError::store`]), and lock
+//! acquisitions are checked against the declared lock order
+//! (`shard -> snapshot`, `shard -> store`). CI runs
+//! `cargo run -p c3o-lint -- --json`; the `lint_self_clean` test
+//! enforces the same gate inside `cargo test`.
 
 // Index-based loops throughout mirror the reference kernels' math and
 // keep the padded-layout arithmetic explicit; iterator-chain rewrites
 // would obscure the column/row correspondence with the XLA graphs.
 #![allow(clippy::needless_range_loop)]
+// Debug prints must never reach the request path or the figure
+// pipeline; CI denies warnings, so a stray `dbg!` fails the build.
+#![warn(clippy::dbg_macro)]
 
 pub mod api;
 pub mod baselines;

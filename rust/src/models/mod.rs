@@ -570,7 +570,9 @@ impl Predictor {
         }
 
         // standardized log target
+        // c3o-lint: allow(float-order) — sequential in-order slice reduction; summation order is fixed
         let y_mean = log_y.iter().sum::<f32>() / n as f32;
+        // c3o-lint: allow(float-order) — sequential in-order slice reduction; summation order is fixed
         let y_sd = (log_y.iter().map(|v| (v - y_mean).powi(2)).sum::<f32>() / n as f32)
             .sqrt()
             .max(1e-6);

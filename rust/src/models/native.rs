@@ -146,6 +146,7 @@ pub(crate) fn native_opt_train_step(
 ) -> f32 {
     let p = params.len();
     let f = (p - 1) / 3;
+    // c3o-lint: allow(float-order) — sequential in-order slice reduction; summation order is fixed
     let n_eff = mask.iter().sum::<f32>().max(1.0);
     let mut grad = vec![0.0f32; p];
     let mut loss = 0.0f32;
@@ -287,7 +288,9 @@ impl NativeEngine {
         }
 
         // standardized log target
+        // c3o-lint: allow(float-order) — sequential in-order slice reduction; summation order is fixed
         let y_mean = log_y.iter().sum::<f32>() / n as f32;
+        // c3o-lint: allow(float-order) — sequential in-order slice reduction; summation order is fixed
         let y_sd = (log_y.iter().map(|v| (v - y_mean).powi(2)).sum::<f32>() / n as f32)
             .sqrt()
             .max(1e-6);

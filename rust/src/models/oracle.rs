@@ -94,6 +94,7 @@ impl SimOracle {
         }
         let t = median(&runs);
         self.runs_served += self.repetitions as u64;
+        // c3o-lint: allow(float-order) — sequential in-order slice reduction; summation order is fixed
         self.seconds_served += runs.iter().sum::<f64>();
         Ok(t)
     }

@@ -94,7 +94,9 @@ fn standardize_x(x: &mut MatF32) -> (Vec<f32>, Vec<f32>) {
 /// shared y-standardization path of [`Featurizer::fit`] and
 /// [`FeatureMatrixCache::fit`].
 fn standardize_y(log_y: &[f32]) -> (f32, f32, Vec<f32>) {
+    // c3o-lint: allow(float-order) — sequential in-order slice reduction; summation order is fixed
     let y_mean = log_y.iter().sum::<f32>() / log_y.len() as f32;
+    // c3o-lint: allow(float-order) — sequential in-order slice reduction; summation order is fixed
     let y_var = log_y.iter().map(|y| (y - y_mean).powi(2)).sum::<f32>() / log_y.len() as f32;
     let y_sd = y_var.sqrt().max(1e-6);
     let y = log_y.iter().map(|v| (v - y_mean) / y_sd).collect();

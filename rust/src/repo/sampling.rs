@@ -33,6 +33,7 @@ pub fn coverage_sample(repo: &RuntimeDataRepo, cloud: &Cloud, max_records: usize
     let d = x.cols;
 
     // Seed: the record nearest the centroid (standardized space ⇒ origin).
+    // c3o-lint: allow(float-order) — sequential in-order row reduction; summation order is fixed
     let norm2 = |row: &[f32]| -> f64 { row.iter().map(|&v| (v as f64).powi(2)).sum() };
     let seed = (0..n)
         .min_by(|&a, &b| {
@@ -46,6 +47,7 @@ pub fn coverage_sample(repo: &RuntimeDataRepo, cloud: &Cloud, max_records: usize
         let (ra, rb) = (x.row(a), x.row(b));
         (0..d)
             .map(|c| ((ra[c] - rb[c]) as f64).powi(2))
+            // c3o-lint: allow(float-order) — sequential in-order column reduction; summation order is fixed
             .sum()
     };
 
@@ -93,6 +95,7 @@ pub fn covering_radius(repo: &RuntimeDataRepo, cloud: &Cloud, sample_idx: &[usiz
         for &s in sample_idx {
             let d2: f64 = (0..d)
                 .map(|c| ((x.at(i, c) - x.at(s, c)) as f64).powi(2))
+                // c3o-lint: allow(float-order) — sequential in-order column reduction; summation order is fixed
                 .sum();
             best = best.min(d2);
         }

@@ -44,12 +44,15 @@
 pub mod segment;
 pub mod sync;
 
-pub use segment::{JobStore, StoreOp, DEFAULT_COMPACT_THRESHOLD, DEFAULT_SEGMENT_CAP};
+pub use segment::{
+    FsyncPolicy, JobStore, StoreConfig, StoreOp, DEFAULT_COMPACT_THRESHOLD, DEFAULT_SEGMENT_CAP,
+};
 pub use sync::{
     fold_orgs, sync_all, sync_all_detailed, sync_job, sync_job_detailed, sync_job_v2,
     OrgExchange, OrgExchangeMap, SyncDriver, SyncStats,
 };
 
+use crate::api::ApiError;
 use crate::repo::RuntimeDataRepo;
 use crate::workloads::JobKind;
 use std::path::Path;
@@ -57,7 +60,7 @@ use std::path::Path;
 /// Open (or create) the per-job stores under `root`, recovering every
 /// job's repository — one entry per [`JobKind::all`] kind, in that
 /// order.
-pub fn open_all(root: &Path) -> anyhow::Result<Vec<(JobStore, RuntimeDataRepo)>> {
+pub fn open_all(root: &Path) -> Result<Vec<(JobStore, RuntimeDataRepo)>, ApiError> {
     JobKind::all()
         .into_iter()
         .map(|kind| JobStore::open(root, kind))

@@ -46,13 +46,25 @@
 //!   sequence stamps, so a recovered repo is bitwise-identical to the
 //!   pre-crash one — including record order and org-log positions.
 //!
-//! **Durability scope.** Appends flush to the OS (surviving process
-//! crashes, the failure mode of the simulated substrate); they do not
-//! fsync per batch, so an OS/power failure can lose the tail of the
-//! page cache. Snapshots *are* fsynced before the rename publishes
-//! them (plus a best-effort directory sync). Per-append fsync (or
-//! group-commit batching) is a ROADMAP follow-up for real deployments.
+//! **Durability scope.** Under the default [`FsyncPolicy::Never`],
+//! appends flush to the OS (surviving process crashes, the failure
+//! mode of the simulated substrate) but do not fsync per batch, so an
+//! OS/power failure can lose the tail of the page cache.
+//! [`FsyncPolicy::PerBatch`] ([`StoreConfig::fsync_policy`], or
+//! [`JobStore::with_fsync_policy`]) additionally fsyncs the segment
+//! file after every appended batch, extending the guarantee to power
+//! failures at a per-write syscall cost. Snapshots are always fsynced
+//! before the rename publishes them (plus a best-effort directory
+//! sync).
+//!
+//! **Error taxonomy.** The four pub entry points — [`JobStore::open`],
+//! [`JobStore::append`], [`JobStore::compact`],
+//! [`JobStore::maybe_compact`] — fail with [`ApiError::Store`]; the
+//! `anyhow` context chains live only in the private `*_inner`
+//! implementations and are folded exactly once at this boundary
+//! (`no-anyhow-public` in `rust/lint`).
 
+use crate::api::ApiError;
 use crate::repo::{RuntimeDataRepo, RuntimeRecord};
 use crate::util::csv;
 use crate::util::hash::fnv1a64;
@@ -92,6 +104,29 @@ pub enum StoreOp {
     Canonicalize,
 }
 
+/// When appended WAL batches are forced to stable storage.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum FsyncPolicy {
+    /// Flush each batch to the OS only (the default, and the store's
+    /// historical behavior): appends survive process crashes; an
+    /// OS/power failure can lose the page-cache tail, which recovery
+    /// tolerates as a torn tail.
+    #[default]
+    Never,
+    /// `fsync` the segment file after every appended batch: appends
+    /// survive power failures too, at one extra syscall per write
+    /// batch.
+    PerBatch,
+}
+
+/// Deployment knobs for a [`JobStore`], applied at
+/// [`JobStore::open_with_config`] time.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct StoreConfig {
+    /// When appended batches are forced to stable storage.
+    pub fsync_policy: FsyncPolicy,
+}
+
 /// Append-only, generation-stamped record log for one job kind, with
 /// atomic snapshot + segment compaction.
 pub struct JobStore {
@@ -109,12 +144,28 @@ pub struct JobStore {
     writer: Option<BufWriter<fs::File>>,
     segment_cap: usize,
     compact_threshold: usize,
+    fsync_policy: FsyncPolicy,
 }
 
 impl JobStore {
     /// Open (or create) the store for `job` under `root` and recover
-    /// its repository: newest snapshot + WAL replay.
-    pub fn open(root: &Path, job: JobKind) -> Result<(JobStore, RuntimeDataRepo)> {
+    /// its repository: newest snapshot + WAL replay. Failures surface
+    /// as [`ApiError::Store`] with the full context chain rendered.
+    pub fn open(root: &Path, job: JobKind) -> Result<(JobStore, RuntimeDataRepo), ApiError> {
+        Self::open_inner(root, job).map_err(ApiError::store)
+    }
+
+    /// [`JobStore::open`] with explicit [`StoreConfig`] knobs.
+    pub fn open_with_config(
+        root: &Path,
+        job: JobKind,
+        config: StoreConfig,
+    ) -> Result<(JobStore, RuntimeDataRepo), ApiError> {
+        let (store, repo) = Self::open_inner(root, job).map_err(ApiError::store)?;
+        Ok((store.with_fsync_policy(config.fsync_policy), repo))
+    }
+
+    fn open_inner(root: &Path, job: JobKind) -> Result<(JobStore, RuntimeDataRepo)> {
         let dir = root.join(job.name());
         fs::create_dir_all(&dir)
             .with_context(|| format!("creating store dir {}", dir.display()))?;
@@ -256,6 +307,7 @@ impl JobStore {
             writer: None,
             segment_cap: DEFAULT_SEGMENT_CAP,
             compact_threshold: DEFAULT_COMPACT_THRESHOLD,
+            fsync_policy: FsyncPolicy::default(),
         };
         Ok((store, repo))
     }
@@ -270,6 +322,17 @@ impl JobStore {
     pub fn with_compact_threshold(mut self, threshold: usize) -> Self {
         self.compact_threshold = threshold.max(1);
         self
+    }
+
+    /// Override when appended batches are forced to stable storage.
+    pub fn with_fsync_policy(mut self, policy: FsyncPolicy) -> Self {
+        self.fsync_policy = policy;
+        self
+    }
+
+    /// The store's current fsync policy.
+    pub fn fsync_policy(&self) -> FsyncPolicy {
+        self.fsync_policy
     }
 
     pub fn job(&self) -> JobKind {
@@ -300,7 +363,11 @@ impl JobStore {
     /// repository's generation after the batch — the store stamps each
     /// op itself and cross-checks the result, so a store/repo desync is
     /// an error instead of silent corruption.
-    pub fn append(&mut self, ops: &[StoreOp], repo_generation_after: u64) -> Result<()> {
+    pub fn append(&mut self, ops: &[StoreOp], repo_generation_after: u64) -> Result<(), ApiError> {
+        self.append_inner(ops, repo_generation_after).map_err(ApiError::store)
+    }
+
+    fn append_inner(&mut self, ops: &[StoreOp], repo_generation_after: u64) -> Result<()> {
         // Render against a local generation cursor: nothing in the
         // store's state moves until the batch is fully written, so a
         // rejected or failed append leaves the mirror exactly where it
@@ -322,9 +389,16 @@ impl JobStore {
         if self.seg_records >= self.segment_cap {
             self.rotate();
         }
+        let fsync = self.fsync_policy;
         let writer = self.writer()?;
         writer.write_all(lines.as_bytes())?;
         writer.flush()?;
+        if fsync == FsyncPolicy::PerBatch {
+            writer
+                .get_ref()
+                .sync_all()
+                .context("fsyncing WAL segment after batch")?;
+        }
         self.generation = gen;
         self.seg_records += ops.len();
         self.pending += ops.len();
@@ -341,7 +415,11 @@ impl JobStore {
     /// sidecars are ignored — they pair by exact generation). Publishing
     /// in the other order would be the real hazard: a snapshot without
     /// its sidecar silently drops replaced/seen op-log history.
-    pub fn compact(&mut self, repo: &RuntimeDataRepo) -> Result<()> {
+    pub fn compact(&mut self, repo: &RuntimeDataRepo) -> Result<(), ApiError> {
+        self.compact_inner(repo).map_err(ApiError::store)
+    }
+
+    fn compact_inner(&mut self, repo: &RuntimeDataRepo) -> Result<()> {
         ensure!(
             repo.generation() == self.generation,
             "compacting against a desynced repo: store {}, repo {}",
@@ -395,9 +473,9 @@ impl JobStore {
 
     /// Compact when the un-snapshotted op count crosses the threshold.
     /// Returns whether a compaction ran.
-    pub fn maybe_compact(&mut self, repo: &RuntimeDataRepo) -> Result<bool> {
+    pub fn maybe_compact(&mut self, repo: &RuntimeDataRepo) -> Result<bool, ApiError> {
         if self.pending >= self.compact_threshold {
-            self.compact(repo)?;
+            self.compact_inner(repo).map_err(ApiError::store)?;
             return Ok(true);
         }
         Ok(false)
@@ -791,6 +869,28 @@ mod tests {
         assert_eq!(repo2.watermarks(), repo.watermarks(), "op logs recover");
         assert_eq!(store2.generation(), repo.generation());
         assert_eq!(store2.pending_ops(), 3);
+        let _ = fs::remove_dir_all(root);
+    }
+
+    #[test]
+    fn per_batch_fsync_recovers_bitwise() {
+        let root = temp_store("per_batch_fsync");
+        let config = StoreConfig {
+            fsync_policy: FsyncPolicy::PerBatch,
+        };
+        let (mut store, mut repo) =
+            JobStore::open_with_config(&root, JobKind::Sort, config).unwrap();
+        assert_eq!(store.fsync_policy(), FsyncPolicy::PerBatch);
+        contribute(&mut repo, &mut store, rec("a", 4, 10.0, 100.0));
+        merge(&mut repo, &mut store, rec("b", 8, 10.0, 60.0));
+        canonicalize(&mut repo, &mut store);
+        drop(store);
+
+        let (store2, repo2) = JobStore::open(&root, JobKind::Sort).unwrap();
+        assert_eq!(repo2.records(), repo.records(), "bitwise incl. order");
+        assert_eq!(repo2.generation(), repo.generation());
+        assert_eq!(repo2.watermarks(), repo.watermarks());
+        assert_eq!(store2.generation(), repo.generation());
         let _ = fs::remove_dir_all(root);
     }
 

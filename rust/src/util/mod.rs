@@ -17,6 +17,8 @@
 //!   generation + first-failure minimization by case index).
 //! * [`matrix`] — dense row-major f32/f64 matrices used by the native
 //!   model fallbacks and the PJRT bridge.
+//! * [`sync`] — poison-tolerant `Mutex`/`RwLock` acquisition for the
+//!   panic-free serving path (see `rust/lint`).
 
 pub mod bench;
 pub mod csv;
@@ -26,3 +28,4 @@ pub mod matrix;
 pub mod prop;
 pub mod rng;
 pub mod stats;
+pub mod sync;
