@@ -16,6 +16,11 @@
 //!   the shape that exercises write-side coalescing (same-kind submit
 //!   groups pre-scored as one predict batch) and the incremental
 //!   feature cache (delta-aware retrains inside the timed window).
+//! * **tracing overhead**: the read-heavy mix served twice more, with
+//!   span tracing enabled and disabled, recording the throughput delta
+//!   the `c3o::obs` layer costs (it must be cheap enough to leave on).
+//!   The traced run also supplies the exported per-kind latency
+//!   percentiles.
 //!
 //! Both paths are warmed by the corpus share (writes train the model),
 //! so initial training is paid outside the timed window; retrains inside
@@ -282,6 +287,58 @@ fn main() {
     let write_speedup = write_best / write_baseline;
     println!("write-mix speedup (best service vs session): {write_speedup:.2}x");
 
+    // ---- scenario 4: tracing overhead (on vs off, read-heavy mix) -------
+
+    let mut traced_req_per_s = [0.0f64; 2];
+    let mut latency = Json::Null;
+    for (slot, tracing) in [(0usize, true), (1usize, false)] {
+        let service = CoordinatorService::spawn(
+            cloud.clone(),
+            ServiceConfig::default()
+                .with_workers(8)
+                .with_pjrt_workers(0)
+                .with_seed(7)
+                .with_tracing(tracing),
+        );
+        for kind in KINDS {
+            service.share(corpus.repo_for(kind)).unwrap();
+        }
+        let clients = 8usize;
+        let t0 = Instant::now();
+        std::thread::scope(|scope| {
+            for c in 0..clients {
+                let client = service.client();
+                scope.spawn(move || {
+                    let org = Organization::new(&format!("client-{c}"));
+                    let mut i = c;
+                    while i < total_jobs {
+                        if is_read(i) {
+                            client.recommend(request_for(i)).unwrap();
+                        } else {
+                            client.submit(&org, request_for(i)).unwrap();
+                        }
+                        i += clients;
+                    }
+                });
+            }
+        });
+        traced_req_per_s[slot] = total_jobs as f64 / t0.elapsed().as_secs_f64();
+        if tracing {
+            latency = service.obs_report().to_json();
+        }
+        service.shutdown();
+    }
+    let tracing_overhead_pct = if traced_req_per_s[0] > 0.0 {
+        100.0 * (traced_req_per_s[1] / traced_req_per_s[0] - 1.0)
+    } else {
+        0.0
+    };
+    println!(
+        "tracing overhead: on {:.1} req/s vs off {:.1} req/s \
+         (untraced {tracing_overhead_pct:+.1}% faster)",
+        traced_req_per_s[0], traced_req_per_s[1]
+    );
+
     let json = Json::obj(vec![
         ("bench", Json::Str("serve_throughput".to_string())),
         ("total_jobs", Json::Num(total_jobs as f64)),
@@ -360,6 +417,15 @@ fn main() {
                 ("speedup_vs_session", Json::Num(write_speedup)),
             ]),
         ),
+        (
+            "tracing",
+            Json::obj(vec![
+                ("on_req_per_s", Json::Num(traced_req_per_s[0])),
+                ("off_req_per_s", Json::Num(traced_req_per_s[1])),
+                ("overhead_pct", Json::Num(tracing_overhead_pct)),
+            ]),
+        ),
+        ("latency", latency),
     ]);
     std::fs::write("BENCH_serve_throughput.json", json.render() + "\n").unwrap();
     println!("wrote BENCH_serve_throughput.json");

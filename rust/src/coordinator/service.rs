@@ -75,6 +75,7 @@ use crate::configurator::{ClusterChoice, Configurator, JobRequest};
 use crate::coordinator::shard::{JobShard, ModelSnapshot, ShardPolicy};
 use crate::coordinator::{JobOutcome, Metrics, Organization};
 use crate::models::{Engine, ModelTrainer, QueryBatch};
+use crate::obs::{Collector, ReqKind, Stage, Trace};
 use crate::repo::{RuntimeDataRepo, RuntimeRecord};
 use crate::runtime::Runtime;
 use crate::util::rng::Pcg32;
@@ -85,6 +86,7 @@ use std::path::PathBuf;
 use std::sync::mpsc;
 use std::sync::{Arc, Mutex, RwLock};
 use std::thread::JoinHandle;
+use std::time::Instant;
 
 /// Deployment knobs for a [`CoordinatorService`].
 #[derive(Debug, Clone)]
@@ -109,6 +111,10 @@ pub struct ServiceConfig {
     /// corpora) and every write persists through it. `None` (default)
     /// keeps the service in-memory.
     pub store_dir: Option<PathBuf>,
+    /// Structured request tracing ([`crate::obs`]). Behaviorally inert
+    /// either way — decisions are bitwise-identical with tracing on or
+    /// off (asserted by the shared client suite) — so it defaults on.
+    pub tracing: bool,
 }
 
 impl Default for ServiceConfig {
@@ -123,6 +129,7 @@ impl Default for ServiceConfig {
             seed: 0xC30,
             coalesce: 16,
             store_dir: None,
+            tracing: true,
         }
     }
 }
@@ -169,15 +176,23 @@ impl ServiceConfig {
         self.store_dir = Some(dir);
         self
     }
+
+    /// Enable or disable structured request tracing ([`crate::obs`]).
+    pub fn with_tracing(mut self, tracing: bool) -> Self {
+        self.tracing = tracing;
+        self
+    }
 }
 
 /// Reply channel of one in-flight protocol request.
 type ReplyTx = mpsc::Sender<Result<Response, ApiError>>;
 
 /// One queued protocol request paired with its own reply channel (no
-/// cross-client ordering).
+/// cross-client ordering) and its enqueue instant (drives the
+/// `queue_wait` trace span; carried even when tracing is off so the
+/// queue shape is identical either way).
 enum WorkItem {
-    Api(Box<api::Request>, ReplyTx),
+    Api(Box<api::Request>, ReplyTx, Instant),
     Shutdown,
 }
 
@@ -193,6 +208,9 @@ struct Shared {
     cloud: Cloud,
     policy: ShardPolicy,
     coalesce: usize,
+    /// Trace collector: per-worker lock-free rings on the hot path,
+    /// aggregation only at drain time ([`crate::obs`]).
+    obs: Collector,
 }
 
 impl Shared {
@@ -288,7 +306,7 @@ fn call_on(
     request: api::Request,
 ) -> Result<Response, ApiError> {
     let (rtx, rrx) = mpsc::channel();
-    tx.send(WorkItem::Api(Box::new(request), rtx))
+    tx.send(WorkItem::Api(Box::new(request), rtx, Instant::now()))
         .map_err(|_| ApiError::Stopped)?;
     rrx.recv().map_err(|_| ApiError::Stopped)?
 }
@@ -330,6 +348,7 @@ impl ServiceClient {
                     request,
                 }),
                 rtx,
+                Instant::now(),
             ))
             .map_err(|_| ApiError::Stopped)?;
         Ok(SubmitTicket {
@@ -426,6 +445,7 @@ impl CoordinatorService {
             snapshots.insert(kind, RwLock::new(Arc::new(shard.snapshot())));
             shards.insert(kind, Mutex::new(shard));
         }
+        let n = config.workers.max(1);
         let shared = Arc::new(Shared {
             shards,
             snapshots,
@@ -433,8 +453,8 @@ impl CoordinatorService {
             cloud,
             policy: config.policy.clone(),
             coalesce: config.coalesce.max(1),
+            obs: Collector::new(n, config.tracing),
         });
-        let n = config.workers.max(1);
         let mut workers = Vec::with_capacity(n);
         for i in 0..n {
             let queue = Arc::clone(&queue);
@@ -442,7 +462,7 @@ impl CoordinatorService {
             let artifacts_dir = config.artifacts_dir.clone();
             let try_pjrt = i < config.pjrt_workers;
             workers.push(std::thread::spawn(move || {
-                worker_loop(queue, shared, try_pjrt, artifacts_dir);
+                worker_loop(queue, shared, i, try_pjrt, artifacts_dir);
             }));
         }
         Ok(CoordinatorService {
@@ -493,6 +513,21 @@ impl CoordinatorService {
             .model
             .as_ref()
             .map(|m| m.trained_at_gen)
+    }
+
+    /// Drain and snapshot the observability aggregate: the per-kind ×
+    /// per-stage latency histograms, the worst-K slow-request captures,
+    /// and the drain/loss accounting — the `latency` block of
+    /// `c3o serve --json`. Empty (and cheap) when tracing is disabled.
+    pub fn obs_report(&self) -> crate::obs::Report {
+        self.shared.obs.report()
+    }
+
+    /// Drain and render the retained trace window as Chrome
+    /// trace-event JSON — the `c3o serve --trace-out FILE` payload,
+    /// loadable in Perfetto / `chrome://tracing`.
+    pub fn trace_export_json(&self) -> crate::util::json::Json {
+        self.shared.obs.chrome_trace_json()
     }
 
     /// Test hook: grab a shard's write mutex, simulating a slow write /
@@ -548,9 +583,46 @@ impl Drop for CoordinatorService {
     }
 }
 
+/// Classify a protocol request for latency keying.
+fn req_kind(request: &api::Request) -> ReqKind {
+    match request {
+        api::Request::Recommend { .. } => ReqKind::Recommend,
+        api::Request::Submit { .. } => ReqKind::Submit,
+        api::Request::Contribute { .. } => ReqKind::Contribute,
+        api::Request::Share { .. } => ReqKind::Share,
+        api::Request::Watermarks { .. }
+        | api::Request::SyncPull { .. }
+        | api::Request::SyncPush { .. }
+        | api::Request::WatermarksV2 { .. }
+        | api::Request::SyncPullV2 { .. }
+        | api::Request::SyncPushV2 { .. } => ReqKind::Sync,
+        api::Request::Metrics | api::Request::SnapshotInfo { .. } => ReqKind::Other,
+    }
+}
+
+/// Convert the shard's internally-measured stage durations (the
+/// featurize/CV/winner-fit retrain split, WAL append + fsync) into
+/// duration spans on `trace`, laid out back-to-front ending at the
+/// drain instant: widths are exact, offsets reconstructed. Called with
+/// the shard lock still held so the durations belong to this request
+/// (or its coalesced group).
+fn drain_shard_stages(trace: &mut Trace, shard: &mut JobShard) {
+    let drained = shard.take_stage_nanos();
+    // Walk the stage order backwards from the drain instant: the
+    // latest-occurring stage (fsync) ends now, each earlier stage ends
+    // where the next one started.
+    let mut end_rel = trace.now_rel_ns();
+    for stage in Stage::ALL.iter().rev().copied() {
+        let dur = drained[stage.index()];
+        trace.push_dur(stage, dur, end_rel);
+        end_rel = end_rel.saturating_sub(dur);
+    }
+}
+
 fn worker_loop(
     queue: Arc<Mutex<mpsc::Receiver<WorkItem>>>,
     shared: Arc<Shared>,
+    worker: usize,
     try_pjrt: bool,
     artifacts_dir: PathBuf,
 ) {
@@ -583,18 +655,21 @@ fn worker_loop(
         };
         match item {
             WorkItem::Shutdown => break,
-            WorkItem::Api(request, reply) => match *request {
+            WorkItem::Api(request, reply, queued_at) => match *request {
                 api::Request::Recommend { request } => {
+                    let mut trace = shared.obs.trace(ReqKind::Recommend, worker);
+                    trace.span_from(Stage::QueueWait, queued_at);
                     let kind = request.kind();
                     let mut group = vec![(request, reply)];
                     // Opportunistically coalesce further same-kind reads
                     // already waiting in the queue; the first non-matching
                     // item stops the drain and goes to the local backlog.
                     {
+                        let _assembly = trace.span(Stage::CoalesceAssembly);
                         let rx = queue.lock_unpoisoned();
                         while group.len() < shared.coalesce {
                             match rx.try_recv() {
-                                Ok(WorkItem::Api(req2, reply2)) => match *req2 {
+                                Ok(WorkItem::Api(req2, reply2, at2)) => match *req2 {
                                     api::Request::Recommend { request: r2 }
                                         if r2.kind() == kind =>
                                     {
@@ -604,6 +679,7 @@ fn worker_loop(
                                         backlog.push_back(WorkItem::Api(
                                             Box::new(other),
                                             reply2,
+                                            at2,
                                         ));
                                         break;
                                     }
@@ -616,9 +692,12 @@ fn worker_loop(
                             }
                         }
                     }
-                    serve_recommend_group(&shared, &mut engine, kind, group);
+                    trace.set_group(group.len() as u32);
+                    serve_recommend_group(&shared, &mut engine, kind, group, trace);
                 }
                 api::Request::Submit { org, request } => {
+                    let mut trace = shared.obs.trace(ReqKind::Submit, worker);
+                    trace.span_from(Stage::QueueWait, queued_at);
                     let kind = request.kind();
                     let mut group = vec![(org, request, reply)];
                     // Same drain discipline as the read path: pull
@@ -627,10 +706,11 @@ fn worker_loop(
                     // predict batch; the first non-matching item stops
                     // the drain and goes to the local backlog.
                     {
+                        let _assembly = trace.span(Stage::CoalesceAssembly);
                         let rx = queue.lock_unpoisoned();
                         while group.len() < shared.coalesce {
                             match rx.try_recv() {
-                                Ok(WorkItem::Api(req2, reply2)) => match *req2 {
+                                Ok(WorkItem::Api(req2, reply2, at2)) => match *req2 {
                                     api::Request::Submit {
                                         org: org2,
                                         request: r2,
@@ -641,6 +721,7 @@ fn worker_loop(
                                         backlog.push_back(WorkItem::Api(
                                             Box::new(other),
                                             reply2,
+                                            at2,
                                         ));
                                         break;
                                     }
@@ -653,11 +734,18 @@ fn worker_loop(
                             }
                         }
                     }
-                    serve_submit_group(&shared, &mut engine, kind, group);
+                    trace.set_group(group.len() as u32);
+                    serve_submit_group(&shared, &mut engine, kind, group, trace);
                 }
                 other => {
-                    let result = serve_request(&shared, &mut engine, other);
-                    let _ = reply.send(result);
+                    let mut trace = shared.obs.trace(req_kind(&other), worker);
+                    trace.span_from(Stage::QueueWait, queued_at);
+                    let result = serve_request(&shared, &mut engine, other, &mut trace);
+                    {
+                        let _reply_span = trace.span(Stage::Reply);
+                        let _ = reply.send(result);
+                    }
+                    shared.obs.ingest(trace);
                 }
             },
         }
@@ -672,6 +760,7 @@ fn serve_recommend_group(
     engine: &mut dyn ModelTrainer,
     kind: JobKind,
     group: Vec<(JobRequest, ReplyTx)>,
+    mut trace: Trace,
 ) {
     let snap = shared.snapshot(kind);
     let mut local = Metrics::default();
@@ -689,7 +778,10 @@ fn serve_recommend_group(
         let requests: Vec<JobRequest> =
             // c3o-lint: allow(no-panic-serving) — `valid` holds indices produced by enumerating `group`
             valid.iter().map(|&i| group[i].0.clone()).collect();
-        let served = snap.recommend_batch(engine, &shared.cloud, &shared.policy, &requests);
+        let served = {
+            let _predict = trace.span(Stage::Predict);
+            snap.recommend_batch(engine, &shared.cloud, &shared.policy, &requests)
+        };
         if valid.len() > 1 {
             local.coalesced_batches += 1;
         }
@@ -702,14 +794,18 @@ fn serve_recommend_group(
         }
     }
     shared.metrics.lock_unpoisoned().fold(&local);
-    for ((_, reply), result) in group.into_iter().zip(results) {
-        let result = result.unwrap_or_else(|| {
-            Err(ApiError::Internal(
-                "recommend batch left a reply slot unfilled".to_string(),
-            ))
-        });
-        let _ = reply.send(result.map(Response::Recommendation));
+    {
+        let _reply_span = trace.span(Stage::Reply);
+        for ((_, reply), result) in group.into_iter().zip(results) {
+            let result = result.unwrap_or_else(|| {
+                Err(ApiError::Internal(
+                    "recommend batch left a reply slot unfilled".to_string(),
+                ))
+            });
+            let _ = reply.send(result.map(Response::Recommendation));
+        }
     }
+    shared.obs.ingest(trace);
 }
 
 /// Serve a coalesced group of same-kind `Submit`s. The per-submit
@@ -728,6 +824,7 @@ fn serve_submit_group(
     engine: &mut dyn ModelTrainer,
     kind: JobKind,
     group: Vec<(Organization, JobRequest, ReplyTx)>,
+    mut trace: Trace,
 ) {
     let mut local = Metrics::default();
     let mut results: Vec<Option<Result<JobOutcome, ApiError>>> =
@@ -750,7 +847,10 @@ fn serve_submit_group(
                 }
             }
             Ok(shard_mutex) => {
-                let mut shard = shard_mutex.lock_unpoisoned();
+                let mut shard = {
+                    let _lock_wait = trace.span(Stage::ShardLockWait);
+                    shard_mutex.lock_unpoisoned()
+                };
                 // Pre-score all members' candidates as one batch
                 // against the current cached model (same shape as the
                 // read path). A scoring failure here is not an error:
@@ -775,9 +875,11 @@ fn serve_submit_group(
                                 })
                                 .collect();
                             let combined = QueryBatch::concat(&batches);
-                            if let Ok(runtimes) =
+                            let scored = {
+                                let _predict = trace.span(Stage::Predict);
                                 engine.predict_batch(&cached.model, &shared.cloud, &combined)
-                            {
+                            };
+                            if let Ok(runtimes) = scored {
                                 for (slot, &i) in valid.iter().enumerate() {
                                     let lo = slot * pairs.len();
                                     // c3o-lint: allow(no-panic-serving) — chunk bounds hold by construction (one runtime per concatenated candidate row)
@@ -821,20 +923,25 @@ fn serve_submit_group(
                     // c3o-lint: allow(no-panic-serving) — `valid` indices come from enumerating `group`, and `results` spans `group`
                     results[i] = Some(outcome);
                 }
+                drain_shard_stages(&mut trace, &mut shard);
             }
         }
     }
     // Fold after the shard lock drops, so the global metrics mutex
     // never nests inside a busy shard.
     shared.metrics.lock_unpoisoned().fold(&local);
-    for ((_, _, reply), result) in group.into_iter().zip(results) {
-        let result = result.unwrap_or_else(|| {
-            Err(ApiError::Internal(
-                "submit batch left a reply slot unfilled".to_string(),
-            ))
-        });
-        let _ = reply.send(result.map(Response::Submitted));
+    {
+        let _reply_span = trace.span(Stage::Reply);
+        for ((_, _, reply), result) in group.into_iter().zip(results) {
+            let result = result.unwrap_or_else(|| {
+                Err(ApiError::Internal(
+                    "submit batch left a reply slot unfilled".to_string(),
+                ))
+            });
+            let _ = reply.send(result.map(Response::Submitted));
+        }
     }
+    shared.obs.ingest(trace);
 }
 
 /// Serve one non-`Recommend`, non-`Submit` protocol request. Writes take
@@ -845,6 +952,7 @@ fn serve_request(
     shared: &Shared,
     engine: &mut dyn ModelTrainer,
     request: api::Request,
+    trace: &mut Trace,
 ) -> Result<Response, ApiError> {
     match request {
         api::Request::Contribute { record } => {
@@ -853,13 +961,18 @@ fn serve_request(
             let shard_mutex = shard_for(shared, kind)?;
             let mut local = Metrics::default();
             let result = {
-                let mut shard = shard_mutex.lock_unpoisoned();
-                shard.contribute_record(record).and_then(|contribution| {
+                let mut shard = {
+                    let _lock_wait = trace.span(Stage::ShardLockWait);
+                    shard_mutex.lock_unpoisoned()
+                };
+                let result = shard.contribute_record(record).and_then(|contribution| {
                     shard.refresh_model(engine, &shared.cloud, &shared.policy, &mut local)?;
                     shared.publish(&shard);
                     local.contributions += 1;
                     Ok(contribution)
-                })
+                });
+                drain_shard_stages(trace, &mut shard);
+                result
             };
             shared.metrics.lock_unpoisoned().fold(&local);
             result.map(Response::Contributed)
@@ -870,8 +983,11 @@ fn serve_request(
             let shard_mutex = shard_for(shared, kind)?;
             let mut local = Metrics::default();
             let result = {
-                let mut shard = shard_mutex.lock_unpoisoned();
-                shard
+                let mut shard = {
+                    let _lock_wait = trace.span(Stage::ShardLockWait);
+                    shard_mutex.lock_unpoisoned()
+                };
+                let result = shard
                     .share(&repo)
                     .and_then(|outcome| {
                         shard.refresh_model(engine, &shared.cloud, &shared.policy, &mut local)?;
@@ -881,7 +997,9 @@ fn serve_request(
                             added: outcome.added,
                             generation: shard.generation(),
                         })
-                    })
+                    });
+                drain_shard_stages(trace, &mut shard);
+                result
             };
             shared.metrics.lock_unpoisoned().fold(&local);
             result.map(Response::Shared)
@@ -905,7 +1023,10 @@ fn serve_request(
         }
         api::Request::SyncPull { job, watermarks } => {
             let shard_mutex = shard_for(shared, job)?;
-            let shard = shard_mutex.lock_unpoisoned();
+            let shard = {
+                let _lock_wait = trace.span(Stage::ShardLockWait);
+                shard_mutex.lock_unpoisoned()
+            };
             Ok(Response::SyncDelta(api::SyncDelta {
                 job,
                 generation: shard.generation(),
@@ -918,8 +1039,11 @@ fn serve_request(
             let shard_mutex = shard_for(shared, job)?;
             let mut local = Metrics::default();
             let result = {
-                let mut shard = shard_mutex.lock_unpoisoned();
-                shard.apply_sync_ops(&ops).and_then(|outcome| {
+                let mut shard = {
+                    let _lock_wait = trace.span(Stage::ShardLockWait);
+                    shard_mutex.lock_unpoisoned()
+                };
+                let result = shard.apply_sync_ops(&ops).and_then(|outcome| {
                     shard.refresh_model(engine, &shared.cloud, &shared.policy, &mut local)?;
                     shared.publish(&shard);
                     local.sync_pushes += 1;
@@ -934,14 +1058,19 @@ fn serve_request(
                         &outcome.logged,
                         shard.generation(),
                     ))
-                })
+                });
+                drain_shard_stages(trace, &mut shard);
+                result
             };
             shared.metrics.lock_unpoisoned().fold(&local);
             result.map(Response::SyncApplied)
         }
         api::Request::WatermarksV2 { job } => {
             let shard_mutex = shard_for(shared, job)?;
-            let shard = shard_mutex.lock_unpoisoned();
+            let shard = {
+                let _lock_wait = trace.span(Stage::ShardLockWait);
+                shard_mutex.lock_unpoisoned()
+            };
             Ok(Response::WatermarksV2(api::WatermarkSetV2 {
                 job,
                 generation: shard.generation(),
@@ -950,7 +1079,10 @@ fn serve_request(
         }
         api::Request::SyncPullV2 { job, watermarks } => {
             let shard_mutex = shard_for(shared, job)?;
-            let shard = shard_mutex.lock_unpoisoned();
+            let shard = {
+                let _lock_wait = trace.span(Stage::ShardLockWait);
+                shard_mutex.lock_unpoisoned()
+            };
             Ok(Response::SyncDeltaV2(api::SyncDeltaV2 {
                 job,
                 generation: shard.generation(),
@@ -963,8 +1095,11 @@ fn serve_request(
             let shard_mutex = shard_for(shared, job)?;
             let mut local = Metrics::default();
             let result = {
-                let mut shard = shard_mutex.lock_unpoisoned();
-                shard.apply_sync_records(&records).and_then(|outcome| {
+                let mut shard = {
+                    let _lock_wait = trace.span(Stage::ShardLockWait);
+                    shard_mutex.lock_unpoisoned()
+                };
+                let result = shard.apply_sync_records(&records).and_then(|outcome| {
                     shard.refresh_model(engine, &shared.cloud, &shared.policy, &mut local)?;
                     shared.publish(&shard);
                     local.sync_pushes += 1;
@@ -979,7 +1114,9 @@ fn serve_request(
                         &outcome.applied,
                         shard.generation(),
                     ))
-                })
+                });
+                drain_shard_stages(trace, &mut shard);
+                result
             };
             shared.metrics.lock_unpoisoned().fold(&local);
             result.map(Response::SyncApplied)

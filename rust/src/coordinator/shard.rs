@@ -51,6 +51,7 @@ use crate::coordinator::{JobOutcome, Metrics, Organization};
 use crate::models::oracle::SimOracle;
 use crate::models::selection::{select_and_train, select_and_train_cached, SelectionReport};
 use crate::models::{EngineBound, ModelKind, ModelTrainer, QueryBatch, TrainedModel};
+use crate::obs::{Stage, StageScratch};
 use crate::repo::sampling::sampled_repo;
 use crate::repo::{
     FeatureMatrixCache, Featurizer, LoggedOp, MergeOutcome, OrgWatermark, RuntimeDataRepo,
@@ -261,6 +262,9 @@ pub struct JobShard {
     /// Incremental feature-matrix mirror of `repo`: retrains replay the
     /// repo's delta journal instead of refeaturizing the corpus.
     feat_cache: FeatureMatrixCache,
+    /// Per-stage wall-time the shard's internals accumulated (retrain
+    /// split, WAL I/O). Observability only — never read by decisions.
+    scratch: StageScratch,
 }
 
 impl JobShard {
@@ -273,6 +277,7 @@ impl JobShard {
             rng: Pcg32::new(seed),
             store: None,
             feat_cache: FeatureMatrixCache::new(),
+            scratch: StageScratch::default(),
         }
     }
 
@@ -290,6 +295,7 @@ impl JobShard {
             rng: Pcg32::new(seed),
             store: Some(store),
             feat_cache: FeatureMatrixCache::new(),
+            scratch: StageScratch::default(),
         }
     }
 
@@ -306,6 +312,9 @@ impl JobShard {
         if let Some(store) = &mut self.store {
             store.append(ops, self.repo.generation())?;
             store.maybe_compact(&self.repo)?;
+            let (append_ns, fsync_ns) = store.take_io_nanos();
+            self.scratch.add(Stage::WalAppend, append_ns);
+            self.scratch.add(Stage::Fsync, fsync_ns);
         }
         Ok(())
     }
@@ -520,7 +529,10 @@ impl JobShard {
                 select_and_train(engine, cloud, &train_repo, policy.cv_folds, gen)
                     .map_err(ApiError::internal)?
             } else {
+                let feat_started = std::time::Instant::now();
                 let reused = self.feat_cache.refresh(&Featurizer::new(cloud), &self.repo);
+                self.scratch
+                    .add(Stage::Featurize, feat_started.elapsed().as_nanos() as u64);
                 metrics.featurized_rows_reused += reused as u64;
                 select_and_train_cached(
                     engine,
@@ -532,6 +544,8 @@ impl JobShard {
                 )
                 .map_err(ApiError::internal)?
             };
+            self.scratch.add(Stage::CrossValidate, report.cv_nanos);
+            self.scratch.add(Stage::WinnerFit, report.fit_nanos);
             self.model = Some(Arc::new(CachedModel {
                 trained_at_gen: gen,
                 model,
@@ -541,6 +555,16 @@ impl JobShard {
             metrics.retrain_nanos_total += started.elapsed().as_nanos() as u64;
         }
         Ok(self.model.as_ref().map(|m| m.model.kind))
+    }
+
+    /// Drain the per-stage durations the shard's internals accumulated
+    /// since the last drain (the featurize/CV/winner-fit retrain split,
+    /// WAL append + fsync), indexed by [`Stage::index`]. The concurrent
+    /// service calls this while still holding the shard lock and turns
+    /// the durations into trace spans; the sequential deployments never
+    /// drain, which is harmless — the scratch is a fixed array.
+    pub fn take_stage_nanos(&mut self) -> [u64; Stage::COUNT] {
+        self.scratch.take()
     }
 
     /// Read-only recommendation straight off the shard (the sequential

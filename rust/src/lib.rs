@@ -124,6 +124,38 @@
 //! engines in [`models::native`] — trained model state is padded to one
 //! fixed layout, so models interchange freely between backends.
 //!
+//! ## Observability: the server captures runtime data about itself
+//!
+//! The collaborative premise — systems improve by capturing runtime
+//! data about their executions — is applied to the serving stack
+//! itself by [`obs`]:
+//!
+//! * **Span taxonomy** — every service request carries an
+//!   [`obs::Trace`] of monotonic [`obs::Stage`] spans: `queue_wait`,
+//!   `coalesce_assembly`, `shard_lock_wait`, the retrain split
+//!   (`featurize` / `cross_validate` / `winner_fit`), `predict`,
+//!   `wal_append`, `fsync`, `reply`, plus a sealed end-to-end `total`.
+//!   Finished traces land in per-worker lock-free ring buffers
+//!   ([`obs::Ring`], overwrite-oldest, allocation-free on the hot
+//!   path) and are drained when a report is requested.
+//! * **Bucket scheme** — latency aggregates are log-bucketed
+//!   histograms over fixed power-of-2 buckets (bucket `i` holds
+//!   `[2^(i-1), 2^i)` nanoseconds; [`obs::hist`]), keyed request kind
+//!   × stage in a plain-array [`obs::LatencyMatrix`]. Merging any
+//!   partition of samples is bitwise order-independent, and
+//!   p50/p95/p99 are exact given the bucketing — which is why the
+//!   histogram math lives in the lint's deterministic zone.
+//! * **Export formats** — `c3o serve --trace-out FILE` writes Chrome
+//!   trace-event JSON (Perfetto / `chrome://tracing`); `c3o serve
+//!   --json` gains a `latency` block (per-kind/per-stage percentiles +
+//!   the K slowest span breakdowns per kind); `c3o sync --json`
+//!   surfaces per-exchange pull/push timings.
+//!
+//! Tracing is behaviorally inert: all three deployments produce
+//! bitwise-identical decisions with tracing enabled or disabled
+//! (asserted in `tests/client_suite.rs`), and `benches/serve_throughput`
+//! records the overhead of enabling it.
+//!
 //! ## Invariant zones & static checks
 //!
 //! The guarantees above are pinned at the source level by `c3o-lint`
@@ -132,8 +164,9 @@
 //! each top-level module into an invariant zone:
 //!
 //! * **deterministic** ([`repo`], [`models`], [`store`],
-//!   [`configurator`]) — anything feeding converged-peer or
-//!   cached-vs-scratch bitwise equality. No `HashMap`/`HashSet`
+//!   [`configurator`], [`obs`]) — anything feeding converged-peer or
+//!   cached-vs-scratch bitwise equality, plus the histogram math whose
+//!   folds must be order-independent. No `HashMap`/`HashSet`
 //!   (iteration order varies per process), no unannotated float
 //!   reductions (summation order changes bits).
 //! * **serving** ([`api`], [`coordinator`]) — the request path. No
@@ -167,6 +200,7 @@ pub mod configurator;
 pub mod coordinator;
 pub mod figures;
 pub mod models;
+pub mod obs;
 pub mod repo;
 pub mod runtime;
 pub mod sim;

@@ -10,7 +10,7 @@
 //!                [--org NAME] [--data DIR] [--json]
 //! c3o e2e        [--jobs N] [--seed N]         collaborative end-to-end demo
 //! c3o serve      [--workers N] [--clients N] [--jobs N] [--seed N] [--json]
-//!                                              sharded multi-org service demo
+//!                [--trace-out FILE]            sharded multi-org service demo
 //! c3o store      --dir DIR [--mode seed|verify|stat] [--seed N]
 //!                                              durable segment-store exercise
 //! c3o sync       [--max-rounds N] [--seed N] [--store-a DIR] [--store-b DIR]
@@ -111,9 +111,14 @@ USAGE:
                                               into DIR/<job>.csv (default data/)
   c3o e2e        [--jobs N] [--seed N]        collaborative end-to-end demo
   c3o serve      [--workers N] [--clients N] [--jobs N] [--seed N] [--json]
-                                              sharded multi-org service demo;
+                 [--trace-out FILE]           sharded multi-org service demo;
                                               --json emits every metrics counter
-                                              (retrain nanos, rows reused, ...)
+                                              plus a `latency` block (per-kind /
+                                              per-stage p50/p95/p99 and the
+                                              slowest span breakdowns);
+                                              --trace-out writes the request
+                                              spans as Chrome trace-event JSON
+                                              (open in Perfetto)
   c3o store      --dir DIR [--mode seed|verify|stat] [--seed N]
                                               durable segment store: seed it from
                                               the corpus, verify recovery, or stat
@@ -123,6 +128,7 @@ USAGE:
                                               record-level SyncPull/SyncPush;
                                               --json emits per-org exchange stats
                                               (records offered/applied/skipped)
+                                              and pull/push wall-time totals
 ";
 
 fn main() -> ExitCode {
@@ -473,6 +479,7 @@ fn cmd_serve(cloud: &Cloud, args: &Args, seed: u64) -> Result<(), String> {
     let workers: usize = args.get_or("workers", 4)?;
     let clients: usize = args.get_or("clients", 8)?;
     let jobs: usize = args.get_or("jobs", 40)?;
+    let trace_out: Option<String> = args.get("trace-out")?;
     if clients == 0 || jobs == 0 {
         return Err("--clients and --jobs must be >= 1".into());
     }
@@ -548,15 +555,18 @@ fn cmd_serve(cloud: &Cloud, args: &Args, seed: u64) -> Result<(), String> {
     }
 
     let m = service.metrics().map_err(api_err)?;
+    let report = service.obs_report();
     if args.switch("json") {
         use c3o::util::json::Json;
         let doc = Json::obj(vec![
             ("wall_s", Json::Num(wall)),
             ("throughput_jobs_per_s", Json::Num(jobs as f64 / wall)),
             ("metrics", m.to_json()),
+            ("latency", report.to_json()),
         ]);
         println!("{}", doc.pretty());
     } else {
+        use c3o::obs::{ReqKind, Stage};
         println!("jobs served:        {}", m.submissions);
         println!("wall clock:         {wall:.2} s");
         println!("throughput:         {:.1} submissions/s", jobs as f64 / wall);
@@ -565,12 +575,47 @@ fn cmd_serve(cloud: &Cloud, args: &Args, seed: u64) -> Result<(), String> {
             "retrain wall time:  {:.2} s",
             m.retrain_nanos_total as f64 / 1e9
         );
+        println!(
+            "  featurize:        {:.2} s",
+            report.lat.stage_sum_ns(Stage::Featurize) as f64 / 1e9
+        );
+        println!(
+            "  cross-validate:   {:.2} s",
+            report.lat.stage_sum_ns(Stage::CrossValidate) as f64 / 1e9
+        );
+        println!(
+            "  winner fit:       {:.2} s",
+            report.lat.stage_sum_ns(Stage::WinnerFit) as f64 / 1e9
+        );
         println!("feat. rows reused:  {}", m.featurized_rows_reused);
         println!("model cache hits:   {}", m.cache_hits);
         println!("coalesced writes:   {} batches", m.coalesced_write_batches);
         println!("target hit rate:    {:.0}%", 100.0 * m.target_hit_rate());
         println!("mean pred. error:   {:.1}%", m.mean_prediction_error_pct());
         println!("total cost:         ${:.2}", m.total_cost_usd);
+        if !report.is_empty() {
+            println!("request latency, p50 / p95 / p99 (ms):");
+            for kind in ReqKind::ALL {
+                let h = report.lat.cell(kind, Stage::Total);
+                if h.count() == 0 {
+                    continue;
+                }
+                println!(
+                    "  {:<10}  {:>8.2} / {:>8.2} / {:>8.2}   ({} traces)",
+                    kind.name(),
+                    h.percentile_ns(50) as f64 / 1e6,
+                    h.percentile_ns(95) as f64 / 1e6,
+                    h.percentile_ns(99) as f64 / 1e6,
+                    h.count()
+                );
+            }
+        }
+    }
+    if let Some(path) = trace_out {
+        let doc = service.trace_export_json();
+        std::fs::write(&path, doc.pretty())
+            .map_err(|e| format!("writing trace to {path}: {e}"))?;
+        eprintln!("chrome trace written to {path} (open via ui.perfetto.dev)");
     }
     service.shutdown();
     Ok(())
@@ -846,6 +891,8 @@ fn cmd_sync(cloud: &Cloud, args: &Args, seed: u64) -> Result<(), String> {
                     ("skipped", Json::Num(total.skipped as f64)),
                     ("conflicts", Json::Num(total.conflicts as f64)),
                     ("pulls", Json::Num(total.pulls as f64)),
+                    ("pull_ms", Json::Num(total.pull_nanos as f64 / 1e6)),
+                    ("push_ms", Json::Num(total.push_nanos as f64 / 1e6)),
                 ]),
             ),
             ("jobs", Json::Arr(jobs)),
@@ -859,6 +906,11 @@ fn cmd_sync(cloud: &Cloud, args: &Args, seed: u64) -> Result<(), String> {
             total.skipped,
             total.conflicts,
             total.pulls
+        );
+        println!(
+            "exchange wall time: {:.1} ms pulling, {:.1} ms pushing",
+            total.pull_nanos as f64 / 1e6,
+            total.push_nanos as f64 / 1e6
         );
     }
     if failures.is_empty() {

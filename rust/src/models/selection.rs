@@ -22,6 +22,11 @@ pub struct SelectionReport {
     pub chosen: ModelKind,
     pub folds: usize,
     pub records: usize,
+    /// Wall-clock nanoseconds the cross-validation sweep took (all
+    /// model kinds, all folds). Timing only — never feeds a decision.
+    pub cv_nanos: u64,
+    /// Wall-clock nanoseconds the winner's full-repository fit took.
+    pub fit_nanos: u64,
 }
 
 impl SelectionReport {
@@ -116,16 +121,19 @@ pub fn select_and_train_cached(
     seed: u64,
     feat: Option<&mut FeatureMatrixCache>,
 ) -> Result<(TrainedModel, SelectionReport)> {
+    let cv_started = std::time::Instant::now();
     let mut cv = Vec::new();
     for kind in ModelKind::all() {
         let mape = cv_mape(predictor, cloud, repo, kind, folds, seed)?;
         cv.push((kind, mape));
     }
+    let cv_nanos = cv_started.elapsed().as_nanos() as u64;
     let chosen = cv
         .iter()
         .min_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
         .map(|(k, _)| *k)
         .unwrap();
+    let fit_started = std::time::Instant::now();
     let model = predictor.train_cached(cloud, repo, chosen, feat)?;
     Ok((
         model,
@@ -134,6 +142,8 @@ pub fn select_and_train_cached(
             chosen,
             folds,
             records: repo.len(),
+            cv_nanos,
+            fit_nanos: fit_started.elapsed().as_nanos() as u64,
         },
     ))
 }

@@ -1,0 +1,323 @@
+//! Mergeable log-bucketed latency histograms.
+//!
+//! A [`Histogram`] spreads nanosecond samples over fixed power-of-2
+//! buckets: bucket 0 holds the value 0 and bucket `i` (for `i >= 1`)
+//! holds `[2^(i-1), 2^i - 1]`, so the bucket of a sample is just
+//! `64 - leading_zeros(ns)`. Everything is plain fixed-size `u64`
+//! arrays — no maps, no floats in the bucketing path — so merging and
+//! percentile extraction are deterministic regardless of fold order,
+//! as the deterministic-zone lint rules require. Percentiles are
+//! *exact given the bucketing*: the reported value is the inclusive
+//! upper bound of the bucket holding the requested rank, capped at the
+//! observed maximum.
+//!
+//! [`LatencyMatrix`] is the serving-side aggregate: one histogram per
+//! (request kind × stage) cell, in fixed enum order, folded
+//! worker-local exactly like `coordinator::Metrics`.
+
+use super::{ReqKind, Stage};
+use crate::util::json::Json;
+
+/// Number of power-of-2 buckets. Bucket 39 tops out at `2^39 - 1` ns
+/// (≈ 9.2 minutes); anything slower saturates into it.
+pub const BUCKET_COUNT: usize = 40;
+
+/// Bucket index of a nanosecond sample.
+fn bucket_of(ns: u64) -> usize {
+    if ns == 0 {
+        0
+    } else {
+        ((64 - ns.leading_zeros()) as usize).min(BUCKET_COUNT - 1)
+    }
+}
+
+/// Inclusive upper bound of a bucket, in nanoseconds.
+fn bucket_upper_ns(idx: usize) -> u64 {
+    if idx == 0 {
+        0
+    } else {
+        (1u64 << idx) - 1
+    }
+}
+
+/// A fixed-bucket latency histogram over nanosecond samples.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Histogram {
+    counts: [u64; BUCKET_COUNT],
+    total: u64,
+    sum_ns: u64,
+    max_ns: u64,
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Histogram {
+            counts: [0; BUCKET_COUNT],
+            total: 0,
+            sum_ns: 0,
+            max_ns: 0,
+        }
+    }
+}
+
+impl Histogram {
+    /// Record one sample.
+    pub fn record(&mut self, ns: u64) {
+        self.counts[bucket_of(ns)] += 1;
+        self.total += 1;
+        self.sum_ns = self.sum_ns.saturating_add(ns);
+        self.max_ns = self.max_ns.max(ns);
+    }
+
+    /// Fold another histogram into this one. Because buckets are fixed,
+    /// a merge of any partition of a sample set equals the histogram of
+    /// the whole set, bit for bit.
+    pub fn merge(&mut self, other: &Histogram) {
+        for (mine, theirs) in self.counts.iter_mut().zip(other.counts.iter()) {
+            *mine += theirs;
+        }
+        self.total += other.total;
+        self.sum_ns = self.sum_ns.saturating_add(other.sum_ns);
+        self.max_ns = self.max_ns.max(other.max_ns);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.total
+    }
+
+    pub fn sum_ns(&self) -> u64 {
+        self.sum_ns
+    }
+
+    pub fn max_ns(&self) -> u64 {
+        self.max_ns
+    }
+
+    pub fn mean_ns(&self) -> f64 {
+        if self.total == 0 {
+            f64::NAN
+        } else {
+            self.sum_ns as f64 / self.total as f64
+        }
+    }
+
+    /// The value at (at least) percentile `pct` (0..=100), as the
+    /// inclusive upper bound of the bucket holding that rank, capped at
+    /// the observed maximum. Integer math only; 0 for an empty
+    /// histogram.
+    pub fn percentile_ns(&self, pct: u32) -> u64 {
+        if self.total == 0 {
+            return 0;
+        }
+        let rank = (self.total * u64::from(pct)).div_ceil(100).max(1);
+        let mut cum = 0u64;
+        for (i, &c) in self.counts.iter().enumerate() {
+            cum += c;
+            if cum >= rank {
+                return bucket_upper_ns(i).min(self.max_ns);
+            }
+        }
+        self.max_ns
+    }
+
+    /// JSON projection: count + p50/p95/p99/mean/max in microseconds.
+    pub fn to_json(&self) -> Json {
+        let us = |ns: u64| Json::Num(ns as f64 / 1000.0);
+        Json::obj(vec![
+            ("count", Json::Num(self.total as f64)),
+            ("p50_us", us(self.percentile_ns(50))),
+            ("p95_us", us(self.percentile_ns(95))),
+            ("p99_us", us(self.percentile_ns(99))),
+            ("mean_us", Json::Num(self.mean_ns() / 1000.0)),
+            ("max_us", us(self.max_ns)),
+        ])
+    }
+}
+
+/// Per-(request kind × stage) histograms, fixed enum order. The
+/// service folds drained traces in here; `merge` combines fold
+/// partitions without order sensitivity.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct LatencyMatrix {
+    cells: [[Histogram; Stage::COUNT]; ReqKind::COUNT],
+}
+
+impl Default for LatencyMatrix {
+    fn default() -> Self {
+        LatencyMatrix {
+            cells: [[Histogram::default(); Stage::COUNT]; ReqKind::COUNT],
+        }
+    }
+}
+
+impl LatencyMatrix {
+    pub fn record(&mut self, kind: ReqKind, stage: Stage, ns: u64) {
+        self.cells[kind.index()][stage.index()].record(ns);
+    }
+
+    pub fn merge(&mut self, other: &LatencyMatrix) {
+        for (mine, theirs) in self.cells.iter_mut().zip(other.cells.iter()) {
+            for (m, t) in mine.iter_mut().zip(theirs.iter()) {
+                m.merge(t);
+            }
+        }
+    }
+
+    pub fn cell(&self, kind: ReqKind, stage: Stage) -> &Histogram {
+        &self.cells[kind.index()][stage.index()]
+    }
+
+    /// Sum of recorded nanoseconds for one stage across every request
+    /// kind (e.g. total featurize time regardless of what triggered the
+    /// retrain).
+    pub fn stage_sum_ns(&self, stage: Stage) -> u64 {
+        ReqKind::ALL
+            .iter()
+            .map(|k| self.cell(*k, stage).sum_ns())
+            .sum()
+    }
+
+    /// True when nothing has been recorded.
+    pub fn is_empty(&self) -> bool {
+        ReqKind::ALL
+            .iter()
+            .all(|k| self.cell(*k, Stage::Total).count() == 0)
+    }
+
+    /// JSON projection (the `--json` `latency.kinds` block): one entry
+    /// per request kind with end-to-end percentiles plus per-stage
+    /// breakdowns; kinds and stages with zero samples are omitted, the
+    /// rest appear in fixed enum order.
+    pub fn to_json(&self) -> Json {
+        let kinds: Vec<Json> = ReqKind::ALL
+            .iter()
+            .copied()
+            .filter(|k| self.cell(*k, Stage::Total).count() > 0)
+            .map(|k| {
+                let stages: Vec<Json> = Stage::ALL
+                    .iter()
+                    .copied()
+                    .filter(|s| *s != Stage::Total && self.cell(k, *s).count() > 0)
+                    .map(|s| {
+                        let mut fields =
+                            vec![("stage".to_string(), Json::Str(s.name().to_string()))];
+                        if let Json::Obj(kvs) = self.cell(k, s).to_json() {
+                            fields.extend(kvs);
+                        }
+                        Json::Obj(fields)
+                    })
+                    .collect();
+                Json::obj(vec![
+                    ("kind", Json::Str(k.name().to_string())),
+                    ("total", self.cell(k, Stage::Total).to_json()),
+                    ("stages", Json::Arr(stages)),
+                ])
+            })
+            .collect();
+        Json::Arr(kinds)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg32;
+
+    #[test]
+    fn buckets_are_powers_of_two() {
+        assert_eq!(bucket_of(0), 0);
+        assert_eq!(bucket_of(1), 1);
+        assert_eq!(bucket_of(2), 2);
+        assert_eq!(bucket_of(3), 2);
+        assert_eq!(bucket_of(4), 3);
+        assert_eq!(bucket_of(1023), 10);
+        assert_eq!(bucket_of(1024), 11);
+        assert_eq!(bucket_of(u64::MAX), BUCKET_COUNT - 1);
+        for i in 1..BUCKET_COUNT - 1 {
+            // the upper bound of bucket i is the last value mapping to it
+            assert_eq!(bucket_of(bucket_upper_ns(i)), i);
+            assert_eq!(bucket_of(bucket_upper_ns(i) + 1), i + 1);
+        }
+    }
+
+    #[test]
+    fn percentiles_on_known_samples() {
+        let mut h = Histogram::default();
+        for ns in [10u64, 20, 30, 1000, 5_000_000] {
+            h.record(ns);
+        }
+        assert_eq!(h.count(), 5);
+        assert_eq!(h.max_ns(), 5_000_000);
+        // p100 is always the observed max
+        assert_eq!(h.percentile_ns(100), 5_000_000);
+        // p50 = rank 3 of 5 → the bucket of 30 ([16,31] → upper 31)
+        assert_eq!(h.percentile_ns(50), 31);
+        // empty histogram reports 0 everywhere
+        assert_eq!(Histogram::default().percentile_ns(99), 0);
+    }
+
+    #[test]
+    fn merge_of_splits_equals_whole() {
+        // property: histogram over S == merge of histograms over any
+        // partition of S, for pseudorandom samples and split points
+        let mut rng = Pcg32::new(0xC30);
+        for _ in 0..50 {
+            let n = (rng.next_u64() % 200) as usize + 1;
+            let samples: Vec<u64> = (0..n).map(|_| rng.next_u64() % (1 << 36)).collect();
+            let split = (rng.next_u64() as usize) % (n + 1);
+            let mut whole = Histogram::default();
+            for &s in &samples {
+                whole.record(s);
+            }
+            let mut left = Histogram::default();
+            let mut right = Histogram::default();
+            for &s in &samples[..split] {
+                left.record(s);
+            }
+            for &s in &samples[split..] {
+                right.record(s);
+            }
+            left.merge(&right);
+            assert_eq!(left, whole, "merge of a split must equal the whole");
+        }
+    }
+
+    #[test]
+    fn percentiles_are_monotone_in_pct() {
+        let mut rng = Pcg32::new(7);
+        for _ in 0..20 {
+            let mut h = Histogram::default();
+            let n = (rng.next_u64() % 300) as usize + 1;
+            for _ in 0..n {
+                h.record(rng.next_u64() % (1 << 30));
+            }
+            let mut last = 0u64;
+            for pct in 0..=100 {
+                let v = h.percentile_ns(pct);
+                assert!(v >= last, "p{pct} {v} < p{} {last}", pct - 1);
+                assert!(v <= h.max_ns());
+                last = v;
+            }
+        }
+    }
+
+    #[test]
+    fn matrix_folds_like_metrics() {
+        let mut a = LatencyMatrix::default();
+        let mut b = LatencyMatrix::default();
+        let mut whole = LatencyMatrix::default();
+        for (i, ns) in [100u64, 2000, 35, 9_999_999].iter().enumerate() {
+            let kind = ReqKind::ALL[i % ReqKind::COUNT];
+            let stage = Stage::ALL[i % Stage::COUNT];
+            whole.record(kind, stage, *ns);
+            if i % 2 == 0 {
+                a.record(kind, stage, *ns);
+            } else {
+                b.record(kind, stage, *ns);
+            }
+        }
+        a.merge(&b);
+        assert_eq!(a, whole);
+        assert!(LatencyMatrix::default().is_empty());
+    }
+}

@@ -1,0 +1,729 @@
+//! Structured tracing & latency observability for the serving stack.
+//!
+//! The paper's collaborative pitch only holds if shared-data serving
+//! stays cheap as contributions accumulate — so the server applies the
+//! C3O lens to itself and captures runtime data about its *own*
+//! executions. Three layers:
+//!
+//! * **Per-request span traces** — every request handled by the
+//!   concurrent service carries a [`Trace`]: a fixed-capacity list of
+//!   monotonic [`Stage`] spans (queue wait, coalesce-group assembly,
+//!   shard-lock wait, featurize/cross-validate/winner-fit, predict,
+//!   WAL append, fsync, reply) recorded through RAII [`SpanGuard`]s.
+//!   Finished traces are `force_push`ed into per-worker lock-free
+//!   [`ring::Ring`]s — allocation-free on the hot path, bounded, and
+//!   drained by the service when a report or export is requested.
+//!   Stages measured *inside* a shard (the retrain split, WAL I/O)
+//!   surface as durations via [`StageScratch`]; the service lays them
+//!   out back-to-front ending at the drain instant, so their widths
+//!   are exact while their offsets are reconstructed.
+//! * **Log-bucketed latency histograms** — drained traces fold into a
+//!   [`hist::LatencyMatrix`] (request kind × stage), fixed power-of-2
+//!   buckets with exact-given-bucketing p50/p95/p99 ([`hist`]). All
+//!   array math, no maps: the matrix is registered in the lint's
+//!   deterministic zone.
+//! * **Exporters** — [`Collector::chrome_trace_json`] renders the
+//!   retained trace window as Chrome trace-event JSON (loadable in
+//!   Perfetto / `chrome://tracing`); [`Report::to_json`] is the
+//!   `latency` block of `c3o serve --json`; [`SlowCapture`] retains
+//!   the K worst full span breakdowns per request kind.
+//!
+//! Tracing is **behaviorally inert**: a disabled collector hands out
+//! no-op traces ([`Trace::off`]) that never read the clock, and an
+//! enabled one only ever *observes* timings — the client suite asserts
+//! bitwise-identical decisions either way, and `serve_throughput`
+//! records the overhead.
+
+pub mod hist;
+pub mod ring;
+
+pub use hist::{Histogram, LatencyMatrix};
+pub use ring::Ring;
+
+use crate::util::json::Json;
+use crate::util::sync::LockExt;
+use std::collections::VecDeque;
+use std::sync::Mutex;
+use std::time::Instant;
+
+/// One pipeline stage of a request's life. `Total` is the synthetic
+/// end-to-end span the collector seals onto every trace.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Stage {
+    /// Channel time between enqueue and a worker picking the item up.
+    QueueWait,
+    /// Draining same-kind neighbors into a coalesced batch.
+    CoalesceAssembly,
+    /// Blocking on the shard mutex (write path only).
+    ShardLockWait,
+    /// Feature-matrix refresh ahead of a retrain.
+    Featurize,
+    /// Cross-validation over the candidate model kinds.
+    CrossValidate,
+    /// Fitting the CV winner on the full repository.
+    WinnerFit,
+    /// Model inference (batch candidate scoring).
+    Predict,
+    /// WAL line rendering + write + flush.
+    WalAppend,
+    /// `fsync` of the WAL segment.
+    Fsync,
+    /// Delivering replies to the waiting clients.
+    Reply,
+    /// The whole request, enqueue to reply.
+    Total,
+}
+
+impl Stage {
+    pub const COUNT: usize = 11;
+    pub const ALL: [Stage; Stage::COUNT] = [
+        Stage::QueueWait,
+        Stage::CoalesceAssembly,
+        Stage::ShardLockWait,
+        Stage::Featurize,
+        Stage::CrossValidate,
+        Stage::WinnerFit,
+        Stage::Predict,
+        Stage::WalAppend,
+        Stage::Fsync,
+        Stage::Reply,
+        Stage::Total,
+    ];
+
+    pub fn index(self) -> usize {
+        self as usize
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Stage::QueueWait => "queue_wait",
+            Stage::CoalesceAssembly => "coalesce_assembly",
+            Stage::ShardLockWait => "shard_lock_wait",
+            Stage::Featurize => "featurize",
+            Stage::CrossValidate => "cross_validate",
+            Stage::WinnerFit => "winner_fit",
+            Stage::Predict => "predict",
+            Stage::WalAppend => "wal_append",
+            Stage::Fsync => "fsync",
+            Stage::Reply => "reply",
+            Stage::Total => "total",
+        }
+    }
+}
+
+/// The request classes latency is keyed by.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ReqKind {
+    Recommend,
+    Submit,
+    Contribute,
+    Share,
+    /// Watermarks / SyncPull / SyncPush (either protocol version).
+    Sync,
+    /// Metrics, snapshot info, and anything else cheap.
+    Other,
+}
+
+impl ReqKind {
+    pub const COUNT: usize = 6;
+    pub const ALL: [ReqKind; ReqKind::COUNT] = [
+        ReqKind::Recommend,
+        ReqKind::Submit,
+        ReqKind::Contribute,
+        ReqKind::Share,
+        ReqKind::Sync,
+        ReqKind::Other,
+    ];
+
+    pub fn index(self) -> usize {
+        self as usize
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            ReqKind::Recommend => "recommend",
+            ReqKind::Submit => "submit",
+            ReqKind::Contribute => "contribute",
+            ReqKind::Share => "share",
+            ReqKind::Sync => "sync",
+            ReqKind::Other => "other",
+        }
+    }
+}
+
+/// One recorded stage span: offsets are nanoseconds since the
+/// collector's epoch.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Span {
+    pub stage: Stage,
+    pub start_ns: u64,
+    pub dur_ns: u64,
+}
+
+const ZERO_SPAN: Span = Span {
+    stage: Stage::Total,
+    start_ns: 0,
+    dur_ns: 0,
+};
+
+/// Spans one trace can hold; the write path records ~10.
+pub const TRACE_SPAN_CAP: usize = 16;
+
+/// The span record one request carries through the pipeline.
+/// Fixed-size, `Copy`-free but allocation-free; an inactive trace
+/// (`Trace::off`) never reads the clock.
+#[derive(Debug, Clone)]
+pub struct Trace {
+    kind: ReqKind,
+    worker: u32,
+    /// Requests answered by this trace (coalesced group size).
+    group: u32,
+    /// Trace start, nanoseconds since the collector epoch.
+    start_ns: u64,
+    /// The collector epoch; `None` = tracing disabled (no-op trace).
+    epoch: Option<Instant>,
+    spans: [Span; TRACE_SPAN_CAP],
+    len: u8,
+    /// Spans discarded because the fixed array filled up.
+    dropped_spans: u8,
+}
+
+fn ns_between(earlier: Instant, later: Instant) -> u64 {
+    later.duration_since(earlier).as_nanos() as u64
+}
+
+impl Trace {
+    /// A disabled trace: every recording call is a no-op and no clock
+    /// is ever read.
+    pub fn off() -> Trace {
+        Trace {
+            kind: ReqKind::Other,
+            worker: 0,
+            group: 1,
+            start_ns: 0,
+            epoch: None,
+            spans: [ZERO_SPAN; TRACE_SPAN_CAP],
+            len: 0,
+            dropped_spans: 0,
+        }
+    }
+
+    /// An active trace starting now.
+    pub fn start(kind: ReqKind, worker: u32, epoch: Instant) -> Trace {
+        let mut t = Trace::off();
+        t.kind = kind;
+        t.worker = worker;
+        t.start_ns = ns_between(epoch, Instant::now());
+        t.epoch = Some(epoch);
+        t
+    }
+
+    pub fn is_on(&self) -> bool {
+        self.epoch.is_some()
+    }
+
+    pub fn kind(&self) -> ReqKind {
+        self.kind
+    }
+
+    pub fn worker(&self) -> u32 {
+        self.worker
+    }
+
+    pub fn group(&self) -> u32 {
+        self.group
+    }
+
+    pub fn set_group(&mut self, n: u32) {
+        self.group = n.max(1);
+    }
+
+    pub fn spans(&self) -> &[Span] {
+        &self.spans[..self.len as usize]
+    }
+
+    pub fn dropped_spans(&self) -> u8 {
+        self.dropped_spans
+    }
+
+    pub fn start_ns(&self) -> u64 {
+        self.start_ns
+    }
+
+    /// Nanoseconds since the collector epoch (0 when disabled).
+    pub fn now_rel_ns(&self) -> u64 {
+        self.epoch.map_or(0, |e| ns_between(e, Instant::now()))
+    }
+
+    /// Open a stage span; it records itself when the guard drops.
+    pub fn span(&mut self, stage: Stage) -> SpanGuard<'_> {
+        let started = self.epoch.map(|_| Instant::now());
+        SpanGuard {
+            trace: self,
+            stage,
+            started,
+        }
+    }
+
+    /// Record a span that began at `at` (e.g. the enqueue instant) and
+    /// ends now.
+    pub fn span_from(&mut self, stage: Stage, at: Instant) {
+        if let Some(epoch) = self.epoch {
+            let end = Instant::now();
+            self.push_span(stage, ns_between(epoch, at), ns_between(at, end));
+        }
+    }
+
+    /// Record a duration-only span laid out to *end* at `end_rel_ns`
+    /// (stages measured inside the shard expose durations, not start
+    /// instants — widths are exact, offsets reconstructed).
+    pub fn push_dur(&mut self, stage: Stage, dur_ns: u64, end_rel_ns: u64) {
+        if self.epoch.is_some() && dur_ns > 0 {
+            self.push_span(stage, end_rel_ns.saturating_sub(dur_ns), dur_ns);
+        }
+    }
+
+    fn push_span(&mut self, stage: Stage, start_ns: u64, dur_ns: u64) {
+        if (self.len as usize) < TRACE_SPAN_CAP {
+            self.spans[self.len as usize] = Span {
+                stage,
+                start_ns,
+                dur_ns,
+            };
+            self.len += 1;
+        } else {
+            self.dropped_spans = self.dropped_spans.saturating_add(1);
+        }
+    }
+
+    /// End-to-end duration (the sealed `Total` span, or 0 pre-seal).
+    pub fn total_ns(&self) -> u64 {
+        self.spans()
+            .iter()
+            .find(|s| s.stage == Stage::Total)
+            .map_or(0, |s| s.dur_ns)
+    }
+
+    /// Seal the trace with its synthetic `Total` span, enqueue → now.
+    fn seal(&mut self) {
+        if self.epoch.is_some() {
+            let total = self.now_rel_ns().saturating_sub(self.start_ns);
+            self.push_span(Stage::Total, self.start_ns, total);
+        }
+    }
+}
+
+/// RAII span: opened by [`Trace::span`], records on drop. On an
+/// inactive trace the guard holds no instant and drops for free.
+pub struct SpanGuard<'t> {
+    trace: &'t mut Trace,
+    stage: Stage,
+    started: Option<Instant>,
+}
+
+impl SpanGuard<'_> {
+    /// Explicitly end the span (alias for dropping the guard).
+    pub fn end(self) {}
+}
+
+impl Drop for SpanGuard<'_> {
+    fn drop(&mut self) {
+        if let (Some(t0), Some(epoch)) = (self.started.take(), self.trace.epoch) {
+            let end = Instant::now();
+            self.trace
+                .push_span(self.stage, ns_between(epoch, t0), ns_between(t0, end));
+        }
+    }
+}
+
+/// Per-stage nanosecond accumulator for code that cannot carry a
+/// `Trace` (shard internals, the store). Writers `add` durations; the
+/// service `take`s the array while still holding the shard lock and
+/// converts it into trace spans. A fixed array: the sequential
+/// coordinator never drains it, and that is harmless.
+#[derive(Debug, Clone)]
+pub struct StageScratch {
+    nanos: [u64; Stage::COUNT],
+}
+
+impl Default for StageScratch {
+    fn default() -> Self {
+        StageScratch {
+            nanos: [0; Stage::COUNT],
+        }
+    }
+}
+
+impl StageScratch {
+    pub fn add(&mut self, stage: Stage, ns: u64) {
+        self.nanos[stage.index()] = self.nanos[stage.index()].saturating_add(ns);
+    }
+
+    /// Take and reset the accumulated durations, indexed by
+    /// [`Stage::index`].
+    pub fn take(&mut self) -> [u64; Stage::COUNT] {
+        let out = self.nanos;
+        self.nanos = [0; Stage::COUNT];
+        out
+    }
+}
+
+/// Worst-K full span breakdowns per request kind, ranked by total
+/// duration.
+#[derive(Debug, Clone, Default)]
+pub struct SlowCapture {
+    worst: [Vec<Trace>; ReqKind::COUNT],
+}
+
+/// Slow traces retained per request kind.
+pub const SLOW_CAPTURE_K: usize = 4;
+
+impl SlowCapture {
+    fn offer(&mut self, trace: &Trace) {
+        let lane = &mut self.worst[trace.kind.index()];
+        let total = trace.total_ns();
+        if lane.len() == SLOW_CAPTURE_K
+            && total <= lane.last().map_or(0, |t| t.total_ns())
+        {
+            return;
+        }
+        let at = lane
+            .iter()
+            .position(|t| t.total_ns() < total)
+            .unwrap_or(lane.len());
+        lane.insert(at, trace.clone());
+        lane.truncate(SLOW_CAPTURE_K);
+    }
+
+    /// Retained traces for one kind, slowest first.
+    pub fn worst(&self, kind: ReqKind) -> &[Trace] {
+        &self.worst[kind.index()]
+    }
+
+    fn to_json(&self) -> Json {
+        let rows: Vec<Json> = ReqKind::ALL
+            .iter()
+            .copied()
+            .flat_map(|k| self.worst[k.index()].iter())
+            .map(|t| {
+                let spans: Vec<Json> = t
+                    .spans()
+                    .iter()
+                    .map(|s| {
+                        Json::obj(vec![
+                            ("stage", Json::Str(s.stage.name().to_string())),
+                            ("start_us", Json::Num(s.start_ns as f64 / 1000.0)),
+                            ("dur_us", Json::Num(s.dur_ns as f64 / 1000.0)),
+                        ])
+                    })
+                    .collect();
+                Json::obj(vec![
+                    ("kind", Json::Str(t.kind.name().to_string())),
+                    ("worker", Json::Num(t.worker as f64)),
+                    ("group", Json::Num(t.group as f64)),
+                    ("total_us", Json::Num(t.total_ns() as f64 / 1000.0)),
+                    ("spans", Json::Arr(spans)),
+                ])
+            })
+            .collect();
+        Json::Arr(rows)
+    }
+}
+
+/// Traces the collector retains for the Chrome export (drop-oldest).
+const EXPORT_WINDOW_CAP: usize = 4096;
+
+/// Per-worker trace ring capacity.
+const LANE_CAP: usize = 1024;
+
+/// What the collector has aggregated so far, behind its internal
+/// mutex (folded only on drains — never on the request hot path).
+#[derive(Debug, Clone, Default)]
+struct Aggregate {
+    lat: LatencyMatrix,
+    slow: SlowCapture,
+    window: VecDeque<Trace>,
+    drained: u64,
+}
+
+impl Aggregate {
+    fn fold(&mut self, trace: Trace) {
+        for s in trace.spans() {
+            self.lat.record(trace.kind, s.stage, s.dur_ns);
+        }
+        self.slow.offer(&trace);
+        self.drained += 1;
+        if self.window.len() == EXPORT_WINDOW_CAP {
+            self.window.pop_front();
+        }
+        self.window.push_back(trace);
+    }
+}
+
+/// The service-wide trace collector: hands out traces, owns the
+/// per-worker rings, and aggregates drained traces into histograms,
+/// the slow capture, and the Chrome-export window.
+#[derive(Debug)]
+pub struct Collector {
+    enabled: bool,
+    epoch: Instant,
+    lanes: Vec<Ring<Trace>>,
+    agg: Mutex<Aggregate>,
+}
+
+impl Collector {
+    pub fn new(workers: usize, enabled: bool) -> Collector {
+        Collector {
+            enabled,
+            epoch: Instant::now(),
+            lanes: (0..workers.max(1)).map(|_| Ring::new(LANE_CAP)).collect(),
+            agg: Mutex::new(Aggregate::default()),
+        }
+    }
+
+    pub fn enabled(&self) -> bool {
+        self.enabled
+    }
+
+    pub fn epoch(&self) -> Instant {
+        self.epoch
+    }
+
+    /// A trace for one request on `worker` — active iff the collector
+    /// is enabled.
+    pub fn trace(&self, kind: ReqKind, worker: usize) -> Trace {
+        if self.enabled {
+            Trace::start(kind, worker as u32, self.epoch)
+        } else {
+            Trace::off()
+        }
+    }
+
+    /// Hot path: seal a finished trace and push it into its worker's
+    /// ring. Lock-free, allocation-free; inactive traces are dropped.
+    pub fn ingest(&self, mut trace: Trace) {
+        if !trace.is_on() {
+            return;
+        }
+        trace.seal();
+        let lane = trace.worker as usize % self.lanes.len();
+        self.lanes[lane].force_push(trace);
+    }
+
+    /// Drain every worker ring into the aggregate.
+    fn drain(&self) {
+        let mut agg = self.agg.lock_unpoisoned();
+        for lane in &self.lanes {
+            while let Some(t) = lane.pop() {
+                agg.fold(t);
+            }
+        }
+    }
+
+    /// Traces overwritten in the rings before any drain saw them.
+    pub fn lost(&self) -> u64 {
+        self.lanes.iter().map(|l| l.lost()).sum()
+    }
+
+    /// Drain and snapshot the aggregate.
+    pub fn report(&self) -> Report {
+        self.drain();
+        let agg = self.agg.lock_unpoisoned();
+        Report {
+            lat: agg.lat.clone(),
+            slow: agg.slow.clone(),
+            drained: agg.drained,
+            lost: self.lost(),
+        }
+    }
+
+    /// Drain and render the retained trace window as Chrome trace-event
+    /// JSON (the `--trace-out` payload; loadable in Perfetto and
+    /// `chrome://tracing`).
+    pub fn chrome_trace_json(&self) -> Json {
+        self.drain();
+        let agg = self.agg.lock_unpoisoned();
+        let mut events: Vec<Json> = Vec::new();
+        events.push(Json::obj(vec![
+            ("name", Json::Str("process_name".into())),
+            ("ph", Json::Str("M".into())),
+            ("pid", Json::Num(1.0)),
+            ("tid", Json::Num(0.0)),
+            (
+                "args",
+                Json::obj(vec![("name", Json::Str("c3o serve".into()))]),
+            ),
+        ]));
+        let workers = self.lanes.len();
+        for w in 0..workers {
+            events.push(Json::obj(vec![
+                ("name", Json::Str("thread_name".into())),
+                ("ph", Json::Str("M".into())),
+                ("pid", Json::Num(1.0)),
+                ("tid", Json::Num((w + 1) as f64)),
+                (
+                    "args",
+                    Json::obj(vec![("name", Json::Str(format!("worker-{w}")))]),
+                ),
+            ]));
+        }
+        for t in &agg.window {
+            for s in t.spans() {
+                events.push(Json::obj(vec![
+                    ("name", Json::Str(s.stage.name().to_string())),
+                    ("cat", Json::Str(t.kind.name().to_string())),
+                    ("ph", Json::Str("X".into())),
+                    ("pid", Json::Num(1.0)),
+                    ("tid", Json::Num((t.worker + 1) as f64)),
+                    ("ts", Json::Num(s.start_ns as f64 / 1000.0)),
+                    ("dur", Json::Num(s.dur_ns as f64 / 1000.0)),
+                    (
+                        "args",
+                        Json::obj(vec![("group", Json::Num(t.group as f64))]),
+                    ),
+                ]));
+            }
+        }
+        Json::obj(vec![
+            ("traceEvents", Json::Arr(events)),
+            ("displayTimeUnit", Json::Str("ms".into())),
+        ])
+    }
+}
+
+/// A drained observability snapshot: the latency matrix, the worst-K
+/// slow traces, and the drain/loss accounting.
+#[derive(Debug, Clone)]
+pub struct Report {
+    pub lat: LatencyMatrix,
+    pub slow: SlowCapture,
+    /// Traces folded into the aggregate so far.
+    pub drained: u64,
+    /// Traces overwritten in the rings before a drain saw them.
+    pub lost: u64,
+}
+
+impl Report {
+    pub fn is_empty(&self) -> bool {
+        self.drained == 0
+    }
+
+    /// The `latency` block of `c3o serve --json`.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("traces", Json::Num(self.drained as f64)),
+            ("traces_lost", Json::Num(self.lost as f64)),
+            ("kinds", self.lat.to_json()),
+            ("slowest", self.slow.to_json()),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn off_trace_records_nothing() {
+        let mut t = Trace::off();
+        assert!(!t.is_on());
+        t.span(Stage::Predict).end();
+        t.span_from(Stage::QueueWait, Instant::now());
+        t.push_dur(Stage::Fsync, 123, 456);
+        assert!(t.spans().is_empty());
+        assert_eq!(t.total_ns(), 0);
+    }
+
+    #[test]
+    fn span_guards_record_on_drop() {
+        let epoch = Instant::now();
+        let mut t = Trace::start(ReqKind::Submit, 3, epoch);
+        {
+            let _g = t.span(Stage::Predict);
+            std::hint::black_box(0u64);
+        }
+        t.push_dur(Stage::Fsync, 500, t.now_rel_ns());
+        assert_eq!(t.spans().len(), 2);
+        assert_eq!(t.spans()[0].stage, Stage::Predict);
+        assert_eq!(t.spans()[1].stage, Stage::Fsync);
+        assert_eq!(t.spans()[1].dur_ns, 500);
+        assert_eq!(t.worker(), 3);
+    }
+
+    #[test]
+    fn span_overflow_is_counted_not_grown() {
+        let mut t = Trace::start(ReqKind::Other, 0, Instant::now());
+        for _ in 0..TRACE_SPAN_CAP + 5 {
+            t.push_dur(Stage::Reply, 1, 1);
+        }
+        assert_eq!(t.spans().len(), TRACE_SPAN_CAP);
+        assert_eq!(t.dropped_spans(), 5);
+    }
+
+    #[test]
+    fn collector_round_trip() {
+        let c = Collector::new(2, true);
+        for i in 0..10u32 {
+            let mut t = c.trace(ReqKind::Recommend, (i % 2) as usize);
+            t.push_dur(Stage::Predict, 1000 + u64::from(i), t.now_rel_ns());
+            c.ingest(t);
+        }
+        let report = c.report();
+        assert_eq!(report.drained, 10);
+        assert_eq!(report.lost, 0);
+        assert_eq!(
+            report.lat.cell(ReqKind::Recommend, Stage::Predict).count(),
+            10
+        );
+        assert_eq!(report.lat.cell(ReqKind::Recommend, Stage::Total).count(), 10);
+        assert_eq!(report.slow.worst(ReqKind::Recommend).len(), SLOW_CAPTURE_K);
+        // the chrome export holds every span of the drained window
+        let doc = c.chrome_trace_json();
+        let rendered = doc.render();
+        assert!(rendered.contains("\"traceEvents\""));
+        assert!(rendered.contains("\"predict\""));
+        assert!(rendered.contains("\"ph\":\"X\""));
+    }
+
+    #[test]
+    fn disabled_collector_is_inert() {
+        let c = Collector::new(2, false);
+        let mut t = c.trace(ReqKind::Submit, 0);
+        assert!(!t.is_on());
+        t.span(Stage::Predict).end();
+        c.ingest(t);
+        let report = c.report();
+        assert!(report.is_empty());
+        assert!(report.lat.is_empty());
+    }
+
+    #[test]
+    fn slow_capture_keeps_the_worst_k_sorted() {
+        let mut cap = SlowCapture::default();
+        let epoch = Instant::now();
+        for total in [5u64, 90, 10, 70, 40, 100, 1] {
+            let mut t = Trace::start(ReqKind::Submit, 0, epoch);
+            // hand-seal with a known total
+            t.push_span(Stage::Total, 0, total);
+            cap.offer(&t);
+        }
+        let worst: Vec<u64> = cap
+            .worst(ReqKind::Submit)
+            .iter()
+            .map(|t| t.total_ns())
+            .collect();
+        assert_eq!(worst, vec![100, 90, 70, 40]);
+    }
+
+    #[test]
+    fn scratch_accumulates_and_resets() {
+        let mut s = StageScratch::default();
+        s.add(Stage::Featurize, 10);
+        s.add(Stage::Featurize, 5);
+        s.add(Stage::Fsync, 7);
+        let taken = s.take();
+        assert_eq!(taken[Stage::Featurize.index()], 15);
+        assert_eq!(taken[Stage::Fsync.index()], 7);
+        assert_eq!(s.take(), [0; Stage::COUNT]);
+    }
+}

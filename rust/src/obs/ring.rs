@@ -1,0 +1,231 @@
+//! Bounded lock-free MPMC ring buffer with overwrite-oldest semantics.
+//!
+//! The trace collector's hot path: a worker finishing a request
+//! `force_push`es its [`super::Trace`] into its lane — no allocation,
+//! no mutex — and the service drains lanes with [`Ring::pop`] when a
+//! report or export is requested. The queue is the classic
+//! Vyukov bounded MPMC design: every slot carries a sequence number
+//! that hands the slot back and forth between producers and consumers,
+//! so a slot's payload is only ever touched by the thread that won the
+//! CAS for it (no seqlock-style torn reads; clean under
+//! ThreadSanitizer). When the ring is full, `force_push` pops (and
+//! drops) the oldest entry and retries, counting the overwrite — a
+//! bounded trace window degrades by forgetting history, never by
+//! blocking the serving path.
+
+use std::cell::UnsafeCell;
+use std::mem::MaybeUninit;
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+
+struct Slot<T> {
+    /// Slot handoff state. `seq == pos`: free for the producer whose
+    /// ticket is `pos`; `seq == pos + 1`: holds that producer's value,
+    /// free for the matching consumer; consumers release with
+    /// `seq = pos + capacity` for the next lap.
+    seq: AtomicUsize,
+    val: UnsafeCell<MaybeUninit<T>>,
+}
+
+/// Bounded MPMC queue (power-of-two capacity).
+pub struct Ring<T> {
+    slots: Box<[Slot<T>]>,
+    mask: usize,
+    enq: AtomicUsize,
+    deq: AtomicUsize,
+    /// Entries discarded by `force_push` because the ring was full.
+    lost: AtomicU64,
+}
+
+// SAFETY: values move whole between threads through the slot handoff
+// protocol above — a slot is written only after winning the enq CAS and
+// read only after winning the deq CAS, with release/acquire ordering on
+// `seq` fencing the payload access.
+unsafe impl<T: Send> Send for Ring<T> {}
+unsafe impl<T: Send> Sync for Ring<T> {}
+
+impl<T> Ring<T> {
+    /// A ring holding at least `capacity` entries (rounded up to a
+    /// power of two, minimum 2).
+    pub fn new(capacity: usize) -> Ring<T> {
+        let cap = capacity.next_power_of_two().max(2);
+        let slots: Box<[Slot<T>]> = (0..cap)
+            .map(|i| Slot {
+                seq: AtomicUsize::new(i),
+                val: UnsafeCell::new(MaybeUninit::uninit()),
+            })
+            .collect();
+        Ring {
+            slots,
+            mask: cap - 1,
+            enq: AtomicUsize::new(0),
+            deq: AtomicUsize::new(0),
+            lost: AtomicU64::new(0),
+        }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.slots.len()
+    }
+
+    /// Entries dropped by `force_push` overwrites so far.
+    pub fn lost(&self) -> u64 {
+        self.lost.load(Ordering::Relaxed)
+    }
+
+    /// Try to enqueue; hands the value back when the ring is full.
+    pub fn push(&self, val: T) -> Result<(), T> {
+        let mut pos = self.enq.load(Ordering::Relaxed);
+        loop {
+            let slot = &self.slots[pos & self.mask];
+            let seq = slot.seq.load(Ordering::Acquire);
+            let dif = seq as isize - pos as isize;
+            if dif == 0 {
+                match self.enq.compare_exchange_weak(
+                    pos,
+                    pos.wrapping_add(1),
+                    Ordering::Relaxed,
+                    Ordering::Relaxed,
+                ) {
+                    Ok(_) => {
+                        // SAFETY: winning the CAS gives this thread sole
+                        // ownership of the slot until the Release below.
+                        unsafe { (*slot.val.get()).write(val) };
+                        slot.seq.store(pos.wrapping_add(1), Ordering::Release);
+                        return Ok(());
+                    }
+                    Err(now) => pos = now,
+                }
+            } else if dif < 0 {
+                return Err(val); // full: the slot is still a lap behind
+            } else {
+                pos = self.enq.load(Ordering::Relaxed);
+            }
+        }
+    }
+
+    /// Dequeue the oldest entry, `None` when empty.
+    pub fn pop(&self) -> Option<T> {
+        let mut pos = self.deq.load(Ordering::Relaxed);
+        loop {
+            let slot = &self.slots[pos & self.mask];
+            let seq = slot.seq.load(Ordering::Acquire);
+            let dif = seq as isize - pos.wrapping_add(1) as isize;
+            if dif == 0 {
+                match self.deq.compare_exchange_weak(
+                    pos,
+                    pos.wrapping_add(1),
+                    Ordering::Relaxed,
+                    Ordering::Relaxed,
+                ) {
+                    Ok(_) => {
+                        // SAFETY: winning the CAS gives this thread sole
+                        // ownership of the initialized slot payload.
+                        let val = unsafe { (*slot.val.get()).assume_init_read() };
+                        slot.seq
+                            .store(pos.wrapping_add(self.mask + 1), Ordering::Release);
+                        return Some(val);
+                    }
+                    Err(now) => pos = now,
+                }
+            } else if dif < 0 {
+                return None; // empty
+            } else {
+                pos = self.deq.load(Ordering::Relaxed);
+            }
+        }
+    }
+
+    /// Enqueue unconditionally: when the ring is full, drop the oldest
+    /// entry and retry. Returns how many entries were discarded (0 on a
+    /// clean push), also accumulated in [`Ring::lost`].
+    pub fn force_push(&self, val: T) -> u64 {
+        let mut val = val;
+        let mut dropped = 0u64;
+        loop {
+            match self.push(val) {
+                Ok(()) => {
+                    if dropped > 0 {
+                        self.lost.fetch_add(dropped, Ordering::Relaxed);
+                    }
+                    return dropped;
+                }
+                Err(back) => {
+                    val = back;
+                    if self.pop().is_some() {
+                        dropped += 1;
+                    }
+                }
+            }
+        }
+    }
+}
+
+impl<T> std::fmt::Debug for Ring<T> {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Ring")
+            .field("capacity", &self.capacity())
+            .field("lost", &self.lost())
+            .finish()
+    }
+}
+
+impl<T> Drop for Ring<T> {
+    fn drop(&mut self) {
+        while self.pop().is_some() {}
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    #[test]
+    fn fifo_within_capacity() {
+        let ring: Ring<u32> = Ring::new(8);
+        assert_eq!(ring.capacity(), 8);
+        assert_eq!(ring.pop(), None);
+        for i in 0..8 {
+            assert!(ring.push(i).is_ok());
+        }
+        assert_eq!(ring.push(99), Err(99), "full ring rejects plain push");
+        for i in 0..8 {
+            assert_eq!(ring.pop(), Some(i));
+        }
+        assert_eq!(ring.pop(), None);
+    }
+
+    #[test]
+    fn force_push_overwrites_oldest() {
+        let ring: Ring<u64> = Ring::new(8);
+        let mut dropped = 0;
+        for i in 0..20 {
+            dropped += ring.force_push(i);
+        }
+        assert_eq!(dropped, 12, "20 pushes into 8 slots drop the 12 oldest");
+        assert_eq!(ring.lost(), 12);
+        // what survives is exactly the newest window, still in order
+        let drained: Vec<u64> = std::iter::from_fn(|| ring.pop()).collect();
+        assert_eq!(drained, (12..20).collect::<Vec<u64>>());
+    }
+
+    #[test]
+    fn capacity_rounds_up_to_power_of_two() {
+        assert_eq!(Ring::<u8>::new(0).capacity(), 2);
+        assert_eq!(Ring::<u8>::new(3).capacity(), 4);
+        assert_eq!(Ring::<u8>::new(1024).capacity(), 1024);
+    }
+
+    #[test]
+    fn drop_releases_remaining_entries() {
+        let token = Arc::new(());
+        {
+            let ring: Ring<Arc<()>> = Ring::new(4);
+            for _ in 0..3 {
+                ring.force_push(Arc::clone(&token));
+            }
+            assert_eq!(Arc::strong_count(&token), 4);
+        }
+        assert_eq!(Arc::strong_count(&token), 1, "drop must free queued entries");
+    }
+}

@@ -58,6 +58,12 @@ pub struct SyncStats {
     pub conflicts: u64,
     /// Exchanges that failed (driver keeps going; the next tick retries).
     pub errors: u64,
+    /// Wall-time spent inside `SyncPull` round trips, nanoseconds.
+    /// Observability only — never feeds a protocol decision.
+    pub pull_nanos: u64,
+    /// Wall-time spent inside `SyncPush` round trips (which include the
+    /// receiver's merge/apply), nanoseconds. Observability only.
+    pub push_nanos: u64,
 }
 
 impl SyncStats {
@@ -70,6 +76,8 @@ impl SyncStats {
         self.skipped += other.skipped;
         self.conflicts += other.conflicts;
         self.errors += other.errors;
+        self.pull_nanos += other.pull_nanos;
+        self.push_nanos += other.push_nanos;
     }
 
     /// True when the exchange *changed* no repository in either
@@ -129,7 +137,9 @@ fn exchange_direction(
         Some(marks) => marks,
         None => dst.watermarks(job)?.watermarks,
     };
+    let pull_started = std::time::Instant::now();
     let delta = src.sync_pull(job, marks)?;
+    stats.pull_nanos += pull_started.elapsed().as_nanos() as u64;
     stats.pulls += 1;
     let src_marks = delta.watermarks.clone();
     stats.offered += delta.ops.len() as u64;
@@ -137,7 +147,9 @@ fn exchange_direction(
         orgs.entry(op.org.clone()).or_default().offered += 1;
     }
     if !delta.ops.is_empty() {
+        let push_started = std::time::Instant::now();
         let report = dst.sync_push(job, delta.ops)?;
+        stats.push_nanos += push_started.elapsed().as_nanos() as u64;
         let applied = if inbound {
             &mut stats.records_in
         } else {

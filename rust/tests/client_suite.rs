@@ -323,3 +323,52 @@ fn all_three_deployments_serve_identical_decisions() {
         "service must match the sequential coordinator bit for bit"
     );
 }
+
+#[test]
+fn tracing_is_behaviorally_inert_across_deployments() {
+    // The observability layer must never leak into decisions: the full
+    // protocol scenario served with span tracing enabled and disabled
+    // produces bitwise-identical traces, both equal to the sequential
+    // coordinator's. Only the side channel differs — the traced service
+    // has captured spans, the untraced one has captured nothing.
+    let cloud = Cloud::aws_like();
+    let corpus = corpus(&cloud);
+    let no_artifacts = PathBuf::from("/nonexistent-artifacts");
+
+    let mut coordinator = Coordinator::with_engine(cloud.clone(), Engine::native(), SEED);
+    let coordinator_trace = scenario(&mut coordinator, &corpus);
+
+    let mut traces = Vec::new();
+    for tracing in [true, false] {
+        let service = CoordinatorService::spawn(
+            cloud.clone(),
+            ServiceConfig::default()
+                .with_workers(2)
+                .with_pjrt_workers(0)
+                .with_artifacts_dir(no_artifacts.clone())
+                .with_seed(SEED)
+                .with_tracing(tracing),
+        );
+        let mut client = service.client();
+        traces.push(scenario(&mut client, &corpus));
+
+        let report = service.obs_report();
+        if tracing {
+            assert!(report.drained > 0, "enabled tracing must capture spans");
+            assert!(!report.is_empty(), "enabled tracing must fill histograms");
+        } else {
+            assert_eq!(report.drained, 0, "disabled tracing must capture nothing");
+            assert!(report.is_empty(), "disabled tracing must record no latency");
+        }
+        service.shutdown();
+    }
+
+    assert_eq!(
+        traces[0], coordinator_trace,
+        "traced service must match the sequential coordinator bit for bit"
+    );
+    assert_eq!(
+        traces[1], coordinator_trace,
+        "untraced service must match the sequential coordinator bit for bit"
+    );
+}

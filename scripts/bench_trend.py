@@ -115,6 +115,46 @@ def report_write_mix(doc):
         print(f"{'speedup vs session':<42} {float(speedup):>9.1f}x")
 
 
+def report_latency(doc):
+    """Summarize the tracing-overhead and latency blocks, report-only.
+
+    Percentiles are environment-dependent (CI runner load), so they are
+    never held to a regression floor — the table is for trend eyeballing
+    in the job log and the uploaded artifact.
+    """
+    tracing = doc.get("tracing")
+    if tracing:
+        print("\n--- tracing overhead (report-only, no baseline) ---")
+        for label, key in [
+            ("service 8 clients, tracing on (req/s)", "on_req_per_s"),
+            ("service 8 clients, tracing off (req/s)", "off_req_per_s"),
+        ]:
+            value = tracing.get(key)
+            if value is not None:
+                print(f"{label:<42} {float(value):>10.1f}")
+        overhead = tracing.get("overhead_pct")
+        if overhead is not None:
+            print(f"{'untraced speed advantage':<42} {float(overhead):>9.1f}%")
+    latency = doc.get("latency")
+    if not isinstance(latency, dict):
+        return
+    kinds = latency.get("kinds")
+    if not kinds:
+        return
+    print("\n--- request latency by kind, traced run (report-only) ---")
+    print(f"{'kind':<12} {'count':>8} {'p50 us':>10} {'p95 us':>10} {'p99 us':>10}")
+    for row in kinds:
+        total = row.get("total")
+        if not total:
+            continue
+        print(
+            f"{row.get('kind', '?'):<12} {int(total.get('count', 0)):>8}"
+            f" {float(total.get('p50_us', 0.0)):>10.1f}"
+            f" {float(total.get('p95_us', 0.0)):>10.1f}"
+            f" {float(total.get('p99_us', 0.0)):>10.1f}"
+        )
+
+
 def service_points(doc, section=None, key="jobs_per_s"):
     node = doc.get(section, {}) if section else doc
     return {int(p["clients"]): float(p[key]) for p in node.get("service", [])}
@@ -145,6 +185,7 @@ def main():
             "BENCH_serve_throughput.baseline.json"
         )
         report_write_mix(cur)
+        report_latency(cur)
         for path in extras:
             report_extra(path)
         finish()
@@ -183,6 +224,7 @@ def main():
                 )
 
     report_write_mix(cur)
+    report_latency(cur)
 
     for path in extras:
         report_extra(path)
