@@ -105,6 +105,100 @@ fn main() {
                     .kind,
             )
         });
+
+        // ---- L3: serial vs pooled cross-validated retrain ---------------
+        // The PR-9 scenario: the full dynamic-selection retrain (both
+        // model kinds × 3 CV folds on the 400-row corpus) run serially
+        // and fanned through ComputePools of increasing width. The
+        // decisions are bitwise-identical either way (property-tested in
+        // tests/proptests.rs); this measures the wall-clock side of that
+        // contract and emits BENCH_perf_hotpath.json for bench_trend.py.
+        {
+            use c3o::compute::ComputePool;
+            use c3o::models::selection::{select_and_train, select_and_train_pooled};
+            use c3o::util::json::Json;
+
+            let mut cv_engine = NativeEngine::default();
+            let serial = b
+                .run("l3_cv_retrain_400_rows_serial", || {
+                    black_box(
+                        select_and_train(&mut cv_engine, &cloud, &repo, 3, 9)
+                            .unwrap()
+                            .1
+                            .chosen,
+                    )
+                })
+                .clone();
+            let mut pooled = Vec::new();
+            for threads in [2usize, 4, 8] {
+                let pool = ComputePool::new(threads);
+                let r = b
+                    .run(&format!("l3_cv_retrain_400_rows_pool{threads}"), || {
+                        black_box(
+                            select_and_train_pooled(
+                                &mut cv_engine,
+                                &cloud,
+                                &repo,
+                                3,
+                                9,
+                                None,
+                                Some(&pool),
+                            )
+                            .unwrap()
+                            .1
+                            .chosen,
+                        )
+                    })
+                    .clone();
+                pooled.push((threads, r.mean_ns));
+            }
+            let pool4_mean = pooled
+                .iter()
+                .find(|&&(t, _)| t == 4)
+                .map(|&(_, ns)| ns)
+                .unwrap_or(f64::INFINITY);
+            let speedup4 = serial.mean_ns / pool4_mean;
+            println!("cv retrain speedup (4-thread pool vs serial): {speedup4:.2}x");
+            if speedup4 < 2.0 {
+                eprintln!(
+                    "WARN: pooled CV retrain {speedup4:.2}x below the 2x goal — \
+                     expected on machines with fewer than 4 free cores"
+                );
+            }
+            let json = Json::obj(vec![
+                ("bench", Json::Str("perf_hotpath".to_string())),
+                (
+                    "cv_retrain_400_rows",
+                    Json::obj(vec![
+                        ("rows", Json::Num(repo.len() as f64)),
+                        ("folds", Json::Num(3.0)),
+                        ("model_kinds", Json::Num(2.0)),
+                        ("serial_mean_ns", Json::Num(serial.mean_ns)),
+                        (
+                            "pool",
+                            Json::Arr(
+                                pooled
+                                    .iter()
+                                    .map(|&(threads, mean_ns)| {
+                                        Json::obj(vec![
+                                            ("threads", Json::Num(threads as f64)),
+                                            ("mean_ns", Json::Num(mean_ns)),
+                                            (
+                                                "speedup_vs_serial",
+                                                Json::Num(serial.mean_ns / mean_ns),
+                                            ),
+                                        ])
+                                    })
+                                    .collect(),
+                            ),
+                        ),
+                        ("speedup_pool4_vs_serial", Json::Num(speedup4)),
+                    ]),
+                ),
+            ]);
+            std::fs::write("BENCH_perf_hotpath.json", json.render() + "\n").unwrap();
+            println!("wrote BENCH_perf_hotpath.json");
+        }
     }
 
     // ---- PJRT layers --------------------------------------------------------

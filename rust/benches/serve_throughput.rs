@@ -21,6 +21,12 @@
 //!   the `c3o::obs` layer costs (it must be cheap enough to leave on).
 //!   The traced run also supplies the exported per-kind latency
 //!   percentiles.
+//! * **retrain-heavy**: a 1:1 read/write mix under an aggressive
+//!   retrain policy (`retrain_every = 2`), so writes keep the shards
+//!   busy retraining. This is the shape the two-lane affinity queue is
+//!   for: read-class workers drain the read lane first and steal write
+//!   work only when no reads are queued, so reads keep flowing past the
+//!   retrain storm. The cross-lane steal counters land in the JSON.
 //!
 //! Both paths are warmed by the corpus share (writes train the model),
 //! so initial training is paid outside the timed window; retrains inside
@@ -339,6 +345,55 @@ fn main() {
         traced_req_per_s[0], traced_req_per_s[1]
     );
 
+    // ---- scenario 5: retrain-heavy mix (affinity routing) ---------------
+
+    let retrain_policy = c3o::coordinator::ShardPolicy {
+        retrain_every: 2, // every other write retrains its shard
+        ..Default::default()
+    };
+    let mut retrain_points: Vec<(usize, f64, u64, u64, u64)> = Vec::new();
+    for &clients in &[1usize, 4, 8] {
+        let service = CoordinatorService::spawn(
+            cloud.clone(),
+            ServiceConfig::default()
+                .with_workers(8)
+                .with_pjrt_workers(0)
+                .with_seed(7)
+                .with_policy(retrain_policy.clone()),
+        );
+        for kind in KINDS {
+            service.share(corpus.repo_for(kind)).unwrap();
+        }
+        let t0 = Instant::now();
+        std::thread::scope(|scope| {
+            for c in 0..clients {
+                let client = service.client();
+                scope.spawn(move || {
+                    let org = Organization::new(&format!("client-{c}"));
+                    let mut i = c;
+                    while i < total_jobs {
+                        if i % 2 == 0 {
+                            client.recommend(request_for(i)).unwrap();
+                        } else {
+                            client.submit(&org, request_for(i)).unwrap();
+                        }
+                        i += clients;
+                    }
+                });
+            }
+        });
+        let req_per_s = total_jobs as f64 / t0.elapsed().as_secs_f64();
+        let m = service.metrics().unwrap();
+        let (reads_stolen, writes_stolen) = service.queue_steals();
+        println!(
+            "retrain-heavy service {clients:>2} clients: {req_per_s:>8.1} requests/s  \
+             ({} retrains, {reads_stolen} reads / {writes_stolen} writes stolen)",
+            m.retrains
+        );
+        retrain_points.push((clients, req_per_s, m.retrains, reads_stolen, writes_stolen));
+        service.shutdown();
+    }
+
     let json = Json::obj(vec![
         ("bench", Json::Str("serve_throughput".to_string())),
         ("total_jobs", Json::Num(total_jobs as f64)),
@@ -423,6 +478,32 @@ fn main() {
                 ("on_req_per_s", Json::Num(traced_req_per_s[0])),
                 ("off_req_per_s", Json::Num(traced_req_per_s[1])),
                 ("overhead_pct", Json::Num(tracing_overhead_pct)),
+            ]),
+        ),
+        (
+            "retrain_heavy",
+            Json::obj(vec![
+                (
+                    "mix",
+                    Json::Str("1:1 recommend:submit, retrain_every=2".to_string()),
+                ),
+                (
+                    "service",
+                    Json::Arr(
+                        retrain_points
+                            .iter()
+                            .map(|&(clients, req_per_s, retrains, reads, writes)| {
+                                Json::obj(vec![
+                                    ("clients", Json::Num(clients as f64)),
+                                    ("req_per_s", Json::Num(req_per_s)),
+                                    ("retrains", Json::Num(retrains as f64)),
+                                    ("reads_stolen", Json::Num(reads as f64)),
+                                    ("writes_stolen", Json::Num(writes as f64)),
+                                ])
+                            })
+                            .collect(),
+                    ),
+                ),
             ]),
         ),
         ("latency", latency),

@@ -1,0 +1,255 @@
+//! Shared scoped compute pool for embarrassingly parallel hot loops.
+//!
+//! The retrain critical section — k-fold CV over both [`ModelKind`]s
+//! with every fold trained from scratch — and the all-candidates
+//! configurator scan are both embarrassingly parallel, yet ran fully
+//! serially inside the shard lock before PR-9. [`ComputePool`] fans
+//! such task sets across `min(cores, tasks)` scoped std threads
+//! (no external dependency, no rayon) and reassembles the results in
+//! **task-index order**, so the reduction the caller performs over the
+//! returned `Vec` visits results in exactly the order the serial loop
+//! would have produced them.
+//!
+//! # Determinism contract
+//!
+//! [`ComputePool::map_ordered`] guarantees: given pure tasks (no
+//! shared mutable state, no ambient randomness), the returned vector
+//! is **bitwise-identical** to running the same closures serially in
+//! index order. Parallelism only changes *when* a task runs, never
+//! *what* it computes or *where* its result lands. Callers that need
+//! deterministic floating-point reductions simply fold the returned
+//! vector in order — the summation order is then fixed regardless of
+//! thread count, permit availability, or scheduling. This is
+//! property-tested across thread counts 1/2/8 in `tests/proptests.rs`.
+//!
+//! # Sharing and sizing
+//!
+//! One pool is shared by all service workers. It does not own
+//! long-lived threads; instead it owns a *permit budget* equal to its
+//! configured width. Each `map_ordered` call borrows up to
+//! `min(permits_available, tasks)` permits, spawns that many scoped
+//! helper threads for the duration of the call, and returns the
+//! permits afterwards. Concurrent callers therefore degrade gracefully
+//! toward inline serial execution (zero permits → the caller computes
+//! everything itself) instead of oversubscribing the machine — and the
+//! serial fallback is bitwise-identical by the contract above, so
+//! permit races never affect results.
+//!
+//! # Lock discipline
+//!
+//! The pool's internal task queue lock (`pool_tasks`) is leaf-level:
+//! no other c3o lock is ever taken while it is held. Shard callers
+//! acquire `shard` first and the pool second (`shard -> pool` in
+//! `rust/lint/lint.toml`).
+//!
+//! [`ModelKind`]: crate::models::ModelKind
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{mpsc, Mutex};
+use std::time::Instant;
+
+/// A width-bounded scoped worker pool with deterministic ordered
+/// collection. See the module docs for the determinism contract.
+#[derive(Debug)]
+pub struct ComputePool {
+    threads: usize,
+    /// Helper-thread permits currently available across all callers.
+    permits: AtomicUsize,
+}
+
+impl ComputePool {
+    /// A pool that will use at most `threads` helper threads across
+    /// all concurrent callers. Width is floored at 1; a width-1 pool
+    /// always computes inline (serially).
+    pub fn new(threads: usize) -> Self {
+        let threads = threads.max(1);
+        ComputePool {
+            threads,
+            permits: AtomicUsize::new(threads),
+        }
+    }
+
+    /// A pool sized to the machine's available parallelism.
+    pub fn with_default_parallelism() -> Self {
+        let n = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+        Self::new(n)
+    }
+
+    /// Configured width (maximum helper threads).
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// Try to borrow up to `want` permits; returns how many were
+    /// actually acquired (possibly 0).
+    fn acquire_permits(&self, want: usize) -> usize {
+        let mut got = 0usize;
+        let _ = self.permits.fetch_update(Ordering::AcqRel, Ordering::Acquire, |avail| {
+            got = avail.min(want);
+            Some(avail - got)
+        });
+        got
+    }
+
+    fn release_permits(&self, n: usize) {
+        self.permits.fetch_add(n, Ordering::AcqRel);
+    }
+
+    /// Run `tasks` (possibly in parallel) and return their results in
+    /// task-index order — bitwise-identical to running them serially.
+    pub fn map_ordered<T, F>(&self, tasks: Vec<F>) -> Vec<T>
+    where
+        T: Send,
+        F: FnOnce() -> T + Send,
+    {
+        self.map_ordered_timed(tasks).0
+    }
+
+    /// [`map_ordered`](ComputePool::map_ordered) plus the caller's
+    /// collection-wait time in nanoseconds — the `Stage::PoolWait`
+    /// span: how long the caller sat waiting on helper threads after
+    /// finishing its own share of the work (0 for serial execution).
+    pub fn map_ordered_timed<T, F>(&self, tasks: Vec<F>) -> (Vec<T>, u64)
+    where
+        T: Send,
+        F: FnOnce() -> T + Send,
+    {
+        let n = tasks.len();
+        if n <= 1 || self.threads <= 1 {
+            return (tasks.into_iter().map(|f| f()).collect(), 0);
+        }
+        // A caller never needs more helpers than tasks, and leaves one
+        // logical slot for itself only implicitly: helpers do all the
+        // work here so the index bookkeeping stays trivial.
+        let helpers = self.acquire_permits(self.threads.min(n));
+        if helpers == 0 {
+            return (tasks.into_iter().map(|f| f()).collect(), 0);
+        }
+
+        let indexed: Vec<(usize, F)> = tasks.into_iter().enumerate().collect();
+        // Leaf lock (class `pool`): helpers pop the next task under it
+        // and compute outside it; no other lock is taken while held.
+        let pool_tasks = Mutex::new(indexed.into_iter());
+        let (tx, rx) = mpsc::channel::<(usize, T)>();
+
+        let mut out: Vec<Option<T>> = Vec::with_capacity(n);
+        out.resize_with(n, || None);
+        let mut wait_nanos = 0u64;
+
+        std::thread::scope(|scope| {
+            for _ in 0..helpers {
+                let tx = tx.clone();
+                let pool_tasks = &pool_tasks;
+                scope.spawn(move || loop {
+                    let next = pool_tasks.lock().expect("pool lock poisoned").next();
+                    match next {
+                        Some((i, f)) => {
+                            // a dropped receiver just means the caller
+                            // panicked; nothing to unwind here
+                            let _ = tx.send((i, f()));
+                        }
+                        None => break,
+                    }
+                });
+            }
+            drop(tx); // the clones in the helpers keep the channel open
+            let t0 = Instant::now();
+            for (i, v) in rx {
+                out[i] = Some(v);
+            }
+            wait_nanos = t0.elapsed().as_nanos() as u64;
+        });
+        self.release_permits(helpers);
+
+        let out = out
+            .into_iter()
+            .map(|v| v.expect("every task index sends exactly once"))
+            .collect();
+        (out, wait_nanos)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicUsize;
+
+    #[test]
+    fn results_land_in_task_index_order() {
+        let pool = ComputePool::new(4);
+        let tasks: Vec<_> = (0..32usize).map(|i| move || i * i).collect();
+        let out = pool.map_ordered(tasks);
+        assert_eq!(out, (0..32usize).map(|i| i * i).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn width_one_pool_is_serial_inline() {
+        let pool = ComputePool::new(1);
+        let tasks: Vec<_> = (0..8usize).map(|i| move || i + 1).collect();
+        let (out, wait) = pool.map_ordered_timed(tasks);
+        assert_eq!(out, (1..=8usize).collect::<Vec<_>>());
+        assert_eq!(wait, 0, "serial execution reports zero pool wait");
+    }
+
+    #[test]
+    fn zero_width_request_floors_at_one() {
+        let pool = ComputePool::new(0);
+        assert_eq!(pool.threads(), 1);
+        assert_eq!(pool.map_ordered(vec![|| 7]), vec![7]);
+    }
+
+    #[test]
+    fn float_reduction_is_bitwise_identical_to_serial() {
+        // the reduction the CV fan relies on: fold the ordered results
+        // in index order and compare bits against the serial loop
+        let vals: Vec<f64> = (0..100).map(|i| 1.0 / (i as f64 + 3.0)).collect();
+        let serial: f64 = vals.iter().sum();
+        for width in [1usize, 2, 8] {
+            let pool = ComputePool::new(width);
+            let tasks: Vec<_> = vals.iter().map(|&v| move || v).collect();
+            let out = pool.map_ordered(tasks);
+            // c3o-lint: allow(float-order) — in-order fold over index-ordered results
+            let parallel: f64 = out.iter().sum();
+            assert_eq!(serial.to_bits(), parallel.to_bits(), "width {width}");
+        }
+    }
+
+    #[test]
+    fn permits_are_returned_after_a_call() {
+        let pool = ComputePool::new(3);
+        for _ in 0..5 {
+            let tasks: Vec<_> = (0..10usize).map(|i| move || i).collect();
+            pool.map_ordered(tasks);
+        }
+        assert_eq!(pool.permits.load(Ordering::Acquire), 3);
+    }
+
+    #[test]
+    fn exhausted_permits_fall_back_to_inline_serial() {
+        let pool = ComputePool::new(2);
+        let drained = pool.acquire_permits(2);
+        assert_eq!(drained, 2);
+        let tasks: Vec<_> = (0..6usize).map(|i| move || i * 2).collect();
+        let (out, wait) = pool.map_ordered_timed(tasks);
+        assert_eq!(out, (0..6usize).map(|i| i * 2).collect::<Vec<_>>());
+        assert_eq!(wait, 0);
+        pool.release_permits(drained);
+    }
+
+    #[test]
+    fn tasks_run_exactly_once() {
+        static RUNS: AtomicUsize = AtomicUsize::new(0);
+        let pool = ComputePool::new(8);
+        let tasks: Vec<_> = (0..64usize)
+            .map(|i| {
+                move || {
+                    RUNS.fetch_add(1, Ordering::Relaxed);
+                    i
+                }
+            })
+            .collect();
+        let out = pool.map_ordered(tasks);
+        assert_eq!(out.len(), 64);
+        assert_eq!(RUNS.load(Ordering::Relaxed), 64);
+    }
+}

@@ -21,31 +21,50 @@
 //!   `SnapshotInfo`) clone the `Arc` and serve from it **without ever
 //!   touching the shard mutex** — a hot job kind can retrain for seconds
 //!   while its recommendations keep flowing.
-//! * **Workers** — `N` threads pull requests from one shared queue. Every
-//!   worker owns its **own model engine**, constructed on the worker's
-//!   thread: the first `pjrt_workers` try to own a PJRT runtime (the PJRT
-//!   client is thread-pinned, hence "pinned workers"); the rest always use
-//!   the pure-Rust native engine ("free-floating"). Trained models are
-//!   plain data stored in the shard/snapshot, padded to one fixed layout,
-//!   so a model trained by any worker is served by every other.
+//! * **Workers + lane affinity** — `N` threads pull requests from one
+//!   shared **two-lane queue** ([`RequestQueue`]): reads (`Recommend`,
+//!   `Metrics`, snapshot/watermark reads, sync pulls) in one lane,
+//!   shard-mutating writes in the other. Every worker has a preferred
+//!   lane — PJRT-pinned and even-numbered native workers drain reads
+//!   first, odd native workers drain writes first — and **steals** from
+//!   the other lane only when its own is empty, so a retrain-heavy
+//!   write burst can't bury waiting recommendations (and no lane ever
+//!   starves; steals are counted, see
+//!   [`CoordinatorService::queue_steals`]). Every worker owns its **own
+//!   model engine**, constructed on the worker's thread: the first
+//!   `pjrt_workers` try to own a PJRT runtime (the PJRT client is
+//!   thread-pinned, hence "pinned workers"); the rest always use the
+//!   pure-Rust native engine ("free-floating"). Trained models are
+//!   plain data stored in the shard/snapshot, padded to one fixed
+//!   layout, so a model trained by any worker is served by every other.
+//! * **Shared compute pool** — unless disabled
+//!   ([`ServiceConfig::with_compute_pool`]), one
+//!   [`crate::compute::ComputePool`] is shared by every shard and every
+//!   native worker engine: retrains fan their CV folds across it and
+//!   large predict batches split into row chunks, both with ordered
+//!   reductions that keep results bitwise-identical to serial serving.
 //! * **Per-request replies + tickets** — each request carries its own
 //!   reply channel; [`ServiceClient::submit_nowait`] returns a
 //!   [`SubmitTicket`] immediately so one client can pipeline many
 //!   submissions and collect the outcomes later.
-//! * **Coalesced reads** — a worker that dequeues a `Recommend` drains
-//!   further same-kind `Recommend`s waiting in the queue (up to
-//!   [`ServiceConfig::coalesce`]) and scores all their candidates as
-//!   **one** predict batch ([`ModelSnapshot::recommend_batch`]); each
-//!   request still gets its own decision, bitwise-identical to
-//!   uncoalesced serving (observable via `Metrics::coalesced_batches`).
-//! * **Coalesced writes** — `Submit` gets the same drain: a same-kind
-//!   submit group is pre-scored as one predict batch against the cached
-//!   model before the contribute/retrain steps run one by one under the
-//!   shard lock. Each member re-checks the model's identity before
-//!   honouring its pre-scored decision (an earlier member's retrain
-//!   invalidates the rest of the group, which then decide inside their
-//!   own submit), so outcomes stay bitwise-identical to sequential
-//!   serving (observable via `Metrics::coalesced_write_batches`).
+//! * **Coalesced reads** — a worker that dequeues a `Recommend` keeps
+//!   popping the read lane while its front is a same-kind `Recommend`
+//!   (up to [`ServiceConfig::coalesce`]) and scores all their
+//!   candidates as **one** predict batch
+//!   ([`ModelSnapshot::recommend_batch`]); each request still gets its
+//!   own decision, bitwise-identical to uncoalesced serving (observable
+//!   via `Metrics::coalesced_batches`). The drain is peek-based: a
+//!   non-matching lane front stays queued for whichever worker gets to
+//!   it — nothing is held back in worker-local backlogs.
+//! * **Coalesced writes** — `Submit` gets the same peek-based drain on
+//!   the write lane: a same-kind submit group is pre-scored as one
+//!   predict batch against the cached model before the
+//!   contribute/retrain steps run one by one under the shard lock. Each
+//!   member re-checks the model's identity before honouring its
+//!   pre-scored decision (an earlier member's retrain invalidates the
+//!   rest of the group, which then decide inside their own submit), so
+//!   outcomes stay bitwise-identical to sequential serving (observable
+//!   via `Metrics::coalesced_write_batches`).
 //!
 //! ```no_run
 //! use c3o::api::Client as _;
@@ -71,6 +90,7 @@ use crate::api::{
     self, ApiError, Client, Contribution, Recommendation, Response, SnapshotInfo,
 };
 use crate::cloud::Cloud;
+use crate::compute::ComputePool;
 use crate::configurator::{ClusterChoice, Configurator, JobRequest};
 use crate::coordinator::shard::{JobShard, ModelSnapshot, ShardPolicy};
 use crate::coordinator::{JobOutcome, Metrics, Organization};
@@ -81,10 +101,11 @@ use crate::runtime::Runtime;
 use crate::util::rng::Pcg32;
 use crate::util::sync::{LockExt, RwLockExt};
 use crate::workloads::JobKind;
-use std::collections::HashMap;
+use std::collections::{HashMap, VecDeque};
 use std::path::PathBuf;
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc;
-use std::sync::{Arc, Mutex, RwLock};
+use std::sync::{Arc, Condvar, Mutex, RwLock};
 use std::thread::JoinHandle;
 use std::time::Instant;
 
@@ -115,6 +136,12 @@ pub struct ServiceConfig {
     /// either way — decisions are bitwise-identical with tracing on or
     /// off (asserted by the shared client suite) — so it defaults on.
     pub tracing: bool,
+    /// Share one [`crate::compute::ComputePool`] across every shard
+    /// (parallel CV fans during retrains) and every native worker
+    /// engine (chunked predict batches). Behaviorally inert — pooled
+    /// results are bitwise-identical to serial serving (asserted by the
+    /// shared client suite) — so it defaults on.
+    pub compute_pool: bool,
 }
 
 impl Default for ServiceConfig {
@@ -130,6 +157,7 @@ impl Default for ServiceConfig {
             coalesce: 16,
             store_dir: None,
             tracing: true,
+            compute_pool: true,
         }
     }
 }
@@ -182,6 +210,14 @@ impl ServiceConfig {
         self.tracing = tracing;
         self
     }
+
+    /// Enable or disable the shared compute pool (parallel CV fans and
+    /// chunked predict batches). Decisions are bitwise-identical either
+    /// way; `false` pins all model math to the serving thread.
+    pub fn with_compute_pool(mut self, compute_pool: bool) -> Self {
+        self.compute_pool = compute_pool;
+        self
+    }
 }
 
 /// Reply channel of one in-flight protocol request.
@@ -191,9 +227,205 @@ type ReplyTx = mpsc::Sender<Result<Response, ApiError>>;
 /// cross-client ordering) and its enqueue instant (drives the
 /// `queue_wait` trace span; carried even when tracing is off so the
 /// queue shape is identical either way).
-enum WorkItem {
-    Api(Box<api::Request>, ReplyTx, Instant),
-    Shutdown,
+struct WorkItem {
+    request: Box<api::Request>,
+    reply: ReplyTx,
+    queued_at: Instant,
+}
+
+/// Which of the queue's two lanes a request lands in / a worker
+/// prefers to drain.
+#[derive(Clone, Copy, PartialEq, Eq)]
+enum Lane {
+    /// Served without mutating any shard: `Recommend`, `Metrics`,
+    /// `SnapshotInfo`, watermark reads, sync pulls.
+    Read,
+    /// Takes a shard mutex to mutate: `Submit`, `Contribute`, `Share`,
+    /// sync pushes.
+    Write,
+}
+
+/// Classify a request into its queue lane.
+fn lane_of(request: &api::Request) -> Lane {
+    match request {
+        api::Request::Recommend { .. }
+        | api::Request::Metrics
+        | api::Request::SnapshotInfo { .. }
+        | api::Request::Watermarks { .. }
+        | api::Request::WatermarksV2 { .. }
+        | api::Request::SyncPull { .. }
+        | api::Request::SyncPullV2 { .. } => Lane::Read,
+        api::Request::Submit { .. }
+        | api::Request::Contribute { .. }
+        | api::Request::Share { .. }
+        | api::Request::SyncPush { .. }
+        | api::Request::SyncPushV2 { .. } => Lane::Write,
+    }
+}
+
+/// Both lanes plus the shutdown tokens, guarded by one mutex.
+struct Lanes {
+    reads: VecDeque<WorkItem>,
+    writes: VecDeque<WorkItem>,
+    /// Outstanding shutdown tokens; consuming one exits a worker, and
+    /// tokens are consumed only when both lanes are empty.
+    shutdown: usize,
+    /// A closed queue rejects new pushes (the service is shutting
+    /// down); already-accepted requests still drain.
+    closed: bool,
+}
+
+/// The service's two-lane request queue: request-class worker affinity.
+///
+/// Requests are split by [`lane_of`]. Every worker has a preferred lane
+/// and drains it first, **stealing** from the other lane only when its
+/// own is empty — so a retrain-heavy write burst cannot bury waiting
+/// `Recommend`s behind it (and vice versa), while neither lane can
+/// starve: an idle worker always steals. Steals are counted per
+/// direction for observability ([`CoordinatorService::queue_steals`]).
+///
+/// Shutdown drains first: [`RequestQueue::close`] rejects new pushes
+/// immediately, but workers consume shutdown tokens only once **both**
+/// lanes are empty, so every accepted request is served before the
+/// worker pool exits.
+struct RequestQueue {
+    /// Lock class `queue` (leaf: held only for queue surgery, never
+    /// while serving or while any shard lock is held).
+    queue: Mutex<Lanes>,
+    ready: Condvar,
+    /// Reads taken by write-affine workers whose own lane was empty.
+    reads_stolen: AtomicU64,
+    /// Writes taken by read-affine workers whose own lane was empty.
+    writes_stolen: AtomicU64,
+}
+
+impl RequestQueue {
+    fn new() -> RequestQueue {
+        RequestQueue {
+            queue: Mutex::new(Lanes {
+                reads: VecDeque::new(),
+                writes: VecDeque::new(),
+                shutdown: 0,
+                closed: false,
+            }),
+            ready: Condvar::new(),
+            reads_stolen: AtomicU64::new(0),
+            writes_stolen: AtomicU64::new(0),
+        }
+    }
+
+    /// Enqueue one request. Fails with [`ApiError::Stopped`] once the
+    /// service began shutting down.
+    fn push(&self, request: Box<api::Request>, reply: ReplyTx) -> Result<(), ApiError> {
+        {
+            let mut lanes = self.queue.lock_unpoisoned();
+            if lanes.closed {
+                return Err(ApiError::Stopped);
+            }
+            let item = WorkItem {
+                queued_at: Instant::now(),
+                request,
+                reply,
+            };
+            match lane_of(&item.request) {
+                Lane::Read => lanes.reads.push_back(item),
+                Lane::Write => lanes.writes.push_back(item),
+            }
+        }
+        self.ready.notify_one();
+        Ok(())
+    }
+
+    /// Dequeue for a worker with lane preference `affinity`: own lane
+    /// first, steal from the other when empty, and consume a shutdown
+    /// token (returning `None`) only when both lanes are empty.
+    fn pop(&self, affinity: Lane) -> Option<WorkItem> {
+        let mut lanes = self.queue.lock_unpoisoned();
+        loop {
+            let all = &mut *lanes;
+            let (own, other, steal_counter) = match affinity {
+                Lane::Read => (&mut all.reads, &mut all.writes, &self.writes_stolen),
+                Lane::Write => (&mut all.writes, &mut all.reads, &self.reads_stolen),
+            };
+            if let Some(item) = own.pop_front() {
+                return Some(item);
+            }
+            if let Some(item) = other.pop_front() {
+                steal_counter.fetch_add(1, Ordering::Relaxed);
+                return Some(item);
+            }
+            if lanes.shutdown > 0 {
+                lanes.shutdown -= 1;
+                return None;
+            }
+            lanes = match self.ready.wait(lanes) {
+                Ok(guard) => guard,
+                Err(poisoned) => poisoned.into_inner(),
+            };
+        }
+    }
+
+    /// Peek-based read coalescing: pop the front of the read lane only
+    /// if it is a `Recommend` for `kind`. A non-matching front stays
+    /// queued for whichever worker gets to it — assembling a batch
+    /// never delays or reorders unrelated requests.
+    fn pop_coalesced_recommend(&self, kind: JobKind) -> Option<(JobRequest, ReplyTx)> {
+        let mut lanes = self.queue.lock_unpoisoned();
+        match lanes.reads.front().map(|item| item.request.as_ref()) {
+            Some(api::Request::Recommend { request }) if request.kind() == kind => {}
+            _ => return None,
+        }
+        let item = lanes.reads.pop_front()?;
+        match *item.request {
+            api::Request::Recommend { request } => Some((request, item.reply)),
+            // unreachable (the front was checked under this same lock);
+            // requeue rather than panic in the serving zone
+            other => {
+                lanes.reads.push_front(WorkItem {
+                    request: Box::new(other),
+                    reply: item.reply,
+                    queued_at: item.queued_at,
+                });
+                None
+            }
+        }
+    }
+
+    /// Peek-based write coalescing: pop the front of the write lane
+    /// only if it is a `Submit` for `kind` (see
+    /// [`RequestQueue::pop_coalesced_recommend`]).
+    fn pop_coalesced_submit(&self, kind: JobKind) -> Option<(Organization, JobRequest, ReplyTx)> {
+        let mut lanes = self.queue.lock_unpoisoned();
+        match lanes.writes.front().map(|item| item.request.as_ref()) {
+            Some(api::Request::Submit { request, .. }) if request.kind() == kind => {}
+            _ => return None,
+        }
+        let item = lanes.writes.pop_front()?;
+        match *item.request {
+            api::Request::Submit { org, request } => Some((org, request, item.reply)),
+            // unreachable (the front was checked under this same lock);
+            // requeue rather than panic in the serving zone
+            other => {
+                lanes.writes.push_front(WorkItem {
+                    request: Box::new(other),
+                    reply: item.reply,
+                    queued_at: item.queued_at,
+                });
+                None
+            }
+        }
+    }
+
+    /// Begin shutdown: reject future pushes and leave one exit token
+    /// per worker. Workers drain both lanes before consuming a token.
+    fn close(&self, workers: usize) {
+        {
+            let mut lanes = self.queue.lock_unpoisoned();
+            lanes.closed = true;
+            lanes.shutdown += workers;
+        }
+        self.ready.notify_all();
+    }
 }
 
 /// Shared state every worker sees.
@@ -208,6 +440,10 @@ struct Shared {
     cloud: Cloud,
     policy: ShardPolicy,
     coalesce: usize,
+    /// The shared compute pool (also installed into every shard);
+    /// native worker engines adopt it for chunked predict batches.
+    /// `None` when [`ServiceConfig::with_compute_pool`] disabled it.
+    pool: Option<Arc<ComputePool>>,
     /// Trace collector: per-worker lock-free rings on the hot path,
     /// aggregation only at drain time ([`crate::obs`]).
     obs: Collector,
@@ -239,7 +475,7 @@ impl Shared {
 
 /// The running service: owns the worker threads and the request queue.
 pub struct CoordinatorService {
-    tx: mpsc::Sender<WorkItem>,
+    queue: Arc<RequestQueue>,
     shared: Arc<Shared>,
     workers: Vec<JoinHandle<()>>,
 }
@@ -248,7 +484,7 @@ pub struct CoordinatorService {
 /// its own reply channel only.
 #[derive(Clone)]
 pub struct ServiceClient {
-    tx: mpsc::Sender<WorkItem>,
+    queue: Arc<RequestQueue>,
 }
 
 /// Handle to a pipelined submission dispatched with
@@ -301,13 +537,9 @@ impl SubmitTicket {
     }
 }
 
-fn call_on(
-    tx: &mpsc::Sender<WorkItem>,
-    request: api::Request,
-) -> Result<Response, ApiError> {
+fn call_on(queue: &RequestQueue, request: api::Request) -> Result<Response, ApiError> {
     let (rtx, rrx) = mpsc::channel();
-    tx.send(WorkItem::Api(Box::new(request), rtx, Instant::now()))
-        .map_err(|_| ApiError::Stopped)?;
+    queue.push(Box::new(request), rtx)?;
     rrx.recv().map_err(|_| ApiError::Stopped)?
 }
 
@@ -315,7 +547,7 @@ impl ServiceClient {
     /// Execute one protocol request; blocks on this request's own reply
     /// channel only.
     pub fn call(&self, request: api::Request) -> Result<Response, ApiError> {
-        call_on(&self.tx, request)
+        call_on(&self.queue, request)
     }
 
     /// Merge shared runtime data into the owning shard's repository.
@@ -341,16 +573,13 @@ impl ServiceClient {
     ) -> Result<SubmitTicket, ApiError> {
         request.validate()?;
         let (rtx, rrx) = mpsc::channel();
-        self.tx
-            .send(WorkItem::Api(
-                Box::new(api::Request::Submit {
-                    org: org.clone(),
-                    request,
-                }),
-                rtx,
-                Instant::now(),
-            ))
-            .map_err(|_| ApiError::Stopped)?;
+        self.queue.push(
+            Box::new(api::Request::Submit {
+                org: org.clone(),
+                request,
+            }),
+            rtx,
+        )?;
         Ok(SubmitTicket {
             rx: rrx,
             done: None,
@@ -416,8 +645,10 @@ impl CoordinatorService {
     /// restarted service answers `SnapshotInfo` with its pre-restart
     /// generation and serves `Recommend` before any new write arrives.
     pub fn open(cloud: Cloud, config: ServiceConfig) -> Result<CoordinatorService, ApiError> {
-        let (tx, rx) = mpsc::channel::<WorkItem>();
-        let queue = Arc::new(Mutex::new(rx));
+        let queue = Arc::new(RequestQueue::new());
+        let pool = config
+            .compute_pool
+            .then(|| Arc::new(ComputePool::with_default_parallelism()));
         let mut seed_rng = Pcg32::new(config.seed);
         let mut shards = HashMap::new();
         let mut snapshots = HashMap::new();
@@ -428,7 +659,7 @@ impl CoordinatorService {
         let mut warm_engine: Option<Engine> = None;
         for kind in JobKind::all() {
             let seed = seed_rng.next_u64();
-            let shard = match &config.store_dir {
+            let mut shard = match &config.store_dir {
                 None => JobShard::new(kind, seed),
                 Some(root) => {
                     let (store, repo) = crate::store::JobStore::open(root, kind)?;
@@ -442,6 +673,9 @@ impl CoordinatorService {
                     shard
                 }
             };
+            if let Some(pool) = &pool {
+                shard.set_compute_pool(Arc::clone(pool));
+            }
             snapshots.insert(kind, RwLock::new(Arc::new(shard.snapshot())));
             shards.insert(kind, Mutex::new(shard));
         }
@@ -453,6 +687,7 @@ impl CoordinatorService {
             cloud,
             policy: config.policy.clone(),
             coalesce: config.coalesce.max(1),
+            pool,
             obs: Collector::new(n, config.tracing),
         });
         let mut workers = Vec::with_capacity(n);
@@ -466,7 +701,7 @@ impl CoordinatorService {
             }));
         }
         Ok(CoordinatorService {
-            tx,
+            queue,
             shared,
             workers,
         })
@@ -475,7 +710,7 @@ impl CoordinatorService {
     /// A new client handle (clone freely across threads).
     pub fn client(&self) -> ServiceClient {
         ServiceClient {
-            tx: self.tx.clone(),
+            queue: Arc::clone(&self.queue),
         }
     }
 
@@ -513,6 +748,18 @@ impl CoordinatorService {
             .model
             .as_ref()
             .map(|m| m.trained_at_gen)
+    }
+
+    /// Cross-lane steal counters of the affinity queue since startup:
+    /// `(reads_stolen, writes_stolen)` — reads taken by write-affine
+    /// workers and writes taken by read-affine workers, each because
+    /// their own lane was empty. Observability for the request-class
+    /// affinity router (tests and the serve bench read these).
+    pub fn queue_steals(&self) -> (u64, u64) {
+        (
+            self.queue.reads_stolen.load(Ordering::Relaxed),
+            self.queue.writes_stolen.load(Ordering::Relaxed),
+        )
     }
 
     /// Drain and snapshot the observability aggregate: the per-kind ×
@@ -568,9 +815,7 @@ impl CoordinatorService {
     }
 
     fn shutdown_inner(&mut self) {
-        for _ in 0..self.workers.len() {
-            let _ = self.tx.send(WorkItem::Shutdown);
-        }
+        self.queue.close(self.workers.len());
         for handle in self.workers.drain(..) {
             let _ = handle.join();
         }
@@ -620,7 +865,7 @@ fn drain_shard_stages(trace: &mut Trace, shard: &mut JobShard) {
 }
 
 fn worker_loop(
-    queue: Arc<Mutex<mpsc::Receiver<WorkItem>>>,
+    queue: Arc<RequestQueue>,
     shared: Arc<Shared>,
     worker: usize,
     try_pjrt: bool,
@@ -634,120 +879,81 @@ fn worker_loop(
     } else {
         Engine::native()
     };
-    // Items drained off the queue while assembling a coalesced read
-    // group. Served by THIS worker immediately after the group, so a
-    // drained write is delayed by at most one predict batch — never
-    // requeued, never starved.
-    let mut backlog: std::collections::VecDeque<WorkItem> = std::collections::VecDeque::new();
+    // Native workers adopt the shared compute pool for chunked predict
+    // batches (bitwise-identical to serial scoring).
+    if let (Some(pool), Engine::Native(native)) = (&shared.pool, &mut engine) {
+        native.set_compute_pool(Arc::clone(pool));
+    }
+    // Request-class affinity: PJRT-pinned workers and every even native
+    // worker prefer the read lane (recommendations keep flowing while
+    // writes retrain); odd native workers prefer the write lane. The
+    // preference only biases — an idle worker always steals from the
+    // other lane, so a single-worker service still serves everything.
+    let affinity = if try_pjrt || worker % 2 == 0 {
+        Lane::Read
+    } else {
+        Lane::Write
+    };
     loop {
         // Hold the queue lock only for the dequeue, never while serving.
-        let item = if let Some(item) = backlog.pop_front() {
-            item
-        } else {
-            let received = {
-                let rx = queue.lock_unpoisoned();
-                rx.recv()
-            };
-            match received {
-                Ok(item) => item,
-                Err(_) => break, // all senders gone
-            }
+        let Some(WorkItem {
+            request,
+            reply,
+            queued_at,
+        }) = queue.pop(affinity)
+        else {
+            break; // consumed a shutdown token (both lanes were empty)
         };
-        match item {
-            WorkItem::Shutdown => break,
-            WorkItem::Api(request, reply, queued_at) => match *request {
-                api::Request::Recommend { request } => {
-                    let mut trace = shared.obs.trace(ReqKind::Recommend, worker);
-                    trace.span_from(Stage::QueueWait, queued_at);
-                    let kind = request.kind();
-                    let mut group = vec![(request, reply)];
-                    // Opportunistically coalesce further same-kind reads
-                    // already waiting in the queue; the first non-matching
-                    // item stops the drain and goes to the local backlog.
-                    {
-                        let _assembly = trace.span(Stage::CoalesceAssembly);
-                        let rx = queue.lock_unpoisoned();
-                        while group.len() < shared.coalesce {
-                            match rx.try_recv() {
-                                Ok(WorkItem::Api(req2, reply2, at2)) => match *req2 {
-                                    api::Request::Recommend { request: r2 }
-                                        if r2.kind() == kind =>
-                                    {
-                                        group.push((r2, reply2));
-                                    }
-                                    other => {
-                                        backlog.push_back(WorkItem::Api(
-                                            Box::new(other),
-                                            reply2,
-                                            at2,
-                                        ));
-                                        break;
-                                    }
-                                },
-                                Ok(WorkItem::Shutdown) => {
-                                    backlog.push_back(WorkItem::Shutdown);
-                                    break;
-                                }
-                                Err(_) => break,
-                            }
+        match *request {
+            api::Request::Recommend { request } => {
+                let mut trace = shared.obs.trace(ReqKind::Recommend, worker);
+                trace.span_from(Stage::QueueWait, queued_at);
+                let kind = request.kind();
+                let mut group = vec![(request, reply)];
+                // Opportunistically coalesce further same-kind reads:
+                // keep popping while the read lane's front matches.
+                {
+                    let _assembly = trace.span(Stage::CoalesceAssembly);
+                    while group.len() < shared.coalesce {
+                        match queue.pop_coalesced_recommend(kind) {
+                            Some(pair) => group.push(pair),
+                            None => break,
                         }
                     }
-                    trace.set_group(group.len() as u32);
-                    serve_recommend_group(&shared, &mut engine, kind, group, trace);
                 }
-                api::Request::Submit { org, request } => {
-                    let mut trace = shared.obs.trace(ReqKind::Submit, worker);
-                    trace.span_from(Stage::QueueWait, queued_at);
-                    let kind = request.kind();
-                    let mut group = vec![(org, request, reply)];
-                    // Same drain discipline as the read path: pull
-                    // further same-kind `Submit`s already waiting in the
-                    // queue so their candidate scoring shares one
-                    // predict batch; the first non-matching item stops
-                    // the drain and goes to the local backlog.
-                    {
-                        let _assembly = trace.span(Stage::CoalesceAssembly);
-                        let rx = queue.lock_unpoisoned();
-                        while group.len() < shared.coalesce {
-                            match rx.try_recv() {
-                                Ok(WorkItem::Api(req2, reply2, at2)) => match *req2 {
-                                    api::Request::Submit {
-                                        org: org2,
-                                        request: r2,
-                                    } if r2.kind() == kind => {
-                                        group.push((org2, r2, reply2));
-                                    }
-                                    other => {
-                                        backlog.push_back(WorkItem::Api(
-                                            Box::new(other),
-                                            reply2,
-                                            at2,
-                                        ));
-                                        break;
-                                    }
-                                },
-                                Ok(WorkItem::Shutdown) => {
-                                    backlog.push_back(WorkItem::Shutdown);
-                                    break;
-                                }
-                                Err(_) => break,
-                            }
+                trace.set_group(group.len() as u32);
+                serve_recommend_group(&shared, &mut engine, kind, group, trace);
+            }
+            api::Request::Submit { org, request } => {
+                let mut trace = shared.obs.trace(ReqKind::Submit, worker);
+                trace.span_from(Stage::QueueWait, queued_at);
+                let kind = request.kind();
+                let mut group = vec![(org, request, reply)];
+                // Same drain discipline on the write lane: pull further
+                // same-kind `Submit`s so their candidate scoring shares
+                // one predict batch.
+                {
+                    let _assembly = trace.span(Stage::CoalesceAssembly);
+                    while group.len() < shared.coalesce {
+                        match queue.pop_coalesced_submit(kind) {
+                            Some(triple) => group.push(triple),
+                            None => break,
                         }
                     }
-                    trace.set_group(group.len() as u32);
-                    serve_submit_group(&shared, &mut engine, kind, group, trace);
                 }
-                other => {
-                    let mut trace = shared.obs.trace(req_kind(&other), worker);
-                    trace.span_from(Stage::QueueWait, queued_at);
-                    let result = serve_request(&shared, &mut engine, other, &mut trace);
-                    {
-                        let _reply_span = trace.span(Stage::Reply);
-                        let _ = reply.send(result);
-                    }
-                    shared.obs.ingest(trace);
+                trace.set_group(group.len() as u32);
+                serve_submit_group(&shared, &mut engine, kind, group, trace);
+            }
+            other => {
+                let mut trace = shared.obs.trace(req_kind(&other), worker);
+                trace.span_from(Stage::QueueWait, queued_at);
+                let result = serve_request(&shared, &mut engine, other, &mut trace);
+                {
+                    let _reply_span = trace.span(Stage::Reply);
+                    let _ = reply.send(result);
                 }
-            },
+                shared.obs.ingest(trace);
+            }
         }
     }
 }
@@ -1191,6 +1397,49 @@ mod tests {
             "{err:?}"
         );
         service.shutdown();
+    }
+
+    #[test]
+    fn single_reader_worker_steals_writes_and_serves_them() {
+        let service = CoordinatorService::spawn(
+            Cloud::aws_like(),
+            ServiceConfig::default()
+                .with_workers(1)
+                .with_pjrt_workers(0)
+                .with_seed(11),
+        );
+        // worker 0 is read-affine; the only way a submit gets served is
+        // a cross-lane steal
+        let outcome = service
+            .submit(&Organization::new("o"), JobRequest::sort(12.0))
+            .unwrap();
+        assert_eq!(outcome.org, "o");
+        let (reads_stolen, writes_stolen) = service.queue_steals();
+        assert_eq!(reads_stolen, 0, "no write-affine worker exists");
+        assert!(writes_stolen >= 1, "the read-affine worker must steal writes");
+        service.shutdown();
+    }
+
+    #[test]
+    fn shutdown_drains_accepted_requests_first() {
+        let service = CoordinatorService::spawn(
+            Cloud::aws_like(),
+            ServiceConfig::default()
+                .with_workers(2)
+                .with_pjrt_workers(0)
+                .with_seed(12),
+        );
+        let client = service.client();
+        let org = Organization::new("o");
+        let tickets: Vec<_> = (0..8)
+            .map(|_| client.submit_nowait(&org, JobRequest::sort(12.0)).unwrap())
+            .collect();
+        // close() rejects new pushes but workers drain both lanes
+        // before consuming their shutdown tokens
+        service.shutdown();
+        for ticket in tickets {
+            ticket.wait().unwrap();
+        }
     }
 
     #[test]

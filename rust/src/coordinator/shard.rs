@@ -46,13 +46,14 @@
 use crate::api::{ApiError, Contribution, Recommendation, SnapshotInfo, API_VERSION};
 use crate::baselines::{ConfigSearch, NaiveMax};
 use crate::cloud::Cloud;
+use crate::compute::ComputePool;
 use crate::configurator::{ClusterChoice, Configurator, JobRequest};
 use crate::coordinator::{JobOutcome, Metrics, Organization};
 use crate::models::oracle::SimOracle;
-use crate::models::selection::{select_and_train, select_and_train_cached, SelectionReport};
+use crate::models::selection::{select_and_train_pooled, SelectionReport};
 use crate::models::{EngineBound, ModelKind, ModelTrainer, QueryBatch, TrainedModel};
 use crate::obs::{Stage, StageScratch};
-use crate::repo::sampling::sampled_repo;
+use crate::repo::sampling::coverage_sample;
 use crate::repo::{
     FeatureMatrixCache, Featurizer, LoggedOp, MergeOutcome, OrgWatermark, RuntimeDataRepo,
     RuntimeRecord, SyncOp, SyncOutcome,
@@ -249,6 +250,16 @@ pub(crate) fn decide_with_model(
         .context("empty catalog")
 }
 
+/// Persistent mirror of the latest coverage sample for over-capacity
+/// retrains (§III-C). When consecutive samples have the same size, the
+/// mirror is *rebased* record-by-record ([`RuntimeDataRepo`]'s
+/// `rebase_records`), so its delta journal carries only the churn and
+/// the feature cache re-featurizes only the slots that actually moved.
+struct SampledCache {
+    repo: RuntimeDataRepo,
+    feat: FeatureMatrixCache,
+}
+
 /// Per-job-kind state: repository + generation-cached model + RNG
 /// stream, plus (when the deployment is durable) the segment store the
 /// shard's writes persist through.
@@ -262,6 +273,14 @@ pub struct JobShard {
     /// Incremental feature-matrix mirror of `repo`: retrains replay the
     /// repo's delta journal instead of refeaturizing the corpus.
     feat_cache: FeatureMatrixCache,
+    /// Coverage-sample mirror + feature cache for retrains where the
+    /// corpus exceeds the engine's kNN capacity; built lazily on the
+    /// first over-capacity retrain.
+    sampled_cache: Option<SampledCache>,
+    /// Shared compute pool: retrains fan their CV folds across it and
+    /// stay bitwise-identical to serial training (see [`crate::compute`]).
+    /// `None` trains serially.
+    pool: Option<Arc<ComputePool>>,
     /// Per-stage wall-time the shard's internals accumulated (retrain
     /// split, WAL I/O). Observability only — never read by decisions.
     scratch: StageScratch,
@@ -277,6 +296,8 @@ impl JobShard {
             rng: Pcg32::new(seed),
             store: None,
             feat_cache: FeatureMatrixCache::new(),
+            sampled_cache: None,
+            pool: None,
             scratch: StageScratch::default(),
         }
     }
@@ -295,8 +316,18 @@ impl JobShard {
             rng: Pcg32::new(seed),
             store: Some(store),
             feat_cache: FeatureMatrixCache::new(),
+            sampled_cache: None,
+            pool: None,
             scratch: StageScratch::default(),
         }
+    }
+
+    /// Install a shared compute pool: retrains fan their CV folds
+    /// across it when the engine can fork a `Send`-able native clone.
+    /// Decisions are unaffected — pooled training is bitwise-identical
+    /// to serial (see [`crate::compute`]).
+    pub fn set_compute_pool(&mut self, pool: Arc<ComputePool>) {
+        self.pool = Some(pool);
     }
 
     /// Whether writes are durably persisted.
@@ -523,29 +554,65 @@ impl JobShard {
             // coverage sampling (§III-C)
             let cap = engine.knn_capacity();
             let (model, report) = if self.repo.len() > cap {
-                // the feature cache mirrors the full repo, not the
-                // coverage sample — sampled retrains run from scratch
-                let train_repo = sampled_repo(&self.repo, cloud, cap);
-                select_and_train(engine, cloud, &train_repo, policy.cv_folds, gen)
-                    .map_err(ApiError::internal)?
-            } else {
+                // sampled retrain: mirror the coverage sample into a
+                // persistent sub-repo so a stable sample re-featurizes
+                // only the slots that churned between retrains
+                let job = self.job;
+                let idx = coverage_sample(&self.repo, cloud, cap);
+                let sample: Vec<RuntimeRecord> = idx
+                    .iter()
+                    // c3o-lint: allow(no-panic-serving) — `coverage_sample` returns indices into `repo.records()` by contract
+                    .map(|&i| self.repo.records()[i].clone())
+                    .collect();
                 let feat_started = std::time::Instant::now();
-                let reused = self.feat_cache.refresh(&Featurizer::new(cloud), &self.repo);
+                let sc = self.sampled_cache.get_or_insert_with(|| SampledCache {
+                    repo: RuntimeDataRepo::new(job),
+                    feat: FeatureMatrixCache::new(),
+                });
+                if sc.repo.len() == sample.len() {
+                    sc.repo.rebase_records(&sample);
+                } else {
+                    // sample size moved (corpus growth, capacity change):
+                    // the slot mapping is meaningless — rebuild the mirror
+                    sc.repo = RuntimeDataRepo::from_records(job, sample);
+                    sc.feat = FeatureMatrixCache::new();
+                }
+                let reused = sc.feat.refresh(&Featurizer::new(cloud), &sc.repo);
+                sc.repo.note_refresh();
                 self.scratch
                     .add(Stage::Featurize, feat_started.elapsed().as_nanos() as u64);
                 metrics.featurized_rows_reused += reused as u64;
-                select_and_train_cached(
+                select_and_train_pooled(
+                    engine,
+                    cloud,
+                    &sc.repo,
+                    policy.cv_folds,
+                    gen,
+                    Some(&mut sc.feat),
+                    self.pool.as_deref(),
+                )
+                .map_err(ApiError::internal)?
+            } else {
+                let feat_started = std::time::Instant::now();
+                let reused = self.feat_cache.refresh(&Featurizer::new(cloud), &self.repo);
+                self.repo.note_refresh();
+                self.scratch
+                    .add(Stage::Featurize, feat_started.elapsed().as_nanos() as u64);
+                metrics.featurized_rows_reused += reused as u64;
+                select_and_train_pooled(
                     engine,
                     cloud,
                     &self.repo,
                     policy.cv_folds,
                     gen,
                     Some(&mut self.feat_cache),
+                    self.pool.as_deref(),
                 )
                 .map_err(ApiError::internal)?
             };
             self.scratch.add(Stage::CrossValidate, report.cv_nanos);
             self.scratch.add(Stage::WinnerFit, report.fit_nanos);
+            self.scratch.add(Stage::PoolWait, report.pool_wait_nanos);
             self.model = Some(Arc::new(CachedModel {
                 trained_at_gen: gen,
                 model,
@@ -875,6 +942,54 @@ mod tests {
                 many.choice.predicted_runtime_s.to_bits()
             );
         }
+    }
+
+    #[test]
+    fn sampled_retrain_reuses_stable_sample_rows() {
+        use crate::models::native::NativeEngine;
+        let cloud = Cloud::aws_like();
+        let mut shard = JobShard::new(JobKind::Sort, 7);
+        let mut engine = Engine::Native(NativeEngine {
+            knn_rows: 12,
+            ..NativeEngine::default()
+        });
+        let mut metrics = Metrics::default();
+        // retrain_every 0: every refresh retrains, so we can retrain
+        // twice over an unchanged corpus and observe the cache replay
+        let policy = ShardPolicy {
+            retrain_every: 0,
+            min_records: 4,
+            cv_folds: 3,
+        };
+        let machines = ["m5.xlarge", "c5.xlarge", "r5.xlarge"];
+        for i in 0..30u32 {
+            shard
+                .contribute_record(RuntimeRecord {
+                    job: JobKind::Sort,
+                    org: "o".into(),
+                    machine: machines[(i as usize) % 3].into(),
+                    scaleout: 2 + (i % 8),
+                    job_features: vec![10.0 + f64::from(i)],
+                    runtime_s: 100.0 + f64::from(i),
+                })
+                .unwrap();
+        }
+        shard
+            .refresh_model(&mut engine, &cloud, &policy, &mut metrics)
+            .unwrap()
+            .expect("over-capacity corpus trains");
+        assert_eq!(metrics.retrains, 1);
+        let sc = shard.sampled_cache.as_ref().expect("sampled cache built");
+        assert_eq!(sc.repo.len(), 12, "mirror holds the coverage sample");
+        let after_first = metrics.featurized_rows_reused;
+        // identical corpus → identical sample → rebase swaps nothing →
+        // every sampled row replays from the cache
+        shard
+            .refresh_model(&mut engine, &cloud, &policy, &mut metrics)
+            .unwrap()
+            .expect("second retrain");
+        assert_eq!(metrics.retrains, 2);
+        assert_eq!(metrics.featurized_rows_reused - after_first, 12);
     }
 
     #[test]

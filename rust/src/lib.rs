@@ -156,6 +156,36 @@
 //! (asserted in `tests/client_suite.rs`), and `benches/serve_throughput`
 //! records the overhead of enabling it.
 //!
+//! ## Threading model
+//!
+//! Concurrency lives in exactly two places, and neither is allowed to
+//! change a single result bit:
+//!
+//! * **The worker pool** ([`coordinator::service`]) — `N` long-lived
+//!   worker threads pull from a two-lane request queue (reads vs
+//!   shard-mutating writes, with per-worker lane affinity and
+//!   empty-lane stealing). Writes serialize per [`JobKind`] shard
+//!   mutex; reads are served lock-free from published immutable
+//!   snapshots.
+//! * **The compute pool** ([`compute`]) — one shared
+//!   [`compute::ComputePool`] of *scoped, per-call* helper threads for
+//!   data-parallel model math: retrains fan their `folds ×`
+//!   [`models::ModelKind`] cross-validation tasks, and large predict
+//!   batches split into row chunks. Every fan uses an **ordered
+//!   reduction** — results land in a task-indexed buffer and are folded
+//!   in serial task order — so fold MAPEs, winner selection, and
+//!   predictions are bitwise-identical to single-threaded execution at
+//!   any pool width (property-tested across widths 1/2/8). A global
+//!   permit budget keeps concurrent fans from oversubscribing the host;
+//!   a fan that gets no permits runs inline, serially, with the same
+//!   bits.
+//!
+//! Lock discipline: the queue mutex and the pool's internal task mutex
+//! are leaves (`shard -> pool` is a declared order in the lint's lock
+//! table; neither is ever held while serving). The PJRT engine is
+//! thread-pinned and never crosses the compute pool — PJRT workers
+//! simply train serially, bit-identically.
+//!
 //! ## Invariant zones & static checks
 //!
 //! The guarantees above are pinned at the source level by `c3o-lint`
@@ -164,9 +194,10 @@
 //! each top-level module into an invariant zone:
 //!
 //! * **deterministic** ([`repo`], [`models`], [`store`],
-//!   [`configurator`], [`obs`]) — anything feeding converged-peer or
-//!   cached-vs-scratch bitwise equality, plus the histogram math whose
-//!   folds must be order-independent. No `HashMap`/`HashSet`
+//!   [`configurator`], [`obs`], [`compute`]) — anything feeding
+//!   converged-peer or cached-vs-scratch bitwise equality, the
+//!   histogram math whose folds must be order-independent, and the
+//!   compute pool's ordered reductions. No `HashMap`/`HashSet`
 //!   (iteration order varies per process), no unannotated float
 //!   reductions (summation order changes bits).
 //! * **serving** ([`api`], [`coordinator`]) — the request path. No
@@ -181,7 +212,7 @@
 //! internal-engine modules must not leak `anyhow` (fold errors in via
 //! [`api::ApiError::internal`]/[`api::ApiError::store`]), and lock
 //! acquisitions are checked against the declared lock order
-//! (`shard -> snapshot`, `shard -> store`). CI runs
+//! (`shard -> snapshot`, `shard -> store`, `shard -> pool`). CI runs
 //! `cargo run -p c3o-lint -- --json`; the `lint_self_clean` test
 //! enforces the same gate inside `cargo test`.
 
@@ -196,6 +227,7 @@
 pub mod api;
 pub mod baselines;
 pub mod cloud;
+pub mod compute;
 pub mod configurator;
 pub mod coordinator;
 pub mod figures;

@@ -265,6 +265,15 @@ pub trait ModelTrainer {
         cloud: &Cloud,
         batch: &QueryBatch,
     ) -> Result<Vec<f64>>;
+
+    /// A `Send`-able native clone of this backend for fan-out across a
+    /// [`crate::compute::ComputePool`], or `None` when the backend is
+    /// thread-pinned (PJRT's client is not `Send`). A forked engine
+    /// trains bitwise-identically to its parent: the native backend is
+    /// pure configuration, so clones share no mutable state.
+    fn fork_native(&self) -> Option<native::NativeEngine> {
+        None
+    }
 }
 
 /// Trained state for either model family.
@@ -1064,6 +1073,13 @@ impl ModelTrainer for Engine {
         match self {
             Engine::Pjrt(p) => ModelTrainer::predict_batch(p, model, cloud, batch),
             Engine::Native(n) => ModelTrainer::predict_batch(n, model, cloud, batch),
+        }
+    }
+
+    fn fork_native(&self) -> Option<native::NativeEngine> {
+        match self {
+            Engine::Pjrt(p) => p.fork_native(),
+            Engine::Native(n) => ModelTrainer::fork_native(n),
         }
     }
 }

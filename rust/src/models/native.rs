@@ -15,6 +15,7 @@
 //!    latency to quantify what the XLA path buys (batch fusion).
 
 use crate::cloud::Cloud;
+use crate::compute::ComputePool;
 use crate::models::{
     fit_knn_state, next_model_id, ConfigQuery, ModelKind, ModelState, ModelTrainer,
     OptTrainConfig, QueryBatch, RuntimeModel, TrainedModel,
@@ -25,6 +26,7 @@ use crate::util::matrix::MatF32;
 use crate::util::rng::Pcg32;
 use crate::util::stats;
 use anyhow::{bail, Result};
+use std::sync::Arc;
 
 /// Distance assigned to padded rows (must match `ref.PAD_DISTANCE`).
 pub const PAD_DISTANCE: f32 = 1e30;
@@ -36,6 +38,10 @@ pub const NATIVE_FEATURE_DIM: usize = 16;
 pub const NATIVE_KNN_ROWS: usize = 512;
 pub const NATIVE_KNN_K: usize = 5;
 pub const NATIVE_OPT_BATCH: usize = 256;
+
+/// Smallest [`QueryBatch`] worth fanning across the compute pool:
+/// below this the per-call thread spawn outweighs the row work.
+pub const PARALLEL_PREDICT_MIN_ROWS: usize = 64;
 
 /// Adam hyper-parameters (must match `python/compile/model.py`).
 const ADAM_B1: f32 = 0.9;
@@ -194,6 +200,11 @@ pub struct NativeEngine {
     pub knn_k: usize,
     pub opt_batch: usize,
     pub opt_cfg: OptTrainConfig,
+    /// Shared compute pool for chunked batch scoring (`None` = serial).
+    /// Chunked results are reassembled in row order and each row is
+    /// scored by the same pure function either way, so predictions are
+    /// bitwise-identical with or without a pool.
+    pub pool: Option<Arc<ComputePool>>,
 }
 
 impl Default for NativeEngine {
@@ -204,6 +215,7 @@ impl Default for NativeEngine {
             knn_k: NATIVE_KNN_K,
             opt_batch: NATIVE_OPT_BATCH,
             opt_cfg: OptTrainConfig::default(),
+            pool: None,
         }
     }
 }
@@ -376,6 +388,12 @@ impl NativeEngine {
         })
     }
 
+    /// Install a shared compute pool; large batch predictions will be
+    /// chunked across it (results stay bitwise-identical to serial).
+    pub fn set_compute_pool(&mut self, pool: Arc<ComputePool>) {
+        self.pool = Some(pool);
+    }
+
     /// Score one raw feature row against a trained state.
     fn score_raw(&self, model: &TrainedModel, raw: &[f32]) -> f64 {
         match &model.state {
@@ -445,9 +463,38 @@ impl ModelTrainer for NativeEngine {
         _cloud: &Cloud,
         batch: &QueryBatch,
     ) -> Result<Vec<f64>> {
-        Ok((0..batch.raw.rows)
-            .map(|r| self.score_raw(model, batch.raw.row(r)))
+        let rows = batch.raw.rows;
+        let this: &NativeEngine = self;
+        if let Some(pool) = this
+            .pool
+            .as_deref()
+            .filter(|p| p.threads() > 1 && rows >= PARALLEL_PREDICT_MIN_ROWS)
+        {
+            // Row-chunked fan: each chunk scores its rows with the same
+            // pure per-row function the serial loop uses, and chunks
+            // are concatenated in chunk (= row) order, so the output is
+            // bitwise-identical to the serial path below.
+            let chunk = rows.div_ceil(pool.threads());
+            let tasks: Vec<_> = (0..rows)
+                .step_by(chunk)
+                .map(|r0| {
+                    let r1 = (r0 + chunk).min(rows);
+                    move || {
+                        (r0..r1)
+                            .map(|r| this.score_raw(model, batch.raw.row(r)))
+                            .collect::<Vec<f64>>()
+                    }
+                })
+                .collect();
+            return Ok(pool.map_ordered(tasks).into_iter().flatten().collect());
+        }
+        Ok((0..rows)
+            .map(|r| this.score_raw(model, batch.raw.row(r)))
             .collect())
+    }
+
+    fn fork_native(&self) -> Option<NativeEngine> {
+        Some(self.clone())
     }
 }
 

@@ -5,8 +5,26 @@
 //! the shared repository for each model family, pick the lower mean MAPE,
 //! retrain the winner on the full data. Retraining happens on the arrival
 //! of new runtime data (driven by the coordinator).
+//!
+//! ## Parallel CV with a serial bit pattern
+//!
+//! The `folds × ModelKind::all()` CV tasks are independent: each builds
+//! its own training sub-repo, fits from scratch, and scores its own
+//! held-out fold. [`select_and_train_pooled`] fans them across a
+//! [`ComputePool`] and collects results into fixed `(kind, fold)` index
+//! order, then reduces exactly as the serial loop does (fold MAPEs in
+//! fold order → [`stats::mean`]; winner via the same `min_by` over
+//! [`ModelKind::all`] order). Every task runs [`fold_mape`] — the one
+//! per-fold code path shared with the serial [`cv_mape`] — on a
+//! [`ModelTrainer::fork_native`] clone, which trains
+//! bitwise-identically to its parent (the native backend is pure
+//! configuration). Fold MAPEs, their means, and the selected winner are
+//! therefore bit-identical to serial execution at any thread count;
+//! thread-pinned backends (PJRT) report no native fork and stay serial,
+//! which is trivially bit-identical too.
 
 use crate::cloud::Cloud;
+use crate::compute::ComputePool;
 use crate::models::{ConfigQuery, ModelKind, ModelTrainer, TrainedModel};
 use crate::repo::featurize::FeatureMatrixCache;
 use crate::repo::RuntimeDataRepo;
@@ -27,6 +45,9 @@ pub struct SelectionReport {
     pub cv_nanos: u64,
     /// Wall-clock nanoseconds the winner's full-repository fit took.
     pub fit_nanos: u64,
+    /// Nanoseconds the CV fan spent waiting on compute-pool helper
+    /// threads (0 when selection ran serially). Timing only.
+    pub pool_wait_nanos: u64,
 }
 
 impl SelectionReport {
@@ -52,6 +73,42 @@ pub fn kfold_indices(n: usize, folds: usize, seed: u64) -> Vec<Vec<usize>> {
     out
 }
 
+/// MAPE of one `(kind, fold)` CV task: train a model of `kind` on
+/// everything but `test_idx`, score the held-out fold. The single
+/// per-fold code path — both the serial [`cv_mape`] loop and the
+/// pooled fan of [`select_and_train_pooled`] execute exactly this, so
+/// their per-fold results are bit-identical by construction.
+fn fold_mape(
+    trainer: &mut dyn ModelTrainer,
+    cloud: &Cloud,
+    repo: &RuntimeDataRepo,
+    test_idx: &[usize],
+    kind: ModelKind,
+) -> Result<f64> {
+    let records = repo.records();
+    let test_set: std::collections::BTreeSet<usize> = test_idx.iter().copied().collect();
+    let train = RuntimeDataRepo::from_records(
+        repo.job(),
+        records
+            .iter()
+            .enumerate()
+            .filter(|(i, _)| !test_set.contains(i))
+            .map(|(_, r)| r.clone()),
+    );
+    let model = trainer.train(cloud, &train, kind)?;
+    let queries: Vec<ConfigQuery> = test_idx
+        .iter()
+        .map(|&i| ConfigQuery {
+            machine: records[i].machine.clone(),
+            scaleout: records[i].scaleout,
+            job_features: records[i].job_features.clone(),
+        })
+        .collect();
+    let truth: Vec<f64> = test_idx.iter().map(|&i| records[i].runtime_s).collect();
+    let preds = trainer.predict(&model, cloud, &queries)?;
+    Ok(stats::mape(&preds, &truth))
+}
+
 /// Cross-validated MAPE of one model kind on a repository. Works with
 /// any [`ModelTrainer`] backend (PJRT predictor or native engine).
 pub fn cv_mape(
@@ -67,30 +124,9 @@ pub fn cv_mape(
         bail!("repo has {n} records, need at least {folds} for {folds}-fold CV");
     }
     let splits = kfold_indices(n, folds, seed);
-    let records = repo.records();
     let mut fold_mapes = Vec::with_capacity(folds);
     for test_idx in &splits {
-        let test_set: std::collections::BTreeSet<usize> = test_idx.iter().copied().collect();
-        let train = RuntimeDataRepo::from_records(
-            repo.job(),
-            records
-                .iter()
-                .enumerate()
-                .filter(|(i, _)| !test_set.contains(i))
-                .map(|(_, r)| r.clone()),
-        );
-        let model = predictor.train(cloud, &train, kind)?;
-        let queries: Vec<ConfigQuery> = test_idx
-            .iter()
-            .map(|&i| ConfigQuery {
-                machine: records[i].machine.clone(),
-                scaleout: records[i].scaleout,
-                job_features: records[i].job_features.clone(),
-            })
-            .collect();
-        let truth: Vec<f64> = test_idx.iter().map(|&i| records[i].runtime_s).collect();
-        let preds = predictor.predict(&model, cloud, &queries)?;
-        fold_mapes.push(stats::mape(&preds, &truth));
+        fold_mapes.push(fold_mape(predictor, cloud, repo, test_idx, kind)?);
     }
     Ok(stats::mean(&fold_mapes))
 }
@@ -121,12 +157,72 @@ pub fn select_and_train_cached(
     seed: u64,
     feat: Option<&mut FeatureMatrixCache>,
 ) -> Result<(TrainedModel, SelectionReport)> {
+    select_and_train_pooled(predictor, cloud, repo, folds, seed, feat, None)
+}
+
+/// [`select_and_train_cached`] with an optional [`ComputePool`] that
+/// fans the `folds × ModelKind::all()` CV tasks across helper threads.
+/// See the module docs for why the selection outcome is bit-identical
+/// to serial execution at any thread count; a backend without a native
+/// fork (PJRT) or a width-1 pool simply runs the serial loop.
+pub fn select_and_train_pooled(
+    predictor: &mut dyn ModelTrainer,
+    cloud: &Cloud,
+    repo: &RuntimeDataRepo,
+    folds: usize,
+    seed: u64,
+    feat: Option<&mut FeatureMatrixCache>,
+    pool: Option<&ComputePool>,
+) -> Result<(TrainedModel, SelectionReport)> {
     let cv_started = std::time::Instant::now();
-    let mut cv = Vec::new();
-    for kind in ModelKind::all() {
-        let mape = cv_mape(predictor, cloud, repo, kind, folds, seed)?;
-        cv.push((kind, mape));
-    }
+    let mut pool_wait_nanos = 0u64;
+    let fan = pool
+        .filter(|p| p.threads() > 1)
+        .and_then(|p| predictor.fork_native().map(|proto| (p, proto)));
+    let cv: Vec<(ModelKind, f64)> = match fan {
+        Some((pool, proto)) => {
+            let n = repo.len();
+            if n < folds {
+                // the same guard (and message) cv_mape raises serially
+                bail!("repo has {n} records, need at least {folds} for {folds}-fold CV");
+            }
+            let splits = kfold_indices(n, folds, seed);
+            // kind-major, fold-minor: the exact iteration order of the
+            // serial loops, so the ordered collection below reduces in
+            // the serial order
+            let mut tasks = Vec::with_capacity(ModelKind::all().len() * folds);
+            for kind in ModelKind::all() {
+                for test_idx in &splits {
+                    let mut engine = proto.clone();
+                    tasks.push(move || {
+                        fold_mape(&mut engine, cloud, repo, test_idx.as_slice(), kind)
+                    });
+                }
+            }
+            let (results, wait) = pool.map_ordered_timed(tasks);
+            pool_wait_nanos = wait;
+            let mut results = results.into_iter();
+            let mut cv = Vec::with_capacity(ModelKind::all().len());
+            for kind in ModelKind::all() {
+                let mut fold_mapes = Vec::with_capacity(folds);
+                for _ in 0..folds {
+                    // `?` in (kind, fold) order: the first failing task
+                    // propagates, exactly as the serial loop would
+                    fold_mapes.push(results.next().expect("one result per task")?);
+                }
+                cv.push((kind, stats::mean(&fold_mapes)));
+            }
+            cv
+        }
+        None => {
+            let mut cv = Vec::new();
+            for kind in ModelKind::all() {
+                let mape = cv_mape(predictor, cloud, repo, kind, folds, seed)?;
+                cv.push((kind, mape));
+            }
+            cv
+        }
+    };
     let cv_nanos = cv_started.elapsed().as_nanos() as u64;
     let chosen = cv
         .iter()
@@ -144,6 +240,7 @@ pub fn select_and_train_cached(
             records: repo.len(),
             cv_nanos,
             fit_nanos: fit_started.elapsed().as_nanos() as u64,
+            pool_wait_nanos,
         },
     ))
 }
@@ -250,5 +347,58 @@ mod tests {
         let mut engine = crate::models::native::NativeEngine::default();
         let repo = RuntimeDataRepo::new(JobKind::Sort);
         assert!(cv_mape(&mut engine, &cloud, &repo, ModelKind::Pessimistic, 5, 1).is_err());
+    }
+
+    #[test]
+    fn pooled_selection_is_bitwise_identical_to_serial() {
+        use crate::models::native::NativeEngine;
+        use crate::models::OptTrainConfig;
+        let cloud = Cloud::aws_like();
+        let grid = ExperimentGrid {
+            experiments: ExperimentGrid::paper_table1()
+                .experiments
+                .into_iter()
+                .filter(|e| e.spec.kind() == JobKind::Sort)
+                .collect(),
+            repetitions: 1,
+        };
+        let repo = grid.execute(&cloud, 3).repo_for(JobKind::Sort);
+        let proto = NativeEngine {
+            opt_cfg: OptTrainConfig {
+                max_steps: 60,
+                ..Default::default()
+            },
+            ..Default::default()
+        };
+        let mut serial = proto.clone();
+        let (smodel, sreport) = select_and_train(&mut serial, &cloud, &repo, 4, 9).unwrap();
+        for width in [1usize, 2, 8] {
+            let pool = ComputePool::new(width);
+            let mut engine = proto.clone();
+            let (pmodel, preport) =
+                select_and_train_pooled(&mut engine, &cloud, &repo, 4, 9, None, Some(&pool))
+                    .unwrap();
+            assert_eq!(pmodel.kind, smodel.kind, "width {width}");
+            assert_eq!(preport.chosen, sreport.chosen, "width {width}");
+            for (kind, m) in &preport.cv_mape {
+                assert_eq!(
+                    m.to_bits(),
+                    sreport.mape_of(*kind).to_bits(),
+                    "width {width} {kind:?}: {m} vs {}",
+                    sreport.mape_of(*kind)
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn pooled_selection_rejects_tiny_repo_like_serial() {
+        let cloud = Cloud::aws_like();
+        let mut engine = crate::models::native::NativeEngine::default();
+        let repo = RuntimeDataRepo::new(JobKind::Sort);
+        let pool = ComputePool::new(4);
+        let err = select_and_train_pooled(&mut engine, &cloud, &repo, 4, 1, None, Some(&pool))
+            .unwrap_err();
+        assert!(err.to_string().contains("need at least"), "{err}");
     }
 }

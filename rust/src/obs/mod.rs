@@ -8,8 +8,9 @@
 //! * **Per-request span traces** — every request handled by the
 //!   concurrent service carries a [`Trace`]: a fixed-capacity list of
 //!   monotonic [`Stage`] spans (queue wait, coalesce-group assembly,
-//!   shard-lock wait, featurize/cross-validate/winner-fit, predict,
-//!   WAL append, fsync, reply) recorded through RAII [`SpanGuard`]s.
+//!   shard-lock wait, featurize/cross-validate/winner-fit, pool wait,
+//!   predict, WAL append, fsync, reply) recorded through RAII
+//!   [`SpanGuard`]s.
 //!   Finished traces are `force_push`ed into per-worker lock-free
 //!   [`ring::Ring`]s — allocation-free on the hot path, bounded, and
 //!   drained by the service when a report or export is requested.
@@ -62,6 +63,9 @@ pub enum Stage {
     CrossValidate,
     /// Fitting the CV winner on the full repository.
     WinnerFit,
+    /// Waiting on compute-pool helper threads during a parallel fan
+    /// (ordered collection time in [`crate::compute::ComputePool`]).
+    PoolWait,
     /// Model inference (batch candidate scoring).
     Predict,
     /// WAL line rendering + write + flush.
@@ -75,7 +79,7 @@ pub enum Stage {
 }
 
 impl Stage {
-    pub const COUNT: usize = 11;
+    pub const COUNT: usize = 12;
     pub const ALL: [Stage; Stage::COUNT] = [
         Stage::QueueWait,
         Stage::CoalesceAssembly,
@@ -83,6 +87,7 @@ impl Stage {
         Stage::Featurize,
         Stage::CrossValidate,
         Stage::WinnerFit,
+        Stage::PoolWait,
         Stage::Predict,
         Stage::WalAppend,
         Stage::Fsync,
@@ -102,6 +107,7 @@ impl Stage {
             Stage::Featurize => "featurize",
             Stage::CrossValidate => "cross_validate",
             Stage::WinnerFit => "winner_fit",
+            Stage::PoolWait => "pool_wait",
             Stage::Predict => "predict",
             Stage::WalAppend => "wal_append",
             Stage::Fsync => "fsync",

@@ -316,6 +316,24 @@ impl SyncOutcome {
     }
 }
 
+/// Bit-level record equality: floats compared by `to_bits`, so `-0.0`
+/// vs `0.0` (or any payload change invisible to `==`) counts as a
+/// change. The comparison [`RuntimeDataRepo::rebase_records`] uses to
+/// decide whether a mirror slot must be re-journaled — featurization
+/// consumes raw bits, so bit identity is the correct no-op criterion.
+fn record_bits_equal(a: &RuntimeRecord, b: &RuntimeRecord) -> bool {
+    a.job == b.job
+        && a.org == b.org
+        && a.machine == b.machine
+        && a.scaleout == b.scaleout
+        && a.runtime_s.to_bits() == b.runtime_s.to_bits()
+        && a.job_features.len() == b.job_features.len()
+        && a.job_features
+            .iter()
+            .zip(&b.job_features)
+            .all(|(x, y)| x.to_bits() == y.to_bits())
+}
+
 /// Outcome of resolving one pre-validated record against the holdings.
 enum MergeEffect {
     Added,
@@ -343,9 +361,14 @@ pub enum RepoDelta {
     Reordered { perm: Vec<u32> },
 }
 
-/// Bounded length of the delta journal. Mirrors that fall further
-/// behind than this rebuild from scratch — the cap keeps a repo that
-/// nobody mirrors from accumulating unbounded history.
+/// Floor (and default) length of the delta journal. The *effective*
+/// retention is the adaptive [`RuntimeDataRepo::journal_horizon`]:
+/// mirrors report their refresh cadence via
+/// [`RuntimeDataRepo::note_refresh`], and the journal retains at least
+/// twice the largest observed between-refresh burst — so a bursty
+/// write load that lands more than this floor between two retrains no
+/// longer silently knocks its mirror off the incremental path. A repo
+/// nobody mirrors never calls `note_refresh` and stays at this floor.
 const DELTA_JOURNAL_CAP: usize = 1024;
 
 /// A per-job shared repository of runtime records.
@@ -390,9 +413,17 @@ pub struct RuntimeDataRepo {
     /// canonical reorders (which change slot contents without changing
     /// the record set), so mirrors of the *layout* key on it.
     delta_seq: u64,
-    /// The last [`DELTA_JOURNAL_CAP`] deltas, newest at the back; entry
-    /// `k` from the back carries seq `delta_seq - k`.
+    /// The journaled deltas, newest at the back; entry `k` from the
+    /// back carries seq `delta_seq - k`. Bounded by `journal_horizon`.
     deltas: VecDeque<RepoDelta>,
+    /// Adaptive journal retention: `max(DELTA_JOURNAL_CAP, 2 × largest
+    /// observed between-refresh delta burst)`. Grows monotonically with
+    /// the observed refresh cadence; see [`RuntimeDataRepo::note_refresh`].
+    journal_horizon: usize,
+    /// `delta_seq` at the last [`RuntimeDataRepo::note_refresh`] call.
+    last_refresh_seq: u64,
+    /// Largest `delta_seq` advance observed between two refreshes.
+    max_refresh_gap: u64,
 }
 
 impl RuntimeDataRepo {
@@ -408,6 +439,9 @@ impl RuntimeDataRepo {
             key_index: BTreeMap::new(),
             delta_seq: 0,
             deltas: VecDeque::new(),
+            journal_horizon: DELTA_JOURNAL_CAP,
+            last_refresh_seq: 0,
+            max_refresh_gap: 0,
         }
     }
 
@@ -468,9 +502,32 @@ impl RuntimeDataRepo {
     fn delta_push(&mut self, d: RepoDelta) {
         self.delta_seq += 1;
         self.deltas.push_back(d);
-        while self.deltas.len() > DELTA_JOURNAL_CAP {
+        while self.deltas.len() > self.journal_horizon {
             self.deltas.pop_front();
         }
+    }
+
+    /// Tell the repo a mirror just refreshed to the current journal
+    /// position, so retention can adapt to the observed cadence: the
+    /// horizon becomes twice the largest burst of deltas ever seen
+    /// between two refreshes (never below [`DELTA_JOURNAL_CAP`]).
+    /// Called by the shard after each feature-cache refresh; a bursty
+    /// write load thereby widens the journal instead of knocking its
+    /// mirror off the incremental path.
+    pub fn note_refresh(&mut self) {
+        let gap = self.delta_seq - self.last_refresh_seq;
+        self.last_refresh_seq = self.delta_seq;
+        if gap > self.max_refresh_gap {
+            self.max_refresh_gap = gap;
+            self.journal_horizon = DELTA_JOURNAL_CAP.max(
+                usize::try_from(self.max_refresh_gap.saturating_mul(2)).unwrap_or(usize::MAX),
+            );
+        }
+    }
+
+    /// Current adaptive journal retention (observability/tests).
+    pub fn journal_horizon(&self) -> usize {
+        self.journal_horizon
     }
 
     /// Sequence number of the newest journaled delta. Advances on every
@@ -750,6 +807,65 @@ impl RuntimeDataRepo {
                 }
             }
         }
+    }
+
+    /// Rebase a *mirror* repository onto a new same-length record list,
+    /// journaling one [`RepoDelta::Set`] per slot whose record actually
+    /// changed (bit-level comparison, so a slot whose float bits are
+    /// untouched replays as a no-op in the feature cache). Built for
+    /// the coordinator's sampled-retrain mirror: when the coverage
+    /// sample of an over-capacity corpus shifts by a few records, the
+    /// mirror's [`FeatureMatrixCache`] refeaturizes only those slots
+    /// instead of the whole sample. Returns the number of changed
+    /// slots.
+    ///
+    /// Maintains the holdings, the machine/org caches, the key index,
+    /// the generation, and the delta journal — **not** the op logs: a
+    /// mirror never federates, which is why this is crate-private.
+    ///
+    /// # Panics
+    /// Panics when `records` has a different length than the holdings
+    /// (a resized sample must rebuild its mirror instead).
+    pub(crate) fn rebase_records(&mut self, records: &[RuntimeRecord]) -> usize {
+        assert_eq!(
+            records.len(),
+            self.records.len(),
+            "rebase requires an equal-length record list"
+        );
+        let mut changed = 0usize;
+        for (slot, r) in records.iter().enumerate() {
+            if record_bits_equal(&self.records[slot], r) {
+                continue;
+            }
+            let dropped = self.records[slot].clone();
+            self.cache_remove(&dropped);
+            self.cache_add(r);
+            self.delta_push(RepoDelta::Set {
+                slot,
+                record: r.clone(),
+            });
+            self.records[slot] = r.clone();
+            self.generation += 1;
+            changed += 1;
+        }
+        if changed > 0 {
+            // replaced slots may have moved merge representatives;
+            // rebuild the index as the priority winner per key
+            self.key_index.clear();
+            for (i, r) in self.records.iter().enumerate() {
+                match self.key_index.entry(r.config_key()) {
+                    std::collections::btree_map::Entry::Vacant(e) => {
+                        e.insert(i);
+                    }
+                    std::collections::btree_map::Entry::Occupied(mut e) => {
+                        if r.merge_priority() < self.records[*e.get()].merge_priority() {
+                            e.insert(i);
+                        }
+                    }
+                }
+            }
+        }
+        changed
     }
 
     /// A canonically-ordered clone of the records — the equality form
@@ -1193,6 +1309,100 @@ mod tests {
             DELTA_JOURNAL_CAP,
             "exactly the cap is retained"
         );
+    }
+
+    #[test]
+    fn journal_horizon_adapts_to_refresh_cadence() {
+        let mut repo = RuntimeDataRepo::new(JobKind::Sort);
+        assert_eq!(repo.journal_horizon(), DELTA_JOURNAL_CAP);
+        // small bursts between refreshes leave the floor untouched
+        for i in 0..10 {
+            repo.contribute(rec("a", "m5.xlarge", 2 + i, 1.0 + f64::from(i), 10.0))
+                .unwrap();
+        }
+        repo.note_refresh();
+        assert_eq!(repo.journal_horizon(), DELTA_JOURNAL_CAP);
+        // a burst beyond the floor widens retention to 2× the burst...
+        let burst = DELTA_JOURNAL_CAP + 100;
+        for i in 0..burst {
+            repo.contribute(rec("b", "m5.xlarge", 2 + (i as u32 % 30), 1e6 + i as f64, 10.0))
+                .unwrap();
+        }
+        repo.note_refresh();
+        assert_eq!(repo.journal_horizon(), 2 * burst);
+        // ...so an equally large follow-up burst stays fully replayable
+        let mark = repo.delta_seq();
+        for i in 0..burst {
+            repo.contribute(rec("c", "m5.xlarge", 2 + (i as u32 % 30), 2e6 + i as f64, 10.0))
+                .unwrap();
+        }
+        assert_eq!(repo.deltas_since(mark).unwrap().count(), burst);
+        // smaller gaps never shrink the horizon back
+        repo.note_refresh();
+        repo.contribute(rec("d", "m5.xlarge", 2, 3e6, 10.0)).unwrap();
+        repo.note_refresh();
+        assert_eq!(repo.journal_horizon(), 2 * burst);
+    }
+
+    #[test]
+    fn rebase_journals_only_changed_slots() {
+        let mut mirror = RuntimeDataRepo::from_records(
+            JobKind::Sort,
+            vec![
+                rec("a", "m5.xlarge", 4, 10.0, 100.0),
+                rec("a", "c5.xlarge", 8, 10.0, 60.0),
+                rec("b", "r5.xlarge", 2, 10.0, 300.0),
+            ],
+        );
+        let seq = mirror.delta_seq();
+        // identical list: nothing journaled
+        let same: Vec<RuntimeRecord> = mirror.records().to_vec();
+        assert_eq!(mirror.rebase_records(&same), 0);
+        assert_eq!(mirror.delta_seq(), seq);
+        // one slot swapped for a different record: exactly one Set
+        let mut next = same.clone();
+        next[1] = rec("c", "c5.2xlarge", 6, 12.0, 80.0);
+        assert_eq!(mirror.rebase_records(&next), 1);
+        assert_eq!(mirror.delta_seq(), seq + 1);
+        match mirror.deltas_since(seq).unwrap().next().unwrap() {
+            RepoDelta::Set { slot, record } => {
+                assert_eq!(*slot, 1);
+                assert_eq!(record.org, "c");
+            }
+            other => panic!("expected Set, got {other:?}"),
+        }
+        assert_eq!(mirror.records()[1].machine, "c5.2xlarge");
+        // the machine refcount cache followed the swap
+        assert!(!mirror.observed_machines().contains(&"c5.xlarge".to_string()));
+        assert!(mirror.observed_machines().contains(&"c5.2xlarge".to_string()));
+    }
+
+    #[test]
+    fn rebase_keeps_feature_cache_incremental() {
+        use crate::cloud::Cloud;
+        let cloud = Cloud::aws_like();
+        let f = Featurizer::new(&cloud);
+        let mut mirror = RuntimeDataRepo::from_records(
+            JobKind::Sort,
+            vec![
+                rec("a", "m5.xlarge", 4, 10.0, 100.0),
+                rec("a", "c5.xlarge", 8, 10.0, 60.0),
+                rec("b", "r5.xlarge", 2, 10.0, 300.0),
+            ],
+        );
+        let mut cache = FeatureMatrixCache::new();
+        cache.refresh(&f, &mirror);
+        let mut next: Vec<RuntimeRecord> = mirror.records().to_vec();
+        next[2] = rec("b", "m5.2xlarge", 6, 11.0, 200.0);
+        mirror.rebase_records(&next);
+        // only the rebased slot is refeaturized; the rest replay
+        assert_eq!(cache.refresh(&f, &mirror), mirror.len() - 1);
+        let (_, x, _) = cache.fit(&mirror);
+        let (_, want_x, _) = f.fit(&mirror);
+        let bits = |m: &crate::util::matrix::MatF32| {
+            m.data.iter().map(|v| v.to_bits()).collect::<Vec<u32>>()
+        };
+        assert_eq!(bits(&x), bits(&want_x));
     }
 
     #[test]

@@ -372,3 +372,38 @@ fn tracing_is_behaviorally_inert_across_deployments() {
         "untraced service must match the sequential coordinator bit for bit"
     );
 }
+
+#[test]
+fn compute_pool_is_behaviorally_inert_across_deployments() {
+    // The shared compute pool must only change *when* retrain and
+    // batch-scoring work runs, never what it computes: the full protocol
+    // scenario served with the pool enabled and disabled produces
+    // bitwise-identical decision traces, both equal to the sequential
+    // (always-serial) coordinator's.
+    let cloud = Cloud::aws_like();
+    let corpus = corpus(&cloud);
+    let no_artifacts = PathBuf::from("/nonexistent-artifacts");
+
+    let mut coordinator = Coordinator::with_engine(cloud.clone(), Engine::native(), SEED);
+    let coordinator_trace = scenario(&mut coordinator, &corpus);
+
+    for pool in [true, false] {
+        let service = CoordinatorService::spawn(
+            cloud.clone(),
+            ServiceConfig::default()
+                .with_workers(2)
+                .with_pjrt_workers(0)
+                .with_artifacts_dir(no_artifacts.clone())
+                .with_seed(SEED)
+                .with_compute_pool(pool),
+        );
+        let mut client = service.client();
+        let trace = scenario(&mut client, &corpus);
+        service.shutdown();
+        assert_eq!(
+            trace, coordinator_trace,
+            "compute_pool={pool} deployment must match the sequential \
+             coordinator bit for bit"
+        );
+    }
+}

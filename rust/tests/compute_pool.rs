@@ -1,0 +1,116 @@
+//! Concurrency stress tests of the shared [`ComputePool`] — the TSan CI
+//! target for the PR-9 fan-out paths. Many caller threads hammer one
+//! pool at once; every call must come back in task-index order with the
+//! full permit budget restored, regardless of how callers interleave.
+
+use c3o::compute::ComputePool;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+
+#[test]
+fn many_concurrent_callers_share_one_pool_without_interference() {
+    // More caller threads than permits: callers race for the permit
+    // budget, some fan out, some fall back to inline serial execution —
+    // and every single call must still return its own results, ordered.
+    let pool = Arc::new(ComputePool::new(4));
+    const CALLERS: usize = 16;
+    const ROUNDS: usize = 20;
+    const TASKS: usize = 24;
+
+    std::thread::scope(|scope| {
+        let mut handles = Vec::new();
+        for caller in 0..CALLERS {
+            let pool = Arc::clone(&pool);
+            handles.push(scope.spawn(move || {
+                for round in 0..ROUNDS {
+                    let base = caller * 1_000_000 + round * 1_000;
+                    let tasks: Vec<_> =
+                        (0..TASKS).map(|i| move || base + i * 7).collect();
+                    let out = pool.map_ordered(tasks);
+                    let expected: Vec<usize> =
+                        (0..TASKS).map(|i| base + i * 7).collect();
+                    assert_eq!(
+                        out, expected,
+                        "caller {caller} round {round}: results out of order \
+                         or cross-contaminated"
+                    );
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+    });
+
+    // after the storm, the full permit budget is back: a fresh call can
+    // still fan out and still reports helper wait time when it does
+    let tasks: Vec<_> = (0..64usize).map(|i| move || i * i).collect();
+    let (out, _wait) = pool.map_ordered_timed(tasks);
+    assert_eq!(out, (0..64usize).map(|i| i * i).collect::<Vec<_>>());
+}
+
+#[test]
+fn every_task_runs_exactly_once_under_contention() {
+    let pool = Arc::new(ComputePool::new(3));
+    let runs = Arc::new(AtomicUsize::new(0));
+    const CALLERS: usize = 8;
+    const TASKS: usize = 50;
+
+    std::thread::scope(|scope| {
+        let mut handles = Vec::new();
+        for _ in 0..CALLERS {
+            let pool = Arc::clone(&pool);
+            let runs = Arc::clone(&runs);
+            handles.push(scope.spawn(move || {
+                let tasks: Vec<_> = (0..TASKS)
+                    .map(|i| {
+                        let runs = Arc::clone(&runs);
+                        move || {
+                            runs.fetch_add(1, Ordering::Relaxed);
+                            i
+                        }
+                    })
+                    .collect();
+                let out = pool.map_ordered(tasks);
+                assert_eq!(out, (0..TASKS).collect::<Vec<_>>());
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+    });
+    assert_eq!(runs.load(Ordering::Relaxed), CALLERS * TASKS);
+}
+
+#[test]
+fn float_reduction_stays_bitwise_stable_under_contention() {
+    // The determinism contract under concurrency: concurrent callers
+    // folding their ordered results must all get the same bits as the
+    // serial reduction, every time.
+    let vals: Vec<f64> = (0..200).map(|i| 1.0 / (i as f64 + 2.5)).collect();
+    let serial: f64 = vals.iter().sum();
+    let pool = Arc::new(ComputePool::new(4));
+
+    std::thread::scope(|scope| {
+        let mut handles = Vec::new();
+        for caller in 0..12usize {
+            let pool = Arc::clone(&pool);
+            let vals = &vals;
+            handles.push(scope.spawn(move || {
+                for _ in 0..10 {
+                    let tasks: Vec<_> = vals.iter().map(|&v| move || v).collect();
+                    let out = pool.map_ordered(tasks);
+                    let parallel: f64 = out.iter().sum();
+                    assert_eq!(
+                        serial.to_bits(),
+                        parallel.to_bits(),
+                        "caller {caller}: contended fold changed bits"
+                    );
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+    });
+}

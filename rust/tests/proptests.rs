@@ -321,6 +321,190 @@ fn batched_predict_is_bitwise_equal_to_sequential() {
 }
 
 // --------------------------------------------------------------------------
+// Compute-pool invariants: parallel hot loops must not change a single bit
+// --------------------------------------------------------------------------
+
+#[test]
+fn pooled_selection_is_bitwise_equal_to_serial_on_native_engine() {
+    // The CV fan of `select_and_train_pooled` collects fold results in
+    // fixed (kind, fold) order and reduces exactly as the serial loop
+    // does, so fold MAPEs, their means, the selected winner, and the
+    // winner's trained parameters must all be BITWISE equal to serial
+    // execution — at every pool width.
+    use c3o::compute::ComputePool;
+    use c3o::models::selection::{select_and_train, select_and_train_pooled};
+    let cloud = Cloud::aws_like();
+    forall("pooled_selection_bitwise", 10, |g| {
+        let kind = *g.pick(&JobKind::all());
+        let mut repo = RuntimeDataRepo::new(kind);
+        for _ in 0..g.usize_in(12, 40) {
+            let _ = repo.contribute(random_record(g, kind));
+        }
+        if repo.len() < 6 {
+            return;
+        }
+        let folds = g.usize_in(2, 4);
+        let seed = g.rng().next_u64();
+        let mk_engine = || NativeEngine {
+            opt_cfg: c3o::models::OptTrainConfig {
+                max_steps: 50,
+                ..Default::default()
+            },
+            ..NativeEngine::default()
+        };
+        let mut serial_engine = mk_engine();
+        let (serial_model, serial_report) =
+            select_and_train(&mut serial_engine, &cloud, &repo, folds, seed).unwrap();
+
+        // probe batch: compares the trained winners bitwise through
+        // their predictions
+        let nf = kind.feature_names().len();
+        let features: Vec<f64> = (0..nf).map(|_| g.f64_in(0.5, 30.0)).collect();
+        let candidates: Vec<(String, u32)> = ["c5.xlarge", "m5.xlarge", "r5.xlarge"]
+            .iter()
+            .flat_map(|m| (2u32..=12).map(move |n| (m.to_string(), n)))
+            .collect();
+        let batch = QueryBatch::from_candidates(&cloud, &candidates, &features);
+        let serial_preds = serial_engine
+            .predict_batch(&serial_model, &cloud, &batch)
+            .unwrap();
+
+        for width in [1usize, 2, 8] {
+            let pool = ComputePool::new(width);
+            let mut engine = mk_engine();
+            let (model, report) = select_and_train_pooled(
+                &mut engine,
+                &cloud,
+                &repo,
+                folds,
+                seed,
+                None,
+                Some(&pool),
+            )
+            .unwrap();
+            assert_eq!(report.chosen, serial_report.chosen, "width {width}");
+            assert_eq!(report.cv_mape.len(), serial_report.cv_mape.len());
+            for ((ka, ma), (kb, mb)) in report.cv_mape.iter().zip(&serial_report.cv_mape) {
+                assert_eq!(ka, kb, "width {width}: kind order must match serial");
+                assert_eq!(
+                    ma.to_bits(),
+                    mb.to_bits(),
+                    "width {width} {ka:?}: pooled CV MAPE {ma} != serial {mb}"
+                );
+            }
+            let preds = engine.predict_batch(&model, &cloud, &batch).unwrap();
+            assert_eq!(preds.len(), serial_preds.len());
+            for (i, (a, b)) in preds.iter().zip(&serial_preds).enumerate() {
+                assert_eq!(
+                    a.to_bits(),
+                    b.to_bits(),
+                    "width {width} probe row {i}: pooled winner {a} != serial {b}"
+                );
+            }
+        }
+    });
+}
+
+#[test]
+fn pooled_selection_is_bitwise_equal_to_serial_on_pjrt_backend() {
+    // PJRT predictors are thread-pinned (no native fork), so handing
+    // them a pool must degrade to the serial loop — and the outcome
+    // must stay bit-identical, with zero pool wait.
+    use c3o::compute::ComputePool;
+    use c3o::models::selection::{select_and_train, select_and_train_pooled};
+    use c3o::models::Predictor;
+    use c3o::runtime::Runtime;
+    let dir = Runtime::default_dir();
+    if !Runtime::artifacts_available(&dir) {
+        eprintln!("SKIP: artifacts not built");
+        return;
+    }
+    let cloud = Cloud::aws_like();
+    let mut serial = Predictor::new(&dir).unwrap();
+    let mut pooled = Predictor::new(&dir).unwrap();
+    forall("pooled_selection_bitwise_pjrt", 4, |g| {
+        let kind = JobKind::Sort;
+        let mut repo = RuntimeDataRepo::new(kind);
+        for _ in 0..g.usize_in(12, 24) {
+            let _ = repo.contribute(random_record(g, kind));
+        }
+        if repo.len() < 6 {
+            return;
+        }
+        let seed = g.rng().next_u64();
+        let (_, rs) = select_and_train(&mut serial, &cloud, &repo, 3, seed).unwrap();
+        let pool = ComputePool::new(8);
+        let (_, rp) =
+            select_and_train_pooled(&mut pooled, &cloud, &repo, 3, seed, None, Some(&pool))
+                .unwrap();
+        assert_eq!(rp.chosen, rs.chosen);
+        assert_eq!(rp.pool_wait_nanos, 0, "PJRT selection must not fan");
+        for ((ka, ma), (kb, mb)) in rp.cv_mape.iter().zip(&rs.cv_mape) {
+            assert_eq!(ka, kb);
+            assert_eq!(ma.to_bits(), mb.to_bits(), "{ka:?}: {ma} != {mb}");
+        }
+    });
+}
+
+#[test]
+fn chunked_predict_is_bitwise_equal_to_serial_across_widths() {
+    // Row-chunked batch scoring reassembles chunks in row order and
+    // scores each row with the same pure function the serial loop uses,
+    // so a pool of any width must not change a single output bit.
+    use c3o::compute::ComputePool;
+    use c3o::models::native::PARALLEL_PREDICT_MIN_ROWS;
+    use std::sync::Arc;
+    let cloud = Cloud::aws_like();
+    forall("chunked_predict_bitwise", 12, |g| {
+        let kind = *g.pick(&JobKind::all());
+        let mut repo = RuntimeDataRepo::new(kind);
+        for _ in 0..g.usize_in(12, 40) {
+            let _ = repo.contribute(random_record(g, kind));
+        }
+        if repo.is_empty() {
+            return;
+        }
+        let mut engine = NativeEngine {
+            opt_cfg: c3o::models::OptTrainConfig {
+                max_steps: 50,
+                ..Default::default()
+            },
+            ..NativeEngine::default()
+        };
+        let model_kind = if g.bool() {
+            ModelKind::Pessimistic
+        } else {
+            ModelKind::Optimistic
+        };
+        let model = engine.train(&cloud, &repo, model_kind).unwrap();
+
+        let nf = kind.feature_names().len();
+        let features: Vec<f64> = (0..nf).map(|_| g.f64_in(0.5, 30.0)).collect();
+        // wide scaleout range so the batch clears the chunking threshold
+        let candidates: Vec<(String, u32)> = ["c5.xlarge", "m5.xlarge", "r5.xlarge"]
+            .iter()
+            .flat_map(|m| (2u32..=32).map(move |n| (m.to_string(), n)))
+            .collect();
+        assert!(candidates.len() >= PARALLEL_PREDICT_MIN_ROWS);
+        let batch = QueryBatch::from_candidates(&cloud, &candidates, &features);
+        let serial = engine.predict_batch(&model, &cloud, &batch).unwrap();
+        for width in [1usize, 2, 8] {
+            let mut with_pool = engine.clone();
+            with_pool.set_compute_pool(Arc::new(ComputePool::new(width)));
+            let out = with_pool.predict_batch(&model, &cloud, &batch).unwrap();
+            assert_eq!(out.len(), serial.len());
+            for (i, (a, b)) in out.iter().zip(&serial).enumerate() {
+                assert_eq!(
+                    a.to_bits(),
+                    b.to_bits(),
+                    "{model_kind:?} width {width} row {i}: chunked {a} != serial {b}"
+                );
+            }
+        }
+    });
+}
+
+// --------------------------------------------------------------------------
 // Configurator invariants
 // --------------------------------------------------------------------------
 

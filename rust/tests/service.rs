@@ -415,6 +415,103 @@ fn coalesced_writes_decide_bitwise_identically_to_sequential() {
 }
 
 #[test]
+fn affinity_routed_workers_serve_a_retrain_heavy_mixed_workload() {
+    // Request-class affinity: read-class workers drain the read lane
+    // first and steal write work only when no reads are queued. Under a
+    // retrain-heavy 50:50 read/write mix the service must stay fully
+    // correct (every reply matches its own request) and the steal
+    // counters must stay within the number of served requests.
+    let cloud = Cloud::aws_like();
+    let corpus = corpus(&cloud, 61);
+    let policy = ShardPolicy {
+        retrain_every: 2, // retrain-heavy: every other write retrains
+        ..ShardPolicy::default()
+    };
+    let service = CoordinatorService::spawn(
+        cloud.clone(),
+        ServiceConfig::default()
+            .with_workers(4)
+            .with_pjrt_workers(0)
+            .with_seed(61)
+            .with_policy(policy),
+    );
+    service.share(corpus.repo_for(JobKind::Sort)).unwrap();
+    service.share(corpus.repo_for(JobKind::Grep)).unwrap();
+
+    const CLIENTS: usize = 6;
+    const OPS: usize = 4;
+    std::thread::scope(|scope| {
+        let mut handles = Vec::new();
+        for c in 0..CLIENTS {
+            let client = service.client();
+            handles.push(scope.spawn(move || {
+                let org = Organization::new(&format!("mixed-{c}"));
+                for j in 0..OPS {
+                    let kind = if (c + j) % 2 == 0 {
+                        JobKind::Sort
+                    } else {
+                        JobKind::Grep
+                    };
+                    if j % 2 == 0 {
+                        let o = client
+                            .submit(&org, request_for(kind, c * OPS + j))
+                            .unwrap();
+                        assert_eq!(o.job, kind, "client {c} op {j}: wrong reply");
+                        assert!(o.model_used.is_some());
+                    } else {
+                        let r = client
+                            .recommend(request_for(kind, c * OPS + j))
+                            .unwrap();
+                        assert!(r.choice.predicted_runtime_s > 0.0);
+                    }
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+    });
+
+    let metrics = service.metrics().unwrap();
+    assert_eq!(metrics.submissions, (CLIENTS * OPS / 2) as u64);
+    assert_eq!(metrics.recommends, (CLIENTS * OPS / 2) as u64);
+    assert!(
+        metrics.retrains >= 4,
+        "retrain-heavy policy must retrain repeatedly: {metrics:?}"
+    );
+    let (reads_stolen, writes_stolen) = service.queue_steals();
+    // 2 shares + the ops + the metrics read is everything ever queued
+    let ceiling = (CLIENTS * OPS) as u64 + 3;
+    assert!(
+        reads_stolen + writes_stolen <= ceiling,
+        "steals ({reads_stolen}, {writes_stolen}) must account only for queued requests"
+    );
+    service.shutdown();
+
+    // Deterministic cross-lane steal: a single-worker deployment has
+    // only the read-class worker 0, so write requests can be served
+    // only by stealing them from the write lane.
+    let lone = CoordinatorService::spawn(
+        cloud,
+        ServiceConfig::default()
+            .with_workers(1)
+            .with_pjrt_workers(0)
+            .with_seed(67),
+    );
+    lone.share(corpus.repo_for(JobKind::Sort)).unwrap();
+    let o = lone
+        .submit(&Organization::new("stolen"), request_for(JobKind::Sort, 0))
+        .unwrap();
+    assert!(o.model_used.is_some());
+    let (_, lone_writes_stolen) = lone.queue_steals();
+    assert!(
+        lone_writes_stolen >= 2,
+        "a single read-class worker serves share + submit only by stealing"
+    );
+    lone.shutdown();
+}
+
+#[test]
 fn cold_recommend_errors_while_cold_submit_falls_back() {
     // The API's asymmetry: a cold `Submit` has the overprovisioning
     // fallback, a cold `Recommend` is a typed `ColdStart` error.

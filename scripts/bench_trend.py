@@ -89,6 +89,25 @@ def report_extra(path):
         for label, value in rows:
             if value is not None:
                 print(f"{label:<42} {float(value):>14.1f}")
+    elif doc.get("bench") == "perf_hotpath":
+        cv = doc.get("cv_retrain_400_rows", {})
+        print(f"\n--- {path}: serial vs pooled CV retrain (report-only) ---")
+        rows = cv.get("rows")
+        serial = cv.get("serial_mean_ns")
+        if rows is not None and serial is not None:
+            print(
+                f"{'serial retrain, ' + str(int(rows)) + ' rows (ms)':<42}"
+                f" {float(serial) / 1e6:>10.2f}"
+            )
+        for p in cv.get("pool", []):
+            label = f"pooled retrain, {p.get('threads')} threads (ms)"
+            speedup = p.get("speedup_vs_serial")
+            extra = f"  {float(speedup):.2f}x vs serial" if speedup is not None else ""
+            print(f"{label:<42} {float(p.get('mean_ns', 0.0)) / 1e6:>10.2f}{extra}")
+        speedup4 = cv.get("speedup_pool4_vs_serial")
+        if speedup4 is not None:
+            goal = "meets" if float(speedup4) >= 2.0 else "below"
+            print(f"{'speedup, 4-thread pool vs serial':<42} {float(speedup4):>9.2f}x  ({goal} the 2x goal)")
     else:
         print(f"\n--- {path} (report-only, no baseline) ---")
         print(json.dumps(doc, indent=2))
@@ -113,6 +132,27 @@ def report_write_mix(doc):
     speedup = wm.get("speedup_vs_session")
     if speedup is not None:
         print(f"{'speedup vs session':<42} {float(speedup):>9.1f}x")
+
+
+def report_retrain_heavy(doc):
+    """Summarize the retrain-heavy affinity scenario, report-only.
+
+    Steal counters depend on scheduling, so they are never held to a
+    floor — the table tracks whether reads keep flowing past retrain
+    storms and how much cross-lane stealing that took.
+    """
+    rh = doc.get("retrain_heavy")
+    if not rh:
+        return
+    print(f"\n--- retrain-heavy {rh.get('mix', '?')} (report-only, no baseline) ---")
+    for p in rh.get("service", []):
+        label = f"service {p.get('clients')} clients (req/s)"
+        extras = (
+            f"  retrains={p.get('retrains')}"
+            f"  reads_stolen={p.get('reads_stolen')}"
+            f"  writes_stolen={p.get('writes_stolen')}"
+        )
+        print(f"{label:<42} {float(p.get('req_per_s', 0.0)):>10.1f}{extras}")
 
 
 def report_latency(doc):
@@ -185,6 +225,7 @@ def main():
             "BENCH_serve_throughput.baseline.json"
         )
         report_write_mix(cur)
+        report_retrain_heavy(cur)
         report_latency(cur)
         for path in extras:
             report_extra(path)
@@ -224,6 +265,7 @@ def main():
                 )
 
     report_write_mix(cur)
+    report_retrain_heavy(cur)
     report_latency(cur)
 
     for path in extras:
