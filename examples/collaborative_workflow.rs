@@ -21,6 +21,11 @@
 //!      measurement travels as exactly ONE sequence-numbered op on the
 //!      next exchange (O(changed records), not O(org corpus)) — the
 //!      paper's "continuous cheap sharing" premise at steady state.
+//!   7. **Gossip mesh** — the deployments join one roster, a late peer
+//!      with zero history catches up through rotating-fanout
+//!      anti-entropy rounds, and the acks each round reports back let
+//!      every peer fold its fully-acknowledged op-log prefix away
+//!      (acked-floor truncation) — bitwise convergence intact.
 //!
 //! Run with: `make artifacts && cargo run --release --example collaborative_workflow`
 
@@ -40,7 +45,7 @@ fn main() -> anyhow::Result<()> {
     let t0 = std::time::Instant::now();
 
     // ---- phase 1: the shared corpus (Table I) --------------------------
-    println!("[1/6] executing the 930-experiment grid (5 reps each)...");
+    println!("[1/7] executing the 930-experiment grid (5 reps each)...");
     let grid = ExperimentGrid::paper_table1();
     let corpus = grid.execute(&cloud, 42);
     let mut orgs: std::collections::BTreeSet<String> = Default::default();
@@ -56,7 +61,7 @@ fn main() -> anyhow::Result<()> {
     assert_eq!(corpus.len(), 930, "Table I count");
 
     // ---- phase 2: share through the coordinator session ----------------
-    println!("[2/6] sharing runtime data into the coordinator...");
+    println!("[2/7] sharing runtime data into the coordinator...");
     let session = Session::spawn(cloud.clone(), artifacts, 7);
     for kind in JobKind::all() {
         let shared = session.share(corpus.repo_for(kind))?;
@@ -64,7 +69,7 @@ fn main() -> anyhow::Result<()> {
     }
 
     // ---- phase 3: a new organization submits real work ------------------
-    println!("[3/6] new organization submits 25 jobs (targets attached)...");
+    println!("[3/7] new organization submits 25 jobs (targets attached)...");
     let org = Organization::new("fresh-org");
     let battery: Vec<JobRequest> = vec![
         JobRequest::sort(11.0).with_target_seconds(500.0),
@@ -120,7 +125,7 @@ fn main() -> anyhow::Result<()> {
     }
 
     // ---- phase 4: headline metrics --------------------------------------
-    println!("[4/6] headline report");
+    println!("[4/7] headline report");
     let metrics = session.metrics()?;
     let hit_rate = 100.0 * metrics.target_hit_rate();
     let mape = stats::mean(&errors);
@@ -167,7 +172,7 @@ fn main() -> anyhow::Result<()> {
     // CLI equivalent:
     //   c3o store --dir /tmp/c3o-alpha --mode seed     (durable corpus)
     //   c3o sync                                        (two-service demo)
-    println!("[5/6] persistence + federation walkthrough...");
+    println!("[5/7] persistence + federation walkthrough...");
     let store_alpha = std::env::temp_dir().join(format!("c3o_wf_alpha_{}", std::process::id()));
     let store_beta = std::env::temp_dir().join(format!("c3o_wf_beta_{}", std::process::id()));
     let _ = std::fs::remove_dir_all(&store_alpha);
@@ -187,7 +192,11 @@ fn main() -> anyhow::Result<()> {
     beta.share(&relabel(&sort_repo.records()[half..], "org-beta"))?;
 
     // gossip until quiescent (here: one bidirectional exchange)
-    let stats = c3o::store::sync_all(&mut alpha, &mut beta, &[JobKind::Sort])?;
+    let sort_only = SyncOptions {
+        scope: SyncScope::Job(JobKind::Sort),
+        ..SyncOptions::default()
+    };
+    let stats = c3o::store::sync(&mut alpha, &mut beta, &sort_only)?.stats;
     println!(
         "      sync moved {} records ({} conflicts); generations {} / {}",
         stats.records_in + stats.records_out,
@@ -218,7 +227,7 @@ fn main() -> anyhow::Result<()> {
     // The converged federation now lives its real life: occasionally one
     // new measurement lands somewhere. With the per-(org, job) op log,
     // the next exchange ships exactly that op — not the whole org corpus.
-    println!("[6/6] record-level delta: one new measurement, one shipped op...");
+    println!("[6/7] record-level delta: one new measurement, one shipped op...");
     recovered.contribute(RuntimeRecord {
         job: JobKind::Sort,
         org: "org-alpha".to_string(),
@@ -227,7 +236,7 @@ fn main() -> anyhow::Result<()> {
         job_features: vec![23.75],
         runtime_s: 411.0,
     })?;
-    let stats = c3o::store::sync_job(&mut recovered, &mut beta, JobKind::Sort)?;
+    let stats = c3o::store::sync(&mut recovered, &mut beta, &sort_only)?.stats;
     println!(
         "      exchange shipped {} op(s), applied {}, skipped {}",
         stats.offered,
@@ -236,7 +245,7 @@ fn main() -> anyhow::Result<()> {
     );
     assert_eq!(stats.offered, 1, "exactly the changed record ships");
     assert_eq!(stats.records_in + stats.records_out, 1);
-    let quiet = c3o::store::sync_job(&mut recovered, &mut beta, JobKind::Sort)?;
+    let quiet = c3o::store::sync(&mut recovered, &mut beta, &sort_only)?.stats;
     assert!(quiet.quiescent() && quiet.offered == 0, "then silence");
     // the contributor appended locally (no reorder); the receiver
     // canonicalized on apply — content is identical, compared in the
@@ -245,6 +254,127 @@ fn main() -> anyhow::Result<()> {
         recovered.repo(JobKind::Sort).unwrap().canonical_records(),
         beta.repo(JobKind::Sort).unwrap().canonical_records(),
         "peers hold identical corpora again"
+    );
+
+    // ---- phase 7: gossip mesh + acked-floor truncation -------------------
+    // The deployments stop hand-wiring peer lists. Each carries a mesh
+    // roster; anti-entropy rounds pick rotating fanout targets from it,
+    // the batched (v4) exchange covers every job kind in one
+    // conversation, and the acks each round reports back let every peer
+    // fold the fully-acknowledged prefix of its op logs into the base
+    // snapshots. A brand-new deployment joins by hello and catches up.
+    // CLI equivalent:  c3o mesh --peers 3 --fanout 1
+    println!("[7/7] gossip mesh: roster join, anti-entropy rounds, log truncation...");
+    recovered.set_mesh_name("org-alpha");
+    beta.set_mesh_name("org-beta");
+    let mut gamma = Coordinator::with_engine(cloud.clone(), Engine::native(), 73);
+    gamma.set_mesh_name("org-gamma");
+
+    // one hello carrying the full member list introduces the roster
+    // (gossip-joined members are live, so fanout targeting works at once)
+    let roster: Vec<MeshPeer> = ["org-alpha", "org-beta", "org-gamma"]
+        .iter()
+        .map(|name| c3o::store::mesh_peer(name))
+        .collect();
+    recovered.mesh_hello(MeshHello {
+        from: roster[1].clone(),
+        known: roster.clone(),
+        acked: Vec::new(),
+    })?;
+    beta.mesh_hello(MeshHello {
+        from: roster[2].clone(),
+        known: roster.clone(),
+        acked: Vec::new(),
+    })?;
+    gamma.mesh_hello(MeshHello {
+        from: roster[0].clone(),
+        known: roster.clone(),
+        acked: Vec::new(),
+    })?;
+
+    /// One sweep: every deployment runs one anti-entropy round against
+    /// the rest of the roster. Returns (records changed, round trips).
+    fn mesh_sweep3(
+        alpha: &mut Coordinator,
+        beta: &mut Coordinator,
+        gamma: &mut Coordinator,
+    ) -> Result<(u64, u64), ApiError> {
+        let (mut changed, mut trips) = (0u64, 0u64);
+        {
+            let mut refs: Vec<(String, &mut dyn Client)> = vec![
+                ("org-beta".into(), &mut *beta),
+                ("org-gamma".into(), &mut *gamma),
+            ];
+            let r = mesh_round(alpha, &mut refs, 1)?;
+            changed += r.changed;
+            trips += r.peer_round_trips;
+        }
+        {
+            let mut refs: Vec<(String, &mut dyn Client)> = vec![
+                ("org-alpha".into(), &mut *alpha),
+                ("org-gamma".into(), &mut *gamma),
+            ];
+            let r = mesh_round(beta, &mut refs, 1)?;
+            changed += r.changed;
+            trips += r.peer_round_trips;
+        }
+        {
+            let mut refs: Vec<(String, &mut dyn Client)> = vec![
+                ("org-alpha".into(), &mut *alpha),
+                ("org-beta".into(), &mut *beta),
+            ];
+            let r = mesh_round(gamma, &mut refs, 1)?;
+            changed += r.changed;
+            trips += r.peer_round_trips;
+        }
+        Ok((changed, trips))
+    }
+
+    let (mut moved, mut trips) = (0u64, 0u64);
+    let mut converged = false;
+    for _ in 0..16 {
+        let (changed, t) = mesh_sweep3(&mut recovered, &mut beta, &mut gamma)?;
+        moved += changed;
+        trips += t;
+        let reference = recovered.repo(JobKind::Sort).unwrap().content_digest();
+        let agree = [&beta, &gamma]
+            .iter()
+            .all(|p| p.repo(JobKind::Sort).map(|r| r.content_digest()) == Some(reference));
+        if changed == 0 && agree {
+            converged = true;
+            break;
+        }
+    }
+    assert!(converged, "mesh did not converge");
+    // a few extra sweeps: acks finish propagating, self-ticks truncate
+    for _ in 0..8 {
+        let (_, t) = mesh_sweep3(&mut recovered, &mut beta, &mut gamma)?;
+        trips += t;
+    }
+
+    // the late joiner holds the identical corpus — bitwise — and every
+    // peer's op logs folded down to the unacked suffix (empty)
+    assert_eq!(
+        gamma.repo(JobKind::Sort).unwrap().canonical_records(),
+        recovered.repo(JobKind::Sort).unwrap().canonical_records()
+    );
+    assert_eq!(
+        gamma.repo(JobKind::Sort).unwrap().content_digest(),
+        recovered.repo(JobKind::Sort).unwrap().content_digest()
+    );
+    let peers = [&recovered, &beta, &gamma];
+    let truncated: u64 = peers.iter().map(|p| p.metrics().ops_truncated).sum();
+    let retained: usize = peers
+        .iter()
+        .map(|p| p.repo(JobKind::Sort).unwrap().retained_log_entries())
+        .sum();
+    assert!(truncated > 0, "acked floors truncated the op logs");
+    assert_eq!(retained, 0, "only the unacked suffix is retained");
+    println!(
+        "      3-peer mesh converged: {moved} records to the late joiner, {trips} peer round trips"
+    );
+    println!(
+        "      acked-floor truncation folded {truncated} ops; retained log entries: {retained}"
     );
     let _ = std::fs::remove_dir_all(&store_alpha);
     let _ = std::fs::remove_dir_all(&store_beta);

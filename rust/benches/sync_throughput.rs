@@ -13,6 +13,14 @@
 //!   must ship one op; the v2-equivalent org-granular exchange re-ships
 //!   the whole changed org. The shipped-record ratio is asserted ≥ 10x
 //!   and recorded in the JSON.
+//! * **Batched** — the cross-job (v4) payoff: one
+//!   `WatermarksAll`/`SyncPullAll`/`SyncPushAll` conversation covers all
+//!   five job kinds, where the per-job v3 exchange pays round trips per
+//!   kind. Batched round trips are asserted strictly fewer, full and
+//!   idle.
+//! * **Mesh** — roster-scheduled gossip: three peers converge through
+//!   rotating-fanout [`mesh_round`]s with acked-floor truncation
+//!   folding the op logs behind them.
 //!
 //! Model training is disabled (cold-start threshold maxed) so the
 //! numbers measure persistence and exchange, not model selection.
@@ -20,17 +28,73 @@
 //! Emits `BENCH_sync_throughput.json`. Shrink with
 //! `C3O_SYNC_RECORDS=500` for smoke runs.
 
+use c3o::api::{ApiError, Client, MeshHello, MeshPeer};
 use c3o::cloud::Cloud;
 use c3o::coordinator::Coordinator;
 use c3o::models::Engine;
 use c3o::repo::{RuntimeDataRepo, RuntimeRecord};
-use c3o::store::{sync_all, sync_job, sync_job_v2, JobStore, StoreOp, SyncStats};
+use c3o::store::{
+    mesh_peer, mesh_round, sync, JobStore, StoreOp, SyncOptions, SyncProtocol, SyncScope,
+    SyncStats,
+};
 use c3o::util::json::Json;
 use c3o::workloads::JobKind;
 use std::path::PathBuf;
 use std::time::Instant;
 
 const MACHINES: [&str; 3] = ["c5.xlarge", "m5.xlarge", "r5.xlarge"];
+
+/// One-job v3 exchange through the consolidated [`sync`] entry point.
+fn sync_job(
+    local: &mut dyn Client,
+    peer: &mut dyn Client,
+    job: JobKind,
+) -> Result<SyncStats, ApiError> {
+    sync(
+        local,
+        peer,
+        &SyncOptions {
+            scope: SyncScope::Job(job),
+            ..SyncOptions::default()
+        },
+    )
+    .map(|summary| summary.stats)
+}
+
+/// One-job exchange over the legacy v2 org-granular protocol.
+fn sync_job_v2(
+    local: &mut dyn Client,
+    peer: &mut dyn Client,
+    job: JobKind,
+) -> Result<SyncStats, ApiError> {
+    sync(
+        local,
+        peer,
+        &SyncOptions {
+            scope: SyncScope::Job(job),
+            protocol: SyncProtocol::V2,
+            ..SyncOptions::default()
+        },
+    )
+    .map(|summary| summary.stats)
+}
+
+/// Multi-job v3 exchange, stats folded.
+fn sync_all(
+    local: &mut dyn Client,
+    peer: &mut dyn Client,
+    jobs: &[JobKind],
+) -> Result<SyncStats, ApiError> {
+    sync(
+        local,
+        peer,
+        &SyncOptions {
+            scope: SyncScope::Jobs(jobs.to_vec()),
+            ..SyncOptions::default()
+        },
+    )
+    .map(|summary| summary.stats)
+}
 
 /// Synthetic sort records with globally-unique configurations.
 fn synthetic_records(n: usize) -> Vec<RuntimeRecord> {
@@ -88,6 +152,65 @@ fn converged_peers(
     let (mut peer_a, mut peer_b) = seeded_peers(cloud, records);
     let stats = sync_all(&mut peer_a, &mut peer_b, &[JobKind::Sort]).unwrap();
     (peer_a, peer_b, stats)
+}
+
+/// A no-training coordinator with a mesh identity.
+fn bench_peer(cloud: &Cloud, seed: u64, mesh_name: &str) -> Coordinator {
+    let mut c = Coordinator::with_engine(cloud.clone(), Engine::native(), seed);
+    c.min_records = usize::MAX;
+    c.set_mesh_name(mesh_name);
+    c
+}
+
+/// Two no-training peers holding disjoint halves of `per_kind` records
+/// for EVERY job kind — the batched scenario's corpus.
+fn multi_kind_pair(cloud: &Cloud, per_kind: usize, seed: u64) -> (Coordinator, Coordinator, usize) {
+    let mut a = bench_peer(cloud, seed, "bench-a");
+    let mut b = bench_peer(cloud, seed + 1, "bench-b");
+    let mut total = 0usize;
+    for kind in JobKind::all() {
+        let records: Vec<RuntimeRecord> = synthetic_records(per_kind)
+            .into_iter()
+            .map(|mut r| {
+                r.job = kind;
+                r
+            })
+            .collect();
+        total += records.len();
+        let half = records.len() / 2;
+        a.share(&RuntimeDataRepo::from_records(
+            kind,
+            relabel(&records[..half], "alpha"),
+        ))
+        .unwrap();
+        b.share(&RuntimeDataRepo::from_records(
+            kind,
+            relabel(&records[half..], "beta"),
+        ))
+        .unwrap();
+    }
+    (a, b, total)
+}
+
+/// One full mesh sweep: every peer runs one [`mesh_round`] against the
+/// rest of the roster. Returns (records changed, peer round trips).
+fn mesh_sweep(peers: &mut [Coordinator], names: &[String], fanout: usize) -> (u64, u64) {
+    let (mut changed, mut trips) = (0u64, 0u64);
+    for i in 0..peers.len() {
+        let (before, rest) = peers.split_at_mut(i);
+        let (local, after) = rest.split_first_mut().unwrap();
+        let mut refs: Vec<(String, &mut dyn Client)> = Vec::new();
+        for (k, p) in before.iter_mut().enumerate() {
+            refs.push((names[k].clone(), p));
+        }
+        for (k, p) in after.iter_mut().enumerate() {
+            refs.push((names[i + 1 + k].clone(), p));
+        }
+        let report = mesh_round(local, &mut refs, fanout).unwrap();
+        changed += report.changed;
+        trips += report.peer_round_trips;
+    }
+    (changed, trips)
 }
 
 /// The one-record update both incremental scenarios replay: a fresh
@@ -195,6 +318,118 @@ fn main() {
         inc_v2.offered
     );
 
+    // ---- batched (v4) vs per-job (v3): round trips ----------------------
+    let per_kind = (n / 10).max(50);
+    let kinds = JobKind::all();
+    let (mut v3_a, mut v3_b, multi_total) = multi_kind_pair(&cloud, per_kind, 40);
+    let v3_opts = SyncOptions::default(); // every kind, one conversation per kind
+    let v3_full = sync(&mut v3_a, &mut v3_b, &v3_opts).unwrap().stats;
+    assert_eq!((v3_full.records_in + v3_full.records_out) as usize, multi_total);
+    let v3_idle = sync(&mut v3_a, &mut v3_b, &v3_opts).unwrap().stats;
+    assert!(v3_idle.quiescent());
+
+    let (mut v4_a, mut v4_b, _) = multi_kind_pair(&cloud, per_kind, 50);
+    let v4_opts = SyncOptions {
+        protocol: SyncProtocol::BatchedV4,
+        ..SyncOptions::default()
+    };
+    let t0 = Instant::now();
+    let v4_full = sync(&mut v4_a, &mut v4_b, &v4_opts).unwrap().stats;
+    let v4_secs = t0.elapsed().as_secs_f64();
+    assert_eq!(
+        (v4_full.records_in + v4_full.records_out) as usize,
+        multi_total,
+        "the batched exchange is still a full exchange"
+    );
+    let v4_idle = sync(&mut v4_a, &mut v4_b, &v4_opts).unwrap().stats;
+    assert!(v4_idle.quiescent());
+    assert!(
+        v4_full.round_trips < v3_full.round_trips,
+        "cross-job batching must cost fewer round trips than per-job sync \
+         (v4 {} vs v3 {})",
+        v4_full.round_trips,
+        v3_full.round_trips
+    );
+    assert!(
+        v4_idle.round_trips < v3_idle.round_trips,
+        "idle maintenance rounds batch too (v4 {} vs v3 {})",
+        v4_idle.round_trips,
+        v3_idle.round_trips
+    );
+    println!(
+        "batched  ({} kinds): v4 {} round trips vs v3 {} full ({} vs {} idle), \
+         {multi_total} records in {v4_secs:.3}s",
+        kinds.len(),
+        v4_full.round_trips,
+        v3_full.round_trips,
+        v4_idle.round_trips,
+        v3_idle.round_trips
+    );
+
+    // ---- mesh: roster-scheduled gossip with acked-floor truncation ------
+    let mesh_n = 3usize;
+    let names: Vec<String> = (0..mesh_n).map(|i| format!("peer-{i}")).collect();
+    let mut mesh_peers: Vec<Coordinator> = (0..mesh_n)
+        .map(|i| bench_peer(&cloud, 60 + i as u64, &names[i]))
+        .collect();
+    for (i, p) in mesh_peers.iter_mut().enumerate() {
+        let slice: Vec<RuntimeRecord> = records
+            .iter()
+            .enumerate()
+            .filter(|(r, _)| r % mesh_n == i)
+            .map(|(_, rec)| rec.with_org(&format!("org-{i}")))
+            .collect();
+        p.share(&RuntimeDataRepo::from_records(JobKind::Sort, slice))
+            .unwrap();
+    }
+    let intro: Vec<MeshPeer> = names.iter().map(|name| mesh_peer(name)).collect();
+    for (i, p) in mesh_peers.iter_mut().enumerate() {
+        p.mesh_hello(MeshHello {
+            from: intro[(i + 1) % mesh_n].clone(),
+            known: intro.clone(),
+            acked: Vec::new(),
+        })
+        .unwrap();
+    }
+    let t0 = Instant::now();
+    let (mut sweeps, mut trips, mut moved) = (0u64, 0u64, 0u64);
+    let mut converged = false;
+    for _ in 0..64 {
+        let (changed, t) = mesh_sweep(&mut mesh_peers, &names, 1);
+        sweeps += 1;
+        trips += t;
+        moved += changed;
+        let reference = mesh_peers[0].repo(JobKind::Sort).map(|r| r.content_digest());
+        if changed == 0
+            && mesh_peers[1..]
+                .iter()
+                .all(|p| p.repo(JobKind::Sort).map(|r| r.content_digest()) == reference)
+        {
+            converged = true;
+            break;
+        }
+    }
+    assert!(converged, "mesh did not converge within 64 sweeps");
+    // ack propagation + the truncating self-ticks
+    for _ in 0..2 * mesh_n + 2 {
+        let (_, t) = mesh_sweep(&mut mesh_peers, &names, 1);
+        trips += t;
+    }
+    let mesh_secs = t0.elapsed().as_secs_f64();
+    let truncated: u64 = mesh_peers.iter().map(|p| p.metrics().ops_truncated).sum();
+    let retained: usize = mesh_peers
+        .iter()
+        .map(|p| p.repo(JobKind::Sort).unwrap().retained_log_entries())
+        .sum();
+    assert!(truncated > 0, "acked floors truncated the op logs");
+    assert_eq!(retained, 0, "only the unacked suffix is retained");
+    let mesh_rate = moved as f64 / mesh_secs;
+    println!(
+        "mesh     ({mesh_n} peers, fanout 1): {moved} records moved in {sweeps} sweeps, \
+         {trips} peer round trips, {mesh_secs:.3}s  ({mesh_rate:>9.0} records/s), \
+         {truncated} ops truncated"
+    );
+
     let json = Json::obj(vec![
         ("bench", Json::Str("sync_throughput".to_string())),
         ("records", Json::Num(n as f64)),
@@ -223,6 +458,30 @@ fn main() {
                 ("ship_ratio_v2_over_v3", Json::Num(ratio)),
                 ("v3_exchange_s", Json::Num(inc_v3_secs)),
                 ("v2_exchange_s", Json::Num(inc_v2_secs)),
+            ]),
+        ),
+        (
+            "batched",
+            Json::obj(vec![
+                ("job_kinds", Json::Num(kinds.len() as f64)),
+                ("records", Json::Num(multi_total as f64)),
+                ("v3_round_trips", Json::Num(v3_full.round_trips as f64)),
+                ("v4_round_trips", Json::Num(v4_full.round_trips as f64)),
+                ("v3_idle_round_trips", Json::Num(v3_idle.round_trips as f64)),
+                ("v4_idle_round_trips", Json::Num(v4_idle.round_trips as f64)),
+                ("v4_records_per_s", Json::Num(multi_total as f64 / v4_secs)),
+            ]),
+        ),
+        (
+            "mesh",
+            Json::obj(vec![
+                ("peers", Json::Num(mesh_n as f64)),
+                ("fanout", Json::Num(1.0)),
+                ("sweeps_to_converge", Json::Num(sweeps as f64)),
+                ("peer_round_trips", Json::Num(trips as f64)),
+                ("records_moved", Json::Num(moved as f64)),
+                ("records_per_s", Json::Num(mesh_rate)),
+                ("ops_truncated", Json::Num(truncated as f64)),
             ]),
         ),
     ]);

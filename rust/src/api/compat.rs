@@ -1,0 +1,233 @@
+//! Legacy (v2) federation compatibility, quarantined.
+//!
+//! API v2 spoke an org-granular, *holdings*-based exchange: watermarks
+//! were `(count, digest)` summaries of each org's held records
+//! ([`OrgWatermarkV2`]), and a delta shipped every record of every org
+//! whose summary differed — O(org corpus) per changed org. v3 replaced
+//! it with record-level op-log deltas, and v4 layered mesh membership
+//! and truncation on top; the v2 shapes survive only for peers that
+//! predate the op log.
+//!
+//! This module is the one place that still knows how v2 works. Core
+//! serve paths (shards, the sequential coordinator's v3+ arms) never
+//! see a v2 request: deployments route `WatermarksV2`/`SyncPullV2`/
+//! `SyncPushV2` to [`serve`], which translates them onto the three
+//! narrow primitives of [`V2Host`]. A v2 *push* is translated onto the
+//! current op log by appending each applied record with a fresh local
+//! seqno — which may mark the org's log divergent from its home org's,
+//! degrading later v3+ exchanges for that org to whole-org ships:
+//! exactly the cost v2 always paid. A v2 *pull* against a truncated
+//! (floored) log is naturally safe: holdings summaries never reference
+//! folded history, so a differing org ships in full — the same
+//! whole-org fallback v4 peers get via
+//! [`OrgSnapshot`](crate::repo::OrgSnapshot) adoption.
+
+use super::{ApiError, Request, Response, SyncReport};
+use crate::repo::{OrgWatermarkV2, RuntimeRecord};
+use crate::workloads::JobKind;
+use std::collections::BTreeMap;
+
+/// Legacy (v2) holdings watermarks for a job repository.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct WatermarkSetV2 {
+    pub job: JobKind,
+    /// Repository generation the marks were read at.
+    pub generation: u64,
+    pub watermarks: BTreeMap<String, OrgWatermarkV2>,
+}
+
+/// A legacy (v2) org-granular delta: bare records of every org whose
+/// holdings watermark differed, plus the responder's own v2 marks.
+#[derive(Debug, Clone)]
+pub struct SyncDeltaV2 {
+    pub job: JobKind,
+    /// Responder's repository generation at extraction time.
+    pub generation: u64,
+    /// Records of every org whose watermark differed.
+    pub records: Vec<RuntimeRecord>,
+    /// The responder's own v2 watermarks.
+    pub watermarks: BTreeMap<String, OrgWatermarkV2>,
+}
+
+/// The three primitives a deployment must expose for [`serve`] to
+/// answer v2 requests on its behalf. Deliberately narrow: hosts hand
+/// over holdings summaries, org-granular extraction, and bare-record
+/// application — everything protocol-shaped (request routing, response
+/// pairing, error classes) stays here.
+pub trait V2Host {
+    /// Holdings watermarks of `job`'s repository.
+    fn v2_watermarks(&mut self, job: JobKind) -> Result<WatermarkSetV2, ApiError>;
+
+    /// Org-granular delta against a peer's holdings marks.
+    fn v2_delta(
+        &mut self,
+        job: JobKind,
+        theirs: &BTreeMap<String, OrgWatermarkV2>,
+    ) -> Result<SyncDeltaV2, ApiError>;
+
+    /// Apply bare records (no seqnos) through the usual merge + model
+    /// refresh path.
+    fn v2_apply(
+        &mut self,
+        job: JobKind,
+        records: Vec<RuntimeRecord>,
+    ) -> Result<SyncReport, ApiError>;
+}
+
+/// Answer one legacy (v2) request against `host`. Deployments route
+/// exactly their `WatermarksV2`/`SyncPullV2`/`SyncPushV2` arms here;
+/// any other request is a routing bug and comes back as
+/// [`ApiError::Protocol`].
+pub fn serve<H: V2Host + ?Sized>(host: &mut H, request: Request) -> Result<Response, ApiError> {
+    match request {
+        Request::WatermarksV2 { job } => host.v2_watermarks(job).map(Response::WatermarksV2),
+        Request::SyncPullV2 { job, watermarks } => {
+            host.v2_delta(job, &watermarks).map(Response::SyncDeltaV2)
+        }
+        Request::SyncPushV2 { job, records } => {
+            host.v2_apply(job, records).map(Response::SyncApplied)
+        }
+        other => Err(ApiError::Protocol(format!(
+            "non-v2 request routed to the compat adapter: {other:?}"
+        ))),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::repo::RuntimeDataRepo;
+    use crate::workloads::JobKind;
+
+    /// The minimal honest host: one repository, primitives wired
+    /// straight to the repo-level v2 methods — the same calls every
+    /// real deployment makes under its locks.
+    struct RepoHost {
+        repo: RuntimeDataRepo,
+    }
+
+    impl RepoHost {
+        fn check(&self, job: JobKind) -> Result<(), ApiError> {
+            if job == self.repo.job() {
+                Ok(())
+            } else {
+                Err(ApiError::InvalidRequest(format!(
+                    "host serves {}, not {}",
+                    self.repo.job().name(),
+                    job.name()
+                )))
+            }
+        }
+    }
+
+    impl V2Host for RepoHost {
+        fn v2_watermarks(&mut self, job: JobKind) -> Result<WatermarkSetV2, ApiError> {
+            self.check(job)?;
+            Ok(WatermarkSetV2 {
+                job,
+                generation: self.repo.generation(),
+                watermarks: self.repo.watermarks_v2(),
+            })
+        }
+
+        fn v2_delta(
+            &mut self,
+            job: JobKind,
+            theirs: &BTreeMap<String, OrgWatermarkV2>,
+        ) -> Result<SyncDeltaV2, ApiError> {
+            self.check(job)?;
+            Ok(SyncDeltaV2 {
+                job,
+                generation: self.repo.generation(),
+                records: self.repo.delta_for_v2(theirs),
+                watermarks: self.repo.watermarks_v2(),
+            })
+        }
+
+        fn v2_apply(
+            &mut self,
+            job: JobKind,
+            records: Vec<RuntimeRecord>,
+        ) -> Result<SyncReport, ApiError> {
+            self.check(job)?;
+            let offered = records.len();
+            let out = self
+                .repo
+                .merge_records(&records)
+                .map_err(ApiError::InvalidRequest)?;
+            self.repo.canonicalize();
+            Ok(SyncReport::tally(
+                job,
+                offered,
+                out.added,
+                out.replaced,
+                out.conflicts,
+                &out.logged,
+                self.repo.generation(),
+            ))
+        }
+    }
+
+    fn rec(org: &str, scaleout: u32, runtime: f64) -> RuntimeRecord {
+        RuntimeRecord {
+            job: JobKind::Sort,
+            org: org.into(),
+            machine: "m5.xlarge".into(),
+            scaleout,
+            job_features: vec![10.0],
+            runtime_s: runtime,
+        }
+    }
+
+    #[test]
+    fn v2_requests_route_through_the_adapter() {
+        let mut repo = RuntimeDataRepo::new(JobKind::Sort);
+        repo.contribute(rec("a", 4, 100.0)).unwrap();
+        repo.contribute(rec("a", 8, 60.0)).unwrap();
+        let mut host = RepoHost { repo };
+
+        let marks = match serve(&mut host, Request::WatermarksV2 { job: JobKind::Sort }) {
+            Ok(Response::WatermarksV2(set)) => set,
+            other => panic!("wrong response: {other:?}"),
+        };
+        assert_eq!(marks.watermarks["a"].count, 2);
+
+        // a fresh peer pulls: every record of the differing org ships
+        let delta = match serve(
+            &mut host,
+            Request::SyncPullV2 {
+                job: JobKind::Sort,
+                watermarks: BTreeMap::new(),
+            },
+        ) {
+            Ok(Response::SyncDeltaV2(delta)) => delta,
+            other => panic!("wrong response: {other:?}"),
+        };
+        assert_eq!(delta.records.len(), 2);
+
+        // pushing them back is a no-op (idempotent holdings merge)
+        let report = match serve(
+            &mut host,
+            Request::SyncPushV2 {
+                job: JobKind::Sort,
+                records: delta.records,
+            },
+        ) {
+            Ok(Response::SyncApplied(report)) => report,
+            other => panic!("wrong response: {other:?}"),
+        };
+        assert_eq!(report.changed(), 0);
+        assert_eq!(report.skipped, 2);
+    }
+
+    #[test]
+    fn non_v2_requests_are_a_protocol_error() {
+        let mut host = RepoHost {
+            repo: RuntimeDataRepo::new(JobKind::Sort),
+        };
+        match serve(&mut host, Request::Metrics) {
+            Err(ApiError::Protocol(msg)) => assert!(msg.contains("compat"), "{msg}"),
+            other => panic!("expected a protocol error, got {other:?}"),
+        }
+    }
+}

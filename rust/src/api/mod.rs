@@ -13,10 +13,15 @@
 //!   shared repositories, while **writes** ([`Request::Submit`],
 //!   [`Request::Contribute`], [`Request::Share`],
 //!   [`Request::SyncPush`]) both mutate them and refresh the
-//!   generation-stamped model the reads are served from. The three
+//!   generation-stamped model the reads are served from. The
 //!   federation requests are the peer exchange of [`crate::store`]:
 //!   watermark read → delta pull → idempotent push, driven by
-//!   [`sync_job`](crate::store::sync::sync_job).
+//!   [`sync`](crate::store::sync::sync), with a batched cross-job
+//!   form ([`Request::SyncPullAll`]/[`Request::SyncPushAll`]) covering
+//!   all five job kinds in one round trip, and the mesh-membership
+//!   pair ([`Request::MeshHello`]/[`Request::MeshRoster`]) by which
+//!   peers discover each other (see [`crate::store::mesh`]). Legacy v2
+//!   exchanges are quarantined behind the [`compat`] adapter.
 //! * [`Response`] — one typed variant per request, so a protocol-level
 //!   mismatch is a bug surfaced as [`ApiError::Protocol`], never a
 //!   silently misinterpreted reply.
@@ -42,12 +47,17 @@
 // (see rust/lint).
 #![cfg_attr(not(test), warn(clippy::unwrap_used))]
 
+pub mod compat;
+
+pub use compat::{SyncDeltaV2, WatermarkSetV2};
+
 use crate::cloud::Cloud;
 use crate::configurator::{ClusterChoice, JobRequest};
 use crate::coordinator::{JobOutcome, Metrics, Organization};
 use crate::models::ModelKind;
 use crate::repo::{
-    LoggedOp, MergeConflict, OrgWatermark, OrgWatermarkV2, RuntimeDataRepo, RuntimeRecord, SyncOp,
+    LoggedOp, MergeConflict, OrgSnapshot, OrgWatermark, OrgWatermarkV2, RuntimeDataRepo,
+    RuntimeRecord, SyncOp,
 };
 use crate::util::json::Json;
 use crate::workloads::JobKind;
@@ -56,19 +66,35 @@ use std::fmt;
 
 /// Protocol version. Bump on any breaking change to [`Request`],
 /// [`Response`], or [`ApiError`]; servers answer
-/// [`Request::SnapshotInfo`] with the version they speak so mixed-version
-/// tooling can detect skew.
+/// [`Request::SnapshotInfo`] with the version they speak so
+/// mixed-version tooling can detect skew.
 ///
-/// * v2 — federation: `Watermarks`/`SyncPull`/`SyncPush` requests, the
-///   [`ApiError::Store`] class, structured merge conflicts.
+/// The complete version ladder — every wire shape the stack has ever
+/// spoken, and where each lives today:
+///
+/// * v1 — the pre-federation protocol: `Submit`/`Recommend`/
+///   `Contribute`/`Share`/`Metrics`/`SnapshotInfo`. All still served
+///   unchanged; v1 clients never notice the later rungs.
+/// * v2 — federation: `Watermarks`/`SyncPull`/`SyncPush` requests over
+///   org-granular *holdings* watermarks ([`OrgWatermarkV2`]), the
+///   [`ApiError::Store`] class, structured merge conflicts. The v2
+///   exchange shapes survive as `WatermarksV2`/`SyncPullV2`/
+///   `SyncPushV2`, quarantined behind the [`compat`] adapter — core
+///   serve paths never see them.
 /// * v3 — record-level deltas: watermarks are per-org op-log positions
 ///   (`(seqno, digest)` [`OrgWatermark`]s), `SyncPull`/`SyncPush` ship
 ///   sequence-numbered [`SyncOp`]s (O(changed records) per exchange),
 ///   and merge-rejected ops advance the receiver's watermark so blind
-///   duplicates are never re-offered. The v2 org-granular exchange is
-///   still served, via the `WatermarksV2`/`SyncPullV2`/`SyncPushV2`
-///   compatibility translation.
-pub const API_VERSION: u32 = 3;
+///   duplicates are never re-offered.
+/// * v4 — mesh federation: peer membership over
+///   `MeshHello`/`MeshRoster` ([`MeshHello`] carries roster gossip and
+///   post-apply acks), cross-job batched exchange
+///   (`WatermarksAll`/`SyncPullAll`/`SyncPushAll` — one round trip for
+///   all five job kinds), and acked-floor op-log truncation:
+///   [`OrgWatermark`] gains a `floor` (v3 peers decode it as the
+///   `Default` 0 = full history), and deltas gain whole-org
+///   [`OrgSnapshot`] fallbacks for peers below a responder's floor.
+pub const API_VERSION: u32 = 4;
 
 // ---------------------------------------------------------------------------
 // errors
@@ -178,6 +204,59 @@ where
 }
 
 // ---------------------------------------------------------------------------
+// mesh membership (v4 wire types)
+// ---------------------------------------------------------------------------
+
+/// One mesh participant: a human-readable name plus the deterministic
+/// 64-bit ID derived from it ([`crate::store::mesh::peer_id`]). The ID
+/// is what membership logic compares — two deployments claiming the
+/// same name are the same peer.
+#[derive(Debug, Clone, PartialEq, Eq, PartialOrd, Ord)]
+pub struct MeshPeer {
+    pub name: String,
+    pub id: u64,
+}
+
+/// The one gossip message of the membership layer. A hello carries
+/// three things at once: liveness (the sender is alive this round),
+/// roster gossip (`known` — every peer the sender believes in, so
+/// membership spreads transitively), and acknowledgement (`acked` —
+/// the sender's own post-apply watermarks per job, which the receiver
+/// records as "this peer holds at least these prefixes", the input to
+/// acked-floor truncation). Answered by [`Response::MeshView`] with
+/// the receiver's updated roster.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct MeshHello {
+    pub from: MeshPeer,
+    /// Every peer the sender currently believes to be a member.
+    pub known: Vec<MeshPeer>,
+    /// The sender's own per-job watermarks — its acks.
+    pub acked: Vec<WatermarkSet>,
+}
+
+/// One roster row of a [`MeshView`]: a member plus its liveness state.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct MeshPeerStatus {
+    pub peer: MeshPeer,
+    /// The responder's local round when this member last helloed
+    /// (`0` = known only by gossip, never heard directly).
+    pub last_seen_round: u64,
+    /// False once the member has missed enough rounds to be considered
+    /// stale (it remains listed until eviction removes it).
+    pub live: bool,
+}
+
+/// A deployment's view of the mesh: its own identity, its local round
+/// counter, and the roster in deterministic (name-sorted) order.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct MeshView {
+    pub local: MeshPeer,
+    /// Local anti-entropy round counter (advanced by self-hellos).
+    pub round: u64,
+    pub peers: Vec<MeshPeerStatus>,
+}
+
+// ---------------------------------------------------------------------------
 // requests
 // ---------------------------------------------------------------------------
 
@@ -231,14 +310,43 @@ pub enum Request {
     /// repo order, and refresh the model. Idempotent — re-pushing a
     /// delta changes nothing, and a merge-rejected op still advances the
     /// receiver's watermark (logged as *seen*), so it is never offered
-    /// again. Answered by [`Response::SyncApplied`].
-    SyncPush { job: JobKind, ops: Vec<SyncOp> },
+    /// again. `snapshots` carries whole-org fallbacks for orgs whose
+    /// history the sender has truncated below the receiver's position
+    /// (empty from v3 senders). Answered by [`Response::SyncApplied`].
+    SyncPush {
+        job: JobKind,
+        ops: Vec<SyncOp>,
+        snapshots: Vec<OrgSnapshot>,
+    },
+    /// **Write.** Mesh membership gossip: liveness + roster + acks in
+    /// one message (see [`MeshHello`]). A *self*-hello (`from` naming
+    /// the deployment itself) is the local anti-entropy tick: it
+    /// advances the round, evicts stale members, and re-evaluates
+    /// acked-floor truncation. Answered by [`Response::MeshView`].
+    MeshHello { hello: MeshHello },
+    /// **Read.** The deployment's current mesh roster, without touching
+    /// liveness. Answered by [`Response::MeshView`].
+    MeshRoster,
+    /// **Read.** Watermarks of every job repository in one round trip —
+    /// the read half of the batched cross-job exchange. Answered by
+    /// [`Response::WatermarksAll`].
+    WatermarksAll,
+    /// **Read.** Batched cross-job delta extraction: one round trip
+    /// covering every job kind the requester sent marks for. Answered
+    /// by [`Response::SyncDeltaAll`].
+    SyncPullAll { watermarks: Vec<WatermarkSet> },
+    /// **Write.** Batched cross-job delta application; the reply also
+    /// carries the receiver's post-apply watermarks, so a mesh peer
+    /// learns the ack positions without a second round trip. Answered
+    /// by [`Response::SyncAppliedAll`].
+    SyncPushAll { deltas: Vec<SyncDelta> },
     /// **Read.** Legacy (v2) holdings watermarks, for peers that
-    /// predate the op log. Answered by [`Response::WatermarksV2`].
+    /// predate the op log. Served only through [`compat::serve`].
+    /// Answered by [`Response::WatermarksV2`].
     WatermarksV2 { job: JobKind },
     /// **Read.** Legacy (v2) org-granular delta extraction: every held
     /// record of each org whose holdings watermark differs — O(org
-    /// corpus) per changed org. Served via compatibility translation
+    /// corpus) per changed org. Served only through [`compat::serve`]
     /// ([`crate::repo::RuntimeDataRepo::delta_for_v2`]). Answered by
     /// [`Response::SyncDeltaV2`].
     SyncPullV2 {
@@ -250,7 +358,8 @@ pub enum Request {
     /// *applied* record with a fresh local seqno (which may mark the
     /// org's log divergent from its home — subsequent v3 exchanges for
     /// that org then fall back to whole-org ships, exactly the v2
-    /// cost). Answered by [`Response::SyncApplied`].
+    /// cost). Served only through [`compat::serve`]. Answered by
+    /// [`Response::SyncApplied`].
     SyncPushV2 {
         job: JobKind,
         records: Vec<RuntimeRecord>,
@@ -266,7 +375,14 @@ impl Request {
             }
             Request::Contribute { record } => Some(record.job),
             Request::Share { repo } => Some(repo.job()),
-            Request::Metrics => None,
+            // mesh membership and the batched exchanges span every job;
+            // deployments fan them out rather than routing them
+            Request::Metrics
+            | Request::MeshHello { .. }
+            | Request::MeshRoster
+            | Request::WatermarksAll
+            | Request::SyncPullAll { .. }
+            | Request::SyncPushAll { .. } => None,
             Request::SnapshotInfo { job }
             | Request::Watermarks { job }
             | Request::SyncPull { job, .. }
@@ -285,6 +401,8 @@ impl Request {
                 | Request::Contribute { .. }
                 | Request::Share { .. }
                 | Request::SyncPush { .. }
+                | Request::SyncPushAll { .. }
+                | Request::MeshHello { .. }
                 | Request::SyncPushV2 { .. }
         )
     }
@@ -350,18 +468,10 @@ pub struct WatermarkSet {
     pub watermarks: BTreeMap<String, OrgWatermark>,
 }
 
-/// Legacy (v2) holdings watermarks for a job repository.
-#[derive(Debug, Clone, PartialEq, Eq)]
-pub struct WatermarkSetV2 {
-    pub job: JobKind,
-    /// Repository generation the marks were read at.
-    pub generation: u64,
-    pub watermarks: BTreeMap<String, OrgWatermarkV2>,
-}
-
 /// A record-level delta computed against a peer's watermarks: the
-/// sequence-numbered ops the peer is missing, plus the responder's own
-/// marks for the reverse direction.
+/// sequence-numbered ops the peer is missing (plus whole-org snapshot
+/// fallbacks where truncation makes ops impossible), plus the
+/// responder's own marks for the reverse direction.
 #[derive(Debug, Clone)]
 pub struct SyncDelta {
     pub job: JobKind,
@@ -370,21 +480,11 @@ pub struct SyncDelta {
     /// Ops past each of the requester's marks, per-org in sequence
     /// order.
     pub ops: Vec<SyncOp>,
+    /// Whole-org fallbacks for orgs where the requester sits below the
+    /// responder's truncation floor (v4; always empty before that).
+    pub snapshots: Vec<OrgSnapshot>,
     /// The responder's own watermarks.
     pub watermarks: BTreeMap<String, OrgWatermark>,
-}
-
-/// A legacy (v2) org-granular delta: bare records of every org whose
-/// holdings watermark differed, plus the responder's own v2 marks.
-#[derive(Debug, Clone)]
-pub struct SyncDeltaV2 {
-    pub job: JobKind,
-    /// Responder's repository generation at extraction time.
-    pub generation: u64,
-    /// Records of every org whose watermark differed.
-    pub records: Vec<RuntimeRecord>,
-    /// The responder's own v2 watermarks.
-    pub watermarks: BTreeMap<String, OrgWatermarkV2>,
 }
 
 /// The structured result of applying a sync delta.
@@ -445,6 +545,17 @@ impl SyncReport {
     }
 }
 
+/// The result of one batched cross-job push: per-job apply reports
+/// plus the receiver's post-apply watermarks (its acks — what a mesh
+/// sender records as "this peer now holds these prefixes").
+#[derive(Debug, Clone, PartialEq)]
+pub struct SyncReportAll {
+    /// One report per job the push carried a delta for, in delta order.
+    pub reports: Vec<SyncReport>,
+    /// The receiver's watermarks for every job, after applying.
+    pub watermarks: Vec<WatermarkSet>,
+}
+
 /// One typed reply per [`Request`] variant.
 // Variant sizes are dominated by `Submitted(JobOutcome)`; boxing it
 // would push an allocation + indirection into every submission reply
@@ -461,6 +572,10 @@ pub enum Response {
     Watermarks(WatermarkSet),
     SyncDelta(SyncDelta),
     SyncApplied(SyncReport),
+    MeshView(MeshView),
+    WatermarksAll(Vec<WatermarkSet>),
+    SyncDeltaAll(Vec<SyncDelta>),
+    SyncAppliedAll(SyncReportAll),
     WatermarksV2(WatermarkSetV2),
     SyncDeltaV2(SyncDeltaV2),
 }
@@ -477,6 +592,10 @@ impl Response {
             Response::Watermarks(_) => "Watermarks",
             Response::SyncDelta(_) => "SyncDelta",
             Response::SyncApplied(_) => "SyncApplied",
+            Response::MeshView(_) => "MeshView",
+            Response::WatermarksAll(_) => "WatermarksAll",
+            Response::SyncDeltaAll(_) => "SyncDeltaAll",
+            Response::SyncAppliedAll(_) => "SyncAppliedAll",
             Response::WatermarksV2(_) => "WatermarksV2",
             Response::SyncDeltaV2(_) => "SyncDeltaV2",
         }
@@ -581,11 +700,71 @@ pub trait Client {
     }
 
     /// Apply a peer's record-level delta (idempotent merge + canonical
-    /// reorder; rejected ops advance the watermark).
+    /// reorder; rejected ops advance the watermark). Op-only form; a
+    /// delta that may carry whole-org snapshot fallbacks goes through
+    /// [`Client::sync_push_full`].
     fn sync_push(&mut self, job: JobKind, ops: Vec<SyncOp>) -> Result<SyncReport, ApiError> {
-        match self.call(Request::SyncPush { job, ops })? {
+        self.sync_push_full(job, ops, Vec::new())
+    }
+
+    /// [`Client::sync_push`] with whole-org snapshot fallbacks for orgs
+    /// the sender could not serve ops for (truncated below the
+    /// receiver's position).
+    fn sync_push_full(
+        &mut self,
+        job: JobKind,
+        ops: Vec<SyncOp>,
+        snapshots: Vec<OrgSnapshot>,
+    ) -> Result<SyncReport, ApiError> {
+        match self.call(Request::SyncPush { job, ops, snapshots })? {
             Response::SyncApplied(report) => Ok(report),
             other => Err(other.unexpected("SyncApplied")),
+        }
+    }
+
+    /// Send one mesh gossip message (liveness + roster + acks) and get
+    /// the receiver's updated mesh view back.
+    fn mesh_hello(&mut self, hello: MeshHello) -> Result<MeshView, ApiError> {
+        match self.call(Request::MeshHello { hello })? {
+            Response::MeshView(view) => Ok(view),
+            other => Err(other.unexpected("MeshView")),
+        }
+    }
+
+    /// Read the deployment's current mesh roster.
+    fn mesh_roster(&mut self) -> Result<MeshView, ApiError> {
+        match self.call(Request::MeshRoster)? {
+            Response::MeshView(view) => Ok(view),
+            other => Err(other.unexpected("MeshView")),
+        }
+    }
+
+    /// Read every job repository's watermarks in one round trip.
+    fn watermarks_all(&mut self) -> Result<Vec<WatermarkSet>, ApiError> {
+        match self.call(Request::WatermarksAll)? {
+            Response::WatermarksAll(sets) => Ok(sets),
+            other => Err(other.unexpected("WatermarksAll")),
+        }
+    }
+
+    /// Extract cross-job deltas against a full set of per-job marks in
+    /// one round trip.
+    fn sync_pull_all(
+        &mut self,
+        watermarks: Vec<WatermarkSet>,
+    ) -> Result<Vec<SyncDelta>, ApiError> {
+        match self.call(Request::SyncPullAll { watermarks })? {
+            Response::SyncDeltaAll(deltas) => Ok(deltas),
+            other => Err(other.unexpected("SyncDeltaAll")),
+        }
+    }
+
+    /// Apply cross-job deltas in one round trip; the reply carries the
+    /// receiver's post-apply watermarks (its acks).
+    fn sync_push_all(&mut self, deltas: Vec<SyncDelta>) -> Result<SyncReportAll, ApiError> {
+        match self.call(Request::SyncPushAll { deltas })? {
+            Response::SyncAppliedAll(report) => Ok(report),
+            other => Err(other.unexpected("SyncAppliedAll")),
         }
     }
 
@@ -755,9 +934,29 @@ mod tests {
         let push = Request::SyncPush {
             job: JobKind::Grep,
             ops: vec![],
+            snapshots: vec![],
         };
         assert!(push.is_write());
         assert_eq!(push.job(), Some(JobKind::Grep));
+        // v4: mesh gossip mutates membership state; the batched
+        // cross-job exchanges route to no single job
+        let hello = Request::MeshHello {
+            hello: MeshHello {
+                from: MeshPeer {
+                    name: "a".into(),
+                    id: 1,
+                },
+                known: vec![],
+                acked: vec![],
+            },
+        };
+        assert!(hello.is_write());
+        assert_eq!(hello.job(), None);
+        assert!(!Request::MeshRoster.is_write());
+        assert!(!Request::WatermarksAll.is_write());
+        assert!(!Request::SyncPullAll { watermarks: vec![] }.is_write());
+        assert!(Request::SyncPushAll { deltas: vec![] }.is_write());
+        assert_eq!(Request::SyncPushAll { deltas: vec![] }.job(), None);
         assert!(!Request::WatermarksV2 { job: JobKind::Sort }.is_write());
         let pull_v2 = Request::SyncPullV2 {
             job: JobKind::Sort,

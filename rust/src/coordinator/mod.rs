@@ -74,15 +74,19 @@ pub mod shard;
 pub use service::{CoordinatorService, ServiceClient, ServiceConfig, SubmitTicket};
 pub use shard::{JobShard, ModelSnapshot, ShardPolicy};
 
+use crate::api::compat::{self, V2Host};
 use crate::api::{
-    ApiError, Client, Contribution, Recommendation, Request, Response, SnapshotInfo, SyncDelta,
-    SyncDeltaV2, SyncReport, WatermarkSet, WatermarkSetV2,
+    ApiError, Client, Contribution, MeshHello, MeshView, Recommendation, Request, Response,
+    SnapshotInfo, SyncDelta, SyncDeltaV2, SyncReport, SyncReportAll, WatermarkSet, WatermarkSetV2,
 };
 use crate::cloud::Cloud;
 use crate::configurator::{ClusterChoice, JobRequest};
 use crate::models::selection::SelectionReport;
 use crate::models::{Engine, ModelKind, ModelTrainer};
-use crate::repo::{OrgWatermark, OrgWatermarkV2, RuntimeDataRepo, RuntimeRecord, SyncOp};
+use crate::repo::{
+    OrgSnapshot, OrgWatermark, OrgWatermarkV2, RuntimeDataRepo, RuntimeRecord, SyncOp,
+};
+use crate::store::mesh::MeshState;
 use crate::store::JobStore;
 use crate::util::json::Json;
 use crate::util::rng::Pcg32;
@@ -192,6 +196,13 @@ pub struct Metrics {
     pub sync_records_applied: u64,
     /// Runtime disagreements surfaced while applying peer deltas.
     pub sync_conflicts: u64,
+    /// Mesh gossip hellos observed (self-ticks included).
+    pub mesh_hellos: u64,
+    /// Roster members evicted for staleness.
+    pub mesh_evictions: u64,
+    /// Op-log entries folded into base snapshots by acked-floor
+    /// truncation.
+    pub ops_truncated: u64,
     pub targets_given: u64,
     pub targets_met: u64,
     pub total_cost_usd: f64,
@@ -244,6 +255,9 @@ impl Metrics {
                 Json::Num(self.sync_records_applied as f64),
             ),
             ("sync_conflicts", Json::Num(self.sync_conflicts as f64)),
+            ("mesh_hellos", Json::Num(self.mesh_hellos as f64)),
+            ("mesh_evictions", Json::Num(self.mesh_evictions as f64)),
+            ("ops_truncated", Json::Num(self.ops_truncated as f64)),
             ("targets_given", Json::Num(self.targets_given as f64)),
             ("targets_met", Json::Num(self.targets_met as f64)),
             ("target_hit_rate", Json::Num(self.target_hit_rate())),
@@ -271,6 +285,9 @@ impl Metrics {
         self.sync_pushes += other.sync_pushes;
         self.sync_records_applied += other.sync_records_applied;
         self.sync_conflicts += other.sync_conflicts;
+        self.mesh_hellos += other.mesh_hellos;
+        self.mesh_evictions += other.mesh_evictions;
+        self.ops_truncated += other.ops_truncated;
         self.targets_given += other.targets_given;
         self.targets_met += other.targets_met;
         self.total_cost_usd += other.total_cost_usd;
@@ -297,6 +314,9 @@ pub struct Coordinator {
     pub cv_folds: usize,
     metrics: Metrics,
     seed_rng: Pcg32,
+    /// Mesh membership: who this deployment is in the federation and
+    /// which peers it currently believes in (see [`crate::store::mesh`]).
+    mesh: MeshState,
 }
 
 impl Coordinator {
@@ -348,7 +368,19 @@ impl Coordinator {
             cv_folds: policy.cv_folds,
             metrics: Metrics::default(),
             seed_rng: Pcg32::new(seed),
+            mesh: MeshState::new("c3o"),
         }
+    }
+
+    /// Rename this deployment's mesh identity (resets membership —
+    /// meant for wiring, before the first hello).
+    pub fn set_mesh_name(&mut self, name: &str) {
+        self.mesh = MeshState::new(name);
+    }
+
+    /// The deployment's mesh membership state.
+    pub fn mesh(&self) -> &MeshState {
+        &self.mesh
     }
 
     pub fn cloud(&self) -> &Cloud {
@@ -518,26 +550,49 @@ impl Coordinator {
     }
 
     /// **Read.** Record-level delta extraction against a peer's op-log
-    /// watermarks.
+    /// watermarks: per-op suffixes where the logs are prefix-aligned
+    /// above the truncation floor, whole-org snapshot fallbacks where
+    /// the peer sits below it.
     pub fn sync_pull(
         &self,
         job: JobKind,
         theirs: &BTreeMap<String, OrgWatermark>,
     ) -> SyncDelta {
         match self.shards.get(&job) {
-            Some(shard) => SyncDelta {
-                job,
-                generation: shard.generation(),
-                ops: shard.repo().delta_for(theirs),
-                watermarks: shard.repo().watermarks(),
-            },
+            Some(shard) => {
+                let plan = shard.repo().delta_plan(theirs);
+                SyncDelta {
+                    job,
+                    generation: shard.generation(),
+                    ops: plan.ops,
+                    snapshots: plan.snapshots,
+                    watermarks: shard.repo().watermarks(),
+                }
+            }
             None => SyncDelta {
                 job,
                 generation: 0,
                 ops: Vec::new(),
+                snapshots: Vec::new(),
                 watermarks: BTreeMap::new(),
             },
         }
+    }
+
+    /// **Read.** Every job repository's watermarks, in [`JobKind::all`]
+    /// order — the batched (v4) replacement for five `Watermarks` round
+    /// trips.
+    pub fn watermarks_all(&self) -> Vec<WatermarkSet> {
+        JobKind::all().into_iter().map(|job| self.watermarks(job)).collect()
+    }
+
+    /// **Read.** Cross-job delta extraction: one [`Coordinator::sync_pull`]
+    /// per supplied watermark set, in the supplied order.
+    pub fn sync_pull_all(&self, theirs: &[WatermarkSet]) -> Vec<SyncDelta> {
+        theirs
+            .iter()
+            .map(|set| self.sync_pull(set.job, &set.watermarks))
+            .collect()
     }
 
     /// **Read.** Legacy (v2) org-granular delta extraction.
@@ -564,26 +619,90 @@ impl Coordinator {
 
     /// **Write.** Apply a peer's record-level delta: merge with
     /// deterministic conflict resolution, advance the org logs (seen
-    /// ops included), canonicalize the record order, refresh the model.
-    /// Idempotent.
-    pub fn sync_push(&mut self, job: JobKind, ops: &[SyncOp]) -> Result<SyncReport, ApiError> {
+    /// ops included), adopt whole-org snapshot fallbacks, canonicalize
+    /// the record order, refresh the model. Idempotent.
+    pub fn sync_push(
+        &mut self,
+        job: JobKind,
+        ops: &[SyncOp],
+        snapshots: &[OrgSnapshot],
+    ) -> Result<SyncReport, ApiError> {
         crate::api::validate_machines(&self.cloud, ops.iter().map(|op| &op.record))?;
+        for snap in snapshots {
+            crate::api::validate_machines(&self.cloud, &snap.records)?;
+        }
         let policy = self.policy();
         let shard = Self::ensure_shard(&mut self.shards, &mut self.seed_rng, job);
-        let outcome = shard.apply_sync_ops(ops)?;
+        let offered = ops.len() + snapshots.iter().map(|s| s.records.len()).sum::<usize>();
+        let mut outcome = shard.apply_sync_ops(ops)?;
+        let (snap_outcome, snap_applied) = shard.apply_org_snapshots(snapshots)?;
+        outcome.added += snap_outcome.added;
+        outcome.replaced += snap_outcome.replaced;
+        outcome.skipped += snap_outcome.skipped;
+        outcome.conflicts.extend(snap_outcome.conflicts);
+        outcome.logged.extend(snap_outcome.logged);
         shard.refresh_model(&mut self.engine, &self.cloud, &policy, &mut self.metrics)?;
         self.metrics.sync_pushes += 1;
         self.metrics.sync_records_applied += outcome.changed() as u64;
         self.metrics.sync_conflicts += outcome.conflicts.len() as u64;
-        Ok(SyncReport::tally(
+        let mut report = SyncReport::tally(
             job,
-            ops.len(),
+            offered,
             outcome.added,
             outcome.replaced,
             outcome.conflicts,
             &outcome.logged,
             shard.generation(),
-        ))
+        );
+        // adopted snapshot records fold into the prefix without logged
+        // ops, so their per-org applied counts are added explicitly
+        for (org, applied) in snap_applied {
+            *report.applied_by_org.entry(org).or_default() += applied;
+        }
+        Ok(report)
+    }
+
+    /// **Write.** Apply a batched cross-job push and reply with
+    /// post-apply watermarks for every job — the acks a mesh sender
+    /// records for this deployment.
+    pub fn sync_push_all(&mut self, deltas: Vec<SyncDelta>) -> Result<SyncReportAll, ApiError> {
+        let mut reports = Vec::with_capacity(deltas.len());
+        for delta in deltas {
+            reports.push(self.sync_push(delta.job, &delta.ops, &delta.snapshots)?);
+        }
+        Ok(SyncReportAll {
+            reports,
+            watermarks: self.watermarks_all(),
+        })
+    }
+
+    /// **Write.** Observe one mesh gossip hello. A *self*-hello is the
+    /// anti-entropy tick: it advances the round, evicts stale members,
+    /// and re-evaluates **acked-floor truncation** — for every job, the
+    /// log prefix every live member has acked is folded into the base
+    /// snapshot (durably, via a rebased compaction), bounding op-log
+    /// memory by the unacked suffix. Any other hello marks the sender
+    /// live and records its acks.
+    pub fn observe_mesh_hello(&mut self, hello: &MeshHello) -> Result<MeshView, ApiError> {
+        let tick = hello.from.id == self.mesh.local().id;
+        let evicted = self
+            .mesh
+            .observe_hello(hello)
+            .map_err(ApiError::InvalidRequest)?;
+        self.metrics.mesh_hellos += 1;
+        self.metrics.mesh_evictions += evicted;
+        if tick {
+            for kind in JobKind::all() {
+                let floors = self.mesh.acked_floors(kind);
+                if floors.is_empty() {
+                    continue;
+                }
+                if let Some(shard) = self.shards.get_mut(&kind) {
+                    self.metrics.ops_truncated += shard.truncate_to_floors(&floors)?;
+                }
+            }
+        }
+        Ok(self.mesh.view())
     }
 
     /// **Write.** Legacy (v2) delta application — the compatibility
@@ -614,6 +733,31 @@ impl Coordinator {
     }
 }
 
+// The legacy (v2) surface: the sequential coordinator hands the compat
+// adapter its three primitives; everything protocol-shaped stays in
+// `api::compat`.
+impl V2Host for Coordinator {
+    fn v2_watermarks(&mut self, job: JobKind) -> Result<WatermarkSetV2, ApiError> {
+        Ok(self.watermarks_v2(job))
+    }
+
+    fn v2_delta(
+        &mut self,
+        job: JobKind,
+        theirs: &BTreeMap<String, OrgWatermarkV2>,
+    ) -> Result<SyncDeltaV2, ApiError> {
+        Ok(self.sync_pull_v2(job, theirs))
+    }
+
+    fn v2_apply(
+        &mut self,
+        job: JobKind,
+        records: Vec<RuntimeRecord>,
+    ) -> Result<SyncReport, ApiError> {
+        self.sync_push_v2(job, &records)
+    }
+}
+
 impl Client for Coordinator {
     fn call(&mut self, request: Request) -> Result<Response, ApiError> {
         match request {
@@ -631,18 +775,27 @@ impl Client for Coordinator {
             Request::SyncPull { job, watermarks } => {
                 Ok(Response::SyncDelta(self.sync_pull(job, &watermarks)))
             }
-            Request::SyncPush { job, ops } => {
-                self.sync_push(job, &ops).map(Response::SyncApplied)
+            Request::SyncPush {
+                job,
+                ops,
+                snapshots,
+            } => self
+                .sync_push(job, &ops, &snapshots)
+                .map(Response::SyncApplied),
+            Request::MeshHello { hello } => {
+                self.observe_mesh_hello(&hello).map(Response::MeshView)
             }
-            Request::WatermarksV2 { job } => {
-                Ok(Response::WatermarksV2(self.watermarks_v2(job)))
+            Request::MeshRoster => Ok(Response::MeshView(self.mesh.view())),
+            Request::WatermarksAll => Ok(Response::WatermarksAll(self.watermarks_all())),
+            Request::SyncPullAll { watermarks } => {
+                Ok(Response::SyncDeltaAll(self.sync_pull_all(&watermarks)))
             }
-            Request::SyncPullV2 { job, watermarks } => {
-                Ok(Response::SyncDeltaV2(self.sync_pull_v2(job, &watermarks)))
+            Request::SyncPushAll { deltas } => {
+                self.sync_push_all(deltas).map(Response::SyncAppliedAll)
             }
-            Request::SyncPushV2 { job, records } => {
-                self.sync_push_v2(job, &records).map(Response::SyncApplied)
-            }
+            v2 @ (Request::WatermarksV2 { .. }
+            | Request::SyncPullV2 { .. }
+            | Request::SyncPushV2 { .. }) => compat::serve(self, v2),
         }
     }
 }

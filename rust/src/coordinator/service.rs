@@ -7,10 +7,13 @@
 //!
 //! * **Shards** — one [`JobShard`] per [`JobKind`], each behind its own
 //!   mutex, taken **only by writes** (`Submit`, `Contribute`, `Share`,
-//!   `SyncPush`) — plus `SyncPull`, the one read that needs the full
-//!   record set for delta extraction. Distinct kinds never serialize
-//!   against each other; same-kind writes serialize exactly as much as
-//!   the shared repository requires. With
+//!   `SyncPush`/`SyncPushAll`, and the acked-floor truncation a
+//!   self-`MeshHello` triggers) — plus `SyncPull`/`SyncPullAll`, the
+//!   reads that need the full record set for delta extraction. Distinct
+//!   kinds never serialize against each other; same-kind writes
+//!   serialize exactly as much as the shared repository requires. Mesh
+//!   membership lives in its own leaf-class `mesh` mutex, never held
+//!   while a shard lock is. With
 //!   [`ServiceConfig::with_store_dir`] every shard persists its writes
 //!   through a [`crate::store::JobStore`], and
 //!   [`CoordinatorService::open`] recovers the corpus (and warms the
@@ -86,6 +89,7 @@
 // surviving panic site below carries a justified `c3o-lint: allow`.
 #![cfg_attr(not(test), warn(clippy::unwrap_used))]
 
+use crate::api::compat::{self, V2Host};
 use crate::api::{
     self, ApiError, Client, Contribution, Recommendation, Response, SnapshotInfo,
 };
@@ -96,12 +100,13 @@ use crate::coordinator::shard::{JobShard, ModelSnapshot, ShardPolicy};
 use crate::coordinator::{JobOutcome, Metrics, Organization};
 use crate::models::{Engine, ModelTrainer, QueryBatch};
 use crate::obs::{Collector, ReqKind, Stage, Trace};
-use crate::repo::{RuntimeDataRepo, RuntimeRecord};
+use crate::repo::{OrgWatermarkV2, RuntimeDataRepo, RuntimeRecord};
 use crate::runtime::Runtime;
+use crate::store::mesh::MeshState;
 use crate::util::rng::Pcg32;
 use crate::util::sync::{LockExt, RwLockExt};
 use crate::workloads::JobKind;
-use std::collections::{HashMap, VecDeque};
+use std::collections::{BTreeMap, HashMap, VecDeque};
 use std::path::PathBuf;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc;
@@ -142,6 +147,11 @@ pub struct ServiceConfig {
     /// results are bitwise-identical to serial serving (asserted by the
     /// shared client suite) — so it defaults on.
     pub compute_pool: bool,
+    /// This deployment's mesh name: its identity in the gossip roster
+    /// (peers derive the stable member ID from it, see
+    /// [`crate::store::mesh::peer_id`]). Deployments that never join a
+    /// mesh can leave the default.
+    pub mesh_name: String,
 }
 
 impl Default for ServiceConfig {
@@ -158,6 +168,7 @@ impl Default for ServiceConfig {
             store_dir: None,
             tracing: true,
             compute_pool: true,
+            mesh_name: "c3o".to_string(),
         }
     }
 }
@@ -218,6 +229,12 @@ impl ServiceConfig {
         self.compute_pool = compute_pool;
         self
     }
+
+    /// Name this deployment in the gossip mesh (its roster identity).
+    pub fn with_mesh_name(mut self, name: &str) -> Self {
+        self.mesh_name = name.to_string();
+        self
+    }
 }
 
 /// Reply channel of one in-flight protocol request.
@@ -252,13 +269,20 @@ fn lane_of(request: &api::Request) -> Lane {
         | api::Request::Metrics
         | api::Request::SnapshotInfo { .. }
         | api::Request::Watermarks { .. }
+        | api::Request::WatermarksAll
         | api::Request::WatermarksV2 { .. }
         | api::Request::SyncPull { .. }
-        | api::Request::SyncPullV2 { .. } => Lane::Read,
+        | api::Request::SyncPullAll { .. }
+        | api::Request::SyncPullV2 { .. }
+        | api::Request::MeshRoster => Lane::Read,
         api::Request::Submit { .. }
         | api::Request::Contribute { .. }
         | api::Request::Share { .. }
         | api::Request::SyncPush { .. }
+        | api::Request::SyncPushAll { .. }
+        // a self-hello ticks the anti-entropy round and may truncate
+        // shard op logs, so hellos ride the write lane
+        | api::Request::MeshHello { .. }
         | api::Request::SyncPushV2 { .. } => Lane::Write,
     }
 }
@@ -447,6 +471,11 @@ struct Shared {
     /// Trace collector: per-worker lock-free rings on the hot path,
     /// aggregation only at drain time ([`crate::obs`]).
     obs: Collector,
+    /// Gossip-mesh membership + per-peer acked watermarks. Lock class
+    /// `mesh` — a **leaf**: held only for roster surgery and acked-floor
+    /// computation, never while a shard (or any other) lock is held;
+    /// truncation locks the shards only after this lock is dropped.
+    mesh: Mutex<MeshState>,
 }
 
 impl Shared {
@@ -689,6 +718,7 @@ impl CoordinatorService {
             coalesce: config.coalesce.max(1),
             pool,
             obs: Collector::new(n, config.tracing),
+            mesh: Mutex::new(MeshState::new(&config.mesh_name)),
         });
         let mut workers = Vec::with_capacity(n);
         for i in 0..n {
@@ -809,6 +839,23 @@ impl CoordinatorService {
         crate::store::SyncDriver::spawn(self.client(), peers, jobs, interval)
     }
 
+    /// Spawn a background **mesh** gossip loop: each round self-ticks
+    /// this deployment (advancing its anti-entropy round, evicting
+    /// stale roster members, and folding acked log prefixes below the
+    /// truncation floor), then runs one batched cross-job exchange with
+    /// each of `fanout` roster-selected peers. Supersedes
+    /// [`CoordinatorService::sync_with`]'s static peer list: peers are
+    /// chosen from the live roster each round. Stop it with
+    /// [`crate::store::MeshDriver::stop`].
+    pub fn mesh_with(
+        &self,
+        peers: Vec<(String, ServiceClient)>,
+        fanout: usize,
+        interval: std::time::Duration,
+    ) -> crate::store::MeshDriver {
+        crate::store::MeshDriver::spawn(self.client(), peers, fanout, interval)
+    }
+
     /// Graceful shutdown: every worker drains one `Shutdown` and exits.
     pub fn shutdown(mut self) {
         self.shutdown_inner();
@@ -836,8 +883,13 @@ fn req_kind(request: &api::Request) -> ReqKind {
         api::Request::Contribute { .. } => ReqKind::Contribute,
         api::Request::Share { .. } => ReqKind::Share,
         api::Request::Watermarks { .. }
+        | api::Request::WatermarksAll
         | api::Request::SyncPull { .. }
         | api::Request::SyncPush { .. }
+        | api::Request::SyncPullAll { .. }
+        | api::Request::SyncPushAll { .. }
+        | api::Request::MeshHello { .. }
+        | api::Request::MeshRoster
         | api::Request::WatermarksV2 { .. }
         | api::Request::SyncPullV2 { .. }
         | api::Request::SyncPushV2 { .. } => ReqKind::Sync,
@@ -1228,104 +1280,127 @@ fn serve_request(
             }))
         }
         api::Request::SyncPull { job, watermarks } => {
-            let shard_mutex = shard_for(shared, job)?;
-            let shard = {
-                let _lock_wait = trace.span(Stage::ShardLockWait);
-                shard_mutex.lock_unpoisoned()
-            };
-            Ok(Response::SyncDelta(api::SyncDelta {
-                job,
-                generation: shard.generation(),
-                ops: shard.repo().delta_for(&watermarks),
-                watermarks: shard.repo().watermarks(),
+            Ok(Response::SyncDelta(pull_delta(shared, job, &watermarks, trace)?))
+        }
+        api::Request::WatermarksAll => {
+            // lock-free like `Watermarks`: all five sets off the
+            // published snapshots
+            let sets = JobKind::all()
+                .into_iter()
+                .map(|job| {
+                    let snap = shared.snapshot(job);
+                    api::WatermarkSet {
+                        job,
+                        generation: snap.generation,
+                        watermarks: snap.watermarks.clone(),
+                    }
+                })
+                .collect();
+            Ok(Response::WatermarksAll(sets))
+        }
+        api::Request::SyncPullAll { watermarks } => {
+            // cross-job extraction in one round trip; shard locks are
+            // taken one at a time, never nested
+            let deltas = watermarks
+                .iter()
+                .map(|set| pull_delta(shared, set.job, &set.watermarks, trace))
+                .collect::<Result<Vec<_>, _>>()?;
+            Ok(Response::SyncDeltaAll(deltas))
+        }
+        api::Request::SyncPush { job, ops, snapshots } => {
+            push_delta(shared, engine, job, &ops, &snapshots, trace).map(Response::SyncApplied)
+        }
+        api::Request::SyncPushAll { deltas } => {
+            // one round trip applies every job's delta; shard locks are
+            // taken one at a time, never nested
+            let mut reports = Vec::with_capacity(deltas.len());
+            for delta in &deltas {
+                reports.push(push_delta(
+                    shared,
+                    engine,
+                    delta.job,
+                    &delta.ops,
+                    &delta.snapshots,
+                    trace,
+                )?);
+            }
+            // post-apply marks (the acks a mesh sender records for this
+            // deployment) — each push republished its snapshot above
+            let watermarks = JobKind::all()
+                .into_iter()
+                .map(|job| {
+                    let snap = shared.snapshot(job);
+                    api::WatermarkSet {
+                        job,
+                        generation: snap.generation,
+                        watermarks: snap.watermarks.clone(),
+                    }
+                })
+                .collect();
+            Ok(Response::SyncAppliedAll(api::SyncReportAll {
+                reports,
+                watermarks,
             }))
         }
-        api::Request::SyncPush { job, ops } => {
-            api::validate_machines(&shared.cloud, ops.iter().map(|op| &op.record))?;
-            let shard_mutex = shard_for(shared, job)?;
+        api::Request::MeshHello { hello } => {
             let mut local = Metrics::default();
-            let result = {
+            // roster surgery + floor computation under the mesh lock
+            // (leaf class) only; the lock is dropped before any shard
+            // lock is taken for truncation
+            let (view, floors_by_job) = {
+                let mut mesh = shared.mesh.lock_unpoisoned();
+                let tick = hello.from.id == mesh.local().id;
+                let evicted = mesh
+                    .observe_hello(&hello)
+                    .map_err(ApiError::InvalidRequest)?;
+                local.mesh_hellos += 1;
+                local.mesh_evictions += evicted;
+                let floors: Vec<(JobKind, BTreeMap<String, u64>)> = if tick {
+                    JobKind::all()
+                        .into_iter()
+                        .filter_map(|kind| {
+                            let floors = mesh.acked_floors(kind);
+                            (!floors.is_empty()).then_some((kind, floors))
+                        })
+                        .collect()
+                } else {
+                    Vec::new()
+                };
+                (mesh.view(), floors)
+            };
+            for (kind, floors) in floors_by_job {
+                let shard_mutex = shard_for(shared, kind)?;
                 let mut shard = {
                     let _lock_wait = trace.span(Stage::ShardLockWait);
                     shard_mutex.lock_unpoisoned()
                 };
-                let result = shard.apply_sync_ops(&ops).and_then(|outcome| {
-                    shard.refresh_model(engine, &shared.cloud, &shared.policy, &mut local)?;
+                let truncated = shard.truncate_to_floors(&floors)?;
+                if truncated > 0 {
+                    local.ops_truncated += truncated;
+                    // republish so lock-free watermark reads see the
+                    // raised floors
                     shared.publish(&shard);
-                    local.sync_pushes += 1;
-                    local.sync_records_applied += outcome.changed() as u64;
-                    local.sync_conflicts += outcome.conflicts.len() as u64;
-                    Ok(api::SyncReport::tally(
-                        job,
-                        ops.len(),
-                        outcome.added,
-                        outcome.replaced,
-                        outcome.conflicts,
-                        &outcome.logged,
-                        shard.generation(),
-                    ))
-                });
+                }
                 drain_shard_stages(trace, &mut shard);
-                result
-            };
+            }
             shared.metrics.lock_unpoisoned().fold(&local);
-            result.map(Response::SyncApplied)
+            Ok(Response::MeshView(view))
         }
-        api::Request::WatermarksV2 { job } => {
-            let shard_mutex = shard_for(shared, job)?;
-            let shard = {
-                let _lock_wait = trace.span(Stage::ShardLockWait);
-                shard_mutex.lock_unpoisoned()
-            };
-            Ok(Response::WatermarksV2(api::WatermarkSetV2 {
-                job,
-                generation: shard.generation(),
-                watermarks: shard.repo().watermarks_v2(),
-            }))
+        api::Request::MeshRoster => {
+            Ok(Response::MeshView(shared.mesh.lock_unpoisoned().view()))
         }
-        api::Request::SyncPullV2 { job, watermarks } => {
-            let shard_mutex = shard_for(shared, job)?;
-            let shard = {
-                let _lock_wait = trace.span(Stage::ShardLockWait);
-                shard_mutex.lock_unpoisoned()
+        // Legacy (v2) federation, quarantined in `api::compat`: the
+        // adapter translates the three v2 request shapes onto the
+        // narrow host primitives implemented by `ServiceV2Host` below.
+        v2 @ (api::Request::WatermarksV2 { .. }
+        | api::Request::SyncPullV2 { .. }
+        | api::Request::SyncPushV2 { .. }) => {
+            let mut host = ServiceV2Host {
+                shared,
+                engine,
+                trace,
             };
-            Ok(Response::SyncDeltaV2(api::SyncDeltaV2 {
-                job,
-                generation: shard.generation(),
-                records: shard.repo().delta_for_v2(&watermarks),
-                watermarks: shard.repo().watermarks_v2(),
-            }))
-        }
-        api::Request::SyncPushV2 { job, records } => {
-            api::validate_machines(&shared.cloud, &records)?;
-            let shard_mutex = shard_for(shared, job)?;
-            let mut local = Metrics::default();
-            let result = {
-                let mut shard = {
-                    let _lock_wait = trace.span(Stage::ShardLockWait);
-                    shard_mutex.lock_unpoisoned()
-                };
-                let result = shard.apply_sync_records(&records).and_then(|outcome| {
-                    shard.refresh_model(engine, &shared.cloud, &shared.policy, &mut local)?;
-                    shared.publish(&shard);
-                    local.sync_pushes += 1;
-                    local.sync_records_applied += outcome.changed() as u64;
-                    local.sync_conflicts += outcome.conflicts.len() as u64;
-                    Ok(api::SyncReport::tally(
-                        job,
-                        records.len(),
-                        outcome.added,
-                        outcome.replaced,
-                        outcome.conflicts,
-                        &outcome.applied,
-                        shard.generation(),
-                    ))
-                });
-                drain_shard_stages(trace, &mut shard);
-                result
-            };
-            shared.metrics.lock_unpoisoned().fold(&local);
-            result.map(Response::SyncApplied)
+            compat::serve(&mut host, v2)
         }
         // Routed through their coalesced group paths by `worker_loop`;
         // landing here is a routing bug, answered with a typed error
@@ -1344,6 +1419,179 @@ fn shard_for(shared: &Shared, kind: JobKind) -> Result<&Mutex<JobShard>, ApiErro
         .shards
         .get(&kind)
         .ok_or_else(|| ApiError::Internal(format!("no shard for job {}", kind.name())))
+}
+
+/// Extract one job's record-level delta against a peer's op-log marks:
+/// per-op suffixes where the logs are prefix-aligned above the
+/// truncation floor, whole-org [`crate::repo::OrgSnapshot`] fallbacks
+/// where the peer sits below it. Takes the shard lock (op logs aren't
+/// in the published snapshot).
+fn pull_delta(
+    shared: &Shared,
+    job: JobKind,
+    theirs: &BTreeMap<String, crate::repo::OrgWatermark>,
+    trace: &mut Trace,
+) -> Result<api::SyncDelta, ApiError> {
+    let shard_mutex = shard_for(shared, job)?;
+    let shard = {
+        let _lock_wait = trace.span(Stage::ShardLockWait);
+        shard_mutex.lock_unpoisoned()
+    };
+    let plan = shard.repo().delta_plan(theirs);
+    Ok(api::SyncDelta {
+        job,
+        generation: shard.generation(),
+        ops: plan.ops,
+        snapshots: plan.snapshots,
+        watermarks: shard.repo().watermarks(),
+    })
+}
+
+/// Apply one job's record-level delta under its shard lock: merge the
+/// ops, adopt whole-org snapshot fallbacks, refresh the model, and
+/// republish — the write half of `SyncPush` and (per job) of
+/// `SyncPushAll`.
+fn push_delta(
+    shared: &Shared,
+    engine: &mut dyn ModelTrainer,
+    job: JobKind,
+    ops: &[crate::repo::SyncOp],
+    snapshots: &[crate::repo::OrgSnapshot],
+    trace: &mut Trace,
+) -> Result<api::SyncReport, ApiError> {
+    api::validate_machines(&shared.cloud, ops.iter().map(|op| &op.record))?;
+    for snap in snapshots {
+        api::validate_machines(&shared.cloud, &snap.records)?;
+    }
+    let offered = ops.len() + snapshots.iter().map(|s| s.records.len()).sum::<usize>();
+    let shard_mutex = shard_for(shared, job)?;
+    let mut local = Metrics::default();
+    let result = {
+        let mut shard = {
+            let _lock_wait = trace.span(Stage::ShardLockWait);
+            shard_mutex.lock_unpoisoned()
+        };
+        let result = shard
+            .apply_sync_ops(ops)
+            .and_then(|mut outcome| {
+                let (snap_outcome, snap_applied) = shard.apply_org_snapshots(snapshots)?;
+                outcome.added += snap_outcome.added;
+                outcome.replaced += snap_outcome.replaced;
+                outcome.skipped += snap_outcome.skipped;
+                outcome.conflicts.extend(snap_outcome.conflicts);
+                outcome.logged.extend(snap_outcome.logged);
+                Ok((outcome, snap_applied))
+            })
+            .and_then(|(outcome, snap_applied)| {
+                shard.refresh_model(engine, &shared.cloud, &shared.policy, &mut local)?;
+                shared.publish(&shard);
+                local.sync_pushes += 1;
+                local.sync_records_applied += outcome.changed() as u64;
+                local.sync_conflicts += outcome.conflicts.len() as u64;
+                let mut report = api::SyncReport::tally(
+                    job,
+                    offered,
+                    outcome.added,
+                    outcome.replaced,
+                    outcome.conflicts,
+                    &outcome.logged,
+                    shard.generation(),
+                );
+                // adopted snapshot records fold into the prefix without
+                // logged ops; credit their per-org applied counts here
+                for (org, applied) in snap_applied {
+                    *report.applied_by_org.entry(org).or_default() += applied;
+                }
+                Ok(report)
+            });
+        drain_shard_stages(trace, &mut shard);
+        result
+    };
+    shared.metrics.lock_unpoisoned().fold(&local);
+    result
+}
+
+/// The service's legacy (v2) host: hands [`compat::serve`] its three
+/// primitives, each taking the target shard's lock exactly as the
+/// retired inline arms did.
+struct ServiceV2Host<'a> {
+    shared: &'a Shared,
+    engine: &'a mut dyn ModelTrainer,
+    trace: &'a mut Trace,
+}
+
+impl V2Host for ServiceV2Host<'_> {
+    fn v2_watermarks(&mut self, job: JobKind) -> Result<api::WatermarkSetV2, ApiError> {
+        let shard_mutex = shard_for(self.shared, job)?;
+        let shard = {
+            let _lock_wait = self.trace.span(Stage::ShardLockWait);
+            shard_mutex.lock_unpoisoned()
+        };
+        Ok(api::WatermarkSetV2 {
+            job,
+            generation: shard.generation(),
+            watermarks: shard.repo().watermarks_v2(),
+        })
+    }
+
+    fn v2_delta(
+        &mut self,
+        job: JobKind,
+        theirs: &BTreeMap<String, OrgWatermarkV2>,
+    ) -> Result<api::SyncDeltaV2, ApiError> {
+        let shard_mutex = shard_for(self.shared, job)?;
+        let shard = {
+            let _lock_wait = self.trace.span(Stage::ShardLockWait);
+            shard_mutex.lock_unpoisoned()
+        };
+        Ok(api::SyncDeltaV2 {
+            job,
+            generation: shard.generation(),
+            records: shard.repo().delta_for_v2(theirs),
+            watermarks: shard.repo().watermarks_v2(),
+        })
+    }
+
+    fn v2_apply(
+        &mut self,
+        job: JobKind,
+        records: Vec<RuntimeRecord>,
+    ) -> Result<api::SyncReport, ApiError> {
+        api::validate_machines(&self.shared.cloud, &records)?;
+        let shard_mutex = shard_for(self.shared, job)?;
+        let mut local = Metrics::default();
+        let result = {
+            let mut shard = {
+                let _lock_wait = self.trace.span(Stage::ShardLockWait);
+                shard_mutex.lock_unpoisoned()
+            };
+            let result = shard.apply_sync_records(&records).and_then(|outcome| {
+                shard.refresh_model(
+                    self.engine,
+                    &self.shared.cloud,
+                    &self.shared.policy,
+                    &mut local,
+                )?;
+                self.shared.publish(&shard);
+                local.sync_pushes += 1;
+                local.sync_records_applied += outcome.changed() as u64;
+                local.sync_conflicts += outcome.conflicts.len() as u64;
+                Ok(api::SyncReport::tally(
+                    job,
+                    records.len(),
+                    outcome.added,
+                    outcome.replaced,
+                    outcome.conflicts,
+                    &outcome.applied,
+                    shard.generation(),
+                ))
+            });
+            drain_shard_stages(self.trace, &mut shard);
+            result
+        };
+        self.shared.metrics.lock_unpoisoned().fold(&local);
+        result
+    }
 }
 
 #[cfg(test)]

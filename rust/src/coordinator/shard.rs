@@ -55,8 +55,8 @@ use crate::models::{EngineBound, ModelKind, ModelTrainer, QueryBatch, TrainedMod
 use crate::obs::{Stage, StageScratch};
 use crate::repo::sampling::coverage_sample;
 use crate::repo::{
-    FeatureMatrixCache, Featurizer, LoggedOp, MergeOutcome, OrgWatermark, RuntimeDataRepo,
-    RuntimeRecord, SyncOp, SyncOutcome,
+    FeatureMatrixCache, Featurizer, LoggedOp, MergeOutcome, OrgSnapshot, OrgWatermark,
+    RuntimeDataRepo, RuntimeRecord, SyncOp, SyncOutcome,
 };
 use crate::store::{JobStore, StoreOp};
 use crate::util::rng::Pcg32;
@@ -500,6 +500,78 @@ impl JobShard {
             self.persist(&ops)?;
         }
         Ok(outcome)
+    }
+
+    /// Apply whole-org snapshot fallbacks from a v4 delta (orgs where
+    /// this repo sat below the sender's truncation floor). Position
+    /// adoptions and truncation floors mutate log state outside the
+    /// WAL's op vocabulary, so durability is a **rebased compaction**:
+    /// the store rewrites its base snapshot (plus floor sidecar) from
+    /// the adopted repo. Returns the folded merge outcome plus each
+    /// snapshot org's applied-record count (adopted records are covered
+    /// by the folded prefix and appear in no [`LoggedOp`], so per-org
+    /// accounting cannot come from `logged`). Write path: the caller
+    /// follows up with [`JobShard::refresh_model`].
+    pub fn apply_org_snapshots(
+        &mut self,
+        snapshots: &[OrgSnapshot],
+    ) -> Result<(SyncOutcome, BTreeMap<String, u64>), ApiError> {
+        let mut total = SyncOutcome::default();
+        let mut applied_by_org: BTreeMap<String, u64> = BTreeMap::new();
+        let mut mutated = false;
+        for snap in snapshots {
+            let (outcome, adopted) = self
+                .repo
+                .adopt_org_snapshot(snap)
+                .map_err(ApiError::InvalidRequest)?;
+            mutated = mutated || adopted || !outcome.logged.is_empty();
+            if outcome.changed() > 0 {
+                *applied_by_org.entry(snap.org.clone()).or_default() += outcome.changed() as u64;
+            }
+            total.added += outcome.added;
+            total.replaced += outcome.replaced;
+            total.skipped += outcome.skipped;
+            total.conflicts.extend(outcome.conflicts);
+            total.logged.extend(outcome.logged);
+        }
+        if mutated {
+            if total.changed() > 0 {
+                self.repo.canonicalize();
+            }
+            self.compact_rebased()?;
+        }
+        Ok((total, applied_by_org))
+    }
+
+    /// Fold the fully-acked history below `floors` into each org's base
+    /// state (acked-floor truncation,
+    /// [`RuntimeDataRepo::truncate_org_log`]) and durably rewrite the
+    /// store snapshot. Returns how many op-log entries were dropped.
+    pub fn truncate_to_floors(
+        &mut self,
+        floors: &BTreeMap<String, u64>,
+    ) -> Result<u64, ApiError> {
+        let mut truncated = 0;
+        for (org, floor) in floors {
+            truncated += self.repo.truncate_org_log(org, *floor);
+        }
+        if truncated > 0 {
+            self.compact_rebased()?;
+        }
+        Ok(truncated)
+    }
+
+    /// Rewrite the store's base snapshot from the current repo state —
+    /// the durability step for mutations the WAL cannot frame (snapshot
+    /// adoption, floor truncation). No-op for in-memory shards.
+    fn compact_rebased(&mut self) -> Result<(), ApiError> {
+        if let Some(store) = &mut self.store {
+            store.compact_rebased(&self.repo)?;
+            let (append_ns, fsync_ns) = store.take_io_nanos();
+            self.scratch.add(Stage::WalAppend, append_ns);
+            self.scratch.add(Stage::Fsync, fsync_ns);
+        }
+        Ok(())
     }
 
     /// Record one externally-observed run. Write path: the caller

@@ -23,13 +23,16 @@
 //!
 //! * **Reads** — `Recommend` (the configurator step as a standalone
 //!   query: score all candidates, return the decision, run nothing),
-//!   `SnapshotInfo`, `Metrics`, `Watermarks`, `SyncPull`. Reads never
-//!   train or mutate.
+//!   `SnapshotInfo`, `Metrics`, `Watermarks`/`WatermarksAll`,
+//!   `SyncPull`/`SyncPullAll`, `MeshRoster`. Reads never train or
+//!   mutate.
 //! * **Writes** — `Submit` (decide → provision + run → contribute),
 //!   `Contribute` (record an externally-observed run), `Share`
-//!   (bulk-merge a repository), `SyncPush` (apply a federated peer's
-//!   delta). Writes refresh the generation-stamped model that reads are
-//!   served from — and persist through the segment store in durable
+//!   (bulk-merge a repository), `SyncPush`/`SyncPushAll` (apply a
+//!   federated peer's delta), `MeshHello` (gossip membership; a
+//!   self-hello ticks anti-entropy and may truncate acked op-log
+//!   prefixes). Writes refresh the generation-stamped model that reads
+//!   are served from — and persist through the segment store in durable
 //!   deployments.
 //!
 //! Three deployments implement [`Client`](api::Client) with identical
@@ -64,8 +67,8 @@
 //!   [`ServiceConfig::with_store_dir`](coordinator::ServiceConfig::with_store_dir))
 //!   recovers its corpus bitwise — including record order and org-log
 //!   positions — and warms its model caches before serving.
-//! * The **peer delta-sync protocol** ([`store::sync`], API v3) ships
-//!   sequence-numbered [`SyncOp`](repo::SyncOp)s past the peer's
+//! * The **peer delta-sync protocol** ([`store::sync`], API v3/v4)
+//!   ships sequence-numbered [`SyncOp`](repo::SyncOp)s past the peer's
 //!   watermarks: **O(changed records)** per exchange when logs are
 //!   prefix-aligned (the gossip steady state), with a digest-checked
 //!   whole-org fallback on genuine divergence. Merge-rejected ops still
@@ -76,9 +79,27 @@
 //!   any order end up with bitwise-identical repositories serving
 //!   bitwise-identical recommendations, and runtime disagreements
 //!   surface as structured [`MergeConflict`](repo::MergeConflict)s.
-//!   Legacy v2 peers are served through the
-//!   `WatermarksV2`/`SyncPullV2`/`SyncPushV2` compatibility
-//!   translation (org-granular, O(org corpus) per changed org).
+//!   One entry point — [`store::sync::sync`] with
+//!   [`SyncOptions`](store::SyncOptions) — selects scope (one job /
+//!   some / all), detail, and protocol: per-job v3, the batched v4
+//!   cross-job exchange (`WatermarksAll`/`SyncPullAll`/`SyncPushAll`,
+//!   one round trip covering every [`workloads::JobKind`]), or the
+//!   legacy v2 translation (org-granular, O(org corpus) per changed
+//!   org), which lives quarantined in [`api::compat`].
+//! * The **gossip mesh** ([`store::mesh`], API v4) turns the static
+//!   peer list into *membership*: deployments exchange
+//!   [`MeshHello`](api::MeshHello)s carrying roster gossip and
+//!   per-peer acked watermarks, evict peers that miss heartbeats, and
+//!   schedule anti-entropy with a deterministic rotating fanout-k
+//!   selection over the live roster
+//!   ([`MeshDriver`](store::MeshDriver)). The intersection of live
+//!   members' acks yields the **acked floor**: the log prefix every
+//!   member provably holds is folded into a per-org base snapshot
+//!   ([`repo::RuntimeDataRepo::truncate_org_log`]), bounding op-log
+//!   memory by the unacked suffix — a peer pulling from below the
+//!   floor falls back to whole-org
+//!   [`OrgSnapshot`](repo::OrgSnapshot) adoption, and convergence
+//!   stays bitwise with truncation active.
 //!
 //! ## Incremental training: retrain cost scales with the delta
 //!
@@ -243,8 +264,9 @@ pub mod workloads;
 /// Convenience re-exports of the most commonly used types.
 pub mod prelude {
     pub use crate::api::{
-        ApiError, Client, Contribution, Recommendation, Request, Response, SnapshotInfo,
-        SyncDelta, SyncDeltaV2, SyncReport, WatermarkSet, WatermarkSetV2, API_VERSION,
+        ApiError, Client, Contribution, MeshHello, MeshPeer, MeshPeerStatus, MeshView,
+        Recommendation, Request, Response, SnapshotInfo, SyncDelta, SyncDeltaV2, SyncReport,
+        SyncReportAll, WatermarkSet, WatermarkSetV2, API_VERSION,
     };
     pub use crate::cloud::{Cloud, MachineType};
     pub use crate::configurator::{ClusterChoice, Configurator, JobRequest};
@@ -257,11 +279,14 @@ pub mod prelude {
         TrainedModel,
     };
     pub use crate::repo::{
-        FeatureMatrixCache, LoggedOp, MergeConflict, MergeOutcome, OrgWatermark, OrgWatermarkV2,
-        RuntimeDataRepo, RuntimeRecord, SyncOp, SyncOutcome,
+        FeatureMatrixCache, LoggedOp, MergeConflict, MergeOutcome, OrgSnapshot, OrgWatermark,
+        OrgWatermarkV2, RuntimeDataRepo, RuntimeRecord, SyncOp, SyncOutcome, SyncPlan,
     };
     pub use crate::sim::SimulationResult;
-    pub use crate::store::{JobStore, StoreOp, SyncDriver, SyncStats};
+    pub use crate::store::{
+        mesh_round, JobStore, MeshDriver, MeshRoundReport, MeshState, StoreOp, SyncDetail,
+        SyncDriver, SyncOptions, SyncProtocol, SyncScope, SyncStats, SyncSummary,
+    };
     pub use crate::util::rng::Pcg32;
     pub use crate::workloads::{ExperimentGrid, JobKind, JobSpec};
 }

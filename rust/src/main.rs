@@ -14,14 +14,16 @@
 //! c3o store      --dir DIR [--mode seed|verify|stat] [--seed N]
 //!                                              durable segment-store exercise
 //! c3o sync       [--max-rounds N] [--seed N] [--store-a DIR] [--store-b DIR]
-//!                [--json]                    two-service federation demo
+//!                [--protocol v2|v3|v4] [--json]  two-service federation demo
+//! c3o mesh       [--peers N] [--fanout K] [--max-rounds N] [--seed N] [--json]
+//!                                              gossip-mesh federation demo
 //! ```
 //!
 //! Argument parsing is hand-rolled (clap is not in the offline vendor
 //! set): `--key value` pairs after the subcommand; a `--key` followed by
 //! another `--flag` (or the end of the line) is a boolean switch.
 
-use c3o::api::ApiError;
+use c3o::api::{ApiError, Client};
 use c3o::cloud::Cloud;
 use c3o::configurator::JobRequest;
 use c3o::coordinator::{Coordinator, CoordinatorService, Organization, ServiceConfig};
@@ -123,12 +125,24 @@ USAGE:
                                               durable segment store: seed it from
                                               the corpus, verify recovery, or stat
   c3o sync       [--max-rounds N] [--seed N] [--store-a DIR] [--store-b DIR]
-                 [--json]                     federation demo: two services with
+                 [--protocol v2|v3|v4] [--json]
+                                              federation demo: two services with
                                               disjoint org corpora converge via
-                                              record-level SyncPull/SyncPush;
-                                              --json emits per-org exchange stats
-                                              (records offered/applied/skipped)
-                                              and pull/push wall-time totals
+                                              record-level deltas — per-job v3
+                                              SyncPull/SyncPush, the batched v4
+                                              cross-job exchange (default), or
+                                              the legacy v2 translation; --json
+                                              emits per-org exchange stats and
+                                              round-trip / wall-time totals
+  c3o mesh       [--peers N] [--fanout K] [--max-rounds N] [--seed N] [--json]
+                                              gossip-mesh demo: N services join
+                                              a roster, anti-entropy rounds pick
+                                              fanout-K peers from the live
+                                              membership and run the batched v4
+                                              exchange until every repository is
+                                              bitwise-identical; acked-prefix
+                                              op-log truncation runs along the
+                                              way (reported as ops_truncated)
 ";
 
 fn main() -> ExitCode {
@@ -189,6 +203,7 @@ fn run(cmd: &str, rest: &[String]) -> Result<(), String> {
         "serve" => cmd_serve(&cloud, &args, seed),
         "store" => cmd_store(&cloud, &args, seed),
         "sync" => cmd_sync(&cloud, &args, seed),
+        "mesh" => cmd_mesh(&cloud, &args, seed),
         "help" | "--help" | "-h" => {
             print!("{USAGE}");
             Ok(())
@@ -739,6 +754,13 @@ fn cmd_store(cloud: &Cloud, args: &Args, seed: u64) -> Result<(), String> {
 fn cmd_sync(cloud: &Cloud, args: &Args, seed: u64) -> Result<(), String> {
     let max_rounds: usize = args.get_or("max-rounds", 6)?;
     let json_out = args.switch("json");
+    let protocol_name: String = args.get_or("protocol", "v4".to_string())?;
+    let protocol = match protocol_name.as_str() {
+        "v2" => c3o::store::SyncProtocol::V2,
+        "v3" => c3o::store::SyncProtocol::V3,
+        "v4" | "batched" => c3o::store::SyncProtocol::BatchedV4,
+        other => return Err(format!("unknown --protocol {other:?} (v2|v3|v4)")),
+    };
     eprintln!("building disjoint org corpora from the corpus grid (1 repetition)...");
     let corpus = ExperimentGrid {
         experiments: ExperimentGrid::paper_table1().experiments,
@@ -790,21 +812,29 @@ fn cmd_sync(cloud: &Cloud, args: &Args, seed: u64) -> Result<(), String> {
     let mut total = c3o::store::SyncStats::default();
     let mut by_job: std::collections::BTreeMap<JobKind, c3o::store::OrgExchangeMap> =
         Default::default();
+    let options = c3o::store::SyncOptions {
+        scope: c3o::store::SyncScope::All,
+        detail: c3o::store::SyncDetail::PerOrg,
+        protocol,
+    };
     let mut rounds = 0usize;
     loop {
         rounds += 1;
-        let (stats, round_orgs) =
-            c3o::store::sync_all_detailed(&mut client_a, &mut client_b, &kinds)
-                .map_err(api_err)?;
-        total.fold(&stats);
-        for (kind, orgs) in &round_orgs {
+        let summary =
+            c3o::store::sync(&mut client_a, &mut client_b, &options).map_err(api_err)?;
+        total.fold(&summary.stats);
+        for (kind, orgs) in &summary.by_job {
             c3o::store::fold_orgs(by_job.entry(*kind).or_default(), orgs);
         }
         eprintln!(
-            "round {rounds}: {} records in, {} out, {} skipped, {} conflicts",
-            stats.records_in, stats.records_out, stats.skipped, stats.conflicts
+            "round {rounds}: {} records in, {} out, {} skipped, {} conflicts, {} round trips",
+            summary.stats.records_in,
+            summary.stats.records_out,
+            summary.stats.skipped,
+            summary.stats.conflicts,
+            summary.stats.round_trips
         );
-        if stats.quiescent() {
+        if summary.stats.quiescent() {
             break;
         }
         if rounds >= max_rounds {
@@ -878,6 +908,7 @@ fn cmd_sync(cloud: &Cloud, args: &Args, seed: u64) -> Result<(), String> {
             .collect();
         let doc = Json::obj(vec![
             ("api_version", Json::Num(c3o::api::API_VERSION as f64)),
+            ("protocol", Json::Str(protocol_name.clone())),
             ("rounds", Json::Num(rounds as f64)),
             ("converged", Json::Bool(failures.is_empty())),
             (
@@ -891,6 +922,8 @@ fn cmd_sync(cloud: &Cloud, args: &Args, seed: u64) -> Result<(), String> {
                     ("skipped", Json::Num(total.skipped as f64)),
                     ("conflicts", Json::Num(total.conflicts as f64)),
                     ("pulls", Json::Num(total.pulls as f64)),
+                    ("round_trips", Json::Num(total.round_trips as f64)),
+                    ("snapshots", Json::Num(total.snapshots as f64)),
                     ("pull_ms", Json::Num(total.pull_nanos as f64 / 1e6)),
                     ("push_ms", Json::Num(total.push_nanos as f64 / 1e6)),
                 ]),
@@ -900,12 +933,12 @@ fn cmd_sync(cloud: &Cloud, args: &Args, seed: u64) -> Result<(), String> {
         println!("{}", doc.pretty());
     } else {
         println!(
-            "\nsynced in {rounds} round(s): {} records exchanged ({} offered, {} skipped), {} conflicts, {} pulls",
+            "\nsynced in {rounds} round(s) over {protocol_name}: {} records exchanged ({} offered, {} skipped), {} conflicts, {} round trips",
             total.records_in + total.records_out,
             total.offered,
             total.skipped,
             total.conflicts,
-            total.pulls
+            total.round_trips
         );
         println!(
             "exchange wall time: {:.1} ms pulling, {:.1} ms pushing",
@@ -916,6 +949,220 @@ fn cmd_sync(cloud: &Cloud, args: &Args, seed: u64) -> Result<(), String> {
     if failures.is_empty() {
         if !json_out {
             println!("federation converged: identical repos, identical decisions");
+        }
+        Ok(())
+    } else {
+        Err(format!("peers diverged on: {}", failures.join(", ")))
+    }
+}
+
+/// Gossip-mesh federation demo: `--peers N` services each hold a
+/// disjoint slice of the corpus (organizations `org-0..org-N`), join
+/// one roster, and run anti-entropy rounds — each round every peer
+/// self-ticks (advancing its round counter, evicting stale members,
+/// folding acked op-log prefixes below the truncation floor) and runs
+/// the batched v4 cross-job exchange with `--fanout K` peers picked
+/// from its **live roster**, not a static list. The demo verifies the
+/// convergence contract across all N peers (identical repository
+/// digests and bitwise-identical decisions) and reports how many log
+/// ops the acked floor let each deployment truncate along the way.
+fn cmd_mesh(cloud: &Cloud, args: &Args, seed: u64) -> Result<(), String> {
+    let peers_n: usize = args.get_or("peers", 3)?;
+    let fanout: usize = args.get_or("fanout", 1)?;
+    let max_rounds: usize = args.get_or("max-rounds", 16)?;
+    let json_out = args.switch("json");
+    if peers_n < 2 {
+        return Err("--peers must be >= 2".into());
+    }
+    if fanout == 0 {
+        return Err("--fanout must be >= 1".into());
+    }
+
+    eprintln!("building disjoint org corpora from the corpus grid (1 repetition)...");
+    let corpus = ExperimentGrid {
+        experiments: ExperimentGrid::paper_table1().experiments,
+        repetitions: 1,
+    }
+    .execute(cloud, seed);
+
+    let names: Vec<String> = (0..peers_n).map(|i| format!("peer-{i}")).collect();
+    let services: Vec<CoordinatorService> = (0..peers_n)
+        .map(|i| {
+            CoordinatorService::open(
+                cloud.clone(),
+                ServiceConfig::default()
+                    .with_workers(2)
+                    .with_pjrt_workers(0)
+                    .with_seed(seed.wrapping_add(i as u64))
+                    .with_mesh_name(&names[i]),
+            )
+        })
+        .collect::<Result<_, _>>()
+        .map_err(api_err)?;
+
+    // record r of each job's corpus goes to peer r % N, relabeled org-<i>
+    for kind in JobKind::all() {
+        let records = corpus.repo_for(kind).records().to_vec();
+        for (i, service) in services.iter().enumerate() {
+            let slice: Vec<RuntimeRecord> = records
+                .iter()
+                .enumerate()
+                .filter(|(r, _)| r % peers_n == i)
+                .map(|(_, rec)| rec.with_org(&format!("org-{i}")))
+                .collect();
+            service
+                .share(RuntimeDataRepo::from_records(kind, slice))
+                .map_err(api_err)?;
+        }
+    }
+
+    // join: every peer announces itself to every other, seeding the
+    // rosters (from then on membership travels by gossip)
+    let intro: Vec<c3o::api::MeshPeer> =
+        names.iter().map(|n| c3o::store::mesh_peer(n)).collect();
+    let mut clients: Vec<_> = services.iter().map(|s| s.client()).collect();
+    for i in 0..peers_n {
+        for j in 0..peers_n {
+            if i == j {
+                continue;
+            }
+            clients[i]
+                .mesh_hello(c3o::api::MeshHello {
+                    from: intro[j].clone(),
+                    known: intro.clone(),
+                    acked: Vec::new(),
+                })
+                .map_err(api_err)?;
+        }
+    }
+
+    let mut rounds = 0usize;
+    let mut peer_round_trips = 0u64;
+    loop {
+        rounds += 1;
+        let mut round_changed = 0u64;
+        for (i, service) in services.iter().enumerate() {
+            let mut local = service.client();
+            let mut others: Vec<(String, c3o::coordinator::ServiceClient)> = (0..peers_n)
+                .filter(|j| *j != i)
+                .map(|j| (names[j].clone(), services[j].client()))
+                .collect();
+            let mut refs: Vec<(String, &mut dyn Client)> = others
+                .iter_mut()
+                .map(|(name, client)| (name.clone(), client as &mut dyn Client))
+                .collect();
+            let report =
+                c3o::store::mesh_round(&mut local, &mut refs, fanout).map_err(api_err)?;
+            round_changed += report.changed;
+            peer_round_trips += report.peer_round_trips;
+        }
+        eprintln!("round {rounds}: {round_changed} holdings changed");
+        let converged = JobKind::all().into_iter().all(|kind| {
+            let digest = services[0].repo_snapshot(kind).content_digest();
+            services[1..]
+                .iter()
+                .all(|s| s.repo_snapshot(kind).content_digest() == digest)
+        });
+        if converged && round_changed == 0 {
+            break;
+        }
+        if rounds >= max_rounds {
+            return Err(format!("no convergence after {max_rounds} mesh rounds"));
+        }
+    }
+
+    // the convergence contract, decision-level: every peer answers a
+    // probe with bitwise-identical predictions
+    let probe = |kind: JobKind| -> JobRequest {
+        match kind {
+            JobKind::Sort => JobRequest::sort(14.0),
+            JobKind::Grep => JobRequest::grep(14.0, 0.1),
+            JobKind::Sgd => JobRequest::sgd(20.0, 60),
+            JobKind::KMeans => JobRequest::kmeans(15.0, 5, 0.001),
+            JobKind::PageRank => JobRequest::pagerank(330.0, 0.001),
+        }
+    };
+    let mut failures = Vec::new();
+    for kind in JobKind::all() {
+        let first = clients[0].recommend(probe(kind)).map_err(api_err)?;
+        let all_match = clients[1..].iter().try_fold(true, |acc, client| {
+            let rec = client.recommend(probe(kind)).map_err(api_err)?;
+            Ok::<bool, String>(
+                acc && rec.choice.machine_type == first.choice.machine_type
+                    && rec.choice.node_count == first.choice.node_count
+                    && rec.choice.predicted_runtime_s.to_bits()
+                        == first.choice.predicted_runtime_s.to_bits(),
+            )
+        })?;
+        if !json_out {
+            println!(
+                "  {:>9}: decision {} ({} x{})",
+                kind.name(),
+                if all_match { "match" } else { "MISMATCH" },
+                first.choice.machine_type,
+                first.choice.node_count,
+            );
+        }
+        if !all_match {
+            failures.push(kind.name().to_string());
+        }
+    }
+
+    let roster = clients[0].mesh_roster().map_err(api_err)?;
+    let mut mesh_hellos = 0u64;
+    let mut ops_truncated = 0u64;
+    for service in &services {
+        let m = service.metrics().map_err(api_err)?;
+        mesh_hellos += m.mesh_hellos;
+        ops_truncated += m.ops_truncated;
+    }
+    for service in services {
+        service.shutdown();
+    }
+
+    if json_out {
+        use c3o::util::json::Json;
+        let peers_json: Vec<Json> = roster
+            .peers
+            .iter()
+            .map(|p| {
+                Json::obj(vec![
+                    ("name", Json::Str(p.peer.name.clone())),
+                    ("live", Json::Bool(p.live)),
+                    ("last_seen_round", Json::Num(p.last_seen_round as f64)),
+                ])
+            })
+            .collect();
+        let doc = Json::obj(vec![
+            ("api_version", Json::Num(c3o::api::API_VERSION as f64)),
+            ("peers", Json::Num(peers_n as f64)),
+            ("fanout", Json::Num(fanout as f64)),
+            ("rounds", Json::Num(rounds as f64)),
+            ("converged", Json::Bool(failures.is_empty())),
+            ("peer_round_trips", Json::Num(peer_round_trips as f64)),
+            ("mesh_hellos", Json::Num(mesh_hellos as f64)),
+            ("ops_truncated", Json::Num(ops_truncated as f64)),
+            ("roster", Json::Arr(peers_json)),
+        ]);
+        println!("{}", doc.pretty());
+    } else {
+        println!(
+            "\nmesh of {peers_n} converged in {rounds} round(s) at fanout {fanout}: {peer_round_trips} peer round trips, {mesh_hellos} hellos"
+        );
+        println!(
+            "acked-floor truncation folded {ops_truncated} op-log entries into base snapshots"
+        );
+        println!(
+            "roster of {}: round {}, {} peers ({} live)",
+            roster.local.name,
+            roster.round,
+            roster.peers.len(),
+            roster.peers.iter().filter(|p| p.live).count()
+        );
+    }
+    if failures.is_empty() {
+        if !json_out {
+            println!("mesh converged: identical repos, identical decisions");
         }
         Ok(())
     } else {

@@ -189,12 +189,23 @@ impl RuntimeRecord {
 /// have genuinely diverged. Because *seen* (not just applied) ops
 /// advance the mark, an org whose blind duplicate contributions a
 /// peer's merge rejects is never re-offered.
+///
+/// `floor` is the acked-floor truncation horizon (API v4): ops
+/// `1..=floor` have been folded into the org's base snapshot and are no
+/// longer individually replayable. A repo that never truncates carries
+/// `floor == 0` everywhere, which is also what [`Default`] yields — the
+/// pre-v4 wire meaning is unchanged. A peer whose mark sits *below* a
+/// sender's floor cannot be served a suffix; [`RuntimeDataRepo::delta_plan`]
+/// falls back to a whole-org [`OrgSnapshot`] instead.
 #[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
 pub struct OrgWatermark {
     /// Highest op-log sequence number seen for the organization.
     pub seqno: u64,
     /// XOR of the content hashes of ops 1..=`seqno` (order-independent).
     pub digest: u64,
+    /// Highest seqno folded into the org's base snapshot (0 = the full
+    /// history is retained as individual ops).
+    pub floor: u64,
 }
 
 /// The legacy (API v2) per-organization watermark: records *held* for
@@ -236,13 +247,65 @@ pub struct LoggedOp {
     pub applied: bool,
 }
 
-/// One entry of an org's operation log. Entry `k` (0-based) holds
-/// seqno `k + 1`; `cum_digest` is the XOR of content hashes of entries
-/// `1..=k+1`, so a prefix digest is an O(1) lookup.
+/// One retained entry of an org's operation log. Within an [`OrgLog`]
+/// of floor `f`, entry `k` (0-based) holds seqno `f + k + 1`;
+/// `cum_digest` is the XOR of content hashes of ops `1..=f+k+1`
+/// (cumulative from genesis, *through* the folded prefix), so a prefix
+/// digest is an O(1) lookup.
 #[derive(Debug, Clone, PartialEq)]
 struct LogEntry {
     record: RuntimeRecord,
     cum_digest: u64,
+}
+
+/// One organization's operation log: a folded prefix (`1..=floor`,
+/// summarized by `floor_digest` and reconstructible only as current
+/// holdings) plus the individually-retained suffix. Truncation
+/// ([`RuntimeDataRepo::truncate_org_log`]) moves the floor forward and
+/// drops entries; nothing else ever removes an entry, so memory held
+/// per org is bounded by the unacked suffix.
+#[derive(Debug, Clone, Default, PartialEq)]
+struct OrgLog {
+    /// Highest seqno folded into the base snapshot (0 = none).
+    floor: u64,
+    /// XOR of the content hashes of ops `1..=floor`.
+    floor_digest: u64,
+    /// Retained ops; entry `k` holds seqno `floor + k + 1`.
+    entries: Vec<LogEntry>,
+}
+
+impl OrgLog {
+    /// Log length = the org's watermark seqno (folded + retained).
+    fn len(&self) -> u64 {
+        self.floor + self.entries.len() as u64
+    }
+
+    /// Cumulative digest at the tip of the log.
+    fn last_digest(&self) -> u64 {
+        self.entries.last().map_or(self.floor_digest, |e| e.cum_digest)
+    }
+
+    /// Cumulative digest through `seqno`. `None` below the floor (the
+    /// per-op history is folded away) and past the tip.
+    fn digest_at(&self, seqno: u64) -> Option<u64> {
+        if seqno < self.floor {
+            return None;
+        }
+        if seqno == self.floor {
+            return Some(self.floor_digest);
+        }
+        self.entries
+            .get((seqno - self.floor - 1) as usize)
+            .map(|e| e.cum_digest)
+    }
+
+    /// The retained entry holding `seqno` (`None` when folded or absent).
+    fn entry(&self, seqno: u64) -> Option<&LogEntry> {
+        if seqno <= self.floor {
+            return None;
+        }
+        self.entries.get((seqno - self.floor - 1) as usize)
+    }
 }
 
 /// One surfaced merge disagreement: two records shared a configuration
@@ -313,6 +376,49 @@ impl SyncOutcome {
     /// generation advanced.
     pub fn changed(&self) -> usize {
         self.added + self.replaced
+    }
+}
+
+/// A whole-org fallback shipment: the sender's current *holdings*
+/// attributed to the org (canonical order) plus the sender's log
+/// position. Shipped instead of per-op suffixes when the receiver's
+/// mark sits below the sender's truncation floor — the folded per-op
+/// history no longer exists, so the receiver adopts the holdings and
+/// the position wholesale ([`RuntimeDataRepo::adopt_org_snapshot`]).
+///
+/// Adoption assumes the single-homed-org federation model: an org's
+/// ops enter through one home repo, so a peer strictly behind the
+/// sender's floor holds a strict subset and can take over the sender's
+/// numbering. Dual-homed (divergent) orgs never reach this path — a
+/// divergent floored org is merged content-level without adopting the
+/// position, exactly the v2 cost model.
+#[derive(Debug, Clone, PartialEq)]
+pub struct OrgSnapshot {
+    pub org: String,
+    /// Every record currently attributed to the org, canonical order.
+    pub records: Vec<RuntimeRecord>,
+    /// The sender's log tip for the org; the adopter installs it as
+    /// its own mark with the whole prefix folded (`floor = seqno`).
+    pub seqno: u64,
+    /// Cumulative XOR digest through `seqno`.
+    pub digest: u64,
+}
+
+/// The full answer to "what is this peer missing": per-op suffixes
+/// where the logs are prefix-aligned above the floor, plus whole-org
+/// snapshots for orgs whose retained history cannot cover the peer.
+/// Produced by [`RuntimeDataRepo::delta_plan`]; an untruncated repo
+/// always yields an empty `snapshots` list, so the v3 op-only path is
+/// the common case.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct SyncPlan {
+    pub ops: Vec<SyncOp>,
+    pub snapshots: Vec<OrgSnapshot>,
+}
+
+impl SyncPlan {
+    pub fn is_empty(&self) -> bool {
+        self.ops.is_empty() && self.snapshots.is_empty()
     }
 }
 
@@ -392,11 +498,12 @@ pub struct RuntimeDataRepo {
     /// translation serves.
     org_marks: BTreeMap<String, OrgWatermarkV2>,
     /// Per-org operation logs: every op seen for the org (applied or
-    /// merge-rejected), in sequence order. Entry `k` holds seqno `k+1`.
-    /// Append-only — replacements and rejections never remove entries —
-    /// so the log is the durable change history the WAL and the sync
-    /// protocol both replay.
-    org_logs: BTreeMap<String, Vec<LogEntry>>,
+    /// merge-rejected), in sequence order. Append-only except for
+    /// acked-floor truncation ([`RuntimeDataRepo::truncate_org_log`]),
+    /// which folds a fully-acked prefix into the base snapshot — the
+    /// log is the durable change history the WAL and the sync protocol
+    /// both replay, bounded by the unacked suffix.
+    org_logs: BTreeMap<String, OrgLog>,
     /// Merge-representative slot per configuration key: the slot of
     /// the record with the **smallest** [`RuntimeRecord::merge_priority`]
     /// among same-key records. Using the priority winner (not the first
@@ -563,29 +670,51 @@ impl RuntimeDataRepo {
     /// replacements and merge rejections never remove entries.
     fn log_append(&mut self, r: &RuntimeRecord) -> u64 {
         let log = self.org_logs.entry(r.org.clone()).or_default();
-        let prev = log.last().map_or(0, |e| e.cum_digest);
-        log.push(LogEntry {
+        let prev = log.last_digest();
+        log.entries.push(LogEntry {
             record: r.clone(),
             cum_digest: prev ^ r.content_hash(),
         });
-        log.len() as u64
+        log.len()
     }
 
-    /// Length of an org's operation log (its watermark seqno).
+    /// Length of an org's operation log (its watermark seqno) —
+    /// folded prefix included.
     pub fn log_len(&self, org: &str) -> u64 {
-        self.org_logs.get(org).map_or(0, |l| l.len() as u64)
+        self.org_logs.get(org).map_or(0, OrgLog::len)
+    }
+
+    /// The org's truncation floor: the highest seqno folded into the
+    /// base snapshot (0 when the full history is retained).
+    pub fn log_floor(&self, org: &str) -> u64 {
+        self.org_logs.get(org).map_or(0, |l| l.floor)
+    }
+
+    /// Individually-retained op entries across all orgs — the op-log
+    /// memory actually held, which truncation bounds by the unacked
+    /// suffix (observability/tests).
+    pub fn retained_log_entries(&self) -> usize {
+        self.org_logs.values().map(|l| l.entries.len()).sum()
+    }
+
+    /// Per-org `(floor, floor_digest)` for every truncated org — what
+    /// the segment store persists alongside the oplog sidecar so a
+    /// floored log cold-recovers (empty for untruncated repos).
+    pub(crate) fn log_floors(&self) -> BTreeMap<String, (u64, u64)> {
+        self.org_logs
+            .iter()
+            .filter(|(_, l)| l.floor > 0)
+            .map(|(org, l)| (org.clone(), (l.floor, l.floor_digest)))
+            .collect()
     }
 
     /// Cumulative digest of an org's log through `seqno` (`None` when
-    /// the position does not exist).
+    /// the position does not exist or lies below the floor).
     fn log_digest_at(&self, org: &str, seqno: u64) -> Option<u64> {
         if seqno == 0 {
             return None;
         }
-        self.org_logs
-            .get(org)
-            .and_then(|log| log.get(seqno as usize - 1))
-            .map(|e| e.cum_digest)
+        self.org_logs.get(org).and_then(|log| log.digest_at(seqno))
     }
 
     fn cache_remove(&mut self, r: &RuntimeRecord) {
@@ -657,12 +786,12 @@ impl RuntimeDataRepo {
         self.org_logs
             .iter()
             .map(|(org, log)| {
-                let last = log.last().expect("org logs are never empty");
                 (
                     org.clone(),
                     OrgWatermark {
-                        seqno: log.len() as u64,
-                        digest: last.cum_digest,
+                        seqno: log.len(),
+                        digest: log.last_digest(),
+                        floor: log.floor,
                     },
                 )
             })
@@ -675,21 +804,28 @@ impl RuntimeDataRepo {
         self.org_marks.clone()
     }
 
-    /// Every op of `org`'s log past `seqno`, in sequence order — the
-    /// record-level delta a peer whose mark sits at `seqno` is missing.
+    /// Every *retained* op of `org`'s log past `seqno`, in sequence
+    /// order — the record-level delta a peer whose mark sits at `seqno`
+    /// is missing. Ops at or below the truncation floor are folded away
+    /// and cannot be produced; callers that might sit below the floor
+    /// go through [`RuntimeDataRepo::delta_plan`], which ships an
+    /// [`OrgSnapshot`] instead.
     pub fn ops_since(&self, org: &str, seqno: u64) -> Vec<SyncOp> {
         match self.org_logs.get(org) {
             None => Vec::new(),
-            Some(log) => log
-                .iter()
-                .enumerate()
-                .skip(seqno as usize)
-                .map(|(i, e)| SyncOp {
-                    org: org.to_string(),
-                    seqno: (i + 1) as u64,
-                    record: e.record.clone(),
-                })
-                .collect(),
+            Some(log) => {
+                let from = seqno.max(log.floor);
+                log.entries
+                    .iter()
+                    .enumerate()
+                    .skip((from - log.floor) as usize)
+                    .map(|(i, e)| SyncOp {
+                        org: org.to_string(),
+                        seqno: log.floor + i as u64 + 1,
+                        record: e.record.clone(),
+                    })
+                    .collect()
+            }
         }
     }
 
@@ -707,30 +843,182 @@ impl RuntimeDataRepo {
     ///   federation through more than one home, or a v2 peer injected
     ///   records) — fall back to shipping the whole log. Merge dedup
     ///   keeps the fallback correct; it costs what v2 always cost.
+    ///
+    /// `delta_for` is the op-only projection of
+    /// [`RuntimeDataRepo::delta_plan`]: on an untruncated repo the two
+    /// agree exactly. When a floor has folded history a below-floor
+    /// peer needs, the plan's [`OrgSnapshot`] fallback carries it —
+    /// this projection *drops* those orgs, so serve paths on
+    /// possibly-truncated repos must use `delta_plan`.
     pub fn delta_for(&self, theirs: &BTreeMap<String, OrgWatermark>) -> Vec<SyncOp> {
-        let mut ops = Vec::new();
+        self.delta_plan(theirs).ops
+    }
+
+    /// Full delta extraction by watermark: per-op suffixes where the
+    /// retained log covers the peer, whole-org [`OrgSnapshot`]s where
+    /// the truncation floor has folded the history the peer is missing
+    /// (unknown org below a floored log, mark below the floor, or a
+    /// divergence the folded log can no longer re-ship op-by-op).
+    pub fn delta_plan(&self, theirs: &BTreeMap<String, OrgWatermark>) -> SyncPlan {
+        let mut plan = SyncPlan::default();
         for (org, log) in &self.org_logs {
-            let len = log.len() as u64;
+            let len = log.len();
+            let floor = log.floor;
+            // `None`: ship ops from this seqno; `Some(snapshot)` below.
             let ship_from = match theirs.get(org) {
                 None => 0,
                 Some(m) if m.seqno > len => continue, // peer ahead
                 Some(m) if m.seqno == len => {
-                    if self.log_digest_at(org, len) == Some(m.digest) {
+                    if log.digest_at(len) == Some(m.digest) {
                         continue; // complete
                     }
                     0 // divergent
                 }
                 Some(m) => {
-                    if m.seqno > 0 && self.log_digest_at(org, m.seqno) == Some(m.digest) {
+                    if m.seqno > 0 && log.digest_at(m.seqno) == Some(m.digest) {
                         m.seqno // prefix-aligned: ship the suffix only
                     } else {
-                        0 // divergent (or empty claim)
+                        0 // divergent, below the floor, or empty claim
                     }
                 }
             };
-            ops.extend(self.ops_since(org, ship_from));
+            if ship_from < floor {
+                // the ops the peer is missing are folded away: fall
+                // back to the whole-org holdings + position snapshot
+                plan.snapshots.push(self.org_snapshot(org, log));
+            } else {
+                plan.ops.extend(self.ops_since(org, ship_from));
+            }
         }
-        ops
+        plan
+    }
+
+    /// Build the whole-org fallback shipment for `org`.
+    fn org_snapshot(&self, org: &str, log: &OrgLog) -> OrgSnapshot {
+        let mut records: Vec<RuntimeRecord> = self
+            .records
+            .iter()
+            .filter(|r| r.org == org)
+            .cloned()
+            .collect();
+        records.sort_by_cached_key(RuntimeRecord::canonical_sort_key);
+        OrgSnapshot {
+            org: org.to_string(),
+            records,
+            seqno: log.len(),
+            digest: log.last_digest(),
+        }
+    }
+
+    /// Apply a whole-org fallback shipment ([`OrgSnapshot`]): merge the
+    /// records content-level, then — if the sender's position is ahead
+    /// of ours — **adopt** it: the org's log is replaced by a fully
+    /// folded log at the sender's `(seqno, digest)`, so the next
+    /// exchange is quiescent. A sender position not ahead of ours means
+    /// the org is genuinely divergent (dual-homed); the merge still
+    /// lands every record but the local log is kept, preserving the
+    /// content-dedup reconciliation path.
+    ///
+    /// Returns the merge outcome and whether the position was adopted.
+    /// Adoption changes log state that no WAL line frames — a durable
+    /// caller must follow with a snapshot compaction
+    /// (`JobStore::compact_rebased`). An `Err` applies nothing.
+    pub fn adopt_org_snapshot(
+        &mut self,
+        snap: &OrgSnapshot,
+    ) -> Result<(SyncOutcome, bool), String> {
+        for r in &snap.records {
+            if r.job != self.job {
+                return Err(format!(
+                    "org snapshot record for {} pushed to {} repo",
+                    r.job.name(),
+                    self.job.name()
+                ));
+            }
+            if r.org != snap.org {
+                return Err(format!(
+                    "org snapshot for {:?} holds a record attributed to {:?}",
+                    snap.org, r.org
+                ));
+            }
+            r.validate()?;
+        }
+        if snap.seqno == 0 {
+            return Err("org snapshot seqno must be >= 1".into());
+        }
+        // Decide adoption against the PRE-merge position: strictly
+        // behind the sender means single-homed catch-up (take over the
+        // sender's numbering; applied records are covered by the folded
+        // prefix, so nothing is logged — the caller's compaction
+        // persists the adopted position). Otherwise the org is
+        // divergent: applied records get fresh local seqnos, exactly
+        // like `merge_records`, so they still propagate onward.
+        let adopted = snap.seqno > self.log_len(&snap.org);
+        let mut out = SyncOutcome::default();
+        for r in &snap.records {
+            let (applied, conflict) = match self.merge_one(r) {
+                MergeEffect::Added => {
+                    out.added += 1;
+                    (true, None)
+                }
+                MergeEffect::Replaced(c) => {
+                    out.replaced += 1;
+                    (true, c)
+                }
+                MergeEffect::Rejected(c) => {
+                    out.skipped += 1;
+                    (false, c)
+                }
+            };
+            out.conflicts.extend(conflict);
+            if applied && !adopted {
+                let seqno = self.log_append(r);
+                out.logged.push(LoggedOp {
+                    seqno,
+                    record: r.clone(),
+                    applied: true,
+                });
+            }
+        }
+        if adopted {
+            self.org_logs.insert(
+                snap.org.clone(),
+                OrgLog {
+                    floor: snap.seqno,
+                    floor_digest: snap.digest,
+                    entries: Vec::new(),
+                },
+            );
+        }
+        Ok((out, adopted))
+    }
+
+    /// Fold the fully-acked prefix `1..=floor` of `org`'s log into the
+    /// base snapshot, dropping the retained entries it covers. Holdings,
+    /// caches, and the generation are untouched — truncation is a pure
+    /// memory/history fold; the watermark keeps its `(seqno, digest)`
+    /// and gains the floor. Floors only move forward; a floor at or
+    /// below the current one (or past the tip) is clamped. Returns the
+    /// number of entries dropped.
+    ///
+    /// Durability: the WAL has no truncation op — a durable caller
+    /// folds the store too by compacting right after
+    /// (`JobStore::compact`), which rewrites the oplog sidecar as the
+    /// retained suffix plus a floor sidecar. A crash in between merely
+    /// recovers the untruncated (superset) log.
+    pub fn truncate_org_log(&mut self, org: &str, floor: u64) -> u64 {
+        let Some(log) = self.org_logs.get_mut(org) else {
+            return 0;
+        };
+        let target = floor.min(log.len());
+        if target <= log.floor {
+            return 0;
+        }
+        let drop = (target - log.floor) as usize;
+        log.floor_digest = log.entries[drop - 1].cum_digest;
+        log.entries.drain(..drop);
+        log.floor = target;
+        drop as u64
     }
 
     /// Legacy (v2) org-granular delta extraction: every *held* record of
@@ -1061,11 +1349,20 @@ impl RuntimeDataRepo {
         let mut out = SyncOutcome::default();
         for op in ops {
             let len = self.log_len(&op.org);
+            // A seqno at or below the truncation floor has no retained
+            // entry to compare against (`OrgLog::entry` yields `None`);
+            // such an op falls through to content-level merge dedup,
+            // which resolves it exactly like the divergent path.
             if op.seqno <= len {
-                let entry = &self.org_logs[&op.org][op.seqno as usize - 1];
-                if entry.record.content_hash() == op.record.content_hash() {
-                    out.skipped += 1; // duplicate delivery of a seen op
-                    continue;
+                if let Some(entry) = self
+                    .org_logs
+                    .get(&op.org)
+                    .and_then(|log| log.entry(op.seqno))
+                {
+                    if entry.record.content_hash() == op.record.content_hash() {
+                        out.skipped += 1; // duplicate delivery of a seen op
+                        continue;
+                    }
                 }
             }
             let in_order = op.seqno == len + 1;
@@ -1123,15 +1420,28 @@ impl RuntimeDataRepo {
     }
 
     /// Replace the op logs wholesale with recovered history (the
-    /// `oplog-<gen>.csv` snapshot sidecar). Recovery-only: the default
-    /// logs built while loading a holdings snapshot know nothing of
-    /// replaced or seen-but-rejected ops, which only the sidecar (or the
-    /// WAL) preserves. Per-org records must arrive in sequence order.
+    /// `oplog-<gen>.csv` snapshot sidecar, plus the `floor-<gen>.csv`
+    /// truncation floors). Recovery-only: the default logs built while
+    /// loading a holdings snapshot know nothing of replaced,
+    /// seen-but-rejected, or folded ops, which only the sidecars (or
+    /// the WAL) preserve. Per-org records must arrive in sequence
+    /// order, each org's first retained record at `floor + 1`.
     pub(crate) fn restore_org_logs(
         &mut self,
+        floors: BTreeMap<String, (u64, u64)>,
         logs: BTreeMap<String, Vec<RuntimeRecord>>,
     ) -> Result<(), String> {
         self.org_logs.clear();
+        for (org, (floor, floor_digest)) in floors {
+            self.org_logs.insert(
+                org,
+                OrgLog {
+                    floor,
+                    floor_digest,
+                    entries: Vec::new(),
+                },
+            );
+        }
         for (org, records) in logs {
             for r in records {
                 if r.org != org {
@@ -1823,6 +2133,173 @@ mod tests {
         repo.contribute(rec("a", "m5.xlarge", 2, 10.0, 1.0)).unwrap();
         let orgs: Vec<String> = repo.organizations().into_iter().collect();
         assert_eq!(orgs, vec!["a".to_string(), "b".to_string()]);
+    }
+
+    #[test]
+    fn truncation_folds_prefix_and_keeps_watermark() {
+        let mut repo = RuntimeDataRepo::new(JobKind::Sort);
+        repo.contribute(rec("a", "m5.xlarge", 4, 10.0, 100.0)).unwrap();
+        repo.contribute(rec("a", "m5.xlarge", 8, 10.0, 60.0)).unwrap();
+        repo.contribute(rec("a", "m5.xlarge", 2, 10.0, 200.0)).unwrap();
+        repo.contribute(rec("b", "m5.xlarge", 6, 10.0, 90.0)).unwrap();
+        let before = repo.watermarks();
+        assert_eq!(repo.retained_log_entries(), 4);
+
+        // fold a's first two ops: the mark's (seqno, digest) must not
+        // move — only the floor does — and memory drops to the suffix
+        assert_eq!(repo.truncate_org_log("a", 2), 2);
+        assert_eq!(repo.log_floor("a"), 2);
+        assert_eq!(repo.log_len("a"), 3);
+        assert_eq!(repo.retained_log_entries(), 2);
+        let after = repo.watermarks();
+        assert_eq!(after["a"].seqno, before["a"].seqno);
+        assert_eq!(after["a"].digest, before["a"].digest);
+        assert_eq!(after["a"].floor, 2);
+        assert_eq!(after["b"], before["b"], "other orgs untouched");
+
+        // idempotent / monotone: re-folding at or below is a no-op,
+        // and a floor past the tip clamps to the tip
+        assert_eq!(repo.truncate_org_log("a", 2), 0);
+        assert_eq!(repo.truncate_org_log("a", 1), 0);
+        assert_eq!(repo.truncate_org_log("a", 99), 1);
+        assert_eq!(repo.log_floor("a"), 3);
+        assert_eq!(repo.watermarks()["a"].seqno, 3);
+        assert_eq!(repo.watermarks()["a"].digest, before["a"].digest);
+
+        // appends past a fully-folded log keep the genesis-cumulative
+        // digest chain: a never-truncated twin agrees on the mark
+        repo.contribute(rec("a", "c5.xlarge", 4, 11.0, 80.0)).unwrap();
+        let mut twin = RuntimeDataRepo::new(JobKind::Sort);
+        twin.contribute(rec("a", "m5.xlarge", 4, 10.0, 100.0)).unwrap();
+        twin.contribute(rec("a", "m5.xlarge", 8, 10.0, 60.0)).unwrap();
+        twin.contribute(rec("a", "m5.xlarge", 2, 10.0, 200.0)).unwrap();
+        twin.contribute(rec("b", "m5.xlarge", 6, 10.0, 90.0)).unwrap();
+        twin.contribute(rec("a", "c5.xlarge", 4, 11.0, 80.0)).unwrap();
+        assert_eq!(repo.watermarks()["a"].seqno, twin.watermarks()["a"].seqno);
+        assert_eq!(repo.watermarks()["a"].digest, twin.watermarks()["a"].digest);
+    }
+
+    #[test]
+    fn delta_plan_ships_suffix_above_floor_and_snapshot_below() {
+        let mut home = RuntimeDataRepo::new(JobKind::Sort);
+        home.contribute(rec("a", "m5.xlarge", 4, 10.0, 100.0)).unwrap();
+        home.contribute(rec("a", "m5.xlarge", 8, 10.0, 60.0)).unwrap();
+
+        // a peer holding the full prefix syncs, then home truncates
+        let mut peer = RuntimeDataRepo::new(JobKind::Sort);
+        peer.apply_sync_ops(&home.delta_for(&peer.watermarks())).unwrap();
+        home.contribute(rec("a", "m5.xlarge", 2, 10.0, 200.0)).unwrap();
+        home.truncate_org_log("a", 2);
+
+        // peer's mark (seqno 2) sits exactly at the floor: the
+        // retained suffix still covers it — ops, no snapshot
+        let plan = home.delta_plan(&peer.watermarks());
+        assert_eq!(plan.ops.len(), 1);
+        assert_eq!(plan.ops[0].seqno, 3);
+        assert!(plan.snapshots.is_empty());
+        peer.apply_sync_ops(&plan.ops).unwrap();
+        assert!(home.delta_plan(&peer.watermarks()).is_empty());
+
+        // a fresh peer (unknown org) sits below the floor: snapshot
+        let fresh = RuntimeDataRepo::new(JobKind::Sort);
+        let plan = home.delta_plan(&fresh.watermarks());
+        assert!(plan.ops.is_empty());
+        assert_eq!(plan.snapshots.len(), 1);
+        let snap = &plan.snapshots[0];
+        assert_eq!(snap.org, "a");
+        assert_eq!(snap.seqno, 3);
+        assert_eq!(snap.records.len(), 3);
+
+        // ...and so does a peer whose mark is below the floor
+        let mut behind = RuntimeDataRepo::new(JobKind::Sort);
+        behind
+            .apply_sync_ops(&[SyncOp {
+                org: "a".into(),
+                seqno: 1,
+                record: rec("a", "m5.xlarge", 4, 10.0, 100.0),
+            }])
+            .unwrap();
+        let plan = home.delta_plan(&behind.watermarks());
+        assert!(plan.ops.is_empty());
+        assert_eq!(plan.snapshots.len(), 1);
+
+        // delta_for is the op-only projection: it must not invent ops
+        // for a snapshot-fallback org
+        assert!(home.delta_for(&fresh.watermarks()).is_empty());
+    }
+
+    #[test]
+    fn adopting_an_org_snapshot_converges_and_goes_quiescent() {
+        let mut home = RuntimeDataRepo::new(JobKind::Sort);
+        home.contribute(rec("a", "m5.xlarge", 4, 10.0, 100.0)).unwrap();
+        home.contribute(rec("a", "m5.xlarge", 8, 10.0, 90.0)).unwrap();
+        home.contribute(rec("a", "c5.xlarge", 8, 11.0, 70.0)).unwrap();
+        home.truncate_org_log("a", 3);
+
+        let mut fresh = RuntimeDataRepo::new(JobKind::Sort);
+        let plan = home.delta_plan(&fresh.watermarks());
+        let (out, adopted) = fresh.adopt_org_snapshot(&plan.snapshots[0]).unwrap();
+        assert!(adopted);
+        assert_eq!(out.added, 3);
+        assert!(out.logged.is_empty(), "adopted records ride the fold");
+        assert_eq!(fresh.log_len("a"), 3);
+        assert_eq!(fresh.log_floor("a"), 3);
+        assert_eq!(fresh.canonical_records(), home.canonical_records());
+        // positions agree exactly, so both directions go quiescent
+        assert_eq!(fresh.watermarks(), home.watermarks());
+        assert!(home.delta_plan(&fresh.watermarks()).is_empty());
+        assert!(fresh.delta_plan(&home.watermarks()).is_empty());
+        // re-adoption is a no-op merge and does not re-adopt
+        let (again, adopted) = fresh.adopt_org_snapshot(&plan.snapshots[0]).unwrap();
+        assert!(!adopted);
+        assert_eq!(again.changed(), 0);
+
+        // a divergent peer numerically ahead merges content-level but
+        // keeps its own log (no position adoption) — applied records
+        // get fresh local seqnos so they still propagate onward
+        let mut divergent = RuntimeDataRepo::new(JobKind::Sort);
+        for i in 0..5 {
+            divergent
+                .contribute(rec("a", "r5.xlarge", 2 + i, 20.0 + f64::from(i), 50.0))
+                .unwrap();
+        }
+        let marks = divergent.watermarks();
+        let (out, adopted) = divergent.adopt_org_snapshot(&plan.snapshots[0]).unwrap();
+        assert!(!adopted);
+        assert_eq!(out.added, 3);
+        assert_eq!(out.logged.len(), 3, "divergent applies are logged");
+        assert_eq!(divergent.watermarks()["a"].seqno, marks["a"].seqno + 3);
+        assert_eq!(divergent.log_floor("a"), 0);
+    }
+
+    #[test]
+    fn sync_ops_below_the_floor_dedup_content_level() {
+        let mut repo = RuntimeDataRepo::new(JobKind::Sort);
+        repo.contribute(rec("a", "m5.xlarge", 4, 10.0, 100.0)).unwrap();
+        repo.contribute(rec("a", "m5.xlarge", 8, 10.0, 60.0)).unwrap();
+        repo.truncate_org_log("a", 2);
+        // a re-delivery of a folded op: no retained entry to compare,
+        // merge dedup resolves it as a skip
+        let out = repo
+            .apply_sync_ops(&[SyncOp {
+                org: "a".into(),
+                seqno: 1,
+                record: rec("a", "m5.xlarge", 4, 10.0, 100.0),
+            }])
+            .unwrap();
+        assert_eq!(out.changed(), 0);
+        assert_eq!(out.skipped, 1);
+        assert_eq!(repo.log_len("a"), 2, "no log growth on folded dups");
+        // a genuinely new record claiming a folded seqno renumbers
+        let out = repo
+            .apply_sync_ops(&[SyncOp {
+                org: "a".into(),
+                seqno: 1,
+                record: rec("a", "c5.xlarge", 2, 12.0, 70.0),
+            }])
+            .unwrap();
+        assert_eq!(out.added, 1);
+        assert_eq!(repo.log_len("a"), 3);
     }
 
     #[test]

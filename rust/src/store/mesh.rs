@@ -1,0 +1,575 @@
+//! Mesh membership and anti-entropy scheduling: the self-organizing
+//! layer that replaces hand-wired peer lists.
+//!
+//! The paper's collaborative loop assumes organizations keep exchanging
+//! runtime data indefinitely, without a central coordinator. This
+//! module supplies the three pieces that makes that operational:
+//!
+//! * **Membership** — [`MeshState`], a roster of peers keyed by name
+//!   with deterministic 64-bit IDs ([`peer_id`]). Peers join by
+//!   helloing (or by being gossiped in another peer's
+//!   [`MeshHello::known`] list), stay live by helloing again, and are
+//!   evicted after missing [`MeshState::stale_after`] consecutive
+//!   rounds. All iteration is over a `BTreeMap`, so every roster-driven
+//!   decision is deterministic — the lint's `deterministic` zone rule.
+//! * **Anti-entropy scheduling** — [`fanout_targets`] picks `k` peers
+//!   per round by rotating a window over the name-sorted live roster,
+//!   so every live peer is exchanged with at least once every
+//!   `ceil(n/k)` rounds, deterministically. [`mesh_round`] runs one
+//!   full tick against a local deployment: self-hello (advance the
+//!   round, evict, re-evaluate truncation), then for each selected
+//!   peer one gossip hello plus one **batched cross-job exchange**
+//!   (`SyncPullAll`/`SyncPushAll` — all five [`JobKind`]s per round
+//!   trip). [`MeshDriver`] runs those ticks on a background thread.
+//! * **Ack tracking** — every hello carries the sender's own post-apply
+//!   watermarks ([`MeshHello::acked`]); the receiver records them as
+//!   "this peer holds at least these prefixes".
+//!   [`MeshState::acked_floors`] folds them into the per-org acked
+//!   floor — the highest seqno *every* live member has acknowledged —
+//!   which the deployment feeds to
+//!   [`RuntimeDataRepo::truncate_org_log`](crate::repo::RuntimeDataRepo::truncate_org_log):
+//!   history below the floor is dropped from memory and folded into
+//!   the store's base snapshot, so op-log memory is bounded by the
+//!   *unacked suffix* instead of all history. A peer that falls below
+//!   somebody's floor (or a fresh joiner) is healed by the whole-org
+//!   [`OrgSnapshot`](crate::repo::OrgSnapshot) fallback of the v4
+//!   delta plan.
+
+use crate::api::{
+    ApiError, Client, MeshHello, MeshPeer, MeshPeerStatus, MeshView, WatermarkSet,
+};
+use crate::util::hash::fnv1a64;
+use crate::workloads::JobKind;
+use std::collections::BTreeMap;
+use std::sync::mpsc;
+use std::thread;
+use std::time::Duration;
+
+/// Deterministic peer identity: the FNV-1a hash of the peer's name.
+/// Any two deployments derive the same ID for the same name, so a
+/// forged or corrupted `(name, id)` pair is detectable without any
+/// shared state.
+pub fn peer_id(name: &str) -> u64 {
+    fnv1a64(name.as_bytes())
+}
+
+/// Build the [`MeshPeer`] wire identity for `name`.
+pub fn mesh_peer(name: &str) -> MeshPeer {
+    MeshPeer {
+        name: name.to_string(),
+        id: peer_id(name),
+    }
+}
+
+/// Rounds a member may miss before eviction, by default. With fanout-k
+/// rotation a peer is contacted at least every `ceil(n/k)` rounds, so
+/// the default tolerates meshes a few times larger than the fanout.
+pub const DEFAULT_STALE_AFTER: u64 = 3;
+
+/// One tracked roster member.
+#[derive(Debug, Clone)]
+struct MeshMember {
+    peer: MeshPeer,
+    /// Local round when this member last helloed (directly or via a
+    /// relayed exchange); gossip-only members keep their join round.
+    last_seen_round: u64,
+    /// The member's post-apply watermarks per job — its acks.
+    acked: Vec<WatermarkSet>,
+}
+
+/// A deployment's membership state: who it is, which round it is on,
+/// and every peer it currently believes in. Owned by the deployment
+/// (a plain field on the sequential coordinator, a leaf mutex in the
+/// concurrent service) and mutated only through hellos.
+#[derive(Debug, Clone)]
+pub struct MeshState {
+    local: MeshPeer,
+    round: u64,
+    stale_after: u64,
+    /// Keyed by peer name — `BTreeMap` so every roster iteration
+    /// (views, fanout, floor folds) is deterministic.
+    members: BTreeMap<String, MeshMember>,
+}
+
+impl MeshState {
+    /// A fresh mesh containing only the local deployment.
+    pub fn new(name: &str) -> MeshState {
+        MeshState {
+            local: mesh_peer(name),
+            round: 0,
+            stale_after: DEFAULT_STALE_AFTER,
+            members: BTreeMap::new(),
+        }
+    }
+
+    /// Override how many rounds a member may miss before eviction.
+    pub fn with_stale_after(mut self, rounds: u64) -> MeshState {
+        self.stale_after = rounds.max(1);
+        self
+    }
+
+    /// The local deployment's identity.
+    pub fn local(&self) -> &MeshPeer {
+        &self.local
+    }
+
+    /// The local anti-entropy round counter.
+    pub fn round(&self) -> u64 {
+        self.round
+    }
+
+    /// Rounds a member may miss before eviction.
+    pub fn stale_after(&self) -> u64 {
+        self.stale_after
+    }
+
+    fn is_live(&self, member: &MeshMember) -> bool {
+        self.round.saturating_sub(member.last_seen_round) <= self.stale_after
+    }
+
+    /// Observe one hello. A *self*-hello (`from` = the local identity)
+    /// is the anti-entropy tick: it advances the round and evicts stale
+    /// members (returning how many). Any other hello marks the sender
+    /// live at the current round and records its acks. Both kinds fold
+    /// the sender's `known` gossip into the roster (new members join at
+    /// the current round; existing members' liveness is *not* refreshed
+    /// by gossip — only direct hellos count, so a dead peer cannot be
+    /// kept alive by third parties re-gossiping it).
+    ///
+    /// Rejects hellos whose `(name, id)` pairs contradict [`peer_id`].
+    pub fn observe_hello(&mut self, hello: &MeshHello) -> Result<u64, String> {
+        let check = |p: &MeshPeer| -> Result<(), String> {
+            if p.id == peer_id(&p.name) {
+                Ok(())
+            } else {
+                Err(format!(
+                    "peer {:?} claims id {:#x}, expected {:#x}",
+                    p.name,
+                    p.id,
+                    peer_id(&p.name)
+                ))
+            }
+        };
+        check(&hello.from)?;
+        for p in &hello.known {
+            check(p)?;
+        }
+        for p in &hello.known {
+            if p.id == self.local.id {
+                continue;
+            }
+            self.members.entry(p.name.clone()).or_insert_with(|| MeshMember {
+                peer: p.clone(),
+                last_seen_round: self.round,
+                acked: Vec::new(),
+            });
+        }
+        if hello.from.id == self.local.id {
+            // the local tick: advance, then cull members whose silence
+            // crossed the staleness horizon
+            self.round += 1;
+            let before = self.members.len();
+            let round = self.round;
+            let stale_after = self.stale_after;
+            self.members
+                .retain(|_, m| round.saturating_sub(m.last_seen_round) <= stale_after);
+            return Ok((before - self.members.len()) as u64);
+        }
+        let round = self.round;
+        let member = self
+            .members
+            .entry(hello.from.name.clone())
+            .or_insert_with(|| MeshMember {
+                peer: hello.from.clone(),
+                last_seen_round: round,
+                acked: Vec::new(),
+            });
+        member.last_seen_round = round;
+        if !hello.acked.is_empty() {
+            member.acked = hello.acked.clone();
+        }
+        Ok(0)
+    }
+
+    /// Snapshot the roster (name-sorted, with liveness flags).
+    pub fn view(&self) -> MeshView {
+        MeshView {
+            local: self.local.clone(),
+            round: self.round,
+            peers: self
+                .members
+                .values()
+                .map(|m| MeshPeerStatus {
+                    peer: m.peer.clone(),
+                    last_seen_round: m.last_seen_round,
+                    live: self.is_live(m),
+                })
+                .collect(),
+        }
+    }
+
+    /// The per-org acked floor for `job`: the highest seqno every live
+    /// member has acknowledged holding. An org any live member has no
+    /// mark for floors at 0 (it cannot be truncated yet), and an empty
+    /// live roster yields no floors at all — a deployment alone in the
+    /// mesh never truncates, so late joiners still get full history
+    /// served from ops rather than snapshot fallbacks.
+    pub fn acked_floors(&self, job: JobKind) -> BTreeMap<String, u64> {
+        let mut floors: Option<BTreeMap<String, u64>> = None;
+        for m in self.members.values().filter(|m| self.is_live(m)) {
+            // a member with no ack for this job pins every org at 0
+            let Some(set) = m.acked.iter().find(|set| set.job == job) else {
+                return BTreeMap::new();
+            };
+            let member: BTreeMap<String, u64> = set
+                .watermarks
+                .iter()
+                .map(|(org, mark)| (org.clone(), mark.seqno))
+                .collect();
+            floors = Some(match floors {
+                None => member,
+                // fold by intersection: an org any member has never
+                // heard of floors at 0, everything else at the minimum
+                Some(acc) => acc
+                    .into_iter()
+                    .filter_map(|(org, floor)| {
+                        member.get(&org).map(|theirs| (org, floor.min(*theirs)))
+                    })
+                    .collect(),
+            });
+        }
+        let mut floors = floors.unwrap_or_default();
+        floors.retain(|_, floor| *floor > 0);
+        floors
+    }
+}
+
+/// The deterministic fanout selection: filter the view to live peers
+/// (name-sorted already) and rotate a `k`-wide window by the round
+/// number, so consecutive rounds walk the whole roster.
+pub fn fanout_targets(view: &MeshView, k: usize) -> Vec<MeshPeer> {
+    let live: Vec<&MeshPeerStatus> = view.peers.iter().filter(|p| p.live).collect();
+    let n = live.len();
+    if n == 0 || k == 0 {
+        return Vec::new();
+    }
+    let k = k.min(n);
+    let start = (view.round as usize).wrapping_mul(k) % n;
+    (0..k).map(|i| live[(start + i) % n].peer.clone()).collect()
+}
+
+/// What one [`mesh_round`] did, for logs, benches, and tests.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct MeshRoundReport {
+    /// The local round counter after the tick.
+    pub round: u64,
+    /// Names of the peers exchanged with this round.
+    pub targets: Vec<String>,
+    /// Requests sent to remote peers (the wire cost of the round —
+    /// independent of the job-kind count, because the exchange is
+    /// batched).
+    pub peer_round_trips: u64,
+    /// Holdings mutations applied, locally and at peers combined.
+    pub changed: u64,
+}
+
+/// Run one anti-entropy tick for `local`: self-hello (advancing the
+/// round, evicting stale members, re-evaluating acked-floor
+/// truncation), then for each fanout-selected peer a gossip hello and
+/// one batched cross-job exchange in each direction. Peers named in
+/// the roster but absent from `peers` are skipped (they stale out and
+/// are evicted after enough missed rounds).
+pub fn mesh_round(
+    local: &mut dyn Client,
+    peers: &mut [(String, &mut dyn Client)],
+    fanout: usize,
+) -> Result<MeshRoundReport, ApiError> {
+    let mut report = MeshRoundReport::default();
+
+    // self-hello: our identity, our roster, our current acks
+    let before = local.mesh_roster()?;
+    let known: Vec<MeshPeer> = std::iter::once(before.local.clone())
+        .chain(before.peers.iter().map(|p| p.peer.clone()))
+        .collect();
+    let mut acked = local.watermarks_all()?;
+    let view = local.mesh_hello(MeshHello {
+        from: before.local.clone(),
+        known: known.clone(),
+        acked: acked.clone(),
+    })?;
+    report.round = view.round;
+
+    for target in fanout_targets(&view, fanout) {
+        let Some((_, peer)) = peers.iter_mut().find(|(name, _)| *name == target.name)
+        else {
+            continue;
+        };
+        // 1 gossip: liveness + roster + our acks, one round trip
+        peer.mesh_hello(MeshHello {
+            from: view.local.clone(),
+            known: known.clone(),
+            acked: acked.clone(),
+        })?;
+        // pull direction: their cross-job delta against our marks,
+        // applied locally (2 round trips)
+        let deltas = peer.sync_pull_all(acked.clone())?;
+        let applied = local.sync_push_all(deltas)?;
+        report.changed += applied
+            .reports
+            .iter()
+            .map(|r| r.changed() as u64)
+            .sum::<u64>();
+        // our acks moved; later targets and the push-back must see the
+        // post-apply positions
+        acked = applied.watermarks;
+        // push direction: our cross-job delta against their marks
+        // (1 round trip for the marks, 1 for the push)
+        let their_marks = peer.watermarks_all()?;
+        let deltas = local.sync_pull_all(their_marks)?;
+        let pushed = peer.sync_push_all(deltas)?;
+        report.changed += pushed
+            .reports
+            .iter()
+            .map(|r| r.changed() as u64)
+            .sum::<u64>();
+        // relay the peer's post-apply acks into our roster: it is
+        // live (it just answered) and holds at least these prefixes
+        local.mesh_hello(MeshHello {
+            from: target.clone(),
+            known: Vec::new(),
+            acked: pushed.watermarks,
+        })?;
+        report.peer_round_trips += 4;
+        report.targets.push(target.name);
+    }
+    Ok(report)
+}
+
+/// Background anti-entropy: [`mesh_round`] on a fixed interval until
+/// the driver is dropped (or a deployment reports
+/// [`ApiError::Stopped`]). The mesh-membership replacement for the
+/// static-peer-list `SyncDriver` loop.
+pub struct MeshDriver {
+    stop: Option<mpsc::Sender<()>>,
+    handle: Option<thread::JoinHandle<Vec<MeshRoundReport>>>,
+}
+
+impl MeshDriver {
+    /// Spawn the loop: one round immediately, then one per `interval`.
+    /// `local` is the deployment this driver ticks; `peers` are the
+    /// reachable remote deployments by mesh name.
+    pub fn spawn<L, P>(
+        mut local: L,
+        mut peers: Vec<(String, P)>,
+        fanout: usize,
+        interval: Duration,
+    ) -> MeshDriver
+    where
+        L: Client + Send + 'static,
+        P: Client + Send + 'static,
+    {
+        let (stop, stopped) = mpsc::channel::<()>();
+        let handle = thread::spawn(move || {
+            let mut reports = Vec::new();
+            loop {
+                let mut refs: Vec<(String, &mut dyn Client)> = peers
+                    .iter_mut()
+                    .map(|(name, client)| (name.clone(), client as &mut dyn Client))
+                    .collect();
+                match mesh_round(&mut local, &mut refs, fanout) {
+                    Ok(report) => reports.push(report),
+                    // a deployment shut down: the mesh loop is over
+                    Err(ApiError::Stopped) => return reports,
+                    // transient failure (e.g. a store hiccup): skip the
+                    // round; anti-entropy retries by construction
+                    Err(_) => {}
+                }
+                match stopped.recv_timeout(interval) {
+                    Ok(()) | Err(mpsc::RecvTimeoutError::Disconnected) => return reports,
+                    Err(mpsc::RecvTimeoutError::Timeout) => {}
+                }
+            }
+        });
+        MeshDriver {
+            stop: Some(stop),
+            handle: Some(handle),
+        }
+    }
+
+    /// Stop the loop and collect every round's report.
+    pub fn stop(mut self) -> Vec<MeshRoundReport> {
+        self.shutdown()
+    }
+
+    fn shutdown(&mut self) -> Vec<MeshRoundReport> {
+        if let Some(stop) = self.stop.take() {
+            let _ = stop.send(());
+        }
+        match self.handle.take() {
+            Some(handle) => handle.join().unwrap_or_default(),
+            None => Vec::new(),
+        }
+    }
+}
+
+impl Drop for MeshDriver {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::repo::OrgWatermark;
+
+    fn hello_from(name: &str, known: &[&str]) -> MeshHello {
+        MeshHello {
+            from: mesh_peer(name),
+            known: known.iter().map(|n| mesh_peer(n)).collect(),
+            acked: Vec::new(),
+        }
+    }
+
+    fn acked_set(job: JobKind, marks: &[(&str, u64)]) -> WatermarkSet {
+        WatermarkSet {
+            job,
+            generation: 0,
+            watermarks: marks
+                .iter()
+                .map(|(org, seqno)| {
+                    (
+                        org.to_string(),
+                        OrgWatermark {
+                            seqno: *seqno,
+                            digest: 0,
+                            floor: 0,
+                        },
+                    )
+                })
+                .collect(),
+        }
+    }
+
+    #[test]
+    fn peer_ids_are_deterministic_and_distinct() {
+        assert_eq!(peer_id("org-a"), peer_id("org-a"));
+        assert_ne!(peer_id("org-a"), peer_id("org-b"));
+        assert_eq!(mesh_peer("org-a").id, peer_id("org-a"));
+    }
+
+    #[test]
+    fn forged_peer_ids_are_rejected() {
+        let mut mesh = MeshState::new("local");
+        let mut hello = hello_from("imposter", &[]);
+        hello.from.id ^= 1;
+        assert!(mesh.observe_hello(&hello).is_err());
+        let mut hello = hello_from("honest", &["gossiped"]);
+        hello.known[0].id ^= 1;
+        assert!(mesh.observe_hello(&hello).is_err());
+    }
+
+    #[test]
+    fn membership_lifecycle_join_refresh_evict() {
+        let mut mesh = MeshState::new("local").with_stale_after(2);
+        mesh.observe_hello(&hello_from("a", &["a", "b"])).unwrap();
+        let view = mesh.view();
+        assert_eq!(
+            view.peers.iter().map(|p| p.peer.name.as_str()).collect::<Vec<_>>(),
+            vec!["a", "b"],
+            "direct sender and gossiped member both join, sorted"
+        );
+        assert!(view.peers.iter().all(|p| p.live));
+
+        // "a" keeps helloing, "b" goes silent: after stale_after missed
+        // rounds the tick evicts "b" and only "b"
+        let mut evicted_total = 0;
+        for _ in 0..3 {
+            evicted_total += mesh
+                .observe_hello(&hello_from("local", &["local", "a", "b"]))
+                .unwrap();
+            mesh.observe_hello(&hello_from("a", &["a"])).unwrap();
+        }
+        assert_eq!(evicted_total, 1, "exactly the silent member evicted");
+        let names: Vec<&str> =
+            mesh.view().peers.iter().map(|p| p.peer.name.as_str()).collect();
+        assert_eq!(names, vec!["a"]);
+        assert_eq!(mesh.round(), 3, "each self-hello advanced the round");
+
+        // gossip alone cannot resurrect liveness: "a" re-gossips "b",
+        // which rejoins as a member but stales out again without ever
+        // helloing directly
+        mesh.observe_hello(&hello_from("a", &["a", "b"])).unwrap();
+        assert_eq!(mesh.view().peers.len(), 2);
+        for _ in 0..3 {
+            mesh.observe_hello(&hello_from("local", &["local"])).unwrap();
+            mesh.observe_hello(&hello_from("a", &["a"])).unwrap();
+        }
+        let names: Vec<&str> =
+            mesh.view().peers.iter().map(|p| p.peer.name.as_str()).collect();
+        assert_eq!(names, vec!["a"], "gossip-only member evicted again");
+    }
+
+    #[test]
+    fn fanout_rotation_covers_the_roster_deterministically() {
+        let mut mesh = MeshState::new("local");
+        for name in ["a", "b", "c", "d", "e"] {
+            mesh.observe_hello(&hello_from(name, &[])).unwrap();
+        }
+        // the same view always selects the same targets
+        assert_eq!(fanout_targets(&mesh.view(), 2), fanout_targets(&mesh.view(), 2));
+        // across ceil(5/2) + extra rounds, every peer is selected
+        let mut seen = std::collections::BTreeSet::new();
+        for _ in 0..5 {
+            for p in fanout_targets(&mesh.view(), 2) {
+                seen.insert(p.name);
+            }
+            // keep everyone live while the window rotates
+            mesh.observe_hello(&hello_from("local", &[])).unwrap();
+            for name in ["a", "b", "c", "d", "e"] {
+                mesh.observe_hello(&hello_from(name, &[])).unwrap();
+            }
+        }
+        assert_eq!(seen.len(), 5, "rotation reached every live peer");
+        // fanout larger than the roster clamps; an empty roster yields
+        // no targets
+        assert_eq!(fanout_targets(&mesh.view(), 99).len(), 5);
+        assert!(fanout_targets(&MeshState::new("solo").view(), 3).is_empty());
+    }
+
+    #[test]
+    fn acked_floors_take_the_minimum_over_live_members() {
+        let mut mesh = MeshState::new("local");
+        assert!(
+            mesh.acked_floors(JobKind::Sort).is_empty(),
+            "an empty mesh never truncates"
+        );
+
+        let mut a = hello_from("a", &[]);
+        a.acked = vec![acked_set(JobKind::Sort, &[("x", 5), ("y", 2)])];
+        mesh.observe_hello(&a).unwrap();
+        let mut b = hello_from("b", &[]);
+        b.acked = vec![acked_set(JobKind::Sort, &[("x", 3)])];
+        mesh.observe_hello(&b).unwrap();
+
+        let floors = mesh.acked_floors(JobKind::Sort);
+        assert_eq!(floors.get("x"), Some(&3), "minimum across members");
+        assert_eq!(floors.get("y"), None, "org unknown to b floors at 0");
+        assert!(
+            mesh.acked_floors(JobKind::Grep).is_empty(),
+            "a job nobody acked cannot truncate"
+        );
+
+        // once "b" stales out, only "a"'s acks bound the floor
+        let mut mesh = mesh.with_stale_after(1);
+        mesh.observe_hello(&hello_from("local", &[])).unwrap();
+        let mut a = hello_from("a", &[]);
+        a.acked = vec![acked_set(JobKind::Sort, &[("x", 5), ("y", 2)])];
+        mesh.observe_hello(&a).unwrap();
+        let evicted = mesh.observe_hello(&hello_from("local", &[])).unwrap();
+        assert_eq!(evicted, 1, "b missed too many rounds");
+        let floors = mesh.acked_floors(JobKind::Sort);
+        assert_eq!(floors.get("x"), Some(&5));
+        assert_eq!(floors.get("y"), Some(&2));
+    }
+}

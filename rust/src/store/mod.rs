@@ -21,35 +21,54 @@
 //!   the recovered generation. Legacy (PR-3 format) WALs and snapshots
 //!   still recover: lines without the seqno field get their numbers
 //!   assigned during (deterministic) replay.
-//! * [`sync`] — the **record-level peer delta-sync protocol** (API v3):
-//!   watermark positions drive `SyncPull`/`SyncPush` exchanges that
-//!   ship sequence-numbered [`crate::repo::SyncOp`]s — **O(changed
+//! * [`sync`] — the **record-level peer delta-sync protocol** (API
+//!   v3/v4): watermark positions drive pull/push exchanges that ship
+//!   sequence-numbered [`crate::repo::SyncOp`]s — **O(changed
 //!   records)** per exchange on prefix-aligned logs, a digest-checked
-//!   whole-org fallback on divergence. Merge-level dedup with
-//!   deterministic conflict resolution makes the exchange idempotent
+//!   whole-org fallback on divergence, and a whole-org
+//!   [`crate::repo::OrgSnapshot`] fallback when a peer sits below a
+//!   truncation floor. One entry point, [`sync::sync`], with
+//!   [`SyncOptions`] choosing scope, detail, and protocol (per-job v3,
+//!   batched cross-job v4, legacy v2). Merge-level dedup with
+//!   deterministic conflict resolution makes every exchange idempotent
 //!   and convergent (any gossip order → bitwise-identical
 //!   repositories), and merge-rejected ops are logged as *seen* — the
 //!   watermark advances, so blind duplicate contributions transfer once
-//!   and are never re-offered. [`SyncDriver`] runs the exchange on a
-//!   background thread; [`sync_job_v2`] speaks the legacy org-granular
-//!   protocol to pre-op-log deployments.
+//!   and are never re-offered.
+//! * [`mesh`] — the **gossip mesh**: peer membership with deterministic
+//!   FNV-derived IDs, round-based heartbeats and staleness eviction;
+//!   anti-entropy scheduling via rotating fanout-k selection over the
+//!   live roster ([`MeshDriver`] supersedes the static-peer-list
+//!   [`SyncDriver`] loop); and per-peer acked-watermark tracking whose
+//!   intersection over live members yields the **acked floor** — the
+//!   log prefix every member provably holds, safe to fold into a base
+//!   snapshot ([`crate::repo::RuntimeDataRepo::truncate_org_log`]),
+//!   bounding op-log memory by the unacked suffix.
 //!
 //! The write path is layered: a [`JobShard`](crate::coordinator::shard)
 //! mutates its repo, WAL-frames exactly the logged ops through its
 //! attached [`JobStore`] (applied mutations as `C`/`M` lines, seen
 //! rejections as generation-neutral `S` lines), and lets
 //! [`JobStore::maybe_compact`] fold the WAL into a snapshot + sidecar
-//! when it grows. Reads never touch the store.
+//! (plus a `floor-<gen>.csv` sidecar once truncation has folded
+//! history) when it grows. Reads never touch the store.
 
+pub mod mesh;
 pub mod segment;
 pub mod sync;
 
+pub use mesh::{
+    fanout_targets, mesh_peer, mesh_round, peer_id, MeshDriver, MeshRoundReport, MeshState,
+    DEFAULT_STALE_AFTER,
+};
 pub use segment::{
     FsyncPolicy, JobStore, StoreConfig, StoreOp, DEFAULT_COMPACT_THRESHOLD, DEFAULT_SEGMENT_CAP,
 };
+#[allow(deprecated)]
 pub use sync::{
-    fold_orgs, sync_all, sync_all_detailed, sync_job, sync_job_detailed, sync_job_v2,
-    OrgExchange, OrgExchangeMap, SyncDriver, SyncStats,
+    fold_orgs, sync, sync_all, sync_all_detailed, sync_job, sync_job_detailed, sync_job_v2,
+    OrgExchange, OrgExchangeMap, SyncDetail, SyncDriver, SyncOptions, SyncProtocol, SyncScope,
+    SyncStats, SyncSummary,
 };
 
 use crate::api::ApiError;

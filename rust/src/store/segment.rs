@@ -29,12 +29,19 @@
 //!   `rename`d into place (atomic on POSIX), with the generation in the
 //!   file name, paired with an `oplog-<gen>.csv` sidecar persisting the
 //!   per-org operation logs (which the holdings alone cannot
-//!   reconstruct: replaced and seen-but-rejected ops live only there).
-//!   [`JobStore::compact`] writes both and deletes all segments — every
-//!   op they held is ≤ the snapshot generation. A legacy snapshot
-//!   without a sidecar still recovers: the logs are rebuilt from the
-//!   holdings (losing reject/replace history, which at worst degrades
-//!   the org to the v2 whole-org sync fallback).
+//!   reconstruct: replaced and seen-but-rejected ops live only there)
+//!   and — when any org has an acked-floor truncation horizon — a
+//!   `floor-<gen>.csv` sidecar of per-org `(floor, floor_digest)`
+//!   pairs. A truncated org's oplog rows hold only the retained suffix
+//!   (first seqno = floor + 1); the folded prefix exists solely as the
+//!   holdings plus the floor digest, which is exactly the repo's
+//!   in-memory shape after [`crate::repo::RuntimeDataRepo::truncate_org_log`].
+//!   [`JobStore::compact`] writes all of these and deletes every
+//!   segment — each op they held is ≤ the snapshot generation. A legacy
+//!   snapshot without sidecars still recovers: the logs are rebuilt
+//!   from the holdings with floor 0 (losing reject/replace history,
+//!   which at worst degrades the org to the v2 whole-org sync
+//!   fallback).
 //! * **Recovery** ([`JobStore::open`]) loads the newest snapshot (and
 //!   its oplog sidecar), then replays segments in order, skipping ops
 //!   the snapshot already covers. A checksum-failing or newline-less
@@ -57,8 +64,12 @@
 //! between the two: a group-commit mode that fsyncs once every N
 //! appended batches (and always before a segment rotation closes the
 //! file), bounding power-failure loss to the last `< N` batches while
-//! amortizing the syscall. Snapshots are always fsynced before the
-//! rename publishes them (plus a best-effort directory sync).
+//! amortizing the syscall. [`FsyncPolicy::Interval`] is the
+//! wall-clock analogue: a batch fsyncs when at least the configured
+//! duration has passed since the last fsync (and always before a
+//! rotation), bounding power-failure loss to one interval of batches.
+//! Snapshots are always fsynced before the rename publishes them (plus
+//! a best-effort directory sync).
 //!
 //! **Error taxonomy.** The four pub entry points — [`JobStore::open`],
 //! [`JobStore::append`], [`JobStore::compact`],
@@ -126,6 +137,15 @@ pub enum FsyncPolicy {
     /// torn tail); the syscall cost is amortized N-fold. `EveryN(0)`
     /// and `EveryN(1)` behave like [`FsyncPolicy::PerBatch`].
     EveryN(usize),
+    /// Timer-based group commit: a batch `fsync`s when at least this
+    /// duration has passed since the last fsync (the first batch after
+    /// open/compaction always syncs), and any un-synced tail settles
+    /// before a rotation closes the segment. Power-failure loss is
+    /// bounded to one interval's worth of batches; the syscall rate is
+    /// capped at one per interval regardless of write rate.
+    /// `Interval(Duration::ZERO)` behaves like
+    /// [`FsyncPolicy::PerBatch`].
+    Interval(std::time::Duration),
 }
 
 /// Deployment knobs for a [`JobStore`], applied at
@@ -155,8 +175,12 @@ pub struct JobStore {
     compact_threshold: usize,
     fsync_policy: FsyncPolicy,
     /// Batches appended since the last fsync (drives
-    /// [`FsyncPolicy::EveryN`] group commit).
+    /// [`FsyncPolicy::EveryN`] group commit, and tells rotation whether
+    /// an un-synced tail must settle for the timer policy too).
     unsynced_batches: usize,
+    /// When the segment file last fsynced (drives
+    /// [`FsyncPolicy::Interval`]; `None` = sync on the next batch).
+    last_fsync: Option<std::time::Instant>,
     /// Wall-time spent writing WAL bytes since the last
     /// [`JobStore::take_io_nanos`] drain. Observability only.
     append_nanos: u64,
@@ -189,6 +213,7 @@ impl JobStore {
 
         let mut snaps: Vec<(u64, PathBuf)> = Vec::new();
         let mut oplogs: Vec<(u64, PathBuf)> = Vec::new();
+        let mut floors_files: Vec<(u64, PathBuf)> = Vec::new();
         let mut segs: Vec<(u64, PathBuf)> = Vec::new();
         for entry in
             fs::read_dir(&dir).with_context(|| format!("reading {}", dir.display()))?
@@ -207,6 +232,12 @@ impl JobStore {
                 .and_then(|s| s.parse::<u64>().ok())
             {
                 oplogs.push((gen, entry.path()));
+            } else if let Some(gen) = name
+                .strip_prefix("floor-")
+                .and_then(|s| s.strip_suffix(".csv"))
+                .and_then(|s| s.parse::<u64>().ok())
+            {
+                floors_files.push((gen, entry.path()));
             } else if let Some(ord) = name
                 .strip_prefix("wal-")
                 .and_then(|s| s.strip_suffix(".log"))
@@ -240,12 +271,22 @@ impl JobStore {
                 // the sidecar carries the true op logs (incl. replaced
                 // and seen-but-rejected history); a legacy snapshot
                 // without one keeps the holdings-rebuilt logs, which at
-                // worst degrades affected orgs to the v2 sync fallback
+                // worst degrades affected orgs to the v2 sync fallback.
+                // A floor sidecar (absent on pre-v4 and never-truncated
+                // stores) pre-seeds the folded prefix positions so the
+                // oplog rows — the retained suffix — stack on top.
                 if let Some((_, oplog_path)) =
                     oplogs.iter().find(|(oplog_gen, _)| oplog_gen == gen)
                 {
-                    let logs = load_oplog(job, oplog_path)?;
-                    repo.restore_org_logs(logs)
+                    let floors = match floors_files
+                        .iter()
+                        .find(|(floor_gen, _)| floor_gen == gen)
+                    {
+                        None => std::collections::BTreeMap::new(),
+                        Some((_, floor_path)) => load_floors(floor_path)?,
+                    };
+                    let logs = load_oplog(job, oplog_path, &floors)?;
+                    repo.restore_org_logs(floors, logs)
                         .map_err(anyhow::Error::msg)
                         .with_context(|| format!("restoring {}", oplog_path.display()))?;
                 }
@@ -326,6 +367,7 @@ impl JobStore {
             compact_threshold: DEFAULT_COMPACT_THRESHOLD,
             fsync_policy: FsyncPolicy::default(),
             unsynced_batches: 0,
+            last_fsync: None,
             append_nanos: 0,
             fsync_nanos: 0,
         };
@@ -434,6 +476,13 @@ impl JobStore {
                 self.unsynced_batches += 1;
                 self.unsynced_batches >= n.max(1)
             }
+            // timer-based group commit: the first batch after open or
+            // compaction always syncs (last_fsync is None), then batches
+            // ride until the interval elapses
+            FsyncPolicy::Interval(d) => {
+                self.unsynced_batches += 1;
+                self.last_fsync.map_or(true, |t| t.elapsed() >= d)
+            }
         };
         if sync_now {
             let sync_started = std::time::Instant::now();
@@ -443,6 +492,7 @@ impl JobStore {
                 .context("fsyncing WAL segment after batch")?;
             self.fsync_nanos += sync_started.elapsed().as_nanos() as u64;
             self.unsynced_batches = 0;
+            self.last_fsync = Some(std::time::Instant::now());
         }
         self.generation = gen;
         self.seg_records += ops.len();
@@ -451,16 +501,37 @@ impl JobStore {
     }
 
     /// Write an atomic snapshot of `repo` — the holdings CSV plus the
-    /// `oplog-<gen>.csv` op-log sidecar, each temp file + rename — then
-    /// delete every segment and superseded snapshot/sidecar: all their
-    /// ops are ≤ the snapshot generation. The sidecar is published
-    /// FIRST: a crash between the two renames leaves an orphan sidecar
-    /// and no new snapshot, so recovery falls back to the previous
-    /// snapshot + still-present segments at full fidelity (orphan
-    /// sidecars are ignored — they pair by exact generation). Publishing
-    /// in the other order would be the real hazard: a snapshot without
-    /// its sidecar silently drops replaced/seen op-log history.
+    /// `oplog-<gen>.csv` op-log sidecar (and, when any org log is
+    /// truncated, the `floor-<gen>.csv` sidecar), each temp file +
+    /// rename — then delete every segment and superseded
+    /// snapshot/sidecar: all their ops are ≤ the snapshot generation.
+    /// Sidecars are published FIRST (floor, then oplog, then snapshot):
+    /// a crash between renames leaves orphan sidecars and no new
+    /// snapshot, so recovery falls back to the previous snapshot +
+    /// still-present segments at full fidelity (orphan sidecars are
+    /// ignored — they pair by exact generation). Publishing in the
+    /// other order would be the real hazard: a snapshot without its
+    /// sidecars silently drops replaced/seen op-log history or
+    /// misreads a truncated suffix as a from-genesis log.
     pub fn compact(&mut self, repo: &RuntimeDataRepo) -> Result<(), ApiError> {
+        self.compact_inner(repo).map_err(ApiError::store)
+    }
+
+    /// [`JobStore::compact`] for a repo whose generation moved WITHOUT
+    /// WAL appends — snapshot adoption and op-log truncation rebase the
+    /// repo's history in place, so the store adopts the repo's position
+    /// instead of demanding an exact match, then snapshots as usual.
+    /// The repo may only be ahead: a behind-the-store repo is still a
+    /// desync bug.
+    pub fn compact_rebased(&mut self, repo: &RuntimeDataRepo) -> Result<(), ApiError> {
+        if repo.generation() < self.generation {
+            return Err(ApiError::store(anyhow!(
+                "rebased compaction against a stale repo: store {}, repo {}",
+                self.generation,
+                repo.generation()
+            )));
+        }
+        self.generation = repo.generation();
         self.compact_inner(repo).map_err(ApiError::store)
     }
 
@@ -472,6 +543,24 @@ impl JobStore {
             repo.generation()
         );
         let gen = self.generation;
+        // floor sidecar first: the oplog rows for a truncated org hold
+        // only the retained suffix, which is meaningless without the
+        // folded-prefix position underneath it. Written only when some
+        // org actually has a floor — never-truncated stores keep the
+        // pre-v4 two-file layout byte for byte.
+        let floors = repo.log_floors();
+        let floor_path = if floors.is_empty() {
+            None
+        } else {
+            let path = self.dir.join(format!("floor-{gen:020}.csv"));
+            write_atomic(
+                &self.dir,
+                "floor.tmp",
+                &path,
+                floors_table(&floors).to_csv().as_bytes(),
+            )?;
+            Some(path)
+        };
         let oplog_path = self.dir.join(format!("oplog-{gen:020}.csv"));
         write_atomic(
             &self.dir,
@@ -497,6 +586,7 @@ impl JobStore {
         // snapshot published above
         self.writer = None;
         self.unsynced_batches = 0;
+        self.last_fsync = None;
         for entry in fs::read_dir(&self.dir)? {
             let entry = entry?;
             let name = entry.file_name().to_string_lossy().into_owned();
@@ -506,8 +596,11 @@ impl JobStore {
             let superseded_oplog = name.starts_with("oplog-")
                 && name.ends_with(".csv")
                 && entry.path() != oplog_path;
+            let superseded_floor = name.starts_with("floor-")
+                && name.ends_with(".csv")
+                && floor_path.as_deref() != Some(entry.path().as_path());
             let segment = name.starts_with("wal-") && name.ends_with(".log");
-            if superseded_snap || superseded_oplog || segment {
+            if superseded_snap || superseded_oplog || superseded_floor || segment {
                 fs::remove_file(entry.path())
                     .with_context(|| format!("removing {}", name))?;
             }
@@ -648,12 +741,57 @@ fn oplog_table(repo: &RuntimeDataRepo) -> csv::Table {
     t
 }
 
+const FLOOR_HEADER: [&str; 3] = ["org", "floor", "floor_digest"];
+
+/// Floor sidecar schema: one row per truncated org — the folded-prefix
+/// length and the genesis-cumulative digest it carries. Orgs absent
+/// from the file (and stores without one) have floor 0: full history.
+fn floors_table(floors: &std::collections::BTreeMap<String, (u64, u64)>) -> csv::Table {
+    let mut t = csv::Table::new(&FLOOR_HEADER);
+    for (org, (floor, digest)) in floors {
+        t.push(vec![org.clone(), floor.to_string(), digest.to_string()]);
+    }
+    t
+}
+
+/// Parse a floor sidecar back into org → (floor, floor_digest).
+fn load_floors(path: &Path) -> Result<std::collections::BTreeMap<String, (u64, u64)>> {
+    let table = csv::Table::load(path)
+        .map_err(|e| anyhow!("loading floor sidecar {}: {e}", path.display()))?;
+    ensure!(
+        table.header == FLOOR_HEADER,
+        "unrecognized floor-sidecar schema in {}: {:?}",
+        path.display(),
+        table.header
+    );
+    let mut floors: std::collections::BTreeMap<String, (u64, u64)> = Default::default();
+    for (i, row) in table.rows.iter().enumerate() {
+        let line = i + 2; // 1-based, after the header
+        ensure!(row.len() == 3, "{} line {line}: expected 3 fields", path.display());
+        let floor: u64 = row[1]
+            .parse()
+            .with_context(|| format!("{} line {line}: bad floor", path.display()))?;
+        let digest: u64 = row[2]
+            .parse()
+            .with_context(|| format!("{} line {line}: bad floor digest", path.display()))?;
+        ensure!(floor >= 1, "{} line {line}: floor 0 row (would be implicit)", path.display());
+        ensure!(
+            floors.insert(row[0].clone(), (floor, digest)).is_none(),
+            "{} line {line}: duplicate org {:?}",
+            path.display(),
+            row[0]
+        );
+    }
+    Ok(floors)
+}
+
 /// Parse an op-log sidecar back into per-org record sequences (each
-/// org's rows must be contiguous seqnos from 1, in order — exactly what
-/// [`oplog_table`] writes).
+/// org's rows must be contiguous seqnos in order, starting right above
+/// the org's floor — exactly what [`oplog_table`] writes).
 fn load_oplog(
     job: JobKind,
     path: &Path,
+    floors: &std::collections::BTreeMap<String, (u64, u64)>,
 ) -> Result<std::collections::BTreeMap<String, Vec<RuntimeRecord>>> {
     let table = csv::Table::load(path)
         .map_err(|e| anyhow!("loading op log {}: {e}", path.display()))?;
@@ -671,13 +809,14 @@ fn load_oplog(
             .with_context(|| format!("{} line {line}: bad seqno", path.display()))?;
         let record = record_from_fields(job, &row[1..])
             .with_context(|| format!("{} line {line}", path.display()))?;
+        let floor = floors.get(&record.org).map_or(0, |(f, _)| *f);
         let log = logs.entry(record.org.clone()).or_default();
         ensure!(
-            seqno == log.len() as u64 + 1,
+            seqno == floor + log.len() as u64 + 1,
             "{} line {line}: op log gap for {:?} (seqno {seqno} after {})",
             path.display(),
             record.org,
-            log.len()
+            floor + log.len() as u64
         );
         log.push(record);
     }
@@ -987,6 +1126,108 @@ mod tests {
         assert_eq!(repo2.generation(), repo.generation());
         assert_eq!(repo2.watermarks(), repo.watermarks());
         assert_eq!(store2.generation(), repo.generation());
+        let _ = fs::remove_dir_all(root);
+    }
+
+    #[test]
+    fn interval_fsync_recovers_bitwise() {
+        let root = temp_store("interval_fsync");
+        // a long interval: after the always-synced first batch, every
+        // later batch rides the timer and only rotation settles it
+        let config = StoreConfig {
+            fsync_policy: FsyncPolicy::Interval(std::time::Duration::from_secs(3600)),
+        };
+        let (store, mut repo) =
+            JobStore::open_with_config(&root, JobKind::Sort, config).unwrap();
+        assert_eq!(
+            store.fsync_policy(),
+            FsyncPolicy::Interval(std::time::Duration::from_secs(3600))
+        );
+        let mut store = store.with_segment_cap(4);
+        for i in 0..7u32 {
+            contribute(
+                &mut repo,
+                &mut store,
+                rec("a", 2 + i, 10.0 + f64::from(i), 100.0),
+            );
+        }
+        merge(&mut repo, &mut store, rec("b", 8, 10.0, 60.0));
+        canonicalize(&mut repo, &mut store);
+        let (append_ns, fsync_ns) = store.take_io_nanos();
+        assert!(append_ns > 0, "append wall-time accumulates");
+        assert!(fsync_ns > 0, "first batch + rotation tail fsynced");
+        drop(store);
+
+        let (store2, repo2) = JobStore::open(&root, JobKind::Sort).unwrap();
+        assert_eq!(repo2.records(), repo.records(), "bitwise incl. order");
+        assert_eq!(repo2.generation(), repo.generation());
+        assert_eq!(repo2.watermarks(), repo.watermarks());
+        assert_eq!(store2.generation(), repo.generation());
+
+        // an elapsed interval syncs on the very next batch
+        let config = StoreConfig {
+            fsync_policy: FsyncPolicy::Interval(std::time::Duration::ZERO),
+        };
+        let (mut store3, mut repo3) =
+            JobStore::open_with_config(&root, JobKind::Sort, config).unwrap();
+        contribute(&mut repo3, &mut store3, rec("c", 16, 4.0, 30.0));
+        let (_, fsync_ns) = store3.take_io_nanos();
+        assert!(fsync_ns > 0, "a zero interval degenerates to per-batch");
+        let _ = fs::remove_dir_all(root);
+    }
+
+    #[test]
+    fn floored_store_compacts_and_reopens_bitwise() {
+        let root = temp_store("floored");
+        let (mut store, mut repo) = JobStore::open(&root, JobKind::Sort).unwrap();
+        for i in 0..4u32 {
+            contribute(&mut repo, &mut store, rec("a", 2 + i, 10.0 + f64::from(i), 100.0));
+        }
+        contribute(&mut repo, &mut store, rec("b", 8, 10.0, 60.0));
+
+        // fold a's first three ops; the repo rebases without WAL lines,
+        // so durability goes through the rebased compaction path
+        assert_eq!(repo.truncate_org_log("a", 3), 3);
+        store.compact_rebased(&repo).unwrap();
+        assert_eq!(repo.log_floor("a"), 3);
+        assert_eq!(repo.log_len("a"), 4, "suffix survives the fold");
+        drop(store);
+
+        let (_store2, repo2) = JobStore::open(&root, JobKind::Sort).unwrap();
+        assert_eq!(repo2.records(), repo.records(), "bitwise incl. order");
+        assert_eq!(repo2.generation(), repo.generation());
+        assert_eq!(repo2.watermarks(), repo.watermarks(), "floors recover");
+        assert_eq!(repo2.log_floor("a"), 3);
+        assert_eq!(repo2.log_floor("b"), 0);
+        assert_eq!(
+            repo2.retained_log_entries(),
+            repo.retained_log_entries(),
+            "only the unacked suffix is held in memory after reopen"
+        );
+        // the recovered suffix still serves deltas: a peer at the floor
+        // pulls ops, a fresh peer falls back to the whole-org snapshot
+        let at_floor = crate::repo::OrgWatermark {
+            seqno: 3,
+            digest: repo.log_digest_at("a", 3).unwrap(),
+            floor: 0,
+        };
+        let plan = repo2.delta_plan(&std::collections::BTreeMap::from([(
+            "a".to_string(),
+            at_floor,
+        )]));
+        assert_eq!(plan.ops.iter().filter(|op| op.org == "a").count(), 1);
+        let plan = repo2.delta_plan(&std::collections::BTreeMap::new());
+        assert!(plan.ops.iter().all(|op| op.org != "a"));
+        assert_eq!(plan.snapshots.len(), 1, "below-floor pull → org snapshot");
+
+        // further appends after reopen extend the floored log cleanly
+        let (mut store3, mut repo3) = JobStore::open(&root, JobKind::Sort).unwrap();
+        contribute(&mut repo3, &mut store3, rec("a", 32, 50.0, 200.0));
+        assert_eq!(repo3.log_len("a"), 5);
+        drop(store3);
+        let (_store4, repo4) = JobStore::open(&root, JobKind::Sort).unwrap();
+        assert_eq!(repo4.records(), repo3.records());
+        assert_eq!(repo4.watermarks(), repo3.watermarks());
         let _ = fs::remove_dir_all(root);
     }
 

@@ -1,35 +1,46 @@
 //! Peer delta-sync: convergent runtime-data exchange between
-//! independently-running C3O deployments, at **record-level** (op log)
-//! granularity.
+//! independently-running C3O deployments.
 //!
-//! The protocol is three [`crate::api`] requests, all spoken through the
-//! deployment-agnostic [`Client`] trait, so any two deployments (two
-//! services, a service and a sequential coordinator, ...) can gossip:
+//! One entry point, [`sync`], drives a full bidirectional exchange
+//! between two [`Client`]s; [`SyncOptions`] picks the three orthogonal
+//! knobs instead of a function per combination:
 //!
-//! 1. `Watermarks { job }` — read the local per-org op-log positions
-//!    (`(seqno, digest)` [`crate::repo::OrgWatermark`]s).
-//! 2. `SyncPull { job, watermarks }` — ask a peer for the ops past each
-//!    of our marks; prefix-aligned logs ship **only the changed
-//!    records** (O(changed), not O(org corpus)); the reply also carries
-//!    the peer's own marks, so one round trip primes the reverse
-//!    direction.
-//! 3. `SyncPush { job, ops }` — apply a delta through merge-level dedup
-//!    with deterministic conflict resolution, then canonicalize the
-//!    repo order. Idempotent: re-pushing a delta changes nothing, and a
-//!    merge-rejected op still advances the receiver's watermark (logged
-//!    as *seen*), so blind duplicate contributions are never re-offered.
+//! * [`SyncScope`] — one job kind, an explicit list, or every kind.
+//! * [`SyncDetail`] — folded totals, or the per-(job, org) breakdown
+//!   the `c3o sync --json` CLI renders.
+//! * [`SyncProtocol`] — the wire generation:
+//!   - **`V3`** (record-level, per job): `Watermarks` → `SyncPull` →
+//!     `SyncPush` per job kind. Prefix-aligned op logs ship O(changed
+//!     records); a digest mismatch falls back to whole-org ops; a peer
+//!     below the responder's truncation floor receives a whole-org
+//!     [`crate::repo::OrgSnapshot`] instead (its records count into
+//!     [`SyncStats::offered`], the adoption into
+//!     [`SyncStats::snapshots`]).
+//!   - **`BatchedV4`** (record-level, cross-job): one
+//!     `WatermarksAll`/`SyncPullAll`/`SyncPushAll` conversation covers
+//!     *all* requested job kinds — [`SyncStats::round_trips`] stays
+//!     constant in the job-kind count, where `V3` pays per job. The
+//!     push replies carry post-apply watermarks, which is how mesh
+//!     peers learn ack positions ([`crate::store::mesh`]).
+//!   - **`V2`** (legacy, org-granular holdings): for deployments that
+//!     predate the op log, served via the [`crate::api::compat`]
+//!     adapter. A changed org ships whole — which also makes v2 peers
+//!     naturally safe against truncated logs: holdings summaries never
+//!     reference folded history.
 //!
-//! [`sync_job`] performs one full bidirectional exchange; because merge
-//! resolution is a deterministic total order, repeated exchanges drive
-//! any set of peers to **bitwise-identical** repositories regardless of
-//! gossip order (property-tested in `rust/tests/federation.rs`).
-//! [`sync_job_v2`] speaks the legacy org-granular exchange
-//! (`SyncPullV2`/`SyncPushV2`) against deployments that predate the op
-//! log — kept as the compatibility path and as the comparison baseline
-//! of `benches/sync_throughput.rs`. [`SyncDriver`] runs exchanges on a
-//! background thread at a fixed interval — the service-side gossip loop.
+//! Merge-level dedup with deterministic conflict resolution makes every
+//! protocol idempotent and convergent: repeated exchanges drive any set
+//! of peers to **bitwise-identical** repositories regardless of gossip
+//! order — with acked-floor truncation active included, because digests
+//! are cumulative from genesis across the fold (property-tested in
+//! `rust/tests/federation.rs`).
+//!
+//! Scheduling lives elsewhere: [`SyncDriver`] (below) repeats a
+//! fixed-peer-list exchange on a background thread, and the mesh layer
+//! ([`crate::store::mesh`]) replaces that static loop with
+//! roster-driven fanout selection, batched exchange, and ack tracking.
 
-use crate::api::{ApiError, Client};
+use crate::api::{ApiError, Client, SyncDelta, WatermarkSet};
 use crate::workloads::JobKind;
 use std::collections::BTreeMap;
 use std::sync::mpsc;
@@ -39,29 +50,34 @@ use std::time::Duration;
 /// Counters from one or more sync exchanges.
 #[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
 pub struct SyncStats {
-    /// `SyncPull` round trips issued.
+    /// `SyncPull`-class delta extractions issued (per-job pulls, or
+    /// batched cross-job pulls — each counts once).
     pub pulls: u64,
+    /// Requests issued to either deployment over the whole exchange —
+    /// the wire cost. The batched protocol's reason to exist: constant
+    /// in the job-kind count, where per-job sync pays per kind.
+    pub round_trips: u64,
     /// Records applied locally (adds + replacements).
     pub records_in: u64,
     /// Records the peer applied from us.
     pub records_out: u64,
-    /// Ops shipped over the wire in either direction, applied or not.
-    /// With record-level deltas this tracks `records_in + records_out`
-    /// except on the first delivery of blind-duplicate history (shipped
-    /// once, then marked seen) or after log divergence (the whole-org
-    /// fallback, which re-ships until content converges).
+    /// Ops (or snapshot records) shipped over the wire in either
+    /// direction, applied or not.
     pub offered: u64,
     /// Ops shipped but not applied: already-seen re-deliveries plus
     /// merge-rejected (seen) ops.
     pub skipped: u64,
+    /// Whole-org snapshot fallbacks shipped (a receiver sat below the
+    /// sender's truncation floor, or logs diverged beyond op repair).
+    pub snapshots: u64,
     /// Runtime disagreements surfaced by either side.
     pub conflicts: u64,
     /// Exchanges that failed (driver keeps going; the next tick retries).
     pub errors: u64,
-    /// Wall-time spent inside `SyncPull` round trips, nanoseconds.
+    /// Wall-time spent inside pull round trips, nanoseconds.
     /// Observability only — never feeds a protocol decision.
     pub pull_nanos: u64,
-    /// Wall-time spent inside `SyncPush` round trips (which include the
+    /// Wall-time spent inside push round trips (which include the
     /// receiver's merge/apply), nanoseconds. Observability only.
     pub push_nanos: u64,
 }
@@ -70,10 +86,12 @@ impl SyncStats {
     /// Accumulate another stats block.
     pub fn fold(&mut self, other: &SyncStats) {
         self.pulls += other.pulls;
+        self.round_trips += other.round_trips;
         self.records_in += other.records_in;
         self.records_out += other.records_out;
         self.offered += other.offered;
         self.skipped += other.skipped;
+        self.snapshots += other.snapshots;
         self.conflicts += other.conflicts;
         self.errors += other.errors;
         self.pull_nanos += other.pull_nanos;
@@ -119,6 +137,144 @@ pub fn fold_orgs(into: &mut OrgExchangeMap, from: &OrgExchangeMap) {
     }
 }
 
+// ---------------------------------------------------------------------------
+// the one sync entry point
+// ---------------------------------------------------------------------------
+
+/// Which job repositories an exchange covers.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum SyncScope {
+    /// One job kind.
+    Job(JobKind),
+    /// An explicit list, exchanged in the given order.
+    Jobs(Vec<JobKind>),
+    /// Every [`JobKind::all`] kind.
+    All,
+}
+
+impl SyncScope {
+    fn jobs(&self) -> Vec<JobKind> {
+        match self {
+            SyncScope::Job(job) => vec![*job],
+            SyncScope::Jobs(jobs) => jobs.clone(),
+            SyncScope::All => JobKind::all().to_vec(),
+        }
+    }
+}
+
+/// How much accounting an exchange returns.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub enum SyncDetail {
+    /// Folded [`SyncStats`] only; [`SyncSummary::by_job`] stays empty.
+    #[default]
+    Totals,
+    /// Additionally the per-(job, org) [`OrgExchangeMap`] breakdown.
+    PerOrg,
+}
+
+/// Which wire generation an exchange speaks.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub enum SyncProtocol {
+    /// Record-level op-log deltas, one conversation per job kind.
+    #[default]
+    V3,
+    /// Record-level op-log deltas, one batched conversation for every
+    /// job kind in scope (v4).
+    BatchedV4,
+    /// Legacy org-granular holdings exchange (no per-org breakdown —
+    /// v2 deltas carry bare records, not attributed ops).
+    V2,
+}
+
+/// The three orthogonal knobs of one [`sync`] call.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct SyncOptions {
+    pub scope: SyncScope,
+    pub detail: SyncDetail,
+    pub protocol: SyncProtocol,
+}
+
+impl Default for SyncOptions {
+    /// Every job kind, totals only, current per-job protocol.
+    fn default() -> SyncOptions {
+        SyncOptions {
+            scope: SyncScope::All,
+            detail: SyncDetail::Totals,
+            protocol: SyncProtocol::V3,
+        }
+    }
+}
+
+/// The one coherent result of a [`sync`] exchange: folded stats plus
+/// (when [`SyncDetail::PerOrg`] was requested) the per-(job, org)
+/// breakdown.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct SyncSummary {
+    pub stats: SyncStats,
+    pub by_job: BTreeMap<JobKind, OrgExchangeMap>,
+}
+
+/// One full bidirectional exchange between `local` and `peer`.
+///
+/// Inbound first: pull the peer's delta against local marks and apply
+/// it. Outbound second, *after* the inbound apply, so ops just learned
+/// (that the peer already holds) are not echoed back. Both directions
+/// reuse merge's dedup, so the exchange is idempotent; repeating it
+/// until [`SyncStats::quiescent`] drives both sides to convergence.
+pub fn sync(
+    local: &mut dyn Client,
+    peer: &mut dyn Client,
+    options: &SyncOptions,
+) -> Result<SyncSummary, ApiError> {
+    let mut summary = SyncSummary::default();
+    match options.protocol {
+        SyncProtocol::V3 => {
+            for job in options.scope.jobs() {
+                let mut orgs = OrgExchangeMap::new();
+                let peer_marks = exchange_direction(
+                    local,
+                    peer,
+                    job,
+                    None,
+                    true,
+                    &mut summary.stats,
+                    &mut orgs,
+                )?;
+                exchange_direction(
+                    peer,
+                    local,
+                    job,
+                    Some(peer_marks),
+                    false,
+                    &mut summary.stats,
+                    &mut orgs,
+                )?;
+                settle_orgs(&mut orgs);
+                if options.detail == SyncDetail::PerOrg {
+                    fold_orgs(summary.by_job.entry(job).or_default(), &orgs);
+                }
+            }
+        }
+        SyncProtocol::BatchedV4 => {
+            sync_batched(local, peer, &options.scope.jobs(), options.detail, &mut summary)?;
+        }
+        SyncProtocol::V2 => {
+            for job in options.scope.jobs() {
+                sync_v2_job(local, peer, job, &mut summary.stats)?;
+            }
+        }
+    }
+    Ok(summary)
+}
+
+/// Per-org skipped counts are derived, not wire-carried: whatever was
+/// offered for an org but not applied was skipped.
+fn settle_orgs(orgs: &mut OrgExchangeMap) {
+    for x in orgs.values_mut() {
+        x.skipped = x.offered.saturating_sub(x.applied);
+    }
+}
+
 /// One direction of a v3 exchange: pull the delta `dst` is missing from
 /// `src` (against `dst_marks`, or a fresh `Watermarks` read when
 /// `None`), push it into `dst`, account per org — crediting
@@ -135,21 +291,31 @@ fn exchange_direction(
 ) -> Result<BTreeMap<String, crate::repo::OrgWatermark>, ApiError> {
     let marks = match dst_marks {
         Some(marks) => marks,
-        None => dst.watermarks(job)?.watermarks,
+        None => {
+            stats.round_trips += 1;
+            dst.watermarks(job)?.watermarks
+        }
     };
     let pull_started = std::time::Instant::now();
     let delta = src.sync_pull(job, marks)?;
     stats.pull_nanos += pull_started.elapsed().as_nanos() as u64;
     stats.pulls += 1;
+    stats.round_trips += 1;
     let src_marks = delta.watermarks.clone();
     stats.offered += delta.ops.len() as u64;
     for op in &delta.ops {
         orgs.entry(op.org.clone()).or_default().offered += 1;
     }
-    if !delta.ops.is_empty() {
+    stats.snapshots += delta.snapshots.len() as u64;
+    for snap in &delta.snapshots {
+        stats.offered += snap.records.len() as u64;
+        orgs.entry(snap.org.clone()).or_default().offered += snap.records.len() as u64;
+    }
+    if !delta.ops.is_empty() || !delta.snapshots.is_empty() {
         let push_started = std::time::Instant::now();
-        let report = dst.sync_push(job, delta.ops)?;
+        let report = dst.sync_push_full(job, delta.ops, delta.snapshots)?;
         stats.push_nanos += push_started.elapsed().as_nanos() as u64;
+        stats.round_trips += 1;
         let applied = if inbound {
             &mut stats.records_in
         } else {
@@ -165,61 +331,136 @@ fn exchange_direction(
     Ok(src_marks)
 }
 
-/// One full bidirectional exchange for one job kind, with per-org
-/// accounting.
-///
-/// Inbound: read local marks, pull the peer's delta against them, apply
-/// it. Outbound: the pull reply carried the peer's marks — compute our
-/// delta against those (a local `SyncPull`) and push it, *after* the
-/// inbound apply so ops we just learned (that the peer already holds)
-/// are not echoed back. Both directions reuse merge's dedup, so the
-/// exchange is idempotent; prefix-aligned op logs make each direction
-/// O(changed records).
-pub fn sync_job_detailed(
-    local: &mut dyn Client,
-    peer: &mut dyn Client,
-    job: JobKind,
-) -> Result<(SyncStats, OrgExchangeMap), ApiError> {
-    let mut stats = SyncStats::default();
-    let mut orgs = OrgExchangeMap::new();
-    let peer_marks =
-        exchange_direction(local, peer, job, None, true, &mut stats, &mut orgs)?;
-    exchange_direction(peer, local, job, Some(peer_marks), false, &mut stats, &mut orgs)?;
-    for x in orgs.values_mut() {
-        x.skipped = x.offered.saturating_sub(x.applied);
+/// Account one batched direction's deltas into stats + per-org maps.
+fn account_deltas(
+    deltas: &[SyncDelta],
+    stats: &mut SyncStats,
+    by_job: &mut BTreeMap<JobKind, OrgExchangeMap>,
+    detail: SyncDetail,
+) {
+    for delta in deltas {
+        stats.offered += delta.ops.len() as u64;
+        stats.snapshots += delta.snapshots.len() as u64;
+        stats.offered += delta
+            .snapshots
+            .iter()
+            .map(|s| s.records.len() as u64)
+            .sum::<u64>();
+        if detail == SyncDetail::PerOrg {
+            let orgs = by_job.entry(delta.job).or_default();
+            for op in &delta.ops {
+                orgs.entry(op.org.clone()).or_default().offered += 1;
+            }
+            for snap in &delta.snapshots {
+                orgs.entry(snap.org.clone()).or_default().offered += snap.records.len() as u64;
+            }
+        }
     }
-    Ok((stats, orgs))
 }
 
-/// One full bidirectional exchange for one job kind (see
-/// [`sync_job_detailed`] for the per-org accounting variant).
-pub fn sync_job(
+/// The batched (v4) bidirectional exchange: all of `jobs` in one
+/// `WatermarksAll` → `SyncPullAll` → `SyncPushAll` conversation per
+/// direction — five job kinds for the round-trip price of one.
+fn sync_batched(
     local: &mut dyn Client,
     peer: &mut dyn Client,
-    job: JobKind,
-) -> Result<SyncStats, ApiError> {
-    sync_job_detailed(local, peer, job).map(|(stats, _)| stats)
-}
+    jobs: &[JobKind],
+    detail: SyncDetail,
+    summary: &mut SyncSummary,
+) -> Result<(), ApiError> {
+    let in_scope = |set: &WatermarkSet| jobs.contains(&set.job);
+    let stats = &mut summary.stats;
 
-/// One full bidirectional exchange over the **legacy v2** org-granular
-/// protocol (`WatermarksV2`/`SyncPullV2`/`SyncPushV2`): a changed org
-/// ships whole, and blind-duplicate holders are re-offered forever.
-/// Kept to interoperate with pre-op-log deployments and as the
-/// comparison baseline for the record-level path.
-pub fn sync_job_v2(
-    local: &mut dyn Client,
-    peer: &mut dyn Client,
-    job: JobKind,
-) -> Result<SyncStats, ApiError> {
-    let mut stats = SyncStats::default();
-
-    let ours = local.watermarks_v2(job)?;
-    let delta = peer.sync_pull_v2(job, ours.watermarks)?;
+    // inbound: the peer's cross-job delta against our marks
+    let ours: Vec<WatermarkSet> = local.watermarks_all()?.into_iter().filter(in_scope).collect();
+    stats.round_trips += 1;
+    let pull_started = std::time::Instant::now();
+    let deltas = peer.sync_pull_all(ours)?;
+    stats.pull_nanos += pull_started.elapsed().as_nanos() as u64;
     stats.pulls += 1;
+    stats.round_trips += 1;
+    // the pull reply carries the peer's own marks per job — the
+    // outbound direction needs no extra watermark read
+    let peer_marks: Vec<WatermarkSet> = deltas
+        .iter()
+        .map(|d| WatermarkSet {
+            job: d.job,
+            generation: d.generation,
+            watermarks: d.watermarks.clone(),
+        })
+        .collect();
+    account_deltas(&deltas, stats, &mut summary.by_job, detail);
+    if deltas.iter().any(|d| !d.ops.is_empty() || !d.snapshots.is_empty()) {
+        let push_started = std::time::Instant::now();
+        let applied = local.sync_push_all(deltas)?;
+        stats.push_nanos += push_started.elapsed().as_nanos() as u64;
+        stats.round_trips += 1;
+        for report in &applied.reports {
+            stats.records_in += report.changed() as u64;
+            stats.skipped += report.skipped as u64;
+            stats.conflicts += report.conflicts.len() as u64;
+            if detail == SyncDetail::PerOrg {
+                let orgs = summary.by_job.entry(report.job).or_default();
+                for (org, applied) in &report.applied_by_org {
+                    orgs.entry(org.clone()).or_default().applied += applied;
+                }
+            }
+        }
+    }
+
+    // outbound: our cross-job delta against the peer's marks, after
+    // the inbound apply so fresh ops are not echoed back
+    let deltas = local.sync_pull_all(peer_marks)?;
+    stats.pulls += 1;
+    stats.round_trips += 1;
+    account_deltas(&deltas, stats, &mut summary.by_job, detail);
+    if deltas.iter().any(|d| !d.ops.is_empty() || !d.snapshots.is_empty()) {
+        let push_started = std::time::Instant::now();
+        let applied = peer.sync_push_all(deltas)?;
+        stats.push_nanos += push_started.elapsed().as_nanos() as u64;
+        stats.round_trips += 1;
+        for report in &applied.reports {
+            stats.records_out += report.changed() as u64;
+            stats.skipped += report.skipped as u64;
+            stats.conflicts += report.conflicts.len() as u64;
+            if detail == SyncDetail::PerOrg {
+                let orgs = summary.by_job.entry(report.job).or_default();
+                for (org, applied) in &report.applied_by_org {
+                    orgs.entry(org.clone()).or_default().applied += applied;
+                }
+            }
+        }
+    }
+    for orgs in summary.by_job.values_mut() {
+        settle_orgs(orgs);
+    }
+    Ok(())
+}
+
+/// One job's bidirectional exchange over the **legacy v2** org-granular
+/// protocol: a changed org ships whole, and blind-duplicate holders are
+/// re-offered forever. Kept to interoperate with pre-op-log deployments
+/// and as the comparison baseline of `benches/sync_throughput.rs`.
+fn sync_v2_job(
+    local: &mut dyn Client,
+    peer: &mut dyn Client,
+    job: JobKind,
+    stats: &mut SyncStats,
+) -> Result<(), ApiError> {
+    let ours = local.watermarks_v2(job)?;
+    stats.round_trips += 1;
+    let pull_started = std::time::Instant::now();
+    let delta = peer.sync_pull_v2(job, ours.watermarks)?;
+    stats.pull_nanos += pull_started.elapsed().as_nanos() as u64;
+    stats.pulls += 1;
+    stats.round_trips += 1;
     let peer_marks = delta.watermarks.clone();
     stats.offered += delta.records.len() as u64;
     if !delta.records.is_empty() {
+        let push_started = std::time::Instant::now();
         let report = local.sync_push_v2(job, delta.records)?;
+        stats.push_nanos += push_started.elapsed().as_nanos() as u64;
+        stats.round_trips += 1;
         stats.records_in += report.changed() as u64;
         stats.skipped += report.skipped as u64;
         stats.conflicts += report.conflicts.len() as u64;
@@ -227,48 +468,131 @@ pub fn sync_job_v2(
 
     let out = local.sync_pull_v2(job, peer_marks)?;
     stats.pulls += 1;
+    stats.round_trips += 1;
     stats.offered += out.records.len() as u64;
     if !out.records.is_empty() {
+        let push_started = std::time::Instant::now();
         let report = peer.sync_push_v2(job, out.records)?;
+        stats.push_nanos += push_started.elapsed().as_nanos() as u64;
+        stats.round_trips += 1;
         stats.records_out += report.changed() as u64;
         stats.skipped += report.skipped as u64;
         stats.conflicts += report.conflicts.len() as u64;
     }
-    Ok(stats)
+    Ok(())
 }
 
-/// [`sync_job`] over several job kinds, stats folded.
+// ---------------------------------------------------------------------------
+// deprecated per-combination shims
+// ---------------------------------------------------------------------------
+
+/// One full bidirectional exchange for one job kind, with per-org
+/// accounting.
+#[deprecated(note = "use sync() with SyncOptions { scope: Job, detail: PerOrg, .. }")]
+pub fn sync_job_detailed(
+    local: &mut dyn Client,
+    peer: &mut dyn Client,
+    job: JobKind,
+) -> Result<(SyncStats, OrgExchangeMap), ApiError> {
+    let summary = sync(
+        local,
+        peer,
+        &SyncOptions {
+            scope: SyncScope::Job(job),
+            detail: SyncDetail::PerOrg,
+            protocol: SyncProtocol::V3,
+        },
+    )?;
+    let orgs = summary.by_job.get(&job).cloned().unwrap_or_default();
+    Ok((summary.stats, orgs))
+}
+
+/// One full bidirectional exchange for one job kind.
+#[deprecated(note = "use sync() with SyncOptions { scope: Job, .. }")]
+pub fn sync_job(
+    local: &mut dyn Client,
+    peer: &mut dyn Client,
+    job: JobKind,
+) -> Result<SyncStats, ApiError> {
+    sync(
+        local,
+        peer,
+        &SyncOptions {
+            scope: SyncScope::Job(job),
+            ..SyncOptions::default()
+        },
+    )
+    .map(|summary| summary.stats)
+}
+
+/// One full bidirectional exchange over the legacy v2 org-granular
+/// protocol.
+#[deprecated(note = "use sync() with SyncOptions { protocol: V2, .. }")]
+pub fn sync_job_v2(
+    local: &mut dyn Client,
+    peer: &mut dyn Client,
+    job: JobKind,
+) -> Result<SyncStats, ApiError> {
+    sync(
+        local,
+        peer,
+        &SyncOptions {
+            scope: SyncScope::Job(job),
+            detail: SyncDetail::Totals,
+            protocol: SyncProtocol::V2,
+        },
+    )
+    .map(|summary| summary.stats)
+}
+
+/// Bidirectional exchange over several job kinds, stats folded.
+#[deprecated(note = "use sync() with SyncOptions { scope: Jobs, .. }")]
 pub fn sync_all(
     local: &mut dyn Client,
     peer: &mut dyn Client,
     jobs: &[JobKind],
 ) -> Result<SyncStats, ApiError> {
-    let mut total = SyncStats::default();
-    for &job in jobs {
-        total.fold(&sync_job(local, peer, job)?);
-    }
-    Ok(total)
+    sync(
+        local,
+        peer,
+        &SyncOptions {
+            scope: SyncScope::Jobs(jobs.to_vec()),
+            ..SyncOptions::default()
+        },
+    )
+    .map(|summary| summary.stats)
 }
 
-/// [`sync_job_detailed`] over several job kinds: folded stats plus the
+/// Bidirectional exchange over several job kinds: folded stats plus the
 /// per-(job, org) breakdown.
+#[deprecated(note = "use sync() with SyncOptions { scope: Jobs, detail: PerOrg, .. }")]
 pub fn sync_all_detailed(
     local: &mut dyn Client,
     peer: &mut dyn Client,
     jobs: &[JobKind],
 ) -> Result<(SyncStats, BTreeMap<JobKind, OrgExchangeMap>), ApiError> {
-    let mut total = SyncStats::default();
-    let mut by_job: BTreeMap<JobKind, OrgExchangeMap> = BTreeMap::new();
-    for &job in jobs {
-        let (stats, orgs) = sync_job_detailed(local, peer, job)?;
-        total.fold(&stats);
-        fold_orgs(by_job.entry(job).or_default(), &orgs);
-    }
-    Ok((total, by_job))
+    sync(
+        local,
+        peer,
+        &SyncOptions {
+            scope: SyncScope::Jobs(jobs.to_vec()),
+            detail: SyncDetail::PerOrg,
+            protocol: SyncProtocol::V3,
+        },
+    )
+    .map(|summary| (summary.stats, summary.by_job))
 }
 
-/// Background gossip loop: exchanges deltas between a local deployment
-/// and a set of peers at a fixed interval, on its own thread.
+// ---------------------------------------------------------------------------
+// the fixed-peer-list background loop
+// ---------------------------------------------------------------------------
+
+/// Background gossip loop over a **static** peer list: exchanges deltas
+/// between a local deployment and each peer at a fixed interval, on its
+/// own thread. The mesh-scheduled successor — roster-driven fanout,
+/// batched exchange, ack tracking — is
+/// [`MeshDriver`](crate::store::mesh::MeshDriver); this driver remains
+/// for hand-wired two-deployment setups and as the simplest harness.
 ///
 /// The driver holds plain [`Client`] handles (e.g.
 /// [`ServiceClient`](crate::coordinator::service::ServiceClient)s), so
@@ -291,15 +615,17 @@ impl SyncDriver {
     ) -> SyncDriver {
         let (stop_tx, stop_rx) = mpsc::channel::<()>();
         let handle = std::thread::spawn(move || {
+            let options = SyncOptions {
+                scope: SyncScope::Jobs(jobs),
+                ..SyncOptions::default()
+            };
             let mut total = SyncStats::default();
             loop {
                 for peer in peers.iter_mut() {
-                    for &job in &jobs {
-                        match sync_job(&mut local, peer, job) {
-                            Ok(stats) => total.fold(&stats),
-                            Err(ApiError::Stopped) => return total,
-                            Err(_) => total.errors += 1,
-                        }
+                    match sync(&mut local, peer, &options) {
+                        Ok(summary) => total.fold(&summary.stats),
+                        Err(ApiError::Stopped) => return total,
+                        Err(_) => total.errors += 1,
                     }
                 }
                 match stop_rx.recv_timeout(interval) {

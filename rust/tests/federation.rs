@@ -12,19 +12,81 @@
 //!   converge to bitwise-identical repositories serving
 //!   bitwise-identical `Recommend` decisions, and a restarted service
 //!   recovers its corpus and pre-restart generation from the store.
+//! * Mesh federation: roster-scheduled gossip rounds converge N peers
+//!   bitwise **with acked-floor op-log truncation active**, the op log
+//!   retains only the unacked suffix, a floored durable store
+//!   cold-reopens bitwise, and peers below the floor (late v3 joiners)
+//!   or outside it (legacy v2 deployments) still converge — via
+//!   whole-org snapshot fallback and the compat adapter respectively.
 
+use c3o::api::{ApiError, Client, MeshHello, MeshPeer};
 use c3o::cloud::Cloud;
 use c3o::configurator::JobRequest;
 use c3o::coordinator::{Coordinator, CoordinatorService, ServiceConfig};
 use c3o::models::Engine;
 use c3o::repo::{RuntimeDataRepo, RuntimeRecord};
-use c3o::store::{sync_all, sync_job, sync_job_v2, JobStore, StoreOp, SyncStats};
+use c3o::store::{
+    mesh_peer, mesh_round, sync, JobStore, StoreOp, SyncOptions, SyncProtocol, SyncScope,
+    SyncStats,
+};
 use c3o::util::prop::{forall, Gen};
 use c3o::workloads::{ExperimentGrid, JobKind};
 use std::path::{Path, PathBuf};
 use std::time::Duration;
 
 const MACHINES: [&str; 3] = ["c5.xlarge", "m5.xlarge", "r5.xlarge"];
+
+/// One-job v3 exchange through the consolidated [`sync`] entry point.
+fn sync_job(
+    local: &mut dyn Client,
+    peer: &mut dyn Client,
+    job: JobKind,
+) -> Result<SyncStats, ApiError> {
+    sync(
+        local,
+        peer,
+        &SyncOptions {
+            scope: SyncScope::Job(job),
+            ..SyncOptions::default()
+        },
+    )
+    .map(|summary| summary.stats)
+}
+
+/// One-job exchange over the legacy v2 org-granular protocol.
+fn sync_job_v2(
+    local: &mut dyn Client,
+    peer: &mut dyn Client,
+    job: JobKind,
+) -> Result<SyncStats, ApiError> {
+    sync(
+        local,
+        peer,
+        &SyncOptions {
+            scope: SyncScope::Job(job),
+            protocol: SyncProtocol::V2,
+            ..SyncOptions::default()
+        },
+    )
+    .map(|summary| summary.stats)
+}
+
+/// Multi-job v3 exchange, stats folded.
+fn sync_all(
+    local: &mut dyn Client,
+    peer: &mut dyn Client,
+    jobs: &[JobKind],
+) -> Result<SyncStats, ApiError> {
+    sync(
+        local,
+        peer,
+        &SyncOptions {
+            scope: SyncScope::Jobs(jobs.to_vec()),
+            ..SyncOptions::default()
+        },
+    )
+    .map(|summary| summary.stats)
+}
 
 fn temp_root(name: &str) -> PathBuf {
     let dir = std::env::temp_dir().join(format!("c3o_fed_{}_{name}", std::process::id()));
@@ -711,4 +773,282 @@ fn durable_services_converge_and_recover_across_restart() {
     service_a2.shutdown();
     let _ = std::fs::remove_dir_all(root_a);
     let _ = std::fs::remove_dir_all(root_b);
+}
+
+// ---------------------------------------------------------------------------
+// mesh federation: roster-scheduled gossip with acked-floor truncation
+// ---------------------------------------------------------------------------
+
+fn mesh_names(n: usize) -> Vec<String> {
+    (0..n).map(|i| format!("peer-{i}")).collect()
+}
+
+/// Introduce every peer to the full roster: one hello per deployment
+/// whose `known` list carries everyone (gossip-joined members are live,
+/// so fanout targeting works from the first round).
+fn mesh_bootstrap(peers: &mut [Coordinator]) {
+    let intro: Vec<MeshPeer> = mesh_names(peers.len()).iter().map(|n| mesh_peer(n)).collect();
+    for (i, p) in peers.iter_mut().enumerate() {
+        p.mesh_hello(MeshHello {
+            from: intro[(i + 1) % intro.len()].clone(),
+            known: intro.clone(),
+            acked: Vec::new(),
+        })
+        .unwrap();
+    }
+}
+
+/// One full sweep: every peer runs one [`mesh_round`] against the rest
+/// of the roster. Returns (records changed, peer round trips).
+fn mesh_sweep(peers: &mut [Coordinator], names: &[String], fanout: usize) -> (u64, u64) {
+    let (mut changed, mut trips) = (0u64, 0u64);
+    for i in 0..peers.len() {
+        let (before, rest) = peers.split_at_mut(i);
+        let (local, after) = rest.split_first_mut().unwrap();
+        let mut refs: Vec<(String, &mut dyn Client)> = Vec::new();
+        for (k, p) in before.iter_mut().enumerate() {
+            refs.push((names[k].clone(), p));
+        }
+        for (k, p) in after.iter_mut().enumerate() {
+            refs.push((names[i + 1 + k].clone(), p));
+        }
+        let report = mesh_round(local, &mut refs, fanout).unwrap();
+        changed += report.changed;
+        trips += report.peer_round_trips;
+    }
+    (changed, trips)
+}
+
+/// Sweep mesh rounds until every peer's repositories carry identical
+/// content digests AND a full sweep changes nothing; then a few extra
+/// sweeps so acks finish propagating and every peer's self-tick folds
+/// the acked prefix out of its op logs. Panics without convergence.
+fn mesh_until_quiescent(
+    peers: &mut [Coordinator],
+    jobs: &[JobKind],
+    fanout: usize,
+    max_sweeps: usize,
+) {
+    let names = mesh_names(peers.len());
+    let mut converged = false;
+    for _ in 0..max_sweeps {
+        let (changed, _) = mesh_sweep(peers, &names, fanout);
+        let digests_agree = jobs.iter().all(|&job| {
+            let reference = peers[0].repo(job).map(|r| r.content_digest());
+            peers[1..]
+                .iter()
+                .all(|p| p.repo(job).map(|r| r.content_digest()) == reference)
+        });
+        if changed == 0 && digests_agree {
+            converged = true;
+            break;
+        }
+    }
+    assert!(converged, "mesh did not converge within {max_sweeps} sweeps");
+    // ack propagation needs exchanges; the truncating self-tick needs a
+    // later sweep again — rotate through everyone twice, with margin
+    for _ in 0..2 * peers.len() + 2 {
+        mesh_sweep(peers, &names, fanout);
+    }
+}
+
+#[test]
+fn mesh_rounds_converge_bitwise_with_acked_floor_truncation() {
+    let cloud = Cloud::aws_like();
+    let corpus = sort_corpus(&cloud);
+    let n = 3;
+    let mut peers: Vec<Coordinator> = (0..n)
+        .map(|i| {
+            let mut c = Coordinator::with_engine(cloud.clone(), Engine::native(), 400 + i as u64);
+            c.set_mesh_name(&format!("peer-{i}"));
+            c
+        })
+        .collect();
+    // disjoint interleaved slices: record r belongs to peer r % n
+    let records = corpus.records();
+    for (i, p) in peers.iter_mut().enumerate() {
+        let slice: Vec<RuntimeRecord> = records
+            .iter()
+            .enumerate()
+            .filter(|(r, _)| r % n == i)
+            .map(|(_, rec)| rec.with_org(&format!("org-{i}")))
+            .collect();
+        p.share(&RuntimeDataRepo::from_records(JobKind::Sort, slice))
+            .unwrap();
+    }
+    mesh_bootstrap(&mut peers);
+    mesh_until_quiescent(&mut peers, &[JobKind::Sort], 1, 64);
+
+    // bitwise-identical repositories — with truncation active
+    let reference = peers[0].repo(JobKind::Sort).unwrap().clone();
+    assert_eq!(reference.len(), records.len(), "disjoint corpora only add");
+    for p in &peers[1..] {
+        let repo = p.repo(JobKind::Sort).unwrap();
+        assert_eq!(repo.canonical_records(), reference.canonical_records());
+        assert_eq!(repo.content_digest(), reference.content_digest());
+        assert_eq!(repo.watermarks(), reference.watermarks());
+    }
+    // every live member acked the full history, so every org's floor
+    // rose to its top seqno: the op logs hold ONLY the unacked suffix —
+    // which is empty. That is the op-log memory bound.
+    for p in &peers {
+        assert!(p.metrics().ops_truncated > 0, "acked floors truncated");
+        let repo = p.repo(JobKind::Sort).unwrap();
+        assert_eq!(repo.retained_log_entries(), 0, "only the unacked suffix is retained");
+        for (org, mark) in &repo.watermarks() {
+            assert_eq!(repo.log_floor(org), mark.seqno, "{org}: floor covers the acked prefix");
+        }
+    }
+
+    // a fresh write is the one retained entry until the mesh acks it
+    peers[0]
+        .contribute(RuntimeRecord {
+            job: JobKind::Sort,
+            org: "org-0".into(),
+            machine: MACHINES[0].to_string(),
+            scaleout: 5,
+            job_features: vec![777_777.5],
+            runtime_s: 123.0,
+        })
+        .unwrap();
+    assert_eq!(peers[0].repo(JobKind::Sort).unwrap().retained_log_entries(), 1);
+    mesh_until_quiescent(&mut peers, &[JobKind::Sort], 1, 32);
+    for p in &peers {
+        assert_eq!(p.repo(JobKind::Sort).unwrap().retained_log_entries(), 0);
+    }
+
+    // decisions over the converged (and truncated) corpora are bitwise
+    // identical across the mesh
+    let request = JobRequest::sort(14.5).with_target_seconds(700.0);
+    let mut choices = Vec::new();
+    for p in peers.iter_mut() {
+        choices.push(p.recommend(&request).unwrap());
+    }
+    for rec in &choices[1..] {
+        assert_eq!(rec.choice.machine_type, choices[0].choice.machine_type);
+        assert_eq!(rec.choice.node_count, choices[0].choice.node_count);
+        assert_eq!(
+            rec.choice.predicted_runtime_s.to_bits(),
+            choices[0].choice.predicted_runtime_s.to_bits()
+        );
+        assert_eq!(rec.generation, choices[0].generation);
+    }
+}
+
+#[test]
+fn floored_durable_store_cold_reopens_bitwise() {
+    let cloud = Cloud::aws_like();
+    let root_a = temp_root("mesh_floor_a");
+    let root_b = temp_root("mesh_floor_b");
+    let no_artifacts = PathBuf::from("/nonexistent-artifacts");
+    let mut peers: Vec<Coordinator> = (0..2)
+        .map(|i| {
+            let root = if i == 0 { &root_a } else { &root_b };
+            let mut c =
+                Coordinator::open_with_store(cloud.clone(), &no_artifacts, 31 + i as u64, root)
+                    .unwrap();
+            c.min_records = usize::MAX;
+            c.set_mesh_name(&format!("peer-{i}"));
+            c
+        })
+        .collect();
+    for (i, p) in peers.iter_mut().enumerate() {
+        let records: Vec<RuntimeRecord> = (0..8usize)
+            .map(|k| RuntimeRecord {
+                job: JobKind::Sort,
+                org: format!("org-{i}"),
+                machine: MACHINES[k % 3].to_string(),
+                scaleout: 2 + k as u32,
+                job_features: vec![(i * 1000 + k) as f64 + 0.5],
+                runtime_s: 100.0 + (i * 37 + k * 11) as f64,
+            })
+            .collect();
+        p.share(&RuntimeDataRepo::from_records(JobKind::Sort, records))
+            .unwrap();
+    }
+    mesh_bootstrap(&mut peers);
+    mesh_until_quiescent(&mut peers, &[JobKind::Sort], 1, 32);
+
+    // the mesh raised floors, and truncation reached the durable store
+    let repo_a = peers[0].repo(JobKind::Sort).unwrap().clone();
+    assert!(repo_a.log_floor("org-0") > 0, "floor rose on the durable peer");
+    assert_eq!(repo_a.retained_log_entries(), 0);
+    drop(peers);
+
+    // cold reopen: floors, records, digests all recover bitwise from
+    // the compacted WAL + floor sidecar
+    let reopened = Coordinator::open_with_store(cloud, &no_artifacts, 99, &root_a).unwrap();
+    let repo_2 = reopened.repo(JobKind::Sort).unwrap();
+    assert_eq!(repo_2.records(), repo_a.records(), "corpus recovered bitwise");
+    assert_eq!(repo_2.watermarks(), repo_a.watermarks(), "floors + digests recovered");
+    assert_eq!(repo_2.content_digest(), repo_a.content_digest());
+    assert_eq!(repo_2.generation(), repo_a.generation());
+    assert_eq!(repo_2.retained_log_entries(), 0, "truncation survived the reopen");
+    let _ = std::fs::remove_dir_all(root_a);
+    let _ = std::fs::remove_dir_all(root_b);
+}
+
+#[test]
+fn below_floor_and_v2_peers_still_converge_against_truncated_logs() {
+    let cloud = Cloud::aws_like();
+    let mut peers: Vec<Coordinator> = (0..2)
+        .map(|i| {
+            let mut c = peer(&cloud, 500 + i as u64);
+            c.set_mesh_name(&format!("peer-{i}"));
+            c
+        })
+        .collect();
+    for (i, p) in peers.iter_mut().enumerate() {
+        let records: Vec<RuntimeRecord> = (0..6usize)
+            .map(|k| RuntimeRecord {
+                job: JobKind::Sort,
+                org: format!("org-{i}"),
+                machine: MACHINES[k % 3].to_string(),
+                scaleout: 2 + k as u32,
+                job_features: vec![(i * 1000 + k) as f64 + 0.5],
+                runtime_s: 50.0 + (i * 13 + k * 7) as f64,
+            })
+            .collect();
+        p.share(&RuntimeDataRepo::from_records(JobKind::Sort, records))
+            .unwrap();
+    }
+    mesh_bootstrap(&mut peers);
+    mesh_until_quiescent(&mut peers, &[JobKind::Sort], 1, 32);
+    assert_eq!(peers[0].repo(JobKind::Sort).unwrap().retained_log_entries(), 0);
+
+    // a late v3 joiner sits below every floor: its pull is answered
+    // with whole-org snapshots, adopted bitwise
+    let mut late = peer(&cloud, 510);
+    let summary = sync(
+        &mut late,
+        &mut peers[0],
+        &SyncOptions {
+            scope: SyncScope::Job(JobKind::Sort),
+            ..SyncOptions::default()
+        },
+    )
+    .unwrap();
+    assert!(
+        summary.stats.snapshots > 0,
+        "below-floor pull falls back to whole-org snapshots: {summary:?}"
+    );
+    let late_repo = late.repo(JobKind::Sort).unwrap();
+    let truncated = peers[0].repo(JobKind::Sort).unwrap();
+    assert_eq!(late_repo.canonical_records(), truncated.canonical_records());
+    assert_eq!(late_repo.content_digest(), truncated.content_digest());
+    assert_eq!(late_repo.watermarks(), truncated.watermarks(), "floors adopt too");
+    // adoption is idempotent: the next exchange moves nothing
+    let again = sync_job(&mut late, &mut peers[0], JobKind::Sort).unwrap();
+    assert!(again.quiescent(), "snapshot adoption re-offers nothing: {again:?}");
+
+    // a legacy v2 deployment exchanges holdings summaries, which never
+    // reference folded history — the floors are invisible to it
+    let mut legacy = peer(&cloud, 511);
+    let stats = sync_job_v2(&mut legacy, &mut peers[0], JobKind::Sort).unwrap();
+    assert_eq!(stats.snapshots, 0, "v2 ships holdings, not snapshots");
+    assert_eq!(
+        legacy.repo(JobKind::Sort).unwrap().canonical_records(),
+        peers[0].repo(JobKind::Sort).unwrap().canonical_records(),
+        "the v2 peer converges content-wise despite the truncated log"
+    );
 }
